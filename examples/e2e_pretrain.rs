@@ -1,0 +1,82 @@
+//! End-to-end driver (DESIGN.md / EXPERIMENTS.md §E2E): federally pre-train
+//! the `e2e` transformer (~6.6M parameters — the CPU-budget analogue of the
+//! paper's billion-scale runs; see DESIGN.md §1) for a few hundred steps on
+//! the synthetic C4-analogue corpus, proving every layer composes:
+//!
+//!   Pallas/JAX-authored HLO → PJRT runtime → Photon LLM Nodes →
+//!   Photon Aggregator (FedAvg) → checkpointing → downstream ICL scoring.
+//!
+//! Logs the loss curve to results/e2e/ and prints the summary recorded in
+//! EXPERIMENTS.md. `--fast` shrinks the run for smoke testing.
+//!
+//! Run: `cargo run --release --example e2e_pretrain [-- --fast]`
+
+use photon::config::{CorpusKind, ExperimentConfig};
+use photon::coordinator::Federation;
+use photon::data::corpus::SyntheticCorpus;
+use photon::evalharness::{task_accuracy, TaskFamily};
+use photon::optim::schedule::CosineSchedule;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let (rounds, tau) = if fast { (3, 10) } else { (10, 30) };
+    let total = (rounds * tau) as u64;
+
+    let mut cfg = ExperimentConfig::quickstart("e2e");
+    cfg.label = "e2e-pretrain".into();
+    cfg.corpus = CorpusKind::C4Iid;
+    cfg.n_clients = 4;
+    cfg.clients_per_round = 2; // partial participation, paper-style
+    cfg.rounds = rounds;
+    cfg.local_steps = tau as u64;
+    cfg.eval_batches = 2;
+    cfg.schedule = CosineSchedule::new(1e-3, 0.1, total, total / 10);
+
+    println!(
+        "e2e pre-train: {} params, P={} K={} rounds={rounds} τ={tau} \
+         ({} total client steps)",
+        "~6.6M", cfg.n_clients, cfg.clients_per_round,
+        rounds * tau * cfg.clients_per_round,
+    );
+
+    let t0 = std::time::Instant::now();
+    let mut fed = Federation::new(cfg)?;
+    fed.ckpt_dir = Some(photon::util::results_dir("e2e").join("ckpt"));
+    let (_, ppl0) = fed.eval_global()?;
+    println!("init: server perplexity {ppl0:.2} (uniform = vocab = 1024)");
+
+    while fed.next_round < fed.cfg.rounds {
+        let r = fed.run_round()?;
+        println!(
+            "round {:>2}  server ppl {:>8.2}  client loss {:.4}  \
+             |pseudo-grad| {:.3}  {:>5.1}s",
+            r.round, r.server_ppl, r.client_loss_mean, r.pseudo_grad_norm, r.wall_secs
+        );
+    }
+    let csv = photon::util::results_dir("e2e").join("loss_curve.csv");
+    fed.log.write_csv(&csv)?;
+
+    // Downstream sanity: the trained model must beat chance on the ICL
+    // suite's easiest family (the full suite is `photon exp table56`).
+    let corpus = SyntheticCorpus::pile(fed.model.manifest.config.vocab);
+    let fams = TaskFamily::suite(&corpus, fed.model.manifest.config.seq_len);
+    let fam = &fams[0];
+    let n_items = if fast { 10 } else { 30 };
+    let acc = task_accuracy(&fed.model, &fed.global, &corpus, fam, n_items, 11)?;
+    let chance = 1.0 / fam.n_options as f64;
+
+    let last = fed.log.last().unwrap();
+    println!("\n=== E2E SUMMARY ===");
+    println!("wall-clock: {:.1}s on 1 CPU core", t0.elapsed().as_secs_f64());
+    println!("perplexity: {ppl0:.2} → {:.2}", last.server_ppl);
+    println!(
+        "communication: {:.1} MB total ({} rounds × {} clients × 2 payloads)",
+        fed.log.rounds.iter().map(|r| r.comm_bytes as f64).sum::<f64>() / 1e6,
+        fed.cfg.rounds, fed.cfg.clients_per_round
+    );
+    println!("checkpoints: {:?}", fed.ckpt_dir.as_ref().unwrap());
+    println!("loss curve: {}", csv.display());
+    println!("ICL ({}): accuracy {acc:.3} vs chance {chance:.3}", fam.name);
+    assert!(last.server_ppl < ppl0 / 2.0, "e2e training must at least halve ppl");
+    Ok(())
+}

@@ -1,0 +1,199 @@
+"""AOT pipeline: lower every model config's step functions to HLO *text*.
+
+This is the single build-time python entry point (`make artifacts`). For each
+config in configs.CONFIGS it emits
+
+    artifacts/<name>/train_step.hlo.txt
+    artifacts/<name>/eval_step.hlo.txt
+    artifacts/<name>/score_step.hlo.txt
+    artifacts/<name>/manifest.json
+
+The interchange format is HLO TEXT, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Lowering uses `return_tuple=True`; the Rust runtime unwraps the tuple.
+
+manifest.json carries everything the Rust coordinator needs to drive the
+artifacts blind: the model config, the flat-parameter layout (name / shape /
+offset / size / per-tensor init spec), and the exact I/O signature of each
+step. Rust parses it with its own JSON parser (rust/src/util/json.rs).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--config NAME ...] [--force]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (xla 0.5.1-compatible)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(cfg: configs.ModelConfig, which: str):
+    """Human/machine-readable I/O signature recorded in the manifest."""
+    n = model.n_params(cfg)
+    k = model.TRAIN_CHUNK
+    vec = {"dtype": "f32", "shape": [n]}
+    toks = {"dtype": "i32", "shape": [cfg.batch_size, cfg.seq_len + 1]}
+    ktoks = {"dtype": "i32", "shape": [k, cfg.batch_size, cfg.seq_len + 1]}
+    kf = {"dtype": "f32", "shape": [k]}
+    scalar_f = {"dtype": "f32", "shape": []}
+    scalar_i = {"dtype": "i32", "shape": []}
+    batch_f = {"dtype": "f32", "shape": [cfg.batch_size]}
+    mask = {"dtype": "f32", "shape": [cfg.batch_size, cfg.seq_len]}
+    if which == "train_step":
+        return {
+            "inputs": [
+                {"name": "params", **vec}, {"name": "m", **vec},
+                {"name": "v", **vec}, {"name": "step", **scalar_i},
+                {"name": "lr", **scalar_f}, {"name": "tokens", **toks},
+            ],
+            "outputs": [
+                {"name": "params", **vec}, {"name": "m", **vec},
+                {"name": "v", **vec}, {"name": "loss", **scalar_f},
+                {"name": "grad_norm", **scalar_f},
+                {"name": "update_norm", **scalar_f},
+                {"name": "act_norm", **scalar_f},
+            ],
+        }
+    if which == "train_chunk":
+        return {
+            "inputs": [
+                {"name": "params", **vec}, {"name": "m", **vec},
+                {"name": "v", **vec}, {"name": "step0", **scalar_i},
+                {"name": "lrs", **kf}, {"name": "tokens", **ktoks},
+            ],
+            "outputs": [
+                {"name": "params", **vec}, {"name": "m", **vec},
+                {"name": "v", **vec}, {"name": "losses", **kf},
+                {"name": "grad_norms", **kf}, {"name": "update_norms", **kf},
+                {"name": "act_norms", **kf},
+            ],
+        }
+    if which == "eval_step":
+        return {
+            "inputs": [{"name": "params", **vec}, {"name": "tokens", **toks}],
+            "outputs": [{"name": "sum_nll", **scalar_f},
+                        {"name": "token_count", **scalar_f}],
+        }
+    if which == "score_step":
+        return {
+            "inputs": [{"name": "params", **vec}, {"name": "tokens", **toks},
+                       {"name": "mask", **mask}],
+            "outputs": [{"name": "option_ll", **batch_f},
+                        {"name": "option_len", **batch_f}],
+        }
+    raise ValueError(which)
+
+
+def build_manifest(cfg: configs.ModelConfig) -> dict:
+    ents, total = model.layout_with_offsets(cfg)
+    return {
+        "schema_version": 1,
+        "config": cfg.to_dict(),
+        "n_params": total,
+        "params": [
+            {"name": name, "shape": list(shape), "offset": off,
+             "size": size, "init": init}
+            for name, shape, off, size, init in ents
+        ],
+        "train_chunk_size": model.TRAIN_CHUNK,
+        "steps": {
+            which: {"file": f"{which}.hlo.txt", **_sig(cfg, which)}
+            for which in ("train_step", "train_chunk", "eval_step",
+                          "score_step")
+        },
+    }
+
+
+def _source_fingerprint() -> str:
+    """Hash of the compile-path sources; artifacts rebuild when these change."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _dirs, files in sorted(os.walk(here)):
+        if "__pycache__" in root:
+            continue
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def compile_config(cfg: configs.ModelConfig, out_dir: str, fingerprint: str,
+                   force: bool = False) -> bool:
+    """Lower one config; returns True if work was done."""
+    cdir = os.path.join(out_dir, cfg.name)
+    stamp = os.path.join(cdir, ".stamp")
+    if not force and os.path.exists(stamp):
+        with open(stamp) as fh:
+            if fh.read().strip() == fingerprint:
+                print(f"[aot] {cfg.name}: up to date")
+                return False
+    os.makedirs(cdir, exist_ok=True)
+    fns = model.step_fns(cfg)
+    t0 = time.time()
+    for which, fn in fns.items():
+        args = model.example_args(cfg, which)
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        with open(os.path.join(cdir, f"{which}.hlo.txt"), "w") as fh:
+            fh.write(text)
+        print(f"[aot] {cfg.name}/{which}: {len(text)} chars "
+              f"({time.time() - t0:.1f}s)")
+    with open(os.path.join(cdir, "manifest.json"), "w") as fh:
+        json.dump(build_manifest(cfg), fh, indent=1)
+    with open(stamp, "w") as fh:
+        fh.write(fingerprint)
+    return True
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--config", action="append", default=None,
+                    help="config name(s) to build; default: all")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    todo = configs.CONFIGS
+    if args.config:
+        unknown = set(args.config) - set(configs.BY_NAME)
+        if unknown:
+            print(f"unknown configs: {sorted(unknown)}", file=sys.stderr)
+            return 1
+        todo = [configs.BY_NAME[n] for n in args.config]
+
+    fingerprint = _source_fingerprint()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for cfg in todo:
+        compile_config(cfg, args.out_dir, fingerprint, force=args.force)
+    # Top-level index so the Rust side can discover configs without listing
+    # directories (and so `make -q artifacts` has a single sentinel).
+    with open(os.path.join(args.out_dir, "index.json"), "w") as fh:
+        json.dump({
+            "fingerprint": fingerprint,
+            "configs": [c.name for c in configs.CONFIGS],
+        }, fh, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,93 @@
+"""Model-configuration ladder for the Photon reproduction.
+
+Each entry is a scaled-down **analogue** of one row of the paper's Table 2
+(75M..7B MPT models). The structure is preserved exactly -- decoder-only,
+pre-LN, ALiBi attention, 4x GELU MLP, weight-tied LM head, AdamW(0.9, 0.95)
+-- while vocabulary/width/depth are reduced so the full federated experiment
+grid runs on a CPU PJRT backend. See DESIGN.md section 1 for the substitution
+argument.
+
+The ladder spans ~250x in parameter count (the paper's spans ~100x), which is
+what the scaling claims (fig3/fig9, consensus-vs-size) are asserted against.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + local-training hyperparameters for one ladder entry."""
+
+    name: str
+    paper_alias: str  # which paper model this row is the analogue of
+    vocab: int
+    d_model: int
+    n_heads: int
+    n_blocks: int
+    seq_len: int
+    batch_size: int
+    # Local (inner) optimizer: AdamW, following paper Table 2/3.
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # Attention lowering: "jnp" = fused reference (fast under XLA-CPU),
+    # "pallas" = the L1 flash kernel in interpret mode (bit-compared in tests).
+    attn_impl: str = "jnp"
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def mlp_dim(self) -> int:
+        return 4 * self.d_model  # expansion ratio 4, paper Table 2
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["head_dim"] = self.head_dim
+        d["mlp_dim"] = self.mlp_dim
+        return d
+
+
+def _c(name, alias, vocab, d, h, blocks, seq, batch, **kw) -> ModelConfig:
+    return ModelConfig(
+        name=name, paper_alias=alias, vocab=vocab, d_model=d, n_heads=h,
+        n_blocks=blocks, seq_len=seq, batch_size=batch, **kw,
+    )
+
+
+# The experiment ladder. Names are referenced from rust/src/config/mod.rs;
+# keep them in sync.
+CONFIGS = [
+    _c("m75a", "75M", 256, 32, 2, 2, 32, 4),
+    _c("m125a", "125M", 256, 48, 4, 3, 32, 4),
+    _c("m350a", "350M", 256, 64, 4, 4, 32, 4),
+    _c("m1ba", "1.3B", 512, 96, 6, 6, 32, 4),
+    _c("m3ba", "3B", 512, 128, 8, 8, 32, 4),
+    _c("m7ba", "7B", 512, 192, 12, 10, 32, 4),
+    # Small-local-batch variant for the fig10 outer-optimizer ablation.
+    _c("m125a_b2", "125M (small batch)", 256, 48, 4, 3, 32, 2),
+    # Same architecture as m75a but lowered through the L1 Pallas kernel;
+    # proves the pallas -> HLO -> rust path end to end.
+    _c("tiny_pallas", "75M (pallas)", 256, 32, 2, 2, 32, 4, attn_impl="pallas"),
+    # End-to-end driver model (examples/e2e_pretrain.rs): ~5M params.
+    _c("e2e", "e2e-5M", 1024, 256, 8, 8, 64, 8),
+]
+
+BY_NAME = {c.name: c for c in CONFIGS}
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Total trainable parameters (tied LM head => embedding counted once)."""
+    per_block = (
+        cfg.d_model  # ln1 scale
+        + cfg.d_model * 3 * cfg.d_model  # qkv
+        + cfg.d_model * cfg.d_model  # out proj
+        + cfg.d_model  # ln2 scale
+        + cfg.d_model * cfg.mlp_dim  # mlp up
+        + cfg.mlp_dim * cfg.d_model  # mlp down
+    )
+    return cfg.vocab * cfg.d_model + cfg.n_blocks * per_block + cfg.d_model

@@ -1,0 +1,168 @@
+"""L1 Pallas kernel: FlashAttention-style causal ALiBi attention for TPU.
+
+Hardware adaptation (paper trains with FlashAttention on NVIDIA GPUs; see
+DESIGN.md section "Hardware-Adaptation"): the GPU threadblock tiling becomes a
+Pallas grid over (batch*heads, query blocks); K/V stream through VMEM in
+`block_k` slabs; the online-softmax running state (m, l, acc) lives in the
+kernel's loop carry (the TPU analogue of registers/shared memory); the ALiBi
+bias and the causal mask are *computed* from iota on the score tile, never
+materialized in HBM. Matmul tiles are (block_q x d) @ (d x block_k) and
+(block_q x block_k) @ (block_k x d), MXU-friendly at block 128.
+
+On this image the kernel runs under `interpret=True` (the CPU PJRT plugin
+cannot execute Mosaic custom-calls); real-TPU performance is *estimated* in
+DESIGN.md from the VMEM footprint below. Correctness is asserted against
+`ref.attention_ref` by python/tests/test_kernel.py (hypothesis sweeps) and via
+the `tiny_pallas` artifact executed from Rust.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30  # finite stand-in for -inf: keeps exp() exact zeros, no NaNs
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, slope_ref, o_ref, *, block_q: int,
+                  block_k: int, seq_len: int, head_dim: int):
+    """One grid step: query block `jq` of flattened batch-head row `bh`.
+
+    Refs (VMEM blocks):
+      q_ref     [1, block_q, D]    query tile for this grid cell
+      k_ref     [1, L, D]          full K row for this bh (streamed in slabs)
+      v_ref     [1, L, D]          full V row
+      slope_ref [1]                ALiBi slope of this head
+      o_ref     [1, block_q, D]    output tile
+    """
+    jq = pl.program_id(1)
+    q = q_ref[0, :, :].astype(jnp.float32)  # [bq, D]
+    slope = slope_ref[0].astype(jnp.float32)
+    scale = (1.0 / (head_dim ** 0.5)).__float__()
+
+    q_idx = jq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+
+    # Causality: only K blocks with start <= last query index contribute.
+    n_kblocks = (jq * block_q + block_q + block_k - 1) // block_k
+
+    def body(kb, carry):
+        acc, m_prev, l_prev = carry
+        start = kb * block_k
+        k_tile = pl.load(k_ref, (0, pl.dslice(start, block_k), slice(None)))
+        v_tile = pl.load(v_ref, (0, pl.dslice(start, block_k), slice(None)))
+        k_tile = k_tile.astype(jnp.float32)
+        v_tile = v_tile.astype(jnp.float32)
+
+        # [bq, bk] score tile on the MXU: (bq x D) @ (D x bk).
+        s = jax.lax.dot_general(
+            q, k_tile, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        k_idx = start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        dist = (q_idx - k_idx).astype(jnp.float32)
+        s = s - slope * dist  # ALiBi, fused into the tile
+        s = jnp.where(q_idx >= k_idx, s, NEG_INF)  # causal mask, from iota
+
+        # Online softmax update (Milakov & Gimelshein / FlashAttention).
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])  # [bq, bk]
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        pv = jax.lax.dot_general(
+            p, v_tile, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc = acc * alpha[:, None] + pv
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, head_dim), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, _m, l = jax.lax.fori_loop(0, n_kblocks, body, (acc0, m0, l0))
+    o_ref[0, :, :] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, slopes, *, block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True):
+    """Causal ALiBi flash attention. q,k,v: [B, H, L, D]; slopes: [H].
+
+    Returns [B, H, L, D] float32, numerically equal to `ref.attention_ref`.
+    Block sizes clamp to the sequence length and must tile it exactly.
+    """
+    b, h, l, d = q.shape
+    block_q = min(block_q, l)
+    block_k = min(block_k, l)
+    if l % block_q or l % block_k:
+        raise ValueError(f"seq_len {l} must be divisible by blocks "
+                         f"({block_q}, {block_k})")
+    bh = b * h
+    qf = q.reshape(bh, l, d)
+    kf = k.reshape(bh, l, d)
+    vf = v.reshape(bh, l, d)
+    slopes_f = jnp.tile(jnp.asarray(slopes, jnp.float32), b)  # [BH]
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k,
+        seq_len=l, head_dim=d)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, l // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, l, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, l, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, l, d), jnp.float32),
+        interpret=interpret,
+    )(qf, kf, vf, slopes_f)
+    return out.reshape(b, h, l, d)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def flash_attention_trainable(q, k, v, slopes, block_q=128, block_k=128):
+    """Differentiable wrapper used by the L2 model when attn_impl="pallas".
+
+    Forward: the Pallas flash kernel above (lowered into the step HLO).
+    Backward: recompute-based VJP through the fused reference formulation --
+    the same recompute-instead-of-store strategy FlashAttention's backward
+    pass uses, expressed at the XLA level. (A hand-tiled Pallas backward
+    kernel is a possible extension; numerics are identical either way and the
+    forward hot-spot is what the paper's recipe accelerates.)
+    """
+    return flash_attention(q, k, v, slopes, block_q=block_q, block_k=block_k,
+                           interpret=True)
+
+
+def _fat_fwd(q, k, v, slopes, block_q, block_k):
+    out = flash_attention(q, k, v, slopes, block_q=block_q, block_k=block_k,
+                          interpret=True)
+    return out, (q, k, v, slopes)
+
+
+def _fat_bwd(block_q, block_k, res, g):
+    from .ref import attention_ref  # local import avoids a cycle
+    q, k, v, slopes = res
+    _out, vjp = jax.vjp(lambda q_, k_, v_: attention_ref(q_, k_, v_, slopes),
+                        q, k, v)
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, None
+
+
+flash_attention_trainable.defvjp(_fat_fwd, _fat_bwd)
+
+
+def vmem_footprint_bytes(block_q: int, block_k: int, seq_len: int,
+                         head_dim: int) -> int:
+    """Estimated VMEM bytes for one grid cell (used by DESIGN.md perf notes).
+
+    q tile + streamed k/v slabs (double-buffered) + score tile + softmax state
+    + accumulator, all f32.
+    """
+    f = 4
+    q_t = block_q * head_dim
+    kv = 2 * 2 * block_k * head_dim  # two tensors, double buffered
+    s_t = block_q * block_k
+    state = block_q * (2 + head_dim)
+    return f * (q_t + kv + s_t + state)

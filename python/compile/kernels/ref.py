@@ -1,0 +1,61 @@
+"""Pure-jnp oracle for the L1 attention kernel.
+
+This file is the CORRECTNESS REFERENCE: the Pallas flash-attention kernel in
+`flash_attention.py` must match `attention_ref` to float32 tolerance for every
+shape/dtype the tests sweep (see python/tests/test_kernel.py). It is also the
+"jnp" attention lowering used by the fast CPU artifacts (XLA fuses it well).
+
+Semantics reproduced from the paper's local training recipe (MPT + ALiBi +
+causal masking, section 6.1):
+
+  scores[b,h,i,j] = q . k / sqrt(d_head)  -  slope_h * (i - j)   for j <= i
+  out = softmax(scores) @ v
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def alibi_slopes(n_heads: int) -> np.ndarray:
+    """ALiBi head slopes (Press et al. 2022): geometric 2^(-8i/n) sequence.
+
+    For non-power-of-two head counts we follow the reference implementation:
+    use the slopes for the next power of two and take the odd-indexed extras.
+    """
+    def pow2_slopes(n):
+        start = 2.0 ** (-(2.0 ** -(np.log2(n) - 3)))
+        return np.array([start ** (i + 1) for i in range(n)])
+
+    if np.log2(n_heads).is_integer():
+        return pow2_slopes(n_heads).astype(np.float32)
+    closest = 2 ** int(np.floor(np.log2(n_heads)))
+    base = pow2_slopes(closest)
+    extra = pow2_slopes(2 * closest)[0::2][: n_heads - closest]
+    return np.concatenate([base, extra]).astype(np.float32)
+
+
+def alibi_bias(slopes: jnp.ndarray, seq_len: int) -> jnp.ndarray:
+    """[H, L, L] additive bias: -slope * (i - j), lower triangle only."""
+    i = jnp.arange(seq_len)[:, None]
+    j = jnp.arange(seq_len)[None, :]
+    dist = (i - j).astype(jnp.float32)  # >= 0 on/below the diagonal
+    return -slopes[:, None, None] * dist[None, :, :]
+
+
+def attention_ref(q, k, v, slopes):
+    """Causal ALiBi attention. q,k,v: [B, H, L, D]; slopes: [H].
+
+    Returns [B, H, L, D] in float32.
+    """
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    b, h, l, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    scores = scores + alibi_bias(jnp.asarray(slopes, jnp.float32), l)[None]
+    causal = jnp.tril(jnp.ones((l, l), dtype=bool))
+    scores = jnp.where(causal[None, None], scores, -jnp.inf)
+    weights = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    weights = weights / weights.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", weights, v)

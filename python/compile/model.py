@@ -1,0 +1,320 @@
+"""L2: the paper's local-training compute graph in JAX.
+
+An MPT-style decoder-only transformer (pre-LN, ALiBi causal attention, 4x
+GELU MLP, weight-tied LM head -- paper section 6.1) plus the fused local
+train step the Photon LLM Node executes: forward, backward, global-norm
+gradient clipping, and an AdamW update with the paper's (0.9, 0.95) betas.
+
+All parameters live in ONE flat f32 vector. The layout (name/shape/offset per
+tensor) is exported to `manifest.json` by aot.py so the Rust coordinator can
+initialize, aggregate, and inspect per-tensor norms without ever re-deriving
+model structure. Inside the jitted step the flat vector is sliced with static
+offsets, so XLA sees ordinary fused tensor code.
+
+Exported step functions (lowered to HLO text per config by aot.py):
+
+  train_step(params, m, v, step, lr, tokens[B, l+1])
+      -> (params', m', v', loss, grad_norm, update_norm, act_norm)
+  eval_step(params, tokens[B, l+1]) -> (sum_nll, token_count)
+  score_step(params, tokens[B, l+1], mask[B, l]) -> (option_ll[B], option_len[B])
+
+The attention inner op is either the pure-jnp reference (fast on XLA-CPU) or
+the L1 Pallas flash kernel (cfg.attn_impl == "pallas"), which lowers into the
+same HLO via interpret mode. Both are asserted numerically equal in tests.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels.ref import attention_ref, alibi_slopes
+from .kernels.flash_attention import flash_attention_trainable
+
+
+# --------------------------------------------------------------------------
+# Flat parameter layout
+# --------------------------------------------------------------------------
+
+def layout(cfg: ModelConfig):
+    """[(name, shape, init_spec)] in flat-vector order.
+
+    init_spec is one of {"kind": "normal", "std": s} / {"kind": "ones"} and is
+    consumed by the Rust initializer (model/init.rs). Residual-output
+    projections use the GPT-2 / MPT depth-scaled std 0.02/sqrt(2*n_blocks).
+    """
+    d, mlp, v = cfg.d_model, cfg.mlp_dim, cfg.vocab
+    std = 0.02
+    resid_std = 0.02 / float(np.sqrt(2.0 * cfg.n_blocks))
+    ents = [("wte", (v, d), {"kind": "normal", "std": std})]
+    for b in range(cfg.n_blocks):
+        p = f"block{b}."
+        ents += [
+            (p + "ln1_g", (d,), {"kind": "ones"}),
+            (p + "w_qkv", (d, 3 * d), {"kind": "normal", "std": std}),
+            (p + "w_o", (d, d), {"kind": "normal", "std": resid_std}),
+            (p + "ln2_g", (d,), {"kind": "ones"}),
+            (p + "w_up", (d, mlp), {"kind": "normal", "std": std}),
+            (p + "w_down", (mlp, d), {"kind": "normal", "std": resid_std}),
+        ]
+    ents.append(("ln_f_g", (d,), {"kind": "ones"}))
+    return ents
+
+
+def layout_with_offsets(cfg: ModelConfig):
+    """[(name, shape, offset, size, init_spec)] plus total parameter count."""
+    out, off = [], 0
+    for name, shape, init in layout(cfg):
+        size = int(np.prod(shape))
+        out.append((name, shape, off, size, init))
+        off += size
+    return out, off
+
+
+def n_params(cfg: ModelConfig) -> int:
+    return layout_with_offsets(cfg)[1]
+
+
+def unpack(flat, cfg: ModelConfig):
+    """Flat vector -> {name: tensor} via static slices (fuses under jit)."""
+    ents, total = layout_with_offsets(cfg)
+    assert flat.shape == (total,), (flat.shape, total)
+    return {
+        name: flat[off: off + size].reshape(shape)
+        for name, shape, off, size, _ in ents
+    }
+
+
+def pack(params: dict, cfg: ModelConfig):
+    """{name: tensor} -> flat vector; inverse of `unpack` (tested)."""
+    ents, _ = layout_with_offsets(cfg)
+    return jnp.concatenate(
+        [params[name].reshape(-1) for name, *_ in ents])
+
+
+def decay_mask(cfg: ModelConfig) -> np.ndarray:
+    """1.0 where AdamW weight decay applies (matrices), 0.0 for LN scales."""
+    ents, total = layout_with_offsets(cfg)
+    mask = np.zeros(total, np.float32)
+    for name, shape, off, size, _ in ents:
+        if len(shape) > 1:  # decay weights, not LN gains
+            mask[off: off + size] = 1.0
+    return mask
+
+
+def init_params_np(cfg: ModelConfig, seed: int = 0) -> np.ndarray:
+    """Numpy initializer (used in python tests; Rust has its own PCG-based
+    initializer following the same per-tensor init specs)."""
+    rng = np.random.default_rng(seed)
+    ents, total = layout_with_offsets(cfg)
+    flat = np.zeros(total, np.float32)
+    for _name, _shape, off, size, init in ents:
+        if init["kind"] == "normal":
+            flat[off: off + size] = (
+                rng.standard_normal(size) * init["std"]).astype(np.float32)
+        elif init["kind"] == "ones":
+            flat[off: off + size] = 1.0
+        else:  # pragma: no cover
+            raise ValueError(init)
+    return flat
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+def _ln(x, g):
+    """LayerNorm with scale only (bias-free, as in our MPT reduction)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g
+
+
+def _attention(x, w_qkv, w_o, cfg: ModelConfig):
+    b, l, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    qkv = x @ w_qkv  # [B, L, 3d]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, l, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, l, h, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, l, h, hd).transpose(0, 2, 1, 3)
+    slopes = alibi_slopes(h)
+    if cfg.attn_impl == "pallas":
+        # Blocks sized to tile the (small) analogue sequence lengths; on a
+        # real TPU these would be 128/128 (see flash_attention.py docstring).
+        bq = min(128, l)
+        o = flash_attention_trainable(q, k, v, slopes, bq, bq)
+    else:
+        o = attention_ref(q, k, v, slopes)
+    o = o.transpose(0, 2, 1, 3).reshape(b, l, d)
+    return o @ w_o
+
+
+def forward(flat, tokens, cfg: ModelConfig):
+    """tokens [B, L] int32 -> (logits [B, L, V], act_norm scalar).
+
+    act_norm is the l2 norm of the final-layer output activations -- the
+    divergence leading-indicator tracked in the paper's fig5 (OPT-style
+    monitoring, section 6.2).
+    """
+    p = unpack(flat, cfg)
+    x = p["wte"][tokens]  # [B, L, d]
+    for bidx in range(cfg.n_blocks):
+        blk = f"block{bidx}."
+        a = _attention(_ln(x, p[blk + "ln1_g"]),
+                       p[blk + "w_qkv"], p[blk + "w_o"], cfg)
+        x = x + a
+        hmid = _ln(x, p[blk + "ln2_g"])
+        m = jax.nn.gelu(hmid @ p[blk + "w_up"]) @ p[blk + "w_down"]
+        x = x + m
+    x = _ln(x, p["ln_f_g"])
+    act_norm = jnp.sqrt(jnp.sum(x * x))
+    logits = x @ p["wte"].T  # weight-tied head
+    return logits, act_norm
+
+
+def _nll(logits, targets):
+    """Per-position negative log likelihood, [B, L]."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return logz - gold
+
+
+def loss_fn(flat, tokens_in, targets, cfg: ModelConfig):
+    logits, act_norm = forward(flat, tokens_in, cfg)
+    return jnp.mean(_nll(logits, targets)), act_norm
+
+
+# --------------------------------------------------------------------------
+# Step functions (AOT entry points)
+# --------------------------------------------------------------------------
+
+def train_step(flat, m, v, step, lr, tokens, *, cfg: ModelConfig):
+    """One local AdamW step (fwd+bwd+clip+update), fully fused under jit.
+
+    `step` is the 1-based optimizer step (for bias correction); `lr` comes
+    from the Rust-side cosine scheduler (paper: schedule synchronized across
+    *sequential* steps, Table 3), so the artifact stays schedule-agnostic.
+    """
+    tokens_in, targets = tokens[:, :-1], tokens[:, 1:]
+    (loss, act_norm), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        flat, tokens_in, targets, cfg)
+
+    grad_norm = jnp.sqrt(jnp.sum(grads * grads))
+    clip_coef = jnp.minimum(1.0, cfg.clip_norm / (grad_norm + 1e-6))
+    grads = grads * clip_coef
+
+    b1, b2, eps = cfg.beta1, cfg.beta2, cfg.eps
+    m_new = b1 * m + (1.0 - b1) * grads
+    v_new = b2 * v + (1.0 - b2) * grads * grads
+    stepf = step.astype(jnp.float32)
+    m_hat = m_new / (1.0 - b1 ** stepf)
+    v_hat = v_new / (1.0 - b2 ** stepf)
+    mask = jnp.asarray(decay_mask(cfg))
+    update = lr * (m_hat / (jnp.sqrt(v_hat) + eps)
+                   + cfg.weight_decay * mask * flat)
+    flat_new = flat - update
+    update_norm = jnp.sqrt(jnp.sum(update * update))
+    return (flat_new, m_new, v_new, loss, grad_norm, update_norm, act_norm)
+
+
+#: Local steps fused into one `train_chunk` dispatch (perf pass, DESIGN.md
+#: §7): amortizes PJRT dispatch + host<->device parameter round-trips over
+#: CHUNK steps via `lax.scan`. Rust falls back to `train_step` for the
+#: remainder when τ is not a multiple of CHUNK.
+TRAIN_CHUNK = 8
+
+
+def train_chunk(flat, m, v, step0, lrs, tokens, *, cfg: ModelConfig):
+    """CHUNK fused local AdamW steps under one jit (lax.scan).
+
+    step0: optimizer step count *before* this chunk (0-based); lrs: [CHUNK]
+    learning rates from the Rust scheduler; tokens: [CHUNK, B, l+1].
+    Numerically identical to CHUNK calls of `train_step` (tested).
+    Returns per-step metric vectors so the coordinator's monitoring keeps
+    per-step resolution.
+    """
+    mask = jnp.asarray(decay_mask(cfg))
+    b1, b2, eps = cfg.beta1, cfg.beta2, cfg.eps
+
+    def body(carry, xs):
+        flat, m, v = carry
+        toks, lr, stepf = xs
+        tokens_in, targets = toks[:, :-1], toks[:, 1:]
+        (loss, act_norm), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            flat, tokens_in, targets, cfg)
+        grad_norm = jnp.sqrt(jnp.sum(grads * grads))
+        clip_coef = jnp.minimum(1.0, cfg.clip_norm / (grad_norm + 1e-6))
+        grads = grads * clip_coef
+        m_new = b1 * m + (1.0 - b1) * grads
+        v_new = b2 * v + (1.0 - b2) * grads * grads
+        m_hat = m_new / (1.0 - b1 ** stepf)
+        v_hat = v_new / (1.0 - b2 ** stepf)
+        update = lr * (m_hat / (jnp.sqrt(v_hat) + eps)
+                       + cfg.weight_decay * mask * flat)
+        flat_new = flat - update
+        update_norm = jnp.sqrt(jnp.sum(update * update))
+        return (flat_new, m_new, v_new), (loss, grad_norm, update_norm, act_norm)
+
+    steps = step0.astype(jnp.float32) + 1.0 + jnp.arange(
+        TRAIN_CHUNK, dtype=jnp.float32)
+    (flat, m, v), (losses, gns, uns, ans) = jax.lax.scan(
+        body, (flat, m, v), (tokens, lrs, steps))
+    return (flat, m, v, losses, gns, uns, ans)
+
+
+def eval_step(flat, tokens, *, cfg: ModelConfig):
+    """Summed NLL + token count over a batch; Rust turns sums into ppl."""
+    tokens_in, targets = tokens[:, :-1], tokens[:, 1:]
+    logits, _ = forward(flat, tokens_in, cfg)
+    nll = _nll(logits, targets)
+    return (jnp.sum(nll), jnp.asarray(nll.size, jnp.float32))
+
+
+def score_step(flat, tokens, mask, *, cfg: ModelConfig):
+    """Masked per-sequence log-likelihood (downstream eval harness, §7.9).
+
+    mask [B, L] selects the *target* positions belonging to the scored
+    continuation; returns (total logprob per sequence, #scored tokens) so the
+    harness can apply length normalization like the paper's ICL suite.
+    """
+    tokens_in, targets = tokens[:, :-1], tokens[:, 1:]
+    logits, _ = forward(flat, tokens_in, cfg)
+    ll = -_nll(logits, targets) * mask
+    return (jnp.sum(ll, axis=1), jnp.sum(mask, axis=1))
+
+
+def step_fns(cfg: ModelConfig):
+    """The three AOT entry points with the config closed over."""
+    return {
+        "train_step": functools.partial(train_step, cfg=cfg),
+        "train_chunk": functools.partial(train_chunk, cfg=cfg),
+        "eval_step": functools.partial(eval_step, cfg=cfg),
+        "score_step": functools.partial(score_step, cfg=cfg),
+    }
+
+
+def example_args(cfg: ModelConfig, which: str):
+    """ShapeDtypeStructs matching each entry point's signature."""
+    total = n_params(cfg)
+    f32, i32 = jnp.float32, jnp.int32
+    vec = jax.ShapeDtypeStruct((total,), f32)
+    toks = jax.ShapeDtypeStruct((cfg.batch_size, cfg.seq_len + 1), i32)
+    if which == "train_step":
+        return (vec, vec, vec, jax.ShapeDtypeStruct((), i32),
+                jax.ShapeDtypeStruct((), f32), toks)
+    if which == "train_chunk":
+        return (
+            vec, vec, vec, jax.ShapeDtypeStruct((), i32),
+            jax.ShapeDtypeStruct((TRAIN_CHUNK,), f32),
+            jax.ShapeDtypeStruct(
+                (TRAIN_CHUNK, cfg.batch_size, cfg.seq_len + 1), i32),
+        )
+    if which == "eval_step":
+        return (vec, toks)
+    if which == "score_step":
+        return (vec, toks,
+                jax.ShapeDtypeStruct((cfg.batch_size, cfg.seq_len), f32))
+    raise ValueError(which)

@@ -1,0 +1,89 @@
+"""AOT pipeline: manifest structure, HLO text emission, rebuild stamping."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, configs, model
+
+CFG = configs.BY_NAME["m75a"]
+
+
+def test_manifest_structure():
+    man = aot.build_manifest(CFG)
+    assert man["schema_version"] == 1
+    assert man["n_params"] == model.n_params(CFG)
+    assert man["config"]["name"] == "m75a"
+    assert man["config"]["head_dim"] == CFG.head_dim
+    names = [p["name"] for p in man["params"]]
+    assert names[0] == "wte" and names[-1] == "ln_f_g"
+    # Offsets contiguous and sizes match shapes.
+    off = 0
+    for p in man["params"]:
+        assert p["offset"] == off
+        size = 1
+        for s in p["shape"]:
+            size *= s
+        assert p["size"] == size
+        off += size
+    assert off == man["n_params"]
+
+
+def test_manifest_signatures():
+    man = aot.build_manifest(CFG)
+    ts = man["steps"]["train_step"]
+    assert [i["name"] for i in ts["inputs"]] == [
+        "params", "m", "v", "step", "lr", "tokens"]
+    assert [o["name"] for o in ts["outputs"]] == [
+        "params", "m", "v", "loss", "grad_norm", "update_norm", "act_norm"]
+    assert ts["inputs"][0]["shape"] == [model.n_params(CFG)]
+    assert ts["inputs"][5]["shape"] == [CFG.batch_size, CFG.seq_len + 1]
+    assert man["steps"]["eval_step"]["file"] == "eval_step.hlo.txt"
+    sc = man["steps"]["score_step"]
+    assert sc["inputs"][2]["shape"] == [CFG.batch_size, CFG.seq_len]
+
+
+def test_manifest_json_serializable():
+    for cfg in configs.CONFIGS:
+        json.dumps(aot.build_manifest(cfg))
+
+
+def test_hlo_text_emission():
+    import jax
+    fn = model.step_fns(CFG)["eval_step"]
+    lowered = jax.jit(fn).lower(*model.example_args(CFG, "eval_step"))
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "f32[%d]" % model.n_params(CFG) in text
+
+
+def test_compile_config_stamps_and_skips(tmp_path):
+    fp = aot._source_fingerprint()
+    did = aot.compile_config(CFG, str(tmp_path), fp)
+    assert did
+    for f in ("train_step.hlo.txt", "eval_step.hlo.txt",
+              "score_step.hlo.txt", "manifest.json", ".stamp"):
+        assert (tmp_path / "m75a" / f).exists(), f
+    # Second run is a no-op; changed fingerprint forces a rebuild.
+    assert not aot.compile_config(CFG, str(tmp_path), fp)
+    assert aot.compile_config(CFG, str(tmp_path), "different")
+
+
+def test_fingerprint_is_stable():
+    assert aot._source_fingerprint() == aot._source_fingerprint()
+
+
+def test_repo_artifacts_exist():
+    """`make artifacts` must have produced every config (integration pin)."""
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    if not os.path.isdir(root):
+        pytest.skip("artifacts not built yet")
+    idx = json.load(open(os.path.join(root, "index.json")))
+    for name in idx["configs"]:
+        mdir = os.path.join(root, name)
+        man = json.load(open(os.path.join(mdir, "manifest.json")))
+        cfg = configs.BY_NAME[name]
+        assert man["n_params"] == model.n_params(cfg)
+        for step in man["steps"].values():
+            assert os.path.exists(os.path.join(mdir, step["file"]))

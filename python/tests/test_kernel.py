@@ -1,0 +1,191 @@
+"""L1 correctness: Pallas flash-attention kernel vs the pure-jnp oracle.
+
+This is the CORE numerical signal for the kernel layer. Hypothesis sweeps
+shapes, dtypes, and block sizes; dedicated tests pin causality, ALiBi, the
+online-softmax stability, and the custom-VJP (training) wrapper.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.flash_attention import (
+    flash_attention,
+    flash_attention_trainable,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import alibi_bias, alibi_slopes, attention_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand_qkv(rng, b, h, l, d, dtype=np.float32, scale=1.0):
+    mk = lambda: jnp.asarray(
+        rng.standard_normal((b, h, l, d)) * scale, dtype)
+    return mk(), mk(), mk()
+
+
+def _divisors(n):
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: shapes / dtypes / block sizes
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.sampled_from([1, 2, 4]),
+    l=st.sampled_from([8, 16, 32, 64]),
+    d=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_shapes(b, h, l, d, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = _rand_qkv(rng, b, h, l, d)
+    slopes = alibi_slopes(h)
+    ref = attention_ref(q, k, v, slopes)
+    out = flash_attention(q, k, v, slopes)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    l=st.sampled_from([16, 32, 64]),
+    bq_i=st.integers(0, 10),
+    bk_i=st.integers(0, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_block_size_invariance(l, bq_i, bk_i, seed):
+    """Any (block_q, block_k) tiling of L gives the same numbers."""
+    divs = [dv for dv in _divisors(l) if dv >= 2]
+    bq = divs[bq_i % len(divs)]
+    bk = divs[bk_i % len(divs)]
+    rng = np.random.default_rng(seed)
+    q, k, v = _rand_qkv(rng, 2, 2, l, 8)
+    slopes = alibi_slopes(2)
+    ref = attention_ref(q, k, v, slopes)
+    out = flash_attention(q, k, v, slopes, block_q=bq, block_k=bk)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    dtype=st.sampled_from([np.float32, np.float16]),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_dtypes_and_scales(dtype, scale, seed):
+    """f16 inputs and large-magnitude scores: online softmax must stay stable."""
+    rng = np.random.default_rng(seed)
+    q, k, v = _rand_qkv(rng, 1, 2, 32, 8, dtype=dtype, scale=scale)
+    slopes = alibi_slopes(2)
+    ref = attention_ref(q, k, v, slopes)
+    out = flash_attention(q, k, v, slopes, block_q=8, block_k=8)
+    assert np.isfinite(np.asarray(out)).all()
+    # Tolerance scales with score magnitude: at scale≈10 the logits are
+    # O(100) and the online-softmax accumulation order differs from the
+    # fused reference by a few f32 ulps of exp(large).
+    base = 2e-5 if dtype == np.float32 else 2e-3
+    tol = base * max(1.0, scale * 2.0)
+    np.testing.assert_allclose(out, ref, rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# Semantics pins
+# ---------------------------------------------------------------------------
+
+def test_causality_future_tokens_do_not_leak():
+    rng = np.random.default_rng(7)
+    q, k, v = _rand_qkv(rng, 1, 2, 32, 8)
+    out1 = flash_attention(q, k, v, alibi_slopes(2), block_q=8, block_k=8)
+    # Perturb the *last* key/value; all but the final query row must be equal.
+    k2 = k.at[:, :, -1, :].set(99.0)
+    v2 = v.at[:, :, -1, :].set(-99.0)
+    out2 = flash_attention(q, k2, v2, alibi_slopes(2), block_q=8, block_k=8)
+    np.testing.assert_allclose(out1[:, :, :-1], out2[:, :, :-1],
+                               rtol=1e-6, atol=1e-6)
+    assert not np.allclose(out1[:, :, -1], out2[:, :, -1])
+
+
+def test_first_position_is_value_passthrough():
+    """Row 0 attends only to itself => out[...,0,:] == v[...,0,:]."""
+    rng = np.random.default_rng(3)
+    q, k, v = _rand_qkv(rng, 2, 2, 16, 8)
+    out = flash_attention(q, k, v, alibi_slopes(2), block_q=8, block_k=8)
+    np.testing.assert_allclose(out[:, :, 0], v[:, :, 0], rtol=1e-6, atol=1e-6)
+
+
+def test_alibi_slopes_power_of_two():
+    s = alibi_slopes(8)
+    np.testing.assert_allclose(s, [2 ** (-i) for i in range(1, 9)], rtol=1e-6)
+
+
+def test_alibi_slopes_non_power_of_two():
+    s = alibi_slopes(12)
+    assert len(s) == 12
+    assert (s > 0).all() and (s <= 1.0).all()
+    # First 8 entries are the 8-head slopes.
+    np.testing.assert_allclose(s[:8], alibi_slopes(8), rtol=1e-6)
+
+
+def test_alibi_bias_structure():
+    b = np.asarray(alibi_bias(jnp.asarray(alibi_slopes(2)), 6))
+    assert b.shape == (2, 6, 6)
+    # Zero on the diagonal, -slope * distance below it.
+    np.testing.assert_allclose(np.diagonal(b, axis1=1, axis2=2), 0.0)
+    np.testing.assert_allclose(b[0, 3, 1], -alibi_slopes(2)[0] * 2, rtol=1e-6)
+
+
+def test_alibi_actually_changes_output():
+    rng = np.random.default_rng(11)
+    q, k, v = _rand_qkv(rng, 1, 1, 32, 8)
+    out_alibi = flash_attention(q, k, v, np.asarray([0.5], np.float32))
+    out_plain = flash_attention(q, k, v, np.asarray([0.0], np.float32))
+    assert not np.allclose(out_alibi, out_plain)
+
+
+def test_indivisible_block_raises():
+    rng = np.random.default_rng(0)
+    q, k, v = _rand_qkv(rng, 1, 1, 12, 4)
+    with pytest.raises(ValueError):
+        flash_attention(q, k, v, alibi_slopes(1), block_q=8, block_k=8)
+
+
+# ---------------------------------------------------------------------------
+# Training wrapper (custom VJP)
+# ---------------------------------------------------------------------------
+
+def test_trainable_forward_matches_kernel():
+    rng = np.random.default_rng(5)
+    q, k, v = _rand_qkv(rng, 2, 2, 32, 8)
+    s = alibi_slopes(2)
+    np.testing.assert_allclose(
+        flash_attention_trainable(q, k, v, s, 16, 16),
+        flash_attention(q, k, v, s, block_q=16, block_k=16),
+        rtol=1e-6, atol=1e-6)
+
+
+def test_trainable_gradients_match_ref_gradients():
+    rng = np.random.default_rng(9)
+    q, k, v = _rand_qkv(rng, 1, 2, 16, 8)
+    s = alibi_slopes(2)
+
+    def loss_kernel(q, k, v):
+        return jnp.sum(flash_attention_trainable(q, k, v, s, 8, 8) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(attention_ref(q, k, v, s) ** 2)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+def test_vmem_footprint_within_budget():
+    """The DESIGN.md TPU blocking (128/128, d<=256) must fit ~16MB VMEM."""
+    assert vmem_footprint_bytes(128, 128, 2048, 256) < 16 * 2 ** 20

@@ -1,0 +1,306 @@
+"""L2 correctness: transformer forward, flat packing, AdamW step, eval/score."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import configs, model
+from compile.configs import ModelConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = configs.BY_NAME["m75a"]
+PALLAS_CFG = configs.BY_NAME["tiny_pallas"]
+
+
+def _tokens(cfg, seed=0, batch=None):
+    rng = np.random.default_rng(seed)
+    b = batch or cfg.batch_size
+    return jnp.asarray(
+        rng.integers(0, cfg.vocab, (b, cfg.seq_len + 1)), jnp.int32)
+
+
+def _flat(cfg, seed=0):
+    return jnp.asarray(model.init_params_np(cfg, seed))
+
+
+# ---------------------------------------------------------------------------
+# Layout / packing
+# ---------------------------------------------------------------------------
+
+def test_layout_matches_param_count_formula():
+    for cfg in configs.CONFIGS:
+        assert model.n_params(cfg) == configs.param_count(cfg), cfg.name
+
+
+def test_layout_offsets_are_contiguous():
+    ents, total = model.layout_with_offsets(CFG)
+    off = 0
+    for name, shape, o, size, _ in ents:
+        assert o == off, name
+        assert size == int(np.prod(shape))
+        off += size
+    assert off == total
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_pack_unpack_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    flat = jnp.asarray(rng.standard_normal(model.n_params(CFG)), jnp.float32)
+    again = model.pack(model.unpack(flat, CFG), CFG)
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(again))
+
+
+def test_decay_mask_excludes_layernorm_gains():
+    mask = model.decay_mask(CFG)
+    ents, total = model.layout_with_offsets(CFG)
+    assert mask.shape == (total,)
+    for name, shape, off, size, _ in ents:
+        expected = 1.0 if len(shape) > 1 else 0.0
+        assert (mask[off: off + size] == expected).all(), name
+
+
+def test_init_stats():
+    flat = model.init_params_np(CFG, seed=3)
+    ents, _ = model.layout_with_offsets(CFG)
+    for name, shape, off, size, init in ents:
+        seg = flat[off: off + size]
+        if init["kind"] == "ones":
+            assert (seg == 1.0).all(), name
+        else:
+            assert abs(seg.mean()) < 5 * init["std"] / np.sqrt(size), name
+            assert abs(seg.std() - init["std"]) < 0.25 * init["std"], name
+
+
+# ---------------------------------------------------------------------------
+# Forward semantics
+# ---------------------------------------------------------------------------
+
+def test_forward_shapes_all_configs():
+    for cfg in configs.CONFIGS:
+        if cfg.name == "e2e":  # skip the big one for speed
+            continue
+        flat = _flat(cfg)
+        toks = _tokens(cfg)[:, :-1]
+        logits, act = model.forward(flat, toks, cfg)
+        assert logits.shape == (cfg.batch_size, cfg.seq_len, cfg.vocab)
+        assert np.isfinite(float(act))
+
+
+def test_forward_is_causal():
+    """Changing token t only affects logits at positions >= t."""
+    flat = _flat(CFG)
+    toks = _tokens(CFG)[:, :-1]
+    logits1, _ = model.forward(flat, toks, CFG)
+    t = CFG.seq_len // 2
+    toks2 = toks.at[:, t].set((toks[:, t] + 1) % CFG.vocab)
+    logits2, _ = model.forward(flat, toks2, CFG)
+    np.testing.assert_allclose(logits1[:, :t], logits2[:, :t],
+                               rtol=1e-5, atol=1e-5)
+    assert not np.allclose(logits1[:, t:], logits2[:, t:])
+
+
+def test_pallas_model_matches_jnp_model():
+    """Full-model forward with the L1 kernel == with the jnp oracle."""
+    flat = _flat(CFG)
+    toks = _tokens(CFG)[:, :-1]
+    logits_jnp, act_jnp = model.forward(flat, toks, CFG)
+    logits_pal, act_pal = model.forward(flat, toks, PALLAS_CFG)
+    np.testing.assert_allclose(logits_pal, logits_jnp, rtol=5e-5, atol=5e-5)
+    np.testing.assert_allclose(act_pal, act_jnp, rtol=5e-5, atol=5e-5)
+
+
+def test_initial_loss_near_uniform():
+    """Fresh init => loss ~ ln(vocab), the classic sanity pin."""
+    flat = _flat(CFG)
+    toks = _tokens(CFG)
+    loss, _ = model.loss_fn(flat, toks[:, :-1], toks[:, 1:], CFG)
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def _run_steps(cfg, n, lr=3e-3, seed=0):
+    fns = model.step_fns(cfg)
+    ts = jax.jit(fns["train_step"])
+    flat = _flat(cfg, seed)
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    toks = _tokens(cfg, seed)
+    losses = []
+    for i in range(1, n + 1):
+        flat, m, v, loss, gn, un, an = ts(
+            flat, m, v, jnp.asarray(i, jnp.int32),
+            jnp.asarray(lr, jnp.float32), toks)
+        losses.append(float(loss))
+    return flat, losses
+
+
+def test_train_step_decreases_loss():
+    _, losses = _run_steps(CFG, 25)
+    assert losses[-1] < losses[0] - 1.0, losses
+
+
+def test_train_step_pallas_matches_jnp():
+    """The pallas-lowered train step follows the same trajectory."""
+    f_jnp, l_jnp = _run_steps(CFG, 5)
+    f_pal, l_pal = _run_steps(PALLAS_CFG, 5)
+    np.testing.assert_allclose(l_pal, l_jnp, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(f_pal), np.asarray(f_jnp),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_train_step_metrics_finite_and_positive():
+    fns = model.step_fns(CFG)
+    ts = jax.jit(fns["train_step"])
+    flat = _flat(CFG)
+    z = jnp.zeros_like(flat)
+    out = ts(flat, z, z, jnp.asarray(1, jnp.int32),
+             jnp.asarray(1e-3, jnp.float32), _tokens(CFG))
+    _, _, _, loss, gn, un, an = out
+    for x in (loss, gn, un, an):
+        assert np.isfinite(float(x)) and float(x) > 0
+
+
+def test_adamw_matches_reference_implementation():
+    """One fused step == a hand-written numpy AdamW on the same gradient."""
+    cfg = CFG
+    flat = _flat(cfg, 1)
+    toks = _tokens(cfg, 1)
+    lr = 1e-3
+
+    grads = jax.grad(
+        lambda f: model.loss_fn(f, toks[:, :-1], toks[:, 1:], cfg)[0])(flat)
+    g = np.asarray(grads, np.float64)
+    gn = np.linalg.norm(g)
+    g = g * min(1.0, cfg.clip_norm / (gn + 1e-6))
+    m = (1 - cfg.beta1) * g
+    v = (1 - cfg.beta2) * g * g
+    m_hat = m / (1 - cfg.beta1)
+    v_hat = v / (1 - cfg.beta2)
+    mask = model.decay_mask(cfg)
+    expected = (np.asarray(flat, np.float64)
+                - lr * (m_hat / (np.sqrt(v_hat) + cfg.eps)
+                        + cfg.weight_decay * mask * np.asarray(flat)))
+
+    fns = model.step_fns(cfg)
+    out = jax.jit(fns["train_step"])(
+        flat, jnp.zeros_like(flat), jnp.zeros_like(flat),
+        jnp.asarray(1, jnp.int32), jnp.asarray(lr, jnp.float32), toks)
+    np.testing.assert_allclose(np.asarray(out[0]), expected,
+                               rtol=2e-4, atol=2e-6)
+
+
+def test_lr_zero_is_identity():
+    fns = model.step_fns(CFG)
+    flat = _flat(CFG)
+    z = jnp.zeros_like(flat)
+    out = jax.jit(fns["train_step"])(
+        flat, z, z, jnp.asarray(1, jnp.int32),
+        jnp.asarray(0.0, jnp.float32), _tokens(CFG))
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(flat))
+
+
+# ---------------------------------------------------------------------------
+# Eval / score steps
+# ---------------------------------------------------------------------------
+
+def test_eval_step_consistent_with_loss():
+    fns = model.step_fns(CFG)
+    flat = _flat(CFG)
+    toks = _tokens(CFG)
+    s, n = jax.jit(fns["eval_step"])(flat, toks)
+    loss, _ = model.loss_fn(flat, toks[:, :-1], toks[:, 1:], CFG)
+    assert float(n) == CFG.batch_size * CFG.seq_len
+    np.testing.assert_allclose(float(s) / float(n), float(loss), rtol=1e-5)
+
+
+def test_score_step_mask_selects_positions():
+    fns = model.step_fns(CFG)
+    flat = _flat(CFG)
+    toks = _tokens(CFG)
+    full_mask = jnp.ones((CFG.batch_size, CFG.seq_len), jnp.float32)
+    ll_full, len_full = jax.jit(fns["score_step"])(flat, toks, full_mask)
+    assert (np.asarray(len_full) == CFG.seq_len).all()
+    # Mask = 0 => zero log-likelihood contribution.
+    zero_mask = jnp.zeros_like(full_mask)
+    ll_zero, len_zero = jax.jit(fns["score_step"])(flat, toks, zero_mask)
+    np.testing.assert_allclose(np.asarray(ll_zero), 0.0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(len_zero), 0.0)
+    # Half mask sums a subset: |ll_half| <= |sum of per-token lls| of full.
+    half = full_mask.at[:, : CFG.seq_len // 2].set(0.0)
+    ll_half, len_half = jax.jit(fns["score_step"])(flat, toks, half)
+    assert (np.asarray(len_half) == CFG.seq_len // 2).all()
+    assert (np.abs(np.asarray(ll_half)) <= np.abs(np.asarray(ll_full)) + 1e-4).all()
+
+
+def test_example_args_signatures():
+    for which in ("train_step", "eval_step", "score_step"):
+        args = model.example_args(CFG, which)
+        assert all(hasattr(a, "shape") for a in args)
+    with pytest.raises(ValueError):
+        model.example_args(CFG, "nope")
+
+
+# ---------------------------------------------------------------------------
+# Chunked train step (perf pass)
+# ---------------------------------------------------------------------------
+
+def test_train_chunk_matches_single_steps():
+    """train_chunk == TRAIN_CHUNK consecutive train_steps, same trajectory."""
+    cfg = CFG
+    fns = model.step_fns(cfg)
+    ts = jax.jit(fns["train_step"])
+    tc = jax.jit(fns["train_chunk"])
+    k = model.TRAIN_CHUNK
+
+    rng = np.random.default_rng(5)
+    toks_np = rng.integers(0, cfg.vocab, (k, cfg.batch_size, cfg.seq_len + 1))
+    toks = jnp.asarray(toks_np, jnp.int32)
+    lrs = jnp.asarray(3e-3 * (1.0 + 0.1 * np.arange(k)), jnp.float32)
+
+    # Reference: k single steps.
+    flat = _flat(cfg, 5)
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    ref_losses = []
+    f_r, m_r, v_r = flat, m, v
+    for i in range(k):
+        f_r, m_r, v_r, loss, gn, un, an = ts(
+            f_r, m_r, v_r, jnp.asarray(i + 1, jnp.int32), lrs[i], toks[i])
+        ref_losses.append(float(loss))
+
+    # Chunked: one dispatch.
+    f_c, m_c, v_c, losses, gns, uns, ans = tc(
+        flat, m, v, jnp.asarray(0, jnp.int32), lrs, toks)
+    np.testing.assert_allclose(np.asarray(losses), ref_losses, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(f_c), np.asarray(f_r),
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(m_c), np.asarray(m_r),
+                               rtol=1e-5, atol=1e-8)
+    assert np.asarray(gns).shape == (k,)
+    assert np.isfinite(np.asarray(ans)).all()
+
+
+def test_train_chunk_respects_step_offset():
+    """Bias correction must continue from step0 (mid-training chunk)."""
+    cfg = CFG
+    fns = model.step_fns(cfg)
+    tc = jax.jit(fns["train_chunk"])
+    k = model.TRAIN_CHUNK
+    flat = _flat(cfg, 6)
+    m = jnp.ones_like(flat) * 1e-4
+    v = jnp.ones_like(flat) * 1e-6
+    toks = jnp.asarray(
+        np.random.default_rng(6).integers(
+            0, cfg.vocab, (k, cfg.batch_size, cfg.seq_len + 1)), jnp.int32)
+    lrs = jnp.full((k,), 1e-3, jnp.float32)
+    out0 = tc(flat, m, v, jnp.asarray(0, jnp.int32), lrs, toks)
+    out100 = tc(flat, m, v, jnp.asarray(100, jnp.int32), lrs, toks)
+    # Different bias correction => different resulting params.
+    assert not np.allclose(np.asarray(out0[0]), np.asarray(out100[0]))

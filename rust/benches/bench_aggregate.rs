@@ -1,0 +1,55 @@
+//! bench_aggregate: the Photon Aggregator's vector-math hot path — client
+//! mean, pseudo-gradient, and each outer optimizer, across payload sizes
+//! matching the artifact ladder.
+
+use photon::benchkit::{bench, bench_header};
+use photon::model::vecmath::{mean_into, sub_into, weighted_mean_into};
+use photon::optim::outer::{OuterHyper, OuterOpt, OuterOptKind};
+use photon::testkit::rand_vec;
+use photon::util::rng::Rng;
+
+fn main() {
+    let quick = bench_header("bench_aggregate: outer-optimizer & aggregation throughput");
+    let sizes: &[usize] = if quick {
+        &[32_928, 713_952]
+    } else {
+        &[32_928, 95_568, 213_568, 713_952, 1_640_576, 4_526_016]
+    };
+    let k = 8;
+    for &n in sizes {
+        let mut rng = Rng::new(1);
+        let clients: Vec<Vec<f32>> = (0..k).map(|_| rand_vec(&mut rng, n, 0.1)).collect();
+        let rows: Vec<&[f32]> = clients.iter().map(|c| c.as_slice()).collect();
+        let weights = vec![1.0f64; k];
+        let mut mean = vec![0.0f32; n];
+        let mut pg = vec![0.0f32; n];
+        let mut global = rand_vec(&mut rng, n, 0.1);
+
+        let r = bench(&format!("mean_into/{n}x{k}"), 0.5, || {
+            mean_into(&rows, &mut mean);
+        });
+        r.print_with_throughput("param", (n * k) as f64);
+        let r = bench(&format!("weighted_mean_into/{n}x{k}"), 0.5, || {
+            weighted_mean_into(&rows, &weights, &mut mean);
+        });
+        r.print_with_throughput("param", (n * k) as f64);
+        let r = bench(&format!("pseudo_grad(sub_into)/{n}"), 0.3, || {
+            sub_into(&global, &mean, &mut pg);
+        });
+        r.print_with_throughput("param", n as f64);
+
+        for (name, kind) in [
+            ("fedavg", OuterOptKind::FedAvg),
+            ("fednesterov", OuterOptKind::FedMomentum { nesterov: true }),
+            ("fedadam", OuterOptKind::FedAdam),
+            ("fedyogi", OuterOptKind::FedYogi),
+        ] {
+            let mut opt = OuterOpt::new(kind, OuterHyper::default(), n);
+            let r = bench(&format!("outer/{name}/{n}"), 0.3, || {
+                opt.step(&mut global, &pg);
+            });
+            r.print_with_throughput("param", n as f64);
+        }
+        println!();
+    }
+}

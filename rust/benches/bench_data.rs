@@ -1,0 +1,38 @@
+//! bench_data: Photon Data Source throughput — category samplers, merged
+//! client streams, and validation-set generation. The stream must outrun
+//! the train step by a wide margin (it shares the single core).
+
+use photon::benchkit::{bench, bench_header};
+use photon::data::corpus::{CategorySampler, SyntheticCorpus};
+use photon::data::partition::Partition;
+use photon::data::stream::TokenStream;
+use photon::util::rng::Rng;
+
+fn main() {
+    let _quick = bench_header("bench_data: corpus & stream token throughput");
+    for vocab in [256usize, 1024] {
+        let corpus = SyntheticCorpus::pile(vocab);
+        let sampler = CategorySampler::new(&corpus.categories[0]);
+        let mut rng = Rng::new(1);
+        let r = bench(&format!("category_sampler/v{vocab}/seq128"), 0.5, || {
+            std::hint::black_box(sampler.sequence(128, &mut rng));
+        });
+        r.print_with_throughput("tok", 128.0);
+
+        let p = Partition::heterogeneous(&corpus, 8, 3);
+        let mut stream = TokenStream::bind(&p.assignment[0], &corpus.categories, 33, 1);
+        let r = bench(&format!("client_stream/v{vocab}/batch8x33"), 0.5, || {
+            std::hint::black_box(stream.next_batch(8));
+        });
+        r.print_with_throughput("tok", 8.0 * 33.0);
+    }
+
+    // Validation-set generation (done once per federation startup).
+    let corpus = SyntheticCorpus::c4(512);
+    let p = Partition::iid(&corpus, 8);
+    let r = bench("validation_batches/8x(4x33)", 0.5, || {
+        let ds = photon::data::source::DataSource::new(corpus.clone(), p.clone(), 1);
+        std::hint::black_box(ds.validation_batches(8, 4, 33));
+    });
+    r.print_with_throughput("tok", (8 * 4 * 33) as f64);
+}

@@ -1,0 +1,45 @@
+//! bench_link: Photon-Link serialize/compress/decode throughput on
+//! model-payload sizes from the artifact ladder.
+
+use photon::benchkit::{bench, bench_header};
+use photon::link::{decode_model, encode_model, MsgKind};
+use photon::testkit::rand_vec;
+use photon::util::rng::Rng;
+
+fn main() {
+    let quick = bench_header("bench_link: payload encode/decode throughput");
+    let sizes: &[usize] = if quick { &[213_568] } else { &[32_928, 213_568, 4_526_016] };
+    for &n in sizes {
+        let mut rng = Rng::new(2);
+        // Realistic payload: small-magnitude weights (compressible sign/exp bits).
+        let payload = rand_vec(&mut rng, n, 0.02);
+        let mb = (n * 4) as f64 / 1e6;
+
+        let r = bench(&format!("encode/raw/{n}"), 0.4, || {
+            std::hint::black_box(encode_model(MsgKind::GlobalModel, &payload, false).unwrap());
+        });
+        r.print_with_throughput("MB", mb);
+        let r = bench(&format!("encode/deflate/{n}"), 0.8, || {
+            std::hint::black_box(encode_model(MsgKind::GlobalModel, &payload, true).unwrap());
+        });
+        r.print_with_throughput("MB", mb);
+
+        let raw = encode_model(MsgKind::GlobalModel, &payload, false).unwrap();
+        let comp = encode_model(MsgKind::GlobalModel, &payload, true).unwrap();
+        println!(
+            "  deflate ratio: {:.1}% ({} -> {} bytes)",
+            100.0 * comp.len() as f64 / raw.len() as f64,
+            raw.len(),
+            comp.len()
+        );
+        let r = bench(&format!("decode/raw/{n}"), 0.4, || {
+            std::hint::black_box(decode_model(&raw).unwrap());
+        });
+        r.print_with_throughput("MB", mb);
+        let r = bench(&format!("decode/deflate/{n}"), 0.4, || {
+            std::hint::black_box(decode_model(&comp).unwrap());
+        });
+        r.print_with_throughput("MB", mb);
+        println!();
+    }
+}

@@ -1,0 +1,34 @@
+//! bench_netsim: the analytic communication model — evaluation cost of the
+//! full `comm` sweep (it must be effectively free) plus a printed summary
+//! of the headline ratios at paper scale.
+
+use photon::benchkit::{bench, bench_header};
+use photon::netsim::*;
+
+fn main() {
+    let _quick = bench_header("bench_netsim: cost-model evaluation");
+    let payloads: Vec<u64> =
+        vec![223_000_000, 423_000_000, 1_300_000_000, 4_700_000_000, 25_800_000_000];
+
+    let r = bench("full_sweep/5_models_x_3_links", 0.2, || {
+        let mut acc = 0.0f64;
+        for &p in &payloads {
+            for link in [&DATACENTER, &CLOUD_WAN, &BROADBAND] {
+                acc += comm_ratio(p, 8, 20, 500);
+                acc += fed_comm_fraction(p, link, 500, 1.0);
+                acc += ddp_steps_secs(p, 8, link, 500, 1.0);
+            }
+        }
+        std::hint::black_box(acc);
+    });
+    r.print();
+
+    println!("\nheadline ratios at paper scale (τ=500, 8 workers):");
+    for (&p, name) in payloads.iter().zip(["75M", "125M", "350M", "1.3B", "7B"]) {
+        println!(
+            "  {name:>5}: DDP/FL = {:.0}x, WAN comm fraction = {:.2}%",
+            comm_ratio(p, 8, 20, 500),
+            100.0 * fed_comm_fraction(p, &CLOUD_WAN, 500, 1.0)
+        );
+    }
+}

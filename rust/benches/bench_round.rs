@@ -1,0 +1,41 @@
+//! bench_round: one full federated round end-to-end (sample → τ local
+//! steps × K clients → aggregate → outer step → eval) on the 75M-analogue.
+//! This is the paper's system-level unit of work; EXPERIMENTS.md §Perf
+//! tracks its breakdown.
+
+use photon::benchkit::{bench, bench_header};
+use photon::config::ExperimentConfig;
+use photon::coordinator::Federation;
+use photon::runtime::Runtime;
+
+fn main() {
+    let quick = bench_header("bench_round: full federated round (m75a)");
+    let rt = Runtime::cpu().expect("pjrt client");
+    let model = std::rc::Rc::new(rt.load_model("m75a").expect("run `make artifacts`"));
+
+    for (k, tau) in [(4usize, 10u64), (8, 20)] {
+        if quick && k == 8 {
+            continue;
+        }
+        let mut cfg = ExperimentConfig::quickstart("m75a");
+        cfg.n_clients = k;
+        cfg.clients_per_round = k;
+        cfg.rounds = usize::MAX / 2; // never stop via run(); we call run_round
+        cfg.local_steps = tau;
+        cfg.eval_batches = 2;
+        let mut fed = Federation::with_model(cfg, model.clone()).unwrap();
+        let r = bench(&format!("round/K{k}/tau{tau}"), 3.0, || {
+            fed.run_round().unwrap();
+        });
+        r.print_with_throughput("client-step", (k as u64 * tau) as f64);
+    }
+
+    // Breakdown: eval-only cost (the non-training part of a round).
+    let mut cfg = ExperimentConfig::quickstart("m75a");
+    cfg.eval_batches = 4;
+    let fed = Federation::with_model(cfg, model).unwrap();
+    let r = bench("eval_global/4_batches", 1.0, || {
+        fed.eval_global().unwrap();
+    });
+    r.print();
+}

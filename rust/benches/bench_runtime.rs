@@ -1,0 +1,66 @@
+//! bench_runtime: train/eval/score step latency per ladder size — the L3
+//! hot path (each federated round is τ·K of these). Regenerates the data
+//! behind EXPERIMENTS.md §Perf (L3 step-latency table).
+
+use photon::benchkit::{bench, bench_header};
+use photon::data::corpus::SyntheticCorpus;
+use photon::data::partition::Partition;
+use photon::data::stream::TokenStream;
+use photon::model::init::init_params;
+use photon::runtime::{Runtime, TrainState};
+
+fn main() {
+    let quick = bench_header("bench_runtime: AOT step latency per model size");
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    let sizes: &[&str] = if quick {
+        &["m75a", "m350a"]
+    } else {
+        &["m75a", "m125a", "m350a", "m1ba", "m3ba", "m7ba", "tiny_pallas"]
+    };
+    for name in sizes {
+        let model = match rt.load_model(name) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("skipping {name}: {e}");
+                continue;
+            }
+        };
+        let corpus = SyntheticCorpus::c4(model.manifest.config.vocab);
+        let partition = Partition::iid(&corpus, 1);
+        let mut stream = TokenStream::bind(
+            &partition.assignment[0],
+            &corpus.categories,
+            model.seq_width(),
+            1,
+        );
+        let params = init_params(&model.manifest, 1);
+        let mut state = TrainState::new(params.clone());
+        let tokens = stream.next_batch(model.batch_size());
+        let tokens_per_step = (model.batch_size() * model.seq_len()) as f64;
+
+        let r = bench(&format!("{name}/train_step ({} params)", model.n_params()), 2.0, || {
+            model.train_step(&mut state, 1e-3, &tokens).unwrap();
+        });
+        r.print_with_throughput("tok", tokens_per_step);
+        let k = model.chunk_size();
+        let mut chunk_toks = Vec::new();
+        for _ in 0..k {
+            chunk_toks.extend(stream.next_batch(model.batch_size()));
+        }
+        let lrs = vec![1e-3f32; k];
+        let mut chunk_state = TrainState::new(params.clone());
+        let r = bench(&format!("{name}/train_chunk (x{k})"), 2.0, || {
+            model.train_chunk(&mut chunk_state, &lrs, &chunk_toks).unwrap();
+        });
+        r.print_with_throughput("tok", tokens_per_step * k as f64);
+        let r = bench(&format!("{name}/eval_step"), 1.0, || {
+            model.eval_batch(&params, &tokens).unwrap();
+        });
+        r.print_with_throughput("tok", tokens_per_step);
+        let mask = vec![1.0f32; model.batch_size() * model.seq_len()];
+        let r = bench(&format!("{name}/score_step"), 1.0, || {
+            model.score_batch(&params, &tokens, &mask).unwrap();
+        });
+        r.print();
+    }
+}

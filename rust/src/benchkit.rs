@@ -1,0 +1,81 @@
+//! Criterion-style micro-benchmark harness (criterion is unavailable
+//! offline; see DESIGN.md §1). Used by every `cargo bench` target
+//! (`harness = false`). Reports mean / p50 / p95 / throughput after a
+//! warmup phase, with iteration counts adapted to the measured cost.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>7} iters  mean {:>12?}  p50 {:>12?}  p95 {:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p95
+        );
+    }
+
+    pub fn print_with_throughput(&self, unit: &str, units_per_iter: f64) {
+        let per_sec = units_per_iter / self.mean.as_secs_f64();
+        println!(
+            "{:<44} {:>7} iters  mean {:>12?}  p50 {:>12?}  {:>12.3e} {unit}/s",
+            self.name, self.iters, self.mean, self.p50, per_sec
+        );
+    }
+}
+
+/// Benchmark `f`, auto-calibrating the iteration count to fill
+/// `target_secs` of measurement (min 5, max 10_000 iters).
+pub fn bench<F: FnMut()>(name: &str, target_secs: f64, mut f: F) -> BenchResult {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_secs / once) as usize).clamp(5, 10_000);
+    for _ in 0..(iters / 10).min(20) {
+        f(); // warmup
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort_unstable();
+    let mean = samples.iter().sum::<Duration>() / iters as u32;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean,
+        p50: samples[iters / 2],
+        p95: samples[(iters * 95 / 100).min(iters - 1)],
+    }
+}
+
+/// Standard bench-main prologue: print a header and return whether we are
+/// in quick mode (`PHOTON_BENCH_QUICK=1`, used by CI-style runs).
+pub fn bench_header(title: &str) -> bool {
+    println!("== {title} ==");
+    std::env::var("PHOTON_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 0.02, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.iters >= 5);
+        assert!(r.p50 <= r.p95);
+        assert!(r.mean.as_nanos() > 0);
+    }
+}

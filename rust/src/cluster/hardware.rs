@@ -1,0 +1,191 @@
+//! GPU catalog and client hardware descriptions (the paper's fleets mix
+//! A40/A100/H100 across countries, §6.5), plus the local-training strategy
+//! selection of Algorithm 1 L.14–22 / §5.1.
+
+/// A hardware accelerator model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    pub vram_gb: f64,
+    /// Dense f16/bf16 throughput (TFLOP/s) — wall-clock simulation input.
+    pub tflops: f64,
+}
+
+pub const A40: GpuSpec = GpuSpec { name: "A40", vram_gb: 48.0, tflops: 150.0 };
+pub const A100: GpuSpec = GpuSpec { name: "A100", vram_gb: 80.0, tflops: 312.0 };
+pub const H100: GpuSpec = GpuSpec { name: "H100", vram_gb: 80.0, tflops: 990.0 };
+pub const RTX4090: GpuSpec = GpuSpec { name: "RTX4090", vram_gb: 24.0, tflops: 165.0 };
+
+/// One machine: identical GPUs + intra-node interconnect.
+#[derive(Clone, Copy, Debug)]
+pub struct NodeSpec {
+    pub gpu: GpuSpec,
+    pub n_gpus: usize,
+    /// Intra-node GPU↔GPU bandwidth (GB/s); NVLink ≈ 600, PCIe ≈ 32.
+    pub intra_gbps: f64,
+}
+
+/// One client's machines + inter-node connectivity.
+#[derive(Clone, Debug)]
+pub struct ClientHardware {
+    pub nodes: Vec<NodeSpec>,
+    /// Inter-node bandwidth (GB/s); Infiniband NDR ≈ 50, WAN ≈ 0.1.
+    pub inter_gbps: f64,
+}
+
+/// Bandwidth above which nodes count as "well-connected" (Infiniband-class,
+/// §5.1: "cannot match the speed of high-bandwidth interconnection such as
+/// Infiniband NDR or RoCEv2").
+pub const INFINIBAND_GBPS: f64 = 25.0;
+
+/// Local training strategy chosen by a Photon LLM Node (§5.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainStrategy {
+    SingleGpu,
+    /// DDP across all GPUs of one well-connected group.
+    Ddp { n_gpus: usize },
+    /// FSDP (model too big for one GPU) across a well-connected group.
+    Fsdp { n_gpus: usize },
+    /// Poorly-connected nodes → per-island sub-federation with partial
+    /// aggregation (Algorithm 1 L.19–24).
+    SubFederation { islands: usize },
+}
+
+impl ClientHardware {
+    /// A uniform single-node client.
+    pub fn single(gpu: GpuSpec, n_gpus: usize) -> ClientHardware {
+        ClientHardware {
+            nodes: vec![NodeSpec { gpu, n_gpus, intra_gbps: 600.0 }],
+            inter_gbps: INFINIBAND_GBPS,
+        }
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.nodes.iter().map(|n| n.n_gpus).sum()
+    }
+
+    pub fn has_infiniband(&self) -> bool {
+        self.nodes.len() <= 1 || self.inter_gbps >= INFINIBAND_GBPS
+    }
+
+    /// Algorithm 1 L.14–22: pick the local execution strategy given the
+    /// model's memory demand.
+    ///
+    /// `model_bytes_per_replica` is the full training-state footprint
+    /// (params + grads + AdamW moments + headroom); a replica fits a GPU if
+    /// it is under ~90% of VRAM.
+    pub fn choose_strategy(&self, model_bytes_per_replica: u64) -> TrainStrategy {
+        let fits_one_gpu = |gpu: &GpuSpec| {
+            model_bytes_per_replica as f64 <= 0.9 * gpu.vram_gb * 1e9
+        };
+        if !self.has_infiniband() {
+            return TrainStrategy::SubFederation { islands: self.nodes.len() };
+        }
+        let n = self.total_gpus();
+        if n == 1 {
+            return TrainStrategy::SingleGpu;
+        }
+        // Well-connected multi-GPU: DDP if a replica fits, else FSDP.
+        if self.nodes.iter().all(|node| fits_one_gpu(&node.gpu)) {
+            TrainStrategy::Ddp { n_gpus: n }
+        } else {
+            TrainStrategy::Fsdp { n_gpus: n }
+        }
+    }
+}
+
+/// Per-client hardware for a whole federation.
+#[derive(Clone, Debug)]
+pub struct FleetSpec {
+    pub clients: Vec<ClientHardware>,
+}
+
+impl FleetSpec {
+    /// The paper's heterogeneous fleet flavor: cycle A40/A100/H100 singles.
+    pub fn heterogeneous(n_clients: usize) -> FleetSpec {
+        let gpus = [A40, A100, H100];
+        FleetSpec {
+            clients: (0..n_clients)
+                .map(|i| ClientHardware::single(gpus[i % 3], 1 + (i % 4)))
+                .collect(),
+        }
+    }
+
+    pub fn uniform(n_clients: usize, gpu: GpuSpec, n_gpus: usize) -> FleetSpec {
+        FleetSpec {
+            clients: (0..n_clients)
+                .map(|_| ClientHardware::single(gpu, n_gpus))
+                .collect(),
+        }
+    }
+}
+
+/// Training-state bytes for a model of `n_params` f32 parameters:
+/// weights + grads + 2 AdamW moments (16 B/param) + 25% activation headroom.
+pub fn training_footprint_bytes(n_params: usize) -> u64 {
+    (n_params as u64) * 16 * 5 / 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_gpu_strategy() {
+        let hw = ClientHardware::single(A100, 1);
+        assert_eq!(hw.choose_strategy(1 << 30), TrainStrategy::SingleGpu);
+    }
+
+    #[test]
+    fn ddp_when_replica_fits() {
+        let hw = ClientHardware::single(A100, 4);
+        assert_eq!(
+            hw.choose_strategy(20_000_000_000),
+            TrainStrategy::Ddp { n_gpus: 4 }
+        );
+    }
+
+    #[test]
+    fn fsdp_when_replica_does_not_fit() {
+        let hw = ClientHardware::single(RTX4090, 8);
+        // 30 GB > 0.9 * 24 GB.
+        assert_eq!(
+            hw.choose_strategy(30_000_000_000),
+            TrainStrategy::Fsdp { n_gpus: 8 }
+        );
+    }
+
+    #[test]
+    fn subfederation_when_poorly_connected() {
+        let hw = ClientHardware {
+            nodes: vec![
+                NodeSpec { gpu: A40, n_gpus: 2, intra_gbps: 600.0 },
+                NodeSpec { gpu: A40, n_gpus: 2, intra_gbps: 600.0 },
+            ],
+            inter_gbps: 0.1, // WAN
+        };
+        assert_eq!(
+            hw.choose_strategy(1 << 30),
+            TrainStrategy::SubFederation { islands: 2 }
+        );
+    }
+
+    #[test]
+    fn footprint_scale() {
+        // 7B params → ~140 GB: does not fit one A100, needs FSDP.
+        let b = training_footprint_bytes(7_000_000_000);
+        assert!(b > 100_000_000_000);
+        let hw = ClientHardware::single(A100, 8);
+        assert!(matches!(hw.choose_strategy(b), TrainStrategy::Fsdp { .. }));
+    }
+
+    #[test]
+    fn fleet_constructors() {
+        let f = FleetSpec::heterogeneous(6);
+        assert_eq!(f.clients.len(), 6);
+        assert_eq!(f.clients[0].nodes[0].gpu.name, "A40");
+        assert_eq!(f.clients[1].nodes[0].gpu.name, "A100");
+        let u = FleetSpec::uniform(3, H100, 2);
+        assert!(u.clients.iter().all(|c| c.total_gpus() == 2));
+    }
+}

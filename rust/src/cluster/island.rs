@@ -1,0 +1,108 @@
+//! Connectivity islands (paper §5.1 Multi-Machine): group a client's nodes
+//! into maximal well-connected components; poorly-connected islands train
+//! as a sub-federation whose results are partially aggregated by the lead
+//! node before a single update is sent to the Photon Aggregator
+//! (Algorithm 1 L.19–24).
+
+use crate::cluster::hardware::{ClientHardware, INFINIBAND_GBPS};
+
+/// Group node indices into islands. With a single scalar inter-node
+/// bandwidth (this fleet model), the result is either one island (well
+/// connected) or one island per node (poorly connected); the function takes
+/// an explicit pairwise-bandwidth closure so richer topologies (the paper's
+/// "islands of nodes with high-bandwidth connections") group correctly too.
+pub fn group_islands_by(
+    n_nodes: usize,
+    bandwidth_gbps: impl Fn(usize, usize) -> f64,
+) -> Vec<Vec<usize>> {
+    // Union-find over well-connected pairs.
+    let mut parent: Vec<usize> = (0..n_nodes).collect();
+    fn find(parent: &mut Vec<usize>, x: usize) -> usize {
+        if parent[x] != x {
+            let r = find(parent, parent[x]);
+            parent[x] = r;
+        }
+        parent[x]
+    }
+    for i in 0..n_nodes {
+        for j in (i + 1)..n_nodes {
+            if bandwidth_gbps(i, j) >= INFINIBAND_GBPS {
+                let (ri, rj) = (find(&mut parent, i), find(&mut parent, j));
+                if ri != rj {
+                    parent[ri] = rj;
+                }
+            }
+        }
+    }
+    let mut groups: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
+    for i in 0..n_nodes {
+        let r = find(&mut parent, i);
+        groups.entry(r).or_default().push(i);
+    }
+    groups.into_values().collect()
+}
+
+/// Islands of a client under its scalar inter-node bandwidth.
+pub fn group_islands(hw: &ClientHardware) -> Vec<Vec<usize>> {
+    group_islands_by(hw.nodes.len(), |_, _| hw.inter_gbps)
+}
+
+/// Partial aggregation of island results (Algorithm 1 L.23): weighted mean
+/// of per-island parameter vectors into a single client update.
+pub fn partial_aggregate(island_params: &[Vec<f32>], weights: &[f64]) -> Vec<f32> {
+    assert!(!island_params.is_empty());
+    assert_eq!(island_params.len(), weights.len());
+    let n = island_params[0].len();
+    let mut out = vec![0.0f32; n];
+    let rows: Vec<&[f32]> = island_params.iter().map(|v| v.as_slice()).collect();
+    crate::model::vecmath::weighted_mean_into(&rows, weights, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::hardware::{ClientHardware, NodeSpec, A40};
+
+    fn hw(n_nodes: usize, inter_gbps: f64) -> ClientHardware {
+        ClientHardware {
+            nodes: vec![NodeSpec { gpu: A40, n_gpus: 2, intra_gbps: 600.0 }; n_nodes],
+            inter_gbps,
+        }
+    }
+
+    #[test]
+    fn well_connected_is_one_island() {
+        assert_eq!(group_islands(&hw(4, 50.0)), vec![vec![0, 1, 2, 3]]);
+    }
+
+    #[test]
+    fn wan_nodes_are_singleton_islands() {
+        let islands = group_islands(&hw(3, 0.1));
+        assert_eq!(islands.len(), 3);
+        assert!(islands.iter().all(|i| i.len() == 1));
+    }
+
+    #[test]
+    fn mixed_topology_groups_pairs() {
+        // Nodes 0-1 fast, 2-3 fast, cross slow: two islands of two.
+        let bw = |i: usize, j: usize| {
+            if (i / 2) == (j / 2) {
+                100.0
+            } else {
+                0.5
+            }
+        };
+        let islands = group_islands_by(4, bw);
+        assert_eq!(islands.len(), 2);
+        assert!(islands.contains(&vec![0, 1]) && islands.contains(&vec![2, 3]));
+    }
+
+    #[test]
+    fn partial_aggregate_weighted() {
+        let a = vec![0.0f32, 2.0];
+        let b = vec![4.0f32, 6.0];
+        let out = partial_aggregate(&[a, b], &[3.0, 1.0]);
+        assert_eq!(out, vec![1.0, 3.0]);
+    }
+}

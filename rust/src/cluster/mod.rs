@@ -1,0 +1,17 @@
+//! Hardware-heterogeneity substrate (paper §5.1/§6.2): GPU catalog,
+//! VRAM-driven micro-batch search, connectivity islands with hierarchical
+//! sub-federation, and fault (dropout/straggler) injection.
+//!
+//! The *decision logic* of Algorithm 1 L.14–24 is fully implemented here;
+//! the physical math always executes on the single PJRT device (DESIGN.md
+//! §1 substitution table).
+
+pub mod batchsize;
+pub mod faults;
+pub mod hardware;
+pub mod island;
+
+pub use batchsize::find_micro_batch;
+pub use faults::{FaultPlan, RoundFaults};
+pub use hardware::{ClientHardware, FleetSpec, GpuSpec, NodeSpec, TrainStrategy};
+pub use island::group_islands;

@@ -1,0 +1,237 @@
+//! Typed experiment configuration (the paper's Hydra-style schemas, §6.2)
+//! plus the paper's own hyperparameter tables (Tables 1–4) as data, so the
+//! table drivers can reprint them next to the analogue values.
+
+use anyhow::Result;
+
+use crate::cluster::faults::FaultPlan;
+use crate::cluster::hardware::FleetSpec;
+use crate::optim::outer::{OuterHyper, OuterOptKind};
+use crate::optim::schedule::CosineSchedule;
+
+/// Which corpus + partition shape a federation trains on (paper §6.3).
+#[derive(Clone, Debug, PartialEq)]
+pub enum CorpusKind {
+    /// IID shards of the homogeneous C4 stand-in.
+    C4Iid,
+    /// Natural heterogeneous Pile stand-in; `j` categories per client.
+    PileHetero { j: usize },
+    /// Disjoint-vocabulary language partition (mC4 stand-in).
+    Mc4 { n_langs: usize },
+}
+
+/// Local optimizer-state policy between rounds (paper §7.8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptStatePolicy {
+    /// Reset AdamW moments each round — the paper's recommended stateless
+    /// clients.
+    Stateless,
+    /// FedAvg-KeepOpt: clients carry their AdamW state across rounds.
+    KeepOpt,
+}
+
+/// Full federated-experiment schema.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub label: String,
+    /// Artifact/model config name (see python/compile/configs.py).
+    pub model: String,
+    pub corpus: CorpusKind,
+    /// P: federation size.
+    pub n_clients: usize,
+    /// K: clients sampled per round.
+    pub clients_per_round: usize,
+    pub rounds: usize,
+    /// τ: local steps per round (paper: 500).
+    pub local_steps: u64,
+    pub seed: u64,
+    pub outer: OuterOptKind,
+    pub outer_hyper: OuterHyper,
+    pub schedule: CosineSchedule,
+    pub opt_state: OptStatePolicy,
+    /// Validation batches for server-side perplexity.
+    pub eval_batches: usize,
+    pub faults: FaultPlan,
+    /// Per-client hardware (None = uniform single-GPU clients).
+    pub fleet: Option<FleetSpec>,
+}
+
+impl ExperimentConfig {
+    /// Small, fast federated run used by the quickstart example and tests.
+    pub fn quickstart(model: &str) -> ExperimentConfig {
+        ExperimentConfig {
+            label: format!("quickstart-{model}"),
+            model: model.to_string(),
+            corpus: CorpusKind::C4Iid,
+            n_clients: 4,
+            clients_per_round: 4,
+            rounds: 5,
+            local_steps: 20,
+            seed: 42,
+            outer: OuterOptKind::FedAvg,
+            outer_hyper: OuterHyper { lr: 1.0, ..OuterHyper::default() },
+            schedule: CosineSchedule::new(3e-3, 0.1, 2_000, 20),
+            opt_state: OptStatePolicy::Stateless,
+            eval_batches: 4,
+            faults: FaultPlan::none(),
+            fleet: None,
+        }
+    }
+
+    /// The figure-experiment default: paper recipe scaled to CPU budget
+    /// (DESIGN.md §1). `--paper-scale` multiplies these back up.
+    pub fn figure_default(model: &str, corpus: CorpusKind) -> ExperimentConfig {
+        let mut c = ExperimentConfig::quickstart(model);
+        c.label = format!("fig-{model}");
+        c.corpus = corpus;
+        c.n_clients = 8;
+        c.clients_per_round = 8;
+        c.rounds = 15;
+        c.local_steps = 40;
+        c.schedule = CosineSchedule::new(3e-3, 0.1, 15 * 40, 30);
+        c
+    }
+
+    /// Total sequential optimizer steps a client will have taken by the end.
+    pub fn total_sequential_steps(&self) -> u64 {
+        self.rounds as u64 * self.local_steps
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.n_clients >= 1, "need at least one client");
+        anyhow::ensure!(
+            self.clients_per_round >= 1 && self.clients_per_round <= self.n_clients,
+            "K must be in [1, P]"
+        );
+        anyhow::ensure!(self.local_steps >= 1, "τ must be >= 1");
+        anyhow::ensure!(self.rounds >= 1, "need at least one round");
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Paper tables as data (reprinted by `photon exp table1..4`)
+// ---------------------------------------------------------------------------
+
+/// One row of the paper's Table 2 (architecture ladder) + our analogue.
+pub struct PaperModelRow {
+    pub size: &'static str,
+    pub blocks: usize,
+    pub d: usize,
+    pub heads: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    /// Our artifact config implementing this row's analogue.
+    pub analog: &'static str,
+}
+
+pub const PAPER_TABLE2: [PaperModelRow; 6] = [
+    PaperModelRow { size: "75M", blocks: 3, d: 896, heads: 16, vocab: 50368, seq: 1024, analog: "m75a" },
+    PaperModelRow { size: "125M", blocks: 12, d: 768, heads: 12, vocab: 50368, seq: 2048, analog: "m125a" },
+    PaperModelRow { size: "350M", blocks: 24, d: 1024, heads: 16, vocab: 50368, seq: 2048, analog: "m350a" },
+    PaperModelRow { size: "1.3B", blocks: 24, d: 2048, heads: 16, vocab: 50368, seq: 2048, analog: "m1ba" },
+    PaperModelRow { size: "3B", blocks: 32, d: 2560, heads: 20, vocab: 50368, seq: 2048, analog: "m3ba" },
+    PaperModelRow { size: "7B", blocks: 32, d: 4096, heads: 32, vocab: 50368, seq: 2048, analog: "m7ba" },
+];
+
+/// One row of the paper's Table 3 (hyperparameters).
+pub struct PaperHyperRow {
+    pub size: &'static str,
+    pub eta_s: f64,
+    pub mu_s: f64,
+    pub alpha: f64,
+    pub eta_max: f64,
+    pub t_steps: u64,
+    pub batch: usize,
+}
+
+pub const PAPER_TABLE3: [PaperHyperRow; 6] = [
+    PaperHyperRow { size: "75M", eta_s: 0.7, mu_s: 0.9, alpha: 0.1, eta_max: 4e-4, t_steps: 88_000, batch: 256 },
+    PaperHyperRow { size: "125M", eta_s: 0.5, mu_s: 0.9, alpha: 0.1, eta_max: 6e-4, t_steps: 15_000, batch: 256 },
+    PaperHyperRow { size: "350M", eta_s: 0.1, mu_s: 0.9, alpha: 0.1, eta_max: 3e-4, t_steps: 13_400, batch: 256 },
+    PaperHyperRow { size: "1.3B", eta_s: 0.7, mu_s: 0.9, alpha: 0.1, eta_max: 2e-4, t_steps: 24_800, batch: 512 },
+    PaperHyperRow { size: "3B", eta_s: 0.7, mu_s: 0.9, alpha: 0.1, eta_max: 1.6e-4, t_steps: 51_500, batch: 512 },
+    PaperHyperRow { size: "7B", eta_s: 0.7, mu_s: 0.9, alpha: 0.1, eta_max: 1.2e-4, t_steps: 63_900, batch: 1024 },
+];
+
+/// One row of the paper's Table 4 (federated settings).
+pub struct PaperFedRow {
+    pub size: &'static str,
+    pub rounds: &'static str,
+    pub p: &'static str,
+    pub k: &'static str,
+    pub dataset: &'static str,
+    pub tau: &'static str,
+}
+
+pub const PAPER_TABLE4: [PaperFedRow; 6] = [
+    PaperFedRow { size: "75M", rounds: "40", p: "8,64", k: "8,4", dataset: "C4, The Pile", tau: "500" },
+    PaperFedRow { size: "125M", rounds: "10,25", p: "8,64", k: "8,4", dataset: "C4, The Pile", tau: "250,500" },
+    PaperFedRow { size: "350M", rounds: "40", p: "8", k: "8", dataset: "C4", tau: "500" },
+    PaperFedRow { size: "1.3B", rounds: "14", p: "8", k: "8", dataset: "C4", tau: "500" },
+    PaperFedRow { size: "3B", rounds: "21", p: "64", k: "4", dataset: "C4", tau: "500" },
+    PaperFedRow { size: "7B", rounds: "21", p: "64", k: "4", dataset: "C4", tau: "500" },
+];
+
+/// Paper Table 1 parameters: (size label, params, chinchilla tokens, mpt
+/// tokens, seq tokens, par tokens, l, B).
+pub struct PaperTokenRow {
+    pub size: &'static str,
+    pub params: f64,
+    pub chinchilla_tokens: f64,
+    pub mpt_tokens: f64,
+    pub seq_tokens: f64,
+    pub par_tokens: f64,
+    pub l: u64,
+    pub b: u64,
+}
+
+pub const PAPER_TABLE1: [PaperTokenRow; 6] = [
+    PaperTokenRow { size: "75M", params: 58.54e6, chinchilla_tokens: 1.17e9, mpt_tokens: f64::NAN, seq_tokens: 5.2e9, par_tokens: 41.9e9, l: 1024, b: 256 },
+    PaperTokenRow { size: "125M", params: 110.89e6, chinchilla_tokens: 2.22e9, mpt_tokens: 2.5e9, seq_tokens: 6.6e9, par_tokens: 52.4e9, l: 2048, b: 256 },
+    PaperTokenRow { size: "350M", params: 331.19e6, chinchilla_tokens: 6.62e9, mpt_tokens: 8.0e9, seq_tokens: 10.5e9, par_tokens: 83.9e9, l: 2048, b: 256 },
+    PaperTokenRow { size: "1.3B", params: 1.26e9, chinchilla_tokens: 25.2e9, mpt_tokens: 26.0e9, seq_tokens: 7.35e9, par_tokens: 58.8e9, l: 2048, b: 512 },
+    PaperTokenRow { size: "3B", params: 2.96e9, chinchilla_tokens: 59.2e9, mpt_tokens: 54.0e9, seq_tokens: 13.1e9, par_tokens: 52.4e9, l: 2048, b: 512 },
+    PaperTokenRow { size: "7B", params: 6.92e9, chinchilla_tokens: 138e9, mpt_tokens: 134.0e9, seq_tokens: 22.0e9, par_tokens: 88.1e9, l: 2048, b: 1024 },
+];
+
+/// The model ladder available as artifacts, ordered by size.
+pub const MODEL_LADDER: [&str; 6] = ["m75a", "m125a", "m350a", "m1ba", "m3ba", "m7ba"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quickstart_validates() {
+        ExperimentConfig::quickstart("m75a").validate().unwrap();
+    }
+
+    #[test]
+    fn validation_catches_bad_k() {
+        let mut c = ExperimentConfig::quickstart("m75a");
+        c.clients_per_round = 10; // > P=4
+        assert!(c.validate().is_err());
+        c.clients_per_round = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn sequential_steps() {
+        let c = ExperimentConfig::figure_default("m75a", CorpusKind::C4Iid);
+        assert_eq!(c.total_sequential_steps(), 15 * 40);
+    }
+
+    #[test]
+    fn table_data_is_consistent() {
+        assert_eq!(PAPER_TABLE2.len(), PAPER_TABLE3.len());
+        for (t2, t3) in PAPER_TABLE2.iter().zip(&PAPER_TABLE3) {
+            assert_eq!(t2.size, t3.size);
+        }
+        // Chinchilla ratio ≈ 20 tokens/param.
+        for r in &PAPER_TABLE1 {
+            let ratio = r.chinchilla_tokens / r.params;
+            assert!((ratio - 20.0).abs() < 0.2, "{}: {ratio}", r.size);
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Centralized baseline: the non-federated training run every figure of the
+//! paper compares against. Same model artifact, same initialization, same
+//! cosine schedule, same total sequential step count — but one trainer
+//! consuming the *union* of all client buckets, evaluated on the same
+//! centralized validation set at every τ-step boundary so its curve aligns
+//! with the federated rounds.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::federation::build_data;
+use crate::data::stream::TokenStream;
+use crate::metrics::{MetricsLog, RoundRecord};
+use crate::model::init::init_params;
+use crate::model::vecmath::l2_norm;
+use crate::runtime::{ModelRuntime, TrainState};
+
+/// Run the centralized counterpart of `cfg`: `rounds·τ` sequential steps on
+/// the merged data, recording one RoundRecord per τ steps. The *effective
+/// batch* is the same device batch as one client (the paper's "same batch
+/// size locally as the centralized pre-training recipe" regime).
+pub fn run_centralized(
+    cfg: &ExperimentConfig,
+    model: &Rc<ModelRuntime>,
+) -> Result<MetricsLog> {
+    let data = build_data(cfg, model.manifest.config.vocab);
+    // Union of every client's buckets = the centralized dataset.
+    let all_buckets: Vec<_> = data
+        .partition
+        .assignment
+        .iter()
+        .flatten()
+        .cloned()
+        .collect();
+    let mut stream = TokenStream::bind(
+        &all_buckets,
+        &data.corpus.categories,
+        model.seq_width(),
+        cfg.seed ^ 0xce47a1_u64, // centralized-stream salt
+    );
+    let val = data.validation_batches(
+        cfg.eval_batches,
+        model.batch_size(),
+        model.seq_width(),
+    );
+
+    let mut state = TrainState::new(init_params(&model.manifest, cfg.seed));
+    let mut log = MetricsLog::default();
+    let mut seq_step = 0u64;
+    for round in 0..cfg.rounds {
+        let t0 = std::time::Instant::now();
+        let mut losses = Vec::with_capacity(cfg.local_steps as usize);
+        let mut grad_norms = 0.0;
+        let mut update_norms = 0.0;
+        let mut act_norms = 0.0;
+        for _ in 0..cfg.local_steps {
+            seq_step += 1;
+            let tokens = stream.next_batch(model.batch_size());
+            let lr = cfg.schedule.lr(seq_step) as f32;
+            let stats = model.train_step(&mut state, lr, &tokens)?;
+            losses.push(stats.loss as f64);
+            grad_norms += stats.grad_norm as f64;
+            update_norms += stats.update_norm as f64;
+            act_norms += stats.act_norm as f64;
+        }
+        let inv = 1.0 / cfg.local_steps as f64;
+        let (nll, ppl) = model.eval_nll(&state.params, &val)?;
+        let loss_mean = losses.iter().sum::<f64>() * inv;
+        log.push(RoundRecord {
+            round,
+            server_ppl: ppl,
+            server_nll: nll,
+            client_loss_mean: loss_mean,
+            client_loss_std: 0.0,
+            client_ppl_mean: loss_mean.exp(),
+            global_model_norm: l2_norm(&state.params),
+            client_model_norm_mean: l2_norm(&state.params),
+            client_avg_norm: l2_norm(&state.params),
+            pseudo_grad_norm: 0.0,
+            step_grad_norm_mean: grad_norms * inv,
+            applied_update_norm_mean: update_norms * inv,
+            act_norm_mean: act_norms * inv,
+            momentum_norm: 0.0,
+            client_cosine_mean: 1.0,
+            participated: 1,
+            comm_bytes: 0,
+            wall_secs: t0.elapsed().as_secs_f64(),
+        });
+    }
+    Ok(log)
+}

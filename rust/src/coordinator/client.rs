@@ -1,0 +1,163 @@
+//! The Photon LLM Node: executes the local training pipeline of one
+//! federated client (Algorithm 1 L.12–27).
+//!
+//! Per round the node: receives the global model, binds its Photon Data
+//! Source stream(s), picks an execution strategy from its hardware
+//! (§5.1 — single island = one local trainer; poorly-connected nodes =
+//! per-island sub-federation with partial aggregation, L.19–24), runs τ
+//! fused AdamW steps through the AOT train-step artifact, and returns its
+//! parameters + metrics. Optimizer-state policy implements §7.8
+//! (stateless vs KeepOpt clients).
+
+use anyhow::Result;
+
+use crate::cluster::island::partial_aggregate;
+use crate::config::OptStatePolicy;
+use crate::data::stream::TokenStream;
+use crate::model::vecmath::l2_norm;
+use crate::runtime::{ModelRuntime, TrainState};
+
+/// Persistent client-side state living at the node between rounds.
+pub struct ClientNode {
+    pub id: usize,
+    /// One stream per connectivity island (usually one).
+    pub streams: Vec<TokenStream>,
+    /// KeepOpt: AdamW state carried across rounds (None = stateless).
+    pub saved_opt: Option<(Vec<f32>, Vec<f32>, i64)>,
+}
+
+/// What a node sends back through the Photon Link after a round.
+#[derive(Clone, Debug)]
+pub struct ClientUpdate {
+    pub client_id: usize,
+    pub params: Vec<f32>,
+    /// Sequences consumed this round (FedAvg weighting under quantity skew).
+    pub n_samples: f64,
+    pub loss_mean: f64,
+    pub loss_last: f64,
+    pub step_grad_norm_mean: f64,
+    pub applied_update_norm_mean: f64,
+    pub act_norm_mean: f64,
+    pub model_norm: f64,
+    pub steps_done: u64,
+}
+
+impl ClientNode {
+    pub fn new(id: usize, streams: Vec<TokenStream>) -> ClientNode {
+        assert!(!streams.is_empty());
+        ClientNode { id, streams, saved_opt: None }
+    }
+
+    pub fn islands(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// Run one local round: `steps` fused train steps per island starting
+    /// from `global`, LR driven by `lr_at(sequential_step)` with
+    /// `seq_step_base` the federation's cumulative step count.
+    ///
+    /// Multi-island nodes run an inner sub-federation: each island trains
+    /// independently on its disjoint stream and the node partially
+    /// aggregates (simple average, Algorithm 1 L.23) before replying.
+    pub fn run_local_round(
+        &mut self,
+        model: &ModelRuntime,
+        global: &[f32],
+        steps: u64,
+        seq_step_base: u64,
+        lr_at: &dyn Fn(u64) -> f64,
+        policy: OptStatePolicy,
+    ) -> Result<ClientUpdate> {
+        let batch = model.batch_size();
+        let n_islands = self.streams.len();
+        let mut island_params: Vec<Vec<f32>> = Vec::with_capacity(n_islands);
+        let mut island_weights: Vec<f64> = Vec::with_capacity(n_islands);
+
+        let mut losses: Vec<f64> = Vec::new();
+        let mut grad_norms = 0.0f64;
+        let mut update_norms = 0.0f64;
+        let mut act_norms = 0.0f64;
+        let mut total_steps = 0u64;
+        let mut keep_state: Option<(Vec<f32>, Vec<f32>, i64)> = None;
+
+        for (isl, stream) in self.streams.iter_mut().enumerate() {
+            let mut state = TrainState::new(global.to_vec());
+            if policy == OptStatePolicy::KeepOpt {
+                if let Some((m, v, st)) = &self.saved_opt {
+                    if isl == 0 && m.len() == state.m.len() {
+                        state.m.copy_from_slice(m);
+                        state.v.copy_from_slice(v);
+                        state.step = *st;
+                    }
+                }
+            }
+            // Chunked hot path (EXPERIMENTS.md §Perf): full chunks go
+            // through the fused scan artifact, the remainder through the
+            // single-step artifact. Trajectories are identical either way.
+            let k = model.chunk_size() as u64;
+            let mut t = 0u64;
+            let mut push = |stats: crate::runtime::StepStats| {
+                losses.push(stats.loss as f64);
+                grad_norms += stats.grad_norm as f64;
+                update_norms += stats.update_norm as f64;
+                act_norms += stats.act_norm as f64;
+                total_steps += 1;
+            };
+            while t + k <= steps {
+                let mut toks = Vec::with_capacity(
+                    k as usize * batch * model.seq_width());
+                let mut lrs = Vec::with_capacity(k as usize);
+                for i in 0..k {
+                    toks.extend(stream.next_batch(batch));
+                    lrs.push(lr_at(seq_step_base + t + i + 1) as f32);
+                }
+                for stats in model.train_chunk(&mut state, &lrs, &toks)? {
+                    push(stats);
+                }
+                t += k;
+            }
+            while t < steps {
+                let tokens = stream.next_batch(batch);
+                let lr = lr_at(seq_step_base + t + 1) as f32;
+                push(model.train_step(&mut state, lr, &tokens)?);
+                t += 1;
+            }
+            if isl == 0 && policy == OptStatePolicy::KeepOpt {
+                keep_state = Some((state.m.clone(), state.v.clone(), state.step));
+            }
+            island_weights.push(steps as f64 * batch as f64);
+            island_params.push(state.params);
+        }
+
+        self.saved_opt = match policy {
+            OptStatePolicy::KeepOpt => keep_state,
+            OptStatePolicy::Stateless => None,
+        };
+
+        let params = if n_islands == 1 {
+            island_params.pop().unwrap()
+        } else {
+            partial_aggregate(&island_params, &island_weights)
+        };
+
+        let inv = 1.0 / total_steps.max(1) as f64;
+        Ok(ClientUpdate {
+            client_id: self.id,
+            model_norm: l2_norm(&params),
+            params,
+            n_samples: total_steps as f64 * batch as f64,
+            loss_mean: losses.iter().sum::<f64>() * inv,
+            loss_last: losses.last().copied().unwrap_or(f64::NAN),
+            step_grad_norm_mean: grad_norms * inv,
+            applied_update_norm_mean: update_norms * inv,
+            act_norm_mean: act_norms * inv,
+            steps_done: total_steps,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Needs compiled artifacts; exercised by rust/tests/integration_fed.rs.
+    // The pure parts (island aggregation) are covered in cluster::island.
+}

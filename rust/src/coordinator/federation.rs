@@ -1,0 +1,363 @@
+//! The Photon Aggregator: owns the global model, orchestrates rounds
+//! (Algorithm 1 L.1–11), applies the outer optimizer, tracks federated
+//! metrics, and checkpoints the full training state.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ckpt::{Checkpoint, ClientCkpt};
+use crate::cluster::island::group_islands;
+use crate::config::{CorpusKind, ExperimentConfig};
+use crate::coordinator::client::{ClientNode, ClientUpdate};
+use crate::coordinator::sampler::ClientSampler;
+use crate::data::corpus::SyntheticCorpus;
+use crate::data::partition::Partition;
+use crate::data::source::DataSource;
+use crate::data::stream::TokenStream;
+use crate::link;
+use crate::metrics::{mean_pairwise_cosine, mean_std, MetricsLog, RoundRecord};
+use crate::model::init::init_params;
+use crate::model::vecmath::{l2_norm, sub_into, weighted_mean_into};
+use crate::optim::outer::OuterOpt;
+use crate::runtime::{ModelRuntime, Runtime};
+
+/// A running federation (Aggregator + nodes + data plane).
+pub struct Federation {
+    pub cfg: ExperimentConfig,
+    pub model: Rc<ModelRuntime>,
+    pub data: DataSource,
+    pub global: Vec<f32>,
+    pub outer: OuterOpt,
+    sampler: ClientSampler,
+    nodes: Vec<ClientNode>,
+    val_batches: Vec<Vec<i32>>,
+    pub log: MetricsLog,
+    /// Cumulative sequential steps (drives the shared LR schedule).
+    pub seq_step: u64,
+    pub next_round: usize,
+    /// Where to drop `ckpt_round_<n>.bin` (None = no checkpointing).
+    pub ckpt_dir: Option<PathBuf>,
+    started: Instant,
+    elapsed_offset: f64,
+    // Scratch buffers reused across rounds (aggregation hot path).
+    scratch_mean: Vec<f32>,
+    scratch_pg: Vec<f32>,
+}
+
+/// Build the corpus + partition for a config.
+pub fn build_data(cfg: &ExperimentConfig, vocab: usize) -> DataSource {
+    let (corpus, partition) = match &cfg.corpus {
+        CorpusKind::C4Iid => {
+            let c = SyntheticCorpus::c4(vocab);
+            let p = Partition::iid(&c, cfg.n_clients);
+            (c, p)
+        }
+        CorpusKind::PileHetero { j } => {
+            let c = SyntheticCorpus::pile(vocab);
+            let p = Partition::heterogeneous(&c, cfg.n_clients, *j);
+            (c, p)
+        }
+        CorpusKind::Mc4 { n_langs } => {
+            let c = SyntheticCorpus::mc4(vocab, *n_langs);
+            let p = Partition::heterogeneous(&c, cfg.n_clients, 1);
+            (c, p)
+        }
+    };
+    DataSource::new(corpus, partition, cfg.seed)
+}
+
+impl Federation {
+    /// Load artifacts and build the federation (compiles the model's HLO —
+    /// reuse `with_model` when running several variants of one config).
+    pub fn new(cfg: ExperimentConfig) -> Result<Federation> {
+        let rt = Runtime::cpu()?;
+        let model = Rc::new(rt.load_model(&cfg.model)?);
+        Federation::with_model(cfg, model)
+    }
+
+    pub fn with_model(cfg: ExperimentConfig, model: Rc<ModelRuntime>) -> Result<Federation> {
+        cfg.validate()?;
+        if let Some(fleet) = &cfg.fleet {
+            anyhow::ensure!(
+                fleet.clients.len() == cfg.n_clients,
+                "fleet size {} != P {}",
+                fleet.clients.len(),
+                cfg.n_clients
+            );
+        }
+        let vocab = model.manifest.config.vocab;
+        let data = build_data(&cfg, vocab);
+        let seq_width = model.seq_width();
+
+        // Bind each node's streams; poorly-connected multi-node clients get
+        // one stream per island (disjoint sample paths = PartitionStream).
+        let mut nodes = Vec::with_capacity(cfg.n_clients);
+        for c in 0..cfg.n_clients {
+            let n_islands = cfg
+                .fleet
+                .as_ref()
+                .map(|f| group_islands(&f.clients[c]).len())
+                .unwrap_or(1);
+            let streams: Vec<TokenStream> = (0..n_islands)
+                .map(|isl| {
+                    TokenStream::bind(
+                        &data.partition.assignment[c],
+                        &data.corpus.categories,
+                        seq_width,
+                        cfg.seed ^ ((isl as u64) << 32),
+                    )
+                })
+                .collect();
+            nodes.push(ClientNode::new(c, streams));
+        }
+
+        let global = init_params(&model.manifest, cfg.seed);
+        let outer = OuterOpt::new(cfg.outer, cfg.outer_hyper, model.n_params());
+        let val_batches =
+            data.validation_batches(cfg.eval_batches, model.batch_size(), seq_width);
+        let n = model.n_params();
+        Ok(Federation {
+            sampler: ClientSampler::new(cfg.seed),
+            cfg,
+            model,
+            data,
+            global,
+            outer,
+            nodes,
+            val_batches,
+            log: MetricsLog::default(),
+            seq_step: 0,
+            next_round: 0,
+            ckpt_dir: None,
+            started: Instant::now(),
+            elapsed_offset: 0.0,
+            scratch_mean: vec![0.0; n],
+            scratch_pg: vec![0.0; n],
+        })
+    }
+
+    /// Server-side validation perplexity of the current global model.
+    pub fn eval_global(&self) -> Result<(f64, f64)> {
+        self.model.eval_nll(&self.global, &self.val_batches)
+    }
+
+    /// Execute one federated round (Algorithm 1 L.3–11). Returns the round
+    /// record (also appended to `self.log`).
+    pub fn run_round(&mut self) -> Result<RoundRecord> {
+        let round = self.next_round;
+        let t0 = Instant::now();
+        let k = self.cfg.clients_per_round;
+        let sampled = self.sampler.sample(round, self.cfg.n_clients, k);
+        let faults = self.cfg.faults.for_round(round, &sampled);
+
+        let schedule = self.cfg.schedule;
+        let lr_at = move |t: u64| schedule.lr(t);
+        let mut updates: Vec<ClientUpdate> = Vec::with_capacity(k);
+        for &c in &sampled {
+            if faults.is_dropped(c) {
+                continue;
+            }
+            let steps = faults.effective_steps(c, self.cfg.local_steps);
+            let upd = self.nodes[c]
+                .run_local_round(
+                    &self.model,
+                    &self.global,
+                    steps,
+                    self.seq_step,
+                    &lr_at,
+                    self.cfg.opt_state,
+                )
+                .with_context(|| format!("client {c} round {round}"))?;
+            updates.push(upd);
+        }
+
+        // Schedule advances by the nominal τ regardless of faults (the
+        // paper's schedule is synchronized across sequential steps).
+        self.seq_step += self.cfg.local_steps;
+        self.next_round += 1;
+
+        if updates.is_empty() {
+            // Every sampled client dropped: global model unchanged.
+            let (nll, ppl) = self.eval_global()?;
+            let rec = RoundRecord {
+                round,
+                server_ppl: ppl,
+                server_nll: nll,
+                global_model_norm: l2_norm(&self.global),
+                wall_secs: t0.elapsed().as_secs_f64(),
+                ..Default::default()
+            };
+            self.log.push(rec.clone());
+            return Ok(rec);
+        }
+
+        // --- Aggregation (L.8–9) -----------------------------------------
+        let rows: Vec<&[f32]> = updates.iter().map(|u| u.params.as_slice()).collect();
+        let weights: Vec<f64> = updates.iter().map(|u| u.n_samples).collect();
+        weighted_mean_into(&rows, &weights, &mut self.scratch_mean);
+        sub_into(&self.global, &self.scratch_mean, &mut self.scratch_pg);
+        let pseudo_grad_norm = l2_norm(&self.scratch_pg);
+        self.outer.step(&mut self.global, &self.scratch_pg);
+
+        // --- Metrics -------------------------------------------------------
+        let losses: Vec<f64> = updates.iter().map(|u| u.loss_mean).collect();
+        let (loss_mean, loss_std) = mean_std(&losses);
+        let deltas: Vec<Vec<f32>> = updates
+            .iter()
+            .map(|u| {
+                let mut d = vec![0.0f32; u.params.len()];
+                sub_into(&u.params, &self.scratch_mean, &mut d);
+                d
+            })
+            .collect();
+        let (nll, ppl) = self.eval_global()?;
+        let rec = RoundRecord {
+            round,
+            server_ppl: ppl,
+            server_nll: nll,
+            client_loss_mean: loss_mean,
+            client_loss_std: loss_std,
+            client_ppl_mean: loss_mean.exp(),
+            global_model_norm: l2_norm(&self.global),
+            client_model_norm_mean: mean_std(
+                &updates.iter().map(|u| u.model_norm).collect::<Vec<_>>(),
+            )
+            .0,
+            client_avg_norm: l2_norm(&self.scratch_mean),
+            pseudo_grad_norm,
+            step_grad_norm_mean: mean_std(
+                &updates.iter().map(|u| u.step_grad_norm_mean).collect::<Vec<_>>(),
+            )
+            .0,
+            applied_update_norm_mean: mean_std(
+                &updates
+                    .iter()
+                    .map(|u| u.applied_update_norm_mean)
+                    .collect::<Vec<_>>(),
+            )
+            .0,
+            act_norm_mean: mean_std(
+                &updates.iter().map(|u| u.act_norm_mean).collect::<Vec<_>>(),
+            )
+            .0,
+            momentum_norm: self.outer.momentum_norm(),
+            client_cosine_mean: mean_pairwise_cosine(&deltas),
+            participated: updates.len(),
+            comm_bytes: link::round_bytes(self.model.n_params(), updates.len()),
+            wall_secs: t0.elapsed().as_secs_f64(),
+        };
+        self.log.push(rec.clone());
+
+        if let Some(dir) = self.ckpt_dir.clone() {
+            self.checkpoint()
+                .save(&dir.join(format!("ckpt_round_{}.bin", self.next_round)))?;
+        }
+        Ok(rec)
+    }
+
+    /// Run all configured rounds (resuming from `next_round`).
+    pub fn run(&mut self) -> Result<Vec<RoundRecord>> {
+        while self.next_round < self.cfg.rounds {
+            self.run_round()?;
+        }
+        Ok(self.log.rounds.clone())
+    }
+
+    /// Snapshot the full federation state.
+    pub fn checkpoint(&self) -> Checkpoint {
+        let clients = self
+            .nodes
+            .iter()
+            .map(|n| {
+                let cursor = n.streams[0].cursor();
+                let (m, v, st) = match &n.saved_opt {
+                    Some((m, v, st)) => (m.clone(), v.clone(), *st),
+                    None => (Vec::new(), Vec::new(), 0),
+                };
+                Some(ClientCkpt { opt_m: m, opt_v: v, local_step: st, cursor })
+            })
+            .collect();
+        let (t, m, v) = self.outer.state();
+        Checkpoint {
+            round: self.next_round as u64,
+            seq_step: self.seq_step,
+            global: self.global.clone(),
+            outer_t: t,
+            outer_m: m.to_vec(),
+            outer_v: v.to_vec(),
+            clients,
+            timestamp: std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0),
+            elapsed_secs: self.elapsed_offset + self.started.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Restore a federation from a checkpoint (config must match the one
+    /// that produced it). Stream cursors, optimizer state, and the global
+    /// model resume bit-exactly (integration_ckpt.rs asserts equality).
+    pub fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
+        if ck.global.len() != self.global.len() {
+            bail!(
+                "checkpoint model size {} != config model size {}",
+                ck.global.len(),
+                self.global.len()
+            );
+        }
+        if ck.clients.len() != self.nodes.len() {
+            bail!("checkpoint has {} clients, config {}", ck.clients.len(), self.nodes.len());
+        }
+        self.global.copy_from_slice(&ck.global);
+        self.outer.restore(ck.outer_t, ck.outer_m.clone(), ck.outer_v.clone());
+        self.seq_step = ck.seq_step;
+        self.next_round = ck.round as usize;
+        self.elapsed_offset = ck.elapsed_secs;
+        for (node, c) in self.nodes.iter_mut().zip(&ck.clients) {
+            if let Some(c) = c {
+                node.streams[0].restore(&c.cursor);
+                node.saved_opt = if c.opt_m.is_empty() {
+                    None
+                } else {
+                    Some((c.opt_m.clone(), c.opt_v.clone(), c.local_step))
+                };
+            }
+        }
+        Ok(())
+    }
+
+    /// Resume from the latest checkpoint in `dir` if one exists.
+    pub fn try_resume_from(&mut self, dir: &std::path::Path) -> Result<bool> {
+        match crate::ckpt::latest_in(dir)? {
+            None => Ok(false),
+            Some((_, path)) => {
+                let ck = Checkpoint::load(&path)?;
+                self.restore(&ck)?;
+                Ok(true)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    #[test]
+    fn build_data_shapes() {
+        let mut cfg = ExperimentConfig::quickstart("m75a");
+        cfg.n_clients = 8;
+        cfg.corpus = CorpusKind::PileHetero { j: 1 };
+        let ds = build_data(&cfg, 64);
+        assert_eq!(ds.n_clients(), 8);
+        assert_eq!(ds.corpus.categories.len(), 8);
+        cfg.corpus = CorpusKind::C4Iid;
+        assert_eq!(build_data(&cfg, 64).corpus.categories.len(), 1);
+        cfg.corpus = CorpusKind::Mc4 { n_langs: 4 };
+        assert_eq!(build_data(&cfg, 64).corpus.categories.len(), 4);
+    }
+}

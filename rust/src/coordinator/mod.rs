@@ -1,0 +1,18 @@
+//! The Photon coordinator — the paper's L3 system contribution.
+//!
+//! * `sampler`     — reproducible client sampling (Algorithm 1 L.4)
+//! * `client`      — the Photon LLM Node: local training pipeline, island
+//!                   sub-federation, optimizer-state policy (L.12–27)
+//! * `federation`  — the Photon Aggregator: round orchestration, outer
+//!                   optimization, metrics, checkpointing (L.1–11)
+//! * `centralized` — the centralized baseline every figure compares against
+
+pub mod centralized;
+pub mod client;
+pub mod federation;
+pub mod sampler;
+
+pub use centralized::run_centralized;
+pub use client::{ClientNode, ClientUpdate};
+pub use federation::Federation;
+pub use sampler::ClientSampler;

@@ -1,0 +1,76 @@
+//! Client sampler (paper §4.1): "the client sampler assesses how many
+//! Photon LLM Nodes are available and selects a number of them depending on
+//! the requirements of the optimization algorithm". Sampling is uniform
+//! without replacement (Algorithm 1 L.4, `C ~ U(P, K)`) and seeded per
+//! round for exact reproducibility (§6.1 "reproducible sampling").
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ClientSampler {
+    seed: u64,
+}
+
+impl ClientSampler {
+    pub fn new(seed: u64) -> ClientSampler {
+        ClientSampler { seed }
+    }
+
+    /// Sample `k` distinct clients from `0..p` for `round`. Deterministic in
+    /// (seed, round); independent across rounds.
+    pub fn sample(&self, round: usize, p: usize, k: usize) -> Vec<usize> {
+        assert!(k <= p, "cannot sample {k} of {p} clients");
+        let mut rng =
+            Rng::new(self.seed).derive("client_sampler", round as u64);
+        let mut picks = rng.choose_k(p, k);
+        picks.sort_unstable(); // stable iteration order for reproducibility
+        picks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_round() {
+        let s = ClientSampler::new(42);
+        assert_eq!(s.sample(3, 64, 4), s.sample(3, 64, 4));
+    }
+
+    #[test]
+    fn rounds_differ() {
+        let s = ClientSampler::new(42);
+        assert_ne!(s.sample(1, 64, 8), s.sample(2, 64, 8));
+    }
+
+    #[test]
+    fn without_replacement_and_sorted() {
+        let s = ClientSampler::new(7);
+        let picks = s.sample(5, 64, 16);
+        assert_eq!(picks.len(), 16);
+        let mut d = picks.clone();
+        d.dedup();
+        assert_eq!(d, picks, "sorted + distinct");
+        assert!(picks.iter().all(|&c| c < 64));
+    }
+
+    #[test]
+    fn full_participation_is_everyone() {
+        let s = ClientSampler::new(1);
+        assert_eq!(s.sample(0, 8, 8), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn coverage_over_many_rounds() {
+        // Unbiased sampling: over many rounds every client appears.
+        let s = ClientSampler::new(9);
+        let mut seen = vec![false; 64];
+        for round in 0..200 {
+            for c in s.sample(round, 64, 4) {
+                seen[c] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x), "some client never sampled");
+    }
+}

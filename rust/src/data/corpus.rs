@@ -1,0 +1,340 @@
+//! Synthetic heterogeneous corpora — the C4 / The-Pile / mC4 stand-ins.
+//!
+//! The paper's heterogeneity experiments partition The Pile by *genre* and
+//! mC4 by *language*; what matters for federated optimization is that client
+//! data obey measurably different token laws. Each `Category` here is a
+//! parametric Markov-Zipf source: the next token is drawn from a Zipf
+//! distribution over *ranks* whose mapping to tokens is sheared by the
+//! current token (`next = perm[(rank + stride·cur) mod V]`). Different
+//! categories get different Zipf exponents, strides, and vocabulary
+//! permutations (languages additionally get disjoint vocabulary bands), so
+//! per-category unigram AND bigram statistics differ — real statistical
+//! heterogeneity with learnable structure (a trained model's perplexity
+//! drops well below uniform).
+
+use crate::util::rng::Rng;
+
+/// The Pile genres used in the paper's heterogeneous partition (§6.3).
+pub const PILE_GENRES: [&str; 8] = [
+    "wikipedia", "arxiv", "gutenberg", "hackernews",
+    "pubmed", "freelaw", "philpapers", "stackexchange",
+];
+
+/// One synthetic data category (a "genre" or "language").
+#[derive(Clone, Debug)]
+pub struct Category {
+    pub name: String,
+    pub vocab: usize,
+    /// Zipf exponent for the rank distribution (text-like ≈ 1.0–1.3).
+    pub zipf_s: f64,
+    /// Bigram shear: how strongly the current token shifts the rank→token map.
+    pub stride: usize,
+    /// Number of context classes: the shift depends on `cur mod ctx_classes`,
+    /// keeping the unigram marginal Zipf-skewed while giving each class its
+    /// own bigram law.
+    pub ctx_classes: usize,
+    /// Fraction of tokens drawn from a *shared* cross-genre process
+    /// (real Pile genres share English; languages share nothing).
+    pub common_frac: f64,
+    /// Token band `[band_lo, band_hi)`; languages use disjoint bands.
+    pub band_lo: usize,
+    pub band_hi: usize,
+    /// Category seed: fixes the vocabulary permutation.
+    pub seed: u64,
+}
+
+impl Category {
+    /// A "genre": full vocabulary, distinct exponent/stride/permutation.
+    pub fn genre(name: &str, vocab: usize, index: usize) -> Category {
+        Category {
+            name: name.to_string(),
+            vocab,
+            zipf_s: 1.05 + 0.08 * index as f64,
+            stride: 3 + 2 * index,
+            ctx_classes: 3 + index % 4,
+            common_frac: 0.5,
+            band_lo: 0,
+            band_hi: vocab,
+            seed: 0x9e00 + index as u64,
+        }
+    }
+
+    /// A "language": disjoint vocabulary band (mC4-style, extreme case).
+    pub fn language(name: &str, vocab: usize, index: usize, n_langs: usize) -> Category {
+        let band = vocab / n_langs;
+        Category {
+            name: name.to_string(),
+            vocab,
+            zipf_s: 1.1,
+            stride: 5 + index,
+            ctx_classes: 4,
+            common_frac: 0.0,
+            band_lo: index * band,
+            band_hi: (index + 1) * band,
+            seed: 0x1a00 + index as u64,
+        }
+    }
+}
+
+/// Sampler for one category: precomputed Zipf CDF + vocab permutation.
+#[derive(Clone)]
+pub struct CategorySampler {
+    perm: Vec<u32>,
+    cdf: Vec<f64>,
+    stride: usize,
+    ctx_classes: usize,
+    band: usize,
+    band_lo: usize,
+    common_frac: f64,
+    /// Shared cross-genre tables (same for every category of a vocab).
+    common_perm: Vec<u32>,
+    common_cdf: Vec<f64>,
+}
+
+impl CategorySampler {
+    pub fn new(cat: &Category) -> CategorySampler {
+        let band = cat.band_hi - cat.band_lo;
+        assert!(band >= 2, "category band too small");
+        // Zipf weights over ranks 1..=band.
+        let mut cdf = Vec::with_capacity(band);
+        let mut acc = 0.0;
+        for r in 1..=band {
+            acc += 1.0 / (r as f64).powf(cat.zipf_s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        // Category-specific permutation of the band.
+        let mut perm: Vec<u32> = (0..band as u32).collect();
+        let mut rng = Rng::new(cat.seed);
+        rng.shuffle(&mut perm);
+        // Shared "common language" tables: fixed seed + exponent, so every
+        // genre of a corpus mixes in the SAME process (paper: Pile genres
+        // all share English).
+        let mut common_cdf = Vec::with_capacity(band);
+        let mut acc_c = 0.0;
+        for r in 1..=band {
+            acc_c += 1.0 / (r as f64).powf(1.1);
+            common_cdf.push(acc_c);
+        }
+        for c in common_cdf.iter_mut() {
+            *c /= acc_c;
+        }
+        let mut common_perm: Vec<u32> = (0..band as u32).collect();
+        let mut crng = Rng::new(0xC0440);
+        crng.shuffle(&mut common_perm);
+        CategorySampler {
+            perm,
+            cdf,
+            stride: cat.stride,
+            ctx_classes: cat.ctx_classes.max(1),
+            band,
+            band_lo: cat.band_lo,
+            common_frac: cat.common_frac,
+            common_perm,
+            common_cdf,
+        }
+    }
+
+    /// Draw the next token given the current one. With probability
+    /// `common_frac` the token comes from the shared cross-genre process.
+    pub fn next_token(&self, cur: u32, rng: &mut Rng) -> u32 {
+        let common = self.common_frac > 0.0 && rng.f64() < self.common_frac;
+        let (cdf, perm, stride, classes) = if common {
+            (&self.common_cdf, &self.common_perm, 7usize, 4usize)
+        } else {
+            (&self.cdf, &self.perm, self.stride, self.ctx_classes)
+        };
+        let u = rng.f64();
+        // Binary search the CDF for the sampled rank.
+        let rank = match cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i,
+        }
+        .min(self.band - 1);
+        let cur_in_band = (cur as usize).saturating_sub(self.band_lo) % self.band;
+        let class = cur_in_band % classes;
+        let idx = (rank + stride * class) % self.band;
+        (self.band_lo + perm[idx] as usize) as u32
+    }
+
+    /// Generate a sequence of `len` tokens starting from a sampled token.
+    pub fn sequence(&self, len: usize, rng: &mut Rng) -> Vec<i32> {
+        let mut out = Vec::with_capacity(len);
+        let mut cur = (self.band_lo + rng.usize_below(self.band)) as u32;
+        for _ in 0..len {
+            cur = self.next_token(cur, rng);
+            out.push(cur as i32);
+        }
+        out
+    }
+}
+
+/// A named corpus = set of categories (the dataset stand-ins).
+#[derive(Clone, Debug)]
+pub struct SyntheticCorpus {
+    pub name: String,
+    pub vocab: usize,
+    pub categories: Vec<Category>,
+}
+
+impl SyntheticCorpus {
+    /// C4 stand-in: one homogeneous mixed source (IID shards, §6.3).
+    pub fn c4(vocab: usize) -> SyntheticCorpus {
+        SyntheticCorpus {
+            name: "c4".into(),
+            vocab,
+            categories: vec![Category::genre("c4-mix", vocab, 2)],
+        }
+    }
+
+    /// The-Pile stand-in: the paper's 8 genres (§6.3).
+    pub fn pile(vocab: usize) -> SyntheticCorpus {
+        SyntheticCorpus {
+            name: "pile".into(),
+            vocab,
+            categories: PILE_GENRES
+                .iter()
+                .enumerate()
+                .map(|(i, g)| Category::genre(g, vocab, i))
+                .collect(),
+        }
+    }
+
+    /// mC4 stand-in: `n` disjoint-vocabulary "languages".
+    pub fn mc4(vocab: usize, n_langs: usize) -> SyntheticCorpus {
+        let names = ["en", "de", "fr", "zh", "hi", "sw", "ro", "ja"];
+        SyntheticCorpus {
+            name: "mc4".into(),
+            vocab,
+            categories: (0..n_langs)
+                .map(|i| {
+                    Category::language(
+                        names.get(i).copied().unwrap_or("xx"),
+                        vocab,
+                        i,
+                        n_langs,
+                    )
+                })
+                .collect(),
+        }
+    }
+
+    pub fn category(&self, name: &str) -> Option<&Category> {
+        self.categories.iter().find(|c| c.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unigram(cat: &Category, n: usize, seed: u64) -> Vec<f64> {
+        let s = CategorySampler::new(cat);
+        let mut rng = Rng::new(seed);
+        let mut counts = vec![0usize; cat.vocab];
+        for t in s.sequence(n, &mut rng) {
+            counts[t as usize] += 1;
+        }
+        counts.iter().map(|&c| c as f64 / n as f64).collect()
+    }
+
+    #[test]
+    fn tokens_in_vocab_range() {
+        let corpus = SyntheticCorpus::pile(256);
+        for cat in &corpus.categories {
+            let s = CategorySampler::new(cat);
+            let mut rng = Rng::new(1);
+            for t in s.sequence(500, &mut rng) {
+                assert!((0..256).contains(&t), "{} out of range", t);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cat = Category::genre("wikipedia", 128, 0);
+        let s = CategorySampler::new(&cat);
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        assert_eq!(s.sequence(64, &mut r1), s.sequence(64, &mut r2));
+    }
+
+    #[test]
+    fn genres_have_different_unigram_laws() {
+        let corpus = SyntheticCorpus::pile(128);
+        let a = unigram(&corpus.categories[0], 20_000, 5);
+        let b = unigram(&corpus.categories[4], 20_000, 5);
+        // Total-variation distance must be substantial.
+        let tv: f64 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum::<f64>() / 2.0;
+        assert!(tv > 0.08, "tv distance too small: {tv}");
+    }
+
+    #[test]
+    fn distribution_is_zipf_skewed() {
+        let cat = Category::genre("arxiv", 128, 1);
+        let mut u = unigram(&cat, 50_000, 3);
+        u.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        // Top 10 tokens carry far more than 10/128 of the mass.
+        let top10: f64 = u[..10].iter().sum();
+        assert!(top10 > 0.3, "top-10 mass {top10}");
+    }
+
+    #[test]
+    fn languages_use_disjoint_bands() {
+        let corpus = SyntheticCorpus::mc4(128, 4);
+        for (i, cat) in corpus.categories.iter().enumerate() {
+            let s = CategorySampler::new(cat);
+            let mut rng = Rng::new(7);
+            for t in s.sequence(200, &mut rng) {
+                assert!(t as usize >= i * 32 && (t as usize) < (i + 1) * 32);
+            }
+        }
+    }
+
+    #[test]
+    fn bigram_structure_is_learnable() {
+        // Conditional entropy H(next|cur) must be far below log2(V):
+        // the source has predictable structure a model can learn.
+        let cat = Category::genre("wikipedia", 64, 0);
+        let s = CategorySampler::new(&cat);
+        let mut rng = Rng::new(2);
+        let mut joint = vec![vec![0usize; 64]; 64];
+        let mut cur = 0u32;
+        for _ in 0..200_000 {
+            let nxt = s.next_token(cur, &mut rng);
+            joint[cur as usize][nxt as usize] += 1;
+            cur = nxt;
+        }
+        let mut h_cond = 0.0;
+        let total: usize = joint.iter().map(|r| r.iter().sum::<usize>()).sum();
+        for row in &joint {
+            let rs: usize = row.iter().sum();
+            if rs == 0 {
+                continue;
+            }
+            let p_cur = rs as f64 / total as f64;
+            let mut h = 0.0;
+            for &c in row {
+                if c > 0 {
+                    let p = c as f64 / rs as f64;
+                    h -= p * p.log2();
+                }
+            }
+            h_cond += p_cur * h;
+        }
+        assert!(h_cond < 5.5, "H(next|cur) = {h_cond} (log2 V = 6)");
+        assert!(h_cond > 1.0, "degenerate source: {h_cond}");
+    }
+
+    #[test]
+    fn corpus_constructors() {
+        assert_eq!(SyntheticCorpus::c4(256).categories.len(), 1);
+        assert_eq!(SyntheticCorpus::pile(256).categories.len(), 8);
+        assert_eq!(SyntheticCorpus::mc4(256, 4).categories.len(), 4);
+        assert!(SyntheticCorpus::pile(256).category("arxiv").is_some());
+        assert!(SyntheticCorpus::pile(256).category("nope").is_none());
+    }
+}

@@ -1,0 +1,13 @@
+//! Photon Data Source substrate: synthetic heterogeneous corpora, the
+//! J×|C| bucket partitioner (paper §6.2.1), and checkpointable token
+//! streams feeding the Photon LLM Nodes (paper §5.2).
+
+pub mod corpus;
+pub mod partition;
+pub mod source;
+pub mod stream;
+
+pub use corpus::{Category, SyntheticCorpus};
+pub use partition::{Bucket, Partition};
+pub use source::DataSource;
+pub use stream::TokenStream;

@@ -1,0 +1,221 @@
+//! The paper's §6.2.1 partitioner: split each category into `J × |C|`
+//! disjoint buckets, map each bucket to at most one client, so "even if two
+//! clients draw from the same source, they constantly sample from disjoint
+//! data subsets".
+//!
+//! A `Bucket` is identified by `(category, bucket_idx)`; its stream seed is
+//! derived from both, so disjointness is by construction (different seeds =
+//! different sample paths) and the invariants (disjointness, ≤1 owner,
+//! coverage) are property-tested in rust/tests/props.rs.
+
+use std::collections::BTreeMap;
+
+use crate::data::corpus::SyntheticCorpus;
+
+/// One disjoint shard of a category.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Bucket {
+    pub category: String,
+    pub index: usize,
+}
+
+impl Bucket {
+    /// Deterministic stream seed for this bucket (never collides across
+    /// (category, index) pairs in practice: FNV over both).
+    pub fn seed(&self, experiment_seed: u64) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325 ^ experiment_seed;
+        for b in self.category.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h ^= self.index as u64;
+        h.wrapping_mul(0x100000001b3)
+    }
+}
+
+/// A client→buckets assignment over a corpus.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub corpus_name: String,
+    pub n_clients: usize,
+    /// Max categories a client may draw on (J in the paper).
+    pub j: usize,
+    /// client id → owned buckets.
+    pub assignment: Vec<Vec<Bucket>>,
+    /// Buckets reserved for validation (never assigned to clients).
+    pub validation: Vec<Bucket>,
+}
+
+impl Partition {
+    /// IID partition (the paper's homogeneous C4 setting): every client gets
+    /// one bucket of the single mixed category; bucket |C| is held out for
+    /// validation.
+    pub fn iid(corpus: &SyntheticCorpus, n_clients: usize) -> Partition {
+        assert_eq!(
+            corpus.categories.len(),
+            1,
+            "iid partition expects a single-category corpus"
+        );
+        let cat = &corpus.categories[0].name;
+        let assignment = (0..n_clients)
+            .map(|c| vec![Bucket { category: cat.clone(), index: c }])
+            .collect();
+        Partition {
+            corpus_name: corpus.name.clone(),
+            n_clients,
+            j: 1,
+            assignment,
+            validation: vec![Bucket { category: cat.clone(), index: n_clients }],
+        }
+    }
+
+    /// Natural heterogeneous partition (the paper's Pile setting): client
+    /// `c` draws on `j` categories, chosen round-robin, each contributing a
+    /// private bucket. With `j = 1` and `n_clients == |categories|`, this is
+    /// the paper's one-genre-per-client mapping.
+    pub fn heterogeneous(corpus: &SyntheticCorpus, n_clients: usize, j: usize) -> Partition {
+        assert!(!corpus.categories.is_empty());
+        assert!(j >= 1);
+        let n_cat = corpus.categories.len();
+        let mut next_bucket: BTreeMap<String, usize> = BTreeMap::new();
+        let mut assignment = Vec::with_capacity(n_clients);
+        for c in 0..n_clients {
+            let mut mine = Vec::with_capacity(j);
+            for k in 0..j {
+                let cat = &corpus.categories[(c + k) % n_cat].name;
+                let idx = next_bucket.entry(cat.clone()).or_insert(0);
+                mine.push(Bucket { category: cat.clone(), index: *idx });
+                *idx += 1;
+            }
+            assignment.push(mine);
+        }
+        // One held-out validation bucket per category, indices above any
+        // assigned bucket.
+        let validation = corpus
+            .categories
+            .iter()
+            .map(|cat| Bucket {
+                category: cat.name.clone(),
+                index: next_bucket.get(&cat.name).copied().unwrap_or(0),
+            })
+            .collect();
+        Partition {
+            corpus_name: corpus.name.clone(),
+            n_clients,
+            j,
+            assignment,
+            validation,
+        }
+    }
+
+    /// Buckets-per-category upper bound from the paper: `J × |C|`.
+    pub fn max_buckets_per_category(&self) -> usize {
+        self.j * self.n_clients
+    }
+
+    /// All assigned buckets (flattened).
+    pub fn all_buckets(&self) -> Vec<&Bucket> {
+        self.assignment.iter().flatten().collect()
+    }
+
+    /// Owner of a bucket, if any.
+    pub fn owner(&self, b: &Bucket) -> Option<usize> {
+        self.assignment
+            .iter()
+            .position(|bs| bs.iter().any(|x| x == b))
+    }
+
+    /// Invariant check used by tests and at federation startup:
+    /// no bucket owned twice, validation buckets unassigned, indices within
+    /// the J×|C| bound.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = std::collections::BTreeSet::new();
+        for (c, bs) in self.assignment.iter().enumerate() {
+            for b in bs {
+                if !seen.insert(b.clone()) {
+                    return Err(format!("bucket {b:?} assigned twice (client {c})"));
+                }
+                if b.index >= self.max_buckets_per_category() + 1 {
+                    return Err(format!("bucket {b:?} beyond J*|C| bound"));
+                }
+            }
+        }
+        for v in &self.validation {
+            if seen.contains(v) {
+                return Err(format!("validation bucket {v:?} also assigned"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::SyntheticCorpus;
+
+    #[test]
+    fn iid_buckets_disjoint() {
+        let p = Partition::iid(&SyntheticCorpus::c4(128), 8);
+        p.check_invariants().unwrap();
+        assert_eq!(p.assignment.len(), 8);
+        assert_eq!(p.validation.len(), 1);
+        assert_eq!(p.owner(&p.assignment[3][0]), Some(3));
+        assert_eq!(p.owner(&p.validation[0]), None);
+    }
+
+    #[test]
+    fn hetero_one_genre_per_client() {
+        let corpus = SyntheticCorpus::pile(128);
+        let p = Partition::heterogeneous(&corpus, 8, 1);
+        p.check_invariants().unwrap();
+        // With 8 clients, 8 genres, J=1: each client gets exactly its genre.
+        for (c, bs) in p.assignment.iter().enumerate() {
+            assert_eq!(bs.len(), 1);
+            assert_eq!(bs[0].category, corpus.categories[c].name);
+        }
+    }
+
+    #[test]
+    fn hetero_multi_category_clients() {
+        let corpus = SyntheticCorpus::pile(128);
+        let p = Partition::heterogeneous(&corpus, 12, 3);
+        p.check_invariants().unwrap();
+        for bs in &p.assignment {
+            assert_eq!(bs.len(), 3);
+            // Client's categories are distinct.
+            let mut cats: Vec<_> = bs.iter().map(|b| &b.category).collect();
+            cats.sort();
+            cats.dedup();
+            assert_eq!(cats.len(), 3);
+        }
+    }
+
+    #[test]
+    fn more_clients_than_categories_share_categories_not_buckets() {
+        let corpus = SyntheticCorpus::pile(128);
+        let p = Partition::heterogeneous(&corpus, 64, 1);
+        p.check_invariants().unwrap();
+        // Clients 0 and 8 share the genre but not the bucket.
+        assert_eq!(p.assignment[0][0].category, p.assignment[8][0].category);
+        assert_ne!(p.assignment[0][0], p.assignment[8][0]);
+    }
+
+    #[test]
+    fn bucket_seeds_unique() {
+        let corpus = SyntheticCorpus::pile(128);
+        let p = Partition::heterogeneous(&corpus, 64, 2);
+        let mut seeds: Vec<u64> =
+            p.all_buckets().iter().map(|b| b.seed(42)).collect();
+        seeds.sort_unstable();
+        let before = seeds.len();
+        seeds.dedup();
+        assert_eq!(seeds.len(), before, "seed collision");
+    }
+
+    #[test]
+    fn seed_depends_on_experiment_seed() {
+        let b = Bucket { category: "arxiv".into(), index: 3 };
+        assert_ne!(b.seed(1), b.seed(2));
+    }
+}

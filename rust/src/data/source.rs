@@ -1,0 +1,127 @@
+//! Photon Data Source: the storage-side component bound to one Photon LLM
+//! Node (paper §4.1). It owns the client's training stream and serves the
+//! held-out validation split ("Photon Data Source ensures this split is
+//! preserved and streamed to the Photon LLM Nodes when asked to validate").
+
+use crate::data::corpus::SyntheticCorpus;
+use crate::data::partition::Partition;
+use crate::data::stream::TokenStream;
+
+/// A federation's data plane: per-client sources + a shared validation set.
+pub struct DataSource {
+    pub corpus: SyntheticCorpus,
+    pub partition: Partition,
+    pub experiment_seed: u64,
+}
+
+impl DataSource {
+    pub fn new(corpus: SyntheticCorpus, partition: Partition, experiment_seed: u64) -> Self {
+        partition
+            .check_invariants()
+            .expect("partition invariants violated");
+        DataSource { corpus, partition, experiment_seed }
+    }
+
+    /// Bind client `c`'s buckets to a merged training stream
+    /// (Algorithm 1 L.13).
+    pub fn bind_stream(&self, client: usize, seq_width: usize) -> TokenStream {
+        TokenStream::bind(
+            &self.partition.assignment[client],
+            &self.corpus.categories,
+            seq_width,
+            self.experiment_seed,
+        )
+    }
+
+    /// The centralized validation set: a fixed list of `[batch, seq_width]`
+    /// batches drawn from the held-out validation buckets. Deterministic per
+    /// experiment seed, identical for every caller — the "centralized
+    /// validation set" the paper's figures evaluate server models on.
+    pub fn validation_batches(
+        &self,
+        n_batches: usize,
+        batch: usize,
+        seq_width: usize,
+    ) -> Vec<Vec<i32>> {
+        let mut stream = TokenStream::bind(
+            &self.partition.validation,
+            &self.corpus.categories,
+            seq_width,
+            self.experiment_seed ^ 0x7a11_da7e,
+        );
+        (0..n_batches).map(|_| stream.next_batch(batch)).collect()
+    }
+
+    /// A client's *personal* validation stream (paper §4.2: personalized
+    /// evaluation on one client's private test set) — same buckets as
+    /// training but an independent sample path.
+    pub fn client_validation_batches(
+        &self,
+        client: usize,
+        n_batches: usize,
+        batch: usize,
+        seq_width: usize,
+    ) -> Vec<Vec<i32>> {
+        let mut stream = TokenStream::bind(
+            &self.partition.assignment[client],
+            &self.corpus.categories,
+            seq_width,
+            self.experiment_seed ^ 0x9c11e47,
+        );
+        (0..n_batches).map(|_| stream.next_batch(batch)).collect()
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.partition.n_clients
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::Partition;
+
+    fn source() -> DataSource {
+        let corpus = SyntheticCorpus::pile(64);
+        let partition = Partition::heterogeneous(&corpus, 8, 1);
+        DataSource::new(corpus, partition, 5)
+    }
+
+    #[test]
+    fn validation_is_deterministic_and_shared() {
+        let s = source();
+        let a = s.validation_batches(3, 2, 9);
+        let b = s.validation_batches(3, 2, 9);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a[0].len(), 2 * 9);
+    }
+
+    #[test]
+    fn validation_differs_from_training() {
+        let s = source();
+        let val = s.validation_batches(1, 2, 9);
+        let mut train = s.bind_stream(0, 9);
+        assert_ne!(val[0], train.next_batch(2));
+    }
+
+    #[test]
+    fn client_validation_is_personal() {
+        let s = source();
+        // Clients hold different genres => different personal val sets.
+        let v0 = s.client_validation_batches(0, 1, 2, 9);
+        let v1 = s.client_validation_batches(1, 1, 2, 9);
+        assert_ne!(v0, v1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_partition() {
+        let corpus = SyntheticCorpus::pile(64);
+        let mut partition = Partition::heterogeneous(&corpus, 4, 1);
+        // Sabotage: duplicate a bucket.
+        let b = partition.assignment[0][0].clone();
+        partition.assignment[1][0] = b;
+        DataSource::new(corpus, partition, 1);
+    }
+}

@@ -1,0 +1,232 @@
+//! Downstream in-context-learning evaluation harness (paper §7.9, Tables
+//! 5–6): multiple-choice tasks scored by length-normalized per-option
+//! log-likelihood, exactly the ICL scoring path the paper's suite uses.
+//!
+//! The 13 task families are synthetic analogues named after the paper's
+//! benchmarks. Each item is a *continuation-selection* problem over the
+//! synthetic corpus: given a context sampled from a task-specific category,
+//! the correct option is the generator's true continuation and the
+//! distractors are continuations from foreign categories / perturbed paths.
+//! A model that has learned the corpus statistics assigns the true
+//! continuation a higher log-likelihood — so accuracy scales with model
+//! quality, which is what Tables 5–6 assert across the ladder.
+
+use anyhow::Result;
+
+use crate::data::corpus::{Category, CategorySampler, SyntheticCorpus};
+use crate::runtime::ModelRuntime;
+use crate::util::rng::Rng;
+
+/// The paper's benchmark names (Tables 5 and 6), reused as task-family
+/// labels for the synthetic analogues.
+pub const TASKS_TABLE5: [&str; 7] = [
+    "ARC-Challenge", "BigBench-QA-Wikidata", "HellaSwag", "PIQA",
+    "Winogrande", "ARC-Easy", "BoolQ",
+];
+pub const TASKS_TABLE6: [&str; 6] = [
+    "OpenbookQA", "Winograd", "LAMBADA", "BigBench-StrategyQA", "COPA", "MMLU",
+];
+
+/// One multiple-choice item: shared context, N options, gold index.
+#[derive(Clone, Debug)]
+pub struct McItem {
+    pub context: Vec<i32>,
+    pub options: Vec<Vec<i32>>,
+    pub gold: usize,
+}
+
+/// A task family = generator of MC items with its own difficulty knobs.
+pub struct TaskFamily {
+    pub name: String,
+    pub n_options: usize,
+    pub context_len: usize,
+    pub option_len: usize,
+    /// Index of the "home" category within the corpus.
+    pub category: usize,
+}
+
+impl TaskFamily {
+    /// Derive the 13 families over a corpus, cycling categories and varying
+    /// context/option lengths so families differ in difficulty.
+    pub fn suite(corpus: &SyntheticCorpus, seq_len: usize) -> Vec<TaskFamily> {
+        let names: Vec<&str> = TASKS_TABLE5.iter().chain(TASKS_TABLE6.iter()).copied().collect();
+        names
+            .iter()
+            .enumerate()
+            .map(|(i, name)| {
+                let option_len = 3 + i % 4;
+                TaskFamily {
+                    name: name.to_string(),
+                    n_options: 2 + i % 3,
+                    context_len: (seq_len - option_len).min(seq_len * 3 / 4),
+                    option_len,
+                    category: i % corpus.categories.len(),
+                }
+            })
+            .collect()
+    }
+
+    /// Generate `n` items. The gold option is the true continuation of the
+    /// context under the home category's sampler; distractors continue from
+    /// a *different* starting token (perturbed path) or a foreign category.
+    pub fn items(
+        &self,
+        corpus: &SyntheticCorpus,
+        n: usize,
+        seed: u64,
+    ) -> Vec<McItem> {
+        let home = CategorySampler::new(&corpus.categories[self.category]);
+        let foreign_cat: &Category =
+            &corpus.categories[(self.category + 1) % corpus.categories.len()];
+        let foreign = CategorySampler::new(foreign_cat);
+        let mut rng = Rng::new(seed ^ 0xe4a1);
+        (0..n)
+            .map(|_| {
+                let context = home.sequence(self.context_len, &mut rng);
+                let last = *context.last().unwrap() as u32;
+                // Gold: continue the home chain from the true last token.
+                let gold_opt = continue_from(&home, last, self.option_len, &mut rng);
+                let mut options = vec![gold_opt];
+                for d in 1..self.n_options {
+                    let opt = if d % 2 == 1 && corpus.categories.len() > 1 {
+                        continue_from(&foreign, last, self.option_len, &mut rng)
+                    } else {
+                        // Perturbed path: continue from a random token.
+                        let start = rng.usize_below(corpus.vocab) as u32;
+                        continue_from(&home, start, self.option_len, &mut rng)
+                    };
+                    options.push(opt);
+                }
+                // Shuffle options, track gold.
+                let mut order: Vec<usize> = (0..options.len()).collect();
+                rng.shuffle(&mut order);
+                let gold = order.iter().position(|&o| o == 0).unwrap();
+                let options = order.into_iter().map(|o| options[o].clone()).collect();
+                McItem { context, options, gold }
+            })
+            .collect()
+    }
+}
+
+fn continue_from(s: &CategorySampler, start: u32, len: usize, rng: &mut Rng) -> Vec<i32> {
+    let mut out = Vec::with_capacity(len);
+    let mut cur = start;
+    for _ in 0..len {
+        cur = s.next_token(cur, rng);
+        out.push(cur as i32);
+    }
+    out
+}
+
+/// Score one item: argmax over options of length-normalized log-likelihood,
+/// computed through the AOT `score_step` artifact. Each option is laid out
+/// as `[context | option | pad]` with the mask selecting option positions.
+pub fn score_item(model: &ModelRuntime, params: &[f32], item: &McItem) -> Result<usize> {
+    let b = model.batch_size();
+    let width = model.seq_width();
+    let seq_len = model.seq_len();
+    let mut best = (f64::NEG_INFINITY, 0usize);
+    // Options are scored in batches of `b` (artifact shape is fixed).
+    for (chunk_start, chunk) in item.options.chunks(b).enumerate() {
+        let mut tokens = vec![0i32; b * width];
+        let mut mask = vec![0.0f32; b * seq_len];
+        for (row, opt) in chunk.iter().enumerate() {
+            let ctx_take = item.context.len().min(width - opt.len());
+            let seq: Vec<i32> = item.context[item.context.len() - ctx_take..]
+                .iter()
+                .chain(opt.iter())
+                .copied()
+                .collect();
+            debug_assert!(seq.len() <= width);
+            tokens[row * width..row * width + seq.len()].copy_from_slice(&seq);
+            // Targets are tokens[1..]; option tokens occupy target positions
+            // [ctx_take-1, ctx_take-1+len(opt)).
+            let start = ctx_take - 1;
+            for p in start..start + opt.len() {
+                mask[row * seq_len + p] = 1.0;
+            }
+        }
+        let (ll, len) = model.score_batch(params, &tokens, &mask)?;
+        for (row, _opt) in chunk.iter().enumerate() {
+            let norm = ll[row] as f64 / (len[row] as f64).max(1.0);
+            let opt_idx = chunk_start * b + row;
+            if norm > best.0 {
+                best = (norm, opt_idx);
+            }
+        }
+    }
+    Ok(best.1)
+}
+
+/// Accuracy of `params` on a task family.
+pub fn task_accuracy(
+    model: &ModelRuntime,
+    params: &[f32],
+    corpus: &SyntheticCorpus,
+    family: &TaskFamily,
+    n_items: usize,
+    seed: u64,
+) -> Result<f64> {
+    let items = family.items(corpus, n_items, seed);
+    let mut correct = 0usize;
+    for item in &items {
+        if score_item(model, params, item)? == item.gold {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / n_items as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> SyntheticCorpus {
+        SyntheticCorpus::pile(64)
+    }
+
+    #[test]
+    fn suite_has_13_families() {
+        let s = TaskFamily::suite(&corpus(), 32);
+        assert_eq!(s.len(), 13);
+        for f in &s {
+            assert!(f.n_options >= 2);
+            assert!(f.context_len + f.option_len <= 32 + 32 / 4);
+        }
+    }
+
+    #[test]
+    fn items_are_well_formed() {
+        let s = TaskFamily::suite(&corpus(), 32);
+        let items = s[0].items(&corpus(), 10, 3);
+        assert_eq!(items.len(), 10);
+        for it in &items {
+            assert_eq!(it.options.len(), s[0].n_options);
+            assert!(it.gold < it.options.len());
+            assert_eq!(it.context.len(), s[0].context_len);
+            assert!(it.options.iter().all(|o| o.len() == s[0].option_len));
+        }
+    }
+
+    #[test]
+    fn items_deterministic_per_seed() {
+        let s = TaskFamily::suite(&corpus(), 32);
+        let a = s[2].items(&corpus(), 5, 9);
+        let b = s[2].items(&corpus(), 5, 9);
+        assert_eq!(a[0].context, b[0].context);
+        assert_eq!(a[0].gold, b[0].gold);
+    }
+
+    #[test]
+    fn gold_position_is_uniformish() {
+        let s = TaskFamily::suite(&corpus(), 32);
+        let items = s[0].items(&corpus(), 200, 1);
+        let mut counts = vec![0usize; s[0].n_options];
+        for it in &items {
+            counts[it.gold] += 1;
+        }
+        for &c in &counts {
+            assert!(c > 200 / s[0].n_options / 3, "gold position biased: {counts:?}");
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! Shared machinery for the experiment drivers: a compiled-model cache, a
+//! federated-vs-centralized runner pair, CSV emission, scale flags, and the
+//! qualitative-shape assertion helpers.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config::{CorpusKind, ExperimentConfig};
+use crate::coordinator::{run_centralized, Federation};
+use crate::metrics::MetricsLog;
+use crate::optim::schedule::CosineSchedule;
+use crate::runtime::{ModelRuntime, Runtime};
+use crate::util::cli::Args;
+use crate::util::{results_dir, table::Table};
+
+/// Compiled-artifact cache: each model config's HLO is compiled once per
+/// process even when several experiment variants use it.
+pub struct ModelCache {
+    rt: Runtime,
+    models: HashMap<String, Rc<ModelRuntime>>,
+}
+
+impl ModelCache {
+    pub fn new() -> Result<ModelCache> {
+        Ok(ModelCache { rt: Runtime::cpu()?, models: HashMap::new() })
+    }
+
+    pub fn get(&mut self, name: &str) -> Result<Rc<ModelRuntime>> {
+        if let Some(m) = self.models.get(name) {
+            return Ok(m.clone());
+        }
+        eprintln!("[photon] compiling artifacts for {name} ...");
+        let m = Rc::new(self.rt.load_model(name)?);
+        self.models.insert(name.to_string(), m.clone());
+        Ok(m)
+    }
+}
+
+/// Experiment scale knobs taken from the CLI. Defaults reproduce the
+/// curve shapes in a few minutes on CPU; `--paper-scale` restores the
+/// paper's τ=500 round length (hours).
+#[derive(Clone, Copy, Debug)]
+pub struct Scale {
+    pub rounds: usize,
+    pub local_steps: u64,
+    pub eval_batches: usize,
+    pub seed: u64,
+}
+
+impl Scale {
+    pub fn from_args(args: &Args, default_rounds: usize, default_steps: u64) -> Result<Scale> {
+        let mut rounds = args.get_usize("rounds", default_rounds)?;
+        let mut steps = args.get_u64("steps", default_steps)?;
+        if args.flag("fast") {
+            rounds = rounds.min(6);
+            steps = steps.min(15);
+        }
+        if args.flag("paper-scale") {
+            steps = 500;
+        }
+        Ok(Scale {
+            rounds,
+            local_steps: steps,
+            eval_batches: args.get_usize("eval-batches", 4)?,
+            seed: args.get_u64("seed", 42)?,
+        })
+    }
+
+    /// Build a figure config for (model, corpus, P, K) at this scale.
+    pub fn config(
+        &self,
+        model: &str,
+        corpus: CorpusKind,
+        p: usize,
+        k: usize,
+    ) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::figure_default(model, corpus);
+        cfg.n_clients = p;
+        cfg.clients_per_round = k;
+        cfg.rounds = self.rounds;
+        cfg.local_steps = self.local_steps;
+        cfg.eval_batches = self.eval_batches;
+        cfg.seed = self.seed;
+        let total = self.rounds as u64 * self.local_steps;
+        cfg.schedule =
+            CosineSchedule::new(3e-3, 0.1, total.max(2), (total / 20).min(50));
+        cfg.label = format!("{model}-{p}x{k}");
+        cfg
+    }
+}
+
+/// One labeled training curve (federated run or centralized baseline).
+pub struct Curve {
+    pub label: String,
+    pub log: MetricsLog,
+}
+
+/// Run the federated experiment for `cfg` using a cached model.
+pub fn run_fed(cache: &mut ModelCache, cfg: &ExperimentConfig) -> Result<Curve> {
+    let model = cache.get(&cfg.model)?;
+    let mut fed = Federation::with_model(cfg.clone(), model)?;
+    fed.run()?;
+    Ok(Curve { label: format!("fed-{}", cfg.label), log: fed.log })
+}
+
+/// Run the centralized baseline for `cfg`.
+pub fn run_central(cache: &mut ModelCache, cfg: &ExperimentConfig) -> Result<Curve> {
+    let model = cache.get(&cfg.model)?;
+    let log = run_centralized(cfg, &model)?;
+    Ok(Curve { label: format!("central-{}", cfg.model), log })
+}
+
+/// Write each curve's full metrics CSV under `results/<exp>/`.
+pub fn save_curves(exp: &str, curves: &[&Curve]) -> Result<()> {
+    let dir = results_dir(exp);
+    for c in curves {
+        c.log.write_csv(&dir.join(format!("{}.csv", c.label)))?;
+    }
+    println!("[csv] results/{exp}/ ({} curves)", curves.len());
+    Ok(())
+}
+
+/// Print a per-round comparison of one metric across curves.
+pub fn print_metric_table(
+    title: &str,
+    curves: &[&Curve],
+    metric: impl Fn(&crate::metrics::RoundRecord) -> f64,
+) {
+    println!("\n{title}");
+    let mut header = vec!["round".to_string()];
+    header.extend(curves.iter().map(|c| c.label.clone()));
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr);
+    let rounds = curves.iter().map(|c| c.log.rounds.len()).max().unwrap_or(0);
+    for r in 0..rounds {
+        let mut row = vec![r.to_string()];
+        for c in curves {
+            row.push(match c.log.rounds.get(r) {
+                Some(rec) => format!("{:.3}", metric(rec)),
+                None => "-".into(),
+            });
+        }
+        t.row(row);
+    }
+    t.print();
+}
+
+/// Final value of a metric on a curve.
+pub fn final_metric(c: &Curve, metric: impl Fn(&crate::metrics::RoundRecord) -> f64) -> f64 {
+    c.log.rounds.last().map(&metric).unwrap_or(f64::NAN)
+}
+
+/// Report a qualitative shape check. Failures are loud but non-fatal at
+/// tiny `--fast` scales (stochastic runs); the default scale is chosen so
+/// these hold.
+pub fn check_shape(name: &str, ok: bool, detail: String) {
+    if ok {
+        println!("[shape OK] {name}: {detail}");
+    } else {
+        println!("[shape !!] {name}: {detail} (rerun without --fast / with more --rounds)");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli::{Args, Spec};
+
+    const SPEC: Spec = Spec {
+        options: &["rounds", "steps", "seed", "eval-batches"],
+        flags: &["fast", "paper-scale"],
+    };
+
+    fn args(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()), &SPEC).unwrap()
+    }
+
+    #[test]
+    fn scale_defaults_and_flags() {
+        let s = Scale::from_args(&args(&[]), 12, 40).unwrap();
+        assert_eq!((s.rounds, s.local_steps), (12, 40));
+        let s = Scale::from_args(&args(&["--fast"]), 12, 40).unwrap();
+        assert_eq!((s.rounds, s.local_steps), (6, 15));
+        let s = Scale::from_args(&args(&["--paper-scale"]), 12, 40).unwrap();
+        assert_eq!(s.local_steps, 500);
+        let s = Scale::from_args(&args(&["--rounds", "3", "--steps", "7"]), 12, 40).unwrap();
+        assert_eq!((s.rounds, s.local_steps), (3, 7));
+    }
+
+    #[test]
+    fn scale_config_shapes() {
+        let s = Scale { rounds: 4, local_steps: 10, eval_batches: 2, seed: 1 };
+        let cfg = s.config("m75a", CorpusKind::C4Iid, 8, 4);
+        cfg.validate().unwrap();
+        assert_eq!(cfg.rounds, 4);
+        assert_eq!(cfg.clients_per_round, 4);
+        assert_eq!(cfg.total_sequential_steps(), 40);
+    }
+}

@@ -1,0 +1,99 @@
+//! Fig 10: the outer-optimizer ablation (§7.8).
+//!
+//! Three algorithms × two local-batch regimes:
+//! * FedAvg (stateless clients)          — the paper's winner
+//! * SGD+N (server-side Nesterov)        — initial speedup, worse final
+//! * FedAvg-KeepOpt (client AdamW kept)  — inflates model norm, diverges
+//!
+//! Shapes asserted: FedAvg reaches the lowest final training cross-entropy,
+//! and KeepOpt/momentum grow the global-model L2 norm faster than FedAvg
+//! (panels c/d of the paper's figure).
+
+use anyhow::Result;
+
+use crate::config::{CorpusKind, OptStatePolicy};
+use crate::exp::common::*;
+use crate::optim::outer::{OuterHyper, OuterOptKind};
+use crate::util::cli::Args;
+
+struct Variant {
+    name: &'static str,
+    outer: OuterOptKind,
+    lr: f64,
+    policy: OptStatePolicy,
+}
+
+const VARIANTS: [Variant; 3] = [
+    Variant { name: "FedAvg", outer: OuterOptKind::FedAvg, lr: 1.0, policy: OptStatePolicy::Stateless },
+    Variant {
+        name: "SGD+N",
+        outer: OuterOptKind::FedMomentum { nesterov: true },
+        lr: 0.7,
+        policy: OptStatePolicy::Stateless,
+    },
+    Variant { name: "FedAvg-KeepOpt", outer: OuterOptKind::FedAvg, lr: 1.0, policy: OptStatePolicy::KeepOpt },
+];
+
+fn run_regime(args: &Args, model: &str, regime: &str) -> Result<Vec<Curve>> {
+    let scale = Scale::from_args(args, 10, 25)?;
+    let mut cache = ModelCache::new()?;
+    let mut curves = Vec::new();
+    for v in &VARIANTS {
+        let mut cfg = scale.config(model, CorpusKind::C4Iid, 8, 8);
+        cfg.outer = v.outer;
+        cfg.outer_hyper = OuterHyper { lr: v.lr, momentum: 0.9, ..OuterHyper::default() };
+        cfg.opt_state = v.policy;
+        cfg.label = format!("{}-{}", v.name, regime);
+        curves.push(run_fed(&mut cache, &cfg)?);
+    }
+    Ok(curves)
+}
+
+pub fn fig10(args: &Args) -> Result<()> {
+    // (a) large local batches: the m125a artifact (device batch 4 here,
+    //     256 in the paper); (b) small local batches: m125a_b2 (batch 2) —
+    //     same model, half the local batch, double the gradient noise.
+    for (regime, model) in [("large-batch", "m125a"), ("small-batch", "m125a_b2")] {
+        println!("\n=== fig10 ({regime}: {model}) ===");
+        let curves = run_regime(args, model, regime)?;
+        let refs: Vec<&Curve> = curves.iter().collect();
+        print_metric_table(
+            &format!("{regime}: client training cross-entropy"),
+            &refs,
+            |r| r.client_loss_mean,
+        );
+        print_metric_table(
+            &format!("{regime}: global model L2 norm"),
+            &refs,
+            |r| r.global_model_norm,
+        );
+        save_curves("fig10", &refs)?;
+
+        let final_ce: Vec<f64> =
+            curves.iter().map(|c| final_metric(c, |r| r.client_loss_mean)).collect();
+        check_shape(
+            &format!("{regime}: FedAvg lowest final cross-entropy"),
+            final_ce[0] <= final_ce[1] + 0.05 && final_ce[0] <= final_ce[2] + 0.05,
+            format!(
+                "FedAvg {:.3} vs SGD+N {:.3} vs KeepOpt {:.3}",
+                final_ce[0], final_ce[1], final_ce[2]
+            ),
+        );
+        let norm_growth: Vec<f64> = curves
+            .iter()
+            .map(|c| {
+                let first = c.log.rounds.first().map(|r| r.global_model_norm).unwrap_or(1.0);
+                final_metric(c, |r| r.global_model_norm) / first
+            })
+            .collect();
+        check_shape(
+            &format!("{regime}: KeepOpt/momentum inflate the model norm"),
+            norm_growth[2] >= norm_growth[0] || norm_growth[1] >= norm_growth[0],
+            format!(
+                "norm growth FedAvg {:.3}× SGD+N {:.3}× KeepOpt {:.3}×",
+                norm_growth[0], norm_growth[1], norm_growth[2]
+            ),
+        );
+    }
+    Ok(())
+}

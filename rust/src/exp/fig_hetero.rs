@@ -1,0 +1,121 @@
+//! Fig 4 / 5 / 12 / 14: the naturally heterogeneous Pile-analogue partition
+//! (8 genres, one per client, §6.3).
+//!
+//! Paper shapes asserted:
+//! * fig4 — server perplexity converges despite heterogeneity; client
+//!   variance is higher than IID early, then collapses (consensus);
+//! * fig5 — centralized activation norms outpace the federated clients',
+//!   whose norms are pulled back at round boundaries (§7.2);
+//! * fig12/fig14 — the fig7/fig8 norm relations persist under
+//!   heterogeneity.
+
+use anyhow::Result;
+
+use crate::config::CorpusKind;
+use crate::exp::common::*;
+use crate::util::cli::Args;
+
+const SIZES: [&str; 2] = ["m75a", "m125a"];
+
+fn hetero_runs(
+    args: &Args,
+    sizes: &[&str],
+) -> Result<(ModelCache, Vec<(String, Curve, Curve)>)> {
+    let scale = Scale::from_args(args, 12, 25)?;
+    let mut cache = ModelCache::new()?;
+    let mut out = Vec::new();
+    for &size in sizes {
+        let cfg = scale.config(size, CorpusKind::PileHetero { j: 1 }, 8, 8);
+        let fed = run_fed(&mut cache, &cfg)?;
+        let cen = run_central(&mut cache, &cfg)?;
+        out.push((size.to_string(), fed, cen));
+    }
+    Ok((cache, out))
+}
+
+/// Fig 4: heterogeneous perplexity, fed vs centralized, 75M/125M analogues.
+pub fn fig4(args: &Args) -> Result<()> {
+    let (_cache, runs) = hetero_runs(args, &SIZES)?;
+    for (size, fed, cen) in &runs {
+        print_metric_table(
+            &format!("{size} (Pile-analog): server val ppl vs centralized test ppl"),
+            &[fed, cen],
+            |r| r.server_ppl,
+        );
+        save_curves("fig4", &[fed, cen])?;
+        // Convergence: final server ppl within 20% of centralized.
+        let f = final_metric(fed, |r| r.server_ppl);
+        let c = final_metric(cen, |r| r.server_ppl);
+        check_shape(
+            &format!("{size} heterogeneous convergence"),
+            f < 1.2 * c,
+            format!("fed {f:.2} vs central {c:.2}"),
+        );
+        // Consensus maintained: despite one-genre-per-client heterogeneity,
+        // client losses stay in a tight relative band (the paper's clients
+        // "reach consensus" and track each other after the transient).
+        let last = fed.log.rounds.last().unwrap();
+        let dispersion = last.client_loss_std / last.client_loss_mean.max(1e-9);
+        check_shape(
+            &format!("{size} consensus maintained"),
+            dispersion < 0.05,
+            format!("final client loss dispersion {:.1}%", 100.0 * dispersion),
+        );
+    }
+    Ok(())
+}
+
+/// Fig 5: output-activation L2 norms — centralized outpaces federated.
+pub fn fig5(args: &Args) -> Result<()> {
+    let (_cache, runs) = hetero_runs(args, &SIZES)?;
+    for (size, fed, cen) in &runs {
+        print_metric_table(
+            &format!("{size} (Pile-analog): output activation L2 norms"),
+            &[fed, cen],
+            |r| r.act_norm_mean,
+        );
+        save_curves("fig5", &[fed, cen])?;
+        let f = final_metric(fed, |r| r.act_norm_mean);
+        let c = final_metric(cen, |r| r.act_norm_mean);
+        // NOTE (recorded deviation, EXPERIMENTS.md): in the paper the
+        // *centralized* activations outpace the federated ones because the
+        // centralized 75M/125M runs destabilize and spike; at analogue
+        // scale our centralized baseline stays stable, so the ordering can
+        // invert. We report both final norms and flag the paper ordering.
+        check_shape(
+            &format!("{size} centralized activations outpace federated (paper ordering)"),
+            c > f,
+            format!("central {c:.1} vs fed {f:.1}"),
+        );
+    }
+    Ok(())
+}
+
+/// Fig 12: fig7's norm triple under heterogeneity.
+pub fn fig12(args: &Args) -> Result<()> {
+    let (_cache, runs) = hetero_runs(args, &SIZES)?;
+    for (size, fed, _cen) in &runs {
+        print_metric_table(
+            &format!("{size} (Pile-analog): global vs client-avg vs client model norms"),
+            &[fed],
+            |r| r.global_model_norm,
+        );
+        crate::exp::fig_norms::print_norm_triple(size, fed);
+        save_curves("fig12", &[fed])?;
+        crate::exp::fig_norms::check_norm_consensus(size, fed);
+    }
+    Ok(())
+}
+
+/// Fig 14: fig8's gradient norms under heterogeneity. The paper's note:
+/// the pseudo-gradient decays *faster* than local step gradients here
+/// (model adapting to heterogeneity, not just LR decay).
+pub fn fig14(args: &Args) -> Result<()> {
+    let (_cache, runs) = hetero_runs(args, &SIZES)?;
+    for (size, fed, _cen) in &runs {
+        crate::exp::fig_norms::print_grad_norms(size, fed);
+        save_curves("fig14", &[fed])?;
+        crate::exp::fig_norms::check_pseudo_grad_decay(size, fed);
+    }
+    Ok(())
+}

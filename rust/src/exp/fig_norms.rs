@@ -1,0 +1,164 @@
+//! Fig 7 / 8 / 11: the norm diagnostics of federated training on IID C4.
+//!
+//! * fig7 — L2 norms of the global model, the client models, and the client
+//!   average: the server first "pulls back" client norms, then global and
+//!   local norms converge together (§7.5).
+//! * fig8 — FedAvg pseudo-gradient norm vs per-step client gradient norms:
+//!   the pseudo-gradient starts much larger and decays to comparable or
+//!   smaller magnitude as clients converge (§7.6).
+//! * fig11 — global model norm vs the server-side Nesterov momentum norm
+//!   (β = 0.7) across the ladder.
+
+use anyhow::Result;
+
+use crate::config::CorpusKind;
+use crate::exp::common::*;
+use crate::metrics::RoundRecord;
+use crate::optim::outer::{OuterHyper, OuterOptKind};
+use crate::util::cli::Args;
+use crate::util::table::Table;
+
+pub(crate) fn print_norm_triple(size: &str, fed: &Curve) {
+    println!("\n{size}: model-norm triple (fig7)");
+    let mut t = Table::new(&["round", "global", "client_avg", "client_mean"]);
+    for r in &fed.log.rounds {
+        t.row(vec![
+            r.round.to_string(),
+            format!("{:.3}", r.global_model_norm),
+            format!("{:.3}", r.client_avg_norm),
+            format!("{:.3}", r.client_model_norm_mean),
+        ]);
+    }
+    t.print();
+}
+
+pub(crate) fn check_norm_consensus(size: &str, fed: &Curve) {
+    // Late in training, global and client-average norms agree closely.
+    if let Some(last) = fed.log.rounds.last() {
+        let rel = (last.global_model_norm - last.client_avg_norm).abs()
+            / last.client_avg_norm.max(1e-9);
+        check_shape(
+            &format!("{size} global/client norm consensus"),
+            rel < 0.05,
+            format!("relative norm gap {rel:.4}"),
+        );
+    }
+}
+
+pub(crate) fn print_grad_norms(size: &str, fed: &Curve) {
+    println!("\n{size}: gradient norms (fig8)");
+    let mut t = Table::new(&["round", "pseudo_grad", "step_grad_mean", "applied_update_mean"]);
+    for r in &fed.log.rounds {
+        t.row(vec![
+            r.round.to_string(),
+            format!("{:.4}", r.pseudo_grad_norm),
+            format!("{:.4}", r.step_grad_norm_mean),
+            format!("{:.4}", r.applied_update_norm_mean),
+        ]);
+    }
+    t.print();
+}
+
+pub(crate) fn check_pseudo_grad_decay(size: &str, fed: &Curve) {
+    let rs = &fed.log.rounds;
+    if rs.len() < 3 {
+        return;
+    }
+    let first = rs[0].pseudo_grad_norm;
+    let last = rs.last().unwrap().pseudo_grad_norm;
+    check_shape(
+        &format!("{size} pseudo-gradient decays"),
+        last < first,
+        format!("{first:.3} → {last:.3}"),
+    );
+    // Starts larger than the applied per-step updates (it summarizes τ
+    // steps), approaches their magnitude at convergence (§7.6).
+    check_shape(
+        &format!("{size} pseudo-grad starts above per-step updates"),
+        rs[0].pseudo_grad_norm > rs[0].applied_update_norm_mean,
+        format!(
+            "round0: pseudo {:.3} vs applied {:.3}",
+            rs[0].pseudo_grad_norm, rs[0].applied_update_norm_mean
+        ),
+    );
+}
+
+fn fed_runs(
+    args: &Args,
+    sizes: &[&str],
+    outer: Option<(OuterOptKind, OuterHyper)>,
+    default_rounds: usize,
+    default_steps: u64,
+) -> Result<Vec<(String, Curve)>> {
+    let scale = Scale::from_args(args, default_rounds, default_steps)?;
+    let mut cache = ModelCache::new()?;
+    let mut out = Vec::new();
+    for &size in sizes {
+        let mut cfg = scale.config(size, CorpusKind::C4Iid, 8, 8);
+        if let Some((kind, hyper)) = outer {
+            cfg.outer = kind;
+            cfg.outer_hyper = hyper;
+        }
+        out.push((size.to_string(), run_fed(&mut cache, &cfg)?));
+    }
+    Ok(out)
+}
+
+/// Fig 7: 75M and 350M analogues, IID C4, full participation.
+pub fn fig7(args: &Args) -> Result<()> {
+    for (size, fed) in fed_runs(args, &["m75a", "m350a"], None, 12, 20)? {
+        print_norm_triple(&size, &fed);
+        save_curves("fig7", &[&fed])?;
+        check_norm_consensus(&size, &fed);
+    }
+    Ok(())
+}
+
+/// Fig 8: pseudo-gradient vs local gradients, 75M and 350M analogues.
+pub fn fig8(args: &Args) -> Result<()> {
+    for (size, fed) in fed_runs(args, &["m75a", "m350a"], None, 12, 20)? {
+        print_grad_norms(&size, &fed);
+        save_curves("fig8", &[&fed])?;
+        check_pseudo_grad_decay(&size, &fed);
+    }
+    Ok(())
+}
+
+/// Fig 11: model norm vs server momentum norm with Nesterov β = 0.7
+/// across four ladder sizes.
+pub fn fig11(args: &Args) -> Result<()> {
+    let hyper = OuterHyper { lr: 0.7, momentum: 0.7, ..OuterHyper::default() };
+    let runs = fed_runs(
+        args,
+        &["m75a", "m125a", "m350a", "m1ba"],
+        Some((OuterOptKind::FedMomentum { nesterov: true }, hyper)),
+        8,
+        15,
+    )?;
+    for (size, fed) in &runs {
+        println!("\n{size}: global model norm vs server momentum norm (fig11)");
+        let mut t = Table::new(&["round", "model_norm", "momentum_norm"]);
+        for r in &fed.log.rounds {
+            t.row(vec![
+                r.round.to_string(),
+                format!("{:.3}", r.global_model_norm),
+                format!("{:.3}", r.momentum_norm),
+            ]);
+        }
+        t.print();
+        save_curves("fig11", &[fed])?;
+        // Momentum tracks a moving average: bounded, nonzero after round 0.
+        let max_m = fed
+            .log
+            .rounds
+            .iter()
+            .map(|r: &RoundRecord| r.momentum_norm)
+            .fold(0.0f64, f64::max);
+        check_shape(
+            &format!("{size} momentum bounded"),
+            max_m > 0.0 && max_m < 10.0 * fed.log.rounds[0].global_model_norm,
+            format!("max momentum norm {max_m:.3}"),
+        );
+    }
+    Ok(())
+}

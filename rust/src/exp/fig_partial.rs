@@ -1,0 +1,80 @@
+//! Fig 6 / 13 / 15: partial participation — sampling K=4 of P=64 clients
+//! (6.25%) matches full participation (§7.4), with the same norm dynamics
+//! (fig13 ↔ fig7, fig15 ↔ fig8).
+
+use anyhow::Result;
+
+use crate::config::CorpusKind;
+use crate::exp::common::*;
+use crate::util::cli::Args;
+
+const SIZES: [&str; 2] = ["m75a", "m125a"];
+
+fn partial_and_full(
+    args: &Args,
+    size: &str,
+    cache: &mut ModelCache,
+) -> Result<(Curve, Curve, Curve)> {
+    let scale = Scale::from_args(args, 10, 20)?;
+    // 6.25% participation: K=4 of P=64.
+    let mut partial_cfg = scale.config(size, CorpusKind::C4Iid, 64, 4);
+    partial_cfg.label = format!("{size}-64x4");
+    let partial = run_fed(cache, &partial_cfg)?;
+    // Full participation baseline: P=K=8.
+    let full_cfg = scale.config(size, CorpusKind::C4Iid, 8, 8);
+    let full = run_fed(cache, &full_cfg)?;
+    let central = run_central(cache, &full_cfg)?;
+    Ok((partial, full, central))
+}
+
+/// Fig 6: perplexity under 6.25% participation vs full participation.
+pub fn fig6(args: &Args) -> Result<()> {
+    let mut cache = ModelCache::new()?;
+    for size in SIZES {
+        let (partial, full, central) = partial_and_full(args, size, &mut cache)?;
+        print_metric_table(
+            &format!("{size}: server val ppl — 4/64 partial vs 8/8 full vs centralized"),
+            &[&partial, &full, &central],
+            |r| r.server_ppl,
+        );
+        save_curves("fig6", &[&partial, &full, &central])?;
+        let p = final_metric(&partial, |r| r.server_ppl);
+        let f = final_metric(&full, |r| r.server_ppl);
+        check_shape(
+            &format!("{size} partial ≈ full"),
+            (p - f).abs() / f < 0.15,
+            format!("partial {p:.2} vs full {f:.2} ({:+.1}%)", 100.0 * (p - f) / f),
+        );
+        // Half the parallel compute per round (4 clients vs 8).
+        println!(
+            "[compute] per-round client-steps: partial {} vs full {}",
+            partial.log.rounds[0].participated as u64 * 40,
+            full.log.rounds[0].participated as u64 * 40
+        );
+    }
+    Ok(())
+}
+
+/// Fig 13: the fig7 norm triple under partial participation.
+pub fn fig13(args: &Args) -> Result<()> {
+    let mut cache = ModelCache::new()?;
+    for size in SIZES {
+        let (partial, _full, _central) = partial_and_full(args, size, &mut cache)?;
+        crate::exp::fig_norms::print_norm_triple(size, &partial);
+        save_curves("fig13", &[&partial])?;
+        crate::exp::fig_norms::check_norm_consensus(size, &partial);
+    }
+    Ok(())
+}
+
+/// Fig 15: the fig8 gradient norms under partial participation.
+pub fn fig15(args: &Args) -> Result<()> {
+    let mut cache = ModelCache::new()?;
+    for size in SIZES {
+        let (partial, _full, _central) = partial_and_full(args, size, &mut cache)?;
+        crate::exp::fig_norms::print_grad_norms(size, &partial);
+        save_curves("fig15", &[&partial])?;
+        crate::exp::fig_norms::check_pseudo_grad_decay(size, &partial);
+    }
+    Ok(())
+}

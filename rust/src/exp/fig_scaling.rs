@@ -1,0 +1,92 @@
+//! Fig 3 + Fig 9: federated vs centralized perplexity across the model
+//! ladder on the IID C4 partition.
+//!
+//! Paper shapes asserted:
+//! * federated ≈ centralized at every size, with the gap (centralized −
+//!   federated advantage) *shrinking or flipping* as the model grows (§7.1);
+//! * consensus (client-loss std / transient spikes) settles faster for
+//!   larger models (§7.3);
+//! * the largest sizes outperform their centralized counterparts (fig9,
+//!   §7.7).
+
+use anyhow::Result;
+
+use crate::config::CorpusKind;
+use crate::exp::common::*;
+use crate::util::cli::Args;
+
+fn run_sizes(exp: &str, sizes: &[&str], p: usize, k: usize, args: &Args,
+             default_rounds: usize, default_steps: u64) -> Result<()> {
+    let scale = Scale::from_args(args, default_rounds, default_steps)?;
+    let mut cache = ModelCache::new()?;
+    let mut gaps: Vec<(String, f64, f64, f64)> = Vec::new();
+    for &size in sizes {
+        let cfg = scale.config(size, CorpusKind::C4Iid, p, k);
+        let fed = run_fed(&mut cache, &cfg)?;
+        let cen = run_central(&mut cache, &cfg)?;
+        print_metric_table(
+            &format!("{size}: server validation perplexity (fed) vs test perplexity (centralized)"),
+            &[&fed, &cen],
+            |r| r.server_ppl,
+        );
+        print_metric_table(
+            &format!("{size}: client train perplexity (fed avg) vs train perplexity (centralized)"),
+            &[&fed, &cen],
+            |r| r.client_ppl_mean,
+        );
+        let f = final_metric(&fed, |r| r.server_ppl);
+        let c = final_metric(&cen, |r| r.server_ppl);
+        // Consensus time: first round where client-loss std drops below
+        // 25% of its initial value (§7.3's transient-phase length).
+        let std0 = fed.log.rounds.first().map(|r| r.client_loss_std).unwrap_or(0.0);
+        let consensus = fed
+            .log
+            .rounds
+            .iter()
+            .position(|r| r.client_loss_std < 0.25 * std0.max(1e-9))
+            .map(|x| x as f64)
+            .unwrap_or(f64::NAN);
+        gaps.push((size.to_string(), f, c, consensus));
+        save_curves(exp, &[&fed, &cen])?;
+    }
+
+    println!("\n{exp} summary (final perplexities):");
+    let mut t = crate::util::table::Table::new(&[
+        "model", "fed ppl", "central ppl", "gap (cen-fed)", "consensus round",
+    ]);
+    for (name, f, c, cons) in &gaps {
+        t.row(vec![
+            name.clone(),
+            format!("{f:.2}"),
+            format!("{c:.2}"),
+            format!("{:+.2}", c - f),
+            format!("{cons:.0}"),
+        ]);
+    }
+    t.print();
+
+    // Shape: relative gap (fed−cen)/cen narrows (or goes negative) with size.
+    if gaps.len() >= 2 {
+        let rel = |f: f64, c: f64| (f - c) / c;
+        let first = rel(gaps[0].1, gaps[0].2);
+        let last = rel(gaps[gaps.len() - 1].1, gaps[gaps.len() - 1].2);
+        check_shape(
+            "gap shrinks with size",
+            last <= first + 0.02,
+            format!("relative gap {:.3} ({}) → {:.3} ({})",
+                first, gaps[0].0, last, gaps[gaps.len() - 1].0),
+        );
+    }
+    Ok(())
+}
+
+/// Fig 3: 75M/125M/350M/1.3B analogues, full participation P=K=8.
+pub fn fig3(args: &Args) -> Result<()> {
+    run_sizes("fig3", &["m75a", "m125a", "m350a", "m1ba"], 8, 8, args, 10, 20)
+}
+
+/// Fig 9: 3B/7B analogues, partial participation K=4 of P=64 (paper
+/// Table 4), expected to *beat* centralized.
+pub fn fig9(args: &Args) -> Result<()> {
+    run_sizes("fig9", &["m3ba", "m7ba"], 64, 4, args, 6, 10)
+}

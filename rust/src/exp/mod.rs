@@ -1,0 +1,80 @@
+//! Experiment drivers: one per table/figure of the paper's evaluation
+//! (DESIGN.md §4 maps each id to workload, modules, and assertions).
+//!
+//! `photon exp <id> [--fast] [--rounds N] [--steps N] [--seed S]`
+//! regenerates the paper artifact: prints the paper-style series/rows,
+//! writes raw CSVs under `results/<id>/`, and checks the qualitative
+//! "shape" claims (who wins, what shrinks, where the crossover sits).
+
+pub mod comm;
+pub mod common;
+pub mod fig_ablation;
+pub mod fig_hetero;
+pub mod fig_norms;
+pub mod fig_partial;
+pub mod fig_scaling;
+pub mod table56;
+pub mod tables;
+
+use anyhow::{bail, Result};
+
+use crate::util::cli::Args;
+
+pub struct ExpInfo {
+    pub id: &'static str,
+    pub what: &'static str,
+}
+
+pub const EXPERIMENTS: [ExpInfo; 19] = [
+    ExpInfo { id: "table1", what: "token/step accounting (Chinchilla vs MPT vs seq/par)" },
+    ExpInfo { id: "table2", what: "architecture ladder (paper + analogues)" },
+    ExpInfo { id: "table3", what: "optimization hyperparameters" },
+    ExpInfo { id: "table4", what: "federated hyperparameters (P, K, D, τ)" },
+    ExpInfo { id: "fig3", what: "fed vs centralized perplexity across sizes (IID C4)" },
+    ExpInfo { id: "fig4", what: "heterogeneous Pile partition perplexity" },
+    ExpInfo { id: "fig5", what: "output-activation L2 norms, fed vs centralized" },
+    ExpInfo { id: "fig6", what: "partial participation 4/64 matches full" },
+    ExpInfo { id: "fig7", what: "global vs client vs client-avg model norms" },
+    ExpInfo { id: "fig8", what: "pseudo-gradient vs local gradient norms" },
+    ExpInfo { id: "fig9", what: "largest models beat centralized" },
+    ExpInfo { id: "fig10", what: "outer-optimizer ablation (FedAvg/SGD+N/KeepOpt)" },
+    ExpInfo { id: "fig11", what: "global model norm vs server momentum norm" },
+    ExpInfo { id: "fig12", what: "fig7 norms under heterogeneity" },
+    ExpInfo { id: "fig13", what: "fig7 norms under partial participation" },
+    ExpInfo { id: "fig14", what: "fig8 norms under heterogeneity" },
+    ExpInfo { id: "fig15", what: "fig8 norms under partial participation" },
+    ExpInfo { id: "table56", what: "in-context learning across the ladder" },
+    ExpInfo { id: "comm", what: "communication: federated vs DDP (headline 1)" },
+];
+
+pub fn run(id: &str, args: &Args) -> Result<()> {
+    match id {
+        "table1" => tables::table1(),
+        "table2" => tables::table2(),
+        "table3" => tables::table3(),
+        "table4" => tables::table4(),
+        "fig3" => fig_scaling::fig3(args),
+        "fig9" => fig_scaling::fig9(args),
+        "fig4" => fig_hetero::fig4(args),
+        "fig5" => fig_hetero::fig5(args),
+        "fig12" => fig_hetero::fig12(args),
+        "fig14" => fig_hetero::fig14(args),
+        "fig6" => fig_partial::fig6(args),
+        "fig13" => fig_partial::fig13(args),
+        "fig15" => fig_partial::fig15(args),
+        "fig7" => fig_norms::fig7(args),
+        "fig8" => fig_norms::fig8(args),
+        "fig11" => fig_norms::fig11(args),
+        "fig10" => fig_ablation::fig10(args),
+        "table56" => table56::table56(args),
+        "comm" => comm::comm(args),
+        "all" => {
+            for e in &EXPERIMENTS {
+                println!("\n################ {} ################", e.id);
+                run(e.id, args)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other:?} (see `photon list`)"),
+    }
+}

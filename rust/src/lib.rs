@@ -1,0 +1,44 @@
+//! # Photon-RS
+//!
+//! A Rust + JAX + Pallas reproduction of **Photon**, the system from
+//! *"The Future of Large Language Model Pre-training is Federated"*
+//! (CS.LG 2024): federated generative pre-training of LLMs across
+//! organizations holding private data and heterogeneous hardware.
+//!
+//! Layering (see DESIGN.md):
+//! * **L3 (this crate)** — the Photon Aggregator / LLM Node / Data Source
+//!   runtime: round orchestration, client sampling, outer optimizers,
+//!   hierarchical island aggregation, streaming synthetic corpora, the
+//!   Photon-Link transport, checkpointing, network cost modeling, and the
+//!   experiment harness that regenerates every table/figure of the paper.
+//! * **L2/L1 (build-time python)** — the MPT-style transformer train step
+//!   (JAX) with a Pallas flash-attention kernel, AOT-lowered to HLO text in
+//!   `artifacts/` and executed here through PJRT (`runtime` module).
+//!
+//! Quick start:
+//! ```no_run
+//! use photon::config::ExperimentConfig;
+//! use photon::coordinator::Federation;
+//!
+//! let cfg = ExperimentConfig::quickstart("m75a");
+//! let mut fed = Federation::new(cfg).unwrap();
+//! let history = fed.run().unwrap();
+//! println!("final server perplexity: {:.2}", history.last().unwrap().server_ppl);
+//! ```
+
+pub mod benchkit;
+pub mod ckpt;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod evalharness;
+pub mod exp;
+pub mod link;
+pub mod metrics;
+pub mod model;
+pub mod netsim;
+pub mod optim;
+pub mod runtime;
+pub mod testkit;
+pub mod util;

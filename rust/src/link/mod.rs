@@ -1,0 +1,185 @@
+//! Photon Link — the communication gateway between the Aggregator and the
+//! LLM Nodes (paper §4.1): model-payload serialization, *lossless*
+//! compression ("We do not prune the model by default and only use lossless
+//! compression"), and integrity checking.
+//!
+//! Wire format (little-endian):
+//!   magic "PHLK" | version u16 | kind u16 | flags u32 (bit0 = deflate)
+//!   | uncompressed_len u64 | checksum u64 (FNV-1a of raw payload) | payload
+//!
+//! The netsim module prices these payloads; the `comm` experiment uses the
+//! measured compressed sizes.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Result};
+
+/// Message kinds exchanged during a round (Algorithm 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MsgKind {
+    /// Server → client: global model broadcast.
+    GlobalModel = 1,
+    /// Client → server: model update (pseudo-gradient source).
+    ClientUpdate = 2,
+    /// Client → server: metrics payload.
+    Metrics = 3,
+}
+
+impl MsgKind {
+    fn from_u16(v: u16) -> Result<MsgKind> {
+        Ok(match v {
+            1 => MsgKind::GlobalModel,
+            2 => MsgKind::ClientUpdate,
+            3 => MsgKind::Metrics,
+            _ => bail!("unknown message kind {v}"),
+        })
+    }
+}
+
+const MAGIC: &[u8; 4] = b"PHLK";
+const VERSION: u16 = 1;
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn f32s_as_bytes(data: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
+}
+
+fn bytes_to_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
+    if bytes.len() % 4 != 0 {
+        bail!("payload length {} not a multiple of 4", bytes.len());
+    }
+    let mut out = vec![0f32; bytes.len() / 4];
+    for (i, ch) in bytes.chunks_exact(4).enumerate() {
+        out[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+    }
+    Ok(out)
+}
+
+/// Encode a model payload into a Photon-Link frame.
+pub fn encode_model(kind: MsgKind, params: &[f32], compress: bool) -> Result<Vec<u8>> {
+    let raw = f32s_as_bytes(params);
+    let checksum = fnv1a(raw);
+    let body: Vec<u8> = if compress {
+        let mut enc =
+            flate2::write::DeflateEncoder::new(Vec::new(), flate2::Compression::fast());
+        enc.write_all(raw)?;
+        enc.finish()?
+    } else {
+        raw.to_vec()
+    };
+    let mut out = Vec::with_capacity(body.len() + 32);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(kind as u16).to_le_bytes());
+    out.extend_from_slice(&(compress as u32).to_le_bytes());
+    out.extend_from_slice(&(raw.len() as u64).to_le_bytes());
+    out.extend_from_slice(&checksum.to_le_bytes());
+    out.extend_from_slice(&body);
+    Ok(out)
+}
+
+/// Decode + verify a Photon-Link frame.
+pub fn decode_model(frame: &[u8]) -> Result<(MsgKind, Vec<f32>)> {
+    if frame.len() < 32 || &frame[..4] != MAGIC {
+        bail!("bad frame header");
+    }
+    let version = u16::from_le_bytes([frame[4], frame[5]]);
+    if version != VERSION {
+        bail!("unsupported link version {version}");
+    }
+    let kind = MsgKind::from_u16(u16::from_le_bytes([frame[6], frame[7]]))?;
+    let flags = u32::from_le_bytes([frame[8], frame[9], frame[10], frame[11]]);
+    let raw_len = u64::from_le_bytes(frame[12..20].try_into().unwrap()) as usize;
+    let checksum = u64::from_le_bytes(frame[20..28].try_into().unwrap());
+    let body = &frame[28..];
+    let raw: Vec<u8> = if flags & 1 != 0 {
+        let mut dec = flate2::read::DeflateDecoder::new(body);
+        let mut out = Vec::with_capacity(raw_len);
+        dec.read_to_end(&mut out)?;
+        out
+    } else {
+        body.to_vec()
+    };
+    if raw.len() != raw_len {
+        bail!("frame declares {raw_len} raw bytes, got {}", raw.len());
+    }
+    if fnv1a(&raw) != checksum {
+        bail!("checksum mismatch — corrupted frame");
+    }
+    Ok((kind, bytes_to_f32s(&raw)?))
+}
+
+/// Bytes one round moves through the link for `k` clients with an
+/// `n_params` model: broadcast down + updates up (uncompressed accounting;
+/// the paper's Table-style comm numbers use raw f32 payloads).
+pub fn round_bytes(n_params: usize, k: usize) -> u64 {
+    2 * (n_params as u64) * 4 * (k as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payload(n: usize) -> Vec<f32> {
+        (0..n).map(|i| (i as f32 * 0.37).sin() * 0.02).collect()
+    }
+
+    #[test]
+    fn roundtrip_uncompressed() {
+        let p = payload(1000);
+        let f = encode_model(MsgKind::GlobalModel, &p, false).unwrap();
+        let (kind, back) = decode_model(&f).unwrap();
+        assert_eq!(kind, MsgKind::GlobalModel);
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn roundtrip_compressed_lossless() {
+        let p = payload(5000);
+        let f = encode_model(MsgKind::ClientUpdate, &p, true).unwrap();
+        let (kind, back) = decode_model(&f).unwrap();
+        assert_eq!(kind, MsgKind::ClientUpdate);
+        assert_eq!(back, p, "compression must be lossless");
+    }
+
+    #[test]
+    fn compression_shrinks_structured_payloads() {
+        // Many repeated values (LN gains etc.) compress well.
+        let p = vec![1.0f32; 10_000];
+        let c = encode_model(MsgKind::GlobalModel, &p, true).unwrap();
+        let u = encode_model(MsgKind::GlobalModel, &p, false).unwrap();
+        assert!(c.len() < u.len() / 4, "{} vs {}", c.len(), u.len());
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let p = payload(256);
+        let mut f = encode_model(MsgKind::GlobalModel, &p, false).unwrap();
+        let last = f.len() - 1;
+        f[last] ^= 0xFF;
+        assert!(decode_model(&f).is_err());
+    }
+
+    #[test]
+    fn header_errors() {
+        assert!(decode_model(b"nope").is_err());
+        let p = payload(4);
+        let mut f = encode_model(MsgKind::Metrics, &p, false).unwrap();
+        f[4] = 9; // version
+        assert!(decode_model(&f).is_err());
+    }
+
+    #[test]
+    fn round_bytes_formula() {
+        // 8 clients, 1M params: 2 * 4MB * 8 = 64 MB.
+        assert_eq!(round_bytes(1_000_000, 8), 64_000_000);
+    }
+}

@@ -1,0 +1,224 @@
+//! `photon` — leader entrypoint + CLI for the Photon-RS federated LLM
+//! pre-training system.
+//!
+//! ```text
+//! photon list                              available experiments & models
+//! photon exp <id> [--fast|--paper-scale] [--rounds N] [--steps N] [--seed S]
+//! photon train --config m350a [--clients P] [--sampled K] [--rounds N]
+//!              [--steps T] [--outer fedavg|sgdn|fedadam|...] [--hetero]
+//!              [--keep-opt] [--dropout p] [--straggler p]
+//!              [--ckpt-dir DIR] [--resume] [--lr-max X] [--fleet-hetero]
+//! photon eval --config m350a               downstream ICL suite on a fresh init
+//! photon info [--config NAME]              artifact inventory
+//! ```
+
+use anyhow::{bail, Result};
+
+use photon::cluster::faults::FaultPlan;
+use photon::cluster::hardware::FleetSpec;
+use photon::config::{CorpusKind, ExperimentConfig, OptStatePolicy};
+use photon::coordinator::Federation;
+use photon::exp;
+use photon::optim::outer::{OuterHyper, OuterOptKind};
+use photon::optim::schedule::CosineSchedule;
+use photon::util::cli::{Args, Spec};
+
+const SPEC: Spec = Spec {
+    options: &[
+        "config", "rounds", "steps", "seed", "clients", "sampled", "outer",
+        "server-lr", "server-momentum", "lr-max", "eval-batches", "dropout",
+        "straggler", "ckpt-dir", "j", "items",
+    ],
+    flags: &[
+        "fast", "paper-scale", "hetero", "mc4", "keep-opt", "resume",
+        "fleet-hetero", "verbose",
+    ],
+};
+
+fn usage() -> &'static str {
+    "usage: photon <list|exp|train|eval|info> [args]\n  try: photon list"
+}
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(raw) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(raw: Vec<String>) -> Result<()> {
+    let args = Args::parse(raw, &SPEC)?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "list" => cmd_list(),
+        "exp" => {
+            let id = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("exp needs an id (see `photon list`)"))?;
+            exp::run(id, &args)
+        }
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{}", usage()),
+    }
+}
+
+fn cmd_list() -> Result<()> {
+    println!("experiments (photon exp <id>):");
+    for e in &exp::EXPERIMENTS {
+        println!("  {:<8} {}", e.id, e.what);
+    }
+    println!("\nmodel configs (photon train --config <name>):");
+    let idx = photon::util::artifacts_dir().join("index.json");
+    match photon::util::json::Json::parse_file(&idx) {
+        Ok(v) => {
+            for c in v.get("configs")?.as_arr()? {
+                let name = c.as_str()?;
+                match photon::model::manifest::Manifest::load(
+                    &photon::util::artifacts_dir().join(name),
+                ) {
+                    Ok(m) => println!(
+                        "  {:<12} {:>9} params  (analogue of {})",
+                        name, m.n_params, m.config.paper_alias
+                    ),
+                    Err(_) => println!("  {name:<12} (manifest unreadable)"),
+                }
+            }
+        }
+        Err(_) => println!("  (no artifacts — run `make artifacts`)"),
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.get_or("config", "m75a");
+    let p = args.get_usize("clients", 8)?;
+    let k = args.get_usize("sampled", p)?;
+    let rounds = args.get_usize("rounds", 10)?;
+    let steps = args.get_u64("steps", 40)?;
+    let seed = args.get_u64("seed", 42)?;
+    let total = rounds as u64 * steps;
+
+    let corpus = if args.flag("hetero") {
+        CorpusKind::PileHetero { j: args.get_usize("j", 1)? }
+    } else if args.flag("mc4") {
+        CorpusKind::Mc4 { n_langs: 4 }
+    } else {
+        CorpusKind::C4Iid
+    };
+
+    let cfg = ExperimentConfig {
+        label: format!("train-{model}"),
+        model: model.clone(),
+        corpus,
+        n_clients: p,
+        clients_per_round: k,
+        rounds,
+        local_steps: steps,
+        seed,
+        outer: OuterOptKind::parse(&args.get_or("outer", "fedavg"))?,
+        outer_hyper: OuterHyper {
+            lr: args.get_f64("server-lr", 1.0)?,
+            momentum: args.get_f64("server-momentum", 0.9)?,
+            ..OuterHyper::default()
+        },
+        schedule: CosineSchedule::new(
+            args.get_f64("lr-max", 3e-3)?,
+            0.1,
+            total.max(2),
+            (total / 20).min(100),
+        ),
+        opt_state: if args.flag("keep-opt") {
+            OptStatePolicy::KeepOpt
+        } else {
+            OptStatePolicy::Stateless
+        },
+        eval_batches: args.get_usize("eval-batches", 4)?,
+        faults: FaultPlan::new(
+            args.get_f64("dropout", 0.0)?,
+            args.get_f64("straggler", 0.0)?,
+            seed,
+        ),
+        fleet: if args.flag("fleet-hetero") {
+            Some(FleetSpec::heterogeneous(p))
+        } else {
+            None
+        },
+    };
+
+    let mut fed = Federation::new(cfg)?;
+    if let Some(dir) = args.get("ckpt-dir") {
+        let dir = std::path::PathBuf::from(dir);
+        fed.ckpt_dir = Some(dir.clone());
+        if args.flag("resume") && fed.try_resume_from(&dir)? {
+            println!("[resume] continuing from round {}", fed.next_round);
+        }
+    }
+
+    println!(
+        "training {model}: P={p} K={k} rounds={rounds} τ={steps} outer={:?}",
+        fed.cfg.outer
+    );
+    while fed.next_round < fed.cfg.rounds {
+        let r = fed.run_round()?;
+        println!(
+            "round {:>3}  server_ppl {:>9.3}  client_loss {:>7.4} ±{:<7.4} \
+             pseudo|Δ| {:>8.4}  participated {}/{}  {:.2}s",
+            r.round, r.server_ppl, r.client_loss_mean, r.client_loss_std,
+            r.pseudo_grad_norm, r.participated, fed.cfg.clients_per_round,
+            r.wall_secs,
+        );
+    }
+    let out = photon::util::results_dir("train").join(format!("{model}.csv"));
+    fed.log.write_csv(&out)?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = args.get_or("config", "m75a");
+    let n_items = args.get_usize("items", 30)?;
+    let rt = photon::runtime::Runtime::cpu()?;
+    let m = rt.load_model(&model)?;
+    let params = photon::model::init::init_params(&m.manifest, args.get_u64("seed", 42)?);
+    let corpus =
+        photon::data::corpus::SyntheticCorpus::pile(m.manifest.config.vocab);
+    let fams = photon::evalharness::TaskFamily::suite(&corpus, m.manifest.config.seq_len);
+    println!("ICL suite on {model} (fresh init — expect chance-level):");
+    for f in &fams {
+        let acc = photon::evalharness::task_accuracy(&m, &params, &corpus, f, n_items, 7)?;
+        println!("  {:<24} {:.3}  (chance {:.3})", f.name, acc, 1.0 / f.n_options as f64);
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    match args.get("config") {
+        None => cmd_list(),
+        Some(name) => {
+            let m = photon::model::manifest::Manifest::load(
+                &photon::util::artifacts_dir().join(name),
+            )?;
+            println!("config {name} (analogue of {})", m.config.paper_alias);
+            println!(
+                "  vocab {}  d_model {}  heads {}  blocks {}  seq {}  batch {}  attn {}",
+                m.config.vocab, m.config.d_model, m.config.n_heads,
+                m.config.n_blocks, m.config.seq_len, m.config.batch_size,
+                m.config.attn_impl
+            );
+            println!("  {} params ({} tensors, {} payload)",
+                m.n_params, m.params.len(), m.payload_bytes());
+            for p in &m.params {
+                println!("    {:<16} {:?} @ {}", p.name, p.shape, p.offset);
+            }
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! Federated metrics (paper §6.2 experimental tools): per-round records of
+//! everything the paper's figures plot — server/client perplexities, model
+//! and pseudo-gradient L2 norms, activation norms, momentum norms, pairwise
+//! client-model cosine similarity — plus CSV emission for the figure
+//! drivers.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::model::vecmath;
+use crate::util::csv::CsvWriter;
+
+/// Everything measured in one federated round (or one centralized
+/// round-equivalent of τ steps).
+#[derive(Clone, Debug, Default)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Server model perplexity on the centralized validation set.
+    pub server_ppl: f64,
+    pub server_nll: f64,
+    /// Mean/std of client *training* loss over the round (paper plots the
+    /// averaged client train perplexity).
+    pub client_loss_mean: f64,
+    pub client_loss_std: f64,
+    pub client_ppl_mean: f64,
+    /// L2 norms (fig7/fig8/fig11/fig12..15).
+    pub global_model_norm: f64,
+    pub client_model_norm_mean: f64,
+    pub client_avg_norm: f64,
+    pub pseudo_grad_norm: f64,
+    pub step_grad_norm_mean: f64,
+    pub applied_update_norm_mean: f64,
+    pub act_norm_mean: f64,
+    pub momentum_norm: f64,
+    /// Mean pairwise cosine similarity between client deltas (consensus
+    /// diagnostic, §7.3).
+    pub client_cosine_mean: f64,
+    /// Clients that actually contributed (after faults).
+    pub participated: usize,
+    /// Photon-Link bytes moved this round (downlink + uplink).
+    pub comm_bytes: u64,
+    pub wall_secs: f64,
+}
+
+/// Rolling per-round log with CSV export.
+#[derive(Default)]
+pub struct MetricsLog {
+    pub rounds: Vec<RoundRecord>,
+}
+
+pub const CSV_HEADER: [&str; 18] = [
+    "round", "server_ppl", "server_nll", "client_loss_mean", "client_loss_std",
+    "client_ppl_mean", "global_model_norm", "client_model_norm_mean",
+    "client_avg_norm", "pseudo_grad_norm", "step_grad_norm_mean",
+    "applied_update_norm_mean", "act_norm_mean", "momentum_norm",
+    "client_cosine_mean", "participated", "comm_bytes", "wall_secs",
+];
+
+impl MetricsLog {
+    pub fn push(&mut self, r: RoundRecord) {
+        self.rounds.push(r);
+    }
+
+    pub fn last(&self) -> Option<&RoundRecord> {
+        self.rounds.last()
+    }
+
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        let mut w = CsvWriter::create(path, &CSV_HEADER)?;
+        for r in &self.rounds {
+            w.row(&[
+                r.round as f64, r.server_ppl, r.server_nll, r.client_loss_mean,
+                r.client_loss_std, r.client_ppl_mean, r.global_model_norm,
+                r.client_model_norm_mean, r.client_avg_norm, r.pseudo_grad_norm,
+                r.step_grad_norm_mean, r.applied_update_norm_mean,
+                r.act_norm_mean, r.momentum_norm, r.client_cosine_mean,
+                r.participated as f64, r.comm_bytes as f64, r.wall_secs,
+            ])?;
+        }
+        w.finish()
+    }
+}
+
+/// Mean + population std of a slice.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+    (mean, var.sqrt())
+}
+
+/// Mean pairwise cosine similarity among client delta vectors (the paper's
+/// federated consensus metric). O(K²·N) — K is small (≤ 64).
+pub fn mean_pairwise_cosine(deltas: &[Vec<f32>]) -> f64 {
+    if deltas.len() < 2 {
+        return 1.0;
+    }
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for i in 0..deltas.len() {
+        for j in (i + 1)..deltas.len() {
+            sum += vecmath::cosine(&deltas[i], &deltas[j]);
+            n += 1;
+        }
+    }
+    sum / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m, 2.5);
+        assert!((s - 1.118033988749895).abs() < 1e-12);
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn pairwise_cosine() {
+        let a = vec![1.0f32, 0.0];
+        let b = vec![1.0f32, 0.0];
+        let c = vec![0.0f32, 1.0];
+        assert!((mean_pairwise_cosine(&[a.clone(), b.clone()]) - 1.0).abs() < 1e-9);
+        // (1 + 0 + 0) / 3 pairs.
+        let m = mean_pairwise_cosine(&[a, b, c]);
+        assert!((m - 1.0 / 3.0).abs() < 1e-9);
+        assert_eq!(mean_pairwise_cosine(&[vec![1.0]]), 1.0);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("photon_m_{}", std::process::id()));
+        let mut log = MetricsLog::default();
+        log.push(RoundRecord { round: 1, server_ppl: 42.5, ..Default::default() });
+        log.push(RoundRecord { round: 2, server_ppl: 40.0, ..Default::default() });
+        let p = dir.join("log.csv");
+        log.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.lines().nth(1).unwrap().starts_with("1,42.5"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,245 @@
+//! `manifest.json` — the contract between the python AOT pipeline and this
+//! coordinator. Parsed once per model config at startup; everything the
+//! coordinator knows about model structure comes from here.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Per-tensor initialization spec (mirrors python `model.layout`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum InitSpec {
+    Normal { std: f32 },
+    Ones,
+}
+
+/// One tensor's slice of the flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub init: InitSpec,
+}
+
+/// Shape+dtype of one step input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSig {
+    pub name: String,
+    pub dtype: String, // "f32" | "i32"
+    pub shape: Vec<usize>,
+}
+
+/// I/O signature + file of one AOT-lowered step function.
+#[derive(Clone, Debug)]
+pub struct StepSig {
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// Architecture + local-training hyperparameters (paper Tables 2/3).
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub paper_alias: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_blocks: usize,
+    pub seq_len: usize,
+    pub batch_size: usize,
+    pub attn_impl: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub config: ModelConfig,
+    pub n_params: usize,
+    pub params: Vec<ParamEntry>,
+    /// Local steps fused per `train_chunk` dispatch (perf pass).
+    pub train_chunk_size: usize,
+    pub train_step: StepSig,
+    pub train_chunk: StepSig,
+    pub eval_step: StepSig,
+    pub score_step: StepSig,
+}
+
+fn tensor_sigs(v: &Json) -> Result<Vec<TensorSig>> {
+    v.as_arr()?
+        .iter()
+        .map(|t| {
+            Ok(TensorSig {
+                name: t.get("name")?.as_str()?.to_string(),
+                dtype: t.get("dtype")?.as_str()?.to_string(),
+                shape: t
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_>>()?,
+            })
+        })
+        .collect()
+}
+
+fn step_sig(v: &Json) -> Result<StepSig> {
+    Ok(StepSig {
+        file: v.get("file")?.as_str()?.to_string(),
+        inputs: tensor_sigs(v.get("inputs")?)?,
+        outputs: tensor_sigs(v.get("outputs")?)?,
+    })
+}
+
+impl Manifest {
+    pub fn parse(json: &Json) -> Result<Manifest> {
+        let schema = json.get("schema_version")?.as_usize()?;
+        if schema != 1 {
+            bail!("unsupported manifest schema_version {schema}");
+        }
+        let c = json.get("config")?;
+        let config = ModelConfig {
+            name: c.get("name")?.as_str()?.to_string(),
+            paper_alias: c.get("paper_alias")?.as_str()?.to_string(),
+            vocab: c.get("vocab")?.as_usize()?,
+            d_model: c.get("d_model")?.as_usize()?,
+            n_heads: c.get("n_heads")?.as_usize()?,
+            n_blocks: c.get("n_blocks")?.as_usize()?,
+            seq_len: c.get("seq_len")?.as_usize()?,
+            batch_size: c.get("batch_size")?.as_usize()?,
+            attn_impl: c.get("attn_impl")?.as_str()?.to_string(),
+        };
+        let n_params = json.get("n_params")?.as_usize()?;
+        let mut params = Vec::new();
+        for p in json.get("params")?.as_arr()? {
+            let init = p.get("init")?;
+            let kind = init.get("kind")?.as_str()?;
+            let spec = match kind {
+                "normal" => InitSpec::Normal { std: init.get("std")?.as_f64()? as f32 },
+                "ones" => InitSpec::Ones,
+                other => bail!("unknown init kind {other:?}"),
+            };
+            params.push(ParamEntry {
+                name: p.get("name")?.as_str()?.to_string(),
+                shape: p
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_>>()?,
+                offset: p.get("offset")?.as_usize()?,
+                size: p.get("size")?.as_usize()?,
+                init: spec,
+            });
+        }
+        // Validate contiguity — the flat-vector contract.
+        let mut off = 0;
+        for p in &params {
+            if p.offset != off {
+                bail!("non-contiguous layout at tensor {}", p.name);
+            }
+            let prod: usize = p.shape.iter().product();
+            if prod != p.size {
+                bail!("size/shape mismatch at tensor {}", p.name);
+            }
+            off += p.size;
+        }
+        if off != n_params {
+            bail!("layout covers {off} params, manifest says {n_params}");
+        }
+        let steps = json.get("steps")?;
+        Ok(Manifest {
+            config,
+            n_params,
+            params,
+            train_chunk_size: json.get("train_chunk_size")?.as_usize()?,
+            train_step: step_sig(steps.get("train_step")?)?,
+            train_chunk: step_sig(steps.get("train_chunk")?)?,
+            eval_step: step_sig(steps.get("eval_step")?)?,
+            score_step: step_sig(steps.get("score_step")?)?,
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let json = Json::parse_file(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        Manifest::parse(&json)
+    }
+
+    /// Tensor entry by name (per-layer monitoring).
+    pub fn tensor(&self, name: &str) -> Option<&ParamEntry> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
+    /// Bytes of one full model payload (f32).
+    pub fn payload_bytes(&self) -> usize {
+        self.n_params * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    pub(crate) fn toy_manifest_json() -> String {
+        r#"{
+          "schema_version": 1,
+          "config": {"name":"toy","paper_alias":"75M","vocab":16,"d_model":4,
+                     "n_heads":2,"n_blocks":1,"seq_len":8,"batch_size":2,
+                     "attn_impl":"jnp","head_dim":2,"mlp_dim":16,
+                     "beta1":0.9,"beta2":0.95,"eps":1e-8,
+                     "weight_decay":0.1,"clip_norm":1.0},
+          "n_params": 72,
+          "train_chunk_size": 8,
+          "params": [
+            {"name":"wte","shape":[16,4],"offset":0,"size":64,
+             "init":{"kind":"normal","std":0.02}},
+            {"name":"ln_f_g","shape":[8],"offset":64,"size":8,
+             "init":{"kind":"ones"}}
+          ],
+          "steps": {
+            "train_step": {"file":"train_step.hlo.txt",
+              "inputs":[{"name":"params","dtype":"f32","shape":[72]}],
+              "outputs":[{"name":"loss","dtype":"f32","shape":[]}]},
+            "train_chunk": {"file":"train_chunk.hlo.txt","inputs":[],"outputs":[]},
+            "eval_step": {"file":"eval_step.hlo.txt","inputs":[],"outputs":[]},
+            "score_step": {"file":"score_step.hlo.txt","inputs":[],"outputs":[]}
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_toy_manifest() {
+        let m = Manifest::parse(&Json::parse(&toy_manifest_json()).unwrap()).unwrap();
+        assert_eq!(m.config.name, "toy");
+        assert_eq!(m.n_params, 72);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.tensor("wte").unwrap().shape, vec![16, 4]);
+        assert_eq!(m.tensor("ln_f_g").unwrap().init, InitSpec::Ones);
+        assert_eq!(m.train_step.inputs[0].shape, vec![72]);
+        assert_eq!(m.payload_bytes(), 288);
+    }
+
+    #[test]
+    fn rejects_gap_in_layout() {
+        let bad = toy_manifest_json().replace("\"offset\":64", "\"offset\":65");
+        assert!(Manifest::parse(&Json::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_total() {
+        let bad = toy_manifest_json().replace("\"n_params\": 72", "\"n_params\": 80");
+        assert!(Manifest::parse(&Json::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_schema() {
+        let bad = toy_manifest_json().replace("\"schema_version\": 1", "\"schema_version\": 9");
+        assert!(Manifest::parse(&Json::parse(&bad).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Model-state substrate: the manifest (flat-parameter layout exported by
+//! the python AOT pipeline), deterministic initialization, and the vector
+//! math the aggregation path is built from.
+//!
+//! The entire model lives in one flat `Vec<f32>`; `Manifest::params` gives
+//! per-tensor views for the paper's per-layer monitoring (§6.2).
+
+pub mod init;
+pub mod manifest;
+pub mod vecmath;
+
+pub use init::init_params;
+pub use manifest::{Manifest, ParamEntry, StepSig, TensorSig};
+pub use vecmath::*;

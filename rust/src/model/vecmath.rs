@@ -1,0 +1,184 @@
+//! Flat-vector math for the aggregation path.
+//!
+//! These loops ARE the Photon Aggregator's hot path (outer optimizers run on
+//! the full parameter vector every round), so they are written allocation-
+//! free over slices; `bench_aggregate` tracks their throughput.
+
+/// L2 norm.
+pub fn l2_norm(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+}
+
+/// Euclidean distance between two vectors.
+pub fn l2_dist(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Cosine similarity (paper §6.2: federated metric between client models).
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut dot = 0.0f64;
+    let mut na = 0.0f64;
+    let mut nb = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        dot += x as f64 * y as f64;
+        na += x as f64 * x as f64;
+        nb += y as f64 * y as f64;
+    }
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot / (na.sqrt() * nb.sqrt())
+}
+
+/// `out = mean(rows)` — the FedAvg client-model average. `rows` must be
+/// non-empty and equal length.
+pub fn mean_into(rows: &[&[f32]], out: &mut [f32]) {
+    assert!(!rows.is_empty());
+    let inv = 1.0 / rows.len() as f64;
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    for row in rows {
+        debug_assert_eq!(row.len(), out.len());
+        for (o, &v) in out.iter_mut().zip(*row) {
+            *o += v;
+        }
+    }
+    for o in out.iter_mut() {
+        *o = (*o as f64 * inv) as f32;
+    }
+}
+
+/// Weighted mean with weights summing to anything positive (normalized
+/// internally) — FedAvg with per-client sample counts.
+pub fn weighted_mean_into(rows: &[&[f32]], weights: &[f64], out: &mut [f32]) {
+    assert_eq!(rows.len(), weights.len());
+    assert!(!rows.is_empty());
+    let total: f64 = weights.iter().sum();
+    assert!(total > 0.0, "weights must sum to a positive value");
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    let mut acc: Vec<f64> = vec![0.0; out.len()];
+    for (row, &w) in rows.iter().zip(weights) {
+        debug_assert_eq!(row.len(), out.len());
+        let wn = w / total;
+        for (a, &v) in acc.iter_mut().zip(*row) {
+            *a += wn * v as f64;
+        }
+    }
+    for (o, a) in out.iter_mut().zip(acc) {
+        *o = a as f32;
+    }
+}
+
+/// `out = a - b` (pseudo-gradient: Δ = θ_global − θ_client).
+pub fn sub_into(a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = x - y;
+    }
+}
+
+/// `y += alpha * x`.
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += alpha * xv;
+    }
+}
+
+/// `y = alpha * y` in place.
+pub fn scale(alpha: f32, y: &mut [f32]) {
+    for yv in y.iter_mut() {
+        *yv *= alpha;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norms_and_dist() {
+        assert_eq!(l2_norm(&[3.0, 4.0]), 5.0);
+        assert_eq!(l2_dist(&[1.0, 1.0], &[4.0, 5.0]), 5.0);
+    }
+
+    #[test]
+    fn cosine_basic() {
+        assert!((cosine(&[1.0, 0.0], &[2.0, 0.0]) - 1.0).abs() < 1e-12);
+        assert!(cosine(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-12);
+        assert!((cosine(&[1.0, 0.0], &[-3.0, 0.0]) + 1.0).abs() < 1e-12);
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn mean_is_elementwise() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 6.0];
+        let mut out = [0.0f32; 2];
+        mean_into(&[&a, &b], &mut out);
+        assert_eq!(out, [2.0, 4.0]);
+    }
+
+    #[test]
+    fn weighted_mean_normalizes() {
+        let a = [0.0f32, 0.0];
+        let b = [4.0f32, 8.0];
+        let mut out = [0.0f32; 2];
+        weighted_mean_into(&[&a, &b], &[1.0, 3.0], &mut out);
+        assert_eq!(out, [3.0, 6.0]);
+        // Scaling all weights is a no-op.
+        let mut out2 = [0.0f32; 2];
+        weighted_mean_into(&[&a, &b], &[10.0, 30.0], &mut out2);
+        assert_eq!(out, out2);
+    }
+
+    #[test]
+    fn equal_weights_match_mean() {
+        let a = [1.0f32, -2.0, 0.5];
+        let b = [0.0f32, 4.0, 1.5];
+        let c = [2.0f32, 1.0, -1.0];
+        let rows: Vec<&[f32]> = vec![&a, &b, &c];
+        let mut m1 = [0.0f32; 3];
+        let mut m2 = [0.0f32; 3];
+        mean_into(&rows, &mut m1);
+        weighted_mean_into(&rows, &[1.0, 1.0, 1.0], &mut m2);
+        for (x, y) in m1.iter().zip(&m2) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sub_axpy_scale() {
+        let a = [5.0f32, 7.0];
+        let b = [2.0f32, 3.0];
+        let mut d = [0.0f32; 2];
+        sub_into(&a, &b, &mut d);
+        assert_eq!(d, [3.0, 4.0]);
+        let mut y = [1.0f32, 1.0];
+        axpy(2.0, &d, &mut y);
+        assert_eq!(y, [7.0, 9.0]);
+        scale(0.5, &mut y);
+        assert_eq!(y, [3.5, 4.5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn weighted_mean_rejects_zero_weights() {
+        let a = [1.0f32];
+        let mut out = [0.0f32];
+        weighted_mean_into(&[&a], &[0.0], &mut out);
+    }
+}

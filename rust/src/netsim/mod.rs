@@ -1,0 +1,143 @@
+//! Network/communication cost model (paper §4.3 + headline claim 1:
+//! federated pre-training needs orders-of-magnitude less communication than
+//! data-parallel training).
+//!
+//! Analytic, deterministic model:
+//! * **DDP / Ring-AllReduce** (the centralized baseline): every optimizer
+//!   step moves `2·(n−1)/n · payload` per worker over the slowest link and
+//!   costs one allreduce latency round (§2.1.1).
+//! * **Federated round** (Photon): per sampled client, one model broadcast
+//!   down + one update up per τ local steps (§4.3).
+//!
+//! `comm_ratio` — how many times more bytes DDP moves than FL for the same
+//! number of sequential steps — is ≈ τ·(n−1)/n, i.e. ~500× at the paper's
+//! τ = 500. The `comm` experiment sweeps the ladder and bandwidths.
+
+/// A network link.
+#[derive(Clone, Copy, Debug)]
+pub struct Link {
+    /// Bandwidth in gigaBYTES per second.
+    pub gbps: f64,
+    /// One-way latency in seconds.
+    pub latency_s: f64,
+}
+
+pub const DATACENTER: Link = Link { gbps: 25.0, latency_s: 10e-6 };
+pub const CLOUD_WAN: Link = Link { gbps: 0.125, latency_s: 50e-3 }; // 1 Gbit/s
+pub const BROADBAND: Link = Link { gbps: 0.0125, latency_s: 30e-3 }; // 100 Mbit/s
+
+impl Link {
+    /// Seconds to move `bytes` once over this link.
+    pub fn transfer_secs(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / (self.gbps * 1e9)
+    }
+}
+
+/// Bytes per worker per optimizer step under Ring-AllReduce over `n`
+/// workers with a `payload` of gradient bytes (2(n−1)/n · payload).
+pub fn ring_allreduce_bytes_per_step(payload: u64, n_workers: usize) -> u64 {
+    if n_workers <= 1 {
+        return 0;
+    }
+    (2 * payload * (n_workers as u64 - 1)) / n_workers as u64
+}
+
+/// Total DDP bytes per worker to run `steps` sequential steps.
+pub fn ddp_total_bytes(payload: u64, n_workers: usize, steps: u64) -> u64 {
+    ring_allreduce_bytes_per_step(payload, n_workers) * steps
+}
+
+/// Total federated bytes per participating client for `rounds` rounds
+/// (down + up each round).
+pub fn fed_total_bytes(payload: u64, rounds: u64) -> u64 {
+    2 * payload * rounds
+}
+
+/// Communication ratio DDP/FL for the same sequential-step count
+/// (`steps = rounds·τ`), per worker.
+pub fn comm_ratio(payload: u64, n_workers: usize, rounds: u64, tau: u64) -> f64 {
+    let ddp = ddp_total_bytes(payload, n_workers, rounds * tau) as f64;
+    let fed = fed_total_bytes(payload, rounds) as f64;
+    ddp / fed
+}
+
+/// Wall-clock of one federated round for one client:
+/// broadcast + τ·compute + upload (compute given per-step seconds).
+pub fn fed_round_secs(payload: u64, link: &Link, tau: u64, step_secs: f64) -> f64 {
+    link.transfer_secs(payload) + tau as f64 * step_secs + link.transfer_secs(payload)
+}
+
+/// Wall-clock of τ DDP steps: each step pays compute + allreduce over the
+/// slowest link.
+pub fn ddp_steps_secs(
+    payload: u64,
+    n_workers: usize,
+    link: &Link,
+    tau: u64,
+    step_secs: f64,
+) -> f64 {
+    let per_step = step_secs + link.transfer_secs(ring_allreduce_bytes_per_step(payload, n_workers));
+    tau as f64 * per_step
+}
+
+/// Communication fraction of a federated round's wall-clock (§4.3 argues
+/// this is negligible for compute-intensive LLM training).
+pub fn fed_comm_fraction(payload: u64, link: &Link, tau: u64, step_secs: f64) -> f64 {
+    let comm = 2.0 * link.transfer_secs(payload);
+    comm / fed_round_secs(payload, link, tau, step_secs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allreduce_formula() {
+        // 8 workers, 1 GB payload: 2*7/8 GB = 1.75 GB per step.
+        assert_eq!(
+            ring_allreduce_bytes_per_step(1_000_000_000, 8),
+            1_750_000_000
+        );
+        assert_eq!(ring_allreduce_bytes_per_step(1_000_000_000, 1), 0);
+    }
+
+    #[test]
+    fn comm_ratio_is_about_tau() {
+        // The headline: ratio ≈ τ·(n−1)/n.
+        let r = comm_ratio(4_000_000, 8, 10, 500);
+        assert!((r - 500.0 * 7.0 / 8.0).abs() < 1e-6, "{r}");
+        // At paper τ=500 that is ~437×; "orders of magnitude".
+        assert!(r > 100.0);
+    }
+
+    #[test]
+    fn transfer_time_includes_latency() {
+        let t = CLOUD_WAN.transfer_secs(125_000_000); // 1 Gbit/s, 125 MB → 1 s
+        assert!((t - 1.05).abs() < 0.01, "{t}");
+    }
+
+    #[test]
+    fn fed_round_dominated_by_compute_when_tau_large() {
+        // 28 MB model (7M params), WAN, τ=500, 1 s/step.
+        let frac = fed_comm_fraction(28_000_000, &CLOUD_WAN, 500, 1.0);
+        assert!(frac < 0.01, "comm fraction {frac} should be negligible");
+    }
+
+    #[test]
+    fn ddp_slower_than_fed_on_wan() {
+        let payload = 28_000_000u64;
+        let fed = fed_round_secs(payload, &CLOUD_WAN, 500, 0.1);
+        let ddp = ddp_steps_secs(payload, 8, &CLOUD_WAN, 500, 0.1);
+        assert!(ddp > 2.0 * fed, "ddp {ddp} vs fed {fed}");
+    }
+
+    #[test]
+    fn ddp_fine_in_datacenter() {
+        // §4.3: the datacenter interconnect makes DDP's per-step allreduce
+        // cheap relative to compute.
+        let payload = 28_000_000u64;
+        let per_step_comm =
+            DATACENTER.transfer_secs(ring_allreduce_bytes_per_step(payload, 8));
+        assert!(per_step_comm < 0.01);
+    }
+}

@@ -1,0 +1,8 @@
+//! Optimization substrate: the server-side (outer) federated optimizers and
+//! the cosine learning-rate schedule driving the clients' local AdamW.
+
+pub mod outer;
+pub mod schedule;
+
+pub use outer::{OuterOpt, OuterOptKind};
+pub use schedule::CosineSchedule;

@@ -1,0 +1,297 @@
+//! Server-side (outer) federated optimizers — the aggregation step of
+//! Algorithm 1 (L.8–9): turn the averaged client *pseudo-gradient*
+//! Δ_t = θ_t − mean_k(θ_k) into a global-model update.
+//!
+//! Implemented family (paper §7.8 + FedOPT [77]):
+//! * `FedAvg`        — θ ← θ − η_s·Δ (η_s = 1 recovers plain model averaging;
+//!                      the paper's preferred, most robust choice)
+//! * `FedMomentum`   — heavy-ball / Nesterov server momentum (FedMom [47],
+//!                      SGD+N in fig10; the paper uses η_s, μ_s from Table 3)
+//! * `FedAdam` / `FedYogi` / `FedAdagrad` — adaptive FedOPT variants [77].
+//!
+//! All operate in-place on the flat f32 parameter vector with f64
+//! accumulators where stability matters; closed-form behaviour is pinned by
+//! unit tests and property tests (rust/tests/props.rs).
+
+use anyhow::{bail, Result};
+
+/// Which outer optimizer to run (parsed from CLI/config).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OuterOptKind {
+    FedAvg,
+    FedMomentum { nesterov: bool },
+    FedAdam,
+    FedYogi,
+    FedAdagrad,
+}
+
+impl OuterOptKind {
+    pub fn parse(name: &str) -> Result<OuterOptKind> {
+        Ok(match name {
+            "fedavg" => OuterOptKind::FedAvg,
+            "fedmom" | "sgdm" => OuterOptKind::FedMomentum { nesterov: false },
+            "fednesterov" | "sgdn" => OuterOptKind::FedMomentum { nesterov: true },
+            "fedadam" => OuterOptKind::FedAdam,
+            "fedyogi" => OuterOptKind::FedYogi,
+            "fedadagrad" => OuterOptKind::FedAdagrad,
+            other => bail!("unknown outer optimizer {other:?}"),
+        })
+    }
+}
+
+/// Hyperparameters for the outer step.
+#[derive(Clone, Copy, Debug)]
+pub struct OuterHyper {
+    /// Server learning rate η_s (paper Table 3; 1.0 for plain FedAvg).
+    pub lr: f64,
+    /// Server momentum μ_s.
+    pub momentum: f64,
+    /// Adam/Yogi betas + eps/tau (FedOPT defaults).
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+}
+
+impl Default for OuterHyper {
+    fn default() -> Self {
+        OuterHyper { lr: 1.0, momentum: 0.9, beta1: 0.9, beta2: 0.99, eps: 1e-3 }
+    }
+}
+
+/// Stateful outer optimizer.
+pub struct OuterOpt {
+    pub kind: OuterOptKind,
+    pub hyper: OuterHyper,
+    /// Momentum / first-moment buffer (f64 for drift-free accumulation).
+    pub buf_m: Vec<f64>,
+    /// Second-moment buffer (Adam/Yogi/Adagrad).
+    pub buf_v: Vec<f64>,
+    pub t: u64,
+}
+
+impl OuterOpt {
+    pub fn new(kind: OuterOptKind, hyper: OuterHyper, n_params: usize) -> OuterOpt {
+        let needs_m = !matches!(kind, OuterOptKind::FedAvg);
+        let needs_v = matches!(
+            kind,
+            OuterOptKind::FedAdam | OuterOptKind::FedYogi | OuterOptKind::FedAdagrad
+        );
+        OuterOpt {
+            kind,
+            hyper,
+            buf_m: if needs_m { vec![0.0; n_params] } else { Vec::new() },
+            buf_v: if needs_v { vec![0.0; n_params] } else { Vec::new() },
+            t: 0,
+        }
+    }
+
+    /// Apply one outer step. `pseudo_grad[i] = θ_global[i] − avg_clients[i]`
+    /// (so a *descent* step is θ ← θ − lr·direction).
+    pub fn step(&mut self, global: &mut [f32], pseudo_grad: &[f32]) {
+        assert_eq!(global.len(), pseudo_grad.len());
+        self.t += 1;
+        let h = self.hyper;
+        match self.kind {
+            OuterOptKind::FedAvg => {
+                for (g, &d) in global.iter_mut().zip(pseudo_grad) {
+                    *g -= (h.lr * d as f64) as f32;
+                }
+            }
+            OuterOptKind::FedMomentum { nesterov } => {
+                for ((g, &d), m) in
+                    global.iter_mut().zip(pseudo_grad).zip(self.buf_m.iter_mut())
+                {
+                    *m = h.momentum * *m + d as f64;
+                    let dir = if nesterov { d as f64 + h.momentum * *m } else { *m };
+                    *g -= (h.lr * dir) as f32;
+                }
+            }
+            OuterOptKind::FedAdam => {
+                let bc1 = 1.0 - h.beta1.powi(self.t as i32);
+                let bc2 = 1.0 - h.beta2.powi(self.t as i32);
+                for ((g, &d), (m, v)) in global
+                    .iter_mut()
+                    .zip(pseudo_grad)
+                    .zip(self.buf_m.iter_mut().zip(self.buf_v.iter_mut()))
+                {
+                    let df = d as f64;
+                    *m = h.beta1 * *m + (1.0 - h.beta1) * df;
+                    *v = h.beta2 * *v + (1.0 - h.beta2) * df * df;
+                    let mh = *m / bc1;
+                    let vh = *v / bc2;
+                    *g -= (h.lr * mh / (vh.sqrt() + h.eps)) as f32;
+                }
+            }
+            OuterOptKind::FedYogi => {
+                let bc1 = 1.0 - h.beta1.powi(self.t as i32);
+                for ((g, &d), (m, v)) in global
+                    .iter_mut()
+                    .zip(pseudo_grad)
+                    .zip(self.buf_m.iter_mut().zip(self.buf_v.iter_mut()))
+                {
+                    let df = d as f64;
+                    *m = h.beta1 * *m + (1.0 - h.beta1) * df;
+                    let d2 = df * df;
+                    *v -= (1.0 - h.beta2) * d2 * (*v - d2).signum();
+                    let mh = *m / bc1;
+                    *g -= (h.lr * mh / (v.sqrt() + h.eps)) as f32;
+                }
+            }
+            OuterOptKind::FedAdagrad => {
+                for ((g, &d), (m, v)) in global
+                    .iter_mut()
+                    .zip(pseudo_grad)
+                    .zip(self.buf_m.iter_mut().zip(self.buf_v.iter_mut()))
+                {
+                    let df = d as f64;
+                    *m = df; // no momentum; kept for norm reporting
+                    *v += df * df;
+                    *g -= (h.lr * df / (v.sqrt() + h.eps)) as f32;
+                }
+            }
+        }
+    }
+
+    /// L2 norm of the server momentum buffer (fig11's tracked quantity).
+    pub fn momentum_norm(&self) -> f64 {
+        self.buf_m.iter().map(|&m| m * m).sum::<f64>().sqrt()
+    }
+
+    /// Serializable optimizer state (ckpt module).
+    pub fn state(&self) -> (u64, &[f64], &[f64]) {
+        (self.t, &self.buf_m, &self.buf_v)
+    }
+
+    pub fn restore(&mut self, t: u64, m: Vec<f64>, v: Vec<f64>) {
+        self.t = t;
+        self.buf_m = m;
+        self.buf_v = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hyper(lr: f64, mu: f64) -> OuterHyper {
+        OuterHyper { lr, momentum: mu, ..OuterHyper::default() }
+    }
+
+    #[test]
+    fn fedavg_lr1_recovers_client_mean() {
+        // θ' = θ − (θ − mean) = mean.
+        let mut global = vec![1.0f32, 2.0, 3.0];
+        let client_mean = [0.5f32, 2.5, 2.0];
+        let pg: Vec<f32> =
+            global.iter().zip(&client_mean).map(|(g, c)| g - c).collect();
+        let mut opt = OuterOpt::new(OuterOptKind::FedAvg, hyper(1.0, 0.0), 3);
+        opt.step(&mut global, &pg);
+        for (g, c) in global.iter().zip(&client_mean) {
+            assert!((g - c).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn fedavg_lr_scales_step() {
+        let mut g = vec![1.0f32];
+        let mut opt = OuterOpt::new(OuterOptKind::FedAvg, hyper(0.5, 0.0), 1);
+        opt.step(&mut g, &[1.0]);
+        assert!((g[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn momentum_accumulates_closed_form() {
+        // Constant pseudo-grad d: buf after t steps = d·(1−μ^t)/(1−μ).
+        let mu = 0.9;
+        let mut opt =
+            OuterOpt::new(OuterOptKind::FedMomentum { nesterov: false }, hyper(1.0, mu), 1);
+        let mut g = vec![0.0f32];
+        for _ in 0..5 {
+            opt.step(&mut g, &[1.0]);
+        }
+        let expect = (1.0 - mu_pow(mu, 5)) / (1.0 - mu);
+        assert!((opt.buf_m[0] - expect).abs() < 1e-9, "{} vs {expect}", opt.buf_m[0]);
+    }
+
+    fn mu_pow(mu: f64, t: u32) -> f64 {
+        mu.powi(t as i32)
+    }
+
+    #[test]
+    fn nesterov_takes_lookahead_step() {
+        let mu = 0.5;
+        let mut plain =
+            OuterOpt::new(OuterOptKind::FedMomentum { nesterov: false }, hyper(1.0, mu), 1);
+        let mut nest =
+            OuterOpt::new(OuterOptKind::FedMomentum { nesterov: true }, hyper(1.0, mu), 1);
+        let mut gp = vec![0.0f32];
+        let mut gn = vec![0.0f32];
+        plain.step(&mut gp, &[1.0]);
+        nest.step(&mut gn, &[1.0]);
+        // First step: plain moves by 1, nesterov by 1 + μ·1.
+        assert!((gp[0] + 1.0).abs() < 1e-6);
+        assert!((gn[0] + 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fedadam_bounded_unit_steps() {
+        // With constant grad, Adam's first step ≈ lr·(1/(1+eps·..)) ≤ lr.
+        let mut opt = OuterOpt::new(OuterOptKind::FedAdam, hyper(0.1, 0.0), 2);
+        let mut g = vec![0.0f32, 0.0];
+        opt.step(&mut g, &[10.0, -10.0]);
+        // Direction sign follows grad, magnitude ≈ lr.
+        assert!(g[0] < 0.0 && g[1] > 0.0);
+        assert!((g[0].abs() - 0.1).abs() < 0.01);
+        assert!((g[1].abs() - 0.1).abs() < 0.01);
+    }
+
+    #[test]
+    fn fedyogi_and_adagrad_run_and_shrink_steps() {
+        for kind in [OuterOptKind::FedYogi, OuterOptKind::FedAdagrad] {
+            let mut opt = OuterOpt::new(kind, hyper(0.1, 0.0), 1);
+            let mut g = vec![0.0f32];
+            opt.step(&mut g, &[1.0]);
+            let first = g[0].abs();
+            let before = g[0];
+            opt.step(&mut g, &[1.0]);
+            let second = (g[0] - before).abs();
+            assert!(second <= first + 1e-9, "{kind:?}: {second} > {first}");
+        }
+    }
+
+    #[test]
+    fn momentum_norm_reported() {
+        let mut opt =
+            OuterOpt::new(OuterOptKind::FedMomentum { nesterov: true }, hyper(1.0, 0.7), 2);
+        assert_eq!(opt.momentum_norm(), 0.0);
+        let mut g = vec![0.0f32, 0.0];
+        opt.step(&mut g, &[3.0, 4.0]);
+        assert!((opt.momentum_norm() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(OuterOptKind::parse("fedavg").unwrap(), OuterOptKind::FedAvg);
+        assert_eq!(
+            OuterOptKind::parse("sgdn").unwrap(),
+            OuterOptKind::FedMomentum { nesterov: true }
+        );
+        assert!(OuterOptKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn state_roundtrip() {
+        let mut opt = OuterOpt::new(OuterOptKind::FedAdam, OuterHyper::default(), 2);
+        let mut g = vec![0.0f32, 0.0];
+        opt.step(&mut g, &[1.0, 2.0]);
+        let (t, m, v) = opt.state();
+        let (m, v) = (m.to_vec(), v.to_vec());
+        let mut opt2 = OuterOpt::new(OuterOptKind::FedAdam, OuterHyper::default(), 2);
+        opt2.restore(t, m, v);
+        let mut g1 = g.clone();
+        let mut g2 = g.clone();
+        opt.step(&mut g1, &[1.0, 2.0]);
+        opt2.step(&mut g2, &[1.0, 2.0]);
+        assert_eq!(g1, g2);
+    }
+}

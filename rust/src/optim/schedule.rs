@@ -1,0 +1,83 @@
+//! Cosine LR schedule with linear warmup, synchronized across *sequential*
+//! optimizer steps (paper Table 3: `S_C` — the scheduler state advances with
+//! the client's cumulative local step count, not with rounds).
+//!
+//! lr(t) = η_max · t/w                      for t < w (warmup)
+//!       = η_min + ½(η_max−η_min)(1+cos(π·p))  for w ≤ t < T, p=(t−w)/(T−w)
+//!       = η_min                            for t ≥ T
+//! with η_min = α · η_max.
+
+#[derive(Clone, Copy, Debug)]
+pub struct CosineSchedule {
+    pub eta_max: f64,
+    /// α: min-lr factor (paper Table 3).
+    pub alpha: f64,
+    /// T: total scheduled steps.
+    pub total_steps: u64,
+    pub warmup_steps: u64,
+}
+
+impl CosineSchedule {
+    pub fn new(eta_max: f64, alpha: f64, total_steps: u64, warmup_steps: u64) -> Self {
+        assert!(eta_max > 0.0 && (0.0..=1.0).contains(&alpha));
+        assert!(warmup_steps < total_steps.max(1));
+        CosineSchedule { eta_max, alpha, total_steps, warmup_steps }
+    }
+
+    pub fn eta_min(&self) -> f64 {
+        self.alpha * self.eta_max
+    }
+
+    /// LR at (1-based) sequential step `t`.
+    pub fn lr(&self, t: u64) -> f64 {
+        if self.warmup_steps > 0 && t <= self.warmup_steps {
+            return self.eta_max * t as f64 / self.warmup_steps as f64;
+        }
+        if t >= self.total_steps {
+            return self.eta_min();
+        }
+        let p = (t - self.warmup_steps) as f64
+            / (self.total_steps - self.warmup_steps) as f64;
+        self.eta_min()
+            + 0.5 * (self.eta_max - self.eta_min()) * (1.0 + (std::f64::consts::PI * p).cos())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = CosineSchedule::new(1e-3, 0.1, 1000, 100);
+        assert!((s.lr(50) - 0.5e-3).abs() < 1e-12);
+        assert!((s.lr(100) - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn peak_then_decay_to_min() {
+        let s = CosineSchedule::new(4e-4, 0.1, 88_000, 0);
+        assert!((s.lr(0) - 4e-4).abs() < 1e-9, "starts at max without warmup");
+        assert!((s.lr(100_000) - 4e-5).abs() < 1e-12, "clamps to eta_min");
+        // Midpoint = mean of max and min.
+        let mid = s.lr(44_000);
+        assert!((mid - (4e-4 + 4e-5) / 2.0).abs() < 1e-8, "mid {mid}");
+    }
+
+    #[test]
+    fn monotone_decay_after_warmup() {
+        let s = CosineSchedule::new(1e-3, 0.1, 500, 50);
+        let mut prev = f64::MAX;
+        for t in 50..500 {
+            let lr = s.lr(t);
+            assert!(lr <= prev + 1e-15, "not monotone at {t}");
+            prev = lr;
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_warmup_beyond_total() {
+        CosineSchedule::new(1e-3, 0.1, 10, 20);
+    }
+}

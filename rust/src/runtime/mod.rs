@@ -1,0 +1,393 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! This is the only module that touches the `xla` crate. Pattern follows
+//! /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format (the
+//! bundled xla_extension 0.5.1 rejects jax≥0.5 serialized protos).
+//!
+//! Python never runs here: once `make artifacts` has produced
+//! `artifacts/<config>/`, everything in this module is self-contained.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::manifest::{Manifest, StepSig};
+use crate::util;
+
+/// Process-wide PJRT client handle.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+/// One compiled step function plus its manifest signature.
+pub struct StepFn {
+    pub name: String,
+    sig: StepSig,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// A loaded model: the three compiled steps + the manifest.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    pub train: StepFn,
+    /// Fused multi-step variant (perf pass): `train_chunk_size` local steps
+    /// per dispatch via an in-HLO `lax.scan`.
+    pub train_chunk: StepFn,
+    pub eval: StepFn,
+    pub score: StepFn,
+    pub dir: PathBuf,
+}
+
+/// Host-resident training state for one Photon LLM Node replica.
+/// `step` counts *sequential* optimizer steps (1-based at first use), which
+/// also drives the cosine LR schedule (paper Table 3: schedule synchronized
+/// across sequential steps).
+#[derive(Clone)]
+pub struct TrainState {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: i64,
+}
+
+impl TrainState {
+    pub fn new(params: Vec<f32>) -> Self {
+        let n = params.len();
+        TrainState { params, m: vec![0.0; n], v: vec![0.0; n], step: 0 }
+    }
+
+    /// Drop local optimizer state (the paper's recommended *stateless client*
+    /// policy, §7.8) while keeping parameters.
+    pub fn reset_opt_state(&mut self) {
+        self.m.fill(0.0);
+        self.v.fill(0.0);
+        self.step = 0;
+    }
+}
+
+/// Scalar metrics emitted by one train step (paper §6.2 monitors).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    pub loss: f32,
+    pub grad_norm: f32,
+    pub update_norm: f32,
+    pub act_norm: f32,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e}"))?;
+        Ok(Runtime { client })
+    }
+
+    /// Load a model by config name from the repo `artifacts/` directory.
+    pub fn load_model(&self, config_name: &str) -> Result<ModelRuntime> {
+        let dir = util::artifacts_dir().join(config_name);
+        if !dir.is_dir() {
+            bail!(
+                "artifacts for config {config_name:?} not found at {} — run `make artifacts`",
+                dir.display()
+            );
+        }
+        self.load_model_dir(&dir)
+    }
+
+    /// Load a model from an explicit artifact directory.
+    pub fn load_model_dir(&self, dir: &Path) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let compile = |sig: &StepSig, name: &str| -> Result<StepFn> {
+            let path = dir.join(&sig.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+            Ok(StepFn { name: name.to_string(), sig: sig.clone(), exe })
+        };
+        Ok(ModelRuntime {
+            train: compile(&manifest.train_step, "train_step")
+                .with_context(|| format!("config {}", manifest.config.name))?,
+            train_chunk: compile(&manifest.train_chunk, "train_chunk")?,
+            eval: compile(&manifest.eval_step, "eval_step")?,
+            score: compile(&manifest.score_step, "score_step")?,
+            dir: dir.to_path_buf(),
+            manifest,
+        })
+    }
+}
+
+impl StepFn {
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    /// (Artifacts are lowered with `return_tuple=True`, so PJRT hands back a
+    /// single tuple buffer; we sync it to host and decompose.)
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.sig.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.sig.inputs.len(),
+                inputs.len()
+            );
+        }
+        let outputs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("{}: execute failed: {e}", self.name))?;
+        let tuple = outputs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{}: output sync failed: {e}", self.name))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("{}: output decompose failed: {e}", self.name))?;
+        if parts.len() != self.sig.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.name,
+                self.sig.outputs.len(),
+                parts.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    pub fn sig(&self) -> &StepSig {
+        &self.sig
+    }
+}
+
+fn lit_f32_vec(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+fn lit_tokens(tokens: &[i32], batch: usize, width: usize) -> Result<xla::Literal> {
+    if tokens.len() != batch * width {
+        bail!("token batch has {} elements, want {}x{}", tokens.len(), batch, width);
+    }
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(tokens.as_ptr() as *const u8, tokens.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        &[batch, width],
+        bytes,
+    )
+    .map_err(|e| anyhow!("building token literal: {e}"))
+}
+
+fn lit_mask(mask: &[f32], batch: usize, width: usize) -> Result<xla::Literal> {
+    if mask.len() != batch * width {
+        bail!("mask has {} elements, want {}x{}", mask.len(), batch, width);
+    }
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(mask.as_ptr() as *const u8, mask.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        &[batch, width],
+        bytes,
+    )
+    .map_err(|e| anyhow!("building mask literal: {e}"))
+}
+
+fn scalar_of<T: xla::NativeType>(v: T) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+fn read_f32_scalar(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow!("reading scalar: {e}"))
+}
+
+fn read_into(lit: &xla::Literal, dst: &mut [f32]) -> Result<()> {
+    lit.copy_raw_to(dst).map_err(|e| anyhow!("copying output: {e}"))
+}
+
+impl ModelRuntime {
+    pub fn n_params(&self) -> usize {
+        self.manifest.n_params
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.manifest.config.batch_size
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.manifest.config.seq_len
+    }
+
+    /// Token count expected per training sequence (`seq_len + 1`).
+    pub fn seq_width(&self) -> usize {
+        self.manifest.config.seq_len + 1
+    }
+
+    /// Run one fused local AdamW step; updates `state` in place.
+    ///
+    /// `tokens` is a row-major `[batch, seq_len+1]` i32 batch.
+    pub fn train_step(
+        &self,
+        state: &mut TrainState,
+        lr: f32,
+        tokens: &[i32],
+    ) -> Result<StepStats> {
+        state.step += 1;
+        let inputs = [
+            lit_f32_vec(&state.params),
+            lit_f32_vec(&state.m),
+            lit_f32_vec(&state.v),
+            scalar_of(state.step as i32),
+            scalar_of(lr),
+            lit_tokens(tokens, self.batch_size(), self.seq_width())?,
+        ];
+        let out = self.train.execute(&inputs)?;
+        read_into(&out[0], &mut state.params)?;
+        read_into(&out[1], &mut state.m)?;
+        read_into(&out[2], &mut state.v)?;
+        Ok(StepStats {
+            loss: read_f32_scalar(&out[3])?,
+            grad_norm: read_f32_scalar(&out[4])?,
+            update_norm: read_f32_scalar(&out[5])?,
+            act_norm: read_f32_scalar(&out[6])?,
+        })
+    }
+
+    /// Fused steps per `train_chunk` dispatch.
+    pub fn chunk_size(&self) -> usize {
+        self.manifest.train_chunk_size
+    }
+
+    /// Run `chunk_size()` fused local AdamW steps in ONE dispatch (the L3
+    /// hot-path optimization recorded in EXPERIMENTS.md §Perf): parameters
+    /// and moments cross the host boundary once per chunk instead of once
+    /// per step, and PJRT dispatch overhead is amortized by `lax.scan`.
+    ///
+    /// `lrs` has `chunk_size()` entries; `tokens` is row-major
+    /// `[chunk, batch, seq_len+1]`. Numerically identical to `chunk_size()`
+    /// calls of `train_step` (asserted by integration tests).
+    pub fn train_chunk(
+        &self,
+        state: &mut TrainState,
+        lrs: &[f32],
+        tokens: &[i32],
+    ) -> Result<Vec<StepStats>> {
+        let k = self.chunk_size();
+        if lrs.len() != k {
+            bail!("train_chunk: expected {k} lrs, got {}", lrs.len());
+        }
+        if tokens.len() != k * self.batch_size() * self.seq_width() {
+            bail!("train_chunk: token block has wrong arity");
+        }
+        let tok_bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(tokens.as_ptr() as *const u8, tokens.len() * 4)
+        };
+        let tok_lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S32,
+            &[k, self.batch_size(), self.seq_width()],
+            tok_bytes,
+        )
+        .map_err(|e| anyhow!("building chunk token literal: {e}"))?;
+        let inputs = [
+            lit_f32_vec(&state.params),
+            lit_f32_vec(&state.m),
+            lit_f32_vec(&state.v),
+            scalar_of(state.step as i32),
+            lit_f32_vec(lrs),
+            tok_lit,
+        ];
+        let out = self.train_chunk.execute(&inputs)?;
+        read_into(&out[0], &mut state.params)?;
+        read_into(&out[1], &mut state.m)?;
+        read_into(&out[2], &mut state.v)?;
+        state.step += k as i64;
+        let losses = out[3].to_vec::<f32>().map_err(|e| anyhow!("chunk out: {e}"))?;
+        let gns = out[4].to_vec::<f32>().map_err(|e| anyhow!("chunk out: {e}"))?;
+        let uns = out[5].to_vec::<f32>().map_err(|e| anyhow!("chunk out: {e}"))?;
+        let ans = out[6].to_vec::<f32>().map_err(|e| anyhow!("chunk out: {e}"))?;
+        Ok((0..k)
+            .map(|i| StepStats {
+                loss: losses[i],
+                grad_norm: gns[i],
+                update_norm: uns[i],
+                act_norm: ans[i],
+            })
+            .collect())
+    }
+
+    /// Summed negative log-likelihood + token count for one batch.
+    pub fn eval_batch(&self, params: &[f32], tokens: &[i32]) -> Result<(f64, f64)> {
+        let inputs = [
+            lit_f32_vec(params),
+            lit_tokens(tokens, self.batch_size(), self.seq_width())?,
+        ];
+        let out = self.eval.execute(&inputs)?;
+        Ok((read_f32_scalar(&out[0])? as f64, read_f32_scalar(&out[1])? as f64))
+    }
+
+    /// Mean NLL over a sequence of batches → (nll, perplexity).
+    pub fn eval_nll(&self, params: &[f32], batches: &[Vec<i32>]) -> Result<(f64, f64)> {
+        let mut sum = 0.0;
+        let mut count = 0.0;
+        for b in batches {
+            let (s, c) = self.eval_batch(params, b)?;
+            sum += s;
+            count += c;
+        }
+        if count == 0.0 {
+            bail!("eval_nll: no tokens evaluated");
+        }
+        let nll = sum / count;
+        Ok((nll, nll.exp()))
+    }
+
+    /// Masked per-sequence log-likelihood (downstream eval harness).
+    /// Returns `(option_ll[B], option_len[B])`.
+    pub fn score_batch(
+        &self,
+        params: &[f32],
+        tokens: &[i32],
+        mask: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let inputs = [
+            lit_f32_vec(params),
+            lit_tokens(tokens, self.batch_size(), self.seq_width())?,
+            lit_mask(mask, self.batch_size(), self.manifest.config.seq_len)?,
+        ];
+        let out = self.score.execute(&inputs)?;
+        let ll = out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("score output: {e}"))?;
+        let len = out[1]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("score output: {e}"))?;
+        Ok((ll, len))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The runtime requires built artifacts; full coverage lives in
+    // rust/tests/integration_runtime.rs. Here we only test the pure helpers.
+    use super::*;
+
+    #[test]
+    fn train_state_reset() {
+        let mut st = TrainState::new(vec![1.0, 2.0]);
+        st.m[0] = 5.0;
+        st.v[1] = 6.0;
+        st.step = 10;
+        st.reset_opt_state();
+        assert_eq!(st.m, vec![0.0, 0.0]);
+        assert_eq!(st.v, vec![0.0, 0.0]);
+        assert_eq!(st.step, 0);
+        assert_eq!(st.params, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn token_literal_shape_checked() {
+        assert!(lit_tokens(&[1, 2, 3], 2, 2).is_err());
+        assert!(lit_tokens(&[1, 2, 3, 4], 2, 2).is_ok());
+    }
+}

@@ -1,0 +1,133 @@
+//! Tiny argument parser (clap is unavailable offline).
+//!
+//! Grammar: `photon <command> [positional...] [--key value] [--flag]`.
+//! Unknown flags are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+/// Declarative spec: which `--options` take values and which are bare flags.
+pub struct Spec {
+    pub options: &'static [&'static str],
+    pub flags: &'static [&'static str],
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, spec: &Spec) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // --key=value form
+                if let Some((k, v)) = name.split_once('=') {
+                    if !spec.options.contains(&k) {
+                        bail!("unknown option --{k}");
+                    }
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if spec.flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else if spec.options.contains(&name) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("option --{name} needs a value"))?;
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    bail!("unknown option --{name}");
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: Spec = Spec {
+        options: &["config", "rounds", "lr"],
+        flags: &["fast", "verbose"],
+    };
+
+    fn parse(toks: &[&str]) -> Result<Args> {
+        Args::parse(toks.iter().map(|s| s.to_string()), &SPEC)
+    }
+
+    #[test]
+    fn positional_options_flags() {
+        let a = parse(&["exp", "fig3", "--config", "m75a", "--fast"]).unwrap();
+        assert_eq!(a.positional, ["exp", "fig3"]);
+        assert_eq!(a.get("config"), Some("m75a"));
+        assert!(a.flag("fast"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["--rounds=12"]).unwrap();
+        assert_eq!(a.get_usize("rounds", 0).unwrap(), 12);
+    }
+
+    #[test]
+    fn typed_getters_and_defaults() {
+        let a = parse(&["--lr", "0.5"]).unwrap();
+        assert_eq!(a.get_f64("lr", 1.0).unwrap(), 0.5);
+        assert_eq!(a.get_usize("rounds", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn unknown_and_missing() {
+        assert!(parse(&["--nope"]).is_err());
+        assert!(parse(&["--rounds"]).is_err());
+        assert!(parse(&["--rounds", "x"]).unwrap().get_usize("rounds", 0).is_err());
+    }
+}

@@ -1,0 +1,79 @@
+//! CSV emission for experiment series (`results/<exp>/<name>.csv`).
+//!
+//! Every figure/table driver writes its raw series here so plots can be
+//! regenerated outside the binary; EXPERIMENTS.md references these files.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+pub struct CsvWriter {
+    file: std::io::BufWriter<std::fs::File>,
+    columns: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: &Path, header: &[&str]) -> Result<Self> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvWriter { file, columns: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[f64]) -> Result<()> {
+        assert_eq!(values.len(), self.columns, "csv row arity mismatch");
+        let mut line = String::new();
+        for (i, v) in values.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            if v.fract() == 0.0 && v.abs() < 9e15 {
+                line.push_str(&format!("{}", *v as i64));
+            } else {
+                line.push_str(&format!("{v:.6}"));
+            }
+        }
+        writeln!(self.file, "{line}")?;
+        Ok(())
+    }
+
+    pub fn row_mixed(&mut self, values: &[String]) -> Result<()> {
+        assert_eq!(values.len(), self.columns, "csv row arity mismatch");
+        writeln!(self.file, "{}", values.join(","))?;
+        Ok(())
+    }
+
+    pub fn finish(mut self) -> Result<()> {
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join(format!("photon_csv_{}", std::process::id()));
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["round", "ppl"]).unwrap();
+        w.row(&[1.0, 45.25]).unwrap();
+        w.row(&[2.0, 40.0]).unwrap();
+        w.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "round,ppl\n1,45.250000\n2,40\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let dir = std::env::temp_dir().join(format!("photon_csv2_{}", std::process::id()));
+        let mut w = CsvWriter::create(&dir.join("t.csv"), &["a", "b"]).unwrap();
+        let _ = w.row(&[1.0]);
+    }
+}

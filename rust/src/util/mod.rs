@@ -1,0 +1,39 @@
+//! Small self-contained substrates (the offline image carries no serde /
+//! clap / rand crates — these are the in-repo replacements, each unit
+//! tested).
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod table;
+
+/// Root of the repository (artifacts/results are resolved relative to it).
+/// Honors `PHOTON_ROOT`, else walks up from the current dir looking for
+/// `Cargo.toml`, else falls back to `.`.
+pub fn repo_root() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("PHOTON_ROOT") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        if dir.join("Cargo.toml").exists() || dir.join("artifacts").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            return ".".into();
+        }
+    }
+}
+
+/// `artifacts/` directory produced by `make artifacts`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    repo_root().join("artifacts")
+}
+
+/// `results/` output directory (created on demand).
+pub fn results_dir(sub: &str) -> std::path::PathBuf {
+    let d = repo_root().join("results").join(sub);
+    std::fs::create_dir_all(&d).ok();
+    d
+}

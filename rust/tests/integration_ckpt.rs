@@ -1,0 +1,92 @@
+//! Integration: checkpoint/resume over real federated training.
+//! The paper's requirement (§4.1/§6.2): resumption from the most recent
+//! round must be exact — global model, outer-optimizer state, schedule
+//! position, and every client's stream cursor.
+
+use std::rc::Rc;
+
+use photon::config::{ExperimentConfig, OptStatePolicy};
+use photon::coordinator::Federation;
+use photon::optim::outer::{OuterHyper, OuterOptKind};
+use photon::runtime::{ModelRuntime, Runtime};
+
+fn model() -> Rc<ModelRuntime> {
+    let rt = Runtime::cpu().unwrap();
+    Rc::new(rt.load_model("m75a").expect("run `make artifacts`"))
+}
+
+fn cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::quickstart("m75a");
+    cfg.rounds = 4;
+    cfg.local_steps = 6;
+    cfg.eval_batches = 2;
+    // A stateful outer optimizer + KeepOpt clients: the hardest resume case.
+    cfg.outer = OuterOptKind::FedMomentum { nesterov: true };
+    cfg.outer_hyper = OuterHyper { lr: 0.7, momentum: 0.9, ..OuterHyper::default() };
+    cfg.opt_state = OptStatePolicy::KeepOpt;
+    cfg
+}
+
+#[test]
+fn resume_is_bit_exact() {
+    let m = model();
+    // Uninterrupted reference run.
+    let mut full = Federation::with_model(cfg(), m.clone()).unwrap();
+    full.run().unwrap();
+
+    // Interrupted run: 2 rounds, checkpoint, fresh federation, resume, 2 more.
+    let dir = std::env::temp_dir().join(format!("photon_it_ck_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut first = Federation::with_model(cfg(), m.clone()).unwrap();
+    first.run_round().unwrap();
+    first.run_round().unwrap();
+    let path = dir.join("ckpt_round_2.bin");
+    first.checkpoint().save(&path).unwrap();
+    drop(first);
+
+    let mut resumed = Federation::with_model(cfg(), m).unwrap();
+    assert!(resumed.try_resume_from(&dir).unwrap());
+    assert_eq!(resumed.next_round, 2);
+    resumed.run().unwrap();
+
+    assert_eq!(resumed.global, full.global, "resume must be bit-exact");
+    assert_eq!(
+        resumed.log.rounds.last().unwrap().server_ppl,
+        full.log.rounds.last().unwrap().server_ppl
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn auto_checkpointing_during_run() {
+    let m = model();
+    let dir = std::env::temp_dir().join(format!("photon_it_auto_{}", std::process::id()));
+    let mut fed = Federation::with_model(cfg(), m).unwrap();
+    fed.ckpt_dir = Some(dir.clone());
+    fed.run().unwrap();
+    let (round, path) = photon::ckpt::latest_in(&dir).unwrap().unwrap();
+    assert_eq!(round, 4);
+    let ck = photon::ckpt::Checkpoint::load(&path).unwrap();
+    assert_eq!(ck.global, fed.global);
+    assert_eq!(ck.seq_step, 24);
+    assert!(ck.clients.iter().all(|c| c.is_some()));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_rejects_mismatched_config() {
+    let m = model();
+    let fed = Federation::with_model(cfg(), m.clone()).unwrap();
+    let mut ck = fed.checkpoint();
+    ck.global.pop(); // wrong model size
+    let mut other = Federation::with_model(cfg(), m).unwrap();
+    assert!(other.restore(&ck).is_err());
+}
+
+#[test]
+fn no_checkpoint_dir_resumes_nothing() {
+    let m = model();
+    let mut fed = Federation::with_model(cfg(), m).unwrap();
+    let empty = std::env::temp_dir().join("photon_definitely_missing_xyz");
+    assert!(!fed.try_resume_from(&empty).unwrap());
+}

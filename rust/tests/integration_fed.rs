@@ -1,0 +1,203 @@
+//! Integration: full federated rounds over real artifacts.
+//! Requires `make artifacts`.
+
+use std::rc::Rc;
+
+use photon::cluster::faults::FaultPlan;
+use photon::cluster::hardware::{ClientHardware, FleetSpec, NodeSpec, A40};
+use photon::config::{CorpusKind, ExperimentConfig, OptStatePolicy};
+use photon::coordinator::{run_centralized, Federation};
+use photon::data::corpus::SyntheticCorpus;
+use photon::data::partition::Partition;
+use photon::data::stream::TokenStream;
+use photon::model::init::init_params;
+use photon::runtime::{ModelRuntime, Runtime, TrainState};
+
+fn model() -> Rc<ModelRuntime> {
+    // Per-thread cache: Rc/PjRt handles are not Sync, and cargo runs tests
+    // on multiple threads. Compiling m75a is cheap (<1 s) so a handful of
+    // per-thread compiles is acceptable.
+    thread_local! {
+        static CACHED: std::cell::OnceCell<Rc<ModelRuntime>> =
+            const { std::cell::OnceCell::new() };
+    }
+    CACHED.with(|c| {
+        c.get_or_init(|| {
+            let rt = Runtime::cpu().unwrap();
+            Rc::new(rt.load_model("m75a").expect("run `make artifacts`"))
+        })
+        .clone()
+    })
+}
+
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::quickstart("m75a");
+    cfg.rounds = 3;
+    cfg.local_steps = 8;
+    cfg.eval_batches = 2;
+    cfg
+}
+
+#[test]
+fn federated_training_reduces_perplexity() {
+    let mut fed = Federation::with_model(base_cfg(), model()).unwrap();
+    let hist = fed.run().unwrap();
+    assert_eq!(hist.len(), 3);
+    assert!(
+        hist.last().unwrap().server_ppl < hist[0].server_ppl,
+        "ppl {} -> {}",
+        hist[0].server_ppl,
+        hist.last().unwrap().server_ppl
+    );
+    assert_eq!(hist[0].participated, 4);
+    assert!(hist[0].comm_bytes > 0);
+}
+
+#[test]
+fn federation_is_deterministic() {
+    let run = || {
+        let mut fed = Federation::with_model(base_cfg(), model()).unwrap();
+        fed.run().unwrap();
+        (fed.global.clone(), fed.log.rounds.last().unwrap().server_ppl)
+    };
+    let (g1, p1) = run();
+    let (g2, p2) = run();
+    assert_eq!(g1, g2);
+    assert_eq!(p1, p2);
+}
+
+#[test]
+fn single_client_fedavg_equals_local_training() {
+    // P=K=1, FedAvg η_s=1, stateless: one round ≡ τ local steps from init.
+    let mut cfg = base_cfg();
+    cfg.n_clients = 1;
+    cfg.clients_per_round = 1;
+    cfg.rounds = 1;
+    let mut fed = Federation::with_model(cfg.clone(), model()).unwrap();
+    fed.run().unwrap();
+
+    // Manual replica of the node's local round.
+    let m = model();
+    let corpus = SyntheticCorpus::c4(m.manifest.config.vocab);
+    let partition = Partition::iid(&corpus, 1);
+    let mut stream = TokenStream::bind(
+        &partition.assignment[0],
+        &corpus.categories,
+        m.seq_width(),
+        cfg.seed, // island 0 => seed ^ 0
+    );
+    let mut st = TrainState::new(init_params(&m.manifest, cfg.seed));
+    for t in 0..cfg.local_steps {
+        let toks = stream.next_batch(m.batch_size());
+        let lr = cfg.schedule.lr(t + 1) as f32;
+        m.train_step(&mut st, lr, &toks).unwrap();
+    }
+    // FedAvg applies θ − (θ − mean) in f32; allow one-ulp rounding per coord.
+    assert_eq!(fed.global.len(), st.params.len());
+    for (i, (a, b)) in fed.global.iter().zip(&st.params).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-6 * b.abs().max(1e-3),
+            "federation(P=1) != local training at {i}: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn partial_participation_runs_and_rotates_clients() {
+    let mut cfg = base_cfg();
+    cfg.n_clients = 16;
+    cfg.clients_per_round = 2;
+    cfg.rounds = 4;
+    let mut fed = Federation::with_model(cfg, model()).unwrap();
+    let hist = fed.run().unwrap();
+    assert!(hist.iter().all(|r| r.participated == 2));
+    assert!(hist.last().unwrap().server_ppl < hist[0].server_ppl * 1.05);
+}
+
+#[test]
+fn full_dropout_leaves_model_unchanged() {
+    let mut cfg = base_cfg();
+    cfg.rounds = 1;
+    cfg.faults = FaultPlan { dropout_prob: 1.0, straggler_prob: 0.0, straggler_fraction: 0.5, seed: 1 };
+    let mut fed = Federation::with_model(cfg, model()).unwrap();
+    let before = fed.global.clone();
+    let rec = fed.run_round().unwrap();
+    assert_eq!(rec.participated, 0);
+    assert_eq!(fed.global, before);
+}
+
+#[test]
+fn stragglers_still_converge() {
+    let mut cfg = base_cfg();
+    cfg.faults = FaultPlan { dropout_prob: 0.2, straggler_prob: 0.5, straggler_fraction: 0.5, seed: 3 };
+    let mut fed = Federation::with_model(cfg, model()).unwrap();
+    let hist = fed.run().unwrap();
+    assert!(hist.last().unwrap().server_ppl < hist[0].server_ppl);
+}
+
+#[test]
+fn keepopt_differs_from_stateless() {
+    let mut c1 = base_cfg();
+    c1.rounds = 2;
+    let mut c2 = c1.clone();
+    c2.opt_state = OptStatePolicy::KeepOpt;
+    let mut f1 = Federation::with_model(c1, model()).unwrap();
+    let mut f2 = Federation::with_model(c2, model()).unwrap();
+    f1.run().unwrap();
+    f2.run().unwrap();
+    assert_ne!(f1.global, f2.global, "KeepOpt must change the trajectory");
+}
+
+#[test]
+fn island_subfederation_runs() {
+    // Clients with two WAN-separated nodes run an inner sub-federation
+    // (Algorithm 1 L.19-24) and still converge.
+    let mut cfg = base_cfg();
+    cfg.n_clients = 2;
+    cfg.clients_per_round = 2;
+    let wan_client = ClientHardware {
+        nodes: vec![NodeSpec { gpu: A40, n_gpus: 1, intra_gbps: 600.0 }; 2],
+        inter_gbps: 0.1,
+    };
+    cfg.fleet = Some(FleetSpec { clients: vec![wan_client.clone(), wan_client] });
+    let mut fed = Federation::with_model(cfg, model()).unwrap();
+    let hist = fed.run().unwrap();
+    assert!(hist.last().unwrap().server_ppl < hist[0].server_ppl * 1.05);
+    assert!(fed.global.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn single_island_fleet_matches_no_fleet() {
+    // Well-connected single-node clients must be exactly the default path.
+    let c1 = base_cfg();
+    let mut c2 = base_cfg();
+    c2.fleet = Some(FleetSpec::uniform(c2.n_clients, A40, 1));
+    let mut f1 = Federation::with_model(c1, model()).unwrap();
+    let mut f2 = Federation::with_model(c2, model()).unwrap();
+    f1.run().unwrap();
+    f2.run().unwrap();
+    assert_eq!(f1.global, f2.global);
+}
+
+#[test]
+fn centralized_baseline_converges_and_aligns_rounds() {
+    let cfg = base_cfg();
+    let log = run_centralized(&cfg, &model()).unwrap();
+    assert_eq!(log.rounds.len(), cfg.rounds);
+    assert!(log.rounds.last().unwrap().server_ppl < log.rounds[0].server_ppl);
+    assert!(log.rounds.iter().all(|r| r.comm_bytes == 0));
+}
+
+#[test]
+fn mc4_and_pile_partitions_run() {
+    for corpus in [CorpusKind::PileHetero { j: 1 }, CorpusKind::Mc4 { n_langs: 4 }] {
+        let mut cfg = base_cfg();
+        cfg.n_clients = 8;
+        cfg.clients_per_round = 8;
+        cfg.rounds = 2;
+        cfg.corpus = corpus;
+        let mut fed = Federation::with_model(cfg, model()).unwrap();
+        let hist = fed.run().unwrap();
+        assert!(hist.last().unwrap().server_ppl.is_finite());
+    }
+}

