@@ -5,7 +5,7 @@
 //!
 //! Run: `cargo run --release --example partial_participation`
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use photon::config::{CorpusKind, ExperimentConfig};
 use photon::coordinator::Federation;
@@ -13,7 +13,7 @@ use photon::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
     let rt = Runtime::cpu()?;
-    let model = Rc::new(rt.load_model("m75a")?);
+    let model = Arc::new(rt.load_model("m75a")?);
 
     let mut partial = ExperimentConfig::quickstart("m75a");
     partial.label = "64x4".into();

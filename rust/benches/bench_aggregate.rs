@@ -3,7 +3,10 @@
 //! matching the artifact ladder.
 
 use photon::benchkit::{bench, bench_header};
-use photon::model::vecmath::{mean_into, sub_into, weighted_mean_into};
+use photon::metrics::{mean_pairwise_cosine, mean_pairwise_cosine_from_gram};
+use photon::model::vecmath::{
+    mean_into, streaming_aggregate, sub_into, weighted_mean_into, AggScratch,
+};
 use photon::optim::outer::{OuterHyper, OuterOpt, OuterOptKind};
 use photon::testkit::rand_vec;
 use photon::util::rng::Rng;
@@ -37,6 +40,32 @@ fn main() {
             sub_into(&global, &mean, &mut pg);
         });
         r.print_with_throughput("param", n as f64);
+
+        // The round engine's aggregation paths, old vs new: the streaming
+        // pass fuses mean + pg + delta norms + K×K cosine Gram with no
+        // O(K·N) allocation; the materialized path is what federation.rs
+        // used to do per round.
+        let mut scratch = AggScratch::new();
+        let r = bench(&format!("streaming_aggregate/{n}x{k}"), 0.5, || {
+            let stats =
+                streaming_aggregate(&rows, &weights, &global, &mut mean, &mut pg, &mut scratch);
+            std::hint::black_box(mean_pairwise_cosine_from_gram(stats.k, &stats.gram));
+        });
+        r.print_with_throughput("param", (n * k) as f64);
+        let r = bench(&format!("materialized_aggregate/{n}x{k}"), 0.5, || {
+            weighted_mean_into(&rows, &weights, &mut mean);
+            sub_into(&global, &mean, &mut pg);
+            let deltas: Vec<Vec<f32>> = clients
+                .iter()
+                .map(|c| {
+                    let mut d = vec![0.0f32; n];
+                    sub_into(c, &mean, &mut d);
+                    d
+                })
+                .collect();
+            std::hint::black_box(mean_pairwise_cosine(&deltas));
+        });
+        r.print_with_throughput("param", (n * k) as f64);
 
         for (name, kind) in [
             ("fedavg", OuterOptKind::FedAvg),

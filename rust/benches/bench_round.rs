@@ -1,7 +1,9 @@
 //! bench_round: one full federated round end-to-end (sample → τ local
 //! steps × K clients → aggregate → outer step → eval) on the 75M-analogue.
 //! This is the paper's system-level unit of work; EXPERIMENTS.md §Perf
-//! tracks its breakdown.
+//! tracks its breakdown. The trailing section compares the round engine's
+//! sequential path against the worker pool at K ≥ 8 — the speedup the
+//! ISSUE-1 acceptance criteria track.
 
 use photon::benchkit::{bench, bench_header};
 use photon::config::ExperimentConfig;
@@ -11,7 +13,7 @@ use photon::runtime::Runtime;
 fn main() {
     let quick = bench_header("bench_round: full federated round (m75a)");
     let rt = Runtime::cpu().expect("pjrt client");
-    let model = std::rc::Rc::new(rt.load_model("m75a").expect("run `make artifacts`"));
+    let model = std::sync::Arc::new(rt.load_model("m75a").expect("run `make artifacts`"));
 
     for (k, tau) in [(4usize, 10u64), (8, 20)] {
         if quick && k == 8 {
@@ -28,6 +30,32 @@ fn main() {
             fed.run_round().unwrap();
         });
         r.print_with_throughput("client-step", (k as u64 * tau) as f64);
+    }
+
+    // Round-engine scaling: identical work, workers 1 vs auto. Host-side
+    // work overlaps under the default serialized dispatch; expect the gap
+    // to widen further with --parallel-dispatch runtimes.
+    let k = 8usize;
+    let tau = if quick { 5u64 } else { 20 };
+    let mut means = Vec::new();
+    for workers in [1usize, 0] {
+        let mut cfg = ExperimentConfig::quickstart("m75a");
+        cfg.n_clients = k;
+        cfg.clients_per_round = k;
+        cfg.rounds = usize::MAX / 2;
+        cfg.local_steps = tau;
+        cfg.eval_batches = 2;
+        cfg.exec.workers = workers;
+        let mut fed = Federation::with_model(cfg, model.clone()).unwrap();
+        let label = if workers == 0 { "auto".to_string() } else { workers.to_string() };
+        let r = bench(&format!("round_engine/K{k}/tau{tau}/workers_{label}"), 3.0, || {
+            fed.run_round().unwrap();
+        });
+        r.print_with_throughput("client-step", (k as u64 * tau) as f64);
+        means.push(r.mean.as_secs_f64());
+    }
+    if let [seq, par] = means[..] {
+        println!("round_engine speedup (workers auto vs 1): {:.2}x", seq / par);
     }
 
     // Breakdown: eval-only cost (the non-training part of a round).

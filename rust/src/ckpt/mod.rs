@@ -15,15 +15,20 @@ use anyhow::{bail, Context, Result};
 use crate::data::stream::StreamCursor;
 
 const MAGIC: &[u8; 4] = b"PHCK";
-const VERSION: u32 = 1;
+/// v2: per-client `cursors` became a vector (one cursor per connectivity
+/// island) so multi-island clients resume sample-exact. v1 files saved only
+/// `streams[0]` and are rejected — they cannot restore a hetero fleet
+/// faithfully.
+const VERSION: u32 = 2;
 
-/// Per-client persisted state (KeepOpt moments + stream cursor).
+/// Per-client persisted state: KeepOpt moments + one stream cursor per
+/// connectivity island (single-island clients have exactly one).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ClientCkpt {
     pub opt_m: Vec<f32>,
     pub opt_v: Vec<f32>,
     pub local_step: i64,
-    pub cursor: StreamCursor,
+    pub cursors: Vec<StreamCursor>,
 }
 
 /// Full federation state at a round boundary.
@@ -159,11 +164,14 @@ impl Checkpoint {
                     e.f32s(&c.opt_m);
                     e.f32s(&c.opt_v);
                     e.i64(c.local_step);
-                    e.state4(&c.cursor.mix_state);
-                    e.u64(c.cursor.bucket_states.len() as u64);
-                    for (st, drawn) in &c.cursor.bucket_states {
-                        e.state4(st);
-                        e.u64(*drawn);
+                    e.u64(c.cursors.len() as u64);
+                    for cur in &c.cursors {
+                        e.state4(&cur.mix_state);
+                        e.u64(cur.bucket_states.len() as u64);
+                        for (st, drawn) in &cur.bucket_states {
+                            e.state4(st);
+                            e.u64(*drawn);
+                        }
                     }
                 }
             }
@@ -206,20 +214,20 @@ impl Checkpoint {
             let opt_m = d.f32s()?;
             let opt_v = d.f32s()?;
             let local_step = d.i64()?;
-            let mix_state = d.state4()?;
-            let nb = d.u64()? as usize;
-            let mut bucket_states = Vec::with_capacity(nb);
-            for _ in 0..nb {
-                let st = d.state4()?;
-                let drawn = d.u64()?;
-                bucket_states.push((st, drawn));
+            let n_cursors = d.u64()? as usize;
+            let mut cursors = Vec::with_capacity(n_cursors);
+            for _ in 0..n_cursors {
+                let mix_state = d.state4()?;
+                let nb = d.u64()? as usize;
+                let mut bucket_states = Vec::with_capacity(nb);
+                for _ in 0..nb {
+                    let st = d.state4()?;
+                    let drawn = d.u64()?;
+                    bucket_states.push((st, drawn));
+                }
+                cursors.push(StreamCursor { mix_state, bucket_states });
             }
-            clients.push(Some(ClientCkpt {
-                opt_m,
-                opt_v,
-                local_step,
-                cursor: StreamCursor { mix_state, bucket_states },
-            }));
+            clients.push(Some(ClientCkpt { opt_m, opt_v, local_step, cursors }));
         }
         Ok(Checkpoint {
             round,
@@ -298,10 +306,18 @@ mod tests {
                     opt_m: vec![1.0],
                     opt_v: vec![2.0],
                     local_step: 40,
-                    cursor: StreamCursor {
-                        mix_state: [1, 2, 3, 4],
-                        bucket_states: vec![([5, 6, 7, 8], 9)],
-                    },
+                    // Two islands → two cursors (the hetero-fleet case that
+                    // v1 silently truncated to cursors[0]).
+                    cursors: vec![
+                        StreamCursor {
+                            mix_state: [1, 2, 3, 4],
+                            bucket_states: vec![([5, 6, 7, 8], 9)],
+                        },
+                        StreamCursor {
+                            mix_state: [10, 11, 12, 13],
+                            bucket_states: vec![([14, 15, 16, 17], 18), ([19, 20, 21, 22], 23)],
+                        },
+                    ],
                 }),
             ],
             timestamp: 1_700_000_000,

@@ -20,6 +20,27 @@ pub enum CorpusKind {
     Mc4 { n_langs: usize },
 }
 
+/// Round-engine execution knobs (coordinator::round_exec): how many worker
+/// threads run sampled clients' local rounds concurrently, and whether the
+/// PJRT dispatch itself is serialized (see runtime::DispatchPolicy). The
+/// engine is bit-exact across any worker count under a fixed seed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecConfig {
+    /// Worker threads for client local rounds. 0 = auto (one per available
+    /// CPU, capped at the number of runnable clients); 1 = sequential.
+    pub workers: usize,
+    /// Serialize XLA executable dispatch behind a per-model mutex (default
+    /// true — host-side work still overlaps). False opts into PJRT's
+    /// thread-safe concurrent `Execute`.
+    pub serialize_dispatch: bool,
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        ExecConfig { workers: 1, serialize_dispatch: true }
+    }
+}
+
 /// Local optimizer-state policy between rounds (paper §7.8).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum OptStatePolicy {
@@ -54,6 +75,8 @@ pub struct ExperimentConfig {
     pub faults: FaultPlan,
     /// Per-client hardware (None = uniform single-GPU clients).
     pub fleet: Option<FleetSpec>,
+    /// Round-engine parallelism (workers, dispatch serialization).
+    pub exec: ExecConfig,
 }
 
 impl ExperimentConfig {
@@ -75,6 +98,7 @@ impl ExperimentConfig {
             eval_batches: 4,
             faults: FaultPlan::none(),
             fleet: None,
+            exec: ExecConfig::default(),
         }
     }
 

@@ -5,7 +5,7 @@
 //! centralized validation set at every τ-step boundary so its curve aligns
 //! with the federated rounds.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -23,7 +23,7 @@ use crate::runtime::{ModelRuntime, TrainState};
 /// size locally as the centralized pre-training recipe" regime).
 pub fn run_centralized(
     cfg: &ExperimentConfig,
-    model: &Rc<ModelRuntime>,
+    model: &Arc<ModelRuntime>,
 ) -> Result<MetricsLog> {
     let data = build_data(cfg, model.manifest.config.vocab);
     // Union of every client's buckets = the centralized dataset.

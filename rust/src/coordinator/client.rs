@@ -59,13 +59,17 @@ impl ClientNode {
     /// Multi-island nodes run an inner sub-federation: each island trains
     /// independently on its disjoint stream and the node partially
     /// aggregates (simple average, Algorithm 1 L.23) before replying.
+    ///
+    /// Deterministic given the node's stream/optimizer state — the property
+    /// the round engine (`round_exec`) relies on to be bit-exact across
+    /// worker counts (`lr_at` is `Sync` so workers can share it).
     pub fn run_local_round(
         &mut self,
         model: &ModelRuntime,
         global: &[f32],
         steps: u64,
         seq_step_base: u64,
-        lr_at: &dyn Fn(u64) -> f64,
+        lr_at: &(dyn Fn(u64) -> f64 + Sync),
         policy: OptStatePolicy,
     ) -> Result<ClientUpdate> {
         let batch = model.batch_size();

@@ -1,9 +1,12 @@
 //! The Photon Aggregator: owns the global model, orchestrates rounds
-//! (Algorithm 1 L.1–11), applies the outer optimizer, tracks federated
-//! metrics, and checkpoints the full training state.
+//! (Algorithm 1 L.1–11) through the parallel round engine
+//! (`round_exec`), applies the outer optimizer via one-pass streaming
+//! aggregation, tracks federated metrics, and checkpoints the full
+//! training state. See `coordinator` module docs for the worker-count
+//! knob and the cross-worker determinism guarantee.
 
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -12,22 +15,23 @@ use crate::ckpt::{Checkpoint, ClientCkpt};
 use crate::cluster::island::group_islands;
 use crate::config::{CorpusKind, ExperimentConfig};
 use crate::coordinator::client::{ClientNode, ClientUpdate};
+use crate::coordinator::round_exec::{ClientTask, RoundExec};
 use crate::coordinator::sampler::ClientSampler;
 use crate::data::corpus::SyntheticCorpus;
 use crate::data::partition::Partition;
 use crate::data::source::DataSource;
 use crate::data::stream::TokenStream;
 use crate::link;
-use crate::metrics::{mean_pairwise_cosine, mean_std, MetricsLog, RoundRecord};
+use crate::metrics::{mean_pairwise_cosine_from_gram, mean_std, MetricsLog, RoundRecord};
 use crate::model::init::init_params;
-use crate::model::vecmath::{l2_norm, sub_into, weighted_mean_into};
+use crate::model::vecmath::{l2_norm, streaming_aggregate, AggScratch};
 use crate::optim::outer::OuterOpt;
-use crate::runtime::{ModelRuntime, Runtime};
+use crate::runtime::{DispatchPolicy, ModelRuntime, Runtime};
 
 /// A running federation (Aggregator + nodes + data plane).
 pub struct Federation {
     pub cfg: ExperimentConfig,
-    pub model: Rc<ModelRuntime>,
+    pub model: Arc<ModelRuntime>,
     pub data: DataSource,
     pub global: Vec<f32>,
     pub outer: OuterOpt,
@@ -45,6 +49,7 @@ pub struct Federation {
     // Scratch buffers reused across rounds (aggregation hot path).
     scratch_mean: Vec<f32>,
     scratch_pg: Vec<f32>,
+    scratch_agg: AggScratch,
 }
 
 /// Build the corpus + partition for a config.
@@ -74,12 +79,21 @@ impl Federation {
     /// reuse `with_model` when running several variants of one config).
     pub fn new(cfg: ExperimentConfig) -> Result<Federation> {
         let rt = Runtime::cpu()?;
-        let model = Rc::new(rt.load_model(&cfg.model)?);
+        let model = Arc::new(rt.load_model(&cfg.model)?);
         Federation::with_model(cfg, model)
     }
 
-    pub fn with_model(cfg: ExperimentConfig, model: Rc<ModelRuntime>) -> Result<Federation> {
+    pub fn with_model(cfg: ExperimentConfig, model: Arc<ModelRuntime>) -> Result<Federation> {
         cfg.validate()?;
+        // The dispatch policy is per-model process state (the gate lives on
+        // the shared ModelRuntime); building a federation resets it, so
+        // federations sharing one model must agree on the policy if they
+        // ever run rounds concurrently (see ModelRuntime::set_dispatch_policy).
+        model.set_dispatch_policy(if cfg.exec.serialize_dispatch {
+            DispatchPolicy::Serialized
+        } else {
+            DispatchPolicy::Concurrent
+        });
         if let Some(fleet) = &cfg.fleet {
             anyhow::ensure!(
                 fleet.clients.len() == cfg.n_clients,
@@ -136,6 +150,7 @@ impl Federation {
             elapsed_offset: 0.0,
             scratch_mean: vec![0.0; n],
             scratch_pg: vec![0.0; n],
+            scratch_agg: AggScratch::new(),
         })
     }
 
@@ -146,6 +161,10 @@ impl Federation {
 
     /// Execute one federated round (Algorithm 1 L.3–11). Returns the round
     /// record (also appended to `self.log`).
+    ///
+    /// Sampled clients run through the round engine (`cfg.exec.workers`
+    /// concurrent local rounds); updates are folded in sampled order, so
+    /// the record stream is bit-identical across worker counts.
     pub fn run_round(&mut self) -> Result<RoundRecord> {
         let round = self.next_round;
         let t0 = Instant::now();
@@ -155,23 +174,45 @@ impl Federation {
 
         let schedule = self.cfg.schedule;
         let lr_at = move |t: u64| schedule.lr(t);
-        let mut updates: Vec<ClientUpdate> = Vec::with_capacity(k);
+
+        // One slot per runnable client, in sampled order — the slot is the
+        // deterministic reduction position, independent of which worker
+        // finishes first.
+        let mut slot_of = vec![usize::MAX; self.cfg.n_clients];
+        let mut n_runnable = 0usize;
         for &c in &sampled {
-            if faults.is_dropped(c) {
-                continue;
+            if !faults.is_dropped(c) {
+                slot_of[c] = n_runnable;
+                n_runnable += 1;
             }
-            let steps = faults.effective_steps(c, self.cfg.local_steps);
-            let upd = self.nodes[c]
-                .run_local_round(
-                    &self.model,
-                    &self.global,
-                    steps,
-                    self.seq_step,
-                    &lr_at,
-                    self.cfg.opt_state,
-                )
-                .with_context(|| format!("client {c} round {round}"))?;
-            updates.push(upd);
+        }
+        let local_steps = self.cfg.local_steps;
+        let seq_base = self.seq_step;
+        let policy = self.cfg.opt_state;
+        let engine = RoundExec::new(self.cfg.exec.workers);
+        let model = &self.model;
+        let global = &self.global;
+        let mut tasks: Vec<ClientTask> = self
+            .nodes
+            .iter_mut()
+            .enumerate()
+            .filter(|(c, _)| slot_of[*c] != usize::MAX)
+            .map(|(c, node)| ClientTask {
+                client_id: c,
+                steps: faults.effective_steps(c, local_steps),
+                node,
+            })
+            .collect();
+        tasks.sort_by_key(|t| slot_of[t.client_id]);
+        let results = engine.run(&mut tasks, |task| {
+            task.node
+                .run_local_round(model, global, task.steps, seq_base, &lr_at, policy)
+                .with_context(|| format!("client {} round {round}", task.client_id))
+        });
+        drop(tasks);
+        let mut updates: Vec<ClientUpdate> = Vec::with_capacity(results.len());
+        for r in results {
+            updates.push(r?);
         }
 
         // Schedule advances by the nominal τ regardless of faults (the
@@ -180,7 +221,10 @@ impl Federation {
         self.next_round += 1;
 
         if updates.is_empty() {
-            // Every sampled client dropped: global model unchanged.
+            // Every sampled client dropped: global model unchanged. Still a
+            // completed round — it must produce its checkpoint file, or a
+            // resume would silently replay it (and re-advance the schedule
+            // against a stale round counter).
             let (nll, ppl) = self.eval_global()?;
             let rec = RoundRecord {
                 round,
@@ -191,28 +235,31 @@ impl Federation {
                 ..Default::default()
             };
             self.log.push(rec.clone());
+            self.write_round_checkpoint()?;
             return Ok(rec);
         }
 
-        // --- Aggregation (L.8–9) -----------------------------------------
+        // --- Aggregation (L.8–9): one streaming pass over the K client
+        // vectors produces the weighted mean, the pseudo-gradient, and the
+        // delta Gram matrix (norms + pairwise cosines) with no per-round
+        // O(K·N) allocation.
         let rows: Vec<&[f32]> = updates.iter().map(|u| u.params.as_slice()).collect();
         let weights: Vec<f64> = updates.iter().map(|u| u.n_samples).collect();
-        weighted_mean_into(&rows, &weights, &mut self.scratch_mean);
-        sub_into(&self.global, &self.scratch_mean, &mut self.scratch_pg);
+        let agg = streaming_aggregate(
+            &rows,
+            &weights,
+            &self.global,
+            &mut self.scratch_mean,
+            &mut self.scratch_pg,
+            &mut self.scratch_agg,
+        );
+        drop(rows);
         let pseudo_grad_norm = l2_norm(&self.scratch_pg);
         self.outer.step(&mut self.global, &self.scratch_pg);
 
         // --- Metrics -------------------------------------------------------
         let losses: Vec<f64> = updates.iter().map(|u| u.loss_mean).collect();
         let (loss_mean, loss_std) = mean_std(&losses);
-        let deltas: Vec<Vec<f32>> = updates
-            .iter()
-            .map(|u| {
-                let mut d = vec![0.0f32; u.params.len()];
-                sub_into(&u.params, &self.scratch_mean, &mut d);
-                d
-            })
-            .collect();
         let (nll, ppl) = self.eval_global()?;
         let rec = RoundRecord {
             round,
@@ -244,18 +291,25 @@ impl Federation {
             )
             .0,
             momentum_norm: self.outer.momentum_norm(),
-            client_cosine_mean: mean_pairwise_cosine(&deltas),
+            client_cosine_mean: mean_pairwise_cosine_from_gram(agg.k, &agg.gram),
             participated: updates.len(),
             comm_bytes: link::round_bytes(self.model.n_params(), updates.len()),
             wall_secs: t0.elapsed().as_secs_f64(),
         };
         self.log.push(rec.clone());
+        self.write_round_checkpoint()?;
+        Ok(rec)
+    }
 
-        if let Some(dir) = self.ckpt_dir.clone() {
+    /// Drop `ckpt_round_<next_round>.bin` if checkpointing is configured.
+    /// Called on every round completion path — including rounds where all
+    /// sampled clients dropped — so the checkpoint sequence has no holes.
+    fn write_round_checkpoint(&self) -> Result<()> {
+        if let Some(dir) = &self.ckpt_dir {
             self.checkpoint()
                 .save(&dir.join(format!("ckpt_round_{}.bin", self.next_round)))?;
         }
-        Ok(rec)
+        Ok(())
     }
 
     /// Run all configured rounds (resuming from `next_round`).
@@ -266,18 +320,21 @@ impl Federation {
         Ok(self.log.rounds.clone())
     }
 
-    /// Snapshot the full federation state.
+    /// Snapshot the full federation state. Every stream cursor of every
+    /// client is captured — multi-island clients have one per island, and
+    /// all of them must survive a resume for the fleet to stay
+    /// sample-exact.
     pub fn checkpoint(&self) -> Checkpoint {
         let clients = self
             .nodes
             .iter()
             .map(|n| {
-                let cursor = n.streams[0].cursor();
+                let cursors = n.streams.iter().map(|s| s.cursor()).collect();
                 let (m, v, st) = match &n.saved_opt {
                     Some((m, v, st)) => (m.clone(), v.clone(), *st),
                     None => (Vec::new(), Vec::new(), 0),
                 };
-                Some(ClientCkpt { opt_m: m, opt_v: v, local_step: st, cursor })
+                Some(ClientCkpt { opt_m: m, opt_v: v, local_step: st, cursors })
             })
             .collect();
         let (t, m, v) = self.outer.state();
@@ -311,6 +368,20 @@ impl Federation {
         if ck.clients.len() != self.nodes.len() {
             bail!("checkpoint has {} clients, config {}", ck.clients.len(), self.nodes.len());
         }
+        // Validate cursor arity before mutating anything so a fleet
+        // mismatch cannot leave the federation half-restored.
+        for (id, (node, c)) in self.nodes.iter().zip(&ck.clients).enumerate() {
+            if let Some(c) = c {
+                if c.cursors.len() != node.streams.len() {
+                    bail!(
+                        "checkpoint client {id} carries {} stream cursors, \
+                         config builds {} islands (fleet mismatch?)",
+                        c.cursors.len(),
+                        node.streams.len()
+                    );
+                }
+            }
+        }
         self.global.copy_from_slice(&ck.global);
         self.outer.restore(ck.outer_t, ck.outer_m.clone(), ck.outer_v.clone());
         self.seq_step = ck.seq_step;
@@ -318,7 +389,9 @@ impl Federation {
         self.elapsed_offset = ck.elapsed_secs;
         for (node, c) in self.nodes.iter_mut().zip(&ck.clients) {
             if let Some(c) = c {
-                node.streams[0].restore(&c.cursor);
+                for (stream, cur) in node.streams.iter_mut().zip(&c.cursors) {
+                    stream.restore(cur);
+                }
                 node.saved_opt = if c.opt_m.is_empty() {
                     None
                 } else {

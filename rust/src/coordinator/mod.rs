@@ -3,16 +3,36 @@
 //! * `sampler`     — reproducible client sampling (Algorithm 1 L.4)
 //! * `client`      — the Photon LLM Node: local training pipeline, island
 //!                   sub-federation, optimizer-state policy (L.12–27)
-//! * `federation`  — the Photon Aggregator: round orchestration, outer
-//!                   optimization, metrics, checkpointing (L.1–11)
+//! * `round_exec`  — the round execution engine: sampled clients' local
+//!                   rounds run on a worker pool (Photon runs LLM Nodes
+//!                   concurrently)
+//! * `federation`  — the Photon Aggregator: round orchestration, streaming
+//!                   aggregation, outer optimization, metrics,
+//!                   checkpointing (L.1–11)
 //! * `centralized` — the centralized baseline every figure compares against
+//!
+//! ## Parallelism & determinism
+//!
+//! `ExperimentConfig::exec.workers` (CLI `--workers N|auto`, default 1)
+//! sets how many clients train concurrently per round. Under a fixed seed
+//! the produced `RoundRecord` stream and the global model are bit-identical
+//! for every worker count: client sampling happens before execution,
+//! every client's local round depends only on its own state, and the
+//! aggregator folds updates in sampled order regardless of completion
+//! order (see `round_exec` for the mechanism, `rust/tests/props.rs` for
+//! the property test). PJRT dispatch stays mutex-serialized unless
+//! `exec.serialize_dispatch` is turned off (`--parallel-dispatch`), so the
+//! default concurrency is in the host-side work: batch assembly, literal
+//! construction, partial aggregation, and metrics.
 
 pub mod centralized;
 pub mod client;
 pub mod federation;
+pub mod round_exec;
 pub mod sampler;
 
 pub use centralized::run_centralized;
 pub use client::{ClientNode, ClientUpdate};
 pub use federation::Federation;
+pub use round_exec::{ClientTask, RoundExec};
 pub use sampler::ClientSampler;

@@ -1,0 +1,177 @@
+//! The round execution engine: runs the sampled clients' local rounds on a
+//! worker pool (Photon runs many LLM Nodes concurrently; the paper's
+//! Aggregator only ever sees completed updates).
+//!
+//! ## Determinism guarantee
+//!
+//! `RoundExec::run` is a *deterministic parallel map over mutable tasks*:
+//! given tasks whose work function depends only on the task's own state
+//! (each client owns its streams, RNGs, and optimizer moments), the result
+//! vector and the final task states are bit-identical for every worker
+//! count, including the sequential `workers = 1` path. Two mechanisms make
+//! this hold:
+//!
+//! * results are written into the slot matching the task's input position,
+//!   so downstream reduction (FedAvg weighted mean, metrics) always folds
+//!   updates in sampled order regardless of completion order;
+//! * tasks are handed to workers whole — a task never migrates mid-run, so
+//!   its mutations happen on one thread with no interleaving.
+//!
+//! Shared-model access is governed separately by
+//! `runtime::DispatchPolicy`: under the default `Serialized` policy the XLA
+//! dispatch is mutex-gated while host-side batch assembly, literal
+//! construction, and aggregation still overlap across workers.
+//!
+//! The worker count comes from `config::ExecConfig::workers`
+//! (`--workers N|auto` on the CLI); `0` means one worker per available CPU,
+//! capped at the number of runnable tasks. `rust/tests/props.rs` holds the
+//! parallel-vs-sequential bit-exactness property test, and `bench_round`
+//! tracks the speedup at K ≥ 8.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::coordinator::client::ClientNode;
+
+/// One sampled client's work order for a round, in sampled order.
+pub struct ClientTask<'a> {
+    pub client_id: usize,
+    /// Effective local steps after fault injection (stragglers run fewer).
+    pub steps: u64,
+    pub node: &'a mut ClientNode,
+}
+
+/// Worker-pool executor for one federated round (or any per-task
+/// deterministic map).
+pub struct RoundExec {
+    workers: usize,
+}
+
+impl RoundExec {
+    /// `workers = 0` means auto (available parallelism).
+    pub fn new(workers: usize) -> RoundExec {
+        RoundExec { workers }
+    }
+
+    /// Worker threads that will actually run for `n_tasks` runnable tasks.
+    pub fn effective_workers(&self, n_tasks: usize) -> usize {
+        let w = if self.workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.workers
+        };
+        w.min(n_tasks).max(1)
+    }
+
+    /// Run `f` over every task, returning results in task order. With one
+    /// effective worker this is a plain in-order loop; with more, tasks are
+    /// claimed from a shared queue in task order and executed concurrently.
+    /// `f` must depend only on the task it is given (plus immutable shared
+    /// state) — that is what makes the parallel schedule bit-exact with the
+    /// sequential one.
+    pub fn run<T, R, F>(&self, tasks: &mut [T], f: F) -> Vec<Result<R>>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(&mut T) -> Result<R> + Sync,
+    {
+        let n = tasks.len();
+        let w = self.effective_workers(n);
+        if w <= 1 {
+            return tasks.iter_mut().map(|t| f(t)).collect();
+        }
+
+        // Slot-addressed handout: workers claim the next unclaimed task by
+        // index and write its result into the matching slot.
+        let queue: Vec<Mutex<Option<&mut T>>> =
+            tasks.iter_mut().map(|t| Mutex::new(Some(t))).collect();
+        let slots: Vec<Mutex<Option<Result<R>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..w {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let task = queue[i]
+                        .lock()
+                        .unwrap_or_else(|p| p.into_inner())
+                        .take()
+                        .expect("task claimed twice");
+                    let r = f(task);
+                    *slots[i].lock().unwrap_or_else(|p| p.into_inner()) = Some(r);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|s| {
+                s.into_inner()
+                    .unwrap_or_else(|p| p.into_inner())
+                    .expect("worker exited without reporting a result")
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_and_parallel_agree_in_order() {
+        let run = |workers: usize| {
+            let mut tasks: Vec<u64> = (0..17).collect();
+            let results: Vec<u64> = RoundExec::new(workers)
+                .run(&mut tasks, |t| {
+                    *t = t.wrapping_mul(0x9E3779B97F4A7C15);
+                    Ok(*t >> 7)
+                })
+                .into_iter()
+                .map(|r| r.unwrap())
+                .collect();
+            (tasks, results)
+        };
+        let (t1, r1) = run(1);
+        for workers in [2, 3, 8, 0] {
+            let (tw, rw) = run(workers);
+            assert_eq!(t1, tw, "task states must match at workers={workers}");
+            assert_eq!(r1, rw, "results must match at workers={workers}");
+        }
+    }
+
+    #[test]
+    fn errors_stay_in_their_slot() {
+        let mut tasks: Vec<usize> = (0..6).collect();
+        let results = RoundExec::new(3).run(&mut tasks, |t| {
+            if *t % 2 == 1 {
+                anyhow::bail!("odd task {t}")
+            }
+            Ok(*t)
+        });
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.is_err(), i % 2 == 1, "slot {i}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_task() {
+        let mut none: Vec<u32> = Vec::new();
+        assert!(RoundExec::new(4).run(&mut none, |_| Ok(())).is_empty());
+        let mut one = vec![5u32];
+        let r = RoundExec::new(4).run(&mut one, |t| Ok(*t * 2));
+        assert_eq!(r.into_iter().next().unwrap().unwrap(), 10);
+    }
+
+    #[test]
+    fn effective_workers_clamps() {
+        assert_eq!(RoundExec::new(8).effective_workers(3), 3);
+        assert_eq!(RoundExec::new(2).effective_workers(10), 2);
+        assert_eq!(RoundExec::new(5).effective_workers(0), 1);
+        assert!(RoundExec::new(0).effective_workers(64) >= 1);
+    }
+}

@@ -3,7 +3,7 @@
 //! qualitative-shape assertion helpers.
 
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -19,7 +19,7 @@ use crate::util::{results_dir, table::Table};
 /// process even when several experiment variants use it.
 pub struct ModelCache {
     rt: Runtime,
-    models: HashMap<String, Rc<ModelRuntime>>,
+    models: HashMap<String, Arc<ModelRuntime>>,
 }
 
 impl ModelCache {
@@ -27,12 +27,12 @@ impl ModelCache {
         Ok(ModelCache { rt: Runtime::cpu()?, models: HashMap::new() })
     }
 
-    pub fn get(&mut self, name: &str) -> Result<Rc<ModelRuntime>> {
+    pub fn get(&mut self, name: &str) -> Result<Arc<ModelRuntime>> {
         if let Some(m) = self.models.get(name) {
             return Ok(m.clone());
         }
         eprintln!("[photon] compiling artifacts for {name} ...");
-        let m = Rc::new(self.rt.load_model(name)?);
+        let m = Arc::new(self.rt.load_model(name)?);
         self.models.insert(name.to_string(), m.clone());
         Ok(m)
     }
@@ -47,6 +47,8 @@ pub struct Scale {
     pub local_steps: u64,
     pub eval_batches: usize,
     pub seed: u64,
+    /// Round-engine workers (`--workers N|auto`; 0 = auto, 1 = sequential).
+    pub workers: usize,
 }
 
 impl Scale {
@@ -65,6 +67,7 @@ impl Scale {
             local_steps: steps,
             eval_batches: args.get_usize("eval-batches", 4)?,
             seed: args.get_u64("seed", 42)?,
+            workers: args.get_count_or_auto("workers", 1)?,
         })
     }
 
@@ -83,6 +86,7 @@ impl Scale {
         cfg.local_steps = self.local_steps;
         cfg.eval_batches = self.eval_batches;
         cfg.seed = self.seed;
+        cfg.exec.workers = self.workers;
         let total = self.rounds as u64 * self.local_steps;
         cfg.schedule =
             CosineSchedule::new(3e-3, 0.1, total.max(2), (total / 20).min(50));
@@ -169,7 +173,7 @@ mod tests {
     use crate::util::cli::{Args, Spec};
 
     const SPEC: Spec = Spec {
-        options: &["rounds", "steps", "seed", "eval-batches"],
+        options: &["rounds", "steps", "seed", "eval-batches", "workers"],
         flags: &["fast", "paper-scale"],
     };
 
@@ -187,15 +191,21 @@ mod tests {
         assert_eq!(s.local_steps, 500);
         let s = Scale::from_args(&args(&["--rounds", "3", "--steps", "7"]), 12, 40).unwrap();
         assert_eq!((s.rounds, s.local_steps), (3, 7));
+        let s = Scale::from_args(&args(&["--workers", "auto"]), 12, 40).unwrap();
+        assert_eq!(s.workers, 0);
+        let s = Scale::from_args(&args(&[]), 12, 40).unwrap();
+        assert_eq!(s.workers, 1, "sequential by default");
     }
 
     #[test]
     fn scale_config_shapes() {
-        let s = Scale { rounds: 4, local_steps: 10, eval_batches: 2, seed: 1 };
+        let s = Scale { rounds: 4, local_steps: 10, eval_batches: 2, seed: 1, workers: 3 };
         let cfg = s.config("m75a", CorpusKind::C4Iid, 8, 4);
         cfg.validate().unwrap();
         assert_eq!(cfg.rounds, 4);
         assert_eq!(cfg.clients_per_round, 4);
         assert_eq!(cfg.total_sequential_steps(), 40);
+        assert_eq!(cfg.exec.workers, 3);
+        assert!(cfg.exec.serialize_dispatch, "dispatch stays serialized by default");
     }
 }

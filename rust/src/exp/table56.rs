@@ -26,7 +26,7 @@ pub fn table56(args: &Args) -> Result<()> {
 
     // Federated pre-training of each ladder size (paper recipe: K=4/P=64
     // for the big models; full participation for 1B-analog).
-    let mut trained: Vec<(String, Vec<f32>, std::rc::Rc<crate::runtime::ModelRuntime>)> =
+    let mut trained: Vec<(String, Vec<f32>, std::sync::Arc<crate::runtime::ModelRuntime>)> =
         Vec::new();
     for (model, label) in SIZES {
         let (p, k) = if model == "m1ba" { (8, 8) } else { (64, 4) };

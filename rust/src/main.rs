@@ -8,6 +8,7 @@
 //!              [--steps T] [--outer fedavg|sgdn|fedadam|...] [--hetero]
 //!              [--keep-opt] [--dropout p] [--straggler p]
 //!              [--ckpt-dir DIR] [--resume] [--lr-max X] [--fleet-hetero]
+//!              [--workers N|auto] [--parallel-dispatch]
 //! photon eval --config m350a               downstream ICL suite on a fresh init
 //! photon info [--config NAME]              artifact inventory
 //! ```
@@ -16,7 +17,7 @@ use anyhow::{bail, Result};
 
 use photon::cluster::faults::FaultPlan;
 use photon::cluster::hardware::FleetSpec;
-use photon::config::{CorpusKind, ExperimentConfig, OptStatePolicy};
+use photon::config::{CorpusKind, ExecConfig, ExperimentConfig, OptStatePolicy};
 use photon::coordinator::Federation;
 use photon::exp;
 use photon::optim::outer::{OuterHyper, OuterOptKind};
@@ -27,11 +28,11 @@ const SPEC: Spec = Spec {
     options: &[
         "config", "rounds", "steps", "seed", "clients", "sampled", "outer",
         "server-lr", "server-momentum", "lr-max", "eval-batches", "dropout",
-        "straggler", "ckpt-dir", "j", "items",
+        "straggler", "ckpt-dir", "j", "items", "workers",
     ],
     flags: &[
         "fast", "paper-scale", "hetero", "mc4", "keep-opt", "resume",
-        "fleet-hetero", "verbose",
+        "fleet-hetero", "verbose", "parallel-dispatch",
     ],
 };
 
@@ -151,6 +152,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         } else {
             None
         },
+        exec: ExecConfig {
+            workers: args.get_count_or_auto("workers", 1)?,
+            serialize_dispatch: !args.flag("parallel-dispatch"),
+        },
     };
 
     let mut fed = Federation::new(cfg)?;
@@ -162,8 +167,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
     }
 
+    let workers = match fed.cfg.exec.workers {
+        0 => "auto".to_string(),
+        w => w.to_string(),
+    };
     println!(
-        "training {model}: P={p} K={k} rounds={rounds} τ={steps} outer={:?}",
+        "training {model}: P={p} K={k} rounds={rounds} τ={steps} outer={:?} workers={workers}",
         fed.cfg.outer
     );
     while fed.next_round < fed.cfg.rounds {

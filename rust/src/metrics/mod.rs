@@ -92,6 +92,30 @@ pub fn mean_std(xs: &[f64]) -> (f64, f64) {
     (mean, var.sqrt())
 }
 
+/// Mean pairwise cosine similarity from a precomputed K×K delta Gram
+/// matrix (`vecmath::streaming_aggregate`): cos(i,j) = G_ij/√(G_ii·G_jj),
+/// zero-norm pairs contribute 0 (matching `vecmath::cosine`). This is the
+/// streaming-aggregation replacement for `mean_pairwise_cosine` — same
+/// metric, no materialized delta vectors.
+pub fn mean_pairwise_cosine_from_gram(k: usize, gram: &[f64]) -> f64 {
+    debug_assert_eq!(gram.len(), k * k);
+    if k < 2 {
+        return 1.0;
+    }
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for i in 0..k {
+        for j in (i + 1)..k {
+            let (gii, gjj) = (gram[i * k + i], gram[j * k + j]);
+            if gii > 0.0 && gjj > 0.0 {
+                sum += gram[i * k + j] / (gii.sqrt() * gjj.sqrt());
+            }
+            n += 1;
+        }
+    }
+    sum / n as f64
+}
+
 /// Mean pairwise cosine similarity among client delta vectors (the paper's
 /// federated consensus metric). O(K²·N) — K is small (≤ 64).
 pub fn mean_pairwise_cosine(deltas: &[Vec<f32>]) -> f64 {
@@ -131,6 +155,36 @@ mod tests {
         let m = mean_pairwise_cosine(&[a, b, c]);
         assert!((m - 1.0 / 3.0).abs() < 1e-9);
         assert_eq!(mean_pairwise_cosine(&[vec![1.0]]), 1.0);
+    }
+
+    #[test]
+    fn gram_cosine_matches_materialized() {
+        let deltas = vec![
+            vec![1.0f32, 0.5, -0.25],
+            vec![-0.5f32, 1.0, 0.75],
+            vec![0.0f32, -1.0, 0.5],
+        ];
+        let k = deltas.len();
+        let mut gram = vec![0.0f64; k * k];
+        for i in 0..k {
+            for j in 0..k {
+                gram[i * k + j] = deltas[i]
+                    .iter()
+                    .zip(&deltas[j])
+                    .map(|(&x, &y)| x as f64 * y as f64)
+                    .sum();
+            }
+        }
+        let a = mean_pairwise_cosine(&deltas);
+        let b = mean_pairwise_cosine_from_gram(k, &gram);
+        assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        // Zero-norm client contributes 0 to its pairs, matching cosine().
+        let with_zero = vec![vec![1.0f32, 0.0], vec![0.0f32, 0.0]];
+        let mut g2 = vec![0.0f64; 4];
+        g2[0] = 1.0; // only the non-zero diagonal entry
+        assert_eq!(mean_pairwise_cosine(&with_zero), 0.0);
+        assert_eq!(mean_pairwise_cosine_from_gram(2, &g2), 0.0);
+        assert_eq!(mean_pairwise_cosine_from_gram(1, &[4.0]), 1.0);
     }
 
     #[test]

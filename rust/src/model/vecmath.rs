@@ -2,7 +2,19 @@
 //!
 //! These loops ARE the Photon Aggregator's hot path (outer optimizers run on
 //! the full parameter vector every round), so they are written allocation-
-//! free over slices; `bench_aggregate` tracks their throughput.
+//! free over slices (O(1) or caller-owned scratch — never O(N) per call);
+//! `bench_aggregate` tracks their throughput.
+//!
+//! `streaming_aggregate` is the round-level entry point: one blocked pass
+//! over the K client parameter vectors producing the weighted mean, the
+//! pseudo-gradient, and the K×K delta Gram matrix (per-client delta norms +
+//! pairwise cosines) without ever materializing the K full-size delta
+//! vectors.
+
+/// Block width (elements) of the blocked accumulators. Small enough that a
+/// per-client f32 delta block for K=64 clients stays cache-resident, large
+/// enough to amortize the loop overhead.
+pub const AGG_BLOCK: usize = 2048;
 
 /// L2 norm.
 pub fn l2_norm(x: &[f32]) -> f64 {
@@ -58,27 +70,157 @@ pub fn mean_into(rows: &[&[f32]], out: &mut [f32]) {
     }
 }
 
+/// Accumulate the weighted mean of `rows[..][lo..lo+acc.len()]` into `acc`
+/// (zeroed here; f64; rows in order, `w/total` normalization). The ONE
+/// per-block accumulation loop shared by `weighted_mean_into` and
+/// `streaming_aggregate`, so their per-element operation order — and hence
+/// their bit-identical-results contract — can never diverge.
+fn weighted_mean_block(rows: &[&[f32]], weights: &[f64], total: f64, lo: usize, acc: &mut [f64]) {
+    acc.fill(0.0);
+    for (row, &w) in rows.iter().zip(weights) {
+        let wn = w / total;
+        for (a, &v) in acc.iter_mut().zip(&row[lo..lo + acc.len()]) {
+            *a += wn * v as f64;
+        }
+    }
+}
+
 /// Weighted mean with weights summing to anything positive (normalized
-/// internally) — FedAvg with per-client sample counts.
+/// internally) — FedAvg with per-client sample counts. Accumulates in f64
+/// block-by-block over a fixed stack buffer, so no heap allocation happens
+/// regardless of the parameter count. Per element, rows are accumulated in
+/// order, so the result is bit-identical to a whole-vector f64 accumulator.
 pub fn weighted_mean_into(rows: &[&[f32]], weights: &[f64], out: &mut [f32]) {
     assert_eq!(rows.len(), weights.len());
     assert!(!rows.is_empty());
     let total: f64 = weights.iter().sum();
     assert!(total > 0.0, "weights must sum to a positive value");
-    for o in out.iter_mut() {
-        *o = 0.0;
+    let n = out.len();
+    for row in rows {
+        debug_assert_eq!(row.len(), n);
     }
-    let mut acc: Vec<f64> = vec![0.0; out.len()];
-    for (row, &w) in rows.iter().zip(weights) {
-        debug_assert_eq!(row.len(), out.len());
-        let wn = w / total;
-        for (a, &v) in acc.iter_mut().zip(*row) {
-            *a += wn * v as f64;
+    let mut acc = [0.0f64; AGG_BLOCK];
+    let mut lo = 0;
+    while lo < n {
+        let b = AGG_BLOCK.min(n - lo);
+        weighted_mean_block(rows, weights, total, lo, &mut acc[..b]);
+        for (o, &a) in out[lo..lo + b].iter_mut().zip(&acc[..b]) {
+            *o = a as f32;
+        }
+        lo += b;
+    }
+}
+
+/// Caller-owned scratch for `streaming_aggregate`: one f64 accumulator
+/// block plus one f32 delta block per client. Grows to the largest K seen
+/// and is reused across rounds (federation keeps one per instance).
+#[derive(Default)]
+pub struct AggScratch {
+    acc: Vec<f64>,
+    deltas: Vec<f32>,
+}
+
+impl AggScratch {
+    pub fn new() -> AggScratch {
+        AggScratch::default()
+    }
+
+    fn ensure(&mut self, k: usize) {
+        self.acc.resize(AGG_BLOCK, 0.0);
+        if self.deltas.len() < k * AGG_BLOCK {
+            self.deltas.resize(k * AGG_BLOCK, 0.0);
         }
     }
-    for (o, a) in out.iter_mut().zip(acc) {
-        *o = a as f32;
+}
+
+/// Round statistics produced by `streaming_aggregate` in the same pass as
+/// the mean: the K×K Gram matrix of client deltas `d_k = θ_k − mean`
+/// (row-major; diagonal = squared delta norms).
+pub struct AggStats {
+    pub k: usize,
+    pub gram: Vec<f64>,
+}
+
+impl AggStats {
+    /// L2 norm of client `i`'s delta from the round mean.
+    pub fn delta_norm(&self, i: usize) -> f64 {
+        self.gram[i * self.k + i].sqrt()
     }
+}
+
+/// One blocked pass over the K client parameter vectors computing, without
+/// materializing any full-size intermediate:
+///
+/// * `mean_out`  = weighted mean of `rows` (bit-identical to
+///   `weighted_mean_into` — same per-element accumulation order),
+/// * `pg_out`    = `global − mean` (bit-identical to `sub_into`),
+/// * the returned delta Gram matrix `G[i][j] = Σ d_i·d_j` with
+///   `d_k = rows[k] − mean` computed in f32 (matching the former
+///   explicitly-materialized delta vectors) and accumulated in f64.
+///
+/// Replaces the old per-round `O(K·N)` delta clones: scratch is `O(K)`
+/// blocks and the Gram matrix is `O(K²)`, independent of N.
+pub fn streaming_aggregate(
+    rows: &[&[f32]],
+    weights: &[f64],
+    global: &[f32],
+    mean_out: &mut [f32],
+    pg_out: &mut [f32],
+    scratch: &mut AggScratch,
+) -> AggStats {
+    let k = rows.len();
+    assert_eq!(k, weights.len());
+    assert!(k > 0, "streaming_aggregate needs at least one row");
+    let n = global.len();
+    assert_eq!(mean_out.len(), n);
+    assert_eq!(pg_out.len(), n);
+    let total: f64 = weights.iter().sum();
+    assert!(total > 0.0, "weights must sum to a positive value");
+    for row in rows {
+        debug_assert_eq!(row.len(), n);
+    }
+    scratch.ensure(k);
+    let mut gram = vec![0.0f64; k * k];
+
+    let mut lo = 0;
+    while lo < n {
+        let b = AGG_BLOCK.min(n - lo);
+        // Weighted mean of this block (the shared per-block loop, so the
+        // result stays bit-identical to `weighted_mean_into`) → mean + pg.
+        let acc = &mut scratch.acc[..b];
+        weighted_mean_block(rows, weights, total, lo, acc);
+        for i in 0..b {
+            let m = acc[i] as f32;
+            mean_out[lo + i] = m;
+            pg_out[lo + i] = global[lo + i] - m;
+        }
+        // Per-client delta blocks (f32 subtraction, as the materialized
+        // deltas were) and the upper-triangle Gram contribution.
+        for (c, row) in rows.iter().enumerate() {
+            let d = &mut scratch.deltas[c * AGG_BLOCK..c * AGG_BLOCK + b];
+            for i in 0..b {
+                d[i] = row[lo + i] - mean_out[lo + i];
+            }
+        }
+        for i in 0..k {
+            let di = &scratch.deltas[i * AGG_BLOCK..i * AGG_BLOCK + b];
+            for j in i..k {
+                let dj = &scratch.deltas[j * AGG_BLOCK..j * AGG_BLOCK + b];
+                let mut dot = 0.0f64;
+                for (&x, &y) in di.iter().zip(dj) {
+                    dot += x as f64 * y as f64;
+                }
+                gram[i * k + j] += dot;
+            }
+        }
+        lo += b;
+    }
+    for i in 0..k {
+        for j in 0..i {
+            gram[i * k + j] = gram[j * k + i];
+        }
+    }
+    AggStats { k, gram }
 }
 
 /// `out = a - b` (pseudo-gradient: Δ = θ_global − θ_client).
@@ -180,5 +322,90 @@ mod tests {
         let a = [1.0f32];
         let mut out = [0.0f32];
         weighted_mean_into(&[&a], &[0.0], &mut out);
+    }
+
+    #[test]
+    fn weighted_mean_spans_block_boundaries() {
+        // n > AGG_BLOCK exercises the blocked path end-to-end.
+        let n = AGG_BLOCK + 17;
+        let a: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..n).map(|i| (2 * i) as f32).collect();
+        let mut out = vec![0.0f32; n];
+        weighted_mean_into(&[&a, &b], &[1.0, 1.0], &mut out);
+        for (i, &o) in out.iter().enumerate() {
+            assert_eq!(o, 1.5 * i as f32, "element {i}");
+        }
+    }
+
+    #[test]
+    fn streaming_aggregate_matches_composed_path() {
+        let n = AGG_BLOCK + 100;
+        let k = 3;
+        let rowsv: Vec<Vec<f32>> = (0..k)
+            .map(|c| (0..n).map(|i| ((i * (c + 1)) % 17) as f32 * 0.25 - 1.0).collect())
+            .collect();
+        let rows: Vec<&[f32]> = rowsv.iter().map(|v| v.as_slice()).collect();
+        let weights = [1.0, 2.5, 0.5];
+        let global: Vec<f32> = (0..n).map(|i| (i % 13) as f32 * 0.1).collect();
+
+        // Reference: the old materializing path.
+        let mut ref_mean = vec![0.0f32; n];
+        weighted_mean_into(&rows, &weights, &mut ref_mean);
+        let mut ref_pg = vec![0.0f32; n];
+        sub_into(&global, &ref_mean, &mut ref_pg);
+        let deltas: Vec<Vec<f32>> = rowsv
+            .iter()
+            .map(|r| {
+                let mut d = vec![0.0f32; n];
+                sub_into(r, &ref_mean, &mut d);
+                d
+            })
+            .collect();
+
+        let mut mean = vec![0.0f32; n];
+        let mut pg = vec![0.0f32; n];
+        let mut scratch = AggScratch::new();
+        let stats =
+            streaming_aggregate(&rows, &weights, &global, &mut mean, &mut pg, &mut scratch);
+
+        assert_eq!(mean, ref_mean, "mean must be bit-identical");
+        assert_eq!(pg, ref_pg, "pseudo-gradient must be bit-identical");
+        for i in 0..k {
+            let rel = (stats.delta_norm(i) - l2_norm(&deltas[i])).abs()
+                / l2_norm(&deltas[i]).max(1e-12);
+            assert!(rel < 1e-12, "delta norm {i}: rel err {rel}");
+            for j in 0..k {
+                let dot: f64 = deltas[i]
+                    .iter()
+                    .zip(&deltas[j])
+                    .map(|(&x, &y)| x as f64 * y as f64)
+                    .sum();
+                let g = stats.gram[i * k + j];
+                assert!(
+                    (g - dot).abs() <= 1e-9 * dot.abs().max(1.0),
+                    "gram[{i}][{j}]: {g} vs {dot}"
+                );
+            }
+        }
+        // Gram is symmetric.
+        for i in 0..k {
+            for j in 0..k {
+                assert_eq!(stats.gram[i * k + j], stats.gram[j * k + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_aggregate_single_row() {
+        let a = [1.0f32, 2.0, 3.0];
+        let g = [2.0f32, 2.0, 2.0];
+        let mut mean = [0.0f32; 3];
+        let mut pg = [0.0f32; 3];
+        let mut scratch = AggScratch::new();
+        let stats = streaming_aggregate(&[&a], &[4.0], &g, &mut mean, &mut pg, &mut scratch);
+        assert_eq!(mean, a);
+        assert_eq!(pg, [1.0, 0.0, -1.0]);
+        // Single client: delta from the mean is identically zero.
+        assert_eq!(stats.delta_norm(0), 0.0);
     }
 }

@@ -71,7 +71,13 @@ pub struct OuterOpt {
 
 impl OuterOpt {
     pub fn new(kind: OuterOptKind, hyper: OuterHyper, n_params: usize) -> OuterOpt {
-        let needs_m = !matches!(kind, OuterOptKind::FedAvg);
+        // Only optimizers that actually keep a first moment get a buffer;
+        // FedAdagrad is momentum-free (its buf_m stays empty so
+        // `momentum_norm` reports 0, not the pseudo-gradient norm).
+        let needs_m = matches!(
+            kind,
+            OuterOptKind::FedMomentum { .. } | OuterOptKind::FedAdam | OuterOptKind::FedYogi
+        );
         let needs_v = matches!(
             kind,
             OuterOptKind::FedAdam | OuterOptKind::FedYogi | OuterOptKind::FedAdagrad
@@ -138,13 +144,10 @@ impl OuterOpt {
                 }
             }
             OuterOptKind::FedAdagrad => {
-                for ((g, &d), (m, v)) in global
-                    .iter_mut()
-                    .zip(pseudo_grad)
-                    .zip(self.buf_m.iter_mut().zip(self.buf_v.iter_mut()))
+                for ((g, &d), v) in
+                    global.iter_mut().zip(pseudo_grad).zip(self.buf_v.iter_mut())
                 {
                     let df = d as f64;
-                    *m = df; // no momentum; kept for norm reporting
                     *v += df * df;
                     *g -= (h.lr * df / (v.sqrt() + h.eps)) as f32;
                 }
@@ -153,6 +156,8 @@ impl OuterOpt {
     }
 
     /// L2 norm of the server momentum buffer (fig11's tracked quantity).
+    /// Momentum-free optimizers (FedAvg, FedAdagrad) keep no first-moment
+    /// buffer and report 0.
     pub fn momentum_norm(&self) -> f64 {
         self.buf_m.iter().map(|&m| m * m).sum::<f64>().sqrt()
     }
@@ -267,6 +272,22 @@ mod tests {
         let mut g = vec![0.0f32, 0.0];
         opt.step(&mut g, &[3.0, 4.0]);
         assert!((opt.momentum_norm() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn momentum_free_optimizers_report_zero_momentum_norm() {
+        // Regression: FedAdagrad used to write the raw pseudo-gradient into
+        // buf_m "for norm reporting", so fig11's momentum_norm column showed
+        // the gradient norm for a momentum-free optimizer.
+        for kind in [OuterOptKind::FedAvg, OuterOptKind::FedAdagrad] {
+            let mut opt = OuterOpt::new(kind, hyper(0.1, 0.9), 3);
+            let mut g = vec![0.0f32; 3];
+            for _ in 0..4 {
+                opt.step(&mut g, &[3.0, -4.0, 1.0]);
+            }
+            assert_eq!(opt.momentum_norm(), 0.0, "{kind:?}");
+            assert!(opt.buf_m.is_empty(), "{kind:?} must not keep a moment buffer");
+        }
     }
 
     #[test]

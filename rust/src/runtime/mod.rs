@@ -10,11 +10,54 @@
 //! `artifacts/<config>/`, everything in this module is self-contained.
 
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::model::manifest::{Manifest, StepSig};
 use crate::util;
+
+/// How concurrent callers of a `ModelRuntime` are allowed to enter PJRT.
+///
+/// The round execution engine (`coordinator::round_exec`) runs client local
+/// rounds on a worker pool; host-side work (batch assembly, literal
+/// construction, output reads) always overlaps freely, and this policy
+/// decides whether the XLA executable dispatch itself may too.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// One dispatch at a time through a per-model mutex (the default, and
+    /// always safe: the compiled CPU executable is treated as non-reentrant).
+    Serialized,
+    /// Dispatches run concurrently, relying on PJRT's documented
+    /// thread-safe `Execute`. Opt-in (`--parallel-dispatch`).
+    Concurrent,
+}
+
+/// The per-model gate implementing `DispatchPolicy`. Kept separate from the
+/// step functions so one policy covers train/eval/score uniformly.
+struct DispatchGate {
+    serialize: AtomicBool,
+    lock: Mutex<()>,
+}
+
+impl DispatchGate {
+    fn new() -> DispatchGate {
+        DispatchGate { serialize: AtomicBool::new(true), lock: Mutex::new(()) }
+    }
+
+    /// Returns a guard that must be held across the PJRT dispatch when the
+    /// policy is `Serialized`, or `None` under `Concurrent`.
+    fn acquire(&self) -> Option<MutexGuard<'_, ()>> {
+        if self.serialize.load(Ordering::Acquire) {
+            // The gate protects no data of its own, so a poisoned lock
+            // (a worker panicked mid-dispatch) is still a usable gate.
+            Some(self.lock.lock().unwrap_or_else(|p| p.into_inner()))
+        } else {
+            None
+        }
+    }
+}
 
 /// Process-wide PJRT client handle.
 pub struct Runtime {
@@ -38,7 +81,23 @@ pub struct ModelRuntime {
     pub eval: StepFn,
     pub score: StepFn,
     pub dir: PathBuf,
+    dispatch: DispatchGate,
 }
+
+// SAFETY: `ModelRuntime` is shared across the round engine's worker threads
+// behind `Arc`. Every field except the `StepFn`s is plain owned data, and
+// all Rust-side state (`sig`, `name`, manifest, `dir`) is immutable after
+// load. The `StepFn`s wrap PJRT handles whose C API
+// (`PJRT_LoadedExecutable_Execute` and buffer syncs) is specified as
+// thread-safe; additionally, under the default
+// `DispatchPolicy::Serialized` the `DispatchGate` admits at most one thread
+// into executable dispatch per model, so even a non-thread-safe build of
+// the bundled xla_extension never executes concurrently. The only xla calls
+// made outside the gate construct or read `xla::Literal` host buffers that
+// are created, used, and dropped by a single thread — no shared object is
+// touched on those paths.
+unsafe impl Send for ModelRuntime {}
+unsafe impl Sync for ModelRuntime {}
 
 /// Host-resident training state for one Photon LLM Node replica.
 /// `step` counts *sequential* optimizer steps (1-based at first use), which
@@ -117,6 +176,7 @@ impl Runtime {
             score: compile(&manifest.score_step, "score_step")?,
             dir: dir.to_path_buf(),
             manifest,
+            dispatch: DispatchGate::new(),
         })
     }
 }
@@ -207,6 +267,32 @@ fn read_into(lit: &xla::Literal, dst: &mut [f32]) -> Result<()> {
 }
 
 impl ModelRuntime {
+    /// Set how concurrent callers may enter PJRT (see `DispatchPolicy`).
+    /// Takes `&self`: the runtime is shared behind `Arc` and the policy is
+    /// an execution knob, not model state.
+    ///
+    /// The policy is **per-model process state**, not per-caller: every
+    /// `Federation` built over the same `Arc<ModelRuntime>` (e.g. through
+    /// `exp::common::ModelCache`) shares one gate, and
+    /// `Federation::with_model` resets it from its config. Sequential use
+    /// is always fine; if federations sharing a model ever run rounds
+    /// concurrently, they must agree on the policy — a late
+    /// `Concurrent` flip would remove the mutex other workers' safety
+    /// argument relies on.
+    pub fn set_dispatch_policy(&self, policy: DispatchPolicy) {
+        self.dispatch
+            .serialize
+            .store(policy == DispatchPolicy::Serialized, Ordering::Release);
+    }
+
+    pub fn dispatch_policy(&self) -> DispatchPolicy {
+        if self.dispatch.serialize.load(Ordering::Acquire) {
+            DispatchPolicy::Serialized
+        } else {
+            DispatchPolicy::Concurrent
+        }
+    }
+
     pub fn n_params(&self) -> usize {
         self.manifest.n_params
     }
@@ -242,7 +328,12 @@ impl ModelRuntime {
             scalar_of(lr),
             lit_tokens(tokens, self.batch_size(), self.seq_width())?,
         ];
-        let out = self.train.execute(&inputs)?;
+        // Literals above are built outside the gate so host-side batch
+        // assembly overlaps across workers even under Serialized dispatch.
+        let out = {
+            let _gate = self.dispatch.acquire();
+            self.train.execute(&inputs)?
+        };
         read_into(&out[0], &mut state.params)?;
         read_into(&out[1], &mut state.m)?;
         read_into(&out[2], &mut state.v)?;
@@ -297,7 +388,10 @@ impl ModelRuntime {
             lit_f32_vec(lrs),
             tok_lit,
         ];
-        let out = self.train_chunk.execute(&inputs)?;
+        let out = {
+            let _gate = self.dispatch.acquire();
+            self.train_chunk.execute(&inputs)?
+        };
         read_into(&out[0], &mut state.params)?;
         read_into(&out[1], &mut state.m)?;
         read_into(&out[2], &mut state.v)?;
@@ -322,7 +416,10 @@ impl ModelRuntime {
             lit_f32_vec(params),
             lit_tokens(tokens, self.batch_size(), self.seq_width())?,
         ];
-        let out = self.eval.execute(&inputs)?;
+        let out = {
+            let _gate = self.dispatch.acquire();
+            self.eval.execute(&inputs)?
+        };
         Ok((read_f32_scalar(&out[0])? as f64, read_f32_scalar(&out[1])? as f64))
     }
 
@@ -355,7 +452,10 @@ impl ModelRuntime {
             lit_tokens(tokens, self.batch_size(), self.seq_width())?,
             lit_mask(mask, self.batch_size(), self.manifest.config.seq_len)?,
         ];
-        let out = self.score.execute(&inputs)?;
+        let out = {
+            let _gate = self.dispatch.acquire();
+            self.score.execute(&inputs)?
+        };
         let ll = out[0]
             .to_vec::<f32>()
             .map_err(|e| anyhow!("score output: {e}"))?;
@@ -389,5 +489,18 @@ mod tests {
     fn token_literal_shape_checked() {
         assert!(lit_tokens(&[1, 2, 3], 2, 2).is_err());
         assert!(lit_tokens(&[1, 2, 3, 4], 2, 2).is_ok());
+    }
+
+    #[test]
+    fn dispatch_gate_serializes_by_default() {
+        let gate = DispatchGate::new();
+        assert!(gate.acquire().is_some(), "default policy must serialize");
+        gate.serialize.store(false, Ordering::Release);
+        assert!(gate.acquire().is_none(), "concurrent policy takes no lock");
+        gate.serialize.store(true, Ordering::Release);
+        let g1 = gate.acquire();
+        assert!(g1.is_some());
+        drop(g1);
+        assert!(gate.acquire().is_some(), "gate is reusable after release");
     }
 }

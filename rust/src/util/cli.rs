@@ -79,6 +79,19 @@ impl Args {
         }
     }
 
+    /// Like `get_usize` but also accepts the literal `auto`, which maps to
+    /// 0 ("let the system decide") — used by worker-count knobs such as
+    /// `--workers auto`.
+    pub fn get_count_or_auto(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some("auto") => Ok(0),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer or 'auto', got {v:?}")),
+        }
+    }
+
     pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
         match self.get(name) {
             None => Ok(default),
@@ -94,7 +107,7 @@ mod tests {
     use super::*;
 
     const SPEC: Spec = Spec {
-        options: &["config", "rounds", "lr"],
+        options: &["config", "rounds", "lr", "workers"],
         flags: &["fast", "verbose"],
     };
 
@@ -122,6 +135,20 @@ mod tests {
         let a = parse(&["--lr", "0.5"]).unwrap();
         assert_eq!(a.get_f64("lr", 1.0).unwrap(), 0.5);
         assert_eq!(a.get_usize("rounds", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn count_or_auto() {
+        let a = parse(&["--workers", "auto"]).unwrap();
+        assert_eq!(a.get_count_or_auto("workers", 1).unwrap(), 0);
+        let a = parse(&["--workers", "4"]).unwrap();
+        assert_eq!(a.get_count_or_auto("workers", 1).unwrap(), 4);
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.get_count_or_auto("workers", 1).unwrap(), 1);
+        assert!(parse(&["--workers", "many"])
+            .unwrap()
+            .get_count_or_auto("workers", 1)
+            .is_err());
     }
 
     #[test]

@@ -3,16 +3,18 @@
 //! round must be exact — global model, outer-optimizer state, schedule
 //! position, and every client's stream cursor.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
+use photon::cluster::faults::FaultPlan;
+use photon::cluster::hardware::{ClientHardware, FleetSpec, NodeSpec, A40};
 use photon::config::{ExperimentConfig, OptStatePolicy};
 use photon::coordinator::Federation;
 use photon::optim::outer::{OuterHyper, OuterOptKind};
 use photon::runtime::{ModelRuntime, Runtime};
 
-fn model() -> Rc<ModelRuntime> {
+fn model() -> Arc<ModelRuntime> {
     let rt = Runtime::cpu().unwrap();
-    Rc::new(rt.load_model("m75a").expect("run `make artifacts`"))
+    Arc::new(rt.load_model("m75a").expect("run `make artifacts`"))
 }
 
 fn cfg() -> ExperimentConfig {
@@ -70,6 +72,70 @@ fn auto_checkpointing_during_run() {
     assert_eq!(ck.global, fed.global);
     assert_eq!(ck.seq_step, 24);
     assert!(ck.clients.iter().all(|c| c.is_some()));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn multi_island_resume_is_sample_exact() {
+    // Regression: v1 checkpoints saved only streams[0]'s cursor, so a
+    // multi-island (hetero-fleet) client resumed islands 1.. from their
+    // *initial* stream state — resume was not sample-exact. Every island
+    // cursor must now survive the roundtrip.
+    let m = model();
+    let mut c = cfg();
+    c.n_clients = 2;
+    c.clients_per_round = 2;
+    let wan_client = ClientHardware {
+        nodes: vec![NodeSpec { gpu: A40, n_gpus: 1, intra_gbps: 600.0 }; 2],
+        inter_gbps: 0.1, // two poorly-connected nodes → two islands
+    };
+    c.fleet = Some(FleetSpec { clients: vec![wan_client.clone(), wan_client] });
+
+    // Uninterrupted reference run.
+    let mut full = Federation::with_model(c.clone(), m.clone()).unwrap();
+    full.run().unwrap();
+
+    // Interrupted + resumed run.
+    let mut first = Federation::with_model(c.clone(), m.clone()).unwrap();
+    first.run_round().unwrap();
+    first.run_round().unwrap();
+    let ck = first.checkpoint();
+    assert!(
+        ck.clients.iter().all(|cl| cl.as_ref().unwrap().cursors.len() == 2),
+        "each 2-island client must checkpoint 2 cursors"
+    );
+    drop(first);
+    let mut resumed = Federation::with_model(c, m).unwrap();
+    resumed.restore(&ck).unwrap();
+    resumed.run().unwrap();
+
+    assert_eq!(resumed.global, full.global, "hetero-fleet resume must be bit-exact");
+}
+
+#[test]
+fn all_dropped_round_still_writes_checkpoint() {
+    // Regression: a round where every sampled client dropped returned
+    // before the checkpoint block, so ckpt_dir silently skipped a round
+    // file and resume replayed the round.
+    let m = model();
+    let dir = std::env::temp_dir().join(format!("photon_it_drop_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut c = cfg();
+    c.rounds = 2;
+    c.faults = FaultPlan { dropout_prob: 1.0, straggler_prob: 0.0, straggler_fraction: 0.5, seed: 1 };
+    let mut fed = Federation::with_model(c.clone(), m.clone()).unwrap();
+    fed.ckpt_dir = Some(dir.clone());
+    fed.run().unwrap();
+    for round in [1u64, 2] {
+        assert!(
+            dir.join(format!("ckpt_round_{round}.bin")).is_file(),
+            "round {round} checkpoint missing despite ckpt_dir being set"
+        );
+    }
+    let mut resumed = Federation::with_model(c, m).unwrap();
+    assert!(resumed.try_resume_from(&dir).unwrap());
+    assert_eq!(resumed.next_round, 2, "resume must not replay the dropped round");
+    assert_eq!(resumed.seq_step, fed.seq_step, "schedule position must survive");
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -1,7 +1,7 @@
 //! Integration: full federated rounds over real artifacts.
 //! Requires `make artifacts`.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use photon::cluster::faults::FaultPlan;
 use photon::cluster::hardware::{ClientHardware, FleetSpec, NodeSpec, A40};
@@ -13,18 +13,18 @@ use photon::data::stream::TokenStream;
 use photon::model::init::init_params;
 use photon::runtime::{ModelRuntime, Runtime, TrainState};
 
-fn model() -> Rc<ModelRuntime> {
-    // Per-thread cache: Rc/PjRt handles are not Sync, and cargo runs tests
-    // on multiple threads. Compiling m75a is cheap (<1 s) so a handful of
-    // per-thread compiles is acceptable.
+fn model() -> Arc<ModelRuntime> {
+    // Per-thread cache: cargo runs tests on multiple threads and each test
+    // mutates the shared dispatch policy, so giving every test thread its
+    // own runtime keeps them independent. Compiling m75a is cheap (<1 s).
     thread_local! {
-        static CACHED: std::cell::OnceCell<Rc<ModelRuntime>> =
+        static CACHED: std::cell::OnceCell<Arc<ModelRuntime>> =
             const { std::cell::OnceCell::new() };
     }
     CACHED.with(|c| {
         c.get_or_init(|| {
             let rt = Runtime::cpu().unwrap();
-            Rc::new(rt.load_model("m75a").expect("run `make artifacts`"))
+            Arc::new(rt.load_model("m75a").expect("run `make artifacts`"))
         })
         .clone()
     })
@@ -186,6 +186,45 @@ fn centralized_baseline_converges_and_aligns_rounds() {
     assert_eq!(log.rounds.len(), cfg.rounds);
     assert!(log.rounds.last().unwrap().server_ppl < log.rounds[0].server_ppl);
     assert!(log.rounds.iter().all(|r| r.comm_bytes == 0));
+}
+
+#[test]
+fn parallel_round_engine_is_bit_exact() {
+    // The acceptance bar for the round engine: with a fixed seed, the
+    // RoundRecord stream and the global model produced with a worker pool
+    // must be bit-identical to the sequential path (wall time excepted).
+    let run = |workers: usize| {
+        let mut cfg = base_cfg();
+        cfg.n_clients = 8;
+        cfg.clients_per_round = 8;
+        cfg.faults = FaultPlan::new(0.2, 0.3, 5); // stragglers + drops too
+        cfg.exec.workers = workers;
+        let mut fed = Federation::with_model(cfg, model()).unwrap();
+        fed.run().unwrap();
+        (fed.global.clone(), fed.log.rounds.clone())
+    };
+    let (g_seq, rec_seq) = run(1);
+    let (g_par, rec_par) = run(4);
+    assert_eq!(g_seq, g_par, "global model must be bit-identical");
+    assert_eq!(rec_seq.len(), rec_par.len());
+    for (a, b) in rec_seq.iter().zip(&rec_par) {
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.server_ppl, b.server_ppl);
+        assert_eq!(a.server_nll, b.server_nll);
+        assert_eq!(a.client_loss_mean, b.client_loss_mean);
+        assert_eq!(a.client_loss_std, b.client_loss_std);
+        assert_eq!(a.global_model_norm, b.global_model_norm);
+        assert_eq!(a.client_model_norm_mean, b.client_model_norm_mean);
+        assert_eq!(a.client_avg_norm, b.client_avg_norm);
+        assert_eq!(a.pseudo_grad_norm, b.pseudo_grad_norm);
+        assert_eq!(a.step_grad_norm_mean, b.step_grad_norm_mean);
+        assert_eq!(a.applied_update_norm_mean, b.applied_update_norm_mean);
+        assert_eq!(a.act_norm_mean, b.act_norm_mean);
+        assert_eq!(a.momentum_norm, b.momentum_norm);
+        assert_eq!(a.client_cosine_mean, b.client_cosine_mean);
+        assert_eq!(a.participated, b.participated);
+        assert_eq!(a.comm_bytes, b.comm_bytes);
+    }
 }
 
 #[test]

@@ -5,12 +5,15 @@
 use photon::ckpt::{Checkpoint, ClientCkpt};
 use photon::cluster::batchsize::find_micro_batch_with;
 use photon::cluster::island::partial_aggregate;
-use photon::coordinator::ClientSampler;
+use photon::coordinator::{ClientSampler, RoundExec};
 use photon::data::corpus::SyntheticCorpus;
 use photon::data::partition::Partition;
 use photon::data::stream::{StreamCursor, TokenStream};
 use photon::link::{decode_model, encode_model, MsgKind};
-use photon::model::vecmath::{mean_into, weighted_mean_into};
+use photon::metrics::{mean_pairwise_cosine, mean_pairwise_cosine_from_gram};
+use photon::model::vecmath::{
+    l2_norm, mean_into, streaming_aggregate, sub_into, weighted_mean_into, AggScratch,
+};
 use photon::optim::outer::{OuterHyper, OuterOpt, OuterOptKind};
 use photon::optim::schedule::CosineSchedule;
 use photon::testkit::{assert_close, check, rand_vec};
@@ -197,22 +200,26 @@ fn prop_checkpoint_roundtrip() {
                         opt_m: rand_vec(rng, n, 1.0),
                         opt_v: rand_vec(rng, n, 1.0),
                         local_step: rng.below(1000) as i64,
-                        cursor: StreamCursor {
-                            mix_state: [rng.next_u64(); 4],
-                            bucket_states: (0..1 + rng.usize_below(3))
-                                .map(|_| {
-                                    (
-                                        [
-                                            rng.next_u64(),
-                                            rng.next_u64(),
-                                            rng.next_u64(),
-                                            rng.next_u64(),
-                                        ],
-                                        rng.below(100),
-                                    )
-                                })
-                                .collect(),
-                        },
+                        // 1–3 cursors: multi-island clients checkpoint one
+                        // per island.
+                        cursors: (0..1 + rng.usize_below(3))
+                            .map(|_| StreamCursor {
+                                mix_state: [rng.next_u64(); 4],
+                                bucket_states: (0..1 + rng.usize_below(3))
+                                    .map(|_| {
+                                        (
+                                            [
+                                                rng.next_u64(),
+                                                rng.next_u64(),
+                                                rng.next_u64(),
+                                                rng.next_u64(),
+                                            ],
+                                            rng.below(100),
+                                        )
+                                    })
+                                    .collect(),
+                            })
+                            .collect(),
                     })
                 }
             })
@@ -331,6 +338,136 @@ fn prop_outer_optimizers_finite_and_descending_direction() {
             // Direction sanity: a pure-positive pseudo-grad must not raise
             // any coordinate on the first step.
             let _ = before;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_round_exec_parallel_matches_sequential_bit_exact() {
+    // The round engine's contract (coordinator module docs): for work that
+    // depends only on the task's own state, any worker count produces the
+    // same results *and* the same final task states as the sequential path.
+    // Tasks here mimic a client local round: a seeded RNG stream is
+    // advanced a task-specific number of steps and folded into a vector.
+    #[derive(Clone, PartialEq, Debug)]
+    struct FakeNode {
+        rng_seed: u64,
+        steps: u64,
+        out: Vec<f32>,
+    }
+    check("round_exec_bit_exact", 0xA7, 30, |rng| {
+        let n_tasks = rng.usize_below(12); // includes the empty round
+        let base: Vec<FakeNode> = (0..n_tasks)
+            .map(|_| FakeNode {
+                rng_seed: rng.next_u64(),
+                steps: 1 + rng.below(50),
+                out: Vec::new(),
+            })
+            .collect();
+        let work = |t: &mut FakeNode| -> anyhow::Result<f64> {
+            let mut r = Rng::new(t.rng_seed);
+            let mut acc = 0.0f64;
+            for _ in 0..t.steps {
+                let v = r.f32();
+                t.out.push(v);
+                acc += v as f64;
+            }
+            Ok(acc)
+        };
+        let mut seq_tasks = base.clone();
+        let seq: Vec<f64> = RoundExec::new(1)
+            .run(&mut seq_tasks, work)
+            .into_iter()
+            .map(|r| r.unwrap())
+            .collect();
+        for workers in [2, 3, 7, 0] {
+            let mut par_tasks = base.clone();
+            let par: Vec<f64> = RoundExec::new(workers)
+                .run(&mut par_tasks, work)
+                .into_iter()
+                .map(|r| r.unwrap())
+                .collect();
+            if par != seq {
+                return Err(format!("results diverged at workers={workers}"));
+            }
+            if par_tasks != seq_tasks {
+                return Err(format!("task states diverged at workers={workers}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_streaming_aggregate_matches_materialized_path() {
+    // The streaming accumulator must reproduce the former multi-pass
+    // aggregation: weighted mean and pseudo-gradient bit-exactly, delta
+    // norms and pairwise cosines to f64 round-off.
+    check("streaming_aggregate", 0xA8, 30, |rng| {
+        let n = 1 + rng.usize_below(5000);
+        let k = 1 + rng.usize_below(8);
+        let rowsv: Vec<Vec<f32>> = (0..k).map(|_| rand_vec(rng, n, 2.0)).collect();
+        let rows: Vec<&[f32]> = rowsv.iter().map(|v| v.as_slice()).collect();
+        let weights: Vec<f64> = (0..k).map(|_| 0.1 + rng.f64()).collect();
+        let global = rand_vec(rng, n, 2.0);
+
+        let mut ref_mean = vec![0.0f32; n];
+        weighted_mean_into(&rows, &weights, &mut ref_mean);
+        let mut ref_pg = vec![0.0f32; n];
+        sub_into(&global, &ref_mean, &mut ref_pg);
+        let deltas: Vec<Vec<f32>> = rowsv
+            .iter()
+            .map(|r| {
+                let mut d = vec![0.0f32; n];
+                sub_into(r, &ref_mean, &mut d);
+                d
+            })
+            .collect();
+
+        let mut mean = vec![0.0f32; n];
+        let mut pg = vec![0.0f32; n];
+        let mut scratch = AggScratch::new();
+        let stats =
+            streaming_aggregate(&rows, &weights, &global, &mut mean, &mut pg, &mut scratch);
+        if mean != ref_mean {
+            return Err("mean not bit-identical".into());
+        }
+        if pg != ref_pg {
+            return Err("pseudo-gradient not bit-identical".into());
+        }
+        for (i, d) in deltas.iter().enumerate() {
+            let want = l2_norm(d);
+            let got = stats.delta_norm(i);
+            if (got - want).abs() > 1e-9 * want.max(1.0) {
+                return Err(format!("delta norm {i}: {got} vs {want}"));
+            }
+        }
+        let want_cos = mean_pairwise_cosine(&deltas);
+        let got_cos = mean_pairwise_cosine_from_gram(stats.k, &stats.gram);
+        if (got_cos - want_cos).abs() > 1e-6 {
+            return Err(format!("pairwise cosine: {got_cos} vs {want_cos}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_momentum_free_outer_opts_report_zero_momentum() {
+    // Regression (fig11 CSV): FedAdagrad used to mirror the pseudo-gradient
+    // into buf_m, so momentum_norm() reported a gradient norm.
+    check("momentum_free_norm", 0xA9, 20, |rng| {
+        let n = 1 + rng.usize_below(64);
+        for kind in [OuterOptKind::FedAvg, OuterOptKind::FedAdagrad] {
+            let mut opt = OuterOpt::new(kind, OuterHyper::default(), n);
+            let mut g = rand_vec(rng, n, 1.0);
+            for _ in 0..3 {
+                let pg = rand_vec(rng, n, 1.0);
+                opt.step(&mut g, &pg);
+            }
+            if opt.momentum_norm() != 0.0 {
+                return Err(format!("{kind:?} reported nonzero momentum norm"));
+            }
         }
         Ok(())
     });
