@@ -1,0 +1,70 @@
+//! bench_sim: the event-driven wall-clock simulator — schedule replay and
+//! full-timeline simulation cost at fleet scale (it must stay cheap enough
+//! to sweep ladders × τ × policies interactively), plus a printed policy
+//! comparison at paper scale.
+
+use photon::benchkit::{bench, bench_header};
+use photon::cluster::faults::FaultPlan;
+use photon::config::ExperimentConfig;
+use photon::netsim::CLOUD_WAN;
+use photon::sim::{
+    fleet_profiles, AggregationPolicy, RoundPlan, SimConfig, Simulator, DEFAULT_MFU,
+};
+
+fn main() {
+    let quick = bench_header("bench_sim: wall-clock federation simulator");
+    let (p, k, rounds) = if quick { (64, 16, 20) } else { (512, 64, 50) };
+
+    let mut cfg = ExperimentConfig::wallclock(p, k, rounds, 500, 3);
+    cfg.faults = FaultPlan::new(0.05, 0.2, 3);
+    let n_params = 110_890_000u64; // paper 125M
+    let payload = n_params * 4;
+    let profiles = fleet_profiles(
+        cfg.fleet.as_ref().unwrap(),
+        n_params,
+        256 * 2048,
+        DEFAULT_MFU,
+    );
+
+    let r = bench(&format!("plan/replay_{p}x{k}x{rounds}"), 0.3, || {
+        std::hint::black_box(RoundPlan::from_config(&cfg));
+    });
+    r.print_with_throughput("rounds", rounds as f64);
+
+    let plan = RoundPlan::from_config(&cfg);
+    for policy in [
+        AggregationPolicy::Sync,
+        AggregationPolicy::SemiSync { deadline_factor: 1.5 },
+        AggregationPolicy::Overlap,
+    ] {
+        let r = bench(
+            &format!("sim/{}_{p}x{k}x{rounds}", policy.label()),
+            0.3,
+            || {
+                let sc = SimConfig::new(payload, CLOUD_WAN, policy);
+                std::hint::black_box(
+                    Simulator::new(plan.clone(), profiles.clone(), sc).run(),
+                );
+            },
+        );
+        r.print_with_throughput("rounds", rounds as f64);
+    }
+
+    println!("\nsimulated wall-clock at paper scale (τ=500, 1 Gbit/s WAN):");
+    for policy in [
+        AggregationPolicy::Sync,
+        AggregationPolicy::SemiSync { deadline_factor: 1.5 },
+        AggregationPolicy::Overlap,
+    ] {
+        let sc = SimConfig::new(payload, CLOUD_WAN, policy);
+        let rep = Simulator::new(plan.clone(), profiles.clone(), sc).run();
+        println!(
+            "  {:<9} total {:>10.1}s  mean round {:>8.1}s  comm {:>5.2}%  late {}",
+            policy.label(),
+            rep.total_secs,
+            rep.mean_round_secs(),
+            100.0 * rep.comm_fraction(),
+            rep.late_total,
+        );
+    }
+}

@@ -116,6 +116,21 @@ impl ExperimentConfig {
         c
     }
 
+    /// Schedule-only config for the wall-clock simulator (`sim` module /
+    /// `wallclock` experiment): the model artifact is never loaded — only
+    /// the sampler/fault schedule and the heterogeneous fleet matter.
+    pub fn wallclock(p: usize, k: usize, rounds: usize, tau: u64, seed: u64) -> ExperimentConfig {
+        let mut c = ExperimentConfig::quickstart("m75a");
+        c.label = format!("wallclock-{p}x{k}");
+        c.n_clients = p;
+        c.clients_per_round = k;
+        c.rounds = rounds;
+        c.local_steps = tau;
+        c.seed = seed;
+        c.fleet = Some(FleetSpec::heterogeneous(p));
+        c
+    }
+
     /// Total sequential optimizer steps a client will have taken by the end.
     pub fn total_sequential_steps(&self) -> u64 {
         self.rounds as u64 * self.local_steps
@@ -238,6 +253,14 @@ mod tests {
         assert!(c.validate().is_err());
         c.clients_per_round = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn wallclock_config_validates_with_fleet() {
+        let c = ExperimentConfig::wallclock(16, 4, 10, 500, 7);
+        c.validate().unwrap();
+        assert_eq!(c.fleet.as_ref().unwrap().clients.len(), 16);
+        assert_eq!((c.rounds, c.local_steps), (10, 500));
     }
 
     #[test]

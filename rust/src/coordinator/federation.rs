@@ -402,6 +402,53 @@ impl Federation {
         Ok(())
     }
 
+    /// The exact round schedule this federation executes (same sampler
+    /// draws, same fault realizations), replayable through the wall-clock
+    /// simulator without touching the model runtime.
+    pub fn round_plan(&self) -> crate::sim::RoundPlan {
+        crate::sim::RoundPlan::from_config(&self.cfg)
+    }
+
+    /// Replay this federation's schedule through the event-driven
+    /// wall-clock simulator (`sim` module): per-client compute time comes
+    /// from the configured fleet (uniform single-A100 clients when no
+    /// fleet is set), payload bytes from the loaded model, transfer time
+    /// from `link`.
+    ///
+    /// # Example
+    ///
+    /// ```no_run
+    /// use photon::config::ExperimentConfig;
+    /// use photon::coordinator::Federation;
+    /// use photon::netsim::BROADBAND;
+    /// use photon::sim::AggregationPolicy;
+    ///
+    /// let fed = Federation::new(ExperimentConfig::quickstart("m75a")).unwrap();
+    /// let report = fed.simulate_wallclock(BROADBAND, AggregationPolicy::Sync);
+    /// println!("simulated run: {:.1} s over 100 Mbit/s", report.total_secs);
+    /// ```
+    pub fn simulate_wallclock(
+        &self,
+        link: crate::netsim::Link,
+        policy: crate::sim::AggregationPolicy,
+    ) -> crate::sim::SimReport {
+        use crate::cluster::hardware::{FleetSpec, A100};
+        let n_params = self.model.n_params() as u64;
+        let tokens = (self.model.batch_size() * self.model.seq_width()) as u64;
+        let uniform;
+        let fleet = match &self.cfg.fleet {
+            Some(f) => f,
+            None => {
+                uniform = FleetSpec::uniform(self.cfg.n_clients, A100, 1);
+                &uniform
+            }
+        };
+        let profiles =
+            crate::sim::fleet_profiles(fleet, n_params, tokens, crate::sim::DEFAULT_MFU);
+        let sim_cfg = crate::sim::SimConfig::new(n_params * 4, link, policy);
+        crate::sim::Simulator::new(self.round_plan(), profiles, sim_cfg).run()
+    }
+
     /// Resume from the latest checkpoint in `dir` if one exists.
     pub fn try_resume_from(&mut self, dir: &std::path::Path) -> Result<bool> {
         match crate::ckpt::latest_in(dir)? {

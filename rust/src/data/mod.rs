@@ -1,6 +1,15 @@
 //! Photon Data Source substrate: synthetic heterogeneous corpora, the
 //! J×|C| bucket partitioner (paper §6.2.1), and checkpointable token
 //! streams feeding the Photon LLM Nodes (paper §5.2).
+//!
+//! Pipeline: a [`SyntheticCorpus`] defines per-[`Category`] token
+//! statistics (C4-like homogeneous, Pile-like heterogeneous, or
+//! disjoint-vocabulary mC4); a [`Partition`] assigns `j` category
+//! buckets to each of the P clients (IID shards or natural
+//! heterogeneity); [`DataSource`] binds the two under the experiment
+//! seed; and each client node pulls batches from seeded
+//! [`TokenStream`]s whose cursors serialize into checkpoints — resume
+//! is sample-exact, one cursor per connectivity island.
 
 pub mod corpus;
 pub mod partition;

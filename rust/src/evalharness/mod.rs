@@ -10,6 +10,12 @@
 //! A model that has learned the corpus statistics assigns the true
 //! continuation a higher log-likelihood — so accuracy scales with model
 //! quality, which is what Tables 5–6 assert across the ladder.
+//!
+//! Entry points: [`TaskFamily::suite`] derives the 13 families over a
+//! corpus, and [`task_accuracy`] scores one family on a model + params
+//! (used by `photon eval` and the `table56` experiment driver). Scoring
+//! is deterministic given the item seed, so suite accuracies are exactly
+//! reproducible across runs and worker counts.
 
 use anyhow::Result;
 

@@ -1,10 +1,16 @@
 //! Experiment drivers: one per table/figure of the paper's evaluation
-//! (DESIGN.md §4 maps each id to workload, modules, and assertions).
+//! (the README reproduction matrix maps each id to its paper artifact,
+//! exact command, and output CSV; docs/ARCHITECTURE.md maps modules to
+//! paper sections).
 //!
 //! `photon exp <id> [--fast] [--rounds N] [--steps N] [--seed S]`
 //! regenerates the paper artifact: prints the paper-style series/rows,
 //! writes raw CSVs under `results/<id>/`, and checks the qualitative
 //! "shape" claims (who wins, what shrinks, where the crossover sits).
+//!
+//! Training-backed drivers (`fig3`…`table56`) need compiled artifacts
+//! (`make artifacts`); the analytic ones (`table1`–`table4`, `comm`) and
+//! the wall-clock simulation (`wallclock`) run artifact-free.
 
 pub mod comm;
 pub mod common;
@@ -13,6 +19,7 @@ pub mod fig_hetero;
 pub mod fig_norms;
 pub mod fig_partial;
 pub mod fig_scaling;
+pub mod fig_wallclock;
 pub mod table56;
 pub mod tables;
 
@@ -25,7 +32,7 @@ pub struct ExpInfo {
     pub what: &'static str,
 }
 
-pub const EXPERIMENTS: [ExpInfo; 19] = [
+pub const EXPERIMENTS: [ExpInfo; 20] = [
     ExpInfo { id: "table1", what: "token/step accounting (Chinchilla vs MPT vs seq/par)" },
     ExpInfo { id: "table2", what: "architecture ladder (paper + analogues)" },
     ExpInfo { id: "table3", what: "optimization hyperparameters" },
@@ -45,6 +52,7 @@ pub const EXPERIMENTS: [ExpInfo; 19] = [
     ExpInfo { id: "fig15", what: "fig8 norms under partial participation" },
     ExpInfo { id: "table56", what: "in-context learning across the ladder" },
     ExpInfo { id: "comm", what: "communication: federated vs DDP (headline 1)" },
+    ExpInfo { id: "wallclock", what: "event-driven wall-clock: link ladder × τ × aggregation policy (§4.3)" },
 ];
 
 pub fn run(id: &str, args: &Args) -> Result<()> {
@@ -68,6 +76,7 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
         "fig10" => fig_ablation::fig10(args),
         "table56" => table56::table56(args),
         "comm" => comm::comm(args),
+        "wallclock" => fig_wallclock::fig_wallclock(args),
         "all" => {
             for e in &EXPERIMENTS {
                 println!("\n################ {} ################", e.id);

@@ -5,17 +5,23 @@
 //! (CS.LG 2024): federated generative pre-training of LLMs across
 //! organizations holding private data and heterogeneous hardware.
 //!
-//! Layering (see DESIGN.md):
+//! Layering (see `docs/ARCHITECTURE.md` for the full module → paper map):
 //! * **L3 (this crate)** — the Photon Aggregator / LLM Node / Data Source
-//!   runtime: round orchestration, client sampling, outer optimizers,
-//!   hierarchical island aggregation, streaming synthetic corpora, the
-//!   Photon-Link transport, checkpointing, network cost modeling, and the
-//!   experiment harness that regenerates every table/figure of the paper.
+//!   runtime: round orchestration ([`coordinator`]), client sampling,
+//!   outer optimizers ([`optim`]), hierarchical island aggregation
+//!   ([`cluster`]), streaming synthetic corpora ([`data`]), the
+//!   Photon-Link transport ([`link`]), checkpointing ([`ckpt`]), network
+//!   cost modeling ([`netsim`]), the event-driven wall-clock simulator
+//!   ([`sim`]), and the experiment harness ([`exp`]) that regenerates
+//!   every table/figure of the paper.
 //! * **L2/L1 (build-time python)** — the MPT-style transformer train step
 //!   (JAX) with a Pallas flash-attention kernel, AOT-lowered to HLO text in
-//!   `artifacts/` and executed here through PJRT (`runtime` module).
+//!   `artifacts/` and executed here through PJRT (the [`runtime`] module).
 //!
-//! Quick start:
+//! ## Quick start: train a federation
+//!
+//! Requires compiled artifacts (`make artifacts`):
+//!
 //! ```no_run
 //! use photon::config::ExperimentConfig;
 //! use photon::coordinator::Federation;
@@ -24,6 +30,24 @@
 //! let mut fed = Federation::new(cfg).unwrap();
 //! let history = fed.run().unwrap();
 //! println!("final server perplexity: {:.2}", history.last().unwrap().server_ppl);
+//! ```
+//!
+//! ## Quick start: simulate wall-clock (artifact-free)
+//!
+//! The [`sim`] module replays the same round schedule through an
+//! event-driven time model — no artifacts or PJRT needed:
+//!
+//! ```
+//! use photon::config::ExperimentConfig;
+//! use photon::netsim::BROADBAND;
+//! use photon::sim::{AggregationPolicy, RoundPlan, SimConfig, Simulator};
+//!
+//! let cfg = ExperimentConfig::wallclock(8, 8, 5, 500, 42);
+//! let plan = RoundPlan::from_config(&cfg);
+//! let payload = 443_560_000; // 125M params × 4 B
+//! let sim = SimConfig::new(payload, BROADBAND, AggregationPolicy::Sync);
+//! let report = Simulator::uniform(&plan, 2.8, sim).run();
+//! assert!(report.comm_fraction() < 0.05, "WAN hidden behind τ=500 local steps");
 //! ```
 
 pub mod benchkit;
@@ -40,5 +64,6 @@ pub mod model;
 pub mod netsim;
 pub mod optim;
 pub mod runtime;
+pub mod sim;
 pub mod testkit;
 pub mod util;

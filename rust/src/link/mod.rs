@@ -3,12 +3,16 @@
 //! compression ("We do not prune the model by default and only use lossless
 //! compression"), and integrity checking.
 //!
-//! Wire format (little-endian):
-//!   magic "PHLK" | version u16 | kind u16 | flags u32 (bit0 = deflate)
+//! Wire format (little-endian, [`HEADER_BYTES`] = 28-byte header):
+//!   magic "PHLK" (4) | version u16 | kind u16 | flags u32 (bit0 = deflate)
 //!   | uncompressed_len u64 | checksum u64 (FNV-1a of raw payload) | payload
 //!
-//! The netsim module prices these payloads; the `comm` experiment uses the
-//! measured compressed sizes.
+//! A frame with an empty payload is exactly 28 bytes and is valid — the
+//! decoder accepts any frame of at least the header size.
+//!
+//! The netsim module prices these payloads, and the wall-clock simulator
+//! (`sim`) accepts measured frame sizes as its transfer payloads; the
+//! `comm` and `wallclock` experiments use the measured compressed sizes.
 
 use std::io::{Read, Write};
 
@@ -38,6 +42,10 @@ impl MsgKind {
 
 const MAGIC: &[u8; 4] = b"PHLK";
 const VERSION: u16 = 1;
+
+/// Frame header size: magic (4) + version (2) + kind (2) + flags (4) +
+/// uncompressed_len (8) + checksum (8).
+pub const HEADER_BYTES: usize = 28;
 
 fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
@@ -75,7 +83,7 @@ pub fn encode_model(kind: MsgKind, params: &[f32], compress: bool) -> Result<Vec
     } else {
         raw.to_vec()
     };
-    let mut out = Vec::with_capacity(body.len() + 32);
+    let mut out = Vec::with_capacity(body.len() + HEADER_BYTES);
     out.extend_from_slice(MAGIC);
     out.extend_from_slice(&VERSION.to_le_bytes());
     out.extend_from_slice(&(kind as u16).to_le_bytes());
@@ -88,7 +96,9 @@ pub fn encode_model(kind: MsgKind, params: &[f32], compress: bool) -> Result<Vec
 
 /// Decode + verify a Photon-Link frame.
 pub fn decode_model(frame: &[u8]) -> Result<(MsgKind, Vec<f32>)> {
-    if frame.len() < 32 || &frame[..4] != MAGIC {
+    // The header is 28 bytes; an empty payload is legal (e.g. a metrics
+    // probe), so anything of at least HEADER_BYTES with the magic passes.
+    if frame.len() < HEADER_BYTES || &frame[..4] != MAGIC {
         bail!("bad frame header");
     }
     let version = u16::from_le_bytes([frame[4], frame[5]]);
@@ -157,6 +167,27 @@ mod tests {
         let c = encode_model(MsgKind::GlobalModel, &p, true).unwrap();
         let u = encode_model(MsgKind::GlobalModel, &p, false).unwrap();
         assert!(c.len() < u.len() / 4, "{} vs {}", c.len(), u.len());
+    }
+
+    #[test]
+    fn zero_payload_frame_is_valid() {
+        // A header-only frame (28 bytes) round-trips; the old decoder
+        // rejected anything under 32 bytes and broke this case.
+        for compress in [false, true] {
+            let f = encode_model(MsgKind::Metrics, &[], compress).unwrap();
+            if !compress {
+                assert_eq!(f.len(), HEADER_BYTES);
+            }
+            let (kind, back) = decode_model(&f).unwrap();
+            assert_eq!(kind, MsgKind::Metrics);
+            assert!(back.is_empty());
+        }
+    }
+
+    #[test]
+    fn truncated_header_rejected() {
+        let f = encode_model(MsgKind::Metrics, &[], false).unwrap();
+        assert!(decode_model(&f[..HEADER_BYTES - 1]).is_err());
     }
 
     #[test]

@@ -4,6 +4,9 @@
 //! ```text
 //! photon list                              available experiments & models
 //! photon exp <id> [--fast|--paper-scale] [--rounds N] [--steps N] [--seed S]
+//! photon exp wallclock [--size 125M] [--taus 50,500] [--policy all|sync|semisync|overlap]
+//!              [--clients P] [--sampled K] [--straggler p] [--dropout p]
+//!              [--slowdown x] [--deadline f] [--mfu u]
 //! photon train --config m350a [--clients P] [--sampled K] [--rounds N]
 //!              [--steps T] [--outer fedavg|sgdn|fedadam|...] [--hetero]
 //!              [--keep-opt] [--dropout p] [--straggler p]
@@ -29,6 +32,8 @@ const SPEC: Spec = Spec {
         "config", "rounds", "steps", "seed", "clients", "sampled", "outer",
         "server-lr", "server-momentum", "lr-max", "eval-batches", "dropout",
         "straggler", "ckpt-dir", "j", "items", "workers",
+        // wall-clock simulation (exp wallclock)
+        "size", "taus", "policy", "deadline", "slowdown", "mfu",
     ],
     flags: &[
         "fast", "paper-scale", "hetero", "mc4", "keep-opt", "resume",

@@ -3,6 +3,10 @@
 //! and pseudo-gradient L2 norms, activation norms, momentum norms, pairwise
 //! client-model cosine similarity — plus CSV emission for the figure
 //! drivers.
+//!
+//! Also home to the wall-clock simulator's per-round [`TimelineRow`]
+//! (`sim` module, `wallclock` experiment), so every CSV schema the repo
+//! emits lives in one place.
 
 use std::path::Path;
 
@@ -76,6 +80,65 @@ impl MetricsLog {
                 r.step_grad_norm_mean, r.applied_update_norm_mean,
                 r.act_norm_mean, r.momentum_norm, r.client_cosine_mean,
                 r.participated as f64, r.comm_bytes as f64, r.wall_secs,
+            ])?;
+        }
+        w.finish()
+    }
+}
+
+/// One simulated round of the event-driven wall-clock simulator
+/// (`sim::Simulator`): when the round ran, what gated it, who made it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimelineRow {
+    pub round: usize,
+    /// Simulated wall-clock at round start / end (seconds since t=0).
+    pub t_start_secs: f64,
+    pub t_end_secs: f64,
+    pub round_secs: f64,
+    /// One broadcast / upload transfer time on the configured link.
+    pub broadcast_secs: f64,
+    pub upload_secs: f64,
+    /// Longest scheduled client compute span this round (straggler
+    /// slowdown and overlap tail credit included).
+    pub compute_secs: f64,
+    /// Clients whose upload arrived in time to be aggregated.
+    pub n_arrived: usize,
+    /// Clients cut by a semi-sync deadline.
+    pub n_late: usize,
+    /// Sampled clients that dropped before doing any work.
+    pub n_dropped: usize,
+    pub bytes_down: u64,
+    pub bytes_up: u64,
+    /// Client id of the last arrival (-1 if nobody arrived).
+    pub slowest_client: i64,
+}
+
+pub const TIMELINE_CSV_HEADER: [&str; 14] = [
+    "round", "t_start_secs", "t_end_secs", "round_secs", "broadcast_secs",
+    "upload_secs", "compute_secs", "n_arrived", "n_late", "n_dropped",
+    "bytes_down", "bytes_up", "slowest_client", "comm_frac",
+];
+
+/// A simulated timeline with CSV export (`results/wallclock/…`).
+pub struct TimelineLog {
+    pub rows: Vec<TimelineRow>,
+}
+
+impl TimelineLog {
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        let mut w = CsvWriter::create(path, &TIMELINE_CSV_HEADER)?;
+        for r in &self.rows {
+            let comm_frac = if r.round_secs > 0.0 {
+                ((r.broadcast_secs + r.upload_secs) / r.round_secs).min(1.0)
+            } else {
+                0.0
+            };
+            w.row(&[
+                r.round as f64, r.t_start_secs, r.t_end_secs, r.round_secs,
+                r.broadcast_secs, r.upload_secs, r.compute_secs,
+                r.n_arrived as f64, r.n_late as f64, r.n_dropped as f64,
+                r.bytes_down as f64, r.bytes_up as f64,
+                r.slowest_client as f64, comm_frac,
             ])?;
         }
         w.finish()
@@ -185,6 +248,56 @@ mod tests {
         assert_eq!(mean_pairwise_cosine(&with_zero), 0.0);
         assert_eq!(mean_pairwise_cosine_from_gram(2, &g2), 0.0);
         assert_eq!(mean_pairwise_cosine_from_gram(1, &[4.0]), 1.0);
+    }
+
+    #[test]
+    fn timeline_csv_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("photon_tl_{}", std::process::id()));
+        let log = TimelineLog {
+            rows: vec![
+                TimelineRow {
+                    round: 0,
+                    t_start_secs: 0.0,
+                    t_end_secs: 12.5,
+                    round_secs: 12.5,
+                    broadcast_secs: 1.0,
+                    upload_secs: 1.5,
+                    compute_secs: 10.0,
+                    n_arrived: 7,
+                    n_late: 1,
+                    n_dropped: 0,
+                    bytes_down: 800,
+                    bytes_up: 700,
+                    slowest_client: 3,
+                },
+                TimelineRow {
+                    round: 1,
+                    t_start_secs: 12.5,
+                    t_end_secs: 12.5,
+                    round_secs: 0.0,
+                    broadcast_secs: 1.0,
+                    upload_secs: 1.5,
+                    compute_secs: 0.0,
+                    n_arrived: 0,
+                    n_late: 0,
+                    n_dropped: 8,
+                    bytes_down: 0,
+                    bytes_up: 0,
+                    slowest_client: -1,
+                },
+            ],
+        };
+        let p = dir.join("timeline.csv");
+        log.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("round,t_start_secs"));
+        assert!(text.lines().nth(1).unwrap().starts_with("0,0,12.5"));
+        // Zero-duration all-dropped round reports comm_frac 0, slowest -1.
+        let dropped_row = text.lines().nth(2).unwrap();
+        assert!(dropped_row.contains(",-1,"), "{dropped_row}");
+        assert!(dropped_row.ends_with(",0"), "{dropped_row}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

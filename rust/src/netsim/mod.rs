@@ -14,6 +14,20 @@
 //! τ = 500. The `comm` experiment sweeps the ladder and bandwidths.
 
 /// A network link.
+///
+/// # Example
+///
+/// ```
+/// use photon::netsim::{Link, BROADBAND};
+///
+/// // 125 MB over 100 Mbit/s: ~10 s of bandwidth + 30 ms latency.
+/// let secs = BROADBAND.transfer_secs(125_000_000);
+/// assert!((secs - 10.03).abs() < 1e-9);
+///
+/// // A zero-byte transfer still pays one latency.
+/// let rtt_half = Link { gbps: 25.0, latency_s: 10e-6 }.transfer_secs(0);
+/// assert_eq!(rtt_half, 10e-6);
+/// ```
 #[derive(Clone, Copy, Debug)]
 pub struct Link {
     /// Bandwidth in gigaBYTES per second.
@@ -54,10 +68,15 @@ pub fn fed_total_bytes(payload: u64, rounds: u64) -> u64 {
 }
 
 /// Communication ratio DDP/FL for the same sequential-step count
-/// (`steps = rounds·τ`), per worker.
+/// (`steps = rounds·τ`), per worker. Degenerate inputs (zero payload, a
+/// single worker, or zero rounds) move zero federated bytes; the ratio is
+/// defined as 0 there rather than NaN.
 pub fn comm_ratio(payload: u64, n_workers: usize, rounds: u64, tau: u64) -> f64 {
     let ddp = ddp_total_bytes(payload, n_workers, rounds * tau) as f64;
     let fed = fed_total_bytes(payload, rounds) as f64;
+    if fed == 0.0 {
+        return 0.0;
+    }
     ddp / fed
 }
 
@@ -108,6 +127,38 @@ mod tests {
         assert!((r - 500.0 * 7.0 / 8.0).abs() < 1e-6, "{r}");
         // At paper τ=500 that is ~437×; "orders of magnitude".
         assert!(r > 100.0);
+    }
+
+    #[test]
+    fn single_worker_moves_no_ddp_bytes() {
+        // n ≤ 1: there is nobody to allreduce with (and no divide-by-zero).
+        assert_eq!(ring_allreduce_bytes_per_step(1 << 30, 0), 0);
+        assert_eq!(ring_allreduce_bytes_per_step(1 << 30, 1), 0);
+        assert_eq!(ddp_total_bytes(1 << 30, 1, 1_000), 0);
+        assert_eq!(ddp_total_bytes(1 << 30, 0, 1_000), 0);
+        // The ratio degenerates to 0/positive = 0, not NaN.
+        let r = comm_ratio(1 << 30, 1, 10, 500);
+        assert_eq!(r, 0.0);
+        // DDP per-step wall-clock collapses to pure compute.
+        let t = ddp_steps_secs(1 << 30, 1, &CLOUD_WAN, 10, 0.5);
+        assert!((t - 10.0 * (0.5 + CLOUD_WAN.latency_s)).abs() < 1e-9, "{t}");
+    }
+
+    #[test]
+    fn zero_byte_payload_edges() {
+        assert_eq!(fed_total_bytes(0, 100), 0);
+        assert_eq!(ring_allreduce_bytes_per_step(0, 8), 0);
+        assert!(comm_ratio(0, 8, 10, 500).abs() < 1e-12, "0/0 defined as 0");
+        // Zero-byte transfers cost exactly one latency.
+        assert_eq!(DATACENTER.transfer_secs(0), DATACENTER.latency_s);
+        // A zero-byte round is all latency + compute; fraction is finite.
+        let f = fed_comm_fraction(0, &CLOUD_WAN, 10, 1.0);
+        assert!(f > 0.0 && f < 0.011, "{f}");
+    }
+
+    #[test]
+    fn zero_rounds_ratio_defined() {
+        assert_eq!(comm_ratio(1 << 20, 8, 0, 500), 0.0);
     }
 
     #[test]

@@ -1,0 +1,132 @@
+//! Hardware → seconds-per-local-step: the compute side of the wall-clock
+//! model (paper §4.3 does this accounting with A100 throughput; §6.5's
+//! fleets mix A40/A100/H100).
+//!
+//! One optimizer step over `tokens` tokens of an `N`-parameter model costs
+//! ≈ `6·N·tokens` FLOPs (forward + backward). A client delivers
+//! `Σ gpu.tflops · MFU` of that; multi-GPU clients additionally pay a
+//! per-step ring-allreduce of the gradient payload over their slowest
+//! intra-client fabric, priced by [`crate::netsim`].
+
+use crate::cluster::hardware::{ClientHardware, FleetSpec};
+use crate::netsim::{ring_allreduce_bytes_per_step, Link};
+
+/// Default model-FLOPs-utilization for dense transformer pre-training.
+pub const DEFAULT_MFU: f64 = 0.4;
+
+/// Intra-client interconnect latency per allreduce round.
+pub const INTRA_NODE_LATENCY_S: f64 = 5e-6;
+
+/// One client's simulated compute rate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClientProfile {
+    /// Wall-clock seconds per local optimizer step.
+    pub step_secs: f64,
+}
+
+/// FLOPs of one optimizer step: ≈ 6·N per token (fwd 2·N + bwd 4·N).
+pub fn step_flops(n_params: u64, tokens_per_step: u64) -> f64 {
+    6.0 * n_params as f64 * tokens_per_step as f64
+}
+
+/// Seconds per local step on `hw`: compute at `mfu` utilization plus the
+/// per-step DDP gradient allreduce across the client's GPUs (bounded by
+/// its slowest fabric — inter-node bandwidth for multi-node clients).
+pub fn step_secs(hw: &ClientHardware, n_params: u64, tokens_per_step: u64, mfu: f64) -> f64 {
+    let gpus = hw.total_gpus().max(1);
+    let tflops: f64 = hw.nodes.iter().map(|n| n.gpu.tflops * n.n_gpus as f64).sum();
+    let compute = step_flops(n_params, tokens_per_step) / (tflops.max(1e-9) * 1e12 * mfu);
+    if gpus <= 1 {
+        return compute;
+    }
+    let mut fabric = hw
+        .nodes
+        .iter()
+        .map(|n| n.intra_gbps)
+        .fold(f64::INFINITY, f64::min);
+    if hw.nodes.len() > 1 {
+        fabric = fabric.min(hw.inter_gbps);
+    }
+    let bytes = ring_allreduce_bytes_per_step(n_params * 4, gpus);
+    let sync = Link { gbps: fabric, latency_s: INTRA_NODE_LATENCY_S }.transfer_secs(bytes);
+    compute + sync
+}
+
+/// One [`ClientProfile`] per fleet client, indexed by client id.
+pub fn fleet_profiles(
+    fleet: &FleetSpec,
+    n_params: u64,
+    tokens_per_step: u64,
+    mfu: f64,
+) -> Vec<ClientProfile> {
+    fleet
+        .clients
+        .iter()
+        .map(|hw| ClientProfile { step_secs: step_secs(hw, n_params, tokens_per_step, mfu) })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::hardware::{ClientHardware, NodeSpec, A100, A40, H100};
+
+    const N: u64 = 110_890_000; // paper 125M
+    const TOKENS: u64 = 256 * 2048;
+
+    #[test]
+    fn h100_beats_a40() {
+        let a40 = step_secs(&ClientHardware::single(A40, 1), N, TOKENS, DEFAULT_MFU);
+        let h100 = step_secs(&ClientHardware::single(H100, 1), N, TOKENS, DEFAULT_MFU);
+        assert!(h100 < a40, "{h100} vs {a40}");
+        // Sanity: single A100 ≈ 6·N·tokens / (312e12·0.4) ≈ 2.8 s.
+        let a100 = step_secs(&ClientHardware::single(A100, 1), N, TOKENS, DEFAULT_MFU);
+        assert!((a100 - 2.79).abs() < 0.1, "{a100}");
+    }
+
+    #[test]
+    fn single_gpu_has_no_sync_term() {
+        let hw = ClientHardware::single(A100, 1);
+        let got = step_secs(&hw, N, TOKENS, DEFAULT_MFU);
+        let want = step_flops(N, TOKENS) / (A100.tflops * 1e12 * DEFAULT_MFU);
+        assert!((got - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn more_gpus_are_faster_despite_allreduce() {
+        // NVLink-class intra (600 GB/s): sync cost ≪ compute saving.
+        let one = step_secs(&ClientHardware::single(A100, 1), N, TOKENS, DEFAULT_MFU);
+        let four = step_secs(&ClientHardware::single(A100, 4), N, TOKENS, DEFAULT_MFU);
+        assert!(four < one / 3.0, "{four} vs {one}");
+        assert!(four > one / 4.0, "allreduce term is charged");
+    }
+
+    #[test]
+    fn multi_node_bound_by_inter_bandwidth() {
+        let node = NodeSpec { gpu: A100, n_gpus: 2, intra_gbps: 600.0 };
+        let fast = ClientHardware { nodes: vec![node; 2], inter_gbps: 50.0 };
+        let slow = ClientHardware { nodes: vec![node; 2], inter_gbps: 0.1 };
+        let f = step_secs(&fast, N, TOKENS, DEFAULT_MFU);
+        let s = step_secs(&slow, N, TOKENS, DEFAULT_MFU);
+        assert!(s > f, "WAN-bridged client pays for gradient sync: {s} vs {f}");
+    }
+
+    #[test]
+    fn mfu_scales_inversely() {
+        let hw = ClientHardware::single(H100, 1);
+        let half = step_secs(&hw, N, TOKENS, 0.2);
+        let full = step_secs(&hw, N, TOKENS, 0.4);
+        assert!((half - 2.0 * full).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fleet_profiles_indexed_by_client() {
+        let fleet = FleetSpec::heterogeneous(6);
+        let profs = fleet_profiles(&fleet, N, TOKENS, DEFAULT_MFU);
+        assert_eq!(profs.len(), 6);
+        assert!(profs.iter().all(|p| p.step_secs > 0.0));
+        // Client 0 is A40×1 — the slowest single in the cycle.
+        let max = profs.iter().map(|p| p.step_secs).fold(0.0f64, f64::max);
+        assert_eq!(profs[0].step_secs, max);
+    }
+}

@@ -1,0 +1,636 @@
+//! Deterministic event-driven wall-clock federation simulator (paper §4.3
+//! + Photon's headline systems claim: federated rounds hide WAN
+//! communication behind τ local steps, so wall-clock throughput stays
+//! near-datacenter even over 100 Mbit/s links).
+//!
+//! The simulator composes the existing analytic pieces into an
+//! end-to-end timeline:
+//!
+//! * [`plan::RoundPlan`] replays a real [`crate::coordinator::Federation`]
+//!   round schedule — the exact `ClientSampler` draws and `FaultPlan`
+//!   dropouts/stragglers a training run with the same config executes;
+//! * [`compute`] turns per-client hardware profiles
+//!   ([`crate::cluster::hardware`]) into seconds per local step
+//!   (FLOPs / (TFLOP/s · MFU) + intra-client gradient sync priced by
+//!   [`crate::netsim`]);
+//! * [`crate::netsim::Link`] prices every broadcast/upload transfer
+//!   (the payload bytes can come from measured [`crate::link`] frames);
+//! * three aggregation policies ([`AggregationPolicy`]) decide when the
+//!   server closes a round.
+//!
+//! Every round produces a [`crate::metrics::TimelineRow`]; the
+//! `wallclock` experiment (`exp::fig_wallclock`) sweeps link ladders ×
+//! τ × participation and writes the timeline CSVs.
+//!
+//! ## Determinism
+//!
+//! All times are integer microseconds derived once from the f64 inputs;
+//! the event queue orders by `(time, kind-priority, sequence)` where the
+//! sequence number is assigned in deterministic push order. The same
+//! seed + config therefore produces an identical timeline, bit for bit
+//! (property-tested in `rust/tests/props.rs`).
+//!
+//! # Example
+//!
+//! The simulator never loads model artifacts — only the schedule, the
+//! fleet, and the payload size matter — so it runs anywhere:
+//!
+//! ```
+//! use photon::config::ExperimentConfig;
+//! use photon::netsim::CLOUD_WAN;
+//! use photon::sim::{AggregationPolicy, RoundPlan, SimConfig, Simulator};
+//!
+//! let cfg = ExperimentConfig::quickstart("m75a");
+//! let plan = RoundPlan::from_config(&cfg);
+//! let sim = SimConfig::new(28_000_000, CLOUD_WAN, AggregationPolicy::Sync);
+//! let report = Simulator::uniform(&plan, 0.1, sim).run();
+//! assert_eq!(report.rows.len(), cfg.rounds);
+//! assert!(report.total_secs > 0.0);
+//! ```
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::metrics::{TimelineLog, TimelineRow};
+use crate::netsim::Link;
+
+pub mod compute;
+pub mod plan;
+
+pub use compute::{fleet_profiles, step_secs, ClientProfile, DEFAULT_MFU};
+pub use plan::{Participant, RoundPlan, RoundSpec};
+
+/// When does the Aggregator close a round? (Paper §4.3 / Photon.)
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AggregationPolicy {
+    /// Wait for every runnable sampled client's upload (stragglers gate
+    /// the round).
+    Sync,
+    /// Deadline-based semi-synchronous: aggregate whatever arrived by
+    /// `deadline_factor ×` the slowest *nominal* client's round time;
+    /// late clients are cut, reusing the dropped-client aggregation path
+    /// (PR 1). Arrivals exactly at the deadline count as arrived.
+    SemiSync { deadline_factor: f64 },
+    /// Broadcast overlapped with tail local steps: during the dead time
+    /// between a client's upload and the next broadcast completing, the
+    /// client keeps stepping on its local model; those tail steps count
+    /// toward the next round's τ. Credit accrues only for clients
+    /// sampled in consecutive rounds (a client with no model cannot run
+    /// tail steps). The sim prices time, not learning — the staleness of
+    /// tail steps is an optimizer-semantics question outside its scope.
+    Overlap,
+}
+
+impl AggregationPolicy {
+    /// Parse a CLI policy name (`sync` | `semisync` | `overlap`).
+    pub fn parse(s: &str, deadline_factor: f64) -> Result<AggregationPolicy> {
+        Ok(match s {
+            "sync" => AggregationPolicy::Sync,
+            "semisync" | "semi-sync" => {
+                AggregationPolicy::SemiSync { deadline_factor }
+            }
+            "overlap" => AggregationPolicy::Overlap,
+            other => bail!("unknown policy {other:?} (sync|semisync|overlap)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            AggregationPolicy::Sync => "sync",
+            AggregationPolicy::SemiSync { .. } => "semisync",
+            AggregationPolicy::Overlap => "overlap",
+        }
+    }
+}
+
+/// Wall-clock simulation knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    /// Client ↔ server link (uniform across the fleet; per-client compute
+    /// heterogeneity comes from the fleet profiles).
+    pub link: Link,
+    /// Broadcast payload bytes (server → client). Use measured
+    /// `link::encode_model` frame sizes for compressed accounting.
+    pub payload_down_bytes: u64,
+    /// Update payload bytes (client → server).
+    pub payload_up_bytes: u64,
+    pub policy: AggregationPolicy,
+    /// Per-step slowdown multiplier applied to clients the `FaultPlan`
+    /// marks as stragglers (they also complete fewer steps).
+    pub straggler_slowdown: f64,
+    /// Server-side aggregation cost charged at the end of every round.
+    pub server_agg_secs: f64,
+}
+
+impl SimConfig {
+    /// Symmetric-payload config with default straggler slowdown (4×) and
+    /// free server aggregation.
+    pub fn new(payload_bytes: u64, link: Link, policy: AggregationPolicy) -> SimConfig {
+        SimConfig {
+            link,
+            payload_down_bytes: payload_bytes,
+            payload_up_bytes: payload_bytes,
+            policy,
+            straggler_slowdown: 4.0,
+            server_agg_secs: 0.0,
+        }
+    }
+}
+
+// --- event engine ----------------------------------------------------------
+
+const US_PER_SEC: f64 = 1e6;
+
+fn to_us(secs: f64) -> u64 {
+    (secs * US_PER_SEC).round() as u64
+}
+
+fn us_to_secs(us: u64) -> f64 {
+    us as f64 / US_PER_SEC
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum EventKind {
+    BroadcastDone,
+    ComputeDone,
+    UploadDone,
+    Deadline,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Event {
+    at_us: u64,
+    seq: u64,
+    kind: EventKind,
+    /// Participant slot (usize::MAX for Deadline).
+    slot: usize,
+}
+
+impl Event {
+    /// Deadline sorts after same-time arrivals so "arrived by the
+    /// deadline" is inclusive.
+    fn key(&self) -> (u64, u8, u64) {
+        let prio = if self.kind == EventKind::Deadline { 1 } else { 0 };
+        (self.at_us, prio, self.seq)
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key().cmp(&other.key())
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The aggregate outcome of one simulated schedule.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub policy: AggregationPolicy,
+    pub rows: Vec<TimelineRow>,
+    /// End-to-end wall-clock of the whole schedule.
+    pub total_secs: f64,
+    /// Total bytes moved over the client↔server link (down + up).
+    pub total_bytes: u64,
+    pub arrived_total: usize,
+    pub late_total: usize,
+    pub dropped_total: usize,
+}
+
+impl SimReport {
+    pub fn mean_round_secs(&self) -> f64 {
+        if self.rows.is_empty() {
+            return 0.0;
+        }
+        self.rows.iter().map(|r| r.round_secs).sum::<f64>() / self.rows.len() as f64
+    }
+
+    /// Fraction of mean round wall-clock spent on the two transfers
+    /// (§4.3's "communication is negligible at large τ" quantity).
+    pub fn comm_fraction(&self) -> f64 {
+        let mean = self.mean_round_secs();
+        if mean <= 0.0 {
+            return 0.0;
+        }
+        let comm = self
+            .rows
+            .iter()
+            .map(|r| r.broadcast_secs + r.upload_secs)
+            .sum::<f64>()
+            / self.rows.len() as f64;
+        (comm / mean).min(1.0)
+    }
+
+    /// Write the per-round timeline CSV (`metrics::TIMELINE_CSV_HEADER`).
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        TimelineLog { rows: self.rows.clone() }.write_csv(path)
+    }
+}
+
+/// The event-driven simulator: replays a [`RoundPlan`] against per-client
+/// compute profiles and a [`SimConfig`].
+pub struct Simulator {
+    plan: RoundPlan,
+    /// Indexed by client id (0..plan.n_clients).
+    profiles: Vec<ClientProfile>,
+    cfg: SimConfig,
+    now_us: u64,
+    /// Per client: when it became free to run tail steps for the *next*
+    /// round (Overlap). `u64::MAX` = no tail credit — the client did not
+    /// participate in the previous round (or the run just started), so
+    /// it holds no model to step on.
+    free_from_us: Vec<u64>,
+}
+
+impl Simulator {
+    pub fn new(plan: RoundPlan, profiles: Vec<ClientProfile>, cfg: SimConfig) -> Simulator {
+        assert_eq!(
+            profiles.len(),
+            plan.n_clients,
+            "one compute profile per client"
+        );
+        let n = plan.n_clients;
+        Simulator { plan, profiles, cfg, now_us: 0, free_from_us: vec![u64::MAX; n] }
+    }
+
+    /// Uniform fleet: every client takes `step_secs` per local step.
+    pub fn uniform(plan: &RoundPlan, step_secs: f64, cfg: SimConfig) -> Simulator {
+        Simulator::new(
+            plan.clone(),
+            vec![ClientProfile { step_secs }; plan.n_clients],
+            cfg,
+        )
+    }
+
+    /// Run the whole schedule, consuming the simulator.
+    pub fn run(mut self) -> SimReport {
+        let mut rows = Vec::with_capacity(self.plan.rounds.len());
+        for i in 0..self.plan.rounds.len() {
+            let spec = self.plan.rounds[i].clone();
+            rows.push(self.run_round(&spec));
+        }
+        let total_bytes = rows.iter().map(|r| r.bytes_down + r.bytes_up).sum();
+        SimReport {
+            policy: self.cfg.policy,
+            total_secs: us_to_secs(self.now_us),
+            total_bytes,
+            arrived_total: rows.iter().map(|r| r.n_arrived).sum(),
+            late_total: rows.iter().map(|r| r.n_late).sum(),
+            dropped_total: rows.iter().map(|r| r.n_dropped).sum(),
+            rows,
+        }
+    }
+
+    fn run_round(&mut self, spec: &RoundSpec) -> TimelineRow {
+        let d_secs = self.cfg.link.transfer_secs(self.cfg.payload_down_bytes);
+        let u_secs = self.cfg.link.transfer_secs(self.cfg.payload_up_bytes);
+        let (d_us, u_us) = (to_us(d_secs), to_us(u_secs));
+        let t0 = self.now_us;
+        let n = spec.participants.len();
+
+        let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
+        let mut seq = 0u64;
+
+        if let AggregationPolicy::SemiSync { deadline_factor } = self.cfg.policy {
+            // Deadline anchored to the slowest *nominal* participant,
+            // assembled from the SAME µs-discretized quantities arrivals
+            // use (each step is to_us(·).max(1)); with factor ≥ 1 an
+            // un-faulted fleet therefore always makes it, exactly —
+            // only fault-injected stragglers (slowed
+            // `straggler_slowdown ×`) can miss and get cut.
+            let slowest = spec
+                .participants
+                .iter()
+                .map(|p| self.profiles[p.client].step_secs)
+                .fold(0.0f64, f64::max);
+            let nominal_us =
+                d_us + self.plan.tau.saturating_mul(to_us(slowest).max(1)) + u_us;
+            heap.push(Reverse(Event {
+                at_us: t0 + (deadline_factor * nominal_us as f64).round() as u64,
+                seq,
+                kind: EventKind::Deadline,
+                slot: usize::MAX,
+            }));
+            seq += 1;
+        }
+
+        // Per-slot schedule state.
+        let mut compute_us = vec![0u64; n];
+        let mut finish_us: Vec<Option<u64>> = vec![None; n];
+        for (i, p) in spec.participants.iter().enumerate() {
+            let nominal = self.profiles[p.client].step_secs;
+            let step = if p.straggler {
+                nominal * self.cfg.straggler_slowdown
+            } else {
+                nominal
+            };
+            let step_us = to_us(step).max(1);
+            let mut steps = p.steps;
+            if self.cfg.policy == AggregationPolicy::Overlap {
+                // Tail steps accrued between the client's previous upload
+                // and this broadcast completing, at this round's effective
+                // rate (a straggler's tail steps are slowed too) — so the
+                // credited saving never exceeds the physical window.
+                let window = (t0 + d_us).saturating_sub(self.free_from_us[p.client]);
+                let tail = (window / step_us).min(steps);
+                steps -= tail;
+            }
+            compute_us[i] = steps.saturating_mul(step_us);
+            heap.push(Reverse(Event {
+                at_us: t0 + d_us,
+                seq,
+                kind: EventKind::BroadcastDone,
+                slot: i,
+            }));
+            seq += 1;
+        }
+
+        // Event loop: the round closes at the last expected arrival, or at
+        // the deadline, whichever the policy dictates. All sampled clients
+        // having dropped is known at dispatch — the round closes
+        // immediately (mirroring the aggregator's all-dropped path).
+        let mut n_arrived = 0usize;
+        let mut end_core = t0;
+        if n > 0 {
+            while let Some(Reverse(ev)) = heap.pop() {
+                match ev.kind {
+                    EventKind::BroadcastDone => {
+                        heap.push(Reverse(Event {
+                            at_us: ev.at_us + compute_us[ev.slot],
+                            seq,
+                            kind: EventKind::ComputeDone,
+                            slot: ev.slot,
+                        }));
+                        seq += 1;
+                    }
+                    EventKind::ComputeDone => {
+                        heap.push(Reverse(Event {
+                            at_us: ev.at_us + u_us,
+                            seq,
+                            kind: EventKind::UploadDone,
+                            slot: ev.slot,
+                        }));
+                        seq += 1;
+                    }
+                    EventKind::UploadDone => {
+                        finish_us[ev.slot] = Some(ev.at_us);
+                        n_arrived += 1;
+                        end_core = ev.at_us; // events pop in time order
+                        if n_arrived == n {
+                            break;
+                        }
+                    }
+                    EventKind::Deadline => {
+                        end_core = ev.at_us;
+                        break;
+                    }
+                }
+            }
+        }
+        let end_us = end_core + to_us(self.cfg.server_agg_secs);
+
+        let mut slowest = -1i64;
+        let mut slowest_t = 0u64;
+        for (i, f) in finish_us.iter().enumerate() {
+            if let Some(t) = f {
+                if *t >= slowest_t {
+                    slowest_t = *t;
+                    slowest = spec.participants[i].client as i64;
+                }
+            }
+        }
+
+        // Tail-credit bookkeeping: only this round's participants hold a
+        // fresh model. Arrived clients are free from their own upload
+        // time (the Overlap window); late clients from the round
+        // boundary; everyone else gets no credit next round.
+        for c in 0..self.plan.n_clients {
+            self.free_from_us[c] = u64::MAX;
+        }
+        for (i, p) in spec.participants.iter().enumerate() {
+            self.free_from_us[p.client] = finish_us[i].unwrap_or(end_us);
+        }
+
+        let row = TimelineRow {
+            round: spec.round,
+            t_start_secs: us_to_secs(t0),
+            t_end_secs: us_to_secs(end_us),
+            round_secs: us_to_secs(end_us - t0),
+            broadcast_secs: d_secs,
+            compute_secs: us_to_secs(compute_us.iter().copied().max().unwrap_or(0)),
+            upload_secs: u_secs,
+            n_arrived,
+            n_late: n - n_arrived,
+            n_dropped: spec.dropped.len(),
+            bytes_down: self.cfg.payload_down_bytes * n as u64,
+            bytes_up: self.cfg.payload_up_bytes * n_arrived as u64,
+            slowest_client: slowest,
+        };
+        self.now_us = end_us;
+        row
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::Link;
+
+    fn plan1(rounds: usize, tau: u64, n_clients: usize) -> RoundPlan {
+        // Full participation, no faults.
+        RoundPlan {
+            n_clients,
+            tau,
+            rounds: (0..rounds)
+                .map(|round| RoundSpec {
+                    round,
+                    participants: (0..n_clients)
+                        .map(|client| Participant { client, steps: tau, straggler: false })
+                        .collect(),
+                    dropped: vec![],
+                })
+                .collect(),
+        }
+    }
+
+    fn link(gbps: f64, latency_s: f64) -> Link {
+        Link { gbps, latency_s }
+    }
+
+    #[test]
+    fn sync_round_time_is_broadcast_compute_upload() {
+        // 1 client, d = u = 1 s (latency-only link), 10 steps × 0.5 s.
+        let plan = plan1(3, 10, 1);
+        let cfg = SimConfig::new(0, link(1.0, 1.0), AggregationPolicy::Sync);
+        let rep = Simulator::uniform(&plan, 0.5, cfg).run();
+        assert_eq!(rep.rows.len(), 3);
+        for r in &rep.rows {
+            assert!((r.round_secs - 7.0).abs() < 1e-6, "{}", r.round_secs);
+            assert_eq!(r.n_arrived, 1);
+            assert_eq!(r.n_late, 0);
+        }
+        assert!((rep.total_secs - 21.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sync_waits_for_slowest_client() {
+        let plan = plan1(1, 10, 3);
+        let cfg = SimConfig::new(0, link(1.0, 0.0), AggregationPolicy::Sync);
+        let profiles = vec![
+            ClientProfile { step_secs: 0.1 },
+            ClientProfile { step_secs: 1.0 },
+            ClientProfile { step_secs: 0.2 },
+        ];
+        let rep = Simulator::new(plan, profiles, cfg).run();
+        assert!((rep.rows[0].round_secs - 10.0).abs() < 1e-6);
+        assert_eq!(rep.rows[0].slowest_client, 1);
+    }
+
+    #[test]
+    fn semisync_cuts_straggler_at_deadline() {
+        // Two clients, same nominal rate; client 1 straggles (4× slower,
+        // same steps here). Deadline = 1.5 × 10 s; straggler needs 40 s.
+        let mut plan = plan1(1, 10, 2);
+        plan.rounds[0].participants[1].straggler = true;
+        let cfg = SimConfig {
+            policy: AggregationPolicy::SemiSync { deadline_factor: 1.5 },
+            ..SimConfig::new(0, link(1.0, 0.0), AggregationPolicy::Sync)
+        };
+        let rep = Simulator::uniform(&plan, 1.0, cfg).run();
+        let row = &rep.rows[0];
+        assert_eq!((row.n_arrived, row.n_late), (1, 1));
+        assert!((row.round_secs - 15.0).abs() < 1e-6, "{}", row.round_secs);
+        assert_eq!(row.bytes_up, 0, "zero-byte payload"); // payload 0
+    }
+
+    #[test]
+    fn semisync_without_stragglers_matches_sync() {
+        let plan = plan1(4, 20, 3);
+        let base = SimConfig::new(1_000_000, link(0.001, 0.01), AggregationPolicy::Sync);
+        let semi = SimConfig {
+            policy: AggregationPolicy::SemiSync { deadline_factor: 1.5 },
+            ..base
+        };
+        let a = Simulator::uniform(&plan, 0.05, base).run();
+        let b = Simulator::uniform(&plan, 0.05, semi).run();
+        assert_eq!(a.rows.len(), b.rows.len());
+        for (x, y) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(x.round_secs, y.round_secs);
+            assert_eq!(y.n_late, 0);
+        }
+    }
+
+    #[test]
+    fn deadline_tie_counts_as_arrived() {
+        // finish = d + τ·step + u = deadline exactly (factor 1.0, all µs
+        // values exact): the arrival must win the tie.
+        let plan = plan1(1, 10, 1);
+        let cfg = SimConfig {
+            policy: AggregationPolicy::SemiSync { deadline_factor: 1.0 },
+            ..SimConfig::new(0, link(1.0, 0.05), AggregationPolicy::Sync)
+        };
+        let rep = Simulator::uniform(&plan, 0.001, cfg).run();
+        assert_eq!(rep.rows[0].n_arrived, 1);
+        assert_eq!(rep.rows[0].n_late, 0);
+    }
+
+    #[test]
+    fn overlap_hides_broadcast_after_first_round() {
+        // d = 5.5 s, step = 1 s, τ = 20: from round 1 on, 5 tail steps run
+        // during the broadcast, shortening the round by 5 s.
+        let plan = plan1(3, 20, 1);
+        let d = 5.5;
+        let base = SimConfig::new(0, link(1.0, d), AggregationPolicy::Sync);
+        let over = SimConfig { policy: AggregationPolicy::Overlap, ..base };
+        let s = Simulator::uniform(&plan, 1.0, base).run();
+        let o = Simulator::uniform(&plan, 1.0, over).run();
+        // Round 0 identical: no prior upload to overlap from.
+        assert_eq!(s.rows[0].round_secs, o.rows[0].round_secs);
+        assert!((s.rows[1].round_secs - (2.0 * d + 20.0)).abs() < 1e-6);
+        assert!((o.rows[1].round_secs - (2.0 * d + 15.0)).abs() < 1e-6);
+        assert!(o.total_secs < s.total_secs);
+    }
+
+    #[test]
+    fn all_dropped_round_is_instant_and_advances() {
+        let plan = RoundPlan {
+            n_clients: 4,
+            tau: 50,
+            rounds: vec![
+                RoundSpec { round: 0, participants: vec![], dropped: vec![0, 1, 2, 3] },
+                RoundSpec {
+                    round: 1,
+                    participants: vec![Participant { client: 2, steps: 50, straggler: false }],
+                    dropped: vec![0, 1, 3],
+                },
+            ],
+        };
+        let cfg = SimConfig {
+            policy: AggregationPolicy::SemiSync { deadline_factor: 2.0 },
+            server_agg_secs: 0.25,
+            ..SimConfig::new(1000, link(1.0, 0.0), AggregationPolicy::Sync)
+        };
+        let rep = Simulator::uniform(&plan, 0.1, cfg).run();
+        let r0 = &rep.rows[0];
+        assert_eq!((r0.n_arrived, r0.n_late, r0.n_dropped), (0, 0, 4));
+        assert!((r0.round_secs - 0.25).abs() < 1e-9, "agg cost only");
+        assert_eq!(r0.bytes_down, 0);
+        assert_eq!(r0.slowest_client, -1);
+        assert_eq!(rep.rows[1].n_arrived, 1);
+        assert_eq!(rep.dropped_total, 7);
+    }
+
+    #[test]
+    fn timeline_is_deterministic() {
+        let plan = plan1(5, 30, 6);
+        let mk = || {
+            let cfg = SimConfig::new(
+                500_000_000,
+                link(0.0125, 0.03),
+                AggregationPolicy::Overlap,
+            );
+            let profiles: Vec<ClientProfile> = (0..6)
+                .map(|i| ClientProfile { step_secs: 0.1 + 0.07 * i as f64 })
+                .collect();
+            Simulator::new(plan.clone(), profiles, cfg).run()
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.rows, b.rows);
+        assert_eq!(a.total_secs, b.total_secs);
+    }
+
+    #[test]
+    fn policy_parse_and_labels() {
+        assert_eq!(
+            AggregationPolicy::parse("sync", 1.5).unwrap(),
+            AggregationPolicy::Sync
+        );
+        assert_eq!(
+            AggregationPolicy::parse("semisync", 1.5).unwrap(),
+            AggregationPolicy::SemiSync { deadline_factor: 1.5 }
+        );
+        assert_eq!(
+            AggregationPolicy::parse("overlap", 1.5).unwrap().label(),
+            "overlap"
+        );
+        assert!(AggregationPolicy::parse("async", 1.5).is_err());
+    }
+
+    #[test]
+    fn report_accounting() {
+        let plan = plan1(2, 10, 2);
+        let cfg = SimConfig::new(1_000, link(1.0, 0.1), AggregationPolicy::Sync);
+        let rep = Simulator::uniform(&plan, 0.5, cfg).run();
+        assert_eq!(rep.arrived_total, 4);
+        assert_eq!(rep.total_bytes, 2 * (2 * 1_000 + 2 * 1_000));
+        assert!(rep.comm_fraction() > 0.0 && rep.comm_fraction() < 0.1);
+        assert!((rep.mean_round_secs() * 2.0 - rep.total_secs).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,140 @@
+//! Round-schedule replay: the exact per-round client sample, dropouts,
+//! stragglers, and effective local-step counts a [`Federation`] with the
+//! same [`ExperimentConfig`] executes (Algorithm 1 L.3–7), extracted
+//! without touching the model runtime so the simulator runs artifact-free.
+//!
+//! [`Federation`]: crate::coordinator::Federation
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::sampler::ClientSampler;
+
+/// One sampled, non-dropped client in one round.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Participant {
+    pub client: usize,
+    /// Effective local steps (stragglers complete `straggler_fraction·τ`).
+    pub steps: u64,
+    pub straggler: bool,
+}
+
+/// The realized schedule of one round.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RoundSpec {
+    pub round: usize,
+    /// Sampled clients that will contribute an update, in sampled order.
+    pub participants: Vec<Participant>,
+    /// Sampled clients that dropped (contribute nothing, known at
+    /// dispatch — the aggregator's dropped-client path).
+    pub dropped: Vec<usize>,
+}
+
+/// The full federation schedule, replayable through [`crate::sim::Simulator`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RoundPlan {
+    pub n_clients: usize,
+    /// Nominal τ (drives the semi-sync deadline; stragglers run fewer
+    /// effective steps).
+    pub tau: u64,
+    pub rounds: Vec<RoundSpec>,
+}
+
+impl RoundPlan {
+    /// Derive the schedule from a config exactly as `Federation::run_round`
+    /// does: `ClientSampler::sample(round, P, K)` then
+    /// `FaultPlan::for_round` over the sample. Same seed + config ⇒ the
+    /// training run and the simulation see identical rounds.
+    pub fn from_config(cfg: &ExperimentConfig) -> RoundPlan {
+        let sampler = ClientSampler::new(cfg.seed);
+        let mut rounds = Vec::with_capacity(cfg.rounds);
+        for round in 0..cfg.rounds {
+            let sampled = sampler.sample(round, cfg.n_clients, cfg.clients_per_round);
+            let faults = cfg.faults.for_round(round, &sampled);
+            let participants = sampled
+                .iter()
+                .filter(|c| !faults.is_dropped(**c))
+                .map(|&client| Participant {
+                    client,
+                    steps: faults.effective_steps(client, cfg.local_steps),
+                    straggler: faults.stragglers.contains(&client),
+                })
+                .collect();
+            rounds.push(RoundSpec { round, participants, dropped: faults.dropped.clone() });
+        }
+        RoundPlan { n_clients: cfg.n_clients, tau: cfg.local_steps, rounds }
+    }
+
+    /// Total effective local steps scheduled across all rounds/clients.
+    pub fn total_client_steps(&self) -> u64 {
+        self.rounds
+            .iter()
+            .flat_map(|r| r.participants.iter().map(|p| p.steps))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::faults::FaultPlan;
+    use crate::coordinator::sampler::ClientSampler;
+
+    fn cfg(p: usize, k: usize, rounds: usize, tau: u64, seed: u64) -> ExperimentConfig {
+        let mut c = ExperimentConfig::quickstart("m75a");
+        c.n_clients = p;
+        c.clients_per_round = k;
+        c.rounds = rounds;
+        c.local_steps = tau;
+        c.seed = seed;
+        c
+    }
+
+    #[test]
+    fn replays_sampler_exactly() {
+        let c = cfg(16, 4, 6, 20, 99);
+        let plan = RoundPlan::from_config(&c);
+        assert_eq!(plan.rounds.len(), 6);
+        let sampler = ClientSampler::new(99);
+        for (r, spec) in plan.rounds.iter().enumerate() {
+            let sampled = sampler.sample(r, 16, 4);
+            let scheduled: Vec<usize> = spec
+                .participants
+                .iter()
+                .map(|p| p.client)
+                .chain(spec.dropped.iter().copied())
+                .collect();
+            let mut scheduled_sorted = scheduled.clone();
+            scheduled_sorted.sort_unstable();
+            assert_eq!(scheduled_sorted, sampled, "round {r}");
+        }
+    }
+
+    #[test]
+    fn faults_shape_the_plan() {
+        let mut c = cfg(8, 8, 20, 100, 5);
+        c.faults = FaultPlan::new(0.3, 0.4, 5);
+        let plan = RoundPlan::from_config(&c);
+        let mut saw_drop = false;
+        let mut saw_straggler = false;
+        for spec in &plan.rounds {
+            assert_eq!(spec.participants.len() + spec.dropped.len(), 8);
+            saw_drop |= !spec.dropped.is_empty();
+            for p in &spec.participants {
+                if p.straggler {
+                    saw_straggler = true;
+                    assert_eq!(p.steps, 50, "straggler_fraction 0.5 of τ=100");
+                } else {
+                    assert_eq!(p.steps, 100);
+                }
+            }
+        }
+        assert!(saw_drop && saw_straggler, "rates 0.3/0.4 over 160 draws");
+    }
+
+    #[test]
+    fn plan_is_deterministic() {
+        let mut c = cfg(12, 6, 8, 30, 7);
+        c.faults = FaultPlan::new(0.2, 0.2, 7);
+        assert_eq!(RoundPlan::from_config(&c), RoundPlan::from_config(&c));
+        assert!(RoundPlan::from_config(&c).total_client_steps() > 0);
+    }
+}

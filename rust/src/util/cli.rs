@@ -92,6 +92,23 @@ impl Args {
         }
     }
 
+    /// Comma-separated integer list (`--taus 50,500`); `default` when the
+    /// option is absent. Rejects empty items so `--taus 50,,500` fails
+    /// loudly.
+    pub fn get_u64_list(&self, name: &str, default: &[u64]) -> Result<Vec<u64>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|tok| {
+                    tok.trim().parse().map_err(|_| {
+                        anyhow!("--{name} expects comma-separated integers, got {v:?}")
+                    })
+                })
+                .collect(),
+        }
+    }
+
     pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
         match self.get(name) {
             None => Ok(default),
@@ -107,7 +124,7 @@ mod tests {
     use super::*;
 
     const SPEC: Spec = Spec {
-        options: &["config", "rounds", "lr", "workers"],
+        options: &["config", "rounds", "lr", "workers", "taus"],
         flags: &["fast", "verbose"],
     };
 
@@ -149,6 +166,19 @@ mod tests {
             .unwrap()
             .get_count_or_auto("workers", 1)
             .is_err());
+    }
+
+    #[test]
+    fn u64_list() {
+        let a = parse(&["--taus", "50,500, 1000"]).unwrap();
+        assert_eq!(a.get_u64_list("taus", &[5]).unwrap(), vec![50, 500, 1000]);
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.get_u64_list("taus", &[5, 7]).unwrap(), vec![5, 7]);
+        assert!(parse(&["--taus", "50,,500"])
+            .unwrap()
+            .get_u64_list("taus", &[])
+            .is_err());
+        assert!(parse(&["--taus", "x"]).unwrap().get_u64_list("taus", &[]).is_err());
     }
 
     #[test]

@@ -497,3 +497,107 @@ fn prop_rng_choose_k_uniformity() {
         Ok(())
     });
 }
+
+// --- wall-clock simulator properties (sim module) --------------------------
+
+#[test]
+fn prop_sim_same_config_same_timeline() {
+    // Tentpole determinism contract: same seed + config → bit-identical
+    // per-round timeline, across fresh simulator instances.
+    use photon::cluster::faults::FaultPlan;
+    use photon::config::ExperimentConfig;
+    use photon::netsim::CLOUD_WAN;
+    use photon::sim::{
+        fleet_profiles, AggregationPolicy, RoundPlan, SimConfig, Simulator, DEFAULT_MFU,
+    };
+    check("sim_deterministic", 0xE1, 25, |rng| {
+        let p = 1 + rng.usize_below(12);
+        let k = 1 + rng.usize_below(p);
+        let rounds = 1 + rng.usize_below(6);
+        let tau = 1 + rng.below(50);
+        let mut cfg = ExperimentConfig::wallclock(p, k, rounds, tau, rng.next_u64());
+        cfg.faults = FaultPlan::new(rng.f64() * 0.5, rng.f64() * 0.5, rng.next_u64());
+        let plan = RoundPlan::from_config(&cfg);
+        let profiles =
+            fleet_profiles(cfg.fleet.as_ref().unwrap(), 58_540_000, 1024 * 256, DEFAULT_MFU);
+        let policy = match rng.usize_below(3) {
+            0 => AggregationPolicy::Sync,
+            1 => AggregationPolicy::SemiSync { deadline_factor: 1.0 + rng.f64() * 2.0 },
+            _ => AggregationPolicy::Overlap,
+        };
+        let sim_cfg = SimConfig::new(58_540_000 * 4, CLOUD_WAN, policy);
+        let a = Simulator::new(plan.clone(), profiles.clone(), sim_cfg).run();
+        let b = Simulator::new(plan, profiles, sim_cfg).run();
+        if a.rows != b.rows {
+            return Err("timelines differ across identical runs".into());
+        }
+        if a.total_secs != b.total_secs {
+            return Err(format!("totals differ: {} vs {}", a.total_secs, b.total_secs));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_policy_ordering_and_accounting() {
+    // Semi-sync and overlap can never be slower than sync on the same
+    // schedule, and every round's participation partitions K exactly.
+    use photon::cluster::faults::FaultPlan;
+    use photon::config::ExperimentConfig;
+    use photon::netsim::Link;
+    use photon::sim::{
+        fleet_profiles, AggregationPolicy, RoundPlan, SimConfig, Simulator, DEFAULT_MFU,
+    };
+    check("sim_policy_ordering", 0xE2, 25, |rng| {
+        let p = 1 + rng.usize_below(10);
+        let k = 1 + rng.usize_below(p);
+        let rounds = 1 + rng.usize_below(5);
+        let tau = 1 + rng.below(40);
+        let mut cfg = ExperimentConfig::wallclock(p, k, rounds, tau, rng.next_u64());
+        cfg.faults = FaultPlan::new(rng.f64() * 0.4, rng.f64() * 0.6, rng.next_u64());
+        let plan = RoundPlan::from_config(&cfg);
+        let profiles =
+            fleet_profiles(cfg.fleet.as_ref().unwrap(), 58_540_000, 1024 * 256, DEFAULT_MFU);
+        let link = Link { gbps: 0.01 + rng.f64() * 0.5, latency_s: rng.f64() * 0.1 };
+        let payload = 1 + rng.below(1_000_000_000);
+        let deadline_factor = 1.0 + rng.f64() * 2.0;
+        let run = |policy| {
+            let mut sc = SimConfig::new(payload, link, policy);
+            sc.straggler_slowdown = 4.0;
+            Simulator::new(plan.clone(), profiles.clone(), sc).run()
+        };
+        let sync = run(AggregationPolicy::Sync);
+        let semi = run(AggregationPolicy::SemiSync { deadline_factor });
+        let over = run(AggregationPolicy::Overlap);
+        if semi.total_secs > sync.total_secs + 1e-6 {
+            return Err(format!("semi {} > sync {}", semi.total_secs, sync.total_secs));
+        }
+        if over.total_secs > sync.total_secs + 1e-6 {
+            return Err(format!("overlap {} > sync {}", over.total_secs, sync.total_secs));
+        }
+        for rep in [&sync, &semi, &over] {
+            let mut prev_end = 0.0f64;
+            for row in &rep.rows {
+                if row.n_arrived + row.n_late + row.n_dropped != k {
+                    return Err(format!(
+                        "round {}: {}+{}+{} != K={k}",
+                        row.round, row.n_arrived, row.n_late, row.n_dropped
+                    ));
+                }
+                if row.t_start_secs != prev_end {
+                    return Err(format!("round {} does not abut previous", row.round));
+                }
+                if row.bytes_down
+                    != payload * (row.n_arrived + row.n_late) as u64
+                {
+                    return Err("broadcast byte accounting broken".into());
+                }
+                if row.bytes_up != payload * row.n_arrived as u64 {
+                    return Err("upload byte accounting broken".into());
+                }
+                prev_end = row.t_end_secs;
+            }
+        }
+        Ok(())
+    });
+}
