@@ -20,7 +20,8 @@ fn main() {
         r.print_with_throughput("tok", 128.0);
 
         let p = Partition::heterogeneous(&corpus, 8, 3);
-        let mut stream = TokenStream::bind(&p.assignment[0], &corpus.categories, 33, 1);
+        let mut stream =
+            TokenStream::bind(&p.assignment[0], &corpus.categories, 33, 1).unwrap();
         let r = bench(&format!("client_stream/v{vocab}/batch8x33"), 0.5, || {
             std::hint::black_box(stream.next_batch(8));
         });
@@ -32,7 +33,7 @@ fn main() {
     let p = Partition::iid(&corpus, 8);
     let r = bench("validation_batches/8x(4x33)", 0.5, || {
         let ds = photon::data::source::DataSource::new(corpus.clone(), p.clone(), 1);
-        std::hint::black_box(ds.validation_batches(8, 4, 33));
+        std::hint::black_box(ds.validation_batches(8, 4, 33).unwrap());
     });
     r.print_with_throughput("tok", (8 * 4 * 33) as f64);
 }

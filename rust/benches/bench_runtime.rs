@@ -32,7 +32,8 @@ fn main() {
             &corpus.categories,
             model.seq_width(),
             1,
-        );
+        )
+        .unwrap();
         let params = init_params(&model.manifest, 1);
         let mut state = TrainState::new(params.clone());
         let tokens = stream.next_batch(model.batch_size());

@@ -1,0 +1,55 @@
+//! Distributed federation on localhost: a Photon Aggregator service plus a
+//! fleet of four TCP workers (the deployment plane, paper §4.1), proving
+//! on the spot that the networked run is bit-identical to the in-process
+//! one — same global model, same round records.
+//!
+//! The same topology runs across machines with the CLI:
+//!
+//! ```text
+//! host A$ photon serve --config m75a --clients 8 --rounds 5 --min-workers 4
+//! host B$ photon worker --connect hostA:7070
+//! ```
+//!
+//! Run: `cargo run --release --example distributed_localhost`
+//! (requires `make artifacts` first)
+
+use std::sync::Arc;
+
+use photon::config::ExperimentConfig;
+use photon::coordinator::Federation;
+use photon::net::{run_loopback, FleetOpts};
+use photon::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ExperimentConfig::quickstart("m75a");
+    println!(
+        "deployment plane: {} clients, {} rounds of τ={} — in-process vs 4 TCP workers",
+        cfg.n_clients, cfg.rounds, cfg.local_steps
+    );
+
+    let rt = Runtime::cpu()?;
+    let model = Arc::new(rt.load_model(&cfg.model)?);
+
+    let mut fed = Federation::with_model(cfg.clone(), model.clone())?;
+    let reference = fed.run()?;
+
+    let fleet = run_loopback(
+        cfg,
+        model,
+        FleetOpts { workers: 4, compress: true, ..FleetOpts::default() },
+    )?;
+
+    println!("\nround | in-process ppl | tcp-fleet ppl | bit-equal");
+    for (r, n) in reference.iter().zip(&fleet.records) {
+        println!(
+            "{:>5} | {:>14.6} | {:>13.6} | {}",
+            r.round,
+            r.server_ppl,
+            n.server_ppl,
+            if r.agrees_with(n) { "yes" } else { "NO" }
+        );
+    }
+    assert_eq!(fed.global, fleet.global, "global models must be bit-identical");
+    println!("\nglobal model bit-identical across {} workers ✔", fleet.workers.len());
+    Ok(())
+}

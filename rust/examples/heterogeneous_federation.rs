@@ -80,7 +80,7 @@ fn main() -> anyhow::Result<()> {
             2,
             fed.model.batch_size(),
             fed.model.seq_width(),
-        );
+        )?;
         let (_, ppl) = fed.model.eval_nll(&fed.global, &batches)?;
         let genre = &fed.data.partition.assignment[c][0].category;
         println!("  client {c} ({genre:<13}) ppl {ppl:>8.2}");

@@ -48,88 +48,178 @@ pub struct Checkpoint {
     pub elapsed_secs: f64,
 }
 
-// --- binary encoding helpers ---------------------------------------------
+// --- binary encoding helpers ----------------------------------------------
+// Shared with the deployment plane: `net::proto` frames reuse this codec
+// (little-endian fields, length-prefixed vectors) so a client's persisted
+// state and its over-the-wire state are the same bytes.
 
-struct Enc {
-    buf: Vec<u8>,
+pub(crate) struct Enc {
+    pub(crate) buf: Vec<u8>,
 }
 
 impl Enc {
-    fn u32(&mut self, v: u32) {
+    pub(crate) fn new() -> Enc {
+        Enc { buf: Vec::new() }
+    }
+    pub(crate) fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    pub(crate) fn u16(&mut self, v: u16) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
-    fn u64(&mut self, v: u64) {
+    pub(crate) fn u32(&mut self, v: u32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
-    fn i64(&mut self, v: i64) {
+    pub(crate) fn u64(&mut self, v: u64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
-    fn f64(&mut self, v: f64) {
+    pub(crate) fn i64(&mut self, v: i64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
-    fn f32s(&mut self, v: &[f32]) {
+    pub(crate) fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub(crate) fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    pub(crate) fn f32s(&mut self, v: &[f32]) {
         self.u64(v.len() as u64);
         for x in v {
             self.buf.extend_from_slice(&x.to_le_bytes());
         }
     }
-    fn f64s(&mut self, v: &[f64]) {
+    pub(crate) fn f64s(&mut self, v: &[f64]) {
         self.u64(v.len() as u64);
         for x in v {
             self.buf.extend_from_slice(&x.to_le_bytes());
         }
     }
-    fn state4(&mut self, s: &[u64; 4]) {
+    pub(crate) fn state4(&mut self, s: &[u64; 4]) {
         for x in s {
             self.u64(*x);
         }
     }
+    pub(crate) fn cursor(&mut self, cur: &StreamCursor) {
+        self.state4(&cur.mix_state);
+        self.u64(cur.bucket_states.len() as u64);
+        for (st, drawn) in &cur.bucket_states {
+            self.state4(st);
+            self.u64(*drawn);
+        }
+    }
+    pub(crate) fn client(&mut self, c: &ClientCkpt) {
+        self.f32s(&c.opt_m);
+        self.f32s(&c.opt_v);
+        self.i64(c.local_step);
+        self.u64(c.cursors.len() as u64);
+        for cur in &c.cursors {
+            self.cursor(cur);
+        }
+    }
 }
 
-struct Dec<'a> {
+pub(crate) struct Dec<'a> {
     b: &'a [u8],
     i: usize,
 }
 
 impl<'a> Dec<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    pub(crate) fn new(b: &'a [u8]) -> Dec<'a> {
+        Dec { b, i: 0 }
+    }
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         if self.i + n > self.b.len() {
-            bail!("checkpoint truncated at byte {}", self.i);
+            bail!("payload truncated at byte {}", self.i);
         }
         let s = &self.b[self.i..self.i + n];
         self.i += n;
         Ok(s)
     }
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn done(&self) -> bool {
+        self.i == self.b.len()
+    }
+    /// Bytes left to decode.
+    pub(crate) fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+    /// Safe `Vec` pre-allocation for a wire-declared element count: never
+    /// reserve more than the remaining bytes could possibly hold (counts
+    /// come off untrusted frames — a checksummed-valid frame can still
+    /// declare 2^60 elements, and `with_capacity` on that aborts the
+    /// process).
+    pub(crate) fn capacity_hint(&self, n: usize, min_elem_bytes: usize) -> usize {
+        n.min(self.remaining() / min_elem_bytes.max(1) + 1)
+    }
+    pub(crate) fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    pub(crate) fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
-    fn u64(&mut self) -> Result<u64> {
+    pub(crate) fn u64(&mut self) -> Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
-    fn i64(&mut self) -> Result<i64> {
+    pub(crate) fn i64(&mut self) -> Result<i64> {
         Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
-    fn f64(&mut self) -> Result<f64> {
+    pub(crate) fn f64(&mut self) -> Result<f64> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
-    fn f32s(&mut self) -> Result<Vec<f32>> {
+    pub(crate) fn str(&mut self) -> Result<String> {
         let n = self.u64()? as usize;
-        let raw = self.take(n * 4)?;
+        let raw = self.take(n)?;
+        Ok(std::str::from_utf8(raw)
+            .map_err(|_| anyhow::anyhow!("invalid utf-8 string field"))?
+            .to_string())
+    }
+    pub(crate) fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u64()? as usize;
+        let bytes = n.checked_mul(4).ok_or_else(|| anyhow::anyhow!("f32 vector overflow"))?;
+        let raw = self.take(bytes)?;
         Ok(raw
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
-    fn f64s(&mut self) -> Result<Vec<f64>> {
+    pub(crate) fn f64s(&mut self) -> Result<Vec<f64>> {
         let n = self.u64()? as usize;
-        let raw = self.take(n * 8)?;
+        let bytes = n.checked_mul(8).ok_or_else(|| anyhow::anyhow!("f64 vector overflow"))?;
+        let raw = self.take(bytes)?;
         Ok(raw
             .chunks_exact(8)
             .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
-    fn state4(&mut self) -> Result<[u64; 4]> {
+    pub(crate) fn state4(&mut self) -> Result<[u64; 4]> {
         Ok([self.u64()?, self.u64()?, self.u64()?, self.u64()?])
+    }
+    pub(crate) fn cursor(&mut self) -> Result<StreamCursor> {
+        let mix_state = self.state4()?;
+        let nb = self.u64()? as usize;
+        // 40 = [u64; 4] state + drawn count per bucket.
+        let mut bucket_states = Vec::with_capacity(self.capacity_hint(nb, 40));
+        for _ in 0..nb {
+            let st = self.state4()?;
+            let drawn = self.u64()?;
+            bucket_states.push((st, drawn));
+        }
+        Ok(StreamCursor { mix_state, bucket_states })
+    }
+    pub(crate) fn client(&mut self) -> Result<ClientCkpt> {
+        let opt_m = self.f32s()?;
+        let opt_v = self.f32s()?;
+        let local_step = self.i64()?;
+        let n_cursors = self.u64()? as usize;
+        // 48 = minimum encoded cursor (mix state + empty bucket list).
+        let mut cursors = Vec::with_capacity(self.capacity_hint(n_cursors, 48));
+        for _ in 0..n_cursors {
+            cursors.push(self.cursor()?);
+        }
+        Ok(ClientCkpt { opt_m, opt_v, local_step, cursors })
     }
 }
 
@@ -144,7 +234,7 @@ fn fnv1a(bytes: &[u8]) -> u64 {
 
 impl Checkpoint {
     pub fn encode(&self) -> Vec<u8> {
-        let mut e = Enc { buf: Vec::new() };
+        let mut e = Enc::new();
         e.buf.extend_from_slice(MAGIC);
         e.u32(VERSION);
         e.u64(self.round);
@@ -161,18 +251,7 @@ impl Checkpoint {
                 None => e.u32(0),
                 Some(c) => {
                     e.u32(1);
-                    e.f32s(&c.opt_m);
-                    e.f32s(&c.opt_v);
-                    e.i64(c.local_step);
-                    e.u64(c.cursors.len() as u64);
-                    for cur in &c.cursors {
-                        e.state4(&cur.mix_state);
-                        e.u64(cur.bucket_states.len() as u64);
-                        for (st, drawn) in &cur.bucket_states {
-                            e.state4(st);
-                            e.u64(*drawn);
-                        }
-                    }
+                    e.client(c);
                 }
             }
         }
@@ -191,7 +270,7 @@ impl Checkpoint {
         if fnv1a(body) != trailer {
             bail!("checkpoint checksum mismatch");
         }
-        let mut d = Dec { b: body, i: 4 };
+        let mut d = Dec::new(&body[4..]);
         let version = d.u32()?;
         if version != VERSION {
             bail!("unsupported checkpoint version {version}");
@@ -205,29 +284,13 @@ impl Checkpoint {
         let outer_m = d.f64s()?;
         let outer_v = d.f64s()?;
         let n_clients = d.u64()? as usize;
-        let mut clients = Vec::with_capacity(n_clients);
+        let mut clients = Vec::with_capacity(d.capacity_hint(n_clients, 4));
         for _ in 0..n_clients {
             if d.u32()? == 0 {
                 clients.push(None);
                 continue;
             }
-            let opt_m = d.f32s()?;
-            let opt_v = d.f32s()?;
-            let local_step = d.i64()?;
-            let n_cursors = d.u64()? as usize;
-            let mut cursors = Vec::with_capacity(n_cursors);
-            for _ in 0..n_cursors {
-                let mix_state = d.state4()?;
-                let nb = d.u64()? as usize;
-                let mut bucket_states = Vec::with_capacity(nb);
-                for _ in 0..nb {
-                    let st = d.state4()?;
-                    let drawn = d.u64()?;
-                    bucket_states.push((st, drawn));
-                }
-                cursors.push(StreamCursor { mix_state, bucket_states });
-            }
-            clients.push(Some(ClientCkpt { opt_m, opt_v, local_step, cursors }));
+            clients.push(Some(d.client()?));
         }
         Ok(Checkpoint {
             round,

@@ -4,7 +4,7 @@
 //! node before a single update is sent to the Photon Aggregator
 //! (Algorithm 1 L.19–24).
 
-use crate::cluster::hardware::{ClientHardware, INFINIBAND_GBPS};
+use crate::cluster::hardware::{ClientHardware, FleetSpec, INFINIBAND_GBPS};
 
 /// Group node indices into islands. With a single scalar inter-node
 /// bandwidth (this fleet model), the result is either one island (well
@@ -45,6 +45,20 @@ pub fn group_islands_by(
 /// Islands of a client under its scalar inter-node bandwidth.
 pub fn group_islands(hw: &ClientHardware) -> Vec<Vec<usize>> {
     group_islands_by(hw.nodes.len(), |_, _| hw.inter_gbps)
+}
+
+/// Island count per client for a (possibly absent) fleet — the stream
+/// arity every data-plane participant must agree on. The Aggregator uses
+/// it to bind node streams and the deployment plane ships it in the task
+/// spec so remote workers bind identically without a fleet config.
+pub fn island_counts(fleet: Option<&FleetSpec>, n_clients: usize) -> Vec<usize> {
+    (0..n_clients)
+        .map(|c| {
+            fleet
+                .map(|f| group_islands(&f.clients[c]).len())
+                .unwrap_or(1)
+        })
+        .collect()
 }
 
 /// Partial aggregation of island results (Algorithm 1 L.23): weighted mean

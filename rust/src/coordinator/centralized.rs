@@ -25,7 +25,7 @@ pub fn run_centralized(
     cfg: &ExperimentConfig,
     model: &Arc<ModelRuntime>,
 ) -> Result<MetricsLog> {
-    let data = build_data(cfg, model.manifest.config.vocab);
+    let data = build_data(&cfg.corpus, cfg.n_clients, cfg.seed, model.manifest.config.vocab);
     // Union of every client's buckets = the centralized dataset.
     let all_buckets: Vec<_> = data
         .partition
@@ -39,12 +39,12 @@ pub fn run_centralized(
         &data.corpus.categories,
         model.seq_width(),
         cfg.seed ^ 0xce47a1_u64, // centralized-stream salt
-    );
+    )?;
     let val = data.validation_batches(
         cfg.eval_batches,
         model.batch_size(),
         model.seq_width(),
-    );
+    )?;
 
     let mut state = TrainState::new(init_params(&model.manifest, cfg.seed));
     let mut log = MetricsLog::default();

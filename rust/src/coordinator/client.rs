@@ -9,8 +9,9 @@
 //! parameters + metrics. Optimizer-state policy implements §7.8
 //! (stateless vs KeepOpt clients).
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
+use crate::ckpt::ClientCkpt;
 use crate::cluster::island::partial_aggregate;
 use crate::config::OptStatePolicy;
 use crate::data::stream::TokenStream;
@@ -50,6 +51,60 @@ impl ClientNode {
 
     pub fn islands(&self) -> usize {
         self.streams.len()
+    }
+
+    /// Snapshot this node's full inter-round state — one stream cursor per
+    /// island plus KeepOpt moments. The same [`ClientCkpt`] bytes serve the
+    /// checkpoint file and the deployment plane's wire (`net::proto` ships
+    /// it in `RoundAssign`/`UpdatePush`), which is what makes workers
+    /// stateless: the Aggregator owns every client's state.
+    pub fn state(&self) -> ClientCkpt {
+        let cursors = self.streams.iter().map(|s| s.cursor()).collect();
+        let (opt_m, opt_v, local_step) = match &self.saved_opt {
+            Some((m, v, st)) => (m.clone(), v.clone(), *st),
+            None => (Vec::new(), Vec::new(), 0),
+        };
+        ClientCkpt { opt_m, opt_v, local_step, cursors }
+    }
+
+    /// Validate that `st` structurally fits this node (island and bucket
+    /// arity) without mutating anything, so a mismatched state — a fleet or
+    /// corpus config drift — can never leave the node half-restored.
+    pub fn check_state(&self, st: &ClientCkpt) -> Result<()> {
+        ensure!(
+            st.cursors.len() == self.streams.len(),
+            "client {} state carries {} stream cursors, node has {} islands \
+             (fleet mismatch?)",
+            self.id,
+            st.cursors.len(),
+            self.streams.len()
+        );
+        for (isl, (stream, cur)) in self.streams.iter().zip(&st.cursors).enumerate() {
+            ensure!(
+                cur.bucket_states.len() == stream.buckets().len(),
+                "client {} island {isl} cursor has {} bucket states, stream \
+                 has {} buckets (partition mismatch?)",
+                self.id,
+                cur.bucket_states.len(),
+                stream.buckets().len()
+            );
+        }
+        Ok(())
+    }
+
+    /// Restore a state produced by [`ClientNode::state`] (possibly on
+    /// another process — the deployment plane round-trips it over TCP).
+    pub fn restore_state(&mut self, st: &ClientCkpt) -> Result<()> {
+        self.check_state(st)?;
+        for (stream, cur) in self.streams.iter_mut().zip(&st.cursors) {
+            stream.restore(cur);
+        }
+        self.saved_opt = if st.opt_m.is_empty() {
+            None
+        } else {
+            Some((st.opt_m.clone(), st.opt_v.clone(), st.local_step))
+        };
+        Ok(())
     }
 
     /// Run one local round: `steps` fused train steps per island starting

@@ -12,7 +12,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::ckpt::{Checkpoint, ClientCkpt};
-use crate::cluster::island::group_islands;
+use crate::cluster::island::island_counts;
 use crate::config::{CorpusKind, ExperimentConfig};
 use crate::coordinator::client::{ClientNode, ClientUpdate};
 use crate::coordinator::round_exec::{ClientTask, RoundExec};
@@ -52,26 +52,68 @@ pub struct Federation {
     scratch_agg: AggScratch,
 }
 
-/// Build the corpus + partition for a config.
-pub fn build_data(cfg: &ExperimentConfig, vocab: usize) -> DataSource {
-    let (corpus, partition) = match &cfg.corpus {
+/// Build the corpus + partition for a corpus kind. Takes the pieces rather
+/// than a full [`ExperimentConfig`] so remote workers (`net::worker`), which
+/// only receive a task spec over the wire, build the *identical* data plane
+/// the Aggregator does.
+pub fn build_data(corpus: &CorpusKind, n_clients: usize, seed: u64, vocab: usize) -> DataSource {
+    let (corpus, partition) = match corpus {
         CorpusKind::C4Iid => {
             let c = SyntheticCorpus::c4(vocab);
-            let p = Partition::iid(&c, cfg.n_clients);
+            let p = Partition::iid(&c, n_clients);
             (c, p)
         }
         CorpusKind::PileHetero { j } => {
             let c = SyntheticCorpus::pile(vocab);
-            let p = Partition::heterogeneous(&c, cfg.n_clients, *j);
+            let p = Partition::heterogeneous(&c, n_clients, *j);
             (c, p)
         }
         CorpusKind::Mc4 { n_langs } => {
             let c = SyntheticCorpus::mc4(vocab, *n_langs);
-            let p = Partition::heterogeneous(&c, cfg.n_clients, 1);
+            let p = Partition::heterogeneous(&c, n_clients, 1);
             (c, p)
         }
     };
-    DataSource::new(corpus, partition, cfg.seed)
+    DataSource::new(corpus, partition, seed)
+}
+
+/// Bind client `c`'s training streams: one per connectivity island, each on
+/// a disjoint seed path. Shared by the in-process Aggregator and remote
+/// workers — both sides must bind bit-identically for the deployment plane
+/// to reproduce `Federation::run` exactly.
+pub fn bind_client_streams(
+    data: &DataSource,
+    client: usize,
+    n_islands: usize,
+    seq_width: usize,
+    seed: u64,
+) -> Result<Vec<TokenStream>> {
+    (0..n_islands)
+        .map(|isl| {
+            TokenStream::bind(
+                &data.partition.assignment[client],
+                &data.corpus.categories,
+                seq_width,
+                seed ^ ((isl as u64) << 32),
+            )
+        })
+        .collect()
+}
+
+/// One planned round before execution: who was sampled, who is runnable
+/// (with their effective step counts, in sampled order), and who dropped —
+/// exactly the realization `run_round` executes and `sim::RoundPlan`
+/// replays. The deployment plane (`net::server`) dispatches from this.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RoundDispatch {
+    pub round: usize,
+    /// Cumulative sequential steps at round start (LR-schedule base).
+    pub seq_base: u64,
+    pub sampled: Vec<usize>,
+    /// `(client, effective_steps)` in sampled order — the deterministic
+    /// reduction order for aggregation.
+    pub runnable: Vec<(usize, u64)>,
+    pub dropped: Vec<usize>,
 }
 
 impl Federation {
@@ -103,35 +145,22 @@ impl Federation {
             );
         }
         let vocab = model.manifest.config.vocab;
-        let data = build_data(&cfg, vocab);
+        let data = build_data(&cfg.corpus, cfg.n_clients, cfg.seed, vocab);
         let seq_width = model.seq_width();
 
         // Bind each node's streams; poorly-connected multi-node clients get
         // one stream per island (disjoint sample paths = PartitionStream).
+        let islands = island_counts(cfg.fleet.as_ref(), cfg.n_clients);
         let mut nodes = Vec::with_capacity(cfg.n_clients);
         for c in 0..cfg.n_clients {
-            let n_islands = cfg
-                .fleet
-                .as_ref()
-                .map(|f| group_islands(&f.clients[c]).len())
-                .unwrap_or(1);
-            let streams: Vec<TokenStream> = (0..n_islands)
-                .map(|isl| {
-                    TokenStream::bind(
-                        &data.partition.assignment[c],
-                        &data.corpus.categories,
-                        seq_width,
-                        cfg.seed ^ ((isl as u64) << 32),
-                    )
-                })
-                .collect();
+            let streams = bind_client_streams(&data, c, islands[c], seq_width, cfg.seed)?;
             nodes.push(ClientNode::new(c, streams));
         }
 
         let global = init_params(&model.manifest, cfg.seed);
         let outer = OuterOpt::new(cfg.outer, cfg.outer_hyper, model.n_params());
         let val_batches =
-            data.validation_batches(cfg.eval_batches, model.batch_size(), seq_width);
+            data.validation_batches(cfg.eval_batches, model.batch_size(), seq_width)?;
         let n = model.n_params();
         Ok(Federation {
             sampler: ClientSampler::new(cfg.seed),
@@ -159,6 +188,29 @@ impl Federation {
         self.model.eval_nll(&self.global, &self.val_batches)
     }
 
+    /// Plan the next round without executing it: replay the sampler and
+    /// fault draws exactly as `run_round` will (Algorithm 1 L.3–7). The
+    /// deployment plane dispatches remote work from this plan; `sim`'s
+    /// `RoundPlan::from_config` is the whole-run analogue.
+    pub fn plan_round(&self) -> RoundDispatch {
+        let round = self.next_round;
+        let sampled =
+            self.sampler.sample(round, self.cfg.n_clients, self.cfg.clients_per_round);
+        let faults = self.cfg.faults.for_round(round, &sampled);
+        let runnable = sampled
+            .iter()
+            .filter(|c| !faults.is_dropped(**c))
+            .map(|&c| (c, faults.effective_steps(c, self.cfg.local_steps)))
+            .collect();
+        RoundDispatch {
+            round,
+            seq_base: self.seq_step,
+            sampled,
+            runnable,
+            dropped: faults.dropped,
+        }
+    }
+
     /// Execute one federated round (Algorithm 1 L.3–11). Returns the round
     /// record (also appended to `self.log`).
     ///
@@ -166,28 +218,38 @@ impl Federation {
     /// concurrent local rounds); updates are folded in sampled order, so
     /// the record stream is bit-identical across worker counts.
     pub fn run_round(&mut self) -> Result<RoundRecord> {
-        let round = self.next_round;
+        self.run_round_cut(&[])
+    }
+
+    /// Like [`run_round`](Federation::run_round), but additionally treats
+    /// the clients in `cut` exactly as dropped: they do not run, their
+    /// state does not advance, and they contribute nothing to aggregation.
+    /// This is the in-process replay of a deployment-plane deadline cut
+    /// (`net::server` cuts stragglers and dead workers through this same
+    /// dropped-client path), so a live run with realized cuts is
+    /// bit-reproducible here from its cut schedule.
+    pub fn run_round_cut(&mut self, cut: &[usize]) -> Result<RoundRecord> {
         let t0 = Instant::now();
-        let k = self.cfg.clients_per_round;
-        let sampled = self.sampler.sample(round, self.cfg.n_clients, k);
-        let faults = self.cfg.faults.for_round(round, &sampled);
+        let d = self.plan_round();
+        let round = d.round;
 
         let schedule = self.cfg.schedule;
         let lr_at = move |t: u64| schedule.lr(t);
 
-        // One slot per runnable client, in sampled order — the slot is the
-        // deterministic reduction position, independent of which worker
-        // finishes first.
+        // One slot per surviving runnable client, in sampled order — the
+        // slot is the deterministic reduction position, independent of
+        // which worker finishes first.
         let mut slot_of = vec![usize::MAX; self.cfg.n_clients];
+        let mut steps_of = vec![0u64; self.cfg.n_clients];
         let mut n_runnable = 0usize;
-        for &c in &sampled {
-            if !faults.is_dropped(c) {
+        for &(c, steps) in &d.runnable {
+            if !cut.contains(&c) {
                 slot_of[c] = n_runnable;
+                steps_of[c] = steps;
                 n_runnable += 1;
             }
         }
-        let local_steps = self.cfg.local_steps;
-        let seq_base = self.seq_step;
+        let seq_base = d.seq_base;
         let policy = self.cfg.opt_state;
         let engine = RoundExec::new(self.cfg.exec.workers);
         let model = &self.model;
@@ -197,11 +259,7 @@ impl Federation {
             .iter_mut()
             .enumerate()
             .filter(|(c, _)| slot_of[*c] != usize::MAX)
-            .map(|(c, node)| ClientTask {
-                client_id: c,
-                steps: faults.effective_steps(c, local_steps),
-                node,
-            })
+            .map(|(c, node)| ClientTask { client_id: c, steps: steps_of[c], node })
             .collect();
         tasks.sort_by_key(|t| slot_of[t.client_id]);
         let results = engine.run(&mut tasks, |task| {
@@ -214,7 +272,27 @@ impl Federation {
         for r in results {
             updates.push(r?);
         }
+        self.commit_round(round, updates, t0)
+    }
 
+    /// Fold a round's client updates into the global model (Algorithm 1
+    /// L.8–11): streaming aggregation, outer-optimizer step, metrics
+    /// record, checkpoint. `updates` must be in sampled order and `round`
+    /// must be the current `next_round` — both the in-process path
+    /// (`run_round`) and the deployment plane (`net::server`) commit
+    /// through here, which is what makes their record streams comparable
+    /// bit-for-bit.
+    pub fn commit_round(
+        &mut self,
+        round: usize,
+        updates: Vec<ClientUpdate>,
+        t0: Instant,
+    ) -> Result<RoundRecord> {
+        anyhow::ensure!(
+            round == self.next_round,
+            "commit_round({round}) out of order: federation is at round {}",
+            self.next_round
+        );
         // Schedule advances by the nominal τ regardless of faults (the
         // paper's schedule is synchronized across sequential steps).
         self.seq_step += self.cfg.local_steps;
@@ -320,23 +398,37 @@ impl Federation {
         Ok(self.log.rounds.clone())
     }
 
+    /// One client's full inter-round state (stream cursors + KeepOpt
+    /// moments) in checkpoint form — the unit of state the deployment
+    /// plane ships to stateless workers each round and takes back with
+    /// their updates.
+    pub fn client_state(&self, client: usize) -> ClientCkpt {
+        self.nodes[client].state()
+    }
+
+    /// Validate a client state against this federation's structure without
+    /// mutating anything — the deployment plane runs this on every arriving
+    /// update so a malformed push can be cut instead of poisoning a commit.
+    pub fn check_client_state(&self, client: usize, st: &ClientCkpt) -> Result<()> {
+        anyhow::ensure!(client < self.nodes.len(), "client {client} out of range");
+        self.nodes[client].check_state(st)
+    }
+
+    /// Install a client state returned by a worker (or a checkpoint
+    /// fragment). Validates structure before mutating; a cut or crashed
+    /// worker simply never gets here, leaving the client at its pre-round
+    /// state — exactly the dropped-client semantics.
+    pub fn restore_client_state(&mut self, client: usize, st: &ClientCkpt) -> Result<()> {
+        anyhow::ensure!(client < self.nodes.len(), "client {client} out of range");
+        self.nodes[client].restore_state(st)
+    }
+
     /// Snapshot the full federation state. Every stream cursor of every
     /// client is captured — multi-island clients have one per island, and
     /// all of them must survive a resume for the fleet to stay
     /// sample-exact.
     pub fn checkpoint(&self) -> Checkpoint {
-        let clients = self
-            .nodes
-            .iter()
-            .map(|n| {
-                let cursors = n.streams.iter().map(|s| s.cursor()).collect();
-                let (m, v, st) = match &n.saved_opt {
-                    Some((m, v, st)) => (m.clone(), v.clone(), *st),
-                    None => (Vec::new(), Vec::new(), 0),
-                };
-                Some(ClientCkpt { opt_m: m, opt_v: v, local_step: st, cursors })
-            })
-            .collect();
+        let clients = self.nodes.iter().map(|n| Some(n.state())).collect();
         let (t, m, v) = self.outer.state();
         Checkpoint {
             round: self.next_round as u64,
@@ -370,16 +462,9 @@ impl Federation {
         }
         // Validate cursor arity before mutating anything so a fleet
         // mismatch cannot leave the federation half-restored.
-        for (id, (node, c)) in self.nodes.iter().zip(&ck.clients).enumerate() {
+        for (node, c) in self.nodes.iter().zip(&ck.clients) {
             if let Some(c) = c {
-                if c.cursors.len() != node.streams.len() {
-                    bail!(
-                        "checkpoint client {id} carries {} stream cursors, \
-                         config builds {} islands (fleet mismatch?)",
-                        c.cursors.len(),
-                        node.streams.len()
-                    );
-                }
+                node.check_state(c).context("checkpoint does not fit this config")?;
             }
         }
         self.global.copy_from_slice(&ck.global);
@@ -389,14 +474,7 @@ impl Federation {
         self.elapsed_offset = ck.elapsed_secs;
         for (node, c) in self.nodes.iter_mut().zip(&ck.clients) {
             if let Some(c) = c {
-                for (stream, cur) in node.streams.iter_mut().zip(&c.cursors) {
-                    stream.restore(cur);
-                }
-                node.saved_opt = if c.opt_m.is_empty() {
-                    None
-                } else {
-                    Some((c.opt_m.clone(), c.opt_v.clone(), c.local_step))
-                };
+                node.restore_state(c)?;
             }
         }
         Ok(())
@@ -469,15 +547,27 @@ mod tests {
 
     #[test]
     fn build_data_shapes() {
-        let mut cfg = ExperimentConfig::quickstart("m75a");
-        cfg.n_clients = 8;
-        cfg.corpus = CorpusKind::PileHetero { j: 1 };
-        let ds = build_data(&cfg, 64);
+        let ds = build_data(&CorpusKind::PileHetero { j: 1 }, 8, 42, 64);
         assert_eq!(ds.n_clients(), 8);
         assert_eq!(ds.corpus.categories.len(), 8);
-        cfg.corpus = CorpusKind::C4Iid;
-        assert_eq!(build_data(&cfg, 64).corpus.categories.len(), 1);
-        cfg.corpus = CorpusKind::Mc4 { n_langs: 4 };
-        assert_eq!(build_data(&cfg, 64).corpus.categories.len(), 4);
+        assert_eq!(build_data(&CorpusKind::C4Iid, 8, 42, 64).corpus.categories.len(), 1);
+        assert_eq!(
+            build_data(&CorpusKind::Mc4 { n_langs: 4 }, 8, 42, 64).corpus.categories.len(),
+            4
+        );
+    }
+
+    #[test]
+    fn bind_client_streams_is_deterministic_and_island_aware() {
+        let ds = build_data(&CorpusKind::PileHetero { j: 2 }, 4, 7, 64);
+        let a = bind_client_streams(&ds, 0, 2, 9, 7).unwrap();
+        let mut b = bind_client_streams(&ds, 0, 2, 9, 7).unwrap();
+        assert_eq!(a.len(), 2);
+        // Same binding → same cursors; islands differ from each other.
+        assert_eq!(a[0].cursor(), b[0].cursor());
+        assert_eq!(a[1].cursor(), b[1].cursor());
+        let first_island = b[0].next_batch(2);
+        let second_island = b[1].next_batch(2);
+        assert_ne!(first_island, second_island);
     }
 }

@@ -33,6 +33,6 @@ pub mod sampler;
 
 pub use centralized::run_centralized;
 pub use client::{ClientNode, ClientUpdate};
-pub use federation::Federation;
+pub use federation::{bind_client_streams, build_data, Federation, RoundDispatch};
 pub use round_exec::{ClientTask, RoundExec};
 pub use sampler::ClientSampler;

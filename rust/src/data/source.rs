@@ -3,6 +3,8 @@
 //! held-out validation split ("Photon Data Source ensures this split is
 //! preserved and streamed to the Photon LLM Nodes when asked to validate").
 
+use anyhow::Result;
+
 use crate::data::corpus::SyntheticCorpus;
 use crate::data::partition::Partition;
 use crate::data::stream::TokenStream;
@@ -24,7 +26,7 @@ impl DataSource {
 
     /// Bind client `c`'s buckets to a merged training stream
     /// (Algorithm 1 L.13).
-    pub fn bind_stream(&self, client: usize, seq_width: usize) -> TokenStream {
+    pub fn bind_stream(&self, client: usize, seq_width: usize) -> Result<TokenStream> {
         TokenStream::bind(
             &self.partition.assignment[client],
             &self.corpus.categories,
@@ -42,14 +44,14 @@ impl DataSource {
         n_batches: usize,
         batch: usize,
         seq_width: usize,
-    ) -> Vec<Vec<i32>> {
+    ) -> Result<Vec<Vec<i32>>> {
         let mut stream = TokenStream::bind(
             &self.partition.validation,
             &self.corpus.categories,
             seq_width,
             self.experiment_seed ^ 0x7a11_da7e,
-        );
-        (0..n_batches).map(|_| stream.next_batch(batch)).collect()
+        )?;
+        Ok((0..n_batches).map(|_| stream.next_batch(batch)).collect())
     }
 
     /// A client's *personal* validation stream (paper §4.2: personalized
@@ -61,14 +63,14 @@ impl DataSource {
         n_batches: usize,
         batch: usize,
         seq_width: usize,
-    ) -> Vec<Vec<i32>> {
+    ) -> Result<Vec<Vec<i32>>> {
         let mut stream = TokenStream::bind(
             &self.partition.assignment[client],
             &self.corpus.categories,
             seq_width,
             self.experiment_seed ^ 0x9c11e47,
-        );
-        (0..n_batches).map(|_| stream.next_batch(batch)).collect()
+        )?;
+        Ok((0..n_batches).map(|_| stream.next_batch(batch)).collect())
     }
 
     pub fn n_clients(&self) -> usize {
@@ -90,8 +92,8 @@ mod tests {
     #[test]
     fn validation_is_deterministic_and_shared() {
         let s = source();
-        let a = s.validation_batches(3, 2, 9);
-        let b = s.validation_batches(3, 2, 9);
+        let a = s.validation_batches(3, 2, 9).unwrap();
+        let b = s.validation_batches(3, 2, 9).unwrap();
         assert_eq!(a, b);
         assert_eq!(a.len(), 3);
         assert_eq!(a[0].len(), 2 * 9);
@@ -100,8 +102,8 @@ mod tests {
     #[test]
     fn validation_differs_from_training() {
         let s = source();
-        let val = s.validation_batches(1, 2, 9);
-        let mut train = s.bind_stream(0, 9);
+        let val = s.validation_batches(1, 2, 9).unwrap();
+        let mut train = s.bind_stream(0, 9).unwrap();
         assert_ne!(val[0], train.next_batch(2));
     }
 
@@ -109,8 +111,8 @@ mod tests {
     fn client_validation_is_personal() {
         let s = source();
         // Clients hold different genres => different personal val sets.
-        let v0 = s.client_validation_batches(0, 1, 2, 9);
-        let v1 = s.client_validation_batches(1, 1, 2, 9);
+        let v0 = s.client_validation_batches(0, 1, 2, 9).unwrap();
+        let v1 = s.client_validation_batches(1, 1, 2, 9).unwrap();
         assert_ne!(v0, v1);
     }
 

@@ -4,6 +4,8 @@
 //! checkpoints so training resumes sample-exact (paper §4.1: "the local
 //! state must track ... data loading index states").
 
+use anyhow::{bail, ensure, Result};
+
 use crate::data::corpus::{Category, CategorySampler};
 use crate::data::partition::Bucket;
 use crate::util::rng::Rng;
@@ -36,39 +38,51 @@ pub struct StreamCursor {
 
 impl TokenStream {
     /// Bind buckets into one stream. `categories` must contain the category
-    /// of every bucket. `seq_width = seq_len + 1` (inputs + shifted targets).
+    /// of every bucket — a bucket naming a category the corpus does not
+    /// carry is a configuration error (bad partition vs corpus pairing) and
+    /// fails the bind instead of panicking the process, so a federation
+    /// round can report it and keep the Aggregator alive.
+    /// `seq_width = seq_len + 1` (inputs + shifted targets).
     pub fn bind(
         buckets: &[Bucket],
         categories: &[Category],
         seq_width: usize,
         experiment_seed: u64,
-    ) -> TokenStream {
-        assert!(!buckets.is_empty(), "stream needs at least one bucket");
+    ) -> Result<TokenStream> {
+        ensure!(!buckets.is_empty(), "stream needs at least one bucket");
         let streams = buckets
             .iter()
             .map(|b| {
-                let cat = categories
-                    .iter()
-                    .find(|c| c.name == b.category)
-                    .unwrap_or_else(|| panic!("unknown category {:?}", b.category));
-                BucketStream {
+                let Some(cat) = categories.iter().find(|c| c.name == b.category) else {
+                    bail!(
+                        "bucket references unknown category {:?} (corpus carries: {}) \
+                         — partition and corpus configs disagree",
+                        b.category,
+                        categories
+                            .iter()
+                            .map(|c| c.name.as_str())
+                            .collect::<Vec<_>>()
+                            .join(", ")
+                    );
+                };
+                Ok(BucketStream {
                     sampler: CategorySampler::new(cat),
                     rng: Rng::new(b.seed(experiment_seed)),
                     drawn: 0,
-                }
+                })
             })
-            .collect();
+            .collect::<Result<Vec<_>>>()?;
         let mix_seed = buckets
             .iter()
             .fold(experiment_seed ^ 0x51_7e_a1, |acc, b| {
                 acc.wrapping_mul(31).wrapping_add(b.seed(experiment_seed))
             });
-        TokenStream {
+        Ok(TokenStream {
             buckets: streams,
             bucket_ids: buckets.to_vec(),
             mix_rng: Rng::new(mix_seed),
             seq_width,
-        }
+        })
     }
 
     /// One training sequence of `seq_width` tokens.
@@ -128,7 +142,22 @@ mod tests {
     fn toy_stream(seed: u64) -> TokenStream {
         let corpus = SyntheticCorpus::pile(64);
         let p = Partition::heterogeneous(&corpus, 4, 2);
-        TokenStream::bind(&p.assignment[0], &corpus.categories, 9, seed)
+        TokenStream::bind(&p.assignment[0], &corpus.categories, 9, seed).unwrap()
+    }
+
+    #[test]
+    fn unknown_category_is_an_error_not_a_panic() {
+        let corpus = SyntheticCorpus::pile(64);
+        let bogus = [crate::data::partition::Bucket {
+            category: "not_a_real_genre".into(),
+            index: 0,
+        }];
+        let err = TokenStream::bind(&bogus, &corpus.categories, 9, 1)
+            .err()
+            .expect("bad partition config must fail the bind")
+            .to_string();
+        assert!(err.contains("not_a_real_genre"), "{err}");
+        assert!(err.contains("corpus carries"), "{err}");
     }
 
     #[test]
@@ -160,8 +189,10 @@ mod tests {
     fn disjoint_buckets_give_disjoint_sample_paths() {
         let corpus = SyntheticCorpus::c4(64);
         let p = Partition::iid(&corpus, 2);
-        let mut s0 = TokenStream::bind(&p.assignment[0], &corpus.categories, 9, 3);
-        let mut s1 = TokenStream::bind(&p.assignment[1], &corpus.categories, 9, 3);
+        let mut s0 =
+            TokenStream::bind(&p.assignment[0], &corpus.categories, 9, 3).unwrap();
+        let mut s1 =
+            TokenStream::bind(&p.assignment[1], &corpus.categories, 9, 3).unwrap();
         assert_ne!(s0.next_batch(4), s1.next_batch(4));
     }
 

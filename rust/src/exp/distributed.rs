@@ -1,0 +1,168 @@
+//! `distributed`: the deployment-plane parity sweep — a localhost TCP
+//! fleet (`net::harness`) must reproduce the in-process `Federation::run`
+//! **bit for bit**: same global model, same round-record stream (wall-clock
+//! aside), under partial participation, dropouts, and stragglers; and a
+//! worker crashed mid-round must be cut through the dropped-client path
+//! with the remaining run still bit-reproducible from the recorded cut
+//! schedule.
+//!
+//! ```text
+//! photon exp distributed [--config m75a] [--clients P] [--sampled K]
+//!     [--rounds N] [--steps T] [--seed S] [--fleet W]
+//!     [--dropout p] [--straggler p]
+//! ```
+//!
+//! Requires compiled artifacts (`make artifacts`).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::cluster::faults::FaultPlan;
+use crate::config::ExperimentConfig;
+use crate::coordinator::Federation;
+use crate::exp::common::check_shape;
+use crate::metrics::RoundRecord;
+use crate::net::{run_loopback, FleetOpts};
+use crate::optim::schedule::CosineSchedule;
+use crate::runtime::Runtime;
+use crate::util::cli::Args;
+use crate::util::csv::CsvWriter;
+use crate::util::results_dir;
+
+fn parity(a: &[RoundRecord], b: &[RoundRecord]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.agrees_with(y))
+}
+
+pub fn distributed(args: &Args) -> Result<()> {
+    let model_name = args.get_or("config", "m75a");
+    let p = args.get_usize("clients", 8)?;
+    let k = args.get_usize("sampled", p.min(8))?;
+    let rounds = args.get_usize("rounds", 4)?.max(3);
+    let steps = args.get_u64("steps", 8)?;
+    let seed = args.get_u64("seed", 42)?;
+    let fleet = args.get_usize("fleet", 4)?.max(1);
+    let dropout = args.get_f64("dropout", 0.1)?;
+    let straggler = args.get_f64("straggler", 0.25)?;
+
+    let total = rounds as u64 * steps;
+    let mut cfg = ExperimentConfig::quickstart(&model_name);
+    cfg.label = format!("distributed-{model_name}");
+    cfg.n_clients = p;
+    cfg.clients_per_round = k;
+    cfg.rounds = rounds;
+    cfg.local_steps = steps;
+    cfg.seed = seed;
+    cfg.schedule = CosineSchedule::new(3e-3, 0.1, total.max(2), (total / 20).min(100));
+    cfg.faults = FaultPlan::new(dropout, straggler, seed);
+
+    println!(
+        "distributed parity: {model_name} P={p} K={k} rounds={rounds} τ={steps} \
+         over {fleet} TCP workers (dropout {dropout}, stragglers {straggler})"
+    );
+    let rt = Runtime::cpu()?;
+    let model = Arc::new(rt.load_model(&model_name)?);
+
+    // --- reference: the in-process federation ------------------------------
+    let mut fed = Federation::with_model(cfg.clone(), model.clone())?;
+    let reference = fed.run()?;
+
+    // --- the same config over a localhost TCP fleet ------------------------
+    let fleet_report = run_loopback(
+        cfg.clone(),
+        model.clone(),
+        FleetOpts { workers: fleet, compress: true, ..FleetOpts::default() },
+    )?;
+    for e in &fleet_report.worker_errors {
+        println!("[!] {e}");
+    }
+
+    println!("\nround | in-process ppl | tcp-fleet ppl | participated | bit-equal");
+    let mut w = CsvWriter::create(
+        &results_dir("distributed").join("parity.csv"),
+        &["round", "ref_ppl", "net_ppl", "ref_participated", "net_participated", "agree"],
+    )?;
+    for (r, n) in reference.iter().zip(&fleet_report.records) {
+        let ok = r.agrees_with(n);
+        println!(
+            "{:>5} | {:>14.6} | {:>13.6} | {:>6} vs {:<3} | {}",
+            r.round,
+            r.server_ppl,
+            n.server_ppl,
+            r.participated,
+            n.participated,
+            if ok { "yes" } else { "NO" },
+        );
+        w.row(&[
+            r.round as f64,
+            r.server_ppl,
+            n.server_ppl,
+            r.participated as f64,
+            n.participated as f64,
+            ok as usize as f64,
+        ])?;
+    }
+    w.finish()?;
+
+    let records_ok = parity(&reference, &fleet_report.records);
+    let global_ok = fed.global == fleet_report.global;
+    check_shape(
+        "distributed-parity",
+        records_ok && global_ok && fleet_report.cuts.is_empty(),
+        format!(
+            "{} rounds over {fleet} workers: records {} + global model {} \
+             (cuts: {:?})",
+            reference.len(),
+            if records_ok { "bit-equal" } else { "DIVERGED" },
+            if global_ok { "bit-equal" } else { "DIVERGED" },
+            fleet_report.cuts,
+        ),
+    );
+
+    // --- fault drill: crash a worker mid-round, replay the cut in-process --
+    let crash_round = 1u64;
+    let crashed = run_loopback(
+        cfg.clone(),
+        model.clone(),
+        FleetOpts {
+            workers: fleet,
+            compress: true,
+            die_at_round: HashMap::from([(0usize, crash_round)]),
+            ..FleetOpts::default()
+        },
+    )?;
+    let mut replay = Federation::with_model(cfg, model)?;
+    let mut replayed = Vec::with_capacity(rounds);
+    for round in 0..rounds {
+        let cut = crashed
+            .cuts
+            .iter()
+            .find(|(r, _)| *r == round)
+            .map(|(_, c)| c.clone())
+            .unwrap_or_default();
+        replayed.push(replay.run_round_cut(&cut)?);
+    }
+    let cut_round_lost = crashed
+        .cuts
+        .iter()
+        .any(|(r, c)| *r == crash_round as usize && !c.is_empty());
+    let crash_records_ok = parity(&replayed, &crashed.records);
+    let crash_global_ok = replay.global == crashed.global;
+    check_shape(
+        "distributed-crash-cut",
+        cut_round_lost && crash_records_ok && crash_global_ok,
+        format!(
+            "worker 0 killed in round {crash_round}: cuts {:?}; replayed run \
+             records {} + global {}",
+            crashed.cuts,
+            if crash_records_ok { "bit-equal" } else { "DIVERGED" },
+            if crash_global_ok { "bit-equal" } else { "DIVERGED" },
+        ),
+    );
+    println!(
+        "wrote {}",
+        results_dir("distributed").join("parity.csv").display()
+    );
+    Ok(())
+}

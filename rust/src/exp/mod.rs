@@ -14,6 +14,7 @@
 
 pub mod comm;
 pub mod common;
+pub mod distributed;
 pub mod fig_ablation;
 pub mod fig_hetero;
 pub mod fig_norms;
@@ -32,7 +33,7 @@ pub struct ExpInfo {
     pub what: &'static str,
 }
 
-pub const EXPERIMENTS: [ExpInfo; 20] = [
+pub const EXPERIMENTS: [ExpInfo; 21] = [
     ExpInfo { id: "table1", what: "token/step accounting (Chinchilla vs MPT vs seq/par)" },
     ExpInfo { id: "table2", what: "architecture ladder (paper + analogues)" },
     ExpInfo { id: "table3", what: "optimization hyperparameters" },
@@ -53,6 +54,7 @@ pub const EXPERIMENTS: [ExpInfo; 20] = [
     ExpInfo { id: "table56", what: "in-context learning across the ladder" },
     ExpInfo { id: "comm", what: "communication: federated vs DDP (headline 1)" },
     ExpInfo { id: "wallclock", what: "event-driven wall-clock: link ladder × τ × aggregation policy (§4.3)" },
+    ExpInfo { id: "distributed", what: "deployment plane: TCP worker fleet bit-equals the in-process federation (§4.1)" },
 ];
 
 pub fn run(id: &str, args: &Args) -> Result<()> {
@@ -77,6 +79,7 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
         "table56" => table56::table56(args),
         "comm" => comm::comm(args),
         "wallclock" => fig_wallclock::fig_wallclock(args),
+        "distributed" => distributed::distributed(args),
         "all" => {
             for e in &EXPERIMENTS {
                 println!("\n################ {} ################", e.id);

@@ -10,10 +10,12 @@
 //!   runtime: round orchestration ([`coordinator`]), client sampling,
 //!   outer optimizers ([`optim`]), hierarchical island aggregation
 //!   ([`cluster`]), streaming synthetic corpora ([`data`]), the
-//!   Photon-Link transport ([`link`]), checkpointing ([`ckpt`]), network
-//!   cost modeling ([`netsim`]), the event-driven wall-clock simulator
-//!   ([`sim`]), and the experiment harness ([`exp`]) that regenerates
-//!   every table/figure of the paper.
+//!   Photon-Link transport ([`link`]), the TCP deployment plane ([`net`]:
+//!   real Aggregator/worker federation with straggler cuts and restart
+//!   recovery), checkpointing ([`ckpt`]), network cost modeling
+//!   ([`netsim`]), the event-driven wall-clock simulator ([`sim`]), and
+//!   the experiment harness ([`exp`]) that regenerates every table/figure
+//!   of the paper.
 //! * **L2/L1 (build-time python)** — the MPT-style transformer train step
 //!   (JAX) with a Pallas flash-attention kernel, AOT-lowered to HLO text in
 //!   `artifacts/` and executed here through PJRT (the [`runtime`] module).
@@ -61,6 +63,7 @@ pub mod exp;
 pub mod link;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod netsim;
 pub mod optim;
 pub mod runtime;

@@ -8,17 +8,25 @@
 //!   | uncompressed_len u64 | checksum u64 (FNV-1a of raw payload) | payload
 //!
 //! A frame with an empty payload is exactly 28 bytes and is valid — the
-//! decoder accepts any frame of at least the header size.
+//! decoder accepts any frame of at least the header size. Frames written by
+//! a *newer* peer (version > [`VERSION`]) are rejected with an explicit
+//! upgrade error; flag bits this build does not understand are rejected the
+//! same way, so header corruption cannot be silently ignored.
 //!
-//! The netsim module prices these payloads, and the wall-clock simulator
-//! (`sim`) accepts measured frame sizes as its transfer payloads; the
-//! `comm` and `wallclock` experiments use the measured compressed sizes.
+//! Two payload shapes share the format: model payloads (f32 vectors, the
+//! original `GlobalModel`/`ClientUpdate`/`Metrics` kinds) and the `net`
+//! deployment plane's control messages (opaque byte bodies encoded by
+//! `net::proto`). The netsim module prices these payloads, the wall-clock
+//! simulator (`sim`) accepts measured frame sizes as its transfer payloads,
+//! and the `net` runtime carries them over real TCP sockets.
 
 use std::io::{Read, Write};
 
 use anyhow::{bail, Result};
 
-/// Message kinds exchanged during a round (Algorithm 1).
+/// Message kinds exchanged during a round (Algorithm 1) plus the `net`
+/// deployment plane's control messages (paper §4.1's Aggregator ↔ LLM Node
+/// protocol; see `net::proto` for the bodies).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MsgKind {
     /// Server → client: global model broadcast.
@@ -27,6 +35,22 @@ pub enum MsgKind {
     ClientUpdate = 2,
     /// Client → server: metrics payload.
     Metrics = 3,
+    /// Worker → server: session admission request (version handshake).
+    Join = 4,
+    /// Server → worker: admission granted + task spec.
+    JoinAck = 5,
+    /// Server → worker: one round's work order (global model + clients).
+    RoundAssign = 6,
+    /// Worker → server: one client's finished local round.
+    UpdatePush = 7,
+    /// Worker → server: assignment acknowledgement.
+    Heartbeat = 8,
+    /// Server → worker: round folded into the global model.
+    RoundCommit = 9,
+    /// Server → worker: training finished, disconnect cleanly.
+    Shutdown = 10,
+    /// Server → worker: admission refused (version mismatch etc.).
+    Reject = 11,
 }
 
 impl MsgKind {
@@ -35,13 +59,27 @@ impl MsgKind {
             1 => MsgKind::GlobalModel,
             2 => MsgKind::ClientUpdate,
             3 => MsgKind::Metrics,
+            4 => MsgKind::Join,
+            5 => MsgKind::JoinAck,
+            6 => MsgKind::RoundAssign,
+            7 => MsgKind::UpdatePush,
+            8 => MsgKind::Heartbeat,
+            9 => MsgKind::RoundCommit,
+            10 => MsgKind::Shutdown,
+            11 => MsgKind::Reject,
             _ => bail!("unknown message kind {v}"),
         })
     }
 }
 
 const MAGIC: &[u8; 4] = b"PHLK";
-const VERSION: u16 = 1;
+/// Current wire version. Peers emitting a newer version are rejected with
+/// an upgrade error (see [`decode_bytes`]).
+pub const VERSION: u16 = 1;
+/// Oldest wire version this build still decodes.
+const MIN_VERSION: u16 = 1;
+/// Flag bits with a defined meaning; anything else is rejected.
+const FLAG_DEFLATE: u32 = 1;
 
 /// Frame header size: magic (4) + version (2) + kind (2) + flags (4) +
 /// uncompressed_len (8) + checksum (8).
@@ -71,9 +109,9 @@ fn bytes_to_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
     Ok(out)
 }
 
-/// Encode a model payload into a Photon-Link frame.
-pub fn encode_model(kind: MsgKind, params: &[f32], compress: bool) -> Result<Vec<u8>> {
-    let raw = f32s_as_bytes(params);
+/// Encode an arbitrary byte payload into a Photon-Link frame (the `net`
+/// control plane's transport; model payloads go through [`encode_model`]).
+pub fn encode_bytes(kind: MsgKind, raw: &[u8], compress: bool) -> Result<Vec<u8>> {
     let checksum = fnv1a(raw);
     let body: Vec<u8> = if compress {
         let mut enc =
@@ -94,28 +132,53 @@ pub fn encode_model(kind: MsgKind, params: &[f32], compress: bool) -> Result<Vec
     Ok(out)
 }
 
-/// Decode + verify a Photon-Link frame.
-pub fn decode_model(frame: &[u8]) -> Result<(MsgKind, Vec<f32>)> {
+/// Encode a model payload into a Photon-Link frame.
+pub fn encode_model(kind: MsgKind, params: &[f32], compress: bool) -> Result<Vec<u8>> {
+    encode_bytes(kind, f32s_as_bytes(params), compress)
+}
+
+/// Decode + verify a Photon-Link frame into its raw byte payload.
+pub fn decode_bytes(frame: &[u8]) -> Result<(MsgKind, Vec<u8>)> {
     // The header is 28 bytes; an empty payload is legal (e.g. a metrics
     // probe), so anything of at least HEADER_BYTES with the magic passes.
     if frame.len() < HEADER_BYTES || &frame[..4] != MAGIC {
         bail!("bad frame header");
     }
     let version = u16::from_le_bytes([frame[4], frame[5]]);
-    if version != VERSION {
-        bail!("unsupported link version {version}");
+    if version > VERSION {
+        bail!(
+            "frame uses link version {version}, newer than this build \
+             supports (≤ {VERSION}) — upgrade this node to talk to that peer"
+        );
+    }
+    if version < MIN_VERSION {
+        bail!("unsupported link version {version} (this build decodes {MIN_VERSION}..={VERSION})");
     }
     let kind = MsgKind::from_u16(u16::from_le_bytes([frame[6], frame[7]]))?;
     let flags = u32::from_le_bytes([frame[8], frame[9], frame[10], frame[11]]);
+    if flags & !FLAG_DEFLATE != 0 {
+        bail!("frame carries unknown flag bits {flags:#x} — corrupted or newer peer");
+    }
     let raw_len = u64::from_le_bytes(frame[12..20].try_into().unwrap()) as usize;
     let checksum = u64::from_le_bytes(frame[20..28].try_into().unwrap());
     let body = &frame[28..];
-    let raw: Vec<u8> = if flags & 1 != 0 {
-        let mut dec = flate2::read::DeflateDecoder::new(body);
-        let mut out = Vec::with_capacity(raw_len);
+    let raw: Vec<u8> = if flags & FLAG_DEFLATE != 0 {
+        // `raw_len` is untrusted — never pre-allocate from it. Deflate
+        // expands at most ~1032:1, so a declared length beyond that is
+        // corrupt on its face, and `take` caps a decompression bomb at
+        // one byte past the declared length (the mismatch check catches
+        // it) instead of inflating the whole stream.
+        if raw_len > body.len().saturating_mul(1032).saturating_add(64) {
+            bail!("frame declares {raw_len} raw bytes from a {}-byte body", body.len());
+        }
+        let mut dec = flate2::read::DeflateDecoder::new(body).take(raw_len as u64 + 1);
+        let mut out = Vec::new();
         dec.read_to_end(&mut out)?;
         out
     } else {
+        if raw_len != body.len() {
+            bail!("frame declares {raw_len} raw bytes, got {}", body.len());
+        }
         body.to_vec()
     };
     if raw.len() != raw_len {
@@ -124,6 +187,12 @@ pub fn decode_model(frame: &[u8]) -> Result<(MsgKind, Vec<f32>)> {
     if fnv1a(&raw) != checksum {
         bail!("checksum mismatch — corrupted frame");
     }
+    Ok((kind, raw))
+}
+
+/// Decode + verify a Photon-Link frame carrying a model payload.
+pub fn decode_model(frame: &[u8]) -> Result<(MsgKind, Vec<f32>)> {
+    let (kind, raw) = decode_bytes(frame)?;
     Ok((kind, bytes_to_f32s(&raw)?))
 }
 
@@ -206,6 +275,55 @@ mod tests {
         let mut f = encode_model(MsgKind::Metrics, &p, false).unwrap();
         f[4] = 9; // version
         assert!(decode_model(&f).is_err());
+    }
+
+    #[test]
+    fn newer_version_rejected_with_upgrade_error() {
+        let mut f = encode_model(MsgKind::GlobalModel, &payload(4), false).unwrap();
+        let v = (VERSION + 1).to_le_bytes();
+        f[4] = v[0];
+        f[5] = v[1];
+        let err = decode_model(&f).unwrap_err().to_string();
+        assert!(err.contains("newer"), "error must name the cause: {err}");
+        // Version 0 (older than MIN_VERSION) is a plain unsupported error.
+        f[4] = 0;
+        f[5] = 0;
+        let err = decode_model(&f).unwrap_err().to_string();
+        assert!(err.contains("unsupported"), "{err}");
+    }
+
+    #[test]
+    fn unknown_flag_bits_rejected() {
+        let mut f = encode_model(MsgKind::GlobalModel, &payload(4), false).unwrap();
+        f[9] = 0x80; // a flag bit this build does not define
+        let err = decode_model(&f).unwrap_err().to_string();
+        assert!(err.contains("flag"), "{err}");
+    }
+
+    #[test]
+    fn byte_payload_roundtrip_all_control_kinds() {
+        let body: Vec<u8> = (0..200u16).map(|i| (i % 251) as u8).collect();
+        for kind in [
+            MsgKind::Join,
+            MsgKind::JoinAck,
+            MsgKind::RoundAssign,
+            MsgKind::UpdatePush,
+            MsgKind::Heartbeat,
+            MsgKind::RoundCommit,
+            MsgKind::Shutdown,
+            MsgKind::Reject,
+        ] {
+            for compress in [false, true] {
+                let f = encode_bytes(kind, &body, compress).unwrap();
+                let (k, back) = decode_bytes(&f).unwrap();
+                assert_eq!(k, kind);
+                assert_eq!(back, body);
+            }
+        }
+        // Byte payloads need not be f32-aligned — only decode_model cares.
+        let f = encode_bytes(MsgKind::Heartbeat, &[1, 2, 3], false).unwrap();
+        assert!(decode_model(&f).is_err());
+        assert_eq!(decode_bytes(&f).unwrap().1, vec![1, 2, 3]);
     }
 
     #[test]

@@ -7,11 +7,17 @@
 //! photon exp wallclock [--size 125M] [--taus 50,500] [--policy all|sync|semisync|overlap]
 //!              [--clients P] [--sampled K] [--straggler p] [--dropout p]
 //!              [--slowdown x] [--deadline f] [--mfu u]
+//! photon exp distributed [--fleet W]       TCP fleet vs in-process parity sweep
 //! photon train --config m350a [--clients P] [--sampled K] [--rounds N]
 //!              [--steps T] [--outer fedavg|sgdn|fedadam|...] [--hetero]
 //!              [--keep-opt] [--dropout p] [--straggler p]
 //!              [--ckpt-dir DIR] [--resume] [--lr-max X] [--fleet-hetero]
 //!              [--workers N|auto] [--parallel-dispatch]
+//! photon serve [same training flags] [--bind 0.0.0.0:7070] [--min-workers K]
+//!              [--deadline-secs F] [--no-compress]
+//!              run the Aggregator as a TCP service (deployment plane)
+//! photon worker --connect HOST:7070 [--name NAME]
+//!              run one LLM Node worker against a remote Aggregator
 //! photon eval --config m350a               downstream ICL suite on a fresh init
 //! photon info [--config NAME]              artifact inventory
 //! ```
@@ -23,6 +29,7 @@ use photon::cluster::hardware::FleetSpec;
 use photon::config::{CorpusKind, ExecConfig, ExperimentConfig, OptStatePolicy};
 use photon::coordinator::Federation;
 use photon::exp;
+use photon::net::{run_worker, ServeOpts, Server, WorkerOpts};
 use photon::optim::outer::{OuterHyper, OuterOptKind};
 use photon::optim::schedule::CosineSchedule;
 use photon::util::cli::{Args, Spec};
@@ -34,15 +41,17 @@ const SPEC: Spec = Spec {
         "straggler", "ckpt-dir", "j", "items", "workers",
         // wall-clock simulation (exp wallclock)
         "size", "taus", "policy", "deadline", "slowdown", "mfu",
+        // deployment plane (serve / worker / exp distributed)
+        "bind", "connect", "name", "deadline-secs", "min-workers", "fleet",
     ],
     flags: &[
         "fast", "paper-scale", "hetero", "mc4", "keep-opt", "resume",
-        "fleet-hetero", "verbose", "parallel-dispatch",
+        "fleet-hetero", "verbose", "parallel-dispatch", "no-compress",
     ],
 };
 
 fn usage() -> &'static str {
-    "usage: photon <list|exp|train|eval|info> [args]\n  try: photon list"
+    "usage: photon <list|exp|train|serve|worker|eval|info> [args]\n  try: photon list"
 }
 
 fn main() {
@@ -66,6 +75,8 @@ fn run(raw: Vec<String>) -> Result<()> {
             exp::run(id, &args)
         }
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
+        "worker" => cmd_worker(&args),
         "eval" => cmd_eval(&args),
         "info" => cmd_info(&args),
         "help" | "--help" => {
@@ -103,7 +114,10 @@ fn cmd_list() -> Result<()> {
     Ok(())
 }
 
-fn cmd_train(args: &Args) -> Result<()> {
+/// Build the federated config shared by `train` and `serve` from the CLI
+/// flags (same flags, same defaults — a `serve` run with the flags of a
+/// `train` run executes the identical federation, just over TCP).
+fn train_config(args: &Args, label_prefix: &str) -> Result<ExperimentConfig> {
     let model = args.get_or("config", "m75a");
     let p = args.get_usize("clients", 8)?;
     let k = args.get_usize("sampled", p)?;
@@ -120,9 +134,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         CorpusKind::C4Iid
     };
 
-    let cfg = ExperimentConfig {
-        label: format!("train-{model}"),
-        model: model.clone(),
+    Ok(ExperimentConfig {
+        label: format!("{label_prefix}-{model}"),
+        model,
         corpus,
         n_clients: p,
         clients_per_round: k,
@@ -161,9 +175,11 @@ fn cmd_train(args: &Args) -> Result<()> {
             workers: args.get_count_or_auto("workers", 1)?,
             serialize_dispatch: !args.flag("parallel-dispatch"),
         },
-    };
+    })
+}
 
-    let mut fed = Federation::new(cfg)?;
+/// Apply `--ckpt-dir` / `--resume` to a freshly built federation.
+fn apply_ckpt_flags(args: &Args, fed: &mut Federation) -> Result<()> {
     if let Some(dir) = args.get("ckpt-dir") {
         let dir = std::path::PathBuf::from(dir);
         fed.ckpt_dir = Some(dir.clone());
@@ -171,6 +187,16 @@ fn cmd_train(args: &Args) -> Result<()> {
             println!("[resume] continuing from round {}", fed.next_round);
         }
     }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = train_config(args, "train")?;
+    let model = cfg.model.clone();
+    let (p, k, rounds, steps) =
+        (cfg.n_clients, cfg.clients_per_round, cfg.rounds, cfg.local_steps);
+    let mut fed = Federation::new(cfg)?;
+    apply_ckpt_flags(args, &mut fed)?;
 
     let workers = match fed.cfg.exec.workers {
         0 => "auto".to_string(),
@@ -193,6 +219,58 @@ fn cmd_train(args: &Args) -> Result<()> {
     let out = photon::util::results_dir("train").join(format!("{model}.csv"));
     fed.log.write_csv(&out)?;
     println!("wrote {}", out.display());
+    Ok(())
+}
+
+/// `photon serve`: run the Aggregator as a TCP service (deployment plane).
+/// Same training flags as `photon train`; identical config + seed produces
+/// a bit-identical run, just executed by remote workers.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = train_config(args, "serve")?;
+    let model = cfg.model.clone();
+    let min_workers = args.get_usize("min-workers", 1)?;
+    let opts = ServeOpts {
+        bind: args.get_or("bind", "127.0.0.1:7070"),
+        min_workers,
+        deadline_secs: match args.get_f64("deadline-secs", 0.0)? {
+            x if x > 0.0 => Some(x),
+            _ => None,
+        },
+        compress: !args.flag("no-compress"),
+        ..ServeOpts::default()
+    };
+    let mut fed = Federation::new(cfg)?;
+    apply_ckpt_flags(args, &mut fed)?;
+    let mut server = Server::with_federation(fed, opts)?;
+    println!(
+        "[serve] aggregator for {model} listening on {} (waiting for {} workers; \
+         deadline {:?})",
+        server.local_addr(),
+        min_workers,
+        args.get("deadline-secs").unwrap_or("none"),
+    );
+    server.run()?;
+    if !server.cuts.is_empty() {
+        println!("[serve] realized straggler/crash cuts: {:?}", server.cuts);
+    }
+    let out = photon::util::results_dir("serve").join(format!("{model}.csv"));
+    server.federation().log.write_csv(&out)?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+/// `photon worker`: one LLM Node executor serving a remote Aggregator.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let addr = args.require("connect")?;
+    let name = args.get_or("name", &format!("worker-{}", std::process::id()));
+    let report = run_worker(
+        addr,
+        WorkerOpts { name, verbose: true, ..WorkerOpts::default() },
+    )?;
+    println!(
+        "[worker] session over: slot {}, {} rounds served, {} updates pushed",
+        report.worker_slot, report.rounds_served, report.updates_pushed
+    );
     Ok(())
 }
 

@@ -47,6 +47,58 @@ pub struct RoundRecord {
     pub wall_secs: f64,
 }
 
+impl RoundRecord {
+    /// True when every *deterministic* field matches `other` exactly —
+    /// everything except `wall_secs`, which measures real time. This is
+    /// the deployment plane's parity check: a localhost TCP fleet must
+    /// produce a record stream that `agrees_with` the in-process
+    /// `Federation::run` bit for bit.
+    pub fn agrees_with(&self, other: &RoundRecord) -> bool {
+        // Exhaustive destructuring, no `..` rest pattern: adding a field
+        // to RoundRecord is a compile error here, forcing the parity
+        // check to account for it (either compared or explicitly waived
+        // like `wall_secs`).
+        let RoundRecord {
+            round,
+            server_ppl,
+            server_nll,
+            client_loss_mean,
+            client_loss_std,
+            client_ppl_mean,
+            global_model_norm,
+            client_model_norm_mean,
+            client_avg_norm,
+            pseudo_grad_norm,
+            step_grad_norm_mean,
+            applied_update_norm_mean,
+            act_norm_mean,
+            momentum_norm,
+            client_cosine_mean,
+            participated,
+            comm_bytes,
+            wall_secs: _,
+        } = self;
+        *round == other.round
+            && server_ppl.to_bits() == other.server_ppl.to_bits()
+            && server_nll.to_bits() == other.server_nll.to_bits()
+            && client_loss_mean.to_bits() == other.client_loss_mean.to_bits()
+            && client_loss_std.to_bits() == other.client_loss_std.to_bits()
+            && client_ppl_mean.to_bits() == other.client_ppl_mean.to_bits()
+            && global_model_norm.to_bits() == other.global_model_norm.to_bits()
+            && client_model_norm_mean.to_bits() == other.client_model_norm_mean.to_bits()
+            && client_avg_norm.to_bits() == other.client_avg_norm.to_bits()
+            && pseudo_grad_norm.to_bits() == other.pseudo_grad_norm.to_bits()
+            && step_grad_norm_mean.to_bits() == other.step_grad_norm_mean.to_bits()
+            && applied_update_norm_mean.to_bits()
+                == other.applied_update_norm_mean.to_bits()
+            && act_norm_mean.to_bits() == other.act_norm_mean.to_bits()
+            && momentum_norm.to_bits() == other.momentum_norm.to_bits()
+            && client_cosine_mean.to_bits() == other.client_cosine_mean.to_bits()
+            && *participated == other.participated
+            && *comm_bytes == other.comm_bytes
+    }
+}
+
 /// Rolling per-round log with CSV export.
 #[derive(Default)]
 pub struct MetricsLog {
@@ -199,6 +251,19 @@ pub fn mean_pairwise_cosine(deltas: &[Vec<f32>]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn agrees_with_ignores_wall_clock_only() {
+        let a = RoundRecord { round: 2, server_ppl: 41.5, wall_secs: 1.0, ..Default::default() };
+        let mut b = a.clone();
+        b.wall_secs = 99.0;
+        assert!(a.agrees_with(&b), "wall_secs must not affect parity");
+        b.server_ppl = 41.5000001;
+        assert!(!a.agrees_with(&b), "any deterministic field mismatch fails parity");
+        let mut c = a.clone();
+        c.participated = 7;
+        assert!(!a.agrees_with(&c));
+    }
 
     #[test]
     fn mean_std_basic() {

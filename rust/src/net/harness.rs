@@ -1,0 +1,119 @@
+//! Deterministic in-process loopback fleet: one `net::server` Aggregator
+//! plus K `net::worker` threads over `127.0.0.1` TCP, sharing a single
+//! compiled model runtime. This is the test/experiment entry point for the
+//! deployment plane — `photon exp distributed` and
+//! `tests/integration_net.rs` drive it to prove bit-exact parity with the
+//! in-process `Federation::run`.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::Federation;
+use crate::metrics::RoundRecord;
+use crate::net::server::{ServeOpts, Server};
+use crate::net::worker::{run_worker, WorkerOpts, WorkerReport};
+use crate::runtime::ModelRuntime;
+
+/// Loopback-fleet knobs.
+#[derive(Clone, Default)]
+pub struct FleetOpts {
+    /// Worker threads to spawn (the server waits for all of them).
+    pub workers: usize,
+    /// Per-round straggler deadline (None = disconnects only).
+    pub deadline_secs: Option<f64>,
+    /// Deflate model payloads on the wire.
+    pub compress: bool,
+    /// Fault hooks: worker index → round at which it "crashes"
+    /// (disconnects mid-round without replying).
+    pub die_at_round: HashMap<usize, u64>,
+    /// Checkpoint directory for the server federation.
+    pub ckpt_dir: Option<PathBuf>,
+    /// Resume the server from the latest checkpoint in `ckpt_dir`.
+    pub resume: bool,
+}
+
+/// Everything a loopback run produces.
+pub struct FleetReport {
+    /// The server's complete round-record log (includes pre-resume rounds
+    /// only if the log was rebuilt — on a resume it holds the rounds this
+    /// incarnation executed).
+    pub records: Vec<RoundRecord>,
+    /// Final global model (bit-comparable to `Federation::run`'s).
+    pub global: Vec<f32>,
+    /// Realized deadline/disconnect cuts per round.
+    pub cuts: Vec<(usize, Vec<usize>)>,
+    pub workers: Vec<WorkerReport>,
+    /// Errors from worker threads (a crashed-by-hook worker is *not* an
+    /// error; it reports `aborted_at`).
+    pub worker_errors: Vec<String>,
+}
+
+/// Run a whole federation over localhost TCP with `opts.workers` workers.
+/// Deterministic given (cfg, opts): the record stream and final global
+/// model match the in-process `Federation::run` bit-for-bit when no cuts
+/// occur, and match `Federation::run_round_cut` replayed with
+/// `FleetReport::cuts` when they do.
+pub fn run_loopback(
+    cfg: ExperimentConfig,
+    model: Arc<ModelRuntime>,
+    opts: FleetOpts,
+) -> Result<FleetReport> {
+    let mut fed = Federation::with_model(cfg, model.clone())?;
+    if let Some(dir) = &opts.ckpt_dir {
+        fed.ckpt_dir = Some(dir.clone());
+        if opts.resume {
+            fed.try_resume_from(dir)?;
+        }
+    }
+    let serve = ServeOpts {
+        bind: "127.0.0.1:0".into(),
+        min_workers: opts.workers,
+        deadline_secs: opts.deadline_secs,
+        compress: opts.compress,
+        ..ServeOpts::default()
+    };
+    let mut server = Server::with_federation(fed, serve)?;
+    let addr = server.local_addr().to_string();
+
+    let server_handle = std::thread::spawn(move || {
+        let result = server.run();
+        (server, result)
+    });
+    let worker_handles: Vec<_> = (0..opts.workers)
+        .map(|i| {
+            let addr = addr.clone();
+            let wopts = WorkerOpts {
+                name: format!("loopback-{i}"),
+                model: Some(model.clone()),
+                die_at_round: opts.die_at_round.get(&i).copied(),
+                verbose: false,
+            };
+            std::thread::spawn(move || run_worker(&addr, wopts))
+        })
+        .collect();
+
+    let mut workers = Vec::new();
+    let mut worker_errors = Vec::new();
+    for (i, h) in worker_handles.into_iter().enumerate() {
+        match h.join() {
+            Ok(Ok(report)) => workers.push(report),
+            Ok(Err(e)) => worker_errors.push(format!("worker {i}: {e:#}")),
+            Err(_) => worker_errors.push(format!("worker {i}: panicked")),
+        }
+    }
+    let (server, result) = server_handle
+        .join()
+        .map_err(|_| anyhow::anyhow!("server thread panicked"))?;
+    let records = result.context("server run failed")?;
+    Ok(FleetReport {
+        records,
+        global: server.federation().global.clone(),
+        cuts: server.cuts.clone(),
+        workers,
+        worker_errors,
+    })
+}

@@ -1,0 +1,42 @@
+//! The Photon deployment plane: a real multi-process federation runtime
+//! over TCP (paper §4.1 — the Aggregator and LLM Nodes as *networked*
+//! components, not threads; see also Photon, arXiv:2411.02908).
+//!
+//! * [`proto`]   — control protocol (Join/JoinAck + task spec, RoundAssign,
+//!                 UpdatePush, Heartbeat, RoundCommit, Shutdown, Reject)
+//!                 carried in Photon-Link frames with a version handshake
+//! * [`server`]  — the Aggregator service: admits workers, replays the
+//!                 exact sampler/fault schedule, enforces the per-round
+//!                 straggler deadline, folds updates in sampled order, and
+//!                 checkpoints every round for restart recovery
+//! * [`worker`]  — the stateless LLM Node executor: pulls the model +
+//!                 client state each round, runs the *same*
+//!                 `ClientNode::run_local_round` the in-process federation
+//!                 runs, pushes update + advanced state back
+//! * [`harness`] — deterministic in-process loopback fleet for tests and
+//!                 the `photon exp distributed` parity sweep
+//!
+//! ## The invariant
+//!
+//! A localhost fleet of K workers reproduces `Federation::run` **bit for
+//! bit** — same global model, same round records (wall-clock fields aside).
+//! When faults strike (deadline cuts, worker crashes), the realized cut
+//! schedule is recorded and the run remains bit-reproducible in-process
+//! via `Federation::run_round_cut`. The mechanism is server-owned client
+//! state: workers receive every input (global model, stream cursors,
+//! KeepOpt moments) with the assignment and return the advanced state with
+//! the update, so a client whose worker vanishes is *exactly* a dropped
+//! client.
+//!
+//! CLI: `photon serve …` / `photon worker --connect host:port`; see the
+//! README quickstart and `docs/ARCHITECTURE.md` ("Deployment plane").
+
+pub mod harness;
+pub mod proto;
+pub mod server;
+pub mod worker;
+
+pub use harness::{run_loopback, FleetOpts, FleetReport};
+pub use proto::{Msg, TaskSpec, PROTO_VERSION};
+pub use server::{ServeOpts, Server};
+pub use worker::{run_worker, WorkerOpts, WorkerReport};

@@ -1,0 +1,578 @@
+//! The deployment plane's control protocol: typed messages the Photon
+//! Aggregator (`net::server`) and LLM Node workers (`net::worker`) exchange
+//! over TCP, each carried in a Photon-Link frame ([`crate::link`]) with a
+//! `u32` length prefix for stream framing.
+//!
+//! Message flow of one session (paper §4.1 / Algorithm 1):
+//!
+//! ```text
+//! worker                          server
+//!   Join {proto, name}      ──▶
+//!                           ◀──  JoinAck {session, slot, spec}   (L.1–2)
+//!                                   | or Reject {reason}
+//!   per round:
+//!                           ◀──  RoundAssign {round, tasks, global}  (L.4–6)
+//!   Heartbeat {round}       ──▶
+//!   UpdatePush {update,st}  ──▶   (one per assigned client, L.7)
+//!                           ◀──  RoundCommit {round, participated}   (L.8–11)
+//!   at the end:
+//!                           ◀──  Shutdown
+//! ```
+//!
+//! Workers are **stateless**: every `RoundAssign` task carries the client's
+//! full inter-round state ([`ClientCkpt`] — stream cursors + KeepOpt
+//! moments) and every `UpdatePush` returns the advanced state. The server
+//! owns all state, so a worker cut at the deadline (or a crashed one)
+//! leaves its clients exactly at their pre-round state — the same
+//! semantics as the sampler's dropped-client path, which is what makes a
+//! live run bit-reproducible in-process (`Federation::run_round_cut`).
+//!
+//! The version handshake is two-layered: the link frame itself rejects
+//! newer wire versions, and `Join.proto` / `JoinAck.proto` must equal
+//! [`PROTO_VERSION`] or the session is refused with a clear error.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::ckpt::{ClientCkpt, Dec, Enc};
+use crate::config::{CorpusKind, OptStatePolicy};
+use crate::coordinator::ClientUpdate;
+use crate::link::{self, MsgKind};
+use crate::optim::schedule::CosineSchedule;
+
+/// Control-protocol version (independent of the link wire version).
+pub const PROTO_VERSION: u16 = 1;
+
+/// Refuse to read frames larger than this from a socket (corruption guard;
+/// generous enough for a 7B-analogue f32 payload plus KeepOpt moments).
+const MAX_FRAME_BYTES: usize = 1 << 31;
+
+/// Worker → server: request admission to the federation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Join {
+    pub proto: u16,
+    /// Human-readable worker name (logs only; never an identity).
+    pub name: String,
+}
+
+/// Everything a stateless worker needs to run local rounds exactly as the
+/// in-process federation would: data-plane recipe, schedule, policy, and
+/// per-client island arity. Shipped once in [`JoinAck`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskSpec {
+    /// Artifact/model config name the worker must load.
+    pub model: String,
+    /// Model size sanity check against the worker's loaded artifacts.
+    pub n_params: u64,
+    pub corpus: CorpusKind,
+    pub n_clients: u64,
+    pub seed: u64,
+    pub schedule: CosineSchedule,
+    pub opt_state: OptStatePolicy,
+    /// Stream count per client (connectivity islands).
+    pub islands: Vec<u32>,
+    /// Whether round payloads (model broadcast, update pushes) are
+    /// deflate-compressed on the wire.
+    pub compress: bool,
+}
+
+/// Server → worker: admission granted.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JoinAck {
+    pub proto: u16,
+    /// Session id — changes on server restart; stale pushes are discarded.
+    pub session: u64,
+    /// Server-assigned worker slot (logs/metrics only).
+    pub worker_slot: u64,
+    pub spec: TaskSpec,
+}
+
+/// One client's work order inside a [`RoundAssign`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct AssignTask {
+    pub client: u64,
+    /// Effective local steps after fault injection.
+    pub steps: u64,
+    /// The client's full inter-round state (server-owned).
+    pub state: ClientCkpt,
+}
+
+/// Server → worker: one round's work order plus the global model broadcast.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoundAssign {
+    pub session: u64,
+    pub round: u64,
+    /// Cumulative sequential steps at round start (LR-schedule base).
+    pub seq_base: u64,
+    /// This worker's share of the sampled clients, in slot order.
+    pub tasks: Vec<AssignTask>,
+    pub global: Vec<f32>,
+}
+
+/// Worker → server: one client's completed local round.
+#[derive(Clone, Debug)]
+pub struct UpdatePush {
+    pub session: u64,
+    pub round: u64,
+    pub update: ClientUpdate,
+    /// The client's advanced state (cursors + KeepOpt) after the round.
+    pub state: ClientCkpt,
+}
+
+/// Worker → server: assignment acknowledgement, sent on `RoundAssign`
+/// receipt. Liveness itself is socket-level — a disconnect cuts the
+/// worker's pending clients immediately, and a wedged-but-connected
+/// worker is bounded by the per-round deadline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Heartbeat {
+    pub session: u64,
+    pub round: u64,
+}
+
+/// Server → worker: the round was folded into the global model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoundCommit {
+    pub round: u64,
+    /// Clients whose updates made the aggregation (after cuts/drops).
+    pub participated: u64,
+    pub global_norm: f64,
+}
+
+/// Server → worker: admission refused.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Reject {
+    pub reason: String,
+}
+
+/// Every message of the deployment-plane control protocol.
+#[derive(Clone, Debug)]
+pub enum Msg {
+    Join(Join),
+    JoinAck(JoinAck),
+    RoundAssign(RoundAssign),
+    UpdatePush(UpdatePush),
+    Heartbeat(Heartbeat),
+    RoundCommit(RoundCommit),
+    Shutdown,
+    Reject(Reject),
+}
+
+fn enc_corpus(e: &mut Enc, c: &CorpusKind) {
+    match c {
+        CorpusKind::C4Iid => {
+            e.u8(0);
+            e.u64(0);
+        }
+        CorpusKind::PileHetero { j } => {
+            e.u8(1);
+            e.u64(*j as u64);
+        }
+        CorpusKind::Mc4 { n_langs } => {
+            e.u8(2);
+            e.u64(*n_langs as u64);
+        }
+    }
+}
+
+fn dec_corpus(d: &mut Dec) -> Result<CorpusKind> {
+    let tag = d.u8()?;
+    let arg = d.u64()? as usize;
+    Ok(match tag {
+        0 => CorpusKind::C4Iid,
+        1 => CorpusKind::PileHetero { j: arg },
+        2 => CorpusKind::Mc4 { n_langs: arg },
+        t => bail!("unknown corpus tag {t}"),
+    })
+}
+
+fn enc_spec(e: &mut Enc, s: &TaskSpec) {
+    e.str(&s.model);
+    e.u64(s.n_params);
+    enc_corpus(e, &s.corpus);
+    e.u64(s.n_clients);
+    e.u64(s.seed);
+    e.f64(s.schedule.eta_max);
+    e.f64(s.schedule.alpha);
+    e.u64(s.schedule.total_steps);
+    e.u64(s.schedule.warmup_steps);
+    e.u8(match s.opt_state {
+        OptStatePolicy::Stateless => 0,
+        OptStatePolicy::KeepOpt => 1,
+    });
+    e.u64(s.islands.len() as u64);
+    for i in &s.islands {
+        e.u32(*i);
+    }
+    e.u8(s.compress as u8);
+}
+
+fn dec_spec(d: &mut Dec) -> Result<TaskSpec> {
+    let model = d.str()?;
+    let n_params = d.u64()?;
+    let corpus = dec_corpus(d)?;
+    let n_clients = d.u64()?;
+    let seed = d.u64()?;
+    let schedule = CosineSchedule {
+        eta_max: d.f64()?,
+        alpha: d.f64()?,
+        total_steps: d.u64()?,
+        warmup_steps: d.u64()?,
+    };
+    let opt_state = match d.u8()? {
+        0 => OptStatePolicy::Stateless,
+        1 => OptStatePolicy::KeepOpt,
+        t => bail!("unknown opt-state tag {t}"),
+    };
+    let n = d.u64()? as usize;
+    let mut islands = Vec::with_capacity(d.capacity_hint(n, 4));
+    for _ in 0..n {
+        islands.push(d.u32()?);
+    }
+    let compress = d.u8()? != 0;
+    Ok(TaskSpec {
+        model,
+        n_params,
+        corpus,
+        n_clients,
+        seed,
+        schedule,
+        opt_state,
+        islands,
+        compress,
+    })
+}
+
+fn enc_update(e: &mut Enc, u: &ClientUpdate) {
+    e.u64(u.client_id as u64);
+    e.f64(u.n_samples);
+    e.f64(u.loss_mean);
+    e.f64(u.loss_last);
+    e.f64(u.step_grad_norm_mean);
+    e.f64(u.applied_update_norm_mean);
+    e.f64(u.act_norm_mean);
+    e.f64(u.model_norm);
+    e.u64(u.steps_done);
+    e.f32s(&u.params);
+}
+
+fn dec_update(d: &mut Dec) -> Result<ClientUpdate> {
+    Ok(ClientUpdate {
+        client_id: d.u64()? as usize,
+        n_samples: d.f64()?,
+        loss_mean: d.f64()?,
+        loss_last: d.f64()?,
+        step_grad_norm_mean: d.f64()?,
+        applied_update_norm_mean: d.f64()?,
+        act_norm_mean: d.f64()?,
+        model_norm: d.f64()?,
+        steps_done: d.u64()?,
+        params: d.f32s()?,
+    })
+}
+
+impl Msg {
+    pub fn kind(&self) -> MsgKind {
+        match self {
+            Msg::Join(_) => MsgKind::Join,
+            Msg::JoinAck(_) => MsgKind::JoinAck,
+            Msg::RoundAssign(_) => MsgKind::RoundAssign,
+            Msg::UpdatePush(_) => MsgKind::UpdatePush,
+            Msg::Heartbeat(_) => MsgKind::Heartbeat,
+            Msg::RoundCommit(_) => MsgKind::RoundCommit,
+            Msg::Shutdown => MsgKind::Shutdown,
+            Msg::Reject(_) => MsgKind::Reject,
+        }
+    }
+
+    /// Encode into a Photon-Link frame (compression is only worth it for
+    /// the model-bearing kinds; callers pass the session policy).
+    pub fn encode(&self, compress: bool) -> Result<Vec<u8>> {
+        let mut e = Enc::new();
+        match self {
+            Msg::Join(m) => {
+                e.u16(m.proto);
+                e.str(&m.name);
+            }
+            Msg::JoinAck(m) => {
+                e.u16(m.proto);
+                e.u64(m.session);
+                e.u64(m.worker_slot);
+                enc_spec(&mut e, &m.spec);
+            }
+            Msg::RoundAssign(m) => {
+                e.u64(m.session);
+                e.u64(m.round);
+                e.u64(m.seq_base);
+                e.u64(m.tasks.len() as u64);
+                for t in &m.tasks {
+                    e.u64(t.client);
+                    e.u64(t.steps);
+                    e.client(&t.state);
+                }
+                e.f32s(&m.global);
+            }
+            Msg::UpdatePush(m) => {
+                e.u64(m.session);
+                e.u64(m.round);
+                enc_update(&mut e, &m.update);
+                e.client(&m.state);
+            }
+            Msg::Heartbeat(m) => {
+                e.u64(m.session);
+                e.u64(m.round);
+            }
+            Msg::RoundCommit(m) => {
+                e.u64(m.round);
+                e.u64(m.participated);
+                e.f64(m.global_norm);
+            }
+            Msg::Shutdown => {}
+            Msg::Reject(m) => {
+                e.str(&m.reason);
+            }
+        }
+        // Only the model-bearing frames are worth deflating.
+        let big = matches!(self, Msg::RoundAssign(_) | Msg::UpdatePush(_));
+        link::encode_bytes(self.kind(), &e.buf, compress && big)
+    }
+
+    /// Decode a Photon-Link frame into a control message.
+    pub fn decode(frame: &[u8]) -> Result<Msg> {
+        let (kind, body) = link::decode_bytes(frame)?;
+        let mut d = Dec::new(&body);
+        let msg = match kind {
+            MsgKind::Join => Msg::Join(Join { proto: d.u16()?, name: d.str()? }),
+            MsgKind::JoinAck => Msg::JoinAck(JoinAck {
+                proto: d.u16()?,
+                session: d.u64()?,
+                worker_slot: d.u64()?,
+                spec: dec_spec(&mut d)?,
+            }),
+            MsgKind::RoundAssign => {
+                let session = d.u64()?;
+                let round = d.u64()?;
+                let seq_base = d.u64()?;
+                let n = d.u64()? as usize;
+                // 88 = minimum encoded AssignTask (ids + empty state).
+                let mut tasks = Vec::with_capacity(d.capacity_hint(n, 88));
+                for _ in 0..n {
+                    tasks.push(AssignTask {
+                        client: d.u64()?,
+                        steps: d.u64()?,
+                        state: d.client()?,
+                    });
+                }
+                let global = d.f32s()?;
+                Msg::RoundAssign(RoundAssign { session, round, seq_base, tasks, global })
+            }
+            MsgKind::UpdatePush => Msg::UpdatePush(UpdatePush {
+                session: d.u64()?,
+                round: d.u64()?,
+                update: dec_update(&mut d)?,
+                state: d.client()?,
+            }),
+            MsgKind::Heartbeat => {
+                Msg::Heartbeat(Heartbeat { session: d.u64()?, round: d.u64()? })
+            }
+            MsgKind::RoundCommit => Msg::RoundCommit(RoundCommit {
+                round: d.u64()?,
+                participated: d.u64()?,
+                global_norm: d.f64()?,
+            }),
+            MsgKind::Shutdown => Msg::Shutdown,
+            MsgKind::Reject => Msg::Reject(Reject { reason: d.str()? }),
+            other => bail!("frame kind {other:?} is not a control message"),
+        };
+        ensure!(d.done(), "trailing bytes after {:?} body", msg.kind());
+        Ok(msg)
+    }
+}
+
+/// Write one length-prefixed control frame to a stream.
+pub fn write_msg(w: &mut impl Write, msg: &Msg, compress: bool) -> Result<()> {
+    let frame = msg.encode(compress)?;
+    w.write_all(&(frame.len() as u32).to_le_bytes())
+        .and_then(|_| w.write_all(&frame))
+        .and_then(|_| w.flush())
+        .with_context(|| format!("writing {:?} frame", msg.kind()))?;
+    Ok(())
+}
+
+/// Read one length-prefixed control frame from a stream (blocking).
+pub fn read_msg(r: &mut impl Read) -> Result<Msg> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len).context("reading frame length")?;
+    let len = u32::from_le_bytes(len) as usize;
+    ensure!(
+        (crate::link::HEADER_BYTES..=MAX_FRAME_BYTES).contains(&len),
+        "implausible frame length {len}"
+    );
+    let mut frame = vec![0u8; len];
+    r.read_exact(&mut frame).context("reading frame body")?;
+    Msg::decode(&frame)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::stream::StreamCursor;
+
+    fn toy_state() -> ClientCkpt {
+        ClientCkpt {
+            opt_m: vec![0.5, -1.0],
+            opt_v: vec![0.25, 4.0],
+            local_step: 17,
+            cursors: vec![StreamCursor {
+                mix_state: [1, 2, 3, 4],
+                bucket_states: vec![([5, 6, 7, 8], 9), ([10, 11, 12, 13], 14)],
+            }],
+        }
+    }
+
+    fn toy_spec() -> TaskSpec {
+        TaskSpec {
+            model: "m75a".into(),
+            n_params: 123_456,
+            corpus: CorpusKind::PileHetero { j: 2 },
+            n_clients: 8,
+            seed: 42,
+            schedule: CosineSchedule {
+                eta_max: 3e-3,
+                alpha: 0.1,
+                total_steps: 2000,
+                warmup_steps: 20,
+            },
+            opt_state: OptStatePolicy::KeepOpt,
+            islands: vec![1, 1, 2, 1, 1, 3, 1, 1],
+            compress: true,
+        }
+    }
+
+    fn roundtrip(msg: &Msg, compress: bool) -> Msg {
+        Msg::decode(&msg.encode(compress).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn join_and_ack_roundtrip() {
+        let j = Msg::Join(Join { proto: PROTO_VERSION, name: "worker-3".into() });
+        match roundtrip(&j, false) {
+            Msg::Join(b) => {
+                assert_eq!(b.proto, PROTO_VERSION);
+                assert_eq!(b.name, "worker-3");
+            }
+            other => panic!("wrong kind {other:?}"),
+        }
+        let a = Msg::JoinAck(JoinAck {
+            proto: PROTO_VERSION,
+            session: 0xDEAD_BEEF,
+            worker_slot: 2,
+            spec: toy_spec(),
+        });
+        match roundtrip(&a, false) {
+            Msg::JoinAck(b) => {
+                assert_eq!(b.session, 0xDEAD_BEEF);
+                assert_eq!(b.spec, toy_spec());
+            }
+            other => panic!("wrong kind {other:?}"),
+        }
+    }
+
+    #[test]
+    fn round_assign_roundtrip_compressed_and_not() {
+        let msg = Msg::RoundAssign(RoundAssign {
+            session: 7,
+            round: 3,
+            seq_base: 120,
+            tasks: vec![
+                AssignTask { client: 1, steps: 40, state: toy_state() },
+                AssignTask { client: 5, steps: 20, state: toy_state() },
+            ],
+            global: (0..300).map(|i| (i as f32 * 0.1).sin()).collect(),
+        });
+        for compress in [false, true] {
+            match roundtrip(&msg, compress) {
+                Msg::RoundAssign(b) => {
+                    assert_eq!(b.round, 3);
+                    assert_eq!(b.tasks.len(), 2);
+                    assert_eq!(b.tasks[1].client, 5);
+                    assert_eq!(b.tasks[0].state, toy_state());
+                    assert_eq!(b.global.len(), 300);
+                }
+                other => panic!("wrong kind {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn update_push_roundtrip_is_bit_exact() {
+        let u = ClientUpdate {
+            client_id: 6,
+            params: vec![1.0, -2.5, 3.25, f32::MIN_POSITIVE],
+            n_samples: 160.0,
+            loss_mean: 2.3456789,
+            loss_last: 2.1,
+            step_grad_norm_mean: 0.5,
+            applied_update_norm_mean: 0.25,
+            act_norm_mean: 12.0,
+            model_norm: 99.5,
+            steps_done: 40,
+        };
+        let msg = Msg::UpdatePush(UpdatePush {
+            session: 1,
+            round: 0,
+            update: u.clone(),
+            state: toy_state(),
+        });
+        match roundtrip(&msg, true) {
+            Msg::UpdatePush(b) => {
+                assert_eq!(b.update.params, u.params, "f32 payload must be lossless");
+                assert_eq!(b.update.n_samples.to_bits(), u.n_samples.to_bits());
+                assert_eq!(b.update.loss_mean.to_bits(), u.loss_mean.to_bits());
+                assert_eq!(b.state, toy_state());
+            }
+            other => panic!("wrong kind {other:?}"),
+        }
+    }
+
+    #[test]
+    fn small_messages_roundtrip() {
+        for msg in [
+            Msg::Heartbeat(Heartbeat { session: 9, round: 4 }),
+            Msg::RoundCommit(RoundCommit { round: 4, participated: 7, global_norm: 3.5 }),
+            Msg::Shutdown,
+            Msg::Reject(Reject { reason: "proto v2 required".into() }),
+        ] {
+            let back = roundtrip(&msg, false);
+            assert_eq!(back.kind(), msg.kind());
+        }
+    }
+
+    #[test]
+    fn length_prefixed_stream_roundtrip() {
+        let mut buf: Vec<u8> = Vec::new();
+        write_msg(&mut buf, &Msg::Heartbeat(Heartbeat { session: 1, round: 2 }), false)
+            .unwrap();
+        write_msg(&mut buf, &Msg::Shutdown, false).unwrap();
+        let mut r = &buf[..];
+        assert!(matches!(read_msg(&mut r).unwrap(), Msg::Heartbeat(_)));
+        assert!(matches!(read_msg(&mut r).unwrap(), Msg::Shutdown));
+        assert!(read_msg(&mut r).is_err(), "EOF is an error, not a message");
+    }
+
+    #[test]
+    fn model_payload_frames_are_not_control_messages() {
+        let f = crate::link::encode_model(MsgKind::GlobalModel, &[1.0, 2.0], false).unwrap();
+        assert!(Msg::decode(&f).is_err());
+    }
+
+    #[test]
+    fn implausible_length_prefix_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        buf.extend_from_slice(&[0u8; 64]);
+        let mut r = &buf[..];
+        let err = read_msg(&mut r).unwrap_err().to_string();
+        assert!(err.contains("implausible"), "{err}");
+    }
+}

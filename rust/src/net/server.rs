@@ -1,0 +1,479 @@
+//! The deployment-plane Aggregator service: a [`Federation`] whose sampled
+//! clients run on remote workers over TCP instead of the in-process round
+//! engine (paper §4.1: "Photon offers a fully distributed infrastructure
+//! for collaborative pre-training across institutions").
+//!
+//! ## Equivalence contract
+//!
+//! The server *is* a `Federation` — same sampler/fault replay
+//! ([`Federation::plan_round`]), same streaming aggregation and outer step
+//! ([`Federation::commit_round`]), same checkpoints. Workers are stateless
+//! executors of [`crate::coordinator::ClientNode::run_local_round`] whose
+//! inputs (global model, stream cursors, KeepOpt moments) are shipped per
+//! round and whose outputs are folded in sampled order. A localhost fleet therefore reproduces
+//! `Federation::run` bit-for-bit: same global model, same round records
+//! (modulo wall-clock fields — see `RoundRecord::agrees_with`).
+//!
+//! ## Faults
+//!
+//! A per-round deadline (`ServeOpts::deadline_secs`) cuts stragglers: when
+//! it expires, pending clients are dropped from the aggregation exactly as
+//! sampler-dropped clients are, and their server-owned state stays at its
+//! pre-round value. A worker disconnect mid-round cuts its pending clients
+//! immediately through the same path. Every realized cut is recorded in
+//! [`Server::cuts`], so the run can be replayed in-process with
+//! [`Federation::run_round_cut`]. Because the federation checkpoints every
+//! round, killing the server and restarting it with the same `--ckpt-dir`
+//! resumes sample-exact (`Federation::try_resume_from`) — workers simply
+//! reconnect and keep serving.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::ckpt::ClientCkpt;
+use crate::coordinator::{ClientUpdate, Federation};
+use crate::metrics::RoundRecord;
+use crate::net::proto::{
+    self, AssignTask, JoinAck, Msg, Reject, RoundAssign, RoundCommit, TaskSpec,
+    PROTO_VERSION,
+};
+
+/// Deployment-plane service knobs.
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// Bind address, e.g. `127.0.0.1:7070` (`:0` picks a free port).
+    pub bind: String,
+    /// Wait for this many workers to join before dispatching round 0.
+    pub min_workers: usize,
+    /// Per-round straggler deadline in seconds (measured from dispatch);
+    /// `None` disables the timer (disconnects still cut).
+    pub deadline_secs: Option<f64>,
+    /// Deflate model payloads on the wire (lossless; bit-exact decode).
+    pub compress: bool,
+    /// How long to wait for the admission barrier before giving up.
+    pub join_timeout_secs: f64,
+    /// Socket write timeout — a worker that stops draining its socket for
+    /// this long is declared dead and its pending clients are cut.
+    pub io_timeout_secs: f64,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts {
+            bind: "127.0.0.1:7070".into(),
+            min_workers: 1,
+            deadline_secs: None,
+            compress: true,
+            join_timeout_secs: 120.0,
+            io_timeout_secs: 30.0,
+        }
+    }
+}
+
+/// One admitted worker connection (write half; reads happen on a dedicated
+/// thread feeding the event channel).
+struct WorkerConn {
+    conn: usize,
+    name: String,
+    stream: TcpStream,
+    alive: bool,
+}
+
+enum Event {
+    Joined { conn: usize, stream: TcpStream, join: proto::Join },
+    Frame { conn: usize, msg: Msg },
+    Gone { conn: usize },
+}
+
+/// The Photon Aggregator as a network service.
+pub struct Server {
+    fed: Federation,
+    opts: ServeOpts,
+    listener: Option<TcpListener>,
+    addr: SocketAddr,
+    session: u64,
+    /// Realized deadline/disconnect cuts per round — the schedule that
+    /// replays this run in-process via `Federation::run_round_cut`.
+    pub cuts: Vec<(usize, Vec<usize>)>,
+}
+
+impl Server {
+    /// Bind the service around an existing federation (use
+    /// `Federation::new` + `try_resume_from` for the restart path).
+    pub fn with_federation(fed: Federation, opts: ServeOpts) -> Result<Server> {
+        let listener = TcpListener::bind(&opts.bind)
+            .with_context(|| format!("binding {}", opts.bind))?;
+        let addr = listener.local_addr()?;
+        let session = fed.cfg.seed
+            ^ std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_nanos() as u64)
+                .unwrap_or(0x5e55_1017);
+        Ok(Server { fed, opts, listener: Some(listener), addr, session, cuts: Vec::new() })
+    }
+
+    /// The bound address (useful with `bind: "127.0.0.1:0"`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn federation(&self) -> &Federation {
+        &self.fed
+    }
+
+    pub fn federation_mut(&mut self) -> &mut Federation {
+        &mut self.fed
+    }
+
+    /// The task spec shipped to joining workers: everything a stateless
+    /// worker needs to run local rounds bit-identically.
+    fn task_spec(&self) -> TaskSpec {
+        let cfg = &self.fed.cfg;
+        let islands =
+            crate::cluster::island::island_counts(cfg.fleet.as_ref(), cfg.n_clients);
+        TaskSpec {
+            model: cfg.model.clone(),
+            n_params: self.fed.global.len() as u64,
+            corpus: cfg.corpus.clone(),
+            n_clients: cfg.n_clients as u64,
+            seed: cfg.seed,
+            schedule: cfg.schedule,
+            opt_state: cfg.opt_state,
+            islands: islands.iter().map(|&i| i as u32).collect(),
+            compress: self.opts.compress,
+        }
+    }
+
+    fn admit(&self, workers: &mut Vec<WorkerConn>, conn: usize, mut stream: TcpStream, join: proto::Join) {
+        if join.proto != PROTO_VERSION {
+            let reject = Msg::Reject(Reject {
+                reason: format!(
+                    "worker speaks photon-net v{}, server requires v{PROTO_VERSION}",
+                    join.proto
+                ),
+            });
+            let _ = proto::write_msg(&mut stream, &reject, false);
+            return;
+        }
+        let _ = stream
+            .set_write_timeout(Some(Duration::from_secs_f64(self.opts.io_timeout_secs)));
+        let ack = Msg::JoinAck(JoinAck {
+            proto: PROTO_VERSION,
+            session: self.session,
+            worker_slot: workers.len() as u64,
+            spec: self.task_spec(),
+        });
+        if proto::write_msg(&mut stream, &ack, false).is_err() {
+            return;
+        }
+        println!("[serve] admitted worker {:?} (slot {})", join.name, workers.len());
+        workers.push(WorkerConn { conn, name: join.name, stream, alive: true });
+    }
+
+    /// Serve the whole training run: admit ≥ `min_workers`, dispatch every
+    /// remaining round, fold updates, checkpoint, and shut the fleet down.
+    /// Returns the complete round-record log (the same shape
+    /// `Federation::run` returns).
+    pub fn run(&mut self) -> Result<Vec<RoundRecord>> {
+        let listener = self
+            .listener
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("Server::run may only be called once"))?;
+        let (tx, rx) = mpsc::channel::<Event>();
+        let stop = Arc::new(AtomicBool::new(false));
+        spawn_acceptor(listener, tx, stop.clone());
+
+        let mut workers: Vec<WorkerConn> = Vec::new();
+        let result = self.run_rounds(&rx, &mut workers);
+
+        // Clean shutdown regardless of outcome: tell live workers, then
+        // unblock the acceptor so its thread exits.
+        for w in workers.iter_mut().filter(|w| w.alive) {
+            let _ = proto::write_msg(&mut w.stream, &Msg::Shutdown, false);
+        }
+        stop.store(true, Ordering::Release);
+        let _ = TcpStream::connect(self.addr);
+
+        result?;
+        Ok(self.fed.log.rounds.clone())
+    }
+
+    fn run_rounds(
+        &mut self,
+        rx: &Receiver<Event>,
+        workers: &mut Vec<WorkerConn>,
+    ) -> Result<()> {
+        // Admission barrier.
+        let join_deadline =
+            Instant::now() + Duration::from_secs_f64(self.opts.join_timeout_secs);
+        while workers.iter().filter(|w| w.alive).count() < self.opts.min_workers {
+            let now = Instant::now();
+            if now >= join_deadline {
+                bail!(
+                    "timed out waiting for {} workers ({} joined)",
+                    self.opts.min_workers,
+                    workers.len()
+                );
+            }
+            match rx.recv_timeout(join_deadline - now) {
+                Ok(Event::Joined { conn, stream, join }) => {
+                    self.admit(workers, conn, stream, join)
+                }
+                Ok(Event::Gone { conn }) => mark_gone(workers, conn),
+                Ok(Event::Frame { .. }) => {}
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => bail!("acceptor thread died"),
+            }
+        }
+
+        while self.fed.next_round < self.fed.cfg.rounds {
+            self.serve_round(rx, workers)?;
+        }
+        Ok(())
+    }
+
+    /// Dispatch, collect, and commit one round.
+    fn serve_round(&mut self, rx: &Receiver<Event>, workers: &mut Vec<WorkerConn>) -> Result<()> {
+        let t0 = Instant::now();
+        let d = self.fed.plan_round();
+        let live: Vec<usize> =
+            (0..workers.len()).filter(|&i| workers[i].alive).collect();
+        if live.is_empty() {
+            bail!(
+                "no connected workers left at round {} (state is checkpointed; \
+                 restart with --resume)",
+                d.round
+            );
+        }
+
+        // Static per-round partition of the runnable clients over the live
+        // workers, in slot order. Which worker runs a client never affects
+        // the math — all state travels with the assignment.
+        let mut slot_of: HashMap<usize, usize> = HashMap::new();
+        let mut owner_of: HashMap<usize, usize> = HashMap::new();
+        let mut per_worker: Vec<Vec<AssignTask>> = vec![Vec::new(); workers.len()];
+        for (slot, &(client, steps)) in d.runnable.iter().enumerate() {
+            let widx = live[slot % live.len()];
+            slot_of.insert(client, slot);
+            owner_of.insert(client, widx);
+            per_worker[widx].push(AssignTask {
+                client: client as u64,
+                steps,
+                state: self.fed.client_state(client),
+            });
+        }
+
+        let mut pending: BTreeSet<usize> = BTreeSet::new();
+        let mut cut: Vec<usize> = Vec::new();
+        for widx in live {
+            let tasks = std::mem::take(&mut per_worker[widx]);
+            if tasks.is_empty() {
+                continue;
+            }
+            let clients: Vec<usize> = tasks.iter().map(|t| t.client as usize).collect();
+            let msg = Msg::RoundAssign(RoundAssign {
+                session: self.session,
+                round: d.round as u64,
+                seq_base: d.seq_base,
+                tasks,
+                global: self.fed.global.clone(),
+            });
+            match proto::write_msg(&mut workers[widx].stream, &msg, self.opts.compress) {
+                Ok(()) => pending.extend(clients),
+                Err(_) => {
+                    // Worker unreachable at dispatch: cut its share now.
+                    workers[widx].alive = false;
+                    cut.extend(clients);
+                }
+            }
+        }
+
+        // Collect updates until everyone answered, the deadline fires, or
+        // the owning workers die.
+        let deadline = self
+            .opts
+            .deadline_secs
+            .map(|s| t0 + Duration::from_secs_f64(s));
+        let mut arrived: BTreeMap<usize, (ClientUpdate, ClientCkpt)> = BTreeMap::new();
+        while !pending.is_empty() {
+            let timeout = match deadline {
+                Some(dl) => {
+                    let now = Instant::now();
+                    if now >= dl {
+                        cut.extend(pending.iter().copied());
+                        pending.clear();
+                        break;
+                    }
+                    dl - now
+                }
+                // Liveness backstop: with no deadline configured, a round
+                // that makes no progress for an hour is cut, not hung.
+                None => Duration::from_secs(3600),
+            };
+            match rx.recv_timeout(timeout) {
+                Ok(Event::Joined { conn, stream, join }) => {
+                    // Mid-round joins are admitted and receive work from
+                    // the next round on.
+                    self.admit(workers, conn, stream, join);
+                }
+                Ok(Event::Frame { conn, msg }) => match msg {
+                    Msg::UpdatePush(p)
+                        if p.session == self.session && p.round == d.round as u64 =>
+                    {
+                        let client = p.update.client_id;
+                        // Only the worker the client was assigned to may
+                        // answer for it — a push from anyone else (rogue
+                        // peer, stale reconnect) is discarded without
+                        // touching the pending set.
+                        let from = workers.iter().position(|w| w.conn == conn);
+                        if from.is_none() || owner_of.get(&client) != from.as_ref() {
+                            continue;
+                        }
+                        if p.update.params.len() != self.fed.global.len()
+                            || self.fed.check_client_state(client, &p.state).is_err()
+                        {
+                            // Malformed push from the owning worker: the
+                            // update cannot be folded — cut the client
+                            // through the dropped path, don't kill the run.
+                            if pending.remove(&client) {
+                                cut.push(client);
+                            }
+                            continue;
+                        }
+                        if pending.remove(&client) {
+                            arrived.insert(slot_of[&client], (p.update, p.state));
+                        }
+                    }
+                    // Heartbeats (dispatch acks), stale-round or
+                    // stale-session pushes.
+                    _ => {}
+                },
+                Ok(Event::Gone { conn }) => {
+                    mark_gone(workers, conn);
+                    if let Some(widx) = workers.iter().position(|w| w.conn == conn) {
+                        let lost: Vec<usize> = pending
+                            .iter()
+                            .copied()
+                            .filter(|c| owner_of.get(c) == Some(&widx))
+                            .collect();
+                        for c in lost {
+                            pending.remove(&c);
+                            cut.push(c);
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    cut.extend(pending.iter().copied());
+                    pending.clear();
+                }
+                Err(RecvTimeoutError::Disconnected) => bail!("acceptor thread died"),
+            }
+        }
+
+        // Fold arrived updates in slot (= sampled) order; install the
+        // advanced client states the workers returned. Cut clients keep
+        // their pre-round state — the dropped-client semantics.
+        let mut updates: Vec<ClientUpdate> = Vec::with_capacity(arrived.len());
+        for (_slot, (update, state)) in arrived {
+            self.fed
+                .restore_client_state(update.client_id, &state)
+                .with_context(|| format!("installing client {} state", update.client_id))?;
+            updates.push(update);
+        }
+        cut.sort_unstable();
+        if !cut.is_empty() {
+            self.cuts.push((d.round, cut.clone()));
+        }
+        let rec = self.fed.commit_round(d.round, updates, t0)?;
+        println!(
+            "[serve] round {:>3}  server_ppl {:>9.3}  participated {}/{}  \
+             dropped {}  cut {:?}  {:.2}s",
+            rec.round,
+            rec.server_ppl,
+            rec.participated,
+            self.fed.cfg.clients_per_round,
+            d.dropped.len(),
+            cut,
+            rec.wall_secs,
+        );
+
+        let commit = Msg::RoundCommit(RoundCommit {
+            round: rec.round as u64,
+            participated: rec.participated as u64,
+            global_norm: rec.global_model_norm,
+        });
+        for w in workers.iter_mut().filter(|w| w.alive) {
+            if proto::write_msg(&mut w.stream, &commit, false).is_err() {
+                w.alive = false;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn mark_gone(workers: &mut [WorkerConn], conn: usize) {
+    if let Some(w) = workers.iter_mut().find(|w| w.conn == conn) {
+        if w.alive {
+            w.alive = false;
+            println!("[serve] worker {:?} disconnected", w.name);
+        }
+    }
+}
+
+/// Accept connections forever (until `stop`); each connection gets a reader
+/// thread that performs the Join read and then forwards every frame as an
+/// event. Writes stay with the main loop.
+fn spawn_acceptor(listener: TcpListener, tx: Sender<Event>, stop: Arc<AtomicBool>) {
+    std::thread::spawn(move || {
+        let mut next_conn = 0usize;
+        for incoming in listener.incoming() {
+            if stop.load(Ordering::Acquire) {
+                break;
+            }
+            let stream = match incoming {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let conn = next_conn;
+            next_conn += 1;
+            let tx = tx.clone();
+            std::thread::spawn(move || reader_loop(conn, stream, tx));
+        }
+    });
+}
+
+fn reader_loop(conn: usize, stream: TcpStream, tx: Sender<Event>) {
+    let mut read = match stream.try_clone() {
+        Ok(r) => r,
+        Err(_) => return,
+    };
+    // The first frame must be a Join; anything else is a protocol
+    // violation and the connection is silently dropped.
+    match proto::read_msg(&mut read) {
+        Ok(Msg::Join(join)) => {
+            if tx.send(Event::Joined { conn, stream, join }).is_err() {
+                return;
+            }
+        }
+        _ => return,
+    }
+    loop {
+        match proto::read_msg(&mut read) {
+            Ok(msg) => {
+                if tx.send(Event::Frame { conn, msg }).is_err() {
+                    return;
+                }
+            }
+            Err(_) => {
+                let _ = tx.send(Event::Gone { conn });
+                return;
+            }
+        }
+    }
+}

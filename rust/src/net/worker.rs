@@ -1,0 +1,205 @@
+//! The deployment-plane LLM Node: connects to a `net::server` Aggregator,
+//! pulls the task spec, and serves rounds until told to shut down
+//! (paper §4.1 / Algorithm 1 L.12–27, over a real socket).
+//!
+//! Workers are **stateless**: every assignment carries the client's stream
+//! cursors and KeepOpt moments, and every push returns them advanced. A
+//! worker can therefore crash, be killed, or reconnect to a restarted
+//! server without any local persistence — the Aggregator's checkpoint is
+//! the only durable state. The local round itself is the *same code* the
+//! in-process federation runs (`ClientNode::run_local_round`), which is
+//! what makes a localhost fleet bit-identical to `Federation::run`.
+
+use std::collections::HashMap;
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::federation::{bind_client_streams, build_data};
+use crate::coordinator::ClientNode;
+use crate::data::source::DataSource;
+use crate::net::proto::{self, Heartbeat, Join, Msg, TaskSpec, UpdatePush, PROTO_VERSION};
+use crate::runtime::{ModelRuntime, Runtime};
+
+/// Worker knobs (the test harness uses the fault hook; the CLI only the
+/// name/model fields).
+#[derive(Clone, Default)]
+pub struct WorkerOpts {
+    /// Display name sent in the Join (logs only).
+    pub name: String,
+    /// Preloaded model runtime — the loopback harness shares one compiled
+    /// model across the fleet; `None` loads `spec.model` from artifacts.
+    pub model: Option<Arc<ModelRuntime>>,
+    /// Test hook: drop the connection (simulating a crash) on receiving
+    /// the assignment for this round, before replying.
+    pub die_at_round: Option<u64>,
+    pub verbose: bool,
+}
+
+/// What a worker did during one session.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WorkerReport {
+    pub worker_slot: u64,
+    pub rounds_served: u64,
+    pub updates_pushed: u64,
+    /// Set when the `die_at_round` fault hook fired.
+    pub aborted_at: Option<u64>,
+}
+
+/// Connect to `addr`, join the federation, and serve rounds until the
+/// server sends `Shutdown` (or the fault hook fires). Blocking.
+pub fn run_worker(addr: &str, opts: WorkerOpts) -> Result<WorkerReport> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    stream.set_nodelay(true).ok();
+    proto::write_msg(
+        &mut stream,
+        &Msg::Join(Join { proto: PROTO_VERSION, name: opts.name.clone() }),
+        false,
+    )?;
+    let ack = match proto::read_msg(&mut stream)? {
+        Msg::JoinAck(a) => a,
+        Msg::Reject(r) => bail!("server rejected join: {}", r.reason),
+        other => bail!("expected JoinAck, got {:?}", other.kind()),
+    };
+    ensure!(
+        ack.proto == PROTO_VERSION,
+        "server speaks photon-net v{}, this worker v{PROTO_VERSION} — upgrade",
+        ack.proto
+    );
+    let spec = ack.spec;
+    let model = match &opts.model {
+        Some(m) => m.clone(),
+        None => {
+            let rt = Runtime::cpu()?;
+            Arc::new(rt.load_model(&spec.model)?)
+        }
+    };
+    ensure!(
+        model.n_params() as u64 == spec.n_params,
+        "model {} has {} params, server expects {} — artifact mismatch",
+        spec.model,
+        model.n_params(),
+        spec.n_params
+    );
+    ensure!(
+        spec.islands.len() == spec.n_clients as usize,
+        "task spec carries {} island counts for {} clients",
+        spec.islands.len(),
+        spec.n_clients
+    );
+
+    // Build the identical data plane the Aggregator built: same corpus,
+    // same partition, same per-client stream binding.
+    let data = build_data(
+        &spec.corpus,
+        spec.n_clients as usize,
+        spec.seed,
+        model.manifest.config.vocab,
+    );
+    let seq_width = model.seq_width();
+    let schedule = spec.schedule;
+    let lr_at = move |t: u64| schedule.lr(t);
+
+    let mut nodes: HashMap<u64, ClientNode> = HashMap::new();
+    let mut report =
+        WorkerReport { worker_slot: ack.worker_slot, ..WorkerReport::default() };
+    if opts.verbose {
+        println!(
+            "[worker {}] joined session {:#x} as slot {} ({} clients, model {})",
+            opts.name, ack.session, ack.worker_slot, spec.n_clients, spec.model
+        );
+    }
+
+    loop {
+        match proto::read_msg(&mut stream)? {
+            Msg::RoundAssign(assign) => {
+                if opts.die_at_round == Some(assign.round) {
+                    // Simulated crash: vanish mid-round without replying.
+                    report.aborted_at = Some(assign.round);
+                    return Ok(report);
+                }
+                if assign.session != ack.session {
+                    continue; // stale server incarnation
+                }
+                proto::write_msg(
+                    &mut stream,
+                    &Msg::Heartbeat(Heartbeat {
+                        session: ack.session,
+                        round: assign.round,
+                    }),
+                    false,
+                )?;
+                for task in &assign.tasks {
+                    let node = node_for(
+                        &mut nodes, &data, &spec, task.client, seq_width,
+                    )?;
+                    node.restore_state(&task.state)
+                        .with_context(|| format!("restoring client {}", task.client))?;
+                    let update = node
+                        .run_local_round(
+                            &model,
+                            &assign.global,
+                            task.steps,
+                            assign.seq_base,
+                            &lr_at,
+                            spec.opt_state,
+                        )
+                        .with_context(|| {
+                            format!("client {} round {}", task.client, assign.round)
+                        })?;
+                    let state = node.state();
+                    proto::write_msg(
+                        &mut stream,
+                        &Msg::UpdatePush(UpdatePush {
+                            session: ack.session,
+                            round: assign.round,
+                            update,
+                            state,
+                        }),
+                        spec.compress,
+                    )?;
+                    report.updates_pushed += 1;
+                }
+                report.rounds_served += 1;
+            }
+            Msg::RoundCommit(c) => {
+                if opts.verbose {
+                    println!(
+                        "[worker {}] round {} committed ({} participated, |g| {:.4})",
+                        opts.name, c.round, c.participated, c.global_norm
+                    );
+                }
+            }
+            Msg::Shutdown => return Ok(report),
+            Msg::Reject(r) => bail!("server rejected mid-session: {}", r.reason),
+            other => bail!("unexpected {:?} from server", other.kind()),
+        }
+    }
+}
+
+/// Lazily build the node for `client` with the spec's island arity. The
+/// initial binding state is irrelevant (every assignment restores the
+/// authoritative cursors) but the *structure* — island and bucket arity —
+/// must match the Aggregator's, which `bind_client_streams` guarantees.
+fn node_for<'a>(
+    nodes: &'a mut HashMap<u64, ClientNode>,
+    data: &DataSource,
+    spec: &TaskSpec,
+    client: u64,
+    seq_width: usize,
+) -> Result<&'a mut ClientNode> {
+    ensure!(
+        (client as usize) < spec.n_clients as usize,
+        "assignment names client {client}, spec has {} clients",
+        spec.n_clients
+    );
+    if !nodes.contains_key(&client) {
+        let n_islands = spec.islands[client as usize] as usize;
+        let streams =
+            bind_client_streams(data, client as usize, n_islands.max(1), seq_width, spec.seed)?;
+        nodes.insert(client, ClientNode::new(client as usize, streams));
+    }
+    Ok(nodes.get_mut(&client).unwrap())
+}

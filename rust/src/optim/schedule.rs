@@ -7,7 +7,7 @@
 //!       = η_min                            for t ≥ T
 //! with η_min = α · η_max.
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CosineSchedule {
     pub eta_max: f64,
     /// α: min-lr factor (paper Table 3).

@@ -61,6 +61,13 @@ impl Args {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// A mandatory option; errors with the flag name if absent (used by
+    /// commands with no sensible default, e.g. `worker --connect`).
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow!("--{name} is required for this command"))
+    }
+
     pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
         match self.get(name) {
             None => Ok(default),
@@ -186,5 +193,13 @@ mod tests {
         assert!(parse(&["--nope"]).is_err());
         assert!(parse(&["--rounds"]).is_err());
         assert!(parse(&["--rounds", "x"]).unwrap().get_usize("rounds", 0).is_err());
+    }
+
+    #[test]
+    fn require_names_the_missing_flag() {
+        let a = parse(&["--config", "m75a"]).unwrap();
+        assert_eq!(a.require("config").unwrap(), "m75a");
+        let err = a.require("rounds").unwrap_err().to_string();
+        assert!(err.contains("--rounds"), "{err}");
     }
 }

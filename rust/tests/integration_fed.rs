@@ -85,7 +85,8 @@ fn single_client_fedavg_equals_local_training() {
         &corpus.categories,
         m.seq_width(),
         cfg.seed, // island 0 => seed ^ 0
-    );
+    )
+    .unwrap();
     let mut st = TrainState::new(init_params(&m.manifest, cfg.seed));
     for t in 0..cfg.local_steps {
         let toks = stream.next_batch(m.batch_size());

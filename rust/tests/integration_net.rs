@@ -1,0 +1,279 @@
+//! Integration: the TCP deployment plane (`net`) against the in-process
+//! federation. Requires `make artifacts`.
+//!
+//! The contract under test (ISSUE 3 acceptance): a localhost fleet of K
+//! workers reproduces `Federation::run` bit-for-bit — global model and
+//! round-record stream — including rounds where a worker is cut (crash or
+//! deadline) through the dropped-client path, and across a server restart
+//! resumed from the latest checkpoint.
+
+use std::collections::HashMap;
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use photon::cluster::faults::FaultPlan;
+use photon::config::ExperimentConfig;
+use photon::coordinator::Federation;
+use photon::metrics::RoundRecord;
+use photon::net::proto::{self, Join, Msg, PROTO_VERSION};
+use photon::net::{run_loopback, run_worker, FleetOpts, ServeOpts, Server, WorkerOpts};
+use photon::optim::schedule::CosineSchedule;
+use photon::runtime::{ModelRuntime, Runtime};
+use photon::sim::RoundPlan;
+
+fn model() -> Arc<ModelRuntime> {
+    // Per-thread cache (same rationale as integration_fed.rs).
+    thread_local! {
+        static CACHED: std::cell::OnceCell<Arc<ModelRuntime>> =
+            const { std::cell::OnceCell::new() };
+    }
+    CACHED.with(|c| {
+        c.get_or_init(|| {
+            let rt = Runtime::cpu().unwrap();
+            Arc::new(rt.load_model("m75a").expect("run `make artifacts`"))
+        })
+        .clone()
+    })
+}
+
+/// K=5 of P=6 clients, 3 rounds, dropouts + stragglers in the plan.
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::quickstart("m75a");
+    cfg.n_clients = 6;
+    cfg.clients_per_round = 5;
+    cfg.rounds = 3;
+    cfg.local_steps = 6;
+    cfg.eval_batches = 2;
+    cfg.seed = 11;
+    cfg.schedule = CosineSchedule::new(3e-3, 0.1, 18, 2);
+    cfg.faults = FaultPlan::new(0.3, 0.3, 11);
+    cfg
+}
+
+fn assert_parity(reference: &[RoundRecord], live: &[RoundRecord], what: &str) {
+    assert_eq!(reference.len(), live.len(), "{what}: round count");
+    for (r, n) in reference.iter().zip(live) {
+        assert!(
+            r.agrees_with(n),
+            "{what}: round {} diverged\n  in-process: {r:?}\n  deployment: {n:?}",
+            r.round
+        );
+    }
+}
+
+#[test]
+fn plan_round_replays_the_sim_round_plan() {
+    let cfg = base_cfg();
+    let fed = Federation::with_model(cfg.clone(), model()).unwrap();
+    let plan = RoundPlan::from_config(&cfg);
+    let d = fed.plan_round();
+    let spec = &plan.rounds[0];
+    let from_plan: Vec<(usize, u64)> =
+        spec.participants.iter().map(|p| (p.client, p.steps)).collect();
+    assert_eq!(d.runnable, from_plan, "dispatch must equal the replayed plan");
+    assert_eq!(d.dropped, spec.dropped);
+    assert_eq!(d.round, 0);
+}
+
+#[test]
+fn loopback_fleet_of_4_matches_in_process_bitwise() {
+    let cfg = base_cfg();
+    let mut fed = Federation::with_model(cfg.clone(), model()).unwrap();
+    let reference = fed.run().unwrap();
+
+    let report = run_loopback(
+        cfg,
+        model(),
+        FleetOpts { workers: 4, compress: true, ..FleetOpts::default() },
+    )
+    .unwrap();
+    assert!(report.worker_errors.is_empty(), "{:?}", report.worker_errors);
+    assert!(report.cuts.is_empty(), "no faults beyond the plan: {:?}", report.cuts);
+    assert_parity(&reference, &report.records, "healthy fleet");
+    assert_eq!(fed.global, report.global, "global model must be bit-identical");
+    // Every worker served every round it was alive for.
+    assert_eq!(report.workers.len(), 4);
+    let pushed: u64 = report.workers.iter().map(|w| w.updates_pushed).sum();
+    let expected: usize = reference.iter().map(|r| r.participated).sum();
+    assert_eq!(pushed as usize, expected);
+}
+
+#[test]
+fn worker_killed_mid_round_is_cut_and_the_round_still_commits() {
+    let mut cfg = base_cfg();
+    // Full participation, no planned faults: every one of the 4 workers is
+    // guaranteed an assignment each round, so the rigged worker receives
+    // round 1 and "crashes" deterministically.
+    cfg.faults = FaultPlan::none();
+    let crashed = run_loopback(
+        cfg.clone(),
+        model(),
+        FleetOpts {
+            workers: 4,
+            compress: true,
+            die_at_round: HashMap::from([(0usize, 1u64)]),
+            ..FleetOpts::default()
+        },
+    )
+    .unwrap();
+    // The dead worker's clients were cut, yet every round committed.
+    assert_eq!(crashed.records.len(), 3, "all rounds must commit");
+    assert!(
+        !crashed.cuts.is_empty(),
+        "killing a worker mid-round must cut its pending clients"
+    );
+    for (round, clients) in &crashed.cuts {
+        assert!(*round >= 1, "cuts can only start at the crash round");
+        assert!(!clients.is_empty());
+    }
+
+    // Replaying the realized cut schedule in-process reproduces the run
+    // bit-for-bit — the cut goes through the dropped-client path.
+    let mut replay = Federation::with_model(cfg, model()).unwrap();
+    let mut replayed = Vec::new();
+    for round in 0..3usize {
+        let cut = crashed
+            .cuts
+            .iter()
+            .find(|(r, _)| *r == round)
+            .map(|(_, c)| c.clone())
+            .unwrap_or_default();
+        replayed.push(replay.run_round_cut(&cut).unwrap());
+    }
+    assert_parity(&replayed, &crashed.records, "crash-cut fleet");
+    assert_eq!(replay.global, crashed.global);
+}
+
+#[test]
+fn server_restart_resumes_sample_exact_from_latest_checkpoint() {
+    let dir = std::env::temp_dir().join(format!("photon_net_restart_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut cfg = base_cfg();
+    cfg.rounds = 4;
+    // Uninterrupted reference.
+    let mut fed = Federation::with_model(cfg.clone(), model()).unwrap();
+    let reference = fed.run().unwrap();
+
+    // Phase 1: serve two rounds, checkpointing each, then shut down (the
+    // state a crash would leave behind is the same file).
+    let mut phase1_cfg = cfg.clone();
+    phase1_cfg.rounds = 2;
+    let phase1 = run_loopback(
+        phase1_cfg,
+        model(),
+        FleetOpts {
+            workers: 3,
+            compress: true,
+            ckpt_dir: Some(dir.clone()),
+            ..FleetOpts::default()
+        },
+    )
+    .unwrap();
+    assert_parity(&reference[..2], &phase1.records, "pre-restart rounds");
+
+    // Phase 2: a fresh server resumes from the latest checkpoint; fresh
+    // (stateless!) workers reconnect and finish the run.
+    let phase2 = run_loopback(
+        cfg,
+        model(),
+        FleetOpts {
+            workers: 3,
+            compress: true,
+            ckpt_dir: Some(dir.clone()),
+            resume: true,
+            ..FleetOpts::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(phase2.records.len(), 2, "resume must skip the two done rounds");
+    assert_parity(&reference[2..], &phase2.records, "post-restart rounds");
+    assert_eq!(fed.global, phase2.global, "restart must be sample-exact");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn silent_worker_is_deadline_cut_through_the_dropped_client_path() {
+    // One round; two real workers plus one admitted peer that heartbeats
+    // its Join but never pushes an update. The deadline must cut exactly
+    // its clients and the round must commit with everyone else folded in.
+    let mut cfg = base_cfg();
+    cfg.rounds = 1;
+    cfg.local_steps = 3;
+    cfg.faults = FaultPlan::none();
+    let fed = Federation::with_model(cfg.clone(), model()).unwrap();
+    let serve = ServeOpts {
+        bind: "127.0.0.1:0".into(),
+        min_workers: 3,
+        deadline_secs: Some(8.0),
+        compress: true,
+        ..ServeOpts::default()
+    };
+    let mut server = Server::with_federation(fed, serve).unwrap();
+    let addr = server.local_addr().to_string();
+    let server_handle = std::thread::spawn(move || {
+        let result = server.run();
+        (server, result)
+    });
+
+    // The silent peer: joins, drains every frame, never replies.
+    let silent_addr = addr.clone();
+    let silent = std::thread::spawn(move || {
+        let mut stream = TcpStream::connect(&silent_addr).unwrap();
+        proto::write_msg(
+            &mut stream,
+            &Msg::Join(Join { proto: PROTO_VERSION, name: "silent".into() }),
+            false,
+        )
+        .unwrap();
+        let mut assigned: Vec<usize> = Vec::new();
+        loop {
+            match proto::read_msg(&mut stream) {
+                Ok(Msg::RoundAssign(a)) => {
+                    assigned.extend(a.tasks.iter().map(|t| t.client as usize))
+                }
+                Ok(Msg::Shutdown) | Err(_) => return assigned,
+                Ok(_) => {}
+            }
+        }
+    });
+    let shared = model();
+    let workers: Vec<_> = (0..2)
+        .map(|i| {
+            let addr = addr.clone();
+            let shared = shared.clone();
+            std::thread::spawn(move || {
+                run_worker(
+                    &addr,
+                    WorkerOpts {
+                        name: format!("real-{i}"),
+                        model: Some(shared),
+                        ..WorkerOpts::default()
+                    },
+                )
+            })
+        })
+        .collect();
+
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+    let mut assigned = silent.join().unwrap();
+    assigned.sort_unstable();
+    let (server, result) = server_handle.join().unwrap();
+    let records = result.unwrap();
+    assert_eq!(records.len(), 1);
+    assert!(!assigned.is_empty(), "the silent peer must have been assigned work");
+    assert_eq!(
+        server.cuts,
+        vec![(0usize, assigned.clone())],
+        "the deadline must cut exactly the silent peer's clients"
+    );
+    assert_eq!(records[0].participated, 5 - assigned.len());
+
+    // Bit-exact in-process replay of the realized cut.
+    let mut replay = Federation::with_model(cfg, model()).unwrap();
+    let rec = replay.run_round_cut(&assigned).unwrap();
+    assert!(rec.agrees_with(&records[0]), "{rec:?} vs {:?}", records[0]);
+    assert_eq!(replay.global, server.federation().global.as_slice());
+}

@@ -24,7 +24,8 @@ fn tokens_for(model: &ModelRuntime, seed: u64) -> Vec<i32> {
         &corpus.categories,
         model.seq_width(),
         seed,
-    );
+    )
+    .unwrap();
     s.next_batch(model.batch_size())
 }
 
@@ -179,7 +180,8 @@ fn chunked_training_matches_single_steps() {
         &corpus.categories,
         m.seq_width(),
         9,
-    );
+    )
+    .unwrap();
     let block: Vec<Vec<i32>> = (0..k).map(|_| stream.next_batch(m.batch_size())).collect();
     let lrs: Vec<f32> = (0..k).map(|i| 1e-3 * (1.0 + i as f32 * 0.1)).collect();
 

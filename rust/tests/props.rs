@@ -188,6 +188,52 @@ fn prop_link_detects_any_single_byte_corruption_of_payload() {
 }
 
 #[test]
+fn prop_link_detects_any_single_byte_corruption_of_header() {
+    // Satellite of the payload-corruption property: flip one bit anywhere
+    // in the 28-byte header. The decode must either fail or yield a
+    // *different* message (a kind-field flip can land on another valid
+    // kind — the payload checksum still holds, so the caller's kind
+    // dispatch catches it); silently returning the original message is the
+    // only unacceptable outcome.
+    check("link_header_corruption", 0xD3, 60, |rng| {
+        let n = 8 + rng.usize_below(128);
+        let payload = rand_vec(rng, n, 1.0);
+        let compress = rng.bool(0.5);
+        let frame = encode_model(MsgKind::GlobalModel, &payload, compress)
+            .map_err(|e| e.to_string())?;
+        let idx = rng.usize_below(photon::link::HEADER_BYTES);
+        let bit = 1u8 << rng.usize_below(8);
+        let mut bad = frame.clone();
+        bad[idx] ^= bit;
+        match decode_model(&bad) {
+            Err(_) => Ok(()),
+            Ok((kind, back)) if kind != MsgKind::GlobalModel || back != payload => Ok(()),
+            Ok(_) => Err(format!(
+                "header byte {idx} bit-flip went unnoticed (compress={compress})"
+            )),
+        }
+    });
+}
+
+#[test]
+fn prop_link_rejects_newer_versions_with_clear_error() {
+    check("link_version_gate", 0xD4, 20, |rng| {
+        let payload = rand_vec(rng, 1 + rng.usize_below(64), 1.0);
+        let mut frame = encode_model(MsgKind::ClientUpdate, &payload, false)
+            .map_err(|e| e.to_string())?;
+        // Any version above the supported one must be refused with an
+        // error that names the upgrade path, never a decode attempt.
+        let newer = (photon::link::VERSION + 1).wrapping_add(rng.below(1000) as u16);
+        frame[4..6].copy_from_slice(&newer.to_le_bytes());
+        match decode_model(&frame) {
+            Ok(_) => Err(format!("version {newer} frame decoded")),
+            Err(e) if e.to_string().contains("newer") => Ok(()),
+            Err(e) => Err(format!("wrong error for newer version: {e}")),
+        }
+    });
+}
+
+#[test]
 fn prop_checkpoint_roundtrip() {
     check("ckpt_roundtrip", 0xE1, 30, |rng| {
         let n = 1 + rng.usize_below(512);
@@ -295,7 +341,8 @@ fn prop_stream_cursor_resume_equivalence() {
         let p = Partition::heterogeneous(&corpus, 8, 1 + rng.usize_below(2));
         let c = rng.usize_below(8);
         let seed = rng.next_u64();
-        let mut s = TokenStream::bind(&p.assignment[c], &corpus.categories, 9, seed);
+        let mut s = TokenStream::bind(&p.assignment[c], &corpus.categories, 9, seed)
+            .map_err(|e| e.to_string())?;
         for _ in 0..rng.usize_below(10) {
             s.next_batch(2);
         }
