@@ -19,16 +19,30 @@ const MAGIC: &[u8; 4] = b"PHCK";
 /// island) so multi-island clients resume sample-exact. v1 files saved only
 /// `streams[0]` and are rejected — they cannot restore a hetero fleet
 /// faithfully.
-const VERSION: u32 = 2;
+/// v3: per-client `residual` — the top-k error-feedback state
+/// (`compress::UpdateCodec::TopK`) — joined the client record, so a lossy
+/// federation resumes with its un-sent gradient mass intact. v2 files are
+/// still decoded (they predate error feedback, so an empty residual
+/// restores them exactly); v1 files remain rejected.
+const VERSION: u32 = 3;
+/// Oldest checkpoint version this build still decodes.
+const MIN_DECODE_VERSION: u32 = 2;
 
-/// Per-client persisted state: KeepOpt moments + one stream cursor per
-/// connectivity island (single-island clients have exactly one).
+/// Per-client persisted state: KeepOpt moments, one stream cursor per
+/// connectivity island (single-island clients have exactly one), and the
+/// update-codec error-feedback residual (empty unless a `topk` codec is
+/// active).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ClientCkpt {
     pub opt_m: Vec<f32>,
     pub opt_v: Vec<f32>,
     pub local_step: i64,
     pub cursors: Vec<StreamCursor>,
+    /// Error-feedback residual of the lossy update codec (`topk`): the
+    /// gradient mass withheld from previous rounds' transmissions. Empty
+    /// means zero. Travels with the rest of the client state over the
+    /// deployment plane, so workers stay stateless.
+    pub residual: Vec<f32>,
 }
 
 /// Full federation state at a round boundary.
@@ -108,6 +122,10 @@ impl Enc {
             self.u64(*drawn);
         }
     }
+    pub(crate) fn bytes(&mut self, b: &[u8]) {
+        self.u64(b.len() as u64);
+        self.buf.extend_from_slice(b);
+    }
     pub(crate) fn client(&mut self, c: &ClientCkpt) {
         self.f32s(&c.opt_m);
         self.f32s(&c.opt_v);
@@ -116,6 +134,7 @@ impl Enc {
         for cur in &c.cursors {
             self.cursor(cur);
         }
+        self.f32s(&c.residual);
     }
 }
 
@@ -209,7 +228,19 @@ impl<'a> Dec<'a> {
         }
         Ok(StreamCursor { mix_state, bucket_states })
     }
+    /// Length-prefixed raw byte blob (`take` bounds the allocation by the
+    /// remaining payload, so a wire-declared length cannot over-allocate).
+    pub(crate) fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u64()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
     pub(crate) fn client(&mut self) -> Result<ClientCkpt> {
+        self.client_compat(true)
+    }
+    /// Client record decode across checkpoint versions: v2 files predate
+    /// the codec residual, so `with_residual = false` restores them with
+    /// the (exactly faithful) empty residual instead of failing.
+    pub(crate) fn client_compat(&mut self, with_residual: bool) -> Result<ClientCkpt> {
         let opt_m = self.f32s()?;
         let opt_v = self.f32s()?;
         let local_step = self.i64()?;
@@ -219,7 +250,8 @@ impl<'a> Dec<'a> {
         for _ in 0..n_cursors {
             cursors.push(self.cursor()?);
         }
-        Ok(ClientCkpt { opt_m, opt_v, local_step, cursors })
+        let residual = if with_residual { self.f32s()? } else { Vec::new() };
+        Ok(ClientCkpt { opt_m, opt_v, local_step, cursors, residual })
     }
 }
 
@@ -272,7 +304,7 @@ impl Checkpoint {
         }
         let mut d = Dec::new(&body[4..]);
         let version = d.u32()?;
-        if version != VERSION {
+        if !(MIN_DECODE_VERSION..=VERSION).contains(&version) {
             bail!("unsupported checkpoint version {version}");
         }
         let round = d.u64()?;
@@ -290,7 +322,7 @@ impl Checkpoint {
                 clients.push(None);
                 continue;
             }
-            clients.push(Some(d.client()?));
+            clients.push(Some(d.client_compat(version >= 3)?));
         }
         Ok(Checkpoint {
             round,
@@ -381,6 +413,7 @@ mod tests {
                             bucket_states: vec![([14, 15, 16, 17], 18), ([19, 20, 21, 22], 23)],
                         },
                     ],
+                    residual: vec![0.5, -0.25, 0.0],
                 }),
             ],
             timestamp: 1_700_000_000,
@@ -423,5 +456,60 @@ mod tests {
     #[test]
     fn rejects_garbage() {
         assert!(Checkpoint::decode(b"garbage").is_err());
+    }
+
+    /// Encode `ck` exactly as a pre-residual (v2) build would have.
+    fn encode_as_v2(ck: &Checkpoint) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.buf.extend_from_slice(MAGIC);
+        e.u32(2);
+        e.u64(ck.round);
+        e.u64(ck.seq_step);
+        e.u64(ck.timestamp);
+        e.f64(ck.elapsed_secs);
+        e.f32s(&ck.global);
+        e.u64(ck.outer_t);
+        e.f64s(&ck.outer_m);
+        e.f64s(&ck.outer_v);
+        e.u64(ck.clients.len() as u64);
+        for c in &ck.clients {
+            match c {
+                None => e.u32(0),
+                Some(c) => {
+                    e.u32(1);
+                    // v2 client record: no residual field.
+                    e.f32s(&c.opt_m);
+                    e.f32s(&c.opt_v);
+                    e.i64(c.local_step);
+                    e.u64(c.cursors.len() as u64);
+                    for cur in &c.cursors {
+                        e.cursor(cur);
+                    }
+                }
+            }
+        }
+        let sum = fnv1a(&e.buf);
+        e.u64(sum);
+        e.buf
+    }
+
+    #[test]
+    fn v2_checkpoints_still_decode_with_empty_residuals() {
+        // A pre-codec run has no error-feedback state by definition, so a
+        // v2 file must upgrade losslessly instead of killing the resume.
+        let mut want = toy();
+        let v2 = encode_as_v2(&want);
+        if let Some(c) = want.clients[1].as_mut() {
+            c.residual = Vec::new();
+        }
+        assert_eq!(Checkpoint::decode(&v2).unwrap(), want);
+        // v1 stays rejected.
+        let mut v1 = v2.clone();
+        v1[4..8].copy_from_slice(&1u32.to_le_bytes());
+        let body_len = v1.len() - 8;
+        let sum = fnv1a(&v1[..body_len]);
+        v1[body_len..].copy_from_slice(&sum.to_le_bytes());
+        let err = Checkpoint::decode(&v1).unwrap_err().to_string();
+        assert!(err.contains("unsupported"), "{err}");
     }
 }

@@ -1,0 +1,288 @@
+//! Block-scaled stochastic-rounding quantization (the `q8`/`q4` codecs).
+//!
+//! Each block of `block` consecutive values shares one f32 scale
+//! `max|x| / levels` (levels = 127 for q8, 7 for q4); values quantize to
+//! integer multiples of the scale with **stochastic rounding** — the
+//! fractional part becomes the probability of rounding up — so the
+//! quantizer is unbiased in expectation and the per-element error is
+//! bounded by one quantization step (the block's scale). Rounding draws
+//! come from a seeded [`Rng`], so an encode is a pure function of
+//! `(delta, block, seed)`: both federation planes emit identical bytes.
+//!
+//! Body layout (little-endian), after the leading wire codec id byte:
+//!
+//! ```text
+//! q8:  id(1) | block u32 | n u64 | scale f32 × ⌈n/block⌉ | q i8 × n
+//! q4:  id(1) | block u32 | n u64 | scale f32 × ⌈n/block⌉ | nibbles × ⌈n/2⌉
+//! ```
+//!
+//! q4 nibbles store `q + 8` (q ∈ −7..=7 ⇒ nibble ∈ 1..=15, low nibble
+//! first); nibble 0 is never emitted and is rejected on decode, as is a
+//! nonzero pad nibble for odd `n` — a corrupted body fails structurally
+//! instead of decoding to a different model.
+
+use anyhow::{ensure, Result};
+
+use crate::compress::{CODEC_Q4, CODEC_Q8};
+use crate::util::rng::Rng;
+
+/// Per-block scales for `levels`-level quantization (`max|x| / levels`).
+fn block_scales(delta: &[f32], block: usize, levels: f64) -> Vec<f32> {
+    delta
+        .chunks(block)
+        .map(|ch| {
+            let max = ch.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+            (max as f64 / levels) as f32
+        })
+        .collect()
+}
+
+/// Stochastically round `x/scale` to an integer in `[-levels, levels]`.
+fn stochastic_q(x: f32, scale: f32, levels: i32, rng: &mut Rng) -> i32 {
+    if scale <= 0.0 {
+        return 0;
+    }
+    let t = x as f64 / scale as f64;
+    let f = t.floor();
+    let frac = t - f;
+    let mut q = f as i32;
+    if rng.f64() < frac {
+        q += 1;
+    }
+    q.clamp(-levels, levels)
+}
+
+fn header(id: u8, block: usize, n: usize, cap: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(cap);
+    out.push(id);
+    out.extend_from_slice(&(block as u32).to_le_bytes());
+    out.extend_from_slice(&(n as u64).to_le_bytes());
+    out
+}
+
+pub(crate) fn encode_q8(delta: &[f32], block: usize, seed: u64) -> Vec<u8> {
+    let block = block.max(1);
+    let n = delta.len();
+    let scales = block_scales(delta, block, 127.0);
+    let mut out = header(CODEC_Q8, block, n, 13 + 4 * scales.len() + n);
+    for s in &scales {
+        out.extend_from_slice(&s.to_le_bytes());
+    }
+    let mut rng = Rng::new(seed);
+    for (i, &x) in delta.iter().enumerate() {
+        let q = stochastic_q(x, scales[i / block], 127, &mut rng);
+        out.push(q as i8 as u8);
+    }
+    out
+}
+
+pub(crate) fn encode_q4(delta: &[f32], block: usize, seed: u64) -> Vec<u8> {
+    let block = block.max(1);
+    let n = delta.len();
+    let scales = block_scales(delta, block, 7.0);
+    let mut out = header(CODEC_Q4, block, n, 13 + 4 * scales.len() + n.div_ceil(2));
+    for s in &scales {
+        out.extend_from_slice(&s.to_le_bytes());
+    }
+    let mut rng = Rng::new(seed);
+    let mut pending: Option<u8> = None;
+    for (i, &x) in delta.iter().enumerate() {
+        let q = stochastic_q(x, scales[i / block], 7, &mut rng);
+        let nib = (q + 8) as u8; // 1..=15
+        match pending.take() {
+            None => pending = Some(nib),
+            Some(lo) => out.push(lo | (nib << 4)),
+        }
+    }
+    if let Some(lo) = pending {
+        // Odd n: pad the high nibble with 8 (q = 0).
+        out.push(lo | (8 << 4));
+    }
+    out
+}
+
+/// Shared header parse + structural validation. Returns the scales and the
+/// quantized-data slice. The caller (`UpdateCodec::decode_delta`) has
+/// already verified the codec id and the exact total body length, so every
+/// slice below is in bounds by construction — but each field is still
+/// cross-checked against the negotiated parameters.
+fn parse_header<'a>(
+    body: &'a [u8],
+    id: u8,
+    block: usize,
+    n: usize,
+    data_bytes: usize,
+) -> Result<(Vec<f32>, &'a [u8])> {
+    ensure!(body.len() >= 13, "quantized body shorter than its header");
+    ensure!(body[0] == id, "codec id mismatch inside quantized body");
+    let wire_block = u32::from_le_bytes(body[1..5].try_into().unwrap()) as usize;
+    let wire_n = u64::from_le_bytes(body[5..13].try_into().unwrap()) as usize;
+    ensure!(
+        wire_block == block,
+        "body quantized with block {wire_block}, negotiated block is {block}"
+    );
+    ensure!(wire_n == n, "body encodes {wire_n} values, expected {n}");
+    let nb = n.div_ceil(block.max(1));
+    ensure!(
+        body.len() == 13 + 4 * nb + data_bytes,
+        "quantized body is {} bytes, layout implies {}",
+        body.len(),
+        13 + 4 * nb + data_bytes
+    );
+    let mut scales = Vec::with_capacity(nb);
+    for ch in body[13..13 + 4 * nb].chunks_exact(4) {
+        let s = f32::from_le_bytes(ch.try_into().unwrap());
+        ensure!(s.is_finite() && s >= 0.0, "non-finite or negative scale {s}");
+        scales.push(s);
+    }
+    Ok((scales, &body[13 + 4 * nb..]))
+}
+
+pub(crate) fn decode_q8(body: &[u8], block: usize, n: usize) -> Result<Vec<f32>> {
+    let block = block.max(1);
+    let (scales, data) = parse_header(body, CODEC_Q8, block, n, n)?;
+    let mut out = Vec::with_capacity(n);
+    for (i, &b) in data.iter().enumerate() {
+        let q = b as i8 as i32;
+        ensure!((-127..=127).contains(&q), "q8 level {q} out of range");
+        out.push(q as f32 * scales[i / block]);
+    }
+    Ok(out)
+}
+
+pub(crate) fn decode_q4(body: &[u8], block: usize, n: usize) -> Result<Vec<f32>> {
+    let block = block.max(1);
+    let (scales, data) = parse_header(body, CODEC_Q4, block, n, n.div_ceil(2))?;
+    let mut out = Vec::with_capacity(n);
+    let nib_val = |nib: u8, i: usize| -> Result<f32> {
+        ensure!(nib != 0, "q4 nibble 0 is never emitted — corrupted body");
+        Ok((nib as i32 - 8) as f32 * scales[i / block])
+    };
+    for (pair, &byte) in data.iter().enumerate() {
+        let i = 2 * pair;
+        out.push(nib_val(byte & 0x0F, i)?);
+        let hi = byte >> 4;
+        if i + 1 < n {
+            out.push(nib_val(hi, i + 1)?);
+        } else {
+            ensure!(hi == 8, "q4 pad nibble must be 8, got {hi}");
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn delta(n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|i| (i as f32 * 0.61).sin() * scale).collect()
+    }
+
+    fn max_block_err(d: &[f32], back: &[f32], block: usize, levels: f64) -> f64 {
+        d.chunks(block)
+            .zip(back.chunks(block))
+            .map(|(dc, bc)| {
+                let max = dc.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+                let scale = (max as f64 / levels).max(1e-300);
+                dc.iter()
+                    .zip(bc)
+                    .map(|(a, b)| (*a as f64 - *b as f64).abs() / scale)
+                    .fold(0.0f64, f64::max)
+            })
+            .fold(0.0f64, f64::max)
+    }
+
+    #[test]
+    fn q8_error_bounded_by_one_step() {
+        let d = delta(1337, 0.3);
+        let body = encode_q8(&d, 100, 42);
+        let back = decode_q8(&body, 100, d.len()).unwrap();
+        assert_eq!(back.len(), d.len());
+        let err = max_block_err(&d, &back, 100, 127.0);
+        assert!(err <= 1.001, "relative error {err} steps");
+    }
+
+    #[test]
+    fn q4_error_bounded_and_odd_n_padded() {
+        for n in [7, 8, 255] {
+            let d = delta(n, 1.5);
+            let body = encode_q4(&d, 32, 7);
+            let back = decode_q4(&body, 32, n).unwrap();
+            assert_eq!(back.len(), n);
+            let err = max_block_err(&d, &back, 32, 7.0);
+            assert!(err <= 1.001, "n={n}: relative error {err} steps");
+        }
+    }
+
+    #[test]
+    fn stochastic_rounding_is_unbiased_in_expectation() {
+        // Quantize a constant vector many times with different seeds: the
+        // mean reconstruction converges to the value, not to a lattice
+        // point (the whole point of stochastic over nearest rounding).
+        let d2: Vec<f32> =
+            (0..64).map(|i| 0.013 * (1.0 + i as f32 / 100.0)).collect();
+        let n_trials = 400;
+        let mut mean = vec![0.0f64; d2.len()];
+        for s in 0..n_trials {
+            let body = encode_q8(&d2, 64, s as u64);
+            let back = decode_q8(&body, 64, d2.len()).unwrap();
+            for (m, b) in mean.iter_mut().zip(&back) {
+                *m += *b as f64 / n_trials as f64;
+            }
+        }
+        for (m, x) in mean.iter().zip(&d2) {
+            let scale = d2.iter().fold(0.0f32, |a, b| a.max(b.abs())) as f64 / 127.0;
+            assert!(
+                (m - *x as f64).abs() < scale * 0.2,
+                "mean {m} vs {x} (step {scale})"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_blocks_encode_to_zero() {
+        let mut d = delta(200, 0.1);
+        for x in d.iter_mut().take(50) {
+            *x = 0.0;
+        }
+        let body = encode_q8(&d, 50, 1);
+        let back = decode_q8(&body, 50, 200).unwrap();
+        assert!(back[..50].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn encode_is_deterministic_per_seed() {
+        let d = delta(500, 0.2);
+        assert_eq!(encode_q8(&d, 64, 9), encode_q8(&d, 64, 9));
+        assert_ne!(encode_q8(&d, 64, 9), encode_q8(&d, 64, 10));
+        assert_eq!(encode_q4(&d, 64, 9), encode_q4(&d, 64, 9));
+    }
+
+    #[test]
+    fn structural_corruption_rejected() {
+        let d = delta(100, 0.5);
+        let body = encode_q8(&d, 10, 3);
+        // Wrong negotiated block.
+        assert!(decode_q8(&body, 20, 100).is_err());
+        // Wrong n.
+        assert!(decode_q8(&body, 10, 99).is_err());
+        // Non-finite scale.
+        let mut bad = body.clone();
+        bad[13..17].copy_from_slice(&f32::NAN.to_le_bytes());
+        assert!(decode_q8(&bad, 10, 100).is_err());
+        // Truncation.
+        assert!(decode_q8(&body[..body.len() - 1], 10, 100).is_err());
+        // q4: nibble 0 / bad pad.
+        let d7 = delta(7, 0.5);
+        let b4 = encode_q4(&d7, 7, 3);
+        let mut bad4 = b4.clone();
+        let data_start = 13 + 4;
+        bad4[data_start] &= 0xF0; // low nibble → 0
+        assert!(decode_q4(&bad4, 7, 7).is_err());
+        let mut badpad = b4.clone();
+        let last = badpad.len() - 1;
+        badpad[last] = (badpad[last] & 0x0F) | (9 << 4); // pad nibble ≠ 8
+        assert!(decode_q4(&badpad, 7, 7).is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! Magnitude top-k sparsification with error feedback (the `topk` codec).
+//!
+//! The encoder adds the client's residual (the mass previous rounds did
+//! not send) to this round's delta, keeps the `k` largest-magnitude
+//! entries of the sum, and stores the rest back into the residual — so
+//! over rounds the compressed stream reconstructs the dense sum up to the
+//! final residual (property-tested in `rust/tests/props.rs`). Selection is
+//! fully deterministic: ties break on the lower index, and kept entries
+//! are emitted in increasing index order (the canonical form decode
+//! enforces).
+//!
+//! Body layout (little-endian), after the leading wire codec id byte:
+//!
+//! ```text
+//! id(1) | n u64 | k u64 | index u32 × k | value f32 × k
+//! ```
+
+use anyhow::{ensure, Result};
+
+use crate::compress::CODEC_TOPK;
+
+/// Encode the k largest-magnitude entries of `delta + residual`, leaving
+/// the un-sent remainder in `residual` (resized to `delta.len()` on first
+/// use; a non-empty residual of any other length is a config-drift error).
+pub(crate) fn encode(delta: &[f32], k: usize, residual: &mut Vec<f32>) -> Result<Vec<u8>> {
+    let n = delta.len();
+    let k = k.min(n).max(if n == 0 { 0 } else { 1 });
+    if residual.is_empty() {
+        residual.resize(n, 0.0);
+    }
+    ensure!(
+        residual.len() == n,
+        "error-feedback residual has {} entries, delta {}",
+        residual.len(),
+        n
+    );
+    // Effective signal = this round's delta + what was withheld before.
+    let eff: Vec<f32> = delta.iter().zip(residual.iter()).map(|(d, r)| d + r).collect();
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    order.sort_unstable_by(|&a, &b| {
+        eff[b as usize]
+            .abs()
+            .total_cmp(&eff[a as usize].abs())
+            .then(a.cmp(&b))
+    });
+    order.truncate(k);
+    order.sort_unstable();
+
+    let mut out = Vec::with_capacity(17 + 8 * k);
+    out.push(CODEC_TOPK);
+    out.extend_from_slice(&(n as u64).to_le_bytes());
+    out.extend_from_slice(&(k as u64).to_le_bytes());
+    for &i in &order {
+        out.extend_from_slice(&i.to_le_bytes());
+    }
+    // New residual: everything not sent (sent entries transmit eff exactly,
+    // so their residual is zero by construction — no arithmetic, no drift).
+    residual.copy_from_slice(&eff);
+    for &i in &order {
+        out.extend_from_slice(&eff[i as usize].to_le_bytes());
+        residual[i as usize] = 0.0;
+    }
+    Ok(out)
+}
+
+/// Decode a top-k body into a dense `n`-element delta. `expect_k` is the
+/// negotiated keep count — the body must match it exactly, indices must be
+/// strictly increasing and in range, and values finite (hardening: a
+/// malformed body is refused structurally, never folded).
+pub(crate) fn decode(body: &[u8], expect_k: usize, n: usize) -> Result<Vec<f32>> {
+    ensure!(body.len() >= 17, "top-k body shorter than its header");
+    ensure!(body[0] == CODEC_TOPK, "codec id mismatch inside top-k body");
+    let wire_n = u64::from_le_bytes(body[1..9].try_into().unwrap()) as usize;
+    let k = u64::from_le_bytes(body[9..17].try_into().unwrap()) as usize;
+    ensure!(wire_n == n, "top-k body encodes {wire_n} values, expected {n}");
+    ensure!(k == expect_k.min(n), "top-k body keeps {k} entries, negotiated {expect_k}");
+    ensure!(
+        body.len() == 17 + 8 * k,
+        "top-k body is {} bytes, layout implies {}",
+        body.len(),
+        17 + 8 * k
+    );
+    let idx_bytes = &body[17..17 + 4 * k];
+    let val_bytes = &body[17 + 4 * k..];
+    let mut out = vec![0.0f32; n];
+    let mut prev: Option<u32> = None;
+    for (ib, vb) in idx_bytes.chunks_exact(4).zip(val_bytes.chunks_exact(4)) {
+        let i = u32::from_le_bytes(ib.try_into().unwrap());
+        ensure!((i as usize) < n, "top-k index {i} out of range ({n} values)");
+        if let Some(p) = prev {
+            ensure!(i > p, "top-k indices not strictly increasing ({p} then {i})");
+        }
+        prev = Some(i);
+        let v = f32::from_le_bytes(vb.try_into().unwrap());
+        ensure!(v.is_finite(), "non-finite top-k value at index {i}");
+        out[i as usize] = v;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_the_largest_magnitudes() {
+        let delta = vec![0.1f32, -5.0, 0.2, 3.0, -0.05, 0.0, 4.0, -0.3];
+        let mut residual = Vec::new();
+        let body = encode(&delta, 3, &mut residual).unwrap();
+        let back = decode(&body, 3, delta.len()).unwrap();
+        assert_eq!(back, vec![0.0, -5.0, 0.0, 3.0, 0.0, 0.0, 4.0, 0.0]);
+        // Residual holds exactly the un-sent mass.
+        assert_eq!(residual, vec![0.1, 0.0, 0.2, 0.0, -0.05, 0.0, 0.0, -0.3]);
+    }
+
+    #[test]
+    fn error_feedback_flushes_small_entries_eventually() {
+        // A persistently small coordinate accumulates in the residual until
+        // it outranks the big ones and gets sent.
+        let n = 4;
+        let mut residual = Vec::new();
+        let mut got_small = false;
+        for _ in 0..50 {
+            let delta = vec![0.05f32, 1.0, -1.0, 0.9];
+            let body = encode(&delta, 1, &mut residual).unwrap();
+            let back = decode(&body, 1, n).unwrap();
+            if back[0] != 0.0 {
+                got_small = true;
+            }
+        }
+        assert!(got_small, "error feedback must eventually send coordinate 0");
+    }
+
+    #[test]
+    fn deterministic_ties_break_on_lower_index() {
+        let delta = vec![1.0f32, 1.0, 1.0, 1.0];
+        let mut residual = Vec::new();
+        let body = encode(&delta, 2, &mut residual).unwrap();
+        let back = decode(&body, 2, 4).unwrap();
+        assert_eq!(back, vec![1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn structural_corruption_rejected() {
+        let delta: Vec<f32> = (0..40).map(|i| i as f32 - 20.0).collect();
+        let mut residual = Vec::new();
+        let body = encode(&delta, 5, &mut residual).unwrap();
+        assert!(decode(&body, 5, 40).is_ok());
+        // Wrong negotiated k / n.
+        assert!(decode(&body, 6, 40).is_err());
+        assert!(decode(&body, 5, 41).is_err());
+        // Out-of-range index.
+        let mut bad = body.clone();
+        bad[17..21].copy_from_slice(&1000u32.to_le_bytes());
+        assert!(decode(&bad, 5, 40).is_err());
+        // Non-increasing indices.
+        let mut dup = body.clone();
+        let second = body[17..21].to_vec();
+        dup[21..25].copy_from_slice(&second);
+        assert!(decode(&dup, 5, 40).is_err());
+        // Non-finite value.
+        let mut nan = body.clone();
+        let vstart = 17 + 4 * 5;
+        nan[vstart..vstart + 4].copy_from_slice(&f32::INFINITY.to_le_bytes());
+        assert!(decode(&nan, 5, 40).is_err());
+        // Truncation / wrong size.
+        assert!(decode(&body[..body.len() - 1], 5, 40).is_err());
+    }
+
+    #[test]
+    fn residual_length_drift_is_an_error() {
+        let delta = vec![1.0f32; 8];
+        let mut residual = vec![0.0f32; 5];
+        assert!(encode(&delta, 2, &mut residual).is_err());
+    }
+}

@@ -6,6 +6,7 @@ use anyhow::Result;
 
 use crate::cluster::faults::FaultPlan;
 use crate::cluster::hardware::FleetSpec;
+use crate::compress::UpdateCodec;
 use crate::optim::outer::{OuterHyper, OuterOptKind};
 use crate::optim::schedule::CosineSchedule;
 
@@ -77,6 +78,10 @@ pub struct ExperimentConfig {
     pub fleet: Option<FleetSpec>,
     /// Round-engine parallelism (workers, dispatch serialization).
     pub exec: ExecConfig,
+    /// Pseudo-gradient update codec applied in transit (`compress`
+    /// module). `None` is the pre-codec lossless path and leaves every
+    /// record bit-identical to builds without the codec plane.
+    pub codec: UpdateCodec,
 }
 
 impl ExperimentConfig {
@@ -99,6 +104,7 @@ impl ExperimentConfig {
             faults: FaultPlan::none(),
             fleet: None,
             exec: ExecConfig::default(),
+            codec: UpdateCodec::None,
         }
     }
 
@@ -144,6 +150,7 @@ impl ExperimentConfig {
         );
         anyhow::ensure!(self.local_steps >= 1, "τ must be >= 1");
         anyhow::ensure!(self.rounds >= 1, "need at least one round");
+        self.codec.validate()?;
         Ok(())
     }
 }

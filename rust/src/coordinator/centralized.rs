@@ -86,6 +86,7 @@ pub fn run_centralized(
             client_cosine_mean: 1.0,
             participated: 1,
             comm_bytes: 0,
+            comm_bytes_wire: 0,
             wall_secs: t0.elapsed().as_secs_f64(),
         });
     }

@@ -25,6 +25,10 @@ pub struct ClientNode {
     pub streams: Vec<TokenStream>,
     /// KeepOpt: AdamW state carried across rounds (None = stateless).
     pub saved_opt: Option<(Vec<f32>, Vec<f32>, i64)>,
+    /// Error-feedback residual of the lossy update codec (`topk`): the
+    /// gradient mass withheld so far. Empty means zero; updated by
+    /// `compress::encode_transit` when the update leaves the node.
+    pub residual: Vec<f32>,
 }
 
 /// What a node sends back through the Photon Link after a round.
@@ -41,12 +45,17 @@ pub struct ClientUpdate {
     pub act_norm_mean: f64,
     pub model_norm: f64,
     pub steps_done: u64,
+    /// Framed Photon-Link bytes this update occupies in transit (coded
+    /// body, or dense payload, plus one frame header). 0 = "not measured
+    /// yet": `commit_round` substitutes the dense-frame size, so the
+    /// lossless path needs no transit pass at all.
+    pub wire_bytes: u64,
 }
 
 impl ClientNode {
     pub fn new(id: usize, streams: Vec<TokenStream>) -> ClientNode {
         assert!(!streams.is_empty());
-        ClientNode { id, streams, saved_opt: None }
+        ClientNode { id, streams, saved_opt: None, residual: Vec::new() }
     }
 
     pub fn islands(&self) -> usize {
@@ -64,7 +73,7 @@ impl ClientNode {
             Some((m, v, st)) => (m.clone(), v.clone(), *st),
             None => (Vec::new(), Vec::new(), 0),
         };
-        ClientCkpt { opt_m, opt_v, local_step, cursors }
+        ClientCkpt { opt_m, opt_v, local_step, cursors, residual: self.residual.clone() }
     }
 
     /// Validate that `st` structurally fits this node (island and bucket
@@ -104,6 +113,7 @@ impl ClientNode {
         } else {
             Some((st.opt_m.clone(), st.opt_v.clone(), st.local_step))
         };
+        self.residual = st.residual.clone();
         Ok(())
     }
 
@@ -211,6 +221,7 @@ impl ClientNode {
             applied_update_norm_mean: update_norms * inv,
             act_norm_mean: act_norms * inv,
             steps_done: total_steps,
+            wire_bytes: 0,
         })
     }
 }

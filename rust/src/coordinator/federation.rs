@@ -13,6 +13,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::ckpt::{Checkpoint, ClientCkpt};
 use crate::cluster::island::island_counts;
+use crate::compress;
 use crate::config::{CorpusKind, ExperimentConfig};
 use crate::coordinator::client::{ClientNode, ClientUpdate};
 use crate::coordinator::round_exec::{ClientTask, RoundExec};
@@ -272,6 +273,31 @@ impl Federation {
         for r in results {
             updates.push(r?);
         }
+
+        // --- Update-codec transit (lossy path only): apply the exact
+        // encode→decode transform the deployment plane's wire applies, so
+        // the folded parameters — and therefore every record — are
+        // bit-identical whether the update crossed a socket or not. The
+        // lossless path skips this entirely and stays byte-for-byte the
+        // pre-codec behavior.
+        if self.cfg.codec.is_lossy() {
+            for u in &mut updates {
+                let node = &mut self.nodes[u.client_id];
+                let seed =
+                    compress::transit_seed(self.cfg.seed, round as u64, u.client_id as u64);
+                let transit = compress::encode_transit(
+                    &self.cfg.codec,
+                    &self.global,
+                    &u.params,
+                    seed,
+                    &mut node.residual,
+                )?;
+                if let Some(body) = &transit.body {
+                    u.params = compress::decode_transit(&self.cfg.codec, &self.global, body)?;
+                }
+                u.wire_bytes = transit.wire_bytes;
+            }
+        }
         self.commit_round(round, updates, t0)
     }
 
@@ -281,7 +307,11 @@ impl Federation {
     /// must be the current `next_round` — both the in-process path
     /// (`run_round`) and the deployment plane (`net::server`) commit
     /// through here, which is what makes their record streams comparable
-    /// bit-for-bit.
+    /// bit-for-bit. When a lossy codec is active, the caller has already
+    /// decoded each update back to dense params (decode-then-fold) and
+    /// stamped `ClientUpdate::wire_bytes` with its framed transit size;
+    /// updates with `wire_bytes == 0` are accounted at the dense frame
+    /// size, so the `codec = none` path needs no transit pass.
     pub fn commit_round(
         &mut self,
         round: usize,
@@ -372,6 +402,18 @@ impl Federation {
             client_cosine_mean: mean_pairwise_cosine_from_gram(agg.k, &agg.gram),
             participated: updates.len(),
             comm_bytes: link::round_bytes(self.model.n_params(), updates.len()),
+            comm_bytes_wire: {
+                // Actual framed transit bytes: one dense broadcast down per
+                // participating client plus each update's measured size up.
+                // Deterministic and computed identically by the deployment
+                // plane, so it survives the bit-parity check.
+                let dense_frame = link::dense_frame_bytes(self.model.n_params());
+                let up: u64 = updates
+                    .iter()
+                    .map(|u| if u.wire_bytes > 0 { u.wire_bytes } else { dense_frame })
+                    .sum();
+                updates.len() as u64 * dense_frame + up
+            },
             wall_secs: t0.elapsed().as_secs_f64(),
         };
         self.log.push(rec.clone());
@@ -411,6 +453,13 @@ impl Federation {
     /// update so a malformed push can be cut instead of poisoning a commit.
     pub fn check_client_state(&self, client: usize, st: &ClientCkpt) -> Result<()> {
         anyhow::ensure!(client < self.nodes.len(), "client {client} out of range");
+        anyhow::ensure!(
+            st.residual.is_empty() || st.residual.len() == self.global.len(),
+            "client {client} state carries a {}-element codec residual, model has {} \
+             params",
+            st.residual.len(),
+            self.global.len()
+        );
         self.nodes[client].check_state(st)
     }
 
@@ -491,7 +540,10 @@ impl Federation {
     /// wall-clock simulator (`sim` module): per-client compute time comes
     /// from the configured fleet (uniform single-A100 clients when no
     /// fleet is set), payload bytes from the loaded model, transfer time
-    /// from `link`.
+    /// from `link`. Upload payloads are priced from the update codec's
+    /// **actual encoded size** (`UpdateCodec::encoded_body_bytes`, exact
+    /// for the quantizing/sparsifying codecs) rather than the dense
+    /// estimate, so a `q8` federation simulates with `q8` wire bytes.
     ///
     /// # Example
     ///
@@ -523,7 +575,12 @@ impl Federation {
         };
         let profiles =
             crate::sim::fleet_profiles(fleet, n_params, tokens, crate::sim::DEFAULT_MFU);
-        let sim_cfg = crate::sim::SimConfig::new(n_params * 4, link, policy);
+        let sim_cfg = crate::sim::SimConfig::asymmetric(
+            n_params * 4,
+            self.cfg.codec.encoded_body_bytes(n_params as usize),
+            link,
+            policy,
+        );
         crate::sim::Simulator::new(self.round_plan(), profiles, sim_cfg).run()
     }
 

@@ -2,26 +2,43 @@
 //! pre-training needs orders-of-magnitude less communication than
 //! data-parallel (DDP) training for the same sequential step count (§4.3),
 //! and the per-round communication is a negligible fraction of wall-clock
-//! even on WAN links.
+//! even on WAN links — plus the **lossy update-codec sweep**: how far the
+//! `compress` registry (q8/q4 quantization, top-k + error feedback) pushes
+//! the bytes-on-wire frontier, and (with artifacts) what it costs in final
+//! loss versus the lossless baseline.
 //!
-//! Bytes come from the netsim cost model over *both* the paper's model
-//! sizes and our artifact ladder (real manifest payloads, plus measured
-//! Photon-Link compressed payload sizes of an actual trained model).
+//! ```text
+//! photon exp comm [--steps τ] [--rounds N] [--taus 50,500] [--fast]
+//! ```
+//!
+//! DDP-vs-FL bytes come from the netsim cost model over *both* the paper's
+//! model sizes and our artifact ladder (real manifest payloads, plus
+//! measured Photon-Link compressed payload sizes of an actual trained
+//! model). The codec sweep measures *actual framed wire bytes* through
+//! `link::encode_update`, each codec under its own transport config:
+//! `none` ships raw dense frames (its registry meaning — no deflate
+//! requested), `deflate` and the lossy codecs ship with transport deflate
+//! on (what `photon serve` does by default). Ratios are reported against
+//! the raw `none` baseline; the `deflate` row is the deployed lossless
+//! reference. `--fast` shrinks the synthetic vector and skips the
+//! training-backed loss comparison (CI smoke mode).
 
 use anyhow::Result;
 
-use crate::config::{PAPER_TABLE1, PAPER_TABLE2};
+use crate::compress::UpdateCodec;
+use crate::config::{ExperimentConfig, PAPER_TABLE1, PAPER_TABLE2};
 use crate::link;
 use crate::model::manifest::Manifest;
 use crate::netsim::*;
 use crate::util::cli::Args;
 use crate::util::csv::CsvWriter;
+use crate::util::rng::Rng;
 use crate::util::table::Table;
 use crate::util::{artifacts_dir, results_dir};
 
 pub fn comm(args: &Args) -> Result<()> {
     let tau = args.get_u64("steps", 500)?; // paper's τ
-    let rounds = args.get_u64("rounds", 20)? as u64;
+    let rounds = args.get_u64("rounds", 20)?;
     let workers = 8usize;
 
     println!(
@@ -90,6 +107,199 @@ pub fn comm(args: &Args) -> Result<()> {
         min_ratio > 100.0,
         format!("min DDP/FL ratio {min_ratio:.0}× (τ·(n−1)/n = {:.0}×)",
                 tau as f64 * (workers as f64 - 1.0) / workers as f64),
+    );
+
+    codec_sweep(args)?;
+    if !args.flag("fast") {
+        codec_loss_sweep(args)?;
+    }
+    Ok(())
+}
+
+/// The bandwidth frontier: encode one synthetic pseudo-gradient through
+/// every registry codec and measure the **actual framed wire bytes** —
+/// each codec under its own transport config (`none` = raw dense, its
+/// registry meaning; everything else with the deflate `photon serve`
+/// ships by default) — plus the reconstruction error and the WAN comm
+/// fraction those bytes imply at each τ. Ratios are vs the raw `none`
+/// baseline; compare against the `deflate` row for the deployed lossless
+/// reference.
+fn codec_sweep(args: &Args) -> Result<()> {
+    let n = if args.flag("fast") { 20_000 } else { 200_000 };
+    let taus = args.get_u64_list("taus", &[50, 500])?;
+    let codecs = [
+        UpdateCodec::None,
+        UpdateCodec::Deflate,
+        UpdateCodec::parse("q8")?,
+        UpdateCodec::parse("q4")?,
+        UpdateCodec::parse("topk")?,
+    ];
+
+    // A pseudo-gradient-shaped payload: zero-mean noise at a realistic
+    // update magnitude. Gaussian f32 mantissas are deflate's worst case,
+    // which keeps the lossless baseline honest.
+    let mut rng = Rng::new(7);
+    let delta: Vec<f32> = (0..n).map(|_| rng.gauss_f32() * 0.01).collect();
+    let dense_l2: f64 = delta.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+
+    println!(
+        "\nUpdate-codec sweep ({n}-element pseudo-gradient; none = raw dense, \
+         others with transport deflate):"
+    );
+    let mut t = Table::new(&[
+        "codec", "wire bytes", "vs raw none", "rel err", "WAN frac τ=min",
+        "WAN frac τ=max",
+    ]);
+    let mut csv = CsvWriter::create(
+        &results_dir("comm").join("codec_sweep.csv"),
+        &["codec", "tau", "wire_bytes", "ratio_vs_raw_none", "rel_err", "wan_comm_frac"],
+    )?;
+
+    let tau_min = *taus.iter().min().unwrap_or(&50);
+    let tau_max = *taus.iter().max().unwrap_or(&500);
+    let mut none_bytes = 0u64;
+    let mut q8_ratio = 0.0f64;
+    for codec in &codecs {
+        let mut residual = Vec::new();
+        let compress = !matches!(codec, UpdateCodec::None);
+        let frame = link::encode_update(
+            link::MsgKind::ClientUpdate,
+            &delta,
+            codec,
+            42,
+            &mut residual,
+            compress,
+        )?;
+        let wire = frame.len() as u64;
+        let (_, back) = link::decode_update(&frame, codec, n)?;
+        let err_l2: f64 = delta
+            .iter()
+            .zip(&back)
+            .map(|(a, b)| (*a as f64 - *b as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        let rel_err = if dense_l2 > 0.0 { err_l2 / dense_l2 } else { 0.0 };
+        if matches!(codec, UpdateCodec::None) {
+            none_bytes = wire;
+        }
+        let ratio = none_bytes as f64 / wire as f64;
+        if matches!(codec, UpdateCodec::Q8 { .. }) {
+            q8_ratio = ratio;
+        }
+        let frac = |tau: u64| {
+            // One broadcast (dense) down + one coded update up per round of
+            // τ steps at 1 s/step on the WAN rung.
+            let comm = CLOUD_WAN.transfer_secs(4 * n as u64)
+                + CLOUD_WAN.transfer_secs(wire);
+            comm / (comm + tau as f64)
+        };
+        t.row(vec![
+            codec.label(),
+            human_bytes(wire),
+            format!("{ratio:.2}x"),
+            format!("{rel_err:.4}"),
+            format!("{:.3}%", 100.0 * frac(tau_min)),
+            format!("{:.3}%", 100.0 * frac(tau_max)),
+        ]);
+        for &tau in &taus {
+            csv.row_mixed(&[
+                codec.label(),
+                tau.to_string(),
+                wire.to_string(),
+                format!("{ratio:.6}"),
+                format!("{rel_err:.6}"),
+                format!("{:.6}", frac(tau)),
+            ])?;
+        }
+    }
+    t.print();
+    csv.finish()?;
+
+    crate::exp::common::check_shape(
+        "q8 ≥ 4× wire-byte reduction vs lossless none",
+        q8_ratio >= 4.0,
+        format!("q8 ships {q8_ratio:.2}× fewer framed bytes than raw none"),
+    );
+    println!("[csv] {}", results_dir("comm").join("codec_sweep.csv").display());
+    Ok(())
+}
+
+/// The quality frontier (needs `make artifacts`): train the same tiny
+/// federation under each codec and compare final server NLL against the
+/// lossless baseline. Skipped silently on artifact-free checkouts.
+fn codec_loss_sweep(args: &Args) -> Result<()> {
+    let rt = match crate::runtime::Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(_) => return Ok(()),
+    };
+    let model_name = args.get_or("config", "m75a");
+    let model = match rt.load_model(&model_name) {
+        Ok(m) => std::sync::Arc::new(m),
+        Err(_) => {
+            println!("\n(no artifacts — skipping the codec loss sweep; run `make artifacts`)");
+            return Ok(());
+        }
+    };
+
+    let rounds = args.get_usize("rounds", 20)?.clamp(4, 8);
+    let steps = args.get_u64("steps", 500)?.clamp(6, 10);
+    let mut base = ExperimentConfig::quickstart(&model_name);
+    base.label = "comm-codec".into();
+    base.rounds = rounds;
+    base.local_steps = steps;
+    base.eval_batches = 2;
+    base.seed = args.get_u64("seed", 42)?;
+
+    println!(
+        "\nCodec × convergence ({model_name}, {rounds} rounds × τ={steps}, seed {}):",
+        base.seed
+    );
+    let mut t = Table::new(&["codec", "final nll", "Δ vs none", "wire bytes/round"]);
+    let mut csv = CsvWriter::create(
+        &results_dir("comm").join("codec_loss.csv"),
+        &["codec_tag", "final_nll", "rel_delta", "wire_bytes_last_round"],
+    )?;
+    let mut none_nll = f64::NAN;
+    let mut q8_rel = f64::NAN;
+    for name in ["none", "q8", "q4", "topk"] {
+        let codec = UpdateCodec::parse(name)?;
+        let mut cfg = base.clone();
+        cfg.codec = codec;
+        let mut fed =
+            crate::coordinator::Federation::with_model(cfg, model.clone())?;
+        let records = fed.run()?;
+        let last = records.last().expect("at least one round");
+        let rel = if none_nll.is_finite() {
+            (last.server_nll - none_nll).abs() / none_nll
+        } else {
+            0.0
+        };
+        if name == "none" {
+            none_nll = last.server_nll;
+        }
+        if name == "q8" {
+            q8_rel = rel;
+        }
+        t.row(vec![
+            codec.label(),
+            format!("{:.5}", last.server_nll),
+            format!("{:+.3}%", 100.0 * rel),
+            human_bytes(last.comm_bytes_wire),
+        ]);
+        let (tag, _) = codec.tag_param();
+        csv.row(&[
+            tag as f64,
+            last.server_nll,
+            rel,
+            last.comm_bytes_wire as f64,
+        ])?;
+    }
+    t.print();
+    csv.finish()?;
+    crate::exp::common::check_shape(
+        "q8 final loss within 2% of lossless",
+        q8_rel.is_finite() && q8_rel <= 0.02,
+        format!("|nll(q8) − nll(none)|/nll(none) = {:.3}%", 100.0 * q8_rel),
     );
     Ok(())
 }

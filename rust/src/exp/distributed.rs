@@ -1,15 +1,17 @@
 //! `distributed`: the deployment-plane parity sweep — a localhost TCP
 //! fleet (`net::harness`) must reproduce the in-process `Federation::run`
 //! **bit for bit**: same global model, same round-record stream (wall-clock
-//! aside), under partial participation, dropouts, and stragglers; and a
+//! aside), under partial participation, dropouts, and stragglers; a
 //! worker crashed mid-round must be cut through the dropped-client path
 //! with the remaining run still bit-reproducible from the recorded cut
-//! schedule.
+//! schedule; and the same bit-parity must hold with a **lossy update
+//! codec** (`q8`) negotiated — the wire's encode→decode transform is
+//! replayed identically by the in-process transit pass.
 //!
 //! ```text
 //! photon exp distributed [--config m75a] [--clients P] [--sampled K]
 //!     [--rounds N] [--steps T] [--seed S] [--fleet W]
-//!     [--dropout p] [--straggler p]
+//!     [--dropout p] [--straggler p] [--codec q8]
 //! ```
 //!
 //! Requires compiled artifacts (`make artifacts`).
@@ -20,6 +22,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::cluster::faults::FaultPlan;
+use crate::compress::UpdateCodec;
 use crate::config::ExperimentConfig;
 use crate::coordinator::Federation;
 use crate::exp::common::check_shape;
@@ -132,7 +135,7 @@ pub fn distributed(args: &Args) -> Result<()> {
             ..FleetOpts::default()
         },
     )?;
-    let mut replay = Federation::with_model(cfg, model)?;
+    let mut replay = Federation::with_model(cfg, model.clone())?;
     let mut replayed = Vec::with_capacity(rounds);
     for round in 0..rounds {
         let cut = crashed
@@ -158,6 +161,50 @@ pub fn distributed(args: &Args) -> Result<()> {
             crashed.cuts,
             if crash_records_ok { "bit-equal" } else { "DIVERGED" },
             if crash_global_ok { "bit-equal" } else { "DIVERGED" },
+        ),
+    );
+
+    // --- lossy-codec parity: negotiate a codec over the wire ---------------
+    // The worker encodes each pseudo-delta (stochastic rounding seeded per
+    // (round, client) from the task spec), the server decodes-then-folds;
+    // the in-process run applies the identical transform, so records and
+    // global model must still be bit-equal — and the wire accounting must
+    // show the codec actually shrank the update frames.
+    let codec = UpdateCodec::parse(&args.get_or("codec", "q8"))?;
+    let mut cfg_codec = replay.cfg.clone();
+    cfg_codec.label = format!("distributed-{model_name}-{}", codec.label());
+    cfg_codec.codec = codec;
+    let mut fed_codec = Federation::with_model(cfg_codec.clone(), model.clone())?;
+    let ref_codec = fed_codec.run()?;
+    let fleet_codec = run_loopback(
+        cfg_codec,
+        model,
+        FleetOpts { workers: fleet, compress: true, ..FleetOpts::default() },
+    )?;
+    for e in &fleet_codec.worker_errors {
+        println!("[!] {e}");
+    }
+    let codec_records_ok = parity(&ref_codec, &fleet_codec.records);
+    let codec_global_ok = fed_codec.global == fleet_codec.global;
+    // Lossless codecs keep the dense payload, so only lossy ones must
+    // land below the dense estimate.
+    let wire_shrank = !codec.is_lossy()
+        || ref_codec
+            .iter()
+            .filter(|r| r.participated > 0)
+            .all(|r| r.comm_bytes_wire < r.comm_bytes);
+    check_shape(
+        &format!("distributed-parity-{}", codec.label()),
+        codec_records_ok && codec_global_ok && fleet_codec.cuts.is_empty() && wire_shrank,
+        format!(
+            "{} rounds with codec {} negotiated: records {} + global {} \
+             (wire bytes {} dense estimate; cuts {:?})",
+            ref_codec.len(),
+            codec.label(),
+            if codec_records_ok { "bit-equal" } else { "DIVERGED" },
+            if codec_global_ok { "bit-equal" } else { "DIVERGED" },
+            if wire_shrank { "below" } else { "NOT below" },
+            fleet_codec.cuts,
         ),
     );
     println!(

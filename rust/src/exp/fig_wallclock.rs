@@ -14,7 +14,14 @@
 //! photon exp wallclock [--size 125M] [--clients P] [--sampled K]
 //!     [--rounds N] [--taus 50,500] [--straggler p] [--dropout p]
 //!     [--slowdown x] [--deadline f] [--mfu u] [--policy all|sync|...]
+//!     [--codec q8]
 //! ```
+//!
+//! `--codec` prices the *upload* leg from the update codec's actual
+//! encoded bytes (`compress::UpdateCodec::encoded_body_bytes`) — exact
+//! for the quantizing/sparsifying codecs — while the broadcast stays
+//! dense, so the sweep shows how lossy updates move the wall-clock
+//! frontier.
 
 use anyhow::{bail, Result};
 
@@ -70,6 +77,7 @@ pub fn fig_wallclock(args: &Args) -> Result<()> {
         bail!("--taus needs at least one value");
     }
 
+    let codec = crate::compress::UpdateCodec::parse(&args.get_or("codec", "none"))?;
     let n_params = row.params as u64;
     let tokens_per_step = row.l * row.b;
     // Raw f32 payload, scaled by the *measured* Photon-Link deflate ratio
@@ -81,6 +89,20 @@ pub fn fig_wallclock(args: &Args) -> Result<()> {
             (raw_payload as f64 * ratio) as u64
         }
         None => raw_payload,
+    };
+    // Upload leg: actual encoded bytes under the update codec (dense
+    // payload when lossless — identical to the symmetric pre-codec sweep).
+    let payload_up = if codec.is_lossy() {
+        let up = codec.encoded_body_bytes(n_params as usize);
+        println!(
+            "[codec] {}: uploads priced at {} of the dense {} bytes",
+            codec.label(),
+            up,
+            raw_payload
+        );
+        up
+    } else {
+        payload
     };
 
     println!(
@@ -115,7 +137,8 @@ pub fn fig_wallclock(args: &Args) -> Result<()> {
         let plan = RoundPlan::from_config(&cfg);
         for (link_name, link) in LADDER {
             for &policy in &policies {
-                let mut sim_cfg = SimConfig::new(payload, link, policy);
+                let mut sim_cfg =
+                    SimConfig::asymmetric(payload, payload_up, link, policy);
                 sim_cfg.straggler_slowdown = slowdown;
                 let report =
                     Simulator::new(plan.clone(), profiles.clone(), sim_cfg).run();

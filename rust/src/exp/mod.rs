@@ -1,7 +1,7 @@
 //! Experiment drivers: one per table/figure of the paper's evaluation
-//! (the README reproduction matrix maps each id to its paper artifact,
-//! exact command, and output CSV; docs/ARCHITECTURE.md maps modules to
-//! paper sections).
+//! (docs/REPRODUCTION.md maps each id to its paper artifact, exact
+//! command, expected outputs, runtime, and seed; docs/ARCHITECTURE.md
+//! maps modules to paper sections).
 //!
 //! `photon exp <id> [--fast] [--rounds N] [--steps N] [--seed S]`
 //! regenerates the paper artifact: prints the paper-style series/rows,
@@ -52,7 +52,7 @@ pub const EXPERIMENTS: [ExpInfo; 21] = [
     ExpInfo { id: "fig14", what: "fig8 norms under heterogeneity" },
     ExpInfo { id: "fig15", what: "fig8 norms under partial participation" },
     ExpInfo { id: "table56", what: "in-context learning across the ladder" },
-    ExpInfo { id: "comm", what: "communication: federated vs DDP (headline 1)" },
+    ExpInfo { id: "comm", what: "communication: federated vs DDP + lossy update-codec sweep (headline 1)" },
     ExpInfo { id: "wallclock", what: "event-driven wall-clock: link ladder × τ × aggregation policy (§4.3)" },
     ExpInfo { id: "distributed", what: "deployment plane: TCP worker fleet bit-equals the in-process federation (§4.1)" },
 ];

@@ -10,7 +10,9 @@
 //!   runtime: round orchestration ([`coordinator`]), client sampling,
 //!   outer optimizers ([`optim`]), hierarchical island aggregation
 //!   ([`cluster`]), streaming synthetic corpora ([`data`]), the
-//!   Photon-Link transport ([`link`]), the TCP deployment plane ([`net`]:
+//!   Photon-Link transport ([`link`]) with its lossy update-codec registry
+//!   ([`compress`]: q8/q4 stochastic quantization, top-k + error
+//!   feedback), the TCP deployment plane ([`net`]:
 //!   real Aggregator/worker federation with straggler cuts and restart
 //!   recovery), checkpointing ([`ckpt`]), network cost modeling
 //!   ([`netsim`]), the event-driven wall-clock simulator ([`sim`]), and
@@ -55,6 +57,7 @@
 pub mod benchkit;
 pub mod ckpt;
 pub mod cluster;
+pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod data;

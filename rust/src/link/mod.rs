@@ -1,11 +1,22 @@
 //! Photon Link — the communication gateway between the Aggregator and the
 //! LLM Nodes (paper §4.1): model-payload serialization, *lossless*
 //! compression ("We do not prune the model by default and only use lossless
-//! compression"), and integrity checking.
+//! compression"), integrity checking, and — since wire v2 — the carrier
+//! for the *opt-in* lossy update codecs of [`crate::compress`]
+//! (q8/q4/topk), which trade pseudo-gradient precision for wire bytes.
 //!
-//! Wire format (little-endian, [`HEADER_BYTES`] = 28-byte header):
-//!   magic "PHLK" (4) | version u16 | kind u16 | flags u32 (bit0 = deflate)
+//! Wire format (little-endian, [`HEADER_BYTES`] = 28-byte header; the
+//! byte-exact normative spec lives in `docs/PROTOCOL.md`):
+//!   magic "PHLK" (4) | version u16 | kind u16
+//!   | flags u32 (bit0 = deflate, bits 8–15 = update-codec id)
 //!   | uncompressed_len u64 | checksum u64 (FNV-1a of raw payload) | payload
+//!
+//! Version 2 added the **codec id** field to the flags word: a nonzero id
+//! means the payload is a lossy-coded pseudo-gradient body
+//! ([`crate::compress`]) rather than raw f32s, and must be decoded with
+//! [`decode_update`] against the negotiated codec. Version-1 frames (no
+//! codec field, those bits were reserved-zero) still decode; id 0 frames
+//! are byte-compatible with v1 apart from the version halfword.
 //!
 //! A frame with an empty payload is exactly 28 bytes and is valid — the
 //! decoder accepts any frame of at least the header size. Frames written by
@@ -22,7 +33,9 @@
 
 use std::io::{Read, Write};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
+
+use crate::compress::UpdateCodec;
 
 /// Message kinds exchanged during a round (Algorithm 1) plus the `net`
 /// deployment plane's control messages (paper §4.1's Aggregator ↔ LLM Node
@@ -73,13 +86,19 @@ impl MsgKind {
 }
 
 const MAGIC: &[u8; 4] = b"PHLK";
-/// Current wire version. Peers emitting a newer version are rejected with
-/// an upgrade error (see [`decode_bytes`]).
-pub const VERSION: u16 = 1;
-/// Oldest wire version this build still decodes.
+/// Current wire version (v2: update-codec id in flags bits 8–15). Peers
+/// emitting a newer version are rejected with an upgrade error (see
+/// [`decode_bytes`]).
+pub const VERSION: u16 = 2;
+/// Oldest wire version this build still decodes (v1 frames carry no codec
+/// field and decode as codec id 0).
 const MIN_VERSION: u16 = 1;
 /// Flag bits with a defined meaning; anything else is rejected.
 const FLAG_DEFLATE: u32 = 1;
+/// Bit offset of the update-codec id inside the flags word (v2+).
+const CODEC_SHIFT: u32 = 8;
+/// Mask of the update-codec id field inside the flags word (v2+).
+const CODEC_FLAG_MASK: u32 = 0xFF << CODEC_SHIFT;
 
 /// Frame header size: magic (4) + version (2) + kind (2) + flags (4) +
 /// uncompressed_len (8) + checksum (8).
@@ -112,6 +131,14 @@ fn bytes_to_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
 /// Encode an arbitrary byte payload into a Photon-Link frame (the `net`
 /// control plane's transport; model payloads go through [`encode_model`]).
 pub fn encode_bytes(kind: MsgKind, raw: &[u8], compress: bool) -> Result<Vec<u8>> {
+    encode_coded(kind, 0, raw, compress)
+}
+
+/// Encode a payload with an update-codec id in the frame flags (id 0 =
+/// raw payload, identical to [`encode_bytes`]; nonzero ids mark a
+/// [`crate::compress`] coded body and require [`decode_update`] /
+/// [`decode_coded`] on the far side).
+pub fn encode_coded(kind: MsgKind, codec_id: u8, raw: &[u8], compress: bool) -> Result<Vec<u8>> {
     let checksum = fnv1a(raw);
     let body: Vec<u8> = if compress {
         let mut enc =
@@ -121,11 +148,12 @@ pub fn encode_bytes(kind: MsgKind, raw: &[u8], compress: bool) -> Result<Vec<u8>
     } else {
         raw.to_vec()
     };
+    let flags = (compress as u32) | ((codec_id as u32) << CODEC_SHIFT);
     let mut out = Vec::with_capacity(body.len() + HEADER_BYTES);
     out.extend_from_slice(MAGIC);
     out.extend_from_slice(&VERSION.to_le_bytes());
     out.extend_from_slice(&(kind as u16).to_le_bytes());
-    out.extend_from_slice(&(compress as u32).to_le_bytes());
+    out.extend_from_slice(&flags.to_le_bytes());
     out.extend_from_slice(&(raw.len() as u64).to_le_bytes());
     out.extend_from_slice(&checksum.to_le_bytes());
     out.extend_from_slice(&body);
@@ -133,12 +161,34 @@ pub fn encode_bytes(kind: MsgKind, raw: &[u8], compress: bool) -> Result<Vec<u8>
 }
 
 /// Encode a model payload into a Photon-Link frame.
+///
+/// The payload is raw little-endian f32s (codec id 0 in the frame flags);
+/// `compress` applies the frame's *lossless* deflate. Lossy-coded
+/// pseudo-gradients go through [`encode_update`] instead, which stamps the
+/// codec id into the header so decoders can never misread a coded body as
+/// dense parameters.
+///
+/// # Example
+///
+/// ```
+/// use photon::link::{decode_model, encode_model, MsgKind};
+///
+/// let params = vec![0.25f32, -1.0, 3.5];
+/// let frame = encode_model(MsgKind::GlobalModel, &params, true).unwrap();
+/// let (kind, back) = decode_model(&frame).unwrap();
+/// assert_eq!(kind, MsgKind::GlobalModel);
+/// assert_eq!(back, params, "deflate is lossless");
+/// ```
 pub fn encode_model(kind: MsgKind, params: &[f32], compress: bool) -> Result<Vec<u8>> {
     encode_bytes(kind, f32s_as_bytes(params), compress)
 }
 
-/// Decode + verify a Photon-Link frame into its raw byte payload.
-pub fn decode_bytes(frame: &[u8]) -> Result<(MsgKind, Vec<u8>)> {
+/// Decode + verify a Photon-Link frame into `(kind, codec_id, raw bytes)`.
+/// The payload is checksum-verified and inflated but **not** codec-decoded
+/// — pass a nonzero-id payload to [`crate::compress::UpdateCodec::decode_delta`]
+/// (or use [`decode_update`], which does both and enforces the negotiated
+/// codec).
+pub fn decode_coded(frame: &[u8]) -> Result<(MsgKind, u8, Vec<u8>)> {
     // The header is 28 bytes; an empty payload is legal (e.g. a metrics
     // probe), so anything of at least HEADER_BYTES with the magic passes.
     if frame.len() < HEADER_BYTES || &frame[..4] != MAGIC {
@@ -156,9 +206,12 @@ pub fn decode_bytes(frame: &[u8]) -> Result<(MsgKind, Vec<u8>)> {
     }
     let kind = MsgKind::from_u16(u16::from_le_bytes([frame[6], frame[7]]))?;
     let flags = u32::from_le_bytes([frame[8], frame[9], frame[10], frame[11]]);
-    if flags & !FLAG_DEFLATE != 0 {
+    // v1 frames predate the codec field: those bits were reserved-zero.
+    let known = FLAG_DEFLATE | if version >= 2 { CODEC_FLAG_MASK } else { 0 };
+    if flags & !known != 0 {
         bail!("frame carries unknown flag bits {flags:#x} — corrupted or newer peer");
     }
+    let codec_id = ((flags & CODEC_FLAG_MASK) >> CODEC_SHIFT) as u8;
     let raw_len = u64::from_le_bytes(frame[12..20].try_into().unwrap()) as usize;
     let checksum = u64::from_le_bytes(frame[20..28].try_into().unwrap());
     let body = &frame[28..];
@@ -187,13 +240,89 @@ pub fn decode_bytes(frame: &[u8]) -> Result<(MsgKind, Vec<u8>)> {
     if fnv1a(&raw) != checksum {
         bail!("checksum mismatch — corrupted frame");
     }
+    Ok((kind, codec_id, raw))
+}
+
+/// Decode + verify a Photon-Link frame into its raw byte payload. Refuses
+/// codec-coded frames (nonzero codec id) — those must go through
+/// [`decode_update`] so the body is interpreted against the negotiated
+/// codec, never as plain bytes.
+pub fn decode_bytes(frame: &[u8]) -> Result<(MsgKind, Vec<u8>)> {
+    let (kind, codec_id, raw) = decode_coded(frame)?;
+    ensure!(
+        codec_id == 0,
+        "frame carries a codec-coded payload (codec id {codec_id}) — decode \
+         it with link::decode_update against the negotiated codec"
+    );
     Ok((kind, raw))
 }
 
 /// Decode + verify a Photon-Link frame carrying a model payload.
+///
+/// Counterpart of [`encode_model`]: accepts only codec-id-0 frames (raw
+/// f32 payloads, deflated or not) and rejects lossy-coded frames with an
+/// explicit error — the codec-id header byte routes every frame to exactly
+/// one decoder, so corruption flips are refused rather than mis-decoded.
 pub fn decode_model(frame: &[u8]) -> Result<(MsgKind, Vec<f32>)> {
     let (kind, raw) = decode_bytes(frame)?;
     Ok((kind, bytes_to_f32s(&raw)?))
+}
+
+/// Encode a pseudo-gradient (or any dense f32 update vector) through an
+/// update codec into a Photon-Link frame. Lossless codecs emit a codec-id-0
+/// frame bit-identical to [`encode_model`] (`deflate` forces the frame's
+/// deflate flag); lossy codecs emit their coded body with the codec id
+/// stamped into the frame flags. `seed` drives stochastic rounding and
+/// `residual` is the caller's error-feedback state (see
+/// [`crate::compress`]).
+pub fn encode_update(
+    kind: MsgKind,
+    dense: &[f32],
+    codec: &UpdateCodec,
+    seed: u64,
+    residual: &mut Vec<f32>,
+    compress: bool,
+) -> Result<Vec<u8>> {
+    match codec.encode_delta(dense, seed, residual)? {
+        None => encode_model(
+            kind,
+            dense,
+            compress || matches!(codec, UpdateCodec::Deflate),
+        ),
+        Some(body) => encode_coded(kind, codec.wire_id(), &body, compress),
+    }
+}
+
+/// Decode a frame produced by [`encode_update`] against the *negotiated*
+/// codec. The frame's codec id must equal the negotiated codec's wire id
+/// exactly — a dense frame where a coded one was negotiated (or vice
+/// versa, or any corrupted codec-id byte) is an error, never a silent
+/// mis-decode — and the decoded vector must have exactly `expect_len`
+/// elements.
+pub fn decode_update(
+    frame: &[u8],
+    codec: &UpdateCodec,
+    expect_len: usize,
+) -> Result<(MsgKind, Vec<f32>)> {
+    let (kind, codec_id, raw) = decode_coded(frame)?;
+    ensure!(
+        codec_id == codec.wire_id(),
+        "frame carries codec id {codec_id}, negotiated codec is {} (id {}) — \
+         corrupted header or codec renegotiation drift",
+        codec.label(),
+        codec.wire_id()
+    );
+    if codec_id == 0 {
+        let dense = bytes_to_f32s(&raw)?;
+        ensure!(
+            dense.len() == expect_len,
+            "dense update has {} params, expected {expect_len}",
+            dense.len()
+        );
+        Ok((kind, dense))
+    } else {
+        Ok((kind, codec.decode_delta(&raw, expect_len)?))
+    }
 }
 
 /// Bytes one round moves through the link for `k` clients with an
@@ -201,6 +330,22 @@ pub fn decode_model(frame: &[u8]) -> Result<(MsgKind, Vec<f32>)> {
 /// the paper's Table-style comm numbers use raw f32 payloads).
 pub fn round_bytes(n_params: usize, k: usize) -> u64 {
     2 * (n_params as u64) * 4 * (k as u64)
+}
+
+/// Pre-deflate framed size of a payload body: body + one frame header.
+/// The single source of truth for the transit accounting both federation
+/// planes fold into `RoundRecord::comm_bytes_wire` — the in-process
+/// transit pass, the server's decode-then-fold, and `commit_round`'s
+/// dense-frame substitution all price frames through here, so the
+/// bit-parity contract cannot drift between call sites.
+pub fn framed_bytes(body_len: usize) -> u64 {
+    (body_len + HEADER_BYTES) as u64
+}
+
+/// Framed size of one dense f32 payload of `n_params` values
+/// (`4·n_params` + one header) — see [`framed_bytes`].
+pub fn dense_frame_bytes(n_params: usize) -> u64 {
+    framed_bytes(n_params * 4)
 }
 
 #[cfg(test)]
@@ -295,9 +440,84 @@ mod tests {
     #[test]
     fn unknown_flag_bits_rejected() {
         let mut f = encode_model(MsgKind::GlobalModel, &payload(4), false).unwrap();
-        f[9] = 0x80; // a flag bit this build does not define
+        f[10] = 0x01; // flags bits 16–23: undefined in every version
         let err = decode_model(&f).unwrap_err().to_string();
         assert!(err.contains("flag"), "{err}");
+        // In a v1 frame even the codec field (bits 8–15) is undefined.
+        let mut old = encode_model(MsgKind::GlobalModel, &payload(4), false).unwrap();
+        old[4] = 1;
+        old[5] = 0;
+        assert!(decode_model(&old).is_ok(), "v1 frames still decode");
+        old[9] = 0x02;
+        let err = decode_model(&old).unwrap_err().to_string();
+        assert!(err.contains("flag"), "{err}");
+    }
+
+    #[test]
+    fn codec_frames_are_refused_by_the_raw_decoders() {
+        // A frame whose flags carry a codec id must never decode as plain
+        // bytes/model params — the id routes it to decode_update.
+        let f = encode_coded(MsgKind::ClientUpdate, 2, &[1, 2, 3, 4], false).unwrap();
+        let err = decode_model(&f).unwrap_err().to_string();
+        assert!(err.contains("codec"), "{err}");
+        assert!(decode_bytes(&f).is_err());
+        let (kind, id, raw) = decode_coded(&f).unwrap();
+        assert_eq!((kind, id), (MsgKind::ClientUpdate, 2));
+        assert_eq!(raw, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn encode_update_roundtrips_every_codec() {
+        use crate::compress::UpdateCodec;
+        let dense = payload(777);
+        for codec in [
+            UpdateCodec::None,
+            UpdateCodec::Deflate,
+            UpdateCodec::Q8 { block: 64 },
+            UpdateCodec::Q4 { block: 64 },
+            UpdateCodec::TopK { keep_permille: 100 },
+        ] {
+            let mut residual = Vec::new();
+            let f =
+                encode_update(MsgKind::ClientUpdate, &dense, &codec, 5, &mut residual, true)
+                    .unwrap();
+            let (kind, back) = decode_update(&f, &codec, dense.len()).unwrap();
+            assert_eq!(kind, MsgKind::ClientUpdate);
+            assert_eq!(back.len(), dense.len());
+            if !codec.is_lossy() {
+                assert_eq!(back, dense, "{} must be lossless", codec.label());
+            }
+            // Negotiation is strict: decoding against a different codec
+            // fails even when the frame itself is intact.
+            let other = if codec.is_lossy() {
+                UpdateCodec::None
+            } else {
+                UpdateCodec::Q8 { block: 64 }
+            };
+            assert!(decode_update(&f, &other, dense.len()).is_err());
+        }
+    }
+
+    #[test]
+    fn corrupted_codec_id_byte_never_misdecodes() {
+        use crate::compress::UpdateCodec;
+        let codec = UpdateCodec::Q8 { block: 2 };
+        // n = 15, block = 2 makes the q8 body exactly 4·n bytes — the one
+        // shape where a flipped codec id *could* alias a dense f32 payload
+        // of the right length if the id were not enforced.
+        let dense = payload(15);
+        let mut residual = Vec::new();
+        let f = encode_update(MsgKind::ClientUpdate, &dense, &codec, 5, &mut residual, false)
+            .unwrap();
+        assert_eq!(f.len() - HEADER_BYTES, 60);
+        for wrong in [0u8, 1, 3, 4, 0xFF] {
+            let mut bad = f.clone();
+            bad[9] = wrong; // flags bits 8–15 = the codec id
+            assert!(
+                decode_update(&bad, &codec, 15).is_err(),
+                "codec id {wrong} must be rejected, not mis-decoded"
+            );
+        }
     }
 
     #[test]

@@ -13,8 +13,9 @@
 //!              [--keep-opt] [--dropout p] [--straggler p]
 //!              [--ckpt-dir DIR] [--resume] [--lr-max X] [--fleet-hetero]
 //!              [--workers N|auto] [--parallel-dispatch]
+//!              [--codec none|deflate|q8[:block]|q4[:block]|topk[:permille]]
 //! photon serve [same training flags] [--bind 0.0.0.0:7070] [--min-workers K]
-//!              [--deadline-secs F] [--no-compress]
+//!              [--deadline-secs F] [--no-compress] [--codec q8]
 //!              run the Aggregator as a TCP service (deployment plane)
 //! photon worker --connect HOST:7070 [--name NAME]
 //!              run one LLM Node worker against a remote Aggregator
@@ -26,6 +27,7 @@ use anyhow::{bail, Result};
 
 use photon::cluster::faults::FaultPlan;
 use photon::cluster::hardware::FleetSpec;
+use photon::compress::UpdateCodec;
 use photon::config::{CorpusKind, ExecConfig, ExperimentConfig, OptStatePolicy};
 use photon::coordinator::Federation;
 use photon::exp;
@@ -43,6 +45,8 @@ const SPEC: Spec = Spec {
         "size", "taus", "policy", "deadline", "slowdown", "mfu",
         // deployment plane (serve / worker / exp distributed)
         "bind", "connect", "name", "deadline-secs", "min-workers", "fleet",
+        // update-codec plane (train / serve / exp comm|distributed|wallclock)
+        "codec",
     ],
     flags: &[
         "fast", "paper-scale", "hetero", "mc4", "keep-opt", "resume",
@@ -175,6 +179,7 @@ fn train_config(args: &Args, label_prefix: &str) -> Result<ExperimentConfig> {
             workers: args.get_count_or_auto("workers", 1)?,
             serialize_dispatch: !args.flag("parallel-dispatch"),
         },
+        codec: UpdateCodec::parse(&args.get_or("codec", "none"))?,
     })
 }
 
@@ -203,8 +208,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         w => w.to_string(),
     };
     println!(
-        "training {model}: P={p} K={k} rounds={rounds} τ={steps} outer={:?} workers={workers}",
-        fed.cfg.outer
+        "training {model}: P={p} K={k} rounds={rounds} τ={steps} outer={:?} \
+         workers={workers} codec={}",
+        fed.cfg.outer,
+        fed.cfg.codec.label(),
     );
     while fed.next_round < fed.cfg.rounds {
         let r = fed.run_round()?;

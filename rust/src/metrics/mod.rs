@@ -42,8 +42,15 @@ pub struct RoundRecord {
     pub client_cosine_mean: f64,
     /// Clients that actually contributed (after faults).
     pub participated: usize,
-    /// Photon-Link bytes moved this round (downlink + uplink).
+    /// Dense-estimate Photon-Link bytes this round (downlink + uplink,
+    /// raw f32 accounting — the paper's Table-style comm numbers).
     pub comm_bytes: u64,
+    /// Actual framed transit bytes this round under the active update
+    /// codec (`compress`): per participating client, one dense broadcast
+    /// frame down plus the measured encoded update frame up (pre-deflate).
+    /// Equals `comm_bytes` plus two frame headers per client when
+    /// `codec = none`; shrinks with lossy codecs.
+    pub comm_bytes_wire: u64,
     pub wall_secs: f64,
 }
 
@@ -76,6 +83,7 @@ impl RoundRecord {
             client_cosine_mean,
             participated,
             comm_bytes,
+            comm_bytes_wire,
             wall_secs: _,
         } = self;
         *round == other.round
@@ -96,6 +104,7 @@ impl RoundRecord {
             && client_cosine_mean.to_bits() == other.client_cosine_mean.to_bits()
             && *participated == other.participated
             && *comm_bytes == other.comm_bytes
+            && *comm_bytes_wire == other.comm_bytes_wire
     }
 }
 
@@ -105,12 +114,13 @@ pub struct MetricsLog {
     pub rounds: Vec<RoundRecord>,
 }
 
-pub const CSV_HEADER: [&str; 18] = [
+pub const CSV_HEADER: [&str; 19] = [
     "round", "server_ppl", "server_nll", "client_loss_mean", "client_loss_std",
     "client_ppl_mean", "global_model_norm", "client_model_norm_mean",
     "client_avg_norm", "pseudo_grad_norm", "step_grad_norm_mean",
     "applied_update_norm_mean", "act_norm_mean", "momentum_norm",
-    "client_cosine_mean", "participated", "comm_bytes", "wall_secs",
+    "client_cosine_mean", "participated", "comm_bytes", "comm_bytes_wire",
+    "wall_secs",
 ];
 
 impl MetricsLog {
@@ -131,7 +141,8 @@ impl MetricsLog {
                 r.client_model_norm_mean, r.client_avg_norm, r.pseudo_grad_norm,
                 r.step_grad_norm_mean, r.applied_update_norm_mean,
                 r.act_norm_mean, r.momentum_norm, r.client_cosine_mean,
-                r.participated as f64, r.comm_bytes as f64, r.wall_secs,
+                r.participated as f64, r.comm_bytes as f64,
+                r.comm_bytes_wire as f64, r.wall_secs,
             ])?;
         }
         w.finish()

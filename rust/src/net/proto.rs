@@ -30,19 +30,29 @@
 //! The version handshake is two-layered: the link frame itself rejects
 //! newer wire versions, and `Join.proto` / `JoinAck.proto` must equal
 //! [`PROTO_VERSION`] or the session is refused with a clear error.
+//!
+//! The update codec is negotiated once per session: [`TaskSpec::codec`]
+//! names the registry entry (`compress::UpdateCodec`), and from then on
+//! every `UpdatePush` must match its shape — dense params for the
+//! lossless codecs, a coded delta body for the lossy ones. The server
+//! treats any mismatch as a malformed push (cut, not crash). The full
+//! byte-level spec lives in `docs/PROTOCOL.md`.
 
 use std::io::{Read, Write};
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::ckpt::{ClientCkpt, Dec, Enc};
+use crate::compress::UpdateCodec;
 use crate::config::{CorpusKind, OptStatePolicy};
 use crate::coordinator::ClientUpdate;
 use crate::link::{self, MsgKind};
 use crate::optim::schedule::CosineSchedule;
 
 /// Control-protocol version (independent of the link wire version).
-pub const PROTO_VERSION: u16 = 1;
+/// v2: the task spec negotiates an update codec and `UpdatePush` bodies
+/// may carry a lossy-coded pseudo-delta instead of dense params.
+pub const PROTO_VERSION: u16 = 2;
 
 /// Refuse to read frames larger than this from a socket (corruption guard;
 /// generous enough for a 7B-analogue f32 payload plus KeepOpt moments).
@@ -75,6 +85,11 @@ pub struct TaskSpec {
     /// Whether round payloads (model broadcast, update pushes) are
     /// deflate-compressed on the wire.
     pub compress: bool,
+    /// Negotiated pseudo-gradient update codec (`compress` registry).
+    /// Lossy codecs make every `UpdatePush` ship a coded delta body; the
+    /// server decodes-then-folds, so records stay comparable with the
+    /// in-process run.
+    pub codec: UpdateCodec,
 }
 
 /// Server → worker: admission granted.
@@ -115,8 +130,17 @@ pub struct RoundAssign {
 pub struct UpdatePush {
     pub session: u64,
     pub round: u64,
+    /// Metrics + (for the lossless codecs) dense params. When `body` is
+    /// `Some`, `update.params` is empty on the wire and the server
+    /// reconstructs it by decoding the coded delta against its global
+    /// model (decode-then-fold).
     pub update: ClientUpdate,
-    /// The client's advanced state (cursors + KeepOpt) after the round.
+    /// Lossy-coded pseudo-delta (`compress::UpdateCodec::encode_delta`
+    /// output, self-describing codec-id header). `None` ⇔ the negotiated
+    /// codec is lossless.
+    pub body: Option<Vec<u8>>,
+    /// The client's advanced state (cursors + KeepOpt + codec residual)
+    /// after the round.
     pub state: ClientCkpt,
 }
 
@@ -205,6 +229,9 @@ fn enc_spec(e: &mut Enc, s: &TaskSpec) {
         e.u32(*i);
     }
     e.u8(s.compress as u8);
+    let (tag, param) = s.codec.tag_param();
+    e.u8(tag);
+    e.u32(param);
 }
 
 fn dec_spec(d: &mut Dec) -> Result<TaskSpec> {
@@ -230,6 +257,11 @@ fn dec_spec(d: &mut Dec) -> Result<TaskSpec> {
         islands.push(d.u32()?);
     }
     let compress = d.u8()? != 0;
+    let codec = {
+        let tag = d.u8()?;
+        let param = d.u32()?;
+        UpdateCodec::from_tag_param(tag, param)?
+    };
     Ok(TaskSpec {
         model,
         n_params,
@@ -240,6 +272,7 @@ fn dec_spec(d: &mut Dec) -> Result<TaskSpec> {
         opt_state,
         islands,
         compress,
+        codec,
     })
 }
 
@@ -268,6 +301,9 @@ fn dec_update(d: &mut Dec) -> Result<ClientUpdate> {
         model_norm: d.f64()?,
         steps_done: d.u64()?,
         params: d.f32s()?,
+        // Transit size is not a wire field: the receiving server measures
+        // it from the frame it actually got (never trusts the sender).
+        wire_bytes: 0,
     })
 }
 
@@ -317,6 +353,13 @@ impl Msg {
                 e.u64(m.round);
                 enc_update(&mut e, &m.update);
                 e.client(&m.state);
+                match &m.body {
+                    None => e.u8(0),
+                    Some(b) => {
+                        e.u8(1);
+                        e.bytes(b);
+                    }
+                }
             }
             Msg::Heartbeat(m) => {
                 e.u64(m.session);
@@ -366,12 +409,18 @@ impl Msg {
                 let global = d.f32s()?;
                 Msg::RoundAssign(RoundAssign { session, round, seq_base, tasks, global })
             }
-            MsgKind::UpdatePush => Msg::UpdatePush(UpdatePush {
-                session: d.u64()?,
-                round: d.u64()?,
-                update: dec_update(&mut d)?,
-                state: d.client()?,
-            }),
+            MsgKind::UpdatePush => {
+                let session = d.u64()?;
+                let round = d.u64()?;
+                let update = dec_update(&mut d)?;
+                let state = d.client()?;
+                let body = match d.u8()? {
+                    0 => None,
+                    1 => Some(d.bytes()?),
+                    t => bail!("unknown update-payload tag {t}"),
+                };
+                Msg::UpdatePush(UpdatePush { session, round, update, body, state })
+            }
             MsgKind::Heartbeat => {
                 Msg::Heartbeat(Heartbeat { session: d.u64()?, round: d.u64()? })
             }
@@ -427,6 +476,7 @@ mod tests {
                 mix_state: [1, 2, 3, 4],
                 bucket_states: vec![([5, 6, 7, 8], 9), ([10, 11, 12, 13], 14)],
             }],
+            residual: vec![0.125, -2.0],
         }
     }
 
@@ -446,6 +496,7 @@ mod tests {
             opt_state: OptStatePolicy::KeepOpt,
             islands: vec![1, 1, 2, 1, 1, 3, 1, 1],
             compress: true,
+            codec: UpdateCodec::Q8 { block: 128 },
         }
     }
 
@@ -504,9 +555,8 @@ mod tests {
         }
     }
 
-    #[test]
-    fn update_push_roundtrip_is_bit_exact() {
-        let u = ClientUpdate {
+    fn toy_update() -> ClientUpdate {
+        ClientUpdate {
             client_id: 6,
             params: vec![1.0, -2.5, 3.25, f32::MIN_POSITIVE],
             n_samples: 160.0,
@@ -517,11 +567,18 @@ mod tests {
             act_norm_mean: 12.0,
             model_norm: 99.5,
             steps_done: 40,
-        };
+            wire_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn update_push_roundtrip_is_bit_exact() {
+        let u = toy_update();
         let msg = Msg::UpdatePush(UpdatePush {
             session: 1,
             round: 0,
             update: u.clone(),
+            body: None,
             state: toy_state(),
         });
         match roundtrip(&msg, true) {
@@ -530,8 +587,35 @@ mod tests {
                 assert_eq!(b.update.n_samples.to_bits(), u.n_samples.to_bits());
                 assert_eq!(b.update.loss_mean.to_bits(), u.loss_mean.to_bits());
                 assert_eq!(b.state, toy_state());
+                assert!(b.body.is_none());
             }
             other => panic!("wrong kind {other:?}"),
+        }
+    }
+
+    #[test]
+    fn coded_update_push_roundtrips_byte_exact() {
+        // A lossy-codec push: params empty on the wire, the coded delta
+        // travels as an opaque body the server decodes against its global.
+        let mut u = toy_update();
+        u.params = Vec::new();
+        let coded: Vec<u8> = (0..97u8).collect();
+        let msg = Msg::UpdatePush(UpdatePush {
+            session: 3,
+            round: 2,
+            update: u,
+            body: Some(coded.clone()),
+            state: toy_state(),
+        });
+        for compress in [false, true] {
+            match roundtrip(&msg, compress) {
+                Msg::UpdatePush(b) => {
+                    assert!(b.update.params.is_empty());
+                    assert_eq!(b.body.as_deref(), Some(coded.as_slice()));
+                    assert_eq!(b.state, toy_state());
+                }
+                other => panic!("wrong kind {other:?}"),
+            }
         }
     }
 

@@ -147,6 +147,7 @@ impl Server {
             opt_state: cfg.opt_state,
             islands: islands.iter().map(|&i| i as u32).collect(),
             compress: self.opts.compress,
+            codec: cfg.codec,
         }
     }
 
@@ -335,9 +336,38 @@ impl Server {
                         if from.is_none() || owner_of.get(&client) != from.as_ref() {
                             continue;
                         }
-                        if p.update.params.len() != self.fed.global.len()
-                            || self.fed.check_client_state(client, &p.state).is_err()
+                        // Decode-then-fold: rebuild dense params from the
+                        // negotiated update codec. The push must match the
+                        // negotiation's shape exactly — a dense push where
+                        // a coded one was negotiated (or vice versa), a
+                        // codec-id mismatch, or any structural defect in
+                        // the coded body makes this None.
+                        let codec = self.fed.cfg.codec;
+                        let mut update = p.update;
+                        let reconstructed: Option<u64> = match (codec.is_lossy(), &p.body)
                         {
+                            (false, None) => {
+                                Some(crate::link::dense_frame_bytes(update.params.len()))
+                            }
+                            (true, Some(body)) if update.params.is_empty() => {
+                                match crate::compress::decode_transit(
+                                    &codec,
+                                    &self.fed.global,
+                                    body,
+                                ) {
+                                    Ok(params) => {
+                                        update.params = params;
+                                        Some(crate::link::framed_bytes(body.len()))
+                                    }
+                                    Err(_) => None,
+                                }
+                            }
+                            _ => None,
+                        };
+                        let ok = reconstructed.is_some()
+                            && update.params.len() == self.fed.global.len()
+                            && self.fed.check_client_state(client, &p.state).is_ok();
+                        if !ok {
                             // Malformed push from the owning worker: the
                             // update cannot be folded — cut the client
                             // through the dropped path, don't kill the run.
@@ -346,8 +376,9 @@ impl Server {
                             }
                             continue;
                         }
+                        update.wire_bytes = reconstructed.unwrap_or(0);
                         if pending.remove(&client) {
-                            arrived.insert(slot_of[&client], (p.update, p.state));
+                            arrived.insert(slot_of[&client], (update, p.state));
                         }
                     }
                     // Heartbeats (dispatch acks), stale-round or

@@ -137,7 +137,7 @@ pub fn run_worker(addr: &str, opts: WorkerOpts) -> Result<WorkerReport> {
                     )?;
                     node.restore_state(&task.state)
                         .with_context(|| format!("restoring client {}", task.client))?;
-                    let update = node
+                    let mut update = node
                         .run_local_round(
                             &model,
                             &assign.global,
@@ -149,13 +149,43 @@ pub fn run_worker(addr: &str, opts: WorkerOpts) -> Result<WorkerReport> {
                         .with_context(|| {
                             format!("client {} round {}", task.client, assign.round)
                         })?;
+                    // Apply the negotiated update codec (no-op body for the
+                    // lossless codecs). Seeded per (round, client) from the
+                    // task spec, so the encode is byte-identical to what
+                    // the in-process federation computes — the parity
+                    // invariant extends to lossy transport. Must run before
+                    // `state()` so the error-feedback residual ships back.
+                    let seed = crate::compress::transit_seed(
+                        spec.seed,
+                        assign.round,
+                        task.client,
+                    );
+                    let transit = crate::compress::encode_transit(
+                        &spec.codec,
+                        &assign.global,
+                        &update.params,
+                        seed,
+                        &mut node.residual,
+                    )
+                    .with_context(|| {
+                        format!("encoding client {} update", task.client)
+                    })?;
                     let state = node.state();
+                    let body = match transit.body {
+                        Some(b) => {
+                            // Coded push: the dense params stay home.
+                            update.params = Vec::new();
+                            Some(b)
+                        }
+                        None => None,
+                    };
                     proto::write_msg(
                         &mut stream,
                         &Msg::UpdatePush(UpdatePush {
                             session: ack.session,
                             round: assign.round,
                             update,
+                            body,
                             state,
                         }),
                         spec.compress,

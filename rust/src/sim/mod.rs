@@ -138,6 +138,25 @@ impl SimConfig {
             server_agg_secs: 0.0,
         }
     }
+
+    /// Asymmetric payloads: dense broadcast down, (possibly codec-shrunk)
+    /// update up. `Federation::simulate_wallclock` and the `wallclock`
+    /// experiment use this to price uploads from the update codec's
+    /// **actual encoded bytes**
+    /// (`compress::UpdateCodec::encoded_body_bytes`) instead of the dense
+    /// `link::round_bytes` estimate.
+    pub fn asymmetric(
+        down_bytes: u64,
+        up_bytes: u64,
+        link: Link,
+        policy: AggregationPolicy,
+    ) -> SimConfig {
+        SimConfig {
+            payload_down_bytes: down_bytes,
+            payload_up_bytes: up_bytes,
+            ..SimConfig::new(0, link, policy)
+        }
+    }
 }
 
 // --- event engine ----------------------------------------------------------
@@ -621,6 +640,17 @@ mod tests {
             "overlap"
         );
         assert!(AggregationPolicy::parse("async", 1.5).is_err());
+    }
+
+    #[test]
+    fn asymmetric_payloads_price_down_and_up_separately() {
+        let plan = plan1(1, 10, 2);
+        let cfg =
+            SimConfig::asymmetric(1000, 250, link(1.0, 0.1), AggregationPolicy::Sync);
+        let rep = Simulator::uniform(&plan, 0.5, cfg).run();
+        assert_eq!(rep.rows[0].bytes_down, 2 * 1000);
+        assert_eq!(rep.rows[0].bytes_up, 2 * 250);
+        assert_eq!(cfg.straggler_slowdown, 4.0, "defaults inherited from new()");
     }
 
     #[test]

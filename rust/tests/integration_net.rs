@@ -12,6 +12,7 @@ use std::net::TcpStream;
 use std::sync::Arc;
 
 use photon::cluster::faults::FaultPlan;
+use photon::compress::UpdateCodec;
 use photon::config::ExperimentConfig;
 use photon::coordinator::Federation;
 use photon::metrics::RoundRecord;
@@ -96,6 +97,76 @@ fn loopback_fleet_of_4_matches_in_process_bitwise() {
     let pushed: u64 = report.workers.iter().map(|w| w.updates_pushed).sum();
     let expected: usize = reference.iter().map(|r| r.participated).sum();
     assert_eq!(pushed as usize, expected);
+}
+
+#[test]
+fn loopback_fleet_with_q8_codec_negotiated_matches_in_process() {
+    // ISSUE 4 acceptance: the distributed parity contract survives a lossy
+    // update codec. Workers encode each pseudo-delta (stochastic rounding
+    // seeded per (round, client) from the task spec), the server
+    // decodes-then-folds; the in-process run replays the identical
+    // transform, so records (incl. the new wire-byte accounting) and the
+    // global model must stay bit-equal.
+    let mut cfg = base_cfg();
+    cfg.codec = UpdateCodec::Q8 { block: 64 };
+    let mut fed = Federation::with_model(cfg.clone(), model()).unwrap();
+    let reference = fed.run().unwrap();
+
+    let report = run_loopback(
+        cfg,
+        model(),
+        FleetOpts { workers: 3, compress: true, ..FleetOpts::default() },
+    )
+    .unwrap();
+    assert!(report.worker_errors.is_empty(), "{:?}", report.worker_errors);
+    assert!(report.cuts.is_empty(), "no faults beyond the plan: {:?}", report.cuts);
+    assert_parity(&reference, &report.records, "q8 fleet");
+    assert_eq!(fed.global, report.global, "global model must be bit-identical");
+    // The codec actually shrank the wire: coded update frames are ~4×
+    // smaller than dense, so the measured accounting must sit well below
+    // the dense estimate on every participating round.
+    for r in &reference {
+        if r.participated > 0 {
+            assert!(
+                r.comm_bytes_wire < r.comm_bytes,
+                "round {}: wire {} !< dense {}",
+                r.round,
+                r.comm_bytes_wire,
+                r.comm_bytes
+            );
+        }
+    }
+}
+
+#[test]
+fn topk_codec_residual_survives_checkpoint_resume() {
+    // Error-feedback state is client state: a run interrupted mid-stream
+    // must resume with its residuals intact, sample- and codec-exact.
+    let dir =
+        std::env::temp_dir().join(format!("photon_net_topk_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut cfg = base_cfg();
+    cfg.rounds = 4;
+    cfg.codec = UpdateCodec::TopK { keep_permille: 100 };
+
+    let mut fed = Federation::with_model(cfg.clone(), model()).unwrap();
+    let reference = fed.run().unwrap();
+
+    // Run 2 rounds, checkpointing; then resume a fresh federation.
+    let mut half_cfg = cfg.clone();
+    half_cfg.rounds = 2;
+    let mut half = Federation::with_model(half_cfg, model()).unwrap();
+    half.ckpt_dir = Some(dir.clone());
+    half.run().unwrap();
+
+    let mut resumed = Federation::with_model(cfg, model()).unwrap();
+    resumed.ckpt_dir = Some(dir.clone());
+    assert!(resumed.try_resume_from(&dir).unwrap(), "checkpoint must exist");
+    assert_eq!(resumed.next_round, 2);
+    let tail = resumed.run().unwrap();
+    assert_parity(&reference[2..], &tail, "topk resume");
+    assert_eq!(fed.global, resumed.global, "resume must be codec-state-exact");
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]

@@ -4,6 +4,7 @@
 
 use photon::ckpt::{Checkpoint, ClientCkpt};
 use photon::cluster::batchsize::find_micro_batch_with;
+use photon::compress::UpdateCodec;
 use photon::cluster::island::partial_aggregate;
 use photon::coordinator::{ClientSampler, RoundExec};
 use photon::data::corpus::SyntheticCorpus;
@@ -246,6 +247,13 @@ fn prop_checkpoint_roundtrip() {
                         opt_m: rand_vec(rng, n, 1.0),
                         opt_v: rand_vec(rng, n, 1.0),
                         local_step: rng.below(1000) as i64,
+                        // Error-feedback residual: empty (no lossy codec)
+                        // or one entry per model param.
+                        residual: if rng.bool(0.5) {
+                            Vec::new()
+                        } else {
+                            rand_vec(rng, n, 0.5)
+                        },
                         // 1–3 cursors: multi-island clients checkpoint one
                         // per island.
                         cursors: (0..1 + rng.usize_below(3))
@@ -539,6 +547,194 @@ fn prop_rng_choose_k_uniformity() {
             let rel = (c as f64 - expected as f64).abs() / expected as f64;
             if rel > 0.15 {
                 return Err(format!("index {i}: count {c} vs expected {expected}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// --- update-codec properties (compress module) -----------------------------
+
+#[test]
+fn prop_quant_roundtrip_error_bounded_per_block() {
+    // q8/q4 satellite: for every block, the per-element reconstruction
+    // error is bounded by that block's quantization step (max|x|/levels),
+    // regardless of block size, payload shape, or rounding seed.
+    check("quant_error_bound", 0xC8, 40, |rng| {
+        let n = 1 + rng.usize_below(3000);
+        let block = 1 + rng.usize_below(512);
+        let scale = 0.01 + rng.f32() * 10.0;
+        let delta = rand_vec(rng, n, scale);
+        let seed = rng.next_u64();
+        for (codec, levels) in [
+            (UpdateCodec::Q8 { block: block as u32 }, 127.0f64),
+            (UpdateCodec::Q4 { block: block as u32 }, 7.0f64),
+        ] {
+            let mut residual = Vec::new();
+            let body = codec
+                .encode_delta(&delta, seed, &mut residual)
+                .map_err(|e| e.to_string())?
+                .ok_or("lossy codec must produce a body")?;
+            if body.len() as u64 != codec.encoded_body_bytes(n) {
+                return Err(format!("{}: body size drifted", codec.label()));
+            }
+            let back = codec.decode_delta(&body, n).map_err(|e| e.to_string())?;
+            if back.len() != n {
+                return Err(format!("{}: wrong length", codec.label()));
+            }
+            for (bi, (dc, bc)) in delta.chunks(block).zip(back.chunks(block)).enumerate()
+            {
+                let max = dc.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+                let step = max as f64 / levels;
+                for (a, b) in dc.iter().zip(bc) {
+                    let err = (*a as f64 - *b as f64).abs();
+                    // 1.001: the f32-rounded scale can undershoot the exact
+                    // max/levels by one ulp.
+                    if err > step * 1.001 + 1e-12 {
+                        return Err(format!(
+                            "{} block {bi}: error {err} > step {step}",
+                            codec.label()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_topk_error_feedback_reconstructs_dense_sum() {
+    // topk satellite: over T rounds, the transmitted (sparse) stream plus
+    // the final residual reconstructs the dense sum of all deltas — error
+    // feedback loses nothing, it only defers.
+    check("topk_error_feedback", 0xC9, 30, |rng| {
+        let n = 8 + rng.usize_below(500);
+        let codec = UpdateCodec::TopK { keep_permille: 1 + rng.below(400) as u32 };
+        let rounds = 2 + rng.usize_below(10);
+        let mut residual: Vec<f32> = Vec::new();
+        let mut sum_delta = vec![0.0f64; n];
+        let mut sum_sent = vec![0.0f64; n];
+        for _ in 0..rounds {
+            let delta = rand_vec(rng, n, 1.0);
+            let body = codec
+                .encode_delta(&delta, 0, &mut residual)
+                .map_err(|e| e.to_string())?
+                .ok_or("topk must produce a body")?;
+            let sent = codec.decode_delta(&body, n).map_err(|e| e.to_string())?;
+            for i in 0..n {
+                sum_delta[i] += delta[i] as f64;
+                sum_sent[i] += sent[i] as f64;
+            }
+        }
+        if residual.len() != n {
+            return Err("residual must be dense after first encode".into());
+        }
+        for i in 0..n {
+            // sent-so-far + withheld == sum of deltas, up to the f32
+            // rounding of the per-round `delta + residual` addition.
+            let err = (sum_sent[i] + residual[i] as f64 - sum_delta[i]).abs();
+            let tol = 1e-5 * rounds as f64 * (1.0 + sum_delta[i].abs());
+            if err > tol {
+                return Err(format!("coord {i}: |sent+residual-sum| = {err} > {tol}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_corrupted_codec_id_rejected_never_misdecoded() {
+    // Codec-id satellite: flip the codec-id byte anywhere it lives — the
+    // head of the coded body or the link frame's flags field — and the
+    // decode must fail; silently returning a different vector is the one
+    // unacceptable outcome.
+    check("codec_id_corruption", 0xCA, 40, |rng| {
+        let n = 1 + rng.usize_below(800);
+        let codecs = [
+            UpdateCodec::Q8 { block: 1 + rng.below(300) as u32 },
+            UpdateCodec::Q4 { block: 1 + rng.below(300) as u32 },
+            UpdateCodec::TopK { keep_permille: 1 + rng.below(1000) as u32 },
+        ];
+        let codec = codecs[rng.usize_below(codecs.len())];
+        let delta = rand_vec(rng, n, 2.0);
+        let mut residual = Vec::new();
+        let seed = rng.next_u64();
+        let body = codec
+            .encode_delta(&delta, seed, &mut residual)
+            .map_err(|e| e.to_string())?
+            .ok_or("lossy codec must produce a body")?;
+        // Body-level id byte.
+        let mut bad = body.clone();
+        let flip = 1 + rng.below(255) as u8;
+        bad[0] ^= flip;
+        if codec.decode_delta(&bad, n).is_ok() {
+            return Err(format!(
+                "{}: body id byte ^ {flip:#x} decoded anyway",
+                codec.label()
+            ));
+        }
+        // Frame-level codec field (flags bits 8–15, header byte 9): the
+        // frame checksum covers only the payload, so this corruption
+        // reaches the codec check — which must refuse it.
+        let mut residual2 = Vec::new();
+        let frame = photon::link::encode_update(
+            photon::link::MsgKind::ClientUpdate,
+            &delta,
+            &codec,
+            seed,
+            &mut residual2,
+            rng.bool(0.5),
+        )
+        .map_err(|e| e.to_string())?;
+        let mut bad_frame = frame.clone();
+        bad_frame[9] ^= flip;
+        if photon::link::decode_update(&bad_frame, &codec, n).is_ok() {
+            return Err(format!(
+                "{}: frame codec field ^ {flip:#x} decoded anyway",
+                codec.label()
+            ));
+        }
+        // And the intact frame still decodes.
+        photon::link::decode_update(&frame, &codec, n).map_err(|e| e.to_string())?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_codec_transit_is_deterministic_and_parity_safe() {
+    // The deployment-plane parity prerequisite: encode_transit is a pure
+    // function of (codec, global, params, seed, residual) — two sides
+    // starting from identical state produce byte-identical bodies and
+    // identical post-encode residuals.
+    check("codec_transit_determinism", 0xCB, 30, |rng| {
+        let n = 1 + rng.usize_below(1000);
+        let global = rand_vec(rng, n, 1.0);
+        let params = rand_vec(rng, n, 1.0);
+        let seed = rng.next_u64();
+        let codecs = [
+            UpdateCodec::None,
+            UpdateCodec::Deflate,
+            UpdateCodec::Q8 { block: 64 },
+            UpdateCodec::Q4 { block: 64 },
+            UpdateCodec::TopK { keep_permille: 100 },
+        ];
+        let codec = codecs[rng.usize_below(codecs.len())];
+        let start: Vec<f32> = if rng.bool(0.5) { Vec::new() } else { rand_vec(rng, n, 0.2) };
+        let mut res_a = start.clone();
+        let mut res_b = start;
+        let a = photon::compress::encode_transit(&codec, &global, &params, seed, &mut res_a)
+            .map_err(|e| e.to_string())?;
+        let b = photon::compress::encode_transit(&codec, &global, &params, seed, &mut res_b)
+            .map_err(|e| e.to_string())?;
+        if a.body != b.body || a.wire_bytes != b.wire_bytes || res_a != res_b {
+            return Err(format!("{}: transit not deterministic", codec.label()));
+        }
+        if let Some(body) = &a.body {
+            let rebuilt = photon::compress::decode_transit(&codec, &global, body)
+                .map_err(|e| e.to_string())?;
+            if rebuilt.len() != n {
+                return Err("decode_transit length mismatch".into());
             }
         }
         Ok(())

@@ -1,0 +1,122 @@
+#!/usr/bin/env python3
+"""Check that intra-repo markdown links resolve.
+
+Scans every tracked *.md file for inline links/images `[text](target)`,
+skips external schemes (http/https/mailto), and verifies that
+
+  * the target path exists relative to the linking file (or repo root for
+    absolute-style `/`-prefixed targets), and
+  * a `#fragment` on a markdown target names a real heading in that file
+    (GitHub-style slugs: lowercase, punctuation stripped, spaces->dashes).
+
+Exit status 0 when every link resolves; 1 with a per-link report
+otherwise. No dependencies beyond the standard library, so the CI `docs`
+job and local runs behave identically:  python3 tools/check_md_links.py
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SKIP_DIRS = {".git", "target", "results", "artifacts", "__pycache__", ".venv"}
+# Machine-generated reference dumps (arxiv retrievals, issue/changelog
+# feeds) are inputs to this repo, not its documentation — their embedded
+# figure references never shipped with the text.
+SKIP_FILES = {"PAPERS.md", "PAPER.md", "SNIPPETS.md", "ISSUE.md"}
+
+# Inline links/images. Deliberately simple: no reference-style links are
+# used in this repo, and nested parens in URLs do not occur.
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def md_files():
+    for root, dirs, files in os.walk(REPO):
+        dirs[:] = [d for d in sorted(dirs) if d not in SKIP_DIRS]
+        for f in sorted(files):
+            if f.endswith(".md") and not (root == REPO and f in SKIP_FILES):
+                yield os.path.join(root, f)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor algorithm, close enough for ASCII docs."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading)  # strip inline code
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # strip links
+    text = text.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.replace(" ", "-")
+
+
+def headings_of(path: str) -> set[str]:
+    slugs: set[str] = set()
+    counts: dict[str, int] = {}
+    in_fence = False
+    with open(path, encoding="utf-8") as fh:
+        for line in fh:
+            if CODE_FENCE_RE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            m = HEADING_RE.match(line)
+            if not m:
+                continue
+            slug = github_slug(m.group(1))
+            n = counts.get(slug, 0)
+            counts[slug] = n + 1
+            slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def links_of(path: str):
+    in_fence = False
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            if CODE_FENCE_RE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for m in LINK_RE.finditer(line):
+                yield lineno, m.group(1)
+
+
+def main() -> int:
+    errors: list[str] = []
+    checked = 0
+    for path in md_files():
+        rel = os.path.relpath(path, REPO)
+        for lineno, target in links_of(path):
+            if re.match(r"^[a-zA-Z][a-zA-Z0-9+.-]*:", target):
+                continue  # http:, https:, mailto:, etc.
+            checked += 1
+            raw, _, fragment = target.partition("#")
+            if raw:
+                base = REPO if raw.startswith("/") else os.path.dirname(path)
+                dest = os.path.normpath(os.path.join(base, raw.lstrip("/")))
+            else:
+                dest = path  # pure-fragment link into this file
+            if not os.path.exists(dest):
+                errors.append(f"{rel}:{lineno}: dead link {target!r} -> missing {dest}")
+                continue
+            if fragment and dest.endswith(".md"):
+                if fragment not in headings_of(dest):
+                    errors.append(
+                        f"{rel}:{lineno}: dead anchor {target!r} "
+                        f"(no heading slug {fragment!r} in {os.path.relpath(dest, REPO)})"
+                    )
+    if errors:
+        print(f"{len(errors)} dead markdown link(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"markdown link check: {checked} intra-repo links OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
