@@ -1,0 +1,735 @@
+//! Seeded chaos injection for the elastic deployment plane (paper §5:
+//! federated pre-training is "highly resilient to the classical challenges
+//! of federated statistical and hardware heterogeneity" and "robust to
+//! partial participation"; Photon, arXiv:2411.02908: stateless LLM Nodes
+//! crash, rejoin, and migrate work without derailing the run).
+//!
+//! The subsystem has four pieces, all deterministic from one seed:
+//!
+//! * [`Schedule`] — a seed-derived fault plan, one [`Fault`] per
+//!   (worker, round): crash (with optional rejoin-after-delay),
+//!   hang-past-deadline, slow-down factor, or a link flake that corrupts
+//!   one wire frame. `net::harness::run_loopback` injects it into the
+//!   worker threads; [`Schedule::apply_to_plan`] prices the same churn
+//!   into a [`sim`](crate::sim) round plan.
+//! * [`flake_frame`] — deterministic corruption of a Photon-Link frame
+//!   (payload bit flip, checksum flip, or truncation). A flaked frame is
+//!   *rejected* by the link decoder, never mis-decoded — property-tested
+//!   in `tests/props_chaos.rs`.
+//! * [`LeaseBook`] — the per-round client-lease ledger `net::server`
+//!   dispatches through: who owns each runnable client, who arrived, who
+//!   was cut. It enforces **exactly-once client execution per round**
+//!   (a push folds only from the current lease holder, and only once),
+//!   which is what keeps mid-round lease migration and worker rejoin
+//!   bit-compatible with the dropped-client path.
+//! * [`Trace`] — the *realized* outcome of a chaotic run (cuts, lease
+//!   migrations, rejoins per round), assembled by `net::Server::trace`.
+//!   `Federation::run_round_trace` replays it in-process: since worker
+//!   identity never affects the math, the replay reduces to the cut
+//!   schedule, and a chaotic TCP run stays bit-equal to its replay.
+//!
+//! ## Determinism
+//!
+//! Every fault cell is derived per (seed, worker, round) exactly like
+//! [`crate::cluster::faults::FaultPlan`] derives client faults, so the
+//! *schedule* is reproducible — extending a schedule to more rounds or
+//! workers never changes existing cells. The *realization* (which clients
+//! actually get cut under real scheduling jitter) is captured in the
+//! [`Trace`], and the parity contract is on the trace: any realization
+//! replays bit-exactly.
+
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+use std::collections::HashMap;
+
+use crate::sim::{Participant, RoundPlan, RoundSpec};
+use crate::util::rng::Rng;
+
+/// Domain-separation tag so chaos draws never correlate with the client
+/// [`FaultPlan`](crate::cluster::faults::FaultPlan) draws sharing a seed.
+const CHAOS_TAG: u64 = 0xC8A0_5EED_0F1E_E75C;
+
+/// One worker's misbehavior in one round.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fault {
+    /// Behave normally.
+    None,
+    /// Disconnect on receiving the round's assignment, before replying.
+    /// `rejoin_after_ms` brings the worker back (with its identity) after
+    /// a delay; `None` means gone for good.
+    Crash { rejoin_after_ms: Option<u64> },
+    /// Stay connected but sit the round out: acknowledge the assignment,
+    /// never push an update. The server's deadline (or lease migration)
+    /// handles the silence.
+    Hang,
+    /// Serve the round `factor`× slower (a sleep before every push) —
+    /// exercises late arrivals and the straggler-migration path.
+    Slow { factor: f64 },
+    /// Corrupt the wire frame of one `UpdatePush` (the `victim`-th task
+    /// of the assignment, modulo its length) via [`flake_frame`] with
+    /// `seed`. The server must reject the frame, never mis-decode it;
+    /// the affected client is cut at the deadline like any straggler.
+    Flake { victim: u32, seed: u64 },
+}
+
+/// Per-kind fault probabilities for [`Schedule::generate`]. The draws are
+/// mutually exclusive per cell (one fault at most), evaluated in the
+/// order crash → hang → slow → flake.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChaosConfig {
+    pub crash_prob: f64,
+    pub hang_prob: f64,
+    pub slow_prob: f64,
+    pub flake_prob: f64,
+    /// P(a crashed worker rejoins with its identity after a delay).
+    pub rejoin_prob: f64,
+    /// Upper bound on the rejoin delay (drawn uniformly in
+    /// `[rejoin_delay_ms/2, rejoin_delay_ms]`).
+    pub rejoin_delay_ms: u64,
+    /// Upper bound on the slow-down factor (drawn in `[1, slow_factor]`).
+    pub slow_factor: f64,
+    /// Never crash or hang worker 0, so every round keeps at least one
+    /// live executor and the run always terminates. Slow-downs and flakes
+    /// still apply to it.
+    pub protect_worker0: bool,
+}
+
+impl ChaosConfig {
+    /// A quiet fleet (every cell draws [`Fault::None`]).
+    pub fn none() -> ChaosConfig {
+        ChaosConfig {
+            crash_prob: 0.0,
+            hang_prob: 0.0,
+            slow_prob: 0.0,
+            flake_prob: 0.0,
+            rejoin_prob: 0.0,
+            rejoin_delay_ms: 40,
+            slow_factor: 3.0,
+            protect_worker0: true,
+        }
+    }
+
+    /// Split an aggregate per-cell fault rate across the four kinds with
+    /// the default mix (crash-heavy, as in the paper's dropout framing).
+    pub fn at_rate(rate: f64) -> ChaosConfig {
+        ChaosConfig {
+            crash_prob: rate * 0.35,
+            hang_prob: rate * 0.25,
+            slow_prob: rate * 0.20,
+            flake_prob: rate * 0.20,
+            rejoin_prob: 0.75,
+            ..ChaosConfig::none()
+        }
+    }
+
+    /// Total per-cell fault probability.
+    pub fn total_rate(&self) -> f64 {
+        self.crash_prob + self.hang_prob + self.slow_prob + self.flake_prob
+    }
+}
+
+/// A deterministic, seed-derived fault plan over `workers × rounds`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Schedule {
+    pub seed: u64,
+    pub workers: usize,
+    pub rounds: usize,
+    pub cfg: ChaosConfig,
+}
+
+impl Schedule {
+    pub fn generate(seed: u64, workers: usize, rounds: usize, cfg: ChaosConfig) -> Schedule {
+        Schedule { seed, workers, rounds, cfg }
+    }
+
+    /// The fault of one (worker, round) cell. Derived per cell — never
+    /// from shared RNG state — so cells are independent of the schedule's
+    /// extent and of each other.
+    pub fn fault(&self, worker: usize, round: usize) -> Fault {
+        if round >= self.rounds || worker >= self.workers {
+            return Fault::None;
+        }
+        let mut rng = Rng::new(
+            self.seed
+                ^ CHAOS_TAG
+                ^ (round as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                ^ ((worker as u64).wrapping_add(1)).wrapping_mul(0xD1B54A32D192ED03),
+        );
+        let x = rng.f64();
+        let c = &self.cfg;
+        let fault = if x < c.crash_prob {
+            let rejoin = rng.bool(c.rejoin_prob);
+            let half = (c.rejoin_delay_ms / 2).max(1);
+            let delay = half + rng.below(c.rejoin_delay_ms.saturating_sub(half).max(1));
+            Fault::Crash { rejoin_after_ms: rejoin.then_some(delay) }
+        } else if x < c.crash_prob + c.hang_prob {
+            Fault::Hang
+        } else if x < c.crash_prob + c.hang_prob + c.slow_prob {
+            Fault::Slow { factor: 1.0 + rng.f64() * (c.slow_factor - 1.0).max(0.0) }
+        } else if x < c.total_rate() {
+            Fault::Flake { victim: rng.below(1 << 16) as u32, seed: rng.next_u64() }
+        } else {
+            Fault::None
+        };
+        if c.protect_worker0
+            && worker == 0
+            && matches!(fault, Fault::Crash { .. } | Fault::Hang)
+        {
+            return Fault::None;
+        }
+        fault
+    }
+
+    /// One worker's view of the plan, ready to move into its thread.
+    pub fn worker(&self, worker: usize) -> WorkerChaos {
+        WorkerChaos {
+            worker,
+            faults: (0..self.rounds).map(|r| self.fault(worker, r)).collect(),
+        }
+    }
+
+    /// True when any cell hangs or flakes — those faults leave clients
+    /// pending on a live connection, so the fleet needs a per-round
+    /// deadline to cut them (crashes alone cut on disconnect).
+    pub fn needs_deadline(&self) -> bool {
+        (0..self.rounds).any(|r| {
+            (0..self.workers).any(|w| {
+                matches!(self.fault(w, r), Fault::Hang | Fault::Flake { .. })
+            })
+        })
+    }
+
+    /// True when every cell is [`Fault::None`].
+    pub fn is_quiet(&self) -> bool {
+        (0..self.rounds)
+            .all(|r| (0..self.workers).all(|w| self.fault(w, r) == Fault::None))
+    }
+
+    /// Price this schedule's churn into a simulator round plan, mirroring
+    /// the server's dispatch rule (sampled slot s → s-th live worker,
+    /// round-robin): clients of crashed/hung workers drop (or survive via
+    /// lease migration when `migrate`), flake victims drop, clients of
+    /// slowed workers straggle. Crashed workers with a rejoin delay miss
+    /// only the crash round; without one they stay dead. This is the
+    /// *pricing* model for `photon exp chaos` wall-clock estimates — the
+    /// bit-parity contract lives in [`Trace`], not here.
+    pub fn apply_to_plan(&self, plan: &RoundPlan, migrate: bool) -> RoundPlan {
+        let mut live = vec![true; self.workers.max(1)];
+        let mut rejoin_at: Vec<Option<usize>> = vec![None; self.workers.max(1)];
+        let mut rounds = Vec::with_capacity(plan.rounds.len());
+        for spec in &plan.rounds {
+            let r = spec.round;
+            for w in 0..live.len() {
+                if rejoin_at[w] == Some(r) {
+                    live[w] = true;
+                    rejoin_at[w] = None;
+                }
+            }
+            let live_idx: Vec<usize> = (0..live.len()).filter(|&w| live[w]).collect();
+            let mut participants = Vec::new();
+            let mut dropped = spec.dropped.clone();
+            if live_idx.is_empty() {
+                dropped.extend(spec.participants.iter().map(|p| p.client));
+                rounds.push(RoundSpec { round: r, participants, dropped });
+                continue;
+            }
+            // Per-worker task lists in dispatch order (for flake victims).
+            let mut task_of: Vec<Vec<usize>> = vec![Vec::new(); live.len()];
+            for (slot, _) in spec.participants.iter().enumerate() {
+                task_of[live_idx[slot % live_idx.len()]].push(slot);
+            }
+            for (slot, p) in spec.participants.iter().enumerate() {
+                let w = live_idx[slot % live_idx.len()];
+                match self.fault(w, r) {
+                    Fault::Crash { .. } | Fault::Hang if !migrate => {
+                        dropped.push(p.client)
+                    }
+                    Fault::Flake { victim, .. }
+                        if task_of[w][victim as usize % task_of[w].len()] == slot =>
+                    {
+                        dropped.push(p.client)
+                    }
+                    Fault::Slow { .. } => {
+                        participants.push(Participant { straggler: true, ..p.clone() })
+                    }
+                    _ => participants.push(p.clone()),
+                }
+            }
+            for &w in &live_idx {
+                if let Fault::Crash { rejoin_after_ms } = self.fault(w, r) {
+                    live[w] = false;
+                    if rejoin_after_ms.is_some() {
+                        rejoin_at[w] = Some(r + 1);
+                    }
+                }
+            }
+            rounds.push(RoundSpec { round: r, participants, dropped });
+        }
+        RoundPlan { n_clients: plan.n_clients, tau: plan.tau, rounds }
+    }
+}
+
+/// One worker's slice of a [`Schedule`], movable into its thread.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WorkerChaos {
+    pub worker: usize,
+    faults: Vec<Fault>,
+}
+
+impl WorkerChaos {
+    pub fn fault(&self, round: u64) -> Fault {
+        self.faults
+            .get(round as usize)
+            .copied()
+            .unwrap_or(Fault::None)
+    }
+
+    /// Clear one round's fault — the harness consumes a crash before the
+    /// worker rejoins, so the re-dispatched round does not crash it again
+    /// in a loop.
+    pub fn consume(&mut self, round: u64) {
+        if let Some(f) = self.faults.get_mut(round as usize) {
+            *f = Fault::None;
+        }
+    }
+}
+
+/// Deterministically corrupt a Photon-Link frame so its decode **fails**
+/// (the link checksum/length/flag validation rejects it). Variants:
+/// payload bit flip, truncation, or checksum-only damage — and *every*
+/// variant also flips one bit of the stored FNV-1a checksum, so the frame
+/// can never checksum-match whatever payload the decoder reconstructs.
+/// (A lone payload flip could land in deflate padding bits and inflate
+/// back to the original bytes; the unconditional checksum flip closes
+/// that hole — a flaked frame is rejected, never silently mis-decoded.)
+pub fn flake_frame(frame: &mut Vec<u8>, seed: u64) {
+    let hdr = crate::link::HEADER_BYTES;
+    let mut rng = Rng::new(seed ^ 0xF1A4_EF1A_4EF1_A4EF);
+    if frame.len() < hdr {
+        // Already unframeable; shorten it further for variety.
+        frame.truncate(frame.len() / 2);
+        return;
+    }
+    let variant = rng.below(3);
+    if variant == 2 && frame.len() > hdr + 1 {
+        // Truncate somewhere inside the payload...
+        let keep = hdr + rng.usize_below(frame.len() - hdr);
+        frame.truncate(keep.max(hdr));
+    } else if variant == 1 && frame.len() > hdr {
+        // ...or flip one payload bit...
+        let i = hdr + rng.usize_below(frame.len() - hdr);
+        frame[i] ^= 1 << rng.below(8);
+    }
+    // ...and always defeat the integrity check: flip one bit of the
+    // stored checksum (bytes 20..28). The odds of the damaged payload
+    // FNV-hashing onto the damaged checksum are 2⁻⁶⁴.
+    let i = 20 + rng.usize_below(8);
+    frame[i] ^= 1 << rng.below(8);
+}
+
+/// One realized client-lease migration: `client`'s lease moved from
+/// worker slot `from` to slot `to` mid-round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Migration {
+    pub client: usize,
+    pub from: usize,
+    pub to: usize,
+}
+
+/// The realized fate of one round of a chaotic deployment-plane run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RoundTrace {
+    pub round: usize,
+    /// Clients cut from the aggregation (deadline, disconnect, malformed
+    /// push) — the only field that affects the replayed math.
+    pub cut: Vec<usize>,
+    /// Leases migrated to live workers before the deadline.
+    pub migrations: Vec<Migration>,
+    /// Worker slots that rejoined with identity during the round.
+    pub rejoined: Vec<usize>,
+}
+
+/// The realized trace of a whole run (sparse: only eventful rounds).
+/// Assembled by `net::Server::trace`, replayed by
+/// `Federation::run_trace` — the two must agree bit-for-bit on records
+/// and the final global model (the ISSUE 5 acceptance invariant).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Trace {
+    pub rounds: Vec<RoundTrace>,
+}
+
+impl Trace {
+    pub fn for_round(&self, round: usize) -> Option<&RoundTrace> {
+        self.rounds.iter().find(|t| t.round == round)
+    }
+
+    /// The cut schedule of one round (empty when the round was clean).
+    pub fn cut_for(&self, round: usize) -> &[usize] {
+        self.for_round(round).map(|t| t.cut.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn total_cut(&self) -> usize {
+        self.rounds.iter().map(|t| t.cut.len()).sum()
+    }
+
+    pub fn total_migrated(&self) -> usize {
+        self.rounds.iter().map(|t| t.migrations.len()).sum()
+    }
+
+    pub fn total_rejoined(&self) -> usize {
+        self.rounds.iter().map(|t| t.rejoined.len()).sum()
+    }
+
+    pub fn is_quiet(&self) -> bool {
+        self.rounds.is_empty()
+    }
+}
+
+/// Per-round client-lease ledger: which worker owns each runnable
+/// client's lease, who arrived, who was cut. `net::server` dispatches,
+/// migrates, and folds through this, and the ledger enforces the
+/// **exactly-once invariant**: a client's update is accepted at most once
+/// per round, and only from its *current* lease holder — a stale push
+/// from a migrated-away or crashed-and-replaced worker is refused, never
+/// double-folded. Property-tested in `tests/props_chaos.rs`.
+#[derive(Clone, Debug, Default)]
+pub struct LeaseBook {
+    /// client → sampled slot (the deterministic fold position).
+    slot_of: HashMap<usize, usize>,
+    /// client → owning worker index. Migration rewrites this.
+    owner: HashMap<usize, usize>,
+    pending: BTreeSet<usize>,
+    arrived: BTreeSet<usize>,
+    cut: BTreeSet<usize>,
+}
+
+impl LeaseBook {
+    /// Open the round's ledger over the runnable `(client, steps)` list
+    /// in sampled order (slot = position).
+    pub fn new(runnable: &[(usize, u64)]) -> LeaseBook {
+        let mut book = LeaseBook::default();
+        for (slot, &(client, _)) in runnable.iter().enumerate() {
+            book.slot_of.insert(client, slot);
+        }
+        book
+    }
+
+    /// Lease `client` to worker `widx` at dispatch. Panics in debug if the
+    /// client was not declared runnable.
+    pub fn lease(&mut self, client: usize, widx: usize) {
+        debug_assert!(self.slot_of.contains_key(&client), "lease of unsampled client");
+        self.owner.insert(client, widx);
+        self.pending.insert(client);
+    }
+
+    pub fn slot(&self, client: usize) -> Option<usize> {
+        self.slot_of.get(&client).copied()
+    }
+
+    pub fn owner(&self, client: usize) -> Option<usize> {
+        self.owner.get(&client).copied()
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn arrived_count(&self) -> usize {
+        self.arrived.len()
+    }
+
+    /// Pending leases currently held by `widx`, ascending.
+    pub fn pending_of(&self, widx: usize) -> Vec<usize> {
+        self.pending
+            .iter()
+            .copied()
+            .filter(|c| self.owner.get(c) == Some(&widx))
+            .collect()
+    }
+
+    /// Accept a push for `client` from worker `widx`. True only when the
+    /// client is still pending *and* `widx` holds its lease — the
+    /// exactly-once gate.
+    pub fn accept(&mut self, client: usize, widx: usize) -> bool {
+        if self.owner.get(&client) != Some(&widx) || !self.pending.remove(&client) {
+            return false;
+        }
+        self.arrived.insert(client);
+        true
+    }
+
+    /// Cut one pending client (deadline/disconnect/malformed push).
+    /// False when the client already arrived or was already cut.
+    pub fn cut(&mut self, client: usize) -> bool {
+        if !self.pending.remove(&client) {
+            return false;
+        }
+        self.cut.insert(client);
+        true
+    }
+
+    /// Deadline fired: cut everything still pending. Returns the count.
+    pub fn cut_all_pending(&mut self) -> usize {
+        let n = self.pending.len();
+        let pending = std::mem::take(&mut self.pending);
+        self.cut.extend(pending);
+        n
+    }
+
+    /// Cut every pending lease of `widx` (immediate disconnect-cut when
+    /// no deadline bounds a rejoin window). Returns the cut clients.
+    pub fn cut_pending_of(&mut self, widx: usize) -> Vec<usize> {
+        let lost = self.pending_of(widx);
+        for c in &lost {
+            self.pending.remove(c);
+            self.cut.insert(*c);
+        }
+        lost
+    }
+
+    /// Move every pending lease of `from` onto `targets`, round-robin in
+    /// ascending client order. Returns the realized migrations (empty
+    /// when `targets` is empty — leases then stay with `from` for the
+    /// deadline or a rejoin to resolve).
+    pub fn migrate_from(&mut self, from: usize, targets: &[usize]) -> Vec<Migration> {
+        if targets.is_empty() {
+            return Vec::new();
+        }
+        self.pending_of(from)
+            .into_iter()
+            .enumerate()
+            .map(|(i, client)| {
+                let to = targets[i % targets.len()];
+                self.owner.insert(client, to);
+                Migration { client, from, to }
+            })
+            .collect()
+    }
+
+    /// The realized cut schedule, ascending — what
+    /// `Federation::run_round_cut` replays.
+    pub fn cuts(&self) -> Vec<usize> {
+        self.cut.iter().copied().collect()
+    }
+
+    /// Ledger invariants (used by the property tests): arrived and cut
+    /// are disjoint, and everything accounted for was actually leased.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if let Some(c) = self.arrived.intersection(&self.cut).next() {
+            return Err(format!("client {c} both arrived and cut"));
+        }
+        for c in self.arrived.iter().chain(&self.cut).chain(&self.pending) {
+            if !self.owner.contains_key(c) {
+                return Err(format!("client {c} tracked without a lease"));
+            }
+            if !self.slot_of.contains_key(c) {
+                return Err(format!("client {c} tracked without a slot"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Group the realized migrations of one round by their target (used
+    /// by the server to batch re-dispatch frames).
+    pub fn group_by_target(migs: &[Migration]) -> BTreeMap<usize, Vec<usize>> {
+        let mut per: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for m in migs {
+            per.entry(m.to).or_default().push(m.client);
+        }
+        per
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn schedule(seed: u64) -> Schedule {
+        Schedule::generate(seed, 4, 20, ChaosConfig::at_rate(0.5))
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_extent_stable() {
+        let a = schedule(7);
+        let b = schedule(7);
+        for r in 0..20 {
+            for w in 0..4 {
+                assert_eq!(a.fault(w, r), b.fault(w, r));
+            }
+        }
+        // Extending the plan never rewrites existing cells.
+        let wide = Schedule::generate(7, 8, 40, ChaosConfig::at_rate(0.5));
+        for r in 0..20 {
+            for w in 0..4 {
+                assert_eq!(a.fault(w, r), wide.fault(w, r), "cell ({w},{r})");
+            }
+        }
+        assert_ne!(
+            (0..20).map(|r| schedule(7).fault(1, r)).collect::<Vec<_>>(),
+            (0..20).map(|r| schedule(8).fault(1, r)).collect::<Vec<_>>(),
+            "different seeds must differ somewhere"
+        );
+    }
+
+    #[test]
+    fn worker0_is_protected_from_fatal_faults() {
+        let s = Schedule::generate(3, 4, 200, ChaosConfig::at_rate(0.9));
+        for r in 0..200 {
+            assert!(
+                !matches!(s.fault(0, r), Fault::Crash { .. } | Fault::Hang),
+                "round {r}"
+            );
+        }
+    }
+
+    #[test]
+    fn quiet_schedule_and_deadline_need() {
+        let quiet = Schedule::generate(1, 4, 10, ChaosConfig::none());
+        assert!(quiet.is_quiet());
+        assert!(!quiet.needs_deadline());
+        let noisy = Schedule::generate(1, 4, 50, ChaosConfig::at_rate(0.8));
+        assert!(!noisy.is_quiet());
+        assert!(noisy.needs_deadline(), "hang/flake cells need a deadline");
+    }
+
+    #[test]
+    fn worker_view_matches_and_consume_clears() {
+        let s = schedule(11);
+        let mut w = s.worker(2);
+        for r in 0..20u64 {
+            assert_eq!(w.fault(r), s.fault(2, r as usize));
+        }
+        let crashed = (0..20u64).find(|r| matches!(w.fault(*r), Fault::Crash { .. }));
+        if let Some(r) = crashed {
+            w.consume(r);
+            assert_eq!(w.fault(r), Fault::None);
+        }
+        assert_eq!(w.fault(10_000), Fault::None, "beyond the plan = quiet");
+    }
+
+    #[test]
+    fn lease_book_exactly_once() {
+        let runnable: Vec<(usize, u64)> = vec![(3, 10), (0, 10), (5, 10)];
+        let mut book = LeaseBook::new(&runnable);
+        assert_eq!(book.slot(3), Some(0));
+        assert_eq!(book.slot(5), Some(2));
+        book.lease(3, 0);
+        book.lease(0, 1);
+        book.lease(5, 0);
+        assert_eq!(book.pending_of(0), vec![3, 5]);
+        // Wrong owner refused; right owner accepted exactly once.
+        assert!(!book.accept(3, 1));
+        assert!(book.accept(3, 0));
+        assert!(!book.accept(3, 0), "double push refused");
+        // Migration moves the lease and the acceptance right with it.
+        let migs = book.migrate_from(0, &[1]);
+        assert_eq!(migs, vec![Migration { client: 5, from: 0, to: 1 }]);
+        assert!(!book.accept(5, 0), "stale owner refused after migration");
+        assert!(book.accept(5, 1));
+        assert!(book.cut(0));
+        assert!(!book.cut(0));
+        assert_eq!(book.cuts(), vec![0]);
+        assert_eq!(book.arrived_count(), 2);
+        assert_eq!(book.pending_count(), 0);
+        book.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lease_book_bulk_cuts() {
+        let runnable: Vec<(usize, u64)> = (0..6).map(|c| (c, 5)).collect();
+        let mut book = LeaseBook::new(&runnable);
+        for c in 0..6 {
+            book.lease(c, c % 2);
+        }
+        assert_eq!(book.cut_pending_of(1), vec![1, 3, 5]);
+        assert!(book.accept(0, 0));
+        assert_eq!(book.cut_all_pending(), 2);
+        assert_eq!(book.cuts(), vec![1, 2, 3, 4, 5]);
+        book.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn flaked_frames_never_decode() {
+        let payload: Vec<f32> = (0..300).map(|i| (i as f32 * 0.31).cos()).collect();
+        for compress in [false, true] {
+            let clean =
+                crate::link::encode_model(crate::link::MsgKind::ClientUpdate, &payload, compress)
+                    .unwrap();
+            assert!(crate::link::decode_model(&clean).is_ok());
+            for seed in 0..64u64 {
+                let mut bad = clean.clone();
+                flake_frame(&mut bad, seed);
+                assert!(
+                    crate::link::decode_model(&bad).is_err(),
+                    "flake seed {seed} (compress {compress}) must be rejected"
+                );
+            }
+        }
+        // Header-only frames (empty payload) are flaked via the checksum.
+        let mut empty =
+            crate::link::encode_model(crate::link::MsgKind::Metrics, &[], false).unwrap();
+        flake_frame(&mut empty, 9);
+        assert!(crate::link::decode_model(&empty).is_err());
+    }
+
+    #[test]
+    fn apply_to_plan_prices_churn() {
+        let plan = RoundPlan {
+            n_clients: 8,
+            tau: 10,
+            rounds: (0..20)
+                .map(|round| RoundSpec {
+                    round,
+                    participants: (0..8)
+                        .map(|client| Participant { client, steps: 10, straggler: false })
+                        .collect(),
+                    dropped: vec![],
+                })
+                .collect(),
+        };
+        let s = Schedule::generate(5, 4, 20, ChaosConfig::at_rate(0.6));
+        let cut = s.apply_to_plan(&plan, false);
+        let migrated = s.apply_to_plan(&plan, true);
+        assert_eq!(cut.rounds.len(), 20);
+        let total =
+            |p: &RoundPlan| p.rounds.iter().map(|r| r.participants.len()).sum::<usize>();
+        assert!(
+            total(&cut) < total(&plan),
+            "churn must remove participants ({} vs {})",
+            total(&cut),
+            total(&plan)
+        );
+        assert!(
+            total(&migrated) >= total(&cut),
+            "lease migration keeps crashed/hung workers' clients running"
+        );
+        // Every round conserves the sample: participants + dropped = 8.
+        for r in &cut.rounds {
+            assert_eq!(r.participants.len() + r.dropped.len(), 8, "round {}", r.round);
+        }
+        // Determinism.
+        assert_eq!(cut, s.apply_to_plan(&plan, false));
+    }
+
+    #[test]
+    fn trace_accessors() {
+        let t = Trace {
+            rounds: vec![
+                RoundTrace {
+                    round: 1,
+                    cut: vec![2, 5],
+                    migrations: vec![Migration { client: 3, from: 0, to: 1 }],
+                    rejoined: vec![2],
+                },
+                RoundTrace { round: 4, cut: vec![1], ..RoundTrace::default() },
+            ],
+        };
+        assert_eq!(t.cut_for(1), &[2, 5]);
+        assert!(t.cut_for(0).is_empty());
+        assert_eq!(t.total_cut(), 3);
+        assert_eq!(t.total_migrated(), 1);
+        assert_eq!(t.total_rejoined(), 1);
+        assert!(!t.is_quiet());
+        assert!(Trace::default().is_quiet());
+    }
+}

@@ -301,6 +301,41 @@ impl Federation {
         self.commit_round(round, updates, t0)
     }
 
+    /// Replay one round of a realized chaos trace (`net::Server::trace`)
+    /// in-process. Lease migrations and worker rejoins never touch the
+    /// math — *which* worker computes a client's round is invisible to the
+    /// fold, since all state travels with the lease — so the replay
+    /// reduces to the realized cut schedule: exactly
+    /// [`run_round_cut`](Federation::run_round_cut) over `trace.cut`. The
+    /// trace's round index is validated so a misaligned replay fails
+    /// loudly instead of silently diverging.
+    pub fn run_round_trace(&mut self, trace: &crate::chaos::RoundTrace) -> Result<RoundRecord> {
+        anyhow::ensure!(
+            trace.round == self.next_round,
+            "trace names round {}, federation is at round {}",
+            trace.round,
+            self.next_round
+        );
+        self.run_round_cut(&trace.cut)
+    }
+
+    /// Replay a whole realized chaos trace: every remaining round runs
+    /// in-process, applying the trace's cut schedule where the trace has
+    /// an entry and running clean otherwise. A chaotic deployment-plane
+    /// run (`net::harness::run_loopback` + `FleetReport::trace`) replayed
+    /// here reproduces its records and final global model **bit for bit**
+    /// — the ISSUE 5 acceptance invariant, exercised by
+    /// `tests/integration_chaos.rs` and the `photon exp chaos` sweep.
+    pub fn run_trace(&mut self, trace: &crate::chaos::Trace) -> Result<Vec<RoundRecord>> {
+        while self.next_round < self.cfg.rounds {
+            match trace.for_round(self.next_round) {
+                Some(t) => self.run_round_trace(t)?,
+                None => self.run_round()?,
+            };
+        }
+        Ok(self.log.rounds.clone())
+    }
+
     /// Fold a round's client updates into the global model (Algorithm 1
     /// L.8–11): streaming aggregation, outer-optimizer step, metrics
     /// record, checkpoint. `updates` must be in sampled order and `round`

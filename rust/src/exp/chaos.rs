@@ -1,0 +1,236 @@
+//! `chaos`: the elastic-fleet resilience sweep — seeded chaos schedules
+//! (crash/rejoin, hang, slow-down, link flake) thrown at a localhost TCP
+//! fleet across a fault-rate ladder × lease-migration setting, with every
+//! cell's realized trace replayed in-process for the bit-parity verdict
+//! and the same churned schedule priced through the wall-clock simulator
+//! per aggregation policy. The paper's resilience claim (§5: federated
+//! pre-training is "robust to partial participation") shows up as
+//! *graceful* degradation: participation falls with the fault rate while
+//! convergence holds — the same shape as the partial-participation figure
+//! (`exp fig6`), but induced by infrastructure failures instead of
+//! sampling.
+//!
+//! ```text
+//! photon exp chaos [--config m75a] [--clients P] [--sampled K]
+//!     [--rounds N] [--steps T] [--seed S] [--fleet W]
+//!     [--rates 0,15,30,45] [--deadline-secs F]
+//! ```
+//!
+//! The rate ladder is sorted, deduplicated, and always includes the
+//! quiet rate-0 baseline the shape checks compare against.
+//!
+//! Writes `results/chaos/resilience.csv`
+//! ([`crate::metrics::RESILIENCE_CSV_HEADER`]). Requires compiled
+//! artifacts (`make artifacts`).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::chaos::{ChaosConfig, Schedule};
+use crate::cluster::faults::FaultPlan;
+use crate::config::ExperimentConfig;
+use crate::coordinator::Federation;
+use crate::exp::common::check_shape;
+use crate::metrics::{write_resilience_csv, ResilienceRow, RoundRecord};
+use crate::net::{run_loopback, FleetOpts};
+use crate::netsim::CLOUD_WAN;
+use crate::optim::schedule::CosineSchedule;
+use crate::runtime::Runtime;
+use crate::sim::{AggregationPolicy, RoundPlan, SimConfig, Simulator};
+use crate::util::results_dir;
+
+fn parity(a: &[RoundRecord], b: &[RoundRecord]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.agrees_with(y))
+}
+
+pub fn chaos(args: &crate::util::cli::Args) -> Result<()> {
+    let model_name = args.get_or("config", "m75a");
+    let p = args.get_usize("clients", 8)?;
+    let k = args.get_usize("sampled", p.min(6))?;
+    let mut rounds = args.get_usize("rounds", 5)?.max(3);
+    let mut steps = args.get_u64("steps", 6)?;
+    if args.flag("fast") {
+        rounds = rounds.min(3);
+        steps = steps.min(4);
+    }
+    let seed = args.get_u64("seed", 42)?;
+    let fleet = args.get_usize("fleet", 4)?.max(2);
+    let deadline = args.get_f64("deadline-secs", 5.0)?;
+    // Normalize the ladder: ascending, unique, and always anchored by a
+    // quiet rate-0 baseline — the shape checks compare against it.
+    let mut rates = args.get_u64_list("rates", &[0, 15, 30, 45])?;
+    rates.push(0);
+    rates.sort_unstable();
+    rates.dedup();
+
+    let total = rounds as u64 * steps;
+    let mut cfg = ExperimentConfig::quickstart(&model_name);
+    cfg.label = format!("chaos-{model_name}");
+    cfg.n_clients = p;
+    cfg.clients_per_round = k;
+    cfg.rounds = rounds;
+    cfg.local_steps = steps;
+    cfg.seed = seed;
+    cfg.schedule = CosineSchedule::new(3e-3, 0.1, total.max(2), (total / 20).min(100));
+    // Client-level faults off: every cut in this sweep is attributable to
+    // the injected worker chaos, not the sampler's dropout draws.
+    cfg.faults = FaultPlan::none();
+
+    println!(
+        "chaos resilience sweep: {model_name} P={p} K={k} rounds={rounds} τ={steps} \
+         over {fleet} TCP workers; fault rates {rates:?}% × migration off/on \
+         (deadline {deadline}s)"
+    );
+    let rt = Runtime::cpu()?;
+    let model = Arc::new(rt.load_model(&model_name)?);
+    let payload = model.n_params() as u64 * 4;
+    let base_plan = RoundPlan::from_config(&cfg);
+
+    let mut rows: Vec<ResilienceRow> = Vec::new();
+    // Keyed summaries for the shape checks: (rate, migrate) → values.
+    let mut participation = Vec::new();
+    let mut final_nll = Vec::new();
+    let mut all_agree = true;
+
+    println!("\nrate% | migrate | final ppl | participation | cuts mig rejoin | replay");
+    for &rate in &rates {
+        let ccfg = ChaosConfig::at_rate(rate as f64 / 100.0);
+        let schedule =
+            Schedule::generate(seed.wrapping_add(rate.wrapping_mul(7919)), fleet, rounds, ccfg);
+        for migrate in [false, true] {
+            let report = run_loopback(
+                cfg.clone(),
+                model.clone(),
+                FleetOpts {
+                    workers: fleet,
+                    compress: true,
+                    deadline_secs: Some(deadline),
+                    chaos: Some(schedule.clone()),
+                    migrate,
+                    ..FleetOpts::default()
+                },
+            )?;
+            for e in &report.worker_errors {
+                println!("[!] {e}");
+            }
+
+            // The acceptance invariant: replaying the realized trace
+            // in-process reproduces the chaotic fleet bit-for-bit.
+            let mut replay = Federation::with_model(cfg.clone(), model.clone())?;
+            let replayed = replay.run_trace(&report.trace)?;
+            let agree = parity(&replayed, &report.records)
+                && replay.global == report.global;
+            all_agree &= agree;
+
+            let part = report
+                .records
+                .iter()
+                .map(|r| r.participated as f64 / k as f64)
+                .sum::<f64>()
+                / report.records.len().max(1) as f64;
+            let last = report.records.last();
+            let (ppl, nll) =
+                last.map(|r| (r.server_ppl, r.server_nll)).unwrap_or((f64::NAN, f64::NAN));
+            participation.push(((rate, migrate), part));
+            final_nll.push(((rate, migrate), nll));
+            println!(
+                "{rate:>5} | {:>7} | {ppl:>9.3} | {part:>13.3} | {:>4} {:>3} {:>6} | {}",
+                if migrate { "on" } else { "off" },
+                report.trace.total_cut(),
+                report.trace.total_migrated(),
+                report.trace.total_rejoined(),
+                if agree { "bit-equal" } else { "DIVERGED" },
+            );
+
+            // Price the same churned schedule through the simulator, one
+            // row per aggregation policy.
+            let churned = base_plan.with_chaos(&schedule, migrate);
+            for policy in [
+                AggregationPolicy::Sync,
+                AggregationPolicy::SemiSync { deadline_factor: 1.5 },
+            ] {
+                let sim = Simulator::uniform(
+                    &churned,
+                    0.1,
+                    SimConfig::new(payload, CLOUD_WAN, policy),
+                )
+                .run();
+                rows.push(ResilienceRow {
+                    fault_pct: rate as f64,
+                    migrate,
+                    policy: policy.label().to_string(),
+                    final_ppl: ppl,
+                    final_nll: nll,
+                    participation: part,
+                    cuts: report.trace.total_cut(),
+                    migrations: report.trace.total_migrated(),
+                    rejoins: report.trace.total_rejoined(),
+                    replay_agree: agree,
+                    sim_secs: sim.total_secs,
+                    sim_dropped: sim.dropped_total,
+                });
+            }
+        }
+    }
+
+    let out = results_dir("chaos").join("resilience.csv");
+    write_resilience_csv(&out, &rows)?;
+
+    // --- shape checks ------------------------------------------------------
+    check_shape(
+        "chaos-replay-parity",
+        all_agree,
+        "every chaotic fleet bit-equals the in-process replay of its realized trace"
+            .into(),
+    );
+    let part_at = |rate: u64, migrate: bool| {
+        participation
+            .iter()
+            .find(|((r, m), _)| *r == rate && *m == migrate)
+            .map(|(_, v)| *v)
+            .unwrap_or(f64::NAN)
+    };
+    let nll_at = |rate: u64, migrate: bool| {
+        final_nll
+            .iter()
+            .find(|((r, m), _)| *r == rate && *m == migrate)
+            .map(|(_, v)| *v)
+            .unwrap_or(f64::NAN)
+    };
+    let (lo, hi) = (*rates.first().unwrap_or(&0), *rates.last().unwrap_or(&0));
+    check_shape(
+        "chaos-participation-degrades",
+        part_at(lo, false) >= part_at(hi, false) - 1e-9 && part_at(lo, false) > 0.99,
+        format!(
+            "participation {:.3} at {lo}% vs {:.3} at {hi}% faults (migration off)",
+            part_at(lo, false),
+            part_at(hi, false)
+        ),
+    );
+    // The paper's resilience claim, echoed: convergence degrades
+    // *gracefully* — the chaotic run's final NLL stays within a modest
+    // factor of the quiet run's, like partial participation vs full.
+    check_shape(
+        "chaos-graceful-degradation",
+        nll_at(hi, false) <= nll_at(lo, false) * 1.25
+            && nll_at(hi, true) <= nll_at(lo, true) * 1.25,
+        format!(
+            "final NLL {:.4} (quiet) → {:.4} (cut) / {:.4} (migrate) at {hi}% faults",
+            nll_at(lo, false),
+            nll_at(hi, false),
+            nll_at(hi, true)
+        ),
+    );
+    check_shape(
+        "chaos-migration-helps",
+        part_at(hi, true) >= part_at(hi, false) - 1e-9,
+        format!(
+            "at {hi}% faults, participation {:.3} with migration vs {:.3} without",
+            part_at(hi, true),
+            part_at(hi, false)
+        ),
+    );
+    println!("wrote {}", out.display());
+    Ok(())
+}

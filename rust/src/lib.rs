@@ -13,8 +13,10 @@
 //!   Photon-Link transport ([`link`]) with its lossy update-codec registry
 //!   ([`compress`]: q8/q4 stochastic quantization, top-k + error
 //!   feedback), the TCP deployment plane ([`net`]:
-//!   real Aggregator/worker federation with straggler cuts and restart
-//!   recovery), checkpointing ([`ckpt`]), network cost modeling
+//!   real Aggregator/worker federation with straggler cuts, worker
+//!   rejoin, client-lease migration, and restart recovery), the seeded
+//!   chaos-injection plane ([`chaos`]: deterministic fault schedules,
+//!   realized-trace replay), checkpointing ([`ckpt`]), network cost modeling
 //!   ([`netsim`]), the event-driven wall-clock simulator ([`sim`]), and
 //!   the experiment harness ([`exp`]) that regenerates every table/figure
 //!   of the paper.
@@ -55,6 +57,7 @@
 //! ```
 
 pub mod benchkit;
+pub mod chaos;
 pub mod ckpt;
 pub mod cluster;
 pub mod compress;

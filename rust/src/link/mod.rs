@@ -22,7 +22,11 @@
 //! decoder accepts any frame of at least the header size. Frames written by
 //! a *newer* peer (version > [`VERSION`]) are rejected with an explicit
 //! upgrade error; flag bits this build does not understand are rejected the
-//! same way, so header corruption cannot be silently ignored.
+//! same way, so header corruption cannot be silently ignored. The chaos
+//! plane ([`crate::chaos::flake_frame`]) leans on exactly these checks:
+//! a flaked (bit-flipped or truncated) frame is always *rejected* here,
+//! never mis-decoded into different bytes — property-tested in
+//! `tests/props_chaos.rs` and drilled live by the `Flake` fault.
 //!
 //! Two payload shapes share the format: model payloads (f32 vectors, the
 //! original `GlobalModel`/`ClientUpdate`/`Metrics` kinds) and the `net`
@@ -517,6 +521,26 @@ mod tests {
                 decode_update(&bad, &codec, 15).is_err(),
                 "codec id {wrong} must be rejected, not mis-decoded"
             );
+        }
+    }
+
+    #[test]
+    fn chaos_flaked_frames_are_rejected_across_kinds() {
+        // The chaos plane's link-flake contract from the transport's side:
+        // whatever the kind or compression, a flaked frame fails decode.
+        let body: Vec<u8> = (0..257u16).map(|i| (i * 7 % 251) as u8).collect();
+        for kind in [MsgKind::GlobalModel, MsgKind::UpdatePush, MsgKind::Heartbeat] {
+            for compress in [false, true] {
+                let clean = encode_bytes(kind, &body, compress).unwrap();
+                for seed in 0..16u64 {
+                    let mut bad = clean.clone();
+                    crate::chaos::flake_frame(&mut bad, seed);
+                    assert!(
+                        decode_bytes(&bad).is_err(),
+                        "{kind:?} compress={compress} seed={seed}"
+                    );
+                }
+            }
         }
     }
 

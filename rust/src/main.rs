@@ -15,8 +15,13 @@
 //!              [--workers N|auto] [--parallel-dispatch]
 //!              [--codec none|deflate|q8[:block]|q4[:block]|topk[:permille]]
 //! photon serve [same training flags] [--bind 0.0.0.0:7070] [--min-workers K]
-//!              [--deadline-secs F] [--no-compress] [--codec q8]
-//!              run the Aggregator as a TCP service (deployment plane)
+//!              [--deadline-secs F] [--migrate] [--no-compress] [--codec q8]
+//!              run the Aggregator as a TCP service (deployment plane);
+//!              --migrate reassigns a dead/silent worker's unstarted
+//!              clients to live workers before the deadline cut
+//! photon exp chaos [--fleet W] [--rates 0,15,30,45] [--deadline-secs F]
+//!              seeded chaos sweep: fault rate × lease migration, with
+//!              bit-exact trace replay and sim-priced churn
 //! photon worker --connect HOST:7070 [--name NAME]
 //!              run one LLM Node worker against a remote Aggregator
 //! photon eval --config m350a               downstream ICL suite on a fresh init
@@ -47,10 +52,15 @@ const SPEC: Spec = Spec {
         "bind", "connect", "name", "deadline-secs", "min-workers", "fleet",
         // update-codec plane (train / serve / exp comm|distributed|wallclock)
         "codec",
+        // resilience plane (exp chaos)
+        "rates",
     ],
     flags: &[
         "fast", "paper-scale", "hetero", "mc4", "keep-opt", "resume",
         "fleet-hetero", "verbose", "parallel-dispatch", "no-compress",
+        // resilience plane (serve / exp chaos): mid-round client-lease
+        // migration off a dead or silent worker (needs --deadline-secs)
+        "migrate",
     ],
 };
 
@@ -243,6 +253,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             x if x > 0.0 => Some(x),
             _ => None,
         },
+        migrate: args.flag("migrate"),
         compress: !args.flag("no-compress"),
         ..ServeOpts::default()
     };
@@ -259,6 +270,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     server.run()?;
     if !server.cuts.is_empty() {
         println!("[serve] realized straggler/crash cuts: {:?}", server.cuts);
+    }
+    let trace = server.trace();
+    if trace.total_migrated() + trace.total_rejoined() > 0 {
+        println!(
+            "[serve] elastic events: {} lease migration(s), {} worker rejoin(s)",
+            trace.total_migrated(),
+            trace.total_rejoined()
+        );
     }
     let out = photon::util::results_dir("serve").join(format!("{model}.csv"));
     server.federation().log.write_csv(&out)?;

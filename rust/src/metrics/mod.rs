@@ -208,6 +208,60 @@ impl TimelineLog {
     }
 }
 
+/// One cell of the `photon exp chaos` resilience sweep: a chaotic
+/// loopback fleet at one fault rate × migration setting, its realized
+/// damage, the bit-parity verdict of the in-process trace replay, and the
+/// wall-clock the simulator prices for the same churned schedule under
+/// one aggregation policy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResilienceRow {
+    /// Aggregate per-(worker, round) fault probability, in percent.
+    pub fault_pct: f64,
+    pub migrate: bool,
+    /// Simulator aggregation policy label (`sync`/`semisync`/`overlap`).
+    pub policy: String,
+    pub final_ppl: f64,
+    pub final_nll: f64,
+    /// Mean fraction of the sampled clients that made each aggregation.
+    pub participation: f64,
+    pub cuts: usize,
+    pub migrations: usize,
+    pub rejoins: usize,
+    /// 1 when the fleet's records + global model bit-equal the in-process
+    /// replay of its realized trace (`Federation::run_trace`).
+    pub replay_agree: bool,
+    /// Simulated wall-clock of the churned schedule under `policy`.
+    pub sim_secs: f64,
+    pub sim_dropped: usize,
+}
+
+pub const RESILIENCE_CSV_HEADER: [&str; 12] = [
+    "fault_pct", "migrate", "policy", "final_ppl", "final_nll", "participation",
+    "cuts", "migrations", "rejoins", "replay_agree", "sim_secs", "sim_dropped",
+];
+
+/// Write the resilience sweep CSV (`results/chaos/resilience.csv`).
+pub fn write_resilience_csv(path: &Path, rows: &[ResilienceRow]) -> Result<()> {
+    let mut w = CsvWriter::create(path, &RESILIENCE_CSV_HEADER)?;
+    for r in rows {
+        w.row_mixed(&[
+            format!("{:.1}", r.fault_pct),
+            (r.migrate as u8).to_string(),
+            r.policy.clone(),
+            format!("{:.6}", r.final_ppl),
+            format!("{:.6}", r.final_nll),
+            format!("{:.4}", r.participation),
+            r.cuts.to_string(),
+            r.migrations.to_string(),
+            r.rejoins.to_string(),
+            (r.replay_agree as u8).to_string(),
+            format!("{:.3}", r.sim_secs),
+            r.sim_dropped.to_string(),
+        ])?;
+    }
+    w.finish()
+}
+
 /// Mean + population std of a slice.
 pub fn mean_std(xs: &[f64]) -> (f64, f64) {
     if xs.is_empty() {
@@ -373,6 +427,34 @@ mod tests {
         let dropped_row = text.lines().nth(2).unwrap();
         assert!(dropped_row.contains(",-1,"), "{dropped_row}");
         assert!(dropped_row.ends_with(",0"), "{dropped_row}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resilience_csv_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("photon_rz_{}", std::process::id()));
+        let rows = vec![ResilienceRow {
+            fault_pct: 25.0,
+            migrate: true,
+            policy: "semisync".into(),
+            final_ppl: 41.25,
+            final_nll: 3.72,
+            participation: 0.8125,
+            cuts: 7,
+            migrations: 3,
+            rejoins: 2,
+            replay_agree: true,
+            sim_secs: 123.456,
+            sim_dropped: 9,
+        }];
+        let p = dir.join("resilience.csv");
+        write_resilience_csv(&p, &rows).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.starts_with("fault_pct,migrate,policy"));
+        let row = text.lines().nth(1).unwrap();
+        assert!(row.starts_with("25.0,1,semisync,41.25"), "{row}");
+        assert!(row.contains(",7,3,2,1,"), "{row}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,16 +1,33 @@
 //! Deterministic in-process loopback fleet: one `net::server` Aggregator
 //! plus K `net::worker` threads over `127.0.0.1` TCP, sharing a single
 //! compiled model runtime. This is the test/experiment entry point for the
-//! deployment plane — `photon exp distributed` and
-//! `tests/integration_net.rs` drive it to prove bit-exact parity with the
-//! in-process `Federation::run`.
+//! deployment plane — `photon exp distributed`, `photon exp chaos`, and
+//! `tests/integration_net.rs` / `tests/integration_chaos.rs` drive it to
+//! prove bit-exact parity with the in-process `Federation::run`.
+//!
+//! With a [`chaos::Schedule`] injected, each worker thread acts out its
+//! per-round faults (crash, hang, slow, link flake) and — when the
+//! schedule says so — **rejoins** the server after a delay with its
+//! identity, reclaiming its slot and in-flight leases. The realized
+//! outcome (cuts, migrations, rejoins) comes back as
+//! [`FleetReport::trace`], replayable bit-exactly with
+//! `Federation::run_trace`.
+//!
+//! Thread collection runs under a watchdog ([`FleetOpts::watchdog_secs`]):
+//! a wedged worker or server fails the run with a diagnosis naming the
+//! stuck threads instead of hanging the whole test suite on a `join`.
+//! (The stuck threads are left detached; the server's shutdown path
+//! unblocks their sockets soon after, and test processes exit anyway.)
 
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::mpsc;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
+use crate::chaos;
 use crate::config::ExperimentConfig;
 use crate::coordinator::Federation;
 use crate::metrics::RoundRecord;
@@ -19,7 +36,7 @@ use crate::net::worker::{run_worker, WorkerOpts, WorkerReport};
 use crate::runtime::ModelRuntime;
 
 /// Loopback-fleet knobs.
-#[derive(Clone, Default)]
+#[derive(Clone)]
 pub struct FleetOpts {
     /// Worker threads to spawn (the server waits for all of them).
     pub workers: usize,
@@ -28,12 +45,38 @@ pub struct FleetOpts {
     /// Deflate model payloads on the wire.
     pub compress: bool,
     /// Fault hooks: worker index → round at which it "crashes"
-    /// (disconnects mid-round without replying).
+    /// (disconnects mid-round without replying). The chaos schedule is
+    /// the richer generalization; this stays for targeted drills.
     pub die_at_round: HashMap<usize, u64>,
+    /// Seeded per-(worker, round) fault plan: crash (with rejoin), hang,
+    /// slow-down, link flake. Hang/flake cells require `deadline_secs`.
+    pub chaos: Option<chaos::Schedule>,
+    /// Opt-in mid-round client-lease migration (requires a deadline).
+    pub migrate: bool,
     /// Checkpoint directory for the server federation.
     pub ckpt_dir: Option<PathBuf>,
     /// Resume the server from the latest checkpoint in `ckpt_dir`.
     pub resume: bool,
+    /// Watchdog on collecting the worker/server threads: `Some(s)` fails
+    /// the run with a diagnosis after `s` seconds instead of wedging the
+    /// suite on a hung thread; `None` waits forever.
+    pub watchdog_secs: Option<f64>,
+}
+
+impl Default for FleetOpts {
+    fn default() -> FleetOpts {
+        FleetOpts {
+            workers: 1,
+            deadline_secs: None,
+            compress: true,
+            die_at_round: HashMap::new(),
+            chaos: None,
+            migrate: false,
+            ckpt_dir: None,
+            resume: false,
+            watchdog_secs: Some(600.0),
+        }
+    }
 }
 
 /// Everything a loopback run produces.
@@ -46,22 +89,112 @@ pub struct FleetReport {
     pub global: Vec<f32>,
     /// Realized deadline/disconnect cuts per round.
     pub cuts: Vec<(usize, Vec<usize>)>,
+    /// The full realized chaos trace (cuts + migrations + rejoins),
+    /// replayable bit-exactly with `Federation::run_trace`.
+    pub trace: chaos::Trace,
+    /// Per logical worker, merged across its crash/rejoin sessions.
     pub workers: Vec<WorkerReport>,
     /// Errors from worker threads (a crashed-by-hook worker is *not* an
     /// error; it reports `aborted_at`).
     pub worker_errors: Vec<String>,
 }
 
+/// One logical worker's thread: serve sessions, crashing and rejoining as
+/// the chaos schedule dictates, until the server shuts the fleet down.
+fn worker_thread(
+    addr: String,
+    index: usize,
+    model: Arc<ModelRuntime>,
+    die_at_round: Option<u64>,
+    mut chaos_w: Option<chaos::WorkerChaos>,
+) -> Result<WorkerReport> {
+    let mut merged = WorkerReport::default();
+    let mut identity: Option<u64> = None;
+    let mut sessions = 0u64;
+    let mut retries = 0u32;
+    loop {
+        let wopts = WorkerOpts {
+            name: format!("loopback-{index}"),
+            model: Some(model.clone()),
+            die_at_round: if sessions == 0 { die_at_round } else { None },
+            identity,
+            chaos: chaos_w.clone(),
+            verbose: false,
+        };
+        match run_worker(&addr, wopts) {
+            Ok(r) => {
+                merged.worker_slot = r.worker_slot;
+                merged.rounds_served += r.rounds_served;
+                merged.updates_pushed += r.updates_pushed;
+                merged.rounds_hung += r.rounds_hung;
+                merged.frames_flaked += r.frames_flaked;
+                if r.aborted_at.is_some() {
+                    // Remember the last crash even after clean rejoined
+                    // sessions (diagnostics only).
+                    merged.aborted_at = r.aborted_at;
+                    merged.rejoin_after_ms = r.rejoin_after_ms;
+                }
+                match (r.aborted_at, r.rejoin_after_ms) {
+                    (Some(round), Some(delay_ms)) => {
+                        // Crash with a rejoin: come back with our identity
+                        // after the delay. Consume the crash cell first so
+                        // a re-dispatch of the same round does not crash
+                        // the rejoined session in a loop.
+                        if let Some(c) = chaos_w.as_mut() {
+                            c.consume(round);
+                        }
+                        identity = Some(r.worker_slot);
+                        std::thread::sleep(Duration::from_millis(delay_ms));
+                        sessions += 1;
+                        retries = 0;
+                    }
+                    _ => return Ok(merged),
+                }
+            }
+            // A rejoin can race the server processing our disconnect (the
+            // slot still looks alive ⇒ "not reclaimable"); back off and
+            // retry a few times before giving up.
+            Err(e)
+                if sessions > 0
+                    && retries < 3
+                    && format!("{e:#}").contains("reclaimable") =>
+            {
+                retries += 1;
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            // A rejoin that raced the end of the run (server already shut
+            // down, socket refused, or the slot re-admission kept being
+            // refused) is a clean exit for an elastic worker, not a
+            // failure.
+            Err(_) if sessions > 0 => return Ok(merged),
+            Err(e) => return Err(e),
+        }
+    }
+}
+
 /// Run a whole federation over localhost TCP with `opts.workers` workers.
 /// Deterministic given (cfg, opts): the record stream and final global
 /// model match the in-process `Federation::run` bit-for-bit when no cuts
-/// occur, and match `Federation::run_round_cut` replayed with
-/// `FleetReport::cuts` when they do.
+/// occur, and match `Federation::run_trace` replayed with
+/// [`FleetReport::trace`] when chaos strikes.
 pub fn run_loopback(
     cfg: ExperimentConfig,
     model: Arc<ModelRuntime>,
     opts: FleetOpts,
 ) -> Result<FleetReport> {
+    if let Some(schedule) = &opts.chaos {
+        anyhow::ensure!(
+            schedule.workers >= opts.workers,
+            "chaos schedule covers {} workers, fleet has {}",
+            schedule.workers,
+            opts.workers
+        );
+        anyhow::ensure!(
+            opts.deadline_secs.is_some() || !schedule.needs_deadline(),
+            "this chaos schedule hangs/flakes workers — set deadline_secs so \
+             the silent leases are cut instead of wedging the round"
+        );
+    }
     let mut fed = Federation::with_model(cfg, model.clone())?;
     if let Some(dir) = &opts.ckpt_dir {
         fed.ckpt_dir = Some(dir.clone());
@@ -73,47 +206,108 @@ pub fn run_loopback(
         bind: "127.0.0.1:0".into(),
         min_workers: opts.workers,
         deadline_secs: opts.deadline_secs,
+        migrate: opts.migrate,
         compress: opts.compress,
         ..ServeOpts::default()
     };
     let mut server = Server::with_federation(fed, serve)?;
     let addr = server.local_addr().to_string();
 
-    let server_handle = std::thread::spawn(move || {
-        let result = server.run();
-        (server, result)
+    // Results come back over channels so collection can time out with a
+    // diagnosis — a `JoinHandle::join` on a wedged thread would hang the
+    // whole suite (the ISSUE 5 watchdog satellite). Panics are caught and
+    // reported as results, never left to vanish with the sender.
+    let (stx, srx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            let result = server.run();
+            (server, result)
+        }))
+        .map_err(|_| "server thread panicked".to_string());
+        let _ = stx.send(outcome);
     });
-    let worker_handles: Vec<_> = (0..opts.workers)
-        .map(|i| {
-            let addr = addr.clone();
-            let wopts = WorkerOpts {
-                name: format!("loopback-{i}"),
-                model: Some(model.clone()),
-                die_at_round: opts.die_at_round.get(&i).copied(),
-                verbose: false,
-            };
-            std::thread::spawn(move || run_worker(&addr, wopts))
-        })
-        .collect();
+    let (wtx, wrx) = mpsc::channel();
+    for i in 0..opts.workers {
+        let addr = addr.clone();
+        let model = model.clone();
+        let die = opts.die_at_round.get(&i).copied();
+        let chaos_w = opts.chaos.as_ref().map(|s| s.worker(i));
+        let wtx = wtx.clone();
+        std::thread::spawn(move || {
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                worker_thread(addr, i, model, die, chaos_w)
+            }))
+            .unwrap_or_else(|_| Err(anyhow::anyhow!("worker thread panicked")));
+            let _ = wtx.send((i, result));
+        });
+    }
+    drop(wtx);
 
-    let mut workers = Vec::new();
+    let give_up = opts
+        .watchdog_secs
+        .map(|s| Instant::now() + Duration::from_secs_f64(s));
+    let mut workers: Vec<Option<WorkerReport>> = (0..opts.workers).map(|_| None).collect();
     let mut worker_errors = Vec::new();
-    for (i, h) in worker_handles.into_iter().enumerate() {
-        match h.join() {
-            Ok(Ok(report)) => workers.push(report),
-            Ok(Err(e)) => worker_errors.push(format!("worker {i}: {e:#}")),
-            Err(_) => worker_errors.push(format!("worker {i}: panicked")),
+    let mut collected = 0usize;
+    while collected < opts.workers {
+        match recv_until(&wrx, give_up) {
+            Some((i, Ok(report))) => {
+                workers[i] = Some(report);
+                collected += 1;
+            }
+            Some((i, Err(e))) => {
+                worker_errors.push(format!("worker {i}: {e:#}"));
+                workers[i] = Some(WorkerReport::default());
+                collected += 1;
+            }
+            None => {
+                let stuck: Vec<usize> =
+                    (0..opts.workers).filter(|&i| workers[i].is_none()).collect();
+                bail!(
+                    "loopback watchdog ({}) fired: worker thread(s) {stuck:?} never \
+                     finished — likely a wedged round (no deadline set?) or a \
+                     deadlocked join; the server thread is abandoned",
+                    watchdog_label(opts.watchdog_secs),
+                );
+            }
         }
     }
-    let (server, result) = server_handle
-        .join()
-        .map_err(|_| anyhow::anyhow!("server thread panicked"))?;
+    let (server, result) = match recv_until(&srx, give_up) {
+        Some(Ok(pair)) => pair,
+        Some(Err(panic_msg)) => bail!("server run failed: {panic_msg}"),
+        None => bail!(
+            "loopback watchdog ({}) fired: every worker finished but the server \
+             thread never returned — wedged round loop or acceptor deadlock",
+            watchdog_label(opts.watchdog_secs),
+        ),
+    };
     let records = result.context("server run failed")?;
     Ok(FleetReport {
         records,
         global: server.federation().global.clone(),
         cuts: server.cuts.clone(),
-        workers,
+        trace: server.trace(),
+        workers: workers.into_iter().map(|w| w.unwrap_or_default()).collect(),
         worker_errors,
     })
+}
+
+fn watchdog_label(secs: Option<f64>) -> String {
+    secs.map(|s| format!("{s}s")).unwrap_or_else(|| "no timeout".into())
+}
+
+/// Receive one value, bounded by the optional watchdog instant. `None`
+/// means the watchdog fired (or every sender vanished without a value —
+/// equally a diagnosis-worthy wedge).
+fn recv_until<T>(rx: &mpsc::Receiver<T>, give_up: Option<Instant>) -> Option<T> {
+    match give_up {
+        None => rx.recv().ok(),
+        Some(at) => {
+            let now = Instant::now();
+            if now >= at {
+                return None;
+            }
+            rx.recv_timeout(at - now).ok()
+        }
+    }
 }

@@ -7,26 +7,35 @@
 //!                 carried in Photon-Link frames with a version handshake
 //! * [`server`]  — the Aggregator service: admits workers, replays the
 //!                 exact sampler/fault schedule, enforces the per-round
-//!                 straggler deadline, folds updates in sampled order, and
+//!                 straggler deadline, folds updates in sampled order
+//!                 through a client-lease ledger (`chaos::LeaseBook`,
+//!                 exactly-once), re-attaches rejoining workers to their
+//!                 slot + in-flight leases, optionally migrates a dead or
+//!                 silent worker's leases mid-round (`--migrate`), and
 //!                 checkpoints every round for restart recovery
 //! * [`worker`]  — the stateless LLM Node executor: pulls the model +
 //!                 client state each round, runs the *same*
 //!                 `ClientNode::run_local_round` the in-process federation
-//!                 runs, pushes update + advanced state back
-//! * [`harness`] — deterministic in-process loopback fleet for tests and
-//!                 the `photon exp distributed` parity sweep
+//!                 runs, pushes update + advanced state back; acts out the
+//!                 injected chaos faults (crash/hang/slow/flake)
+//! * [`harness`] — deterministic in-process loopback fleet (with chaos
+//!                 injection, rejoin loops, and a join watchdog) for
+//!                 tests and the `photon exp distributed`/`exp chaos`
+//!                 sweeps
 //!
 //! ## The invariant
 //!
 //! A localhost fleet of K workers reproduces `Federation::run` **bit for
 //! bit** — same global model, same round records (wall-clock fields aside).
-//! When faults strike (deadline cuts, worker crashes), the realized cut
-//! schedule is recorded and the run remains bit-reproducible in-process
-//! via `Federation::run_round_cut`. The mechanism is server-owned client
-//! state: workers receive every input (global model, stream cursors,
-//! KeepOpt moments) with the assignment and return the advanced state with
-//! the update, so a client whose worker vanishes is *exactly* a dropped
-//! client.
+//! When faults strike (deadline cuts, worker crashes, rejoins, lease
+//! migrations), the realized outcome is recorded as a `chaos::Trace` and
+//! the run remains bit-reproducible in-process via
+//! `Federation::run_trace`. The mechanism is server-owned client state:
+//! workers receive every input (global model, stream cursors, KeepOpt
+//! moments) with the assignment and return the advanced state with the
+//! update, so a client whose worker vanishes is *exactly* a dropped
+//! client — and a lease migrated to another worker computes the
+//! *identical* bits, because worker identity never enters the math.
 //!
 //! CLI: `photon serve …` / `photon worker --connect host:port`; see the
 //! README quickstart and `docs/ARCHITECTURE.md` ("Deployment plane").

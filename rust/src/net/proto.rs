@@ -7,7 +7,7 @@
 //!
 //! ```text
 //! worker                          server
-//!   Join {proto, name}      ──▶
+//!   Join {proto, name, id}  ──▶      (id 0 = fresh; slot+1 = rejoin)
 //!                           ◀──  JoinAck {session, slot, spec}   (L.1–2)
 //!                                   | or Reject {reason}
 //!   per round:
@@ -52,7 +52,9 @@ use crate::optim::schedule::CosineSchedule;
 /// Control-protocol version (independent of the link wire version).
 /// v2: the task spec negotiates an update codec and `UpdatePush` bodies
 /// may carry a lossy-coded pseudo-delta instead of dense params.
-pub const PROTO_VERSION: u16 = 2;
+/// v3: `Join` carries a rejoin identity — a returning worker reclaims its
+/// slot and its in-flight client leases instead of being admitted fresh.
+pub const PROTO_VERSION: u16 = 3;
 
 /// Refuse to read frames larger than this from a socket (corruption guard;
 /// generous enough for a 7B-analogue f32 payload plus KeepOpt moments).
@@ -64,6 +66,13 @@ pub struct Join {
     pub proto: u16,
     /// Human-readable worker name (logs only; never an identity).
     pub name: String,
+    /// Rejoin identity: `0` requests fresh admission; `slot + 1` asks to
+    /// reclaim a previously assigned worker slot (and its in-flight
+    /// client leases) after a crash. The server refuses identities that
+    /// name a live or unknown slot — an identity is only ever the slot
+    /// the *same server incarnation* handed out in its `JoinAck`, so a
+    /// worker from a restarted server's past life is rejected cleanly.
+    pub identity: u64,
 }
 
 /// Everything a stateless worker needs to run local rounds exactly as the
@@ -329,6 +338,7 @@ impl Msg {
             Msg::Join(m) => {
                 e.u16(m.proto);
                 e.str(&m.name);
+                e.u64(m.identity);
             }
             Msg::JoinAck(m) => {
                 e.u16(m.proto);
@@ -385,7 +395,11 @@ impl Msg {
         let (kind, body) = link::decode_bytes(frame)?;
         let mut d = Dec::new(&body);
         let msg = match kind {
-            MsgKind::Join => Msg::Join(Join { proto: d.u16()?, name: d.str()? }),
+            MsgKind::Join => Msg::Join(Join {
+                proto: d.u16()?,
+                name: d.str()?,
+                identity: d.u64()?,
+            }),
             MsgKind::JoinAck => Msg::JoinAck(JoinAck {
                 proto: d.u16()?,
                 session: d.u64()?,
@@ -441,15 +455,25 @@ impl Msg {
 /// Write one length-prefixed control frame to a stream.
 pub fn write_msg(w: &mut impl Write, msg: &Msg, compress: bool) -> Result<()> {
     let frame = msg.encode(compress)?;
+    write_frame(w, &frame).with_context(|| format!("writing {:?} frame", msg.kind()))
+}
+
+/// Write a pre-encoded link frame with its `u32` length prefix. The chaos
+/// harness uses this to ship deliberately corrupted frames with a
+/// *consistent* prefix — the stream framing survives, the link decode is
+/// what fails, and the receiver can keep reading subsequent frames.
+pub fn write_frame(w: &mut impl Write, frame: &[u8]) -> Result<()> {
     w.write_all(&(frame.len() as u32).to_le_bytes())
-        .and_then(|_| w.write_all(&frame))
-        .and_then(|_| w.flush())
-        .with_context(|| format!("writing {:?} frame", msg.kind()))?;
+        .and_then(|_| w.write_all(frame))
+        .and_then(|_| w.flush())?;
     Ok(())
 }
 
-/// Read one length-prefixed control frame from a stream (blocking).
-pub fn read_msg(r: &mut impl Read) -> Result<Msg> {
+/// Read one length-prefixed frame from a stream (blocking, IO only — no
+/// decode). Split from [`read_msg`] so receivers can distinguish a dead
+/// stream (IO error here) from a corrupted-but-framed payload (decode
+/// error afterwards) and skip the latter instead of dropping the peer.
+pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
     let mut len = [0u8; 4];
     r.read_exact(&mut len).context("reading frame length")?;
     let len = u32::from_le_bytes(len) as usize;
@@ -459,7 +483,12 @@ pub fn read_msg(r: &mut impl Read) -> Result<Msg> {
     );
     let mut frame = vec![0u8; len];
     r.read_exact(&mut frame).context("reading frame body")?;
-    Msg::decode(&frame)
+    Ok(frame)
+}
+
+/// Read one length-prefixed control frame from a stream (blocking).
+pub fn read_msg(r: &mut impl Read) -> Result<Msg> {
+    Msg::decode(&read_frame(r)?)
 }
 
 #[cfg(test)]
@@ -506,13 +535,20 @@ mod tests {
 
     #[test]
     fn join_and_ack_roundtrip() {
-        let j = Msg::Join(Join { proto: PROTO_VERSION, name: "worker-3".into() });
-        match roundtrip(&j, false) {
-            Msg::Join(b) => {
-                assert_eq!(b.proto, PROTO_VERSION);
-                assert_eq!(b.name, "worker-3");
+        for identity in [0u64, 3] {
+            let j = Msg::Join(Join {
+                proto: PROTO_VERSION,
+                name: "worker-3".into(),
+                identity,
+            });
+            match roundtrip(&j, false) {
+                Msg::Join(b) => {
+                    assert_eq!(b.proto, PROTO_VERSION);
+                    assert_eq!(b.name, "worker-3");
+                    assert_eq!(b.identity, identity, "rejoin identity survives the wire");
+                }
+                other => panic!("wrong kind {other:?}"),
             }
-            other => panic!("wrong kind {other:?}"),
         }
         let a = Msg::JoinAck(JoinAck {
             proto: PROTO_VERSION,

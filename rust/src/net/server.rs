@@ -14,20 +14,40 @@
 //! `Federation::run` bit-for-bit: same global model, same round records
 //! (modulo wall-clock fields — see `RoundRecord::agrees_with`).
 //!
-//! ## Faults
+//! ## Faults and elastic membership
 //!
-//! A per-round deadline (`ServeOpts::deadline_secs`) cuts stragglers: when
-//! it expires, pending clients are dropped from the aggregation exactly as
-//! sampler-dropped clients are, and their server-owned state stays at its
-//! pre-round value. A worker disconnect mid-round cuts its pending clients
-//! immediately through the same path. Every realized cut is recorded in
-//! [`Server::cuts`], so the run can be replayed in-process with
-//! [`Federation::run_round_cut`]. Because the federation checkpoints every
+//! Every runnable client's round is a **lease** tracked in a
+//! [`chaos::LeaseBook`]: dispatched to one worker, folded only from the
+//! worker that currently holds it, at most once. On top of that ledger:
+//!
+//! * A per-round deadline (`ServeOpts::deadline_secs`) cuts stragglers:
+//!   when it expires, pending clients drop from the aggregation exactly as
+//!   sampler-dropped clients do, and their server-owned state stays at its
+//!   pre-round value.
+//! * A worker disconnect mid-round cuts its pending clients immediately
+//!   when no deadline is configured (the PR 3 behavior). With a deadline,
+//!   the leases stay pending until it fires — a **rejoining** worker
+//!   (`Join.identity = slot + 1`) reclaims its slot and its in-flight
+//!   leases and gets them re-dispatched at their unchanged pre-round
+//!   state.
+//! * With `ServeOpts::migrate`, leases move instead of waiting: a dead
+//!   worker's pending clients are reassigned to live workers right away,
+//!   and halfway to the deadline any connected worker that has pushed
+//!   nothing has its unstarted clients reassigned too. Stale pushes from
+//!   the previous holder are refused by the lease ledger (exactly-once).
+//! * A frame that framed correctly but fails link decode (a flake) is
+//!   skipped, not fatal: the affected client simply never arrives and is
+//!   cut or migrated like any straggler — malformed ⇒ cut, never crash.
+//!
+//! Every realized cut is recorded in [`Server::cuts`], every realized
+//! migration/rejoin next to it; [`Server::trace`] assembles the whole
+//! [`chaos::Trace`], and `Federation::run_trace` replays the run
+//! bit-exactly in-process. Because the federation checkpoints every
 //! round, killing the server and restarting it with the same `--ckpt-dir`
 //! resumes sample-exact (`Federation::try_resume_from`) — workers simply
 //! reconnect and keep serving.
 
-use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::collections::{BTreeMap, HashMap};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
@@ -36,7 +56,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::chaos::{self, LeaseBook, Migration};
 use crate::ckpt::ClientCkpt;
+use crate::coordinator::federation::RoundDispatch;
 use crate::coordinator::{ClientUpdate, Federation};
 use crate::metrics::RoundRecord;
 use crate::net::proto::{
@@ -52,8 +74,14 @@ pub struct ServeOpts {
     /// Wait for this many workers to join before dispatching round 0.
     pub min_workers: usize,
     /// Per-round straggler deadline in seconds (measured from dispatch);
-    /// `None` disables the timer (disconnects still cut).
+    /// `None` disables the timer (disconnects still cut — immediately,
+    /// since without a deadline there is no bounded rejoin window).
     pub deadline_secs: Option<f64>,
+    /// Opt-in mid-round client-lease migration (requires a deadline): a
+    /// dead or silent worker's unstarted clients are reassigned to live
+    /// workers before the deadline cut. Realized migrations are recorded
+    /// in [`Server::migrations`].
+    pub migrate: bool,
     /// Deflate model payloads on the wire (lossless; bit-exact decode).
     pub compress: bool,
     /// How long to wait for the admission barrier before giving up.
@@ -69,6 +97,7 @@ impl Default for ServeOpts {
             bind: "127.0.0.1:7070".into(),
             min_workers: 1,
             deadline_secs: None,
+            migrate: false,
             compress: true,
             join_timeout_secs: 120.0,
             io_timeout_secs: 30.0,
@@ -88,6 +117,9 @@ struct WorkerConn {
 enum Event {
     Joined { conn: usize, stream: TcpStream, join: proto::Join },
     Frame { conn: usize, msg: Msg },
+    /// A frame that framed correctly (length prefix intact) but failed
+    /// link decode — a flaked payload. The stream itself is still good.
+    Malformed { conn: usize },
     Gone { conn: usize },
 }
 
@@ -101,12 +133,26 @@ pub struct Server {
     /// Realized deadline/disconnect cuts per round — the schedule that
     /// replays this run in-process via `Federation::run_round_cut`.
     pub cuts: Vec<(usize, Vec<usize>)>,
+    /// Realized mid-round client-lease migrations per round (recorded
+    /// next to `cuts`; they never affect the math, only who computed).
+    pub migrations: Vec<(usize, Vec<Migration>)>,
+    /// Realized worker rejoins as `(round, worker_slot)`.
+    pub rejoins: Vec<(usize, usize)>,
+    /// Flaked (framed-but-undecodable) frames dropped, for diagnostics.
+    pub malformed_frames: u64,
 }
 
 impl Server {
     /// Bind the service around an existing federation (use
     /// `Federation::new` + `try_resume_from` for the restart path).
     pub fn with_federation(fed: Federation, opts: ServeOpts) -> Result<Server> {
+        if opts.migrate {
+            anyhow::ensure!(
+                opts.deadline_secs.is_some(),
+                "--migrate needs a per-round deadline (--deadline-secs) to bound \
+                 the migration window"
+            );
+        }
         let listener = TcpListener::bind(&opts.bind)
             .with_context(|| format!("binding {}", opts.bind))?;
         let addr = listener.local_addr()?;
@@ -115,7 +161,17 @@ impl Server {
                 .duration_since(std::time::UNIX_EPOCH)
                 .map(|d| d.as_nanos() as u64)
                 .unwrap_or(0x5e55_1017);
-        Ok(Server { fed, opts, listener: Some(listener), addr, session, cuts: Vec::new() })
+        Ok(Server {
+            fed,
+            opts,
+            listener: Some(listener),
+            addr,
+            session,
+            cuts: Vec::new(),
+            migrations: Vec::new(),
+            rejoins: Vec::new(),
+            malformed_frames: 0,
+        })
     }
 
     /// The bound address (useful with `bind: "127.0.0.1:0"`).
@@ -129,6 +185,31 @@ impl Server {
 
     pub fn federation_mut(&mut self) -> &mut Federation {
         &mut self.fed
+    }
+
+    /// The realized chaos trace of this run — cuts, migrations, and
+    /// rejoins per round, replayable bit-exactly with
+    /// `Federation::run_trace`.
+    pub fn trace(&self) -> chaos::Trace {
+        fn entry(
+            rounds: &mut BTreeMap<usize, chaos::RoundTrace>,
+            r: usize,
+        ) -> &mut chaos::RoundTrace {
+            rounds
+                .entry(r)
+                .or_insert_with(|| chaos::RoundTrace { round: r, ..Default::default() })
+        }
+        let mut rounds: BTreeMap<usize, chaos::RoundTrace> = BTreeMap::new();
+        for (r, c) in &self.cuts {
+            entry(&mut rounds, *r).cut = c.clone();
+        }
+        for (r, m) in &self.migrations {
+            entry(&mut rounds, *r).migrations = m.clone();
+        }
+        for (r, s) in &self.rejoins {
+            entry(&mut rounds, *r).rejoined.push(*s);
+        }
+        chaos::Trace { rounds: rounds.into_values().collect() }
     }
 
     /// The task spec shipped to joining workers: everything a stateless
@@ -151,7 +232,16 @@ impl Server {
         }
     }
 
-    fn admit(&self, workers: &mut Vec<WorkerConn>, conn: usize, mut stream: TcpStream, join: proto::Join) {
+    /// Admit a fresh worker, or re-attach a returning one to its old slot
+    /// (`Join.identity = slot + 1`). Returns `Some(slot)` on a successful
+    /// rejoin so the round loop can re-dispatch the reclaimed leases.
+    fn admit_or_rejoin(
+        &mut self,
+        workers: &mut Vec<WorkerConn>,
+        conn: usize,
+        mut stream: TcpStream,
+        join: proto::Join,
+    ) -> Option<usize> {
         if join.proto != PROTO_VERSION {
             let reject = Msg::Reject(Reject {
                 reason: format!(
@@ -160,10 +250,43 @@ impl Server {
                 ),
             });
             let _ = proto::write_msg(&mut stream, &reject, false);
-            return;
+            return None;
         }
         let _ = stream
             .set_write_timeout(Some(Duration::from_secs_f64(self.opts.io_timeout_secs)));
+        if join.identity > 0 {
+            // Rejoin path: the identity must name a slot this incarnation
+            // assigned and that is currently dead — a live slot means the
+            // identity is stolen or stale, and an unknown one belongs to a
+            // previous server life (state is in the checkpoint, not here).
+            let slot = (join.identity - 1) as usize;
+            if slot >= workers.len() || workers[slot].alive {
+                let reject = Msg::Reject(Reject {
+                    reason: format!(
+                        "identity {} does not name a reclaimable worker slot",
+                        join.identity
+                    ),
+                });
+                let _ = proto::write_msg(&mut stream, &reject, false);
+                return None;
+            }
+            let ack = Msg::JoinAck(JoinAck {
+                proto: PROTO_VERSION,
+                session: self.session,
+                worker_slot: slot as u64,
+                spec: self.task_spec(),
+            });
+            if proto::write_msg(&mut stream, &ack, false).is_err() {
+                return None;
+            }
+            println!(
+                "[serve] worker {:?} rejoined slot {slot} (round {})",
+                join.name, self.fed.next_round
+            );
+            workers[slot] = WorkerConn { conn, name: join.name, stream, alive: true };
+            self.rejoins.push((self.fed.next_round, slot));
+            return Some(slot);
+        }
         let ack = Msg::JoinAck(JoinAck {
             proto: PROTO_VERSION,
             session: self.session,
@@ -171,10 +294,11 @@ impl Server {
             spec: self.task_spec(),
         });
         if proto::write_msg(&mut stream, &ack, false).is_err() {
-            return;
+            return None;
         }
         println!("[serve] admitted worker {:?} (slot {})", join.name, workers.len());
         workers.push(WorkerConn { conn, name: join.name, stream, alive: true });
+        None
     }
 
     /// Serve the whole training run: admit ≥ `min_workers`, dispatch every
@@ -224,10 +348,10 @@ impl Server {
             }
             match rx.recv_timeout(join_deadline - now) {
                 Ok(Event::Joined { conn, stream, join }) => {
-                    self.admit(workers, conn, stream, join)
+                    self.admit_or_rejoin(workers, conn, stream, join);
                 }
                 Ok(Event::Gone { conn }) => mark_gone(workers, conn),
-                Ok(Event::Frame { .. }) => {}
+                Ok(Event::Frame { .. }) | Ok(Event::Malformed { .. }) => {}
                 Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => bail!("acceptor thread died"),
             }
@@ -239,101 +363,219 @@ impl Server {
         Ok(())
     }
 
+    /// Block until at least one worker is alive (a crashed fleet may be
+    /// mid-rejoin), up to the join timeout.
+    fn await_live_worker(
+        &mut self,
+        rx: &Receiver<Event>,
+        workers: &mut Vec<WorkerConn>,
+        round: usize,
+    ) -> Result<()> {
+        let give_up = Instant::now() + Duration::from_secs_f64(self.opts.join_timeout_secs);
+        while !workers.iter().any(|w| w.alive) {
+            let now = Instant::now();
+            if now >= give_up {
+                bail!(
+                    "no connected workers left at round {round} (state is \
+                     checkpointed; restart with --resume)"
+                );
+            }
+            match rx.recv_timeout(give_up - now) {
+                Ok(Event::Joined { conn, stream, join }) => {
+                    self.admit_or_rejoin(workers, conn, stream, join);
+                }
+                Ok(Event::Gone { conn }) => mark_gone(workers, conn),
+                Ok(_) => {}
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => bail!("acceptor thread died"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Re-dispatch `clients` (at their unchanged pre-round state) to
+    /// worker `widx` — the rejoin/migration delivery. On a write failure
+    /// the worker is marked dead and the leases stay pending for the
+    /// deadline (or the next rejoin) to resolve.
+    fn send_assign(
+        &mut self,
+        workers: &mut [WorkerConn],
+        widx: usize,
+        clients: &[usize],
+        d: &RoundDispatch,
+        steps_of: &HashMap<usize, u64>,
+    ) {
+        if clients.is_empty() {
+            return;
+        }
+        let tasks: Vec<AssignTask> = clients
+            .iter()
+            .map(|&c| AssignTask {
+                client: c as u64,
+                steps: steps_of[&c],
+                state: self.fed.client_state(c),
+            })
+            .collect();
+        let msg = Msg::RoundAssign(RoundAssign {
+            session: self.session,
+            round: d.round as u64,
+            seq_base: d.seq_base,
+            tasks,
+            global: self.fed.global.clone(),
+        });
+        if proto::write_msg(&mut workers[widx].stream, &msg, self.opts.compress).is_err() {
+            workers[widx].alive = false;
+        }
+    }
+
+    /// Move every pending lease of `from` onto the given live targets and
+    /// re-dispatch them. Records the realized migrations.
+    fn migrate_pending(
+        &mut self,
+        workers: &mut [WorkerConn],
+        book: &mut LeaseBook,
+        d: &RoundDispatch,
+        steps_of: &HashMap<usize, u64>,
+        from: usize,
+        targets: &[usize],
+        migs: &mut Vec<Migration>,
+    ) {
+        let moved = book.migrate_from(from, targets);
+        if moved.is_empty() {
+            return;
+        }
+        println!(
+            "[serve] round {}: migrating {} lease(s) off worker {:?} (slot {from})",
+            d.round,
+            moved.len(),
+            workers[from].name
+        );
+        for (widx, clients) in LeaseBook::group_by_target(&moved) {
+            self.send_assign(workers, widx, &clients, d, steps_of);
+        }
+        migs.extend(moved);
+    }
+
     /// Dispatch, collect, and commit one round.
     fn serve_round(&mut self, rx: &Receiver<Event>, workers: &mut Vec<WorkerConn>) -> Result<()> {
         let t0 = Instant::now();
+        self.await_live_worker(rx, workers, self.fed.next_round)?;
         let d = self.fed.plan_round();
         let live: Vec<usize> =
             (0..workers.len()).filter(|&i| workers[i].alive).collect();
-        if live.is_empty() {
-            bail!(
-                "no connected workers left at round {} (state is checkpointed; \
-                 restart with --resume)",
-                d.round
-            );
-        }
 
         // Static per-round partition of the runnable clients over the live
         // workers, in slot order. Which worker runs a client never affects
         // the math — all state travels with the assignment.
-        let mut slot_of: HashMap<usize, usize> = HashMap::new();
-        let mut owner_of: HashMap<usize, usize> = HashMap::new();
-        let mut per_worker: Vec<Vec<AssignTask>> = vec![Vec::new(); workers.len()];
-        for (slot, &(client, steps)) in d.runnable.iter().enumerate() {
+        let mut book = LeaseBook::new(&d.runnable);
+        let steps_of: HashMap<usize, u64> = d.runnable.iter().copied().collect();
+        let mut per_worker: Vec<Vec<usize>> = vec![Vec::new(); workers.len()];
+        for (slot, &(client, _)) in d.runnable.iter().enumerate() {
             let widx = live[slot % live.len()];
-            slot_of.insert(client, slot);
-            owner_of.insert(client, widx);
-            per_worker[widx].push(AssignTask {
-                client: client as u64,
-                steps,
-                state: self.fed.client_state(client),
-            });
+            book.lease(client, widx);
+            per_worker[widx].push(client);
         }
 
-        let mut pending: BTreeSet<usize> = BTreeSet::new();
-        let mut cut: Vec<usize> = Vec::new();
-        for widx in live {
-            let tasks = std::mem::take(&mut per_worker[widx]);
-            if tasks.is_empty() {
+        let deadline = self
+            .opts
+            .deadline_secs
+            .map(|s| t0 + Duration::from_secs_f64(s));
+        // Opt-in straggler migration fires once, halfway to the deadline.
+        let mut migrate_at = match (self.opts.migrate, self.opts.deadline_secs) {
+            (true, Some(s)) => Some(t0 + Duration::from_secs_f64(s / 2.0)),
+            _ => None,
+        };
+        let mut round_migs: Vec<Migration> = Vec::new();
+        // Progress signal per worker slot: pushes received this round
+        // (valid or not) — a worker with leases and zero pushes at the
+        // halfway mark is treated as hung and migrated away from.
+        // (Keyed, not indexed: workers admitted mid-round grow the list.)
+        let mut pushed_by: HashMap<usize, u64> = HashMap::new();
+
+        for &widx in &live {
+            let clients = std::mem::take(&mut per_worker[widx]);
+            if clients.is_empty() {
                 continue;
             }
-            let clients: Vec<usize> = tasks.iter().map(|t| t.client as usize).collect();
-            let msg = Msg::RoundAssign(RoundAssign {
-                session: self.session,
-                round: d.round as u64,
-                seq_base: d.seq_base,
-                tasks,
-                global: self.fed.global.clone(),
-            });
-            match proto::write_msg(&mut workers[widx].stream, &msg, self.opts.compress) {
-                Ok(()) => pending.extend(clients),
-                Err(_) => {
-                    // Worker unreachable at dispatch: cut its share now.
-                    workers[widx].alive = false;
-                    cut.extend(clients);
-                }
+            self.send_assign(workers, widx, &clients, &d, &steps_of);
+            if !workers[widx].alive && deadline.is_none() {
+                // Worker unreachable at dispatch and no rejoin window: cut
+                // its share now (the PR 3 semantics).
+                let _ = book.cut_pending_of(widx);
             }
         }
 
         // Collect updates until everyone answered, the deadline fires, or
         // the owning workers die.
-        let deadline = self
-            .opts
-            .deadline_secs
-            .map(|s| t0 + Duration::from_secs_f64(s));
         let mut arrived: BTreeMap<usize, (ClientUpdate, ClientCkpt)> = BTreeMap::new();
-        while !pending.is_empty() {
-            let timeout = match deadline {
-                Some(dl) => {
-                    let now = Instant::now();
-                    if now >= dl {
-                        cut.extend(pending.iter().copied());
-                        pending.clear();
-                        break;
-                    }
-                    dl - now
+        while book.pending_count() > 0 {
+            let now = Instant::now();
+            if let Some(dl) = deadline {
+                if now >= dl {
+                    book.cut_all_pending();
+                    break;
                 }
+            }
+            if let Some(m) = migrate_at {
+                if now >= m {
+                    migrate_at = None;
+                    // Any live worker with leases but no pushes yet is
+                    // treated as a silent straggler; its unstarted clients
+                    // move to the live workers that are making progress.
+                    let silent: Vec<usize> = (0..workers.len())
+                        .filter(|&w| {
+                            workers[w].alive
+                                && pushed_by.get(&w).copied().unwrap_or(0) == 0
+                                && !book.pending_of(w).is_empty()
+                        })
+                        .collect();
+                    let targets: Vec<usize> = (0..workers.len())
+                        .filter(|&w| workers[w].alive && !silent.contains(&w))
+                        .collect();
+                    for from in silent {
+                        self.migrate_pending(
+                            workers, &mut book, &d, &steps_of, from, &targets,
+                            &mut round_migs,
+                        );
+                    }
+                    continue;
+                }
+            }
+            // Wait until the next event or the nearest timer.
+            let timer = [deadline, migrate_at].into_iter().flatten().min();
+            let timeout = match timer {
+                Some(t) => t.saturating_duration_since(now),
                 // Liveness backstop: with no deadline configured, a round
                 // that makes no progress for an hour is cut, not hung.
                 None => Duration::from_secs(3600),
             };
             match rx.recv_timeout(timeout) {
                 Ok(Event::Joined { conn, stream, join }) => {
-                    // Mid-round joins are admitted and receive work from
-                    // the next round on.
-                    self.admit(workers, conn, stream, join);
+                    // Mid-round joins are admitted (work from the next
+                    // round on); mid-round REjoins reclaim their pending
+                    // leases and get them re-dispatched immediately.
+                    if let Some(widx) =
+                        self.admit_or_rejoin(workers, conn, stream, join)
+                    {
+                        let reclaimed = book.pending_of(widx);
+                        self.send_assign(workers, widx, &reclaimed, &d, &steps_of);
+                    }
                 }
                 Ok(Event::Frame { conn, msg }) => match msg {
                     Msg::UpdatePush(p)
                         if p.session == self.session && p.round == d.round as u64 =>
                     {
                         let client = p.update.client_id;
-                        // Only the worker the client was assigned to may
-                        // answer for it — a push from anyone else (rogue
-                        // peer, stale reconnect) is discarded without
-                        // touching the pending set.
-                        let from = workers.iter().position(|w| w.conn == conn);
-                        if from.is_none() || owner_of.get(&client) != from.as_ref() {
+                        let Some(widx) = workers.iter().position(|w| w.conn == conn)
+                        else {
+                            continue;
+                        };
+                        *pushed_by.entry(widx).or_insert(0) += 1;
+                        // Only the current lease holder may answer for a
+                        // client — a push from anyone else (rogue peer,
+                        // stale reconnect, migrated-away straggler) is
+                        // discarded without touching the ledger.
+                        if book.owner(client) != Some(widx) {
                             continue;
                         }
                         // Decode-then-fold: rebuild dense params from the
@@ -368,40 +610,66 @@ impl Server {
                             && update.params.len() == self.fed.global.len()
                             && self.fed.check_client_state(client, &p.state).is_ok();
                         if !ok {
-                            // Malformed push from the owning worker: the
+                            // Malformed push from the lease holder: the
                             // update cannot be folded — cut the client
                             // through the dropped path, don't kill the run.
-                            if pending.remove(&client) {
-                                cut.push(client);
-                            }
+                            book.cut(client);
                             continue;
                         }
                         update.wire_bytes = reconstructed.unwrap_or(0);
-                        if pending.remove(&client) {
-                            arrived.insert(slot_of[&client], (update, p.state));
+                        if book.accept(client, widx) {
+                            let slot = book.slot(client).expect("accepted ⇒ slotted");
+                            arrived.insert(slot, (update, p.state));
                         }
                     }
                     // Heartbeats (dispatch acks), stale-round or
                     // stale-session pushes.
                     _ => {}
                 },
+                Ok(Event::Malformed { conn }) => {
+                    // A flaked frame: framing survived, decode did not.
+                    // The payload (one update, most likely) is lost; the
+                    // affected client stays pending and resolves through
+                    // the deadline/migration path like any straggler.
+                    self.malformed_frames += 1;
+                    let who = workers
+                        .iter()
+                        .find(|w| w.conn == conn)
+                        .map(|w| w.name.as_str())
+                        .unwrap_or("?");
+                    println!(
+                        "[serve] round {}: dropped undecodable frame from {who:?}",
+                        d.round
+                    );
+                }
                 Ok(Event::Gone { conn }) => {
                     mark_gone(workers, conn);
                     if let Some(widx) = workers.iter().position(|w| w.conn == conn) {
-                        let lost: Vec<usize> = pending
-                            .iter()
-                            .copied()
-                            .filter(|c| owner_of.get(c) == Some(&widx))
-                            .collect();
-                        for c in lost {
-                            pending.remove(&c);
-                            cut.push(c);
+                        if deadline.is_none() {
+                            // No rejoin window without a deadline: cut the
+                            // dead worker's pending clients immediately.
+                            let _ = book.cut_pending_of(widx);
+                        } else if self.opts.migrate {
+                            let targets: Vec<usize> = (0..workers.len())
+                                .filter(|&w| workers[w].alive)
+                                .collect();
+                            self.migrate_pending(
+                                workers, &mut book, &d, &steps_of, widx, &targets,
+                                &mut round_migs,
+                            );
                         }
+                        // else: leases stay pending — the worker may rejoin
+                        // with identity before the deadline cuts them.
                     }
                 }
                 Err(RecvTimeoutError::Timeout) => {
-                    cut.extend(pending.iter().copied());
-                    pending.clear();
+                    // With a deadline, the checks at the top of the loop
+                    // handle the firing timer. Without one, this IS the
+                    // liveness backstop: an hour with no progress cuts the
+                    // round instead of wedging the server forever.
+                    if deadline.is_none() {
+                        book.cut_all_pending();
+                    }
                 }
                 Err(RecvTimeoutError::Disconnected) => bail!("acceptor thread died"),
             }
@@ -417,9 +685,12 @@ impl Server {
                 .with_context(|| format!("installing client {} state", update.client_id))?;
             updates.push(update);
         }
-        cut.sort_unstable();
+        let cut = book.cuts();
         if !cut.is_empty() {
             self.cuts.push((d.round, cut.clone()));
+        }
+        if !round_migs.is_empty() {
+            self.migrations.push((d.round, round_migs));
         }
         let rec = self.fed.commit_round(d.round, updates, t0)?;
         println!(
@@ -495,9 +766,16 @@ fn reader_loop(conn: usize, stream: TcpStream, tx: Sender<Event>) {
         _ => return,
     }
     loop {
-        match proto::read_msg(&mut read) {
-            Ok(msg) => {
-                if tx.send(Event::Frame { conn, msg }).is_err() {
+        match proto::read_frame(&mut read) {
+            // Stream framing intact: a decode failure is a corrupted
+            // payload (link flake) — report it and keep reading. Only an
+            // IO-level failure means the peer is gone.
+            Ok(frame) => {
+                let event = match Msg::decode(&frame) {
+                    Ok(msg) => Event::Frame { conn, msg },
+                    Err(_) => Event::Malformed { conn },
+                };
+                if tx.send(event).is_err() {
                     return;
                 }
             }

@@ -6,9 +6,17 @@
 //! cursors and KeepOpt moments, and every push returns them advanced. A
 //! worker can therefore crash, be killed, or reconnect to a restarted
 //! server without any local persistence — the Aggregator's checkpoint is
-//! the only durable state. The local round itself is the *same code* the
-//! in-process federation runs (`ClientNode::run_local_round`), which is
-//! what makes a localhost fleet bit-identical to `Federation::run`.
+//! the only durable state. A crashed worker can even *rejoin the same
+//! server* with its identity (`WorkerOpts::identity`) and reclaim its
+//! slot and in-flight client leases. The local round itself is the *same
+//! code* the in-process federation runs (`ClientNode::run_local_round`),
+//! which is what makes a localhost fleet bit-identical to
+//! `Federation::run`.
+//!
+//! The chaos plane injects here: `WorkerOpts::chaos` carries a
+//! [`crate::chaos::WorkerChaos`] fault slice, and each round's fault
+//! (crash / hang / slow / link flake) is acted out faithfully — see the
+//! `chaos` module docs for the semantics each fault exercises.
 
 use std::collections::HashMap;
 use std::net::TcpStream;
@@ -16,13 +24,18 @@ use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::chaos::{self, Fault, WorkerChaos};
 use crate::coordinator::federation::{bind_client_streams, build_data};
 use crate::coordinator::ClientNode;
 use crate::data::source::DataSource;
 use crate::net::proto::{self, Heartbeat, Join, Msg, TaskSpec, UpdatePush, PROTO_VERSION};
 use crate::runtime::{ModelRuntime, Runtime};
 
-/// Worker knobs (the test harness uses the fault hook; the CLI only the
+/// Base sleep unit for the chaos `Slow` fault (multiplied by the fault's
+/// factor, charged before every push).
+const SLOW_UNIT_MS: u64 = 25;
+
+/// Worker knobs (the test harness uses the fault hooks; the CLI only the
 /// name/model fields).
 #[derive(Clone, Default)]
 pub struct WorkerOpts {
@@ -34,6 +47,13 @@ pub struct WorkerOpts {
     /// Test hook: drop the connection (simulating a crash) on receiving
     /// the assignment for this round, before replying.
     pub die_at_round: Option<u64>,
+    /// Rejoin identity: `Some(slot)` asks the server to re-attach this
+    /// connection to a previously held worker slot (and its in-flight
+    /// leases) instead of admitting it fresh.
+    pub identity: Option<u64>,
+    /// Seeded per-round chaos faults (crash/hang/slow/flake) — see
+    /// [`crate::chaos::Schedule::worker`].
+    pub chaos: Option<WorkerChaos>,
     pub verbose: bool,
 }
 
@@ -43,19 +63,31 @@ pub struct WorkerReport {
     pub worker_slot: u64,
     pub rounds_served: u64,
     pub updates_pushed: u64,
-    /// Set when the `die_at_round` fault hook fired.
+    /// Set when a crash hook (`die_at_round` or a chaos `Crash`) fired.
     pub aborted_at: Option<u64>,
+    /// Set alongside `aborted_at` when the chaos schedule wants the
+    /// crashed worker back: how long to wait before rejoining.
+    pub rejoin_after_ms: Option<u64>,
+    /// Rounds a chaos `Hang` made this worker sit out (acknowledged the
+    /// assignment, pushed nothing).
+    pub rounds_hung: u64,
+    /// `UpdatePush` frames deliberately corrupted by a chaos `Flake`.
+    pub frames_flaked: u64,
 }
 
 /// Connect to `addr`, join the federation, and serve rounds until the
-/// server sends `Shutdown` (or the fault hook fires). Blocking.
+/// server sends `Shutdown` (or a crash hook fires). Blocking.
 pub fn run_worker(addr: &str, opts: WorkerOpts) -> Result<WorkerReport> {
     let mut stream =
         TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
     stream.set_nodelay(true).ok();
     proto::write_msg(
         &mut stream,
-        &Msg::Join(Join { proto: PROTO_VERSION, name: opts.name.clone() }),
+        &Msg::Join(Join {
+            proto: PROTO_VERSION,
+            name: opts.name.clone(),
+            identity: opts.identity.map(|slot| slot + 1).unwrap_or(0),
+        }),
         false,
     )?;
     let ack = match proto::read_msg(&mut stream)? {
@@ -115,9 +147,19 @@ pub fn run_worker(addr: &str, opts: WorkerOpts) -> Result<WorkerReport> {
     loop {
         match proto::read_msg(&mut stream)? {
             Msg::RoundAssign(assign) => {
+                let fault = opts
+                    .chaos
+                    .as_ref()
+                    .map(|c| c.fault(assign.round))
+                    .unwrap_or(Fault::None);
                 if opts.die_at_round == Some(assign.round) {
                     // Simulated crash: vanish mid-round without replying.
                     report.aborted_at = Some(assign.round);
+                    return Ok(report);
+                }
+                if let Fault::Crash { rejoin_after_ms } = fault {
+                    report.aborted_at = Some(assign.round);
+                    report.rejoin_after_ms = rejoin_after_ms;
                     return Ok(report);
                 }
                 if assign.session != ack.session {
@@ -131,7 +173,13 @@ pub fn run_worker(addr: &str, opts: WorkerOpts) -> Result<WorkerReport> {
                     }),
                     false,
                 )?;
-                for task in &assign.tasks {
+                if fault == Fault::Hang {
+                    // Sit the round out on a live connection: the server's
+                    // deadline (or lease migration) resolves the silence.
+                    report.rounds_hung += 1;
+                    continue;
+                }
+                for (task_idx, task) in assign.tasks.iter().enumerate() {
                     let node = node_for(
                         &mut nodes, &data, &spec, task.client, seq_width,
                     )?;
@@ -179,18 +227,38 @@ pub fn run_worker(addr: &str, opts: WorkerOpts) -> Result<WorkerReport> {
                         }
                         None => None,
                     };
-                    proto::write_msg(
-                        &mut stream,
-                        &Msg::UpdatePush(UpdatePush {
-                            session: ack.session,
-                            round: assign.round,
-                            update,
-                            body,
-                            state,
-                        }),
-                        spec.compress,
-                    )?;
-                    report.updates_pushed += 1;
+                    if let Fault::Slow { factor } = fault {
+                        std::thread::sleep(std::time::Duration::from_millis(
+                            (factor * SLOW_UNIT_MS as f64) as u64,
+                        ));
+                    }
+                    let msg = Msg::UpdatePush(UpdatePush {
+                        session: ack.session,
+                        round: assign.round,
+                        update,
+                        body,
+                        state,
+                    });
+                    // The link-flake fault corrupts the victim task's frame
+                    // *after* encoding, with a consistent length prefix —
+                    // the server's stream framing survives, its link decode
+                    // rejects the payload, and the affected client is cut
+                    // like any straggler (never mis-decoded, never fatal).
+                    let flake_this = matches!(
+                        fault,
+                        Fault::Flake { victim, .. }
+                            if victim as usize % assign.tasks.len() == task_idx
+                    );
+                    if let (true, Fault::Flake { seed, .. }) = (flake_this, fault) {
+                        let mut frame = msg.encode(spec.compress)?;
+                        chaos::flake_frame(&mut frame, seed);
+                        proto::write_frame(&mut stream, &frame)
+                            .context("writing flaked frame")?;
+                        report.frames_flaked += 1;
+                    } else {
+                        proto::write_msg(&mut stream, &msg, spec.compress)?;
+                        report.updates_pushed += 1;
+                    }
                 }
                 report.rounds_served += 1;
             }

@@ -63,6 +63,21 @@ impl RoundPlan {
         RoundPlan { n_clients: cfg.n_clients, tau: cfg.local_steps, rounds }
     }
 
+    /// Price a chaos schedule's worker churn into this plan: clients of
+    /// crashed/hung workers drop (or keep running when `migrate` models
+    /// client-lease migration), flake victims drop, clients of slowed
+    /// workers straggle — derived from the *same* seed-derived
+    /// [`crate::chaos::Schedule`] the deployment plane injects, so
+    /// `photon exp chaos` prices wall-clock from the identical fault
+    /// plan it runs live. See [`crate::chaos::Schedule::apply_to_plan`].
+    pub fn with_chaos(
+        &self,
+        schedule: &crate::chaos::Schedule,
+        migrate: bool,
+    ) -> RoundPlan {
+        schedule.apply_to_plan(self, migrate)
+    }
+
     /// Total effective local steps scheduled across all rounds/clients.
     pub fn total_client_steps(&self) -> u64 {
         self.rounds

@@ -1,25 +1,63 @@
 //! Seeded property-testing harness (proptest is unavailable offline; see
-//! DESIGN.md §1). `check` runs a property over `n` random cases; on failure
-//! it reports the failing case seed so the case replays exactly with
-//! `replay`.
+//! DESIGN.md §1). [`check`] runs a property over `n` random cases; on
+//! failure it reports the failing case seed so the case replays exactly —
+//! either programmatically with [`replay`], or without touching code by
+//! exporting `TESTKIT_REPLAY=<seed>` and re-running the test.
+//!
+//! [`check_cases`] adds minimal-case **shrinking**: the case is an explicit
+//! value built by a generator callback, and on failure a `shrink` callback
+//! proposes smaller candidates (halved sizes, zeroed fields); the harness
+//! keeps the smallest candidate that still fails and reports it alongside
+//! the seed. See `docs/TESTING.md` for the workflow.
 
 use crate::util::rng::Rng;
 
+/// Env var that replays one reported case seed instead of the full sweep
+/// (`TESTKIT_REPLAY=0xdeadbeef cargo test -q failing_test_name`). Accepts
+/// hex (with `0x`) or decimal.
+pub const REPLAY_ENV: &str = "TESTKIT_REPLAY";
+
+/// Parse a `TESTKIT_REPLAY` value. Split out of the env read so the
+/// parsing is unit-testable without process-global env mutation.
+pub fn parse_replay(value: Option<&str>) -> Option<u64> {
+    let v = value?.trim();
+    if v.is_empty() {
+        return None;
+    }
+    match v.strip_prefix("0x").or_else(|| v.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16).ok(),
+        None => v.parse().ok(),
+    }
+}
+
+fn replay_from_env() -> Option<u64> {
+    parse_replay(std::env::var(REPLAY_ENV).ok().as_deref())
+}
+
+fn case_seed(base_seed: u64, case: usize) -> u64 {
+    base_seed
+        .wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add(case as u64)
+}
+
 /// Run `prop` over `n` random cases derived from `base_seed`. Panics with
-/// the failing case seed on the first violation.
+/// the failing case seed on the first violation. When `TESTKIT_REPLAY` is
+/// set, only that seed runs (all `n` sweep cases are skipped).
 pub fn check<F>(name: &str, base_seed: u64, n: usize, mut prop: F)
 where
     F: FnMut(&mut Rng) -> Result<(), String>,
 {
+    if let Some(seed) = replay_from_env() {
+        return replay(name, seed, prop);
+    }
     for case in 0..n {
-        let case_seed = base_seed
-            .wrapping_mul(0x9E3779B97F4A7C15)
-            .wrapping_add(case as u64);
+        let case_seed = case_seed(base_seed, case);
         let mut rng = Rng::new(case_seed);
         if let Err(msg) = prop(&mut rng) {
             panic!(
                 "property {name:?} failed on case {case}/{n} \
-                 (replay seed: {case_seed:#x}): {msg}"
+                 (replay seed: {case_seed:#x} — rerun with \
+                 {REPLAY_ENV}={case_seed:#x}): {msg}"
             );
         }
     }
@@ -33,6 +71,104 @@ where
     let mut rng = Rng::new(case_seed);
     if let Err(msg) = prop(&mut rng) {
         panic!("property {name:?} failed on replay {case_seed:#x}: {msg}");
+    }
+}
+
+/// Shrinking iteration cap — a guard against cyclic shrinkers, far above
+/// any honest shrink depth.
+const MAX_SHRINK_STEPS: usize = 10_000;
+
+/// Like [`check`], but over explicit case values with minimal-case
+/// shrinking: `gen` builds a case from the seeded RNG, `prop` judges it,
+/// and on failure `shrink` proposes simpler candidates (typically: halve
+/// every size, zero every field — see [`shrink_vec`]/[`shrink_usize`]).
+/// The harness greedily walks to a fixed point (no candidate fails any
+/// more) and panics reporting the seed *and* the minimal failing case.
+/// Honors `TESTKIT_REPLAY` exactly like [`check`].
+pub fn check_cases<T, G, S, P>(
+    name: &str,
+    base_seed: u64,
+    n: usize,
+    mut gen: G,
+    shrink: S,
+    mut prop: P,
+) where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let (cases, replay_only) = match replay_from_env() {
+        Some(seed) => (vec![(usize::MAX, seed)], true),
+        None => ((0..n).map(|c| (c, case_seed(base_seed, c))).collect(), false),
+    };
+    for (case, case_seed) in cases {
+        let mut rng = Rng::new(case_seed);
+        let value = gen(&mut rng);
+        if let Err(first_msg) = prop(&value) {
+            let (minimal, msg, steps) =
+                shrink_to_fixed_point(value, first_msg, &shrink, &mut prop);
+            let which = if replay_only {
+                format!("replay {case_seed:#x}")
+            } else {
+                format!(
+                    "case {case}/{n} (replay seed: {case_seed:#x} — rerun with \
+                     {REPLAY_ENV}={case_seed:#x})"
+                )
+            };
+            panic!(
+                "property {name:?} failed on {which}: {msg}\n  minimal case \
+                 (after {steps} shrink steps): {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_to_fixed_point<T, S, P>(
+    mut value: T,
+    mut msg: String,
+    shrink: &S,
+    prop: &mut P,
+) -> (T, String, usize)
+where
+    S: Fn(&T) -> Vec<T>,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut steps = 0;
+    'outer: while steps < MAX_SHRINK_STEPS {
+        for candidate in shrink(&value) {
+            if let Err(m) = prop(&candidate) {
+                value = candidate;
+                msg = m;
+                steps += 1;
+                continue 'outer;
+            }
+        }
+        break; // fixed point: every candidate passes
+    }
+    (value, msg, steps)
+}
+
+/// Standard shrink candidates for a vector case: empty, first half, all
+/// but the last element. Combine with field zeroing in a custom shrinker.
+pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if !v.is_empty() {
+        out.push(Vec::new());
+        if v.len() > 1 {
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+    }
+    out
+}
+
+/// Standard shrink candidates for a size/index: zero and the halves.
+pub fn shrink_usize(x: usize) -> Vec<usize> {
+    match x {
+        0 => vec![],
+        1 => vec![0],
+        _ => vec![0, x / 2, x - 1],
     }
 }
 
@@ -77,6 +213,117 @@ mod tests {
     #[should_panic(expected = "replay seed")]
     fn failing_property_reports_seed() {
         check("always_fails", 2, 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn parse_replay_forms() {
+        assert_eq!(parse_replay(None), None);
+        assert_eq!(parse_replay(Some("")), None);
+        assert_eq!(parse_replay(Some("42")), Some(42));
+        assert_eq!(parse_replay(Some("0x2a")), Some(0x2a));
+        assert_eq!(parse_replay(Some("0X2A")), Some(0x2a));
+        assert_eq!(parse_replay(Some(" 0xdeadbeef ")), Some(0xdead_beef));
+        assert_eq!(parse_replay(Some("nope")), None);
+    }
+
+    #[test]
+    fn reported_seed_replays_the_same_case() {
+        // The panic message promises the seed reproduces the case: the
+        // value drawn under the reported seed equals the sweep's draw.
+        let mut sweep_draw = 0u64;
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check("pick", 77, 64, |rng| {
+                let x = rng.next_u64();
+                if x % 3 == 0 {
+                    sweep_draw = x;
+                    Err("divisible".into())
+                } else {
+                    Ok(())
+                }
+            })
+        }))
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap().clone();
+        let hex = msg.split("replay seed: ").nth(1).unwrap();
+        let hex = hex.split(|c: char| c == ' ' || c == ')').next().unwrap();
+        let failing_case_seed = parse_replay(Some(hex)).unwrap();
+        let mut replayed = 0u64;
+        let replay_err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            replay("pick", failing_case_seed, |rng| {
+                replayed = rng.next_u64();
+                Err("stop".into())
+            })
+        }));
+        assert!(replay_err.is_err());
+        assert_eq!(replayed, sweep_draw, "replay must regenerate the case");
+    }
+
+    #[test]
+    fn check_cases_shrinks_to_minimal() {
+        // Property: vectors shorter than 3 pass. The generator draws much
+        // longer vectors; shrinking must land exactly on length 3.
+        let err = std::panic::catch_unwind(|| {
+            check_cases(
+                "min3",
+                5,
+                10,
+                |rng| (0..(3 + rng.usize_below(40))).map(|i| i as u32).collect::<Vec<u32>>(),
+                |v: &Vec<u32>| shrink_vec(v.as_slice()),
+                |v| {
+                    if v.len() < 3 {
+                        Ok(())
+                    } else {
+                        Err(format!("len {}", v.len()))
+                    }
+                },
+            )
+        })
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("minimal case"), "{msg}");
+        assert!(msg.contains("[0, 1, 2]"), "must shrink to the 3-element floor: {msg}");
+        assert!(msg.contains("TESTKIT_REPLAY"), "{msg}");
+    }
+
+    #[test]
+    fn check_cases_passes_without_shrinking() {
+        let mut ran = 0;
+        check_cases(
+            "always_ok",
+            9,
+            12,
+            |rng| rng.usize_below(100),
+            |&x| shrink_usize(x),
+            |_| {
+                ran += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(ran, 12);
+    }
+
+    #[test]
+    fn shrink_helpers_shapes() {
+        assert!(shrink_vec::<u8>(&[]).is_empty());
+        assert_eq!(shrink_vec(&[1]), vec![Vec::<i32>::new()]);
+        assert_eq!(shrink_vec(&[1, 2, 3, 4]), vec![vec![], vec![1, 2], vec![1, 2, 3]]);
+        assert!(shrink_usize(0).is_empty());
+        assert_eq!(shrink_usize(1), vec![0]);
+        assert_eq!(shrink_usize(10), vec![0, 5, 9]);
+    }
+
+    #[test]
+    fn shrink_fixed_point_terminates_on_cyclic_shrinker() {
+        // A shrinker that always re-proposes a failing candidate must be
+        // stopped by the step cap, not loop forever.
+        let (v, _msg, steps) = shrink_to_fixed_point(
+            1usize,
+            "seed".into(),
+            &|&x: &usize| vec![x],     // proposes itself forever
+            &mut |_: &usize| Err("still failing".into()),
+        );
+        assert_eq!(v, 1);
+        assert_eq!(steps, MAX_SHRINK_STEPS);
     }
 
     #[test]

@@ -293,7 +293,7 @@ fn silent_worker_is_deadline_cut_through_the_dropped_client_path() {
         let mut stream = TcpStream::connect(&silent_addr).unwrap();
         proto::write_msg(
             &mut stream,
-            &Msg::Join(Join { proto: PROTO_VERSION, name: "silent".into() }),
+            &Msg::Join(Join { proto: PROTO_VERSION, name: "silent".into(), identity: 0 }),
             false,
         )
         .unwrap();

@@ -1,0 +1,242 @@
+//! Property tests for the chaos plane (artifact-free): schedule
+//! determinism, lease-ledger exactly-once under random event orders, and
+//! the link-flake rejection guarantee. Uses the seeded `testkit` harness
+//! — every failure reports a replay seed (`TESTKIT_REPLAY=<seed>`), and
+//! the lease property shrinks to a minimal failing op sequence.
+
+use photon::chaos::{flake_frame, ChaosConfig, Fault, LeaseBook, Schedule};
+use photon::link::{self, MsgKind};
+use photon::sim::{Participant, RoundPlan, RoundSpec};
+use photon::testkit::{check, check_cases, shrink_vec};
+use photon::util::rng::Rng;
+
+#[test]
+fn prop_schedule_is_deterministic_and_extent_stable() {
+    check("chaos_schedule_determinism", 0xC0FFEE, 40, |rng| {
+        let seed = rng.next_u64();
+        let workers = 1 + rng.usize_below(8);
+        let rounds = 1 + rng.usize_below(40);
+        let cfg = ChaosConfig::at_rate(rng.f64());
+        let a = Schedule::generate(seed, workers, rounds, cfg);
+        let b = Schedule::generate(seed, workers, rounds, cfg);
+        // A wider/longer schedule must agree on every shared cell.
+        let wide = Schedule::generate(seed, workers + 3, rounds + 17, cfg);
+        for r in 0..rounds {
+            for w in 0..workers {
+                if a.fault(w, r) != b.fault(w, r) {
+                    return Err(format!("cell ({w},{r}) differs across builds"));
+                }
+                if a.fault(w, r) != wide.fault(w, r) {
+                    return Err(format!("cell ({w},{r}) changed when extended"));
+                }
+            }
+        }
+        // Out-of-extent cells are quiet, never a panic.
+        if a.fault(workers + 1, 0) != Fault::None || a.fault(0, rounds) != Fault::None {
+            return Err("out-of-extent cell not quiet".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_schedule_rates_are_plausible() {
+    check("chaos_schedule_rates", 0xBEEF, 8, |rng| {
+        let rate = 0.2 + rng.f64() * 0.5;
+        let s = Schedule::generate(rng.next_u64(), 6, 120, ChaosConfig::at_rate(rate));
+        let mut faulty = 0usize;
+        let mut cells = 0usize;
+        // Worker 0 is protected (crash/hang downgraded); count the rest.
+        for w in 1..6 {
+            for r in 0..120 {
+                cells += 1;
+                if s.fault(w, r) != Fault::None {
+                    faulty += 1;
+                }
+            }
+        }
+        let observed = faulty as f64 / cells as f64;
+        if (observed - rate).abs() > 0.1 {
+            return Err(format!("rate {rate:.3} realized as {observed:.3}"));
+        }
+        Ok(())
+    });
+}
+
+/// One randomized lease-ledger operation (the shrink target: dropping ops
+/// from a failing sequence must keep it valid, which `LeaseBook` allows —
+/// every op is total).
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    /// Push for client (c % leased) claimed by worker (w % workers).
+    Push { c: usize, w: usize },
+    /// Migrate all pending leases of worker (w % workers) to the others.
+    Migrate { w: usize },
+    /// Cut one client.
+    Cut { c: usize },
+    /// Deadline: cut everything pending.
+    CutAll,
+}
+
+#[test]
+fn prop_lease_book_exactly_once_under_any_event_order() {
+    const WORKERS: usize = 4;
+    let gen = |rng: &mut Rng| {
+        let n = 2 + rng.usize_below(10);
+        let ops: Vec<Op> = (0..(1 + rng.usize_below(40)))
+            .map(|_| match rng.below(10) {
+                0..=5 => Op::Push { c: rng.usize_below(n), w: rng.usize_below(WORKERS) },
+                6..=7 => Op::Migrate { w: rng.usize_below(WORKERS) },
+                8 => Op::Cut { c: rng.usize_below(n) },
+                _ => Op::CutAll,
+            })
+            .collect();
+        (n, ops)
+    };
+    let shrink = |case: &(usize, Vec<Op>)| {
+        let (n, ops) = case;
+        shrink_vec(ops).into_iter().map(|o| (*n, o)).collect::<Vec<_>>()
+    };
+    check_cases("lease_exactly_once", 0x1EA5E, 300, gen, shrink, |case| {
+        let (n, ops) = case;
+        let runnable: Vec<(usize, u64)> = (0..*n).map(|c| (c, 5)).collect();
+        let mut book = LeaseBook::new(&runnable);
+        // Mirror model: owner + accepted set, maintained independently.
+        let mut owner: Vec<usize> = (0..*n).map(|c| c % WORKERS).collect();
+        for (c, _) in &runnable {
+            book.lease(*c, *c % WORKERS);
+        }
+        let mut accepted: Vec<usize> = Vec::new();
+        for op in ops {
+            match *op {
+                Op::Push { c, w } => {
+                    let was_pending = !accepted.contains(&c) && book.cuts().binary_search(&c).is_err();
+                    let ok = book.accept(c, w);
+                    if ok {
+                        if owner[c] != w {
+                            return Err(format!("client {c} folded from non-owner {w}"));
+                        }
+                        if accepted.contains(&c) {
+                            return Err(format!("client {c} folded twice"));
+                        }
+                        if !was_pending {
+                            return Err(format!("client {c} folded after leaving pending"));
+                        }
+                        accepted.push(c);
+                    }
+                }
+                Op::Migrate { w } => {
+                    let targets: Vec<usize> =
+                        (0..WORKERS).filter(|&t| t != w).collect();
+                    for m in book.migrate_from(w, &targets) {
+                        if owner[m.client] != w {
+                            return Err(format!(
+                                "migrated client {} off worker {w}, owner was {}",
+                                m.client, owner[m.client]
+                            ));
+                        }
+                        owner[m.client] = m.to;
+                    }
+                }
+                Op::Cut { c } => {
+                    book.cut(c);
+                }
+                Op::CutAll => {
+                    book.cut_all_pending();
+                }
+            }
+            book.check_invariants()?;
+        }
+        if book.arrived_count() != accepted.len() {
+            return Err(format!(
+                "ledger arrived {} vs model {}",
+                book.arrived_count(),
+                accepted.len()
+            ));
+        }
+        // Conservation: every leased client is in exactly one bucket.
+        let done = book.arrived_count() + book.cuts().len() + book.pending_count();
+        if done != *n {
+            return Err(format!("{done} of {n} clients accounted for"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_flaked_frames_are_rejected_never_misdecoded() {
+    check("flake_rejection", 0xF1A4E, 200, |rng| {
+        let n = rng.usize_below(600);
+        let payload: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let compress = rng.bool(0.5);
+        let kind = if rng.bool(0.5) { MsgKind::UpdatePush } else { MsgKind::GlobalModel };
+        let clean = link::encode_bytes(kind, &payload, compress)
+            .map_err(|e| format!("encode: {e}"))?;
+        let (k, back) = link::decode_bytes(&clean).map_err(|e| format!("decode: {e}"))?;
+        if k != kind || back != payload {
+            return Err("clean frame must round-trip".into());
+        }
+        let mut bad = clean.clone();
+        flake_frame(&mut bad, rng.next_u64());
+        match link::decode_bytes(&bad) {
+            Err(_) => Ok(()),
+            Ok((_, got)) => Err(format!(
+                "flaked frame decoded ({} bytes{}) instead of being rejected",
+                got.len(),
+                if got == payload { ", bit-identical!" } else { "" }
+            )),
+        }
+    });
+}
+
+#[test]
+fn prop_chaos_plan_pricing_conserves_the_sample() {
+    check("chaos_plan_conservation", 0x51A4, 60, |rng| {
+        let n_clients = 2 + rng.usize_below(12);
+        let rounds = 1 + rng.usize_below(25);
+        let plan = RoundPlan {
+            n_clients,
+            tau: 1 + rng.below(50),
+            rounds: (0..rounds)
+                .map(|round| RoundSpec {
+                    round,
+                    participants: (0..n_clients)
+                        .filter(|_| rng.bool(0.8))
+                        .map(|client| Participant {
+                            client,
+                            steps: 5,
+                            straggler: false,
+                        })
+                        .collect(),
+                    dropped: vec![],
+                })
+                .collect(),
+        };
+        let s = Schedule::generate(
+            rng.next_u64(),
+            1 + rng.usize_below(5),
+            rounds,
+            ChaosConfig::at_rate(rng.f64() * 0.8),
+        );
+        for migrate in [false, true] {
+            let churned = s.apply_to_plan(&plan, migrate);
+            if churned.rounds.len() != plan.rounds.len() {
+                return Err("round count changed".into());
+            }
+            for (orig, got) in plan.rounds.iter().zip(&churned.rounds) {
+                let before = orig.participants.len() + orig.dropped.len();
+                let after = got.participants.len() + got.dropped.len();
+                if before != after {
+                    return Err(format!(
+                        "round {}: {before} sampled became {after}",
+                        orig.round
+                    ));
+                }
+            }
+            if s.apply_to_plan(&plan, migrate) != churned {
+                return Err("pricing must be deterministic".into());
+            }
+        }
+        Ok(())
+    });
+}
