@@ -11,6 +11,9 @@
 //!
 //! Run: `cargo run --release --example e2e_pretrain [-- --fast]`
 
+// Example binary: wall-clock timing is reporting-only.
+#![allow(clippy::disallowed_methods)]
+
 use photon::config::{CorpusKind, ExperimentConfig};
 use photon::coordinator::Federation;
 use photon::data::corpus::SyntheticCorpus;

@@ -1,0 +1,181 @@
+//! Long-form rule documentation for `photon lint --explain <rule>`.
+//!
+//! Each writeup names the contract the rule enforces, what trips it, how
+//! to fix a hit, and when (if ever) a `lint:allow` is appropriate. The
+//! same material lives in docs/ANALYSIS.md; this copy ships inside the
+//! binary so a CI log line can say `--explain nondet-map` and mean it.
+
+use super::{ALLOW_POLICY, LOCK_ORDER, NONDET_MAP, NONDET_RNG, NONDET_TIME, WIRE_ALLOC, WIRE_PANIC};
+
+pub fn explain(rule: &str) -> Option<&'static str> {
+    match rule {
+        r if r == NONDET_MAP => Some(
+            "nondet-map — hash-ordered containers in determinism-scoped modules\n\
+             \n\
+             Contract: a federated round is a pure function of (config, seed,\n\
+             trace). `Federation::run`, the TCP fleet, and trace replay must\n\
+             produce bit-identical parameters (ARCHITECTURE.md, determinism\n\
+             contracts; docs/TESTING.md parity invariants).\n\
+             \n\
+             Why it trips: std's HashMap/HashSet iteration order depends on a\n\
+             per-process random hasher seed. Any fold, drain, serialization, or\n\
+             f32 accumulation over such a container can differ between two runs\n\
+             of the same round — float addition is not associative, so even a\n\
+             sum over the same elements in a different order breaks parity.\n\
+             The rule bans the *type* in scoped modules (coordinator, net, link,\n\
+             chaos, metrics, model, optim, compress, data, sim, ckpt, cluster,\n\
+             exp, evalharness, netsim): once the type is present, an\n\
+             order-dependent fold is one refactor away.\n\
+             \n\
+             Fix: use BTreeMap/BTreeSet (ordered, deterministic), or collect to\n\
+             a Vec and sort by a stable key before iterating.\n\
+             \n\
+             Allow: only for a container that is provably never iterated (point\n\
+             lookups only) — say so: // lint:allow(nondet-map): point lookups\n\
+             only, never iterated. Prefer the BTree swap; it is usually free.",
+        ),
+        r if r == NONDET_TIME => Some(
+            "nondet-time — host-clock reads outside the wall-clock allowlist\n\
+             \n\
+             Contract: round math, protocol state, and metrics must not depend\n\
+             on when or where a run executes (parity across fleet/sim/replay).\n\
+             \n\
+             Why it trips: Instant::now()/SystemTime::now() smuggle host timing\n\
+             into state. A timeout that changes a round outcome, a timestamp\n\
+             folded into a metric the parity test compares, a duration used to\n\
+             pick a codec — all make two identical runs diverge.\n\
+             \n\
+             Allowlisted: net/server.rs, net/harness.rs, net/worker.rs (socket\n\
+             deadlines, session ids, liveness), benchkit.rs (reporting), util/,\n\
+             runtime/, analysis/, main.rs, testkit.rs. These layers may measure\n\
+             time but must keep it out of anything the contracts compare.\n\
+             \n\
+             Fix: move the measurement to the harness/server layer, or thread\n\
+             simulated time (sim/plan) through explicitly.\n\
+             \n\
+             Allow: reporting-only reads in scoped files, e.g.\n\
+             // lint:allow(nondet-time): wall_secs is reporting-only; parity\n\
+             ignores it.",
+        ),
+        r if r == NONDET_RNG => Some(
+            "nondet-rng — randomness that does not come from util::rng\n\
+             \n\
+             Contract: \"we seed every local training and the client selection\n\
+             mechanism\" (paper §6.1). Every stochastic draw must come from a\n\
+             util::rng::Rng stream derived from the experiment seed via\n\
+             derive(label, index), so any run can be replayed bit-exactly.\n\
+             \n\
+             Why it trips: thread_rng/from_entropy/getrandom/OsRng/StdRng/\n\
+             SmallRng/RandomState (and any rand:: path) pull ambient entropy.\n\
+             One such draw anywhere below the experiment root makes the run\n\
+             unreplayable and the chaos soak's replay checks meaningless.\n\
+             \n\
+             Fix: accept an &mut util::rng::Rng (or derive a child stream with\n\
+             a stable label) instead of constructing an RNG locally.\n\
+             \n\
+             Allow: essentially never. util/rng.rs itself is the only exempt\n\
+             file.",
+        ),
+        r if r == WIRE_PANIC => Some(
+            "wire-panic — panics or raw indexing on wire-decoded data\n\
+             \n\
+             Contract: \"malformed ⇒ cut, never crash\" (docs/PROTOCOL.md). A\n\
+             hostile or corrupted frame may cost the peer its connection; it\n\
+             must never take down the coordinator or a worker.\n\
+             \n\
+             Why it trips: in net/ and link/, .unwrap()/.expect()/panic!/\n\
+             unreachable!/todo!/unimplemented! turn a bad byte into a process\n\
+             abort; `v[i]` on a value let-bound from decode/read_frame/read_msg\n\
+             panics on an attacker-chosen index. (#[cfg(test)] code is exempt.)\n\
+             \n\
+             Fix: propagate with `?`, bail! with a diagnostic, or use\n\
+             get()/get_mut() and handle None. The server's accept loop already\n\
+             converts Err into a connection cut.\n\
+             \n\
+             Allow: genuinely infallible cases, with the proof in the reason,\n\
+             e.g. // lint:allow(wire-panic): try_into on a fixed 8-byte slice\n\
+             of a length-checked header is infallible.",
+        ),
+        r if r == WIRE_ALLOC => Some(
+            "wire-alloc — allocations sized by untrusted decoded lengths\n\
+             \n\
+             Contract: a frame that passes magic/version/checksum validation is\n\
+             still untrusted input. Resource use must be bounded by what was\n\
+             actually received, not by what the frame *claims*.\n\
+             \n\
+             Why it trips: Vec::with_capacity(n)/.reserve(n)/vec![x; n] where\n\
+             `n` was let-bound from a decoder integer (Dec::u8/u16/u32/u64/i64\n\
+             or from_le_bytes) lets a 30-byte frame demand a 2^60-element\n\
+             allocation — an OOM kill, which on the coordinator is a\n\
+             fleet-wide outage.\n\
+             \n\
+             Fix: size through Dec::capacity_hint(n, min_elem_bytes), which\n\
+             clamps the claim to what the remaining payload could possibly\n\
+             hold, or validate `n` against a hard protocol bound first.\n\
+             \n\
+             Allow: when a bound is enforced immediately before, cite it:\n\
+             // lint:allow(wire-alloc): len is ensure-bounded to\n\
+             MAX_FRAME_BYTES above.",
+        ),
+        r if r == LOCK_ORDER => Some(
+            "lock-order — cycles in the inter-procedural lock-acquisition graph\n\
+             \n\
+             Contract: the coordinator must survive chaos (worker crashes,\n\
+             rejoins, lease migration) without wedging. A deadlock is a silent\n\
+             hang — worse than a crash, because the soak harness only notices\n\
+             at its timeout.\n\
+             \n\
+             How it works: for every function in net/, runtime/, and\n\
+             coordinator/round_exec.rs, the pass extracts Mutex/RwLock\n\
+             acquisition sites (.lock(), and .read()/.write() in files that\n\
+             mention RwLock), tracks which guards are still held (let-bound ⇒\n\
+             rest of function, temporary ⇒ rest of statement), follows calls\n\
+             into other scoped functions, and adds an edge A→B whenever B is\n\
+             acquired while A is held. A cycle means two call paths can take\n\
+             the same locks in opposite orders — a deadlock waiting for the\n\
+             right interleaving.\n\
+             \n\
+             Fix: impose one global acquisition order and restructure the\n\
+             offending path; narrow a guard's scope with an explicit drop() so\n\
+             the second lock is taken after the first is released.\n\
+             \n\
+             Allow: not suppressible — the finding is structural, spanning\n\
+             functions and files; there is no single line to exempt. The\n\
+             nightly ThreadSanitizer job cross-checks these findings\n\
+             dynamically.",
+        ),
+        r if r == ALLOW_POLICY => Some(
+            "allow-policy — malformed or reason-less lint:allow suppressions\n\
+             \n\
+             The only way to silence a finding is\n\
+             // lint:allow(rule): <reason>\n\
+             on the violating line or the line directly above it. The reason is\n\
+             mandatory and should state *why the contract still holds* at this\n\
+             site — it is the reviewable artifact that keeps suppressions\n\
+             honest. A bare lint:allow(rule), an unknown rule name, or an\n\
+             attempt to suppress allow-policy/lock-order is itself a violation,\n\
+             and allow-policy findings cannot be suppressed.",
+        ),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::RULES;
+    use super::*;
+
+    #[test]
+    fn every_registered_rule_has_a_writeup() {
+        for (rule, _) in RULES {
+            let text = explain(rule).unwrap_or_else(|| panic!("missing --explain for {rule}"));
+            assert!(text.starts_with(rule), "writeup for {rule} must lead with its name");
+            assert!(text.len() > 200, "writeup for {rule} is too thin");
+        }
+    }
+
+    #[test]
+    fn unknown_rule_is_none() {
+        assert!(explain("no-such-rule").is_none());
+    }
+}

@@ -1,0 +1,362 @@
+//! A lightweight Rust tokenizer for the static-analysis plane.
+//!
+//! This is not a full lexer — it produces exactly what the lint rules
+//! need: identifiers, literals, and punctuation with line numbers, plus
+//! the comment stream (where `lint:allow` directives live). Everything
+//! inside strings, chars, and comments is opaque to the rules, so a
+//! diagnostic message that *mentions* a forbidden name never trips the
+//! rule that forbids it.
+//!
+//! Handled faithfully: line comments, nested block comments, string
+//! escapes, raw strings (`r#"…"#` with any number of `#`), byte strings,
+//! char literals vs lifetimes (`'a'` vs `'a`), and numeric literals with
+//! suffixes/underscores. Anything else is a single-character punct token.
+
+/// Token class. Multi-character operators are emitted as consecutive
+/// single-character [`TokKind::Punct`] tokens; rules that care about `::`
+/// check adjacency.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `let`, `HashMap`, …).
+    Ident,
+    /// A lifetime (`'a`) — distinguished from char literals.
+    Lifetime,
+    /// String literal of any flavor (plain, raw, byte).
+    Str,
+    /// Char or byte-char literal.
+    Char,
+    /// Numeric literal (kept as text, suffix included).
+    Num,
+    /// One punctuation character.
+    Punct,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    /// 1-based source line.
+    pub line: usize,
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == 1 && self.text.starts_with(c)
+    }
+}
+
+/// One comment (line or block), attributed to its starting line. Block
+/// comment text keeps interior newlines.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub line: usize,
+    pub text: String,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize `src` into (tokens, comments). Never fails: unterminated
+/// constructs simply run to end-of-file (the real compiler will report
+/// them; the linter stays quiet rather than guessing).
+pub fn lex(src: &str) -> (Vec<Tok>, Vec<Comment>) {
+    let chars: Vec<char> = src.chars().collect();
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let n = chars.len();
+
+    let bump = |c: char, line: &mut usize| {
+        if c == '\n' {
+            *line += 1;
+        }
+    };
+
+    while i < n {
+        let c = chars[i];
+        // Whitespace.
+        if c.is_whitespace() {
+            bump(c, &mut line);
+            i += 1;
+            continue;
+        }
+        // Line comment (also doc comments `///`, `//!`).
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i;
+            while i < n && chars[i] != '\n' {
+                i += 1;
+            }
+            comments.push(Comment {
+                line,
+                text: chars[start..i].iter().collect(),
+            });
+            continue;
+        }
+        // Block comment, nested per Rust rules.
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    bump(chars[i], &mut line);
+                    i += 1;
+                }
+            }
+            comments.push(Comment {
+                line: start_line,
+                text: chars[start..i.min(n)].iter().collect(),
+            });
+            continue;
+        }
+        // Raw strings: r"…", r#"…"#, br#"…"# … (any number of #).
+        if c == 'r' || c == 'b' {
+            let mut j = i;
+            if chars[j] == 'b' && j + 1 < n && chars[j + 1] == 'r' {
+                j += 1;
+            }
+            if chars[j] == 'r' {
+                let mut k = j + 1;
+                let mut hashes = 0usize;
+                while k < n && chars[k] == '#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && chars[k] == '"' {
+                    // Consume to `"` followed by `hashes` #'s.
+                    let tok_line = line;
+                    k += 1;
+                    loop {
+                        if k >= n {
+                            break;
+                        }
+                        if chars[k] == '"' {
+                            let mut h = 0usize;
+                            while k + 1 + h < n && h < hashes && chars[k + 1 + h] == '#' {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                k += 1 + hashes;
+                                break;
+                            }
+                        }
+                        bump(chars[k], &mut line);
+                        k += 1;
+                    }
+                    toks.push(Tok { kind: TokKind::Str, text: String::new(), line: tok_line });
+                    i = k;
+                    continue;
+                }
+            }
+            // Plain byte string b"…" / byte char b'…'.
+            if c == 'b' && i + 1 < n && (chars[i + 1] == '"' || chars[i + 1] == '\'') {
+                i += 1; // fall through to the string/char scanners below
+                // (chars[i] is now the quote)
+            }
+        }
+        let c = chars[i];
+        // String literal with escapes.
+        if c == '"' {
+            let tok_line = line;
+            i += 1;
+            while i < n {
+                if chars[i] == '\\' && i + 1 < n {
+                    bump(chars[i + 1], &mut line);
+                    i += 2;
+                    continue;
+                }
+                if chars[i] == '"' {
+                    i += 1;
+                    break;
+                }
+                bump(chars[i], &mut line);
+                i += 1;
+            }
+            toks.push(Tok { kind: TokKind::Str, text: String::new(), line: tok_line });
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if i + 1 < n && chars[i + 1] == '\\' {
+                // Escaped char literal: '\n', '\'', '\u{…}' …
+                i += 2;
+                while i < n && chars[i] != '\'' {
+                    i += 1;
+                }
+                i = (i + 1).min(n);
+                toks.push(Tok { kind: TokKind::Char, text: String::new(), line });
+                continue;
+            }
+            if i + 1 < n && is_ident_start(chars[i + 1]) {
+                let mut k = i + 1;
+                while k < n && is_ident_cont(chars[k]) {
+                    k += 1;
+                }
+                if k < n && chars[k] == '\'' {
+                    // 'a' — char literal.
+                    toks.push(Tok { kind: TokKind::Char, text: String::new(), line });
+                    i = k + 1;
+                } else {
+                    // 'a — lifetime.
+                    let text: String = chars[i + 1..k].iter().collect();
+                    toks.push(Tok { kind: TokKind::Lifetime, text, line });
+                    i = k;
+                }
+                continue;
+            }
+            // '(' — punctuation char literal.
+            if i + 2 < n && chars[i + 2] == '\'' {
+                toks.push(Tok { kind: TokKind::Char, text: String::new(), line });
+                i += 3;
+                continue;
+            }
+            // Lone quote (macro land) — treat as punct and move on.
+            toks.push(Tok { kind: TokKind::Punct, text: "'".into(), line });
+            i += 1;
+            continue;
+        }
+        // Identifier / keyword (also the r#ident raw-identifier form).
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_cont(chars[i]) {
+                i += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Ident,
+                text: chars[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        // Number (suffixes and underscores kept; `1..2` stops at the range).
+        if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            while i < n {
+                let d = chars[i];
+                if d == '.' {
+                    if i + 1 < n && chars[i + 1] == '.' {
+                        break; // range operator
+                    }
+                    if i + 1 < n && !chars[i + 1].is_ascii_digit() && chars[i + 1] != 'f' {
+                        break; // method call on a literal: 1.max(…)
+                    }
+                    i += 1;
+                } else if is_ident_cont(d) {
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            toks.push(Tok {
+                kind: TokKind::Num,
+                text: chars[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        // Everything else: one punct char.
+        toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    (toks, comments)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .0
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn idents_and_puncts_with_lines() {
+        let (toks, _) = lex("let x = a.b();\nfoo::bar(x)");
+        let on_2: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.line == 2 && t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(on_2, ["foo", "bar", "x"]);
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        assert_eq!(idents(r#"let m = "HashMap::new() Instant::now";"#), ["let", "m"]);
+        // Escaped quote does not end the string early.
+        assert_eq!(idents(r#"x("a\"HashMap", y)"#), ["x", "y"]);
+    }
+
+    #[test]
+    fn raw_strings_and_hashes() {
+        assert_eq!(idents(r##"let s = r#"thread_rng() "quoted" "#; t"##), ["let", "s", "t"]);
+        assert_eq!(idents(r#"let s = r"panic!"; u"#), ["let", "s", "u"]);
+    }
+
+    #[test]
+    fn comments_are_captured_not_tokenized() {
+        let (toks, comments) = lex("a // HashMap here\nb /* Instant::now\n still */ c");
+        let names: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(names, ["a", "b", "c"]);
+        assert_eq!(comments.len(), 2);
+        assert_eq!(comments[0].line, 1);
+        assert!(comments[0].text.contains("HashMap"));
+        assert_eq!(comments[1].line, 2);
+        // The block comment spans a newline; the token after it is on line 3.
+        assert_eq!(toks[2].line, 3);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let (toks, _) = lex("fn f<'a>(x: &'a str) { let c = 'y'; let p = '('; }");
+        let lifetimes: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(lifetimes, ["a", "a"]);
+        assert_eq!(toks.iter().filter(|t| t.kind == TokKind::Char).count(), 2);
+    }
+
+    #[test]
+    fn numbers_keep_suffix_and_stop_at_ranges() {
+        let (toks, _) = lex("0..n 1_000u64 2.5f32");
+        let nums: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Num)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(nums, ["0", "1_000u64", "2.5f32"]);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let (toks, comments) = lex("a /* outer /* inner */ still outer */ b");
+        assert_eq!(toks.len(), 2);
+        assert_eq!(comments.len(), 1);
+        assert!(comments[0].text.contains("inner"));
+    }
+}

@@ -1,0 +1,490 @@
+//! Inter-procedural lock-order analysis (`lock-order`).
+//!
+//! Extracts Mutex/RwLock acquisition sites per function across the
+//! concurrency-scoped files (`net/`, `runtime/`, `coordinator/round_exec.rs`),
+//! threads call edges through to a transitive-acquire closure, and fails
+//! on cycles in the resulting lock-acquisition graph — the static
+//! complement to the nightly ThreadSanitizer job.
+//!
+//! Approximations (all conservative, all documented in docs/ANALYSIS.md):
+//! - a lock's identity is the receiver identifier before `.lock()` /
+//!   `.read()` / `.write()` (`self.gate.lock()` and `other.gate.lock()`
+//!   collapse into one class `gate`);
+//! - `.read()`/`.write()` count only in files that mention `RwLock`, so
+//!   `io::Read`/`io::Write` never masquerade as locks;
+//! - a guard in a `let` statement is assumed held to the end of the
+//!   function; a temporary guard to the end of its statement;
+//! - calls resolve by bare name across the scoped files (no paths, no
+//!   generics) — good enough for a repo that keeps locking local;
+//! - self-edges (re-acquiring the same class) are not reported: with
+//!   statement-scoped guards they are overwhelmingly the benign
+//!   drop-then-retake pattern, and true re-entrancy is TSan's job.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{lex, Tok, TokKind};
+use super::rules::matching;
+use super::{Diagnostic, LOCK_ORDER};
+
+/// Files included in the acquisition graph.
+pub fn in_scope(path: &str) -> bool {
+    path.starts_with("net/") || path.starts_with("runtime/") || path == "coordinator/round_exec.rs"
+}
+
+#[derive(Clone, Debug)]
+enum Event {
+    Acquire { lock: String, line: usize, bound: bool },
+    Call { name: String, line: usize },
+    StmtEnd,
+}
+
+struct FnBody {
+    file: String,
+    events: Vec<Event>,
+}
+
+/// One ordered edge in the acquisition graph: `to` was acquired while
+/// `from` was held, first observed at `file:line`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Edge {
+    pub from: String,
+    pub to: String,
+    pub file: String,
+    pub line: usize,
+}
+
+pub struct LockReport {
+    /// Every lock class seen, sorted.
+    pub locks: Vec<String>,
+    /// Ordered acquisition edges, deduplicated, sorted.
+    pub edges: Vec<Edge>,
+    /// A witness cycle (`a → b → … → a`) if the graph has one.
+    pub cycle: Option<Vec<String>>,
+}
+
+impl LockReport {
+    pub fn diagnostics(&self) -> Vec<Diagnostic> {
+        let Some(cycle) = &self.cycle else { return Vec::new() };
+        // Anchor the diagnostic at the edge that closes the cycle.
+        let (file, line) = self
+            .edges
+            .iter()
+            .find(|e| e.from == cycle[cycle.len() - 2] && e.to == cycle[cycle.len() - 1])
+            .map(|e| (e.file.clone(), e.line))
+            .unwrap_or_default();
+        vec![Diagnostic {
+            file,
+            line,
+            rule: LOCK_ORDER,
+            message: format!(
+                "lock acquisition cycle: {} — two threads taking these locks in \
+                 opposite orders can deadlock; impose a single global order",
+                cycle.join(" → "),
+            ),
+        }]
+    }
+
+    /// One-line summary for the CLI and CI logs.
+    pub fn summary(&self) -> String {
+        match &self.cycle {
+            None => format!(
+                "[lock-order] acquisition graph: {} lock class(es), {} edge(s), acyclic",
+                self.locks.len(),
+                self.edges.len(),
+            ),
+            Some(c) => format!(
+                "[lock-order] acquisition graph: {} lock class(es), {} edge(s), CYCLE: {}",
+                self.locks.len(),
+                self.edges.len(),
+                c.join(" → "),
+            ),
+        }
+    }
+}
+
+/// Walk back from `i` (exclusive) over one bracketed group, returning the
+/// index before the group's opener; used to hop `[idx]` / `(args)` when
+/// hunting the receiver of a method call.
+fn skip_group_back(toks: &[Tok], i: usize) -> usize {
+    let (close, open) = match toks[i].text.as_str() {
+        "]" => (']', '['),
+        ")" => (')', '('),
+        _ => return i,
+    };
+    let mut depth = 0usize;
+    let mut j = i;
+    loop {
+        if toks[j].is_punct(close) {
+            depth += 1;
+        } else if toks[j].is_punct(open) {
+            depth -= 1;
+            if depth == 0 {
+                return j.saturating_sub(1);
+            }
+        }
+        if j == 0 {
+            return 0;
+        }
+        j -= 1;
+    }
+}
+
+/// Receiver identifier of the method call whose `.` is at `dot`:
+/// `queue[i].lock()` → `queue`, `self.gate.lock()` → `gate`.
+fn receiver(toks: &[Tok], dot: usize) -> Option<String> {
+    if dot == 0 {
+        return None;
+    }
+    let mut j = dot - 1;
+    j = skip_group_back(toks, j);
+    let t = &toks[j];
+    (t.kind == TokKind::Ident).then(|| t.text.clone())
+}
+
+/// True if the statement containing token `i` starts with (or contains) a
+/// `let` — i.e. the value produced here is bound, so a guard lives past
+/// the statement.
+fn in_let_statement(toks: &[Tok], i: usize) -> bool {
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let t = &toks[j];
+        if t.is_punct(';') || t.is_punct('{') || t.is_punct('}') {
+            return false;
+        }
+        if t.is_ident("let") {
+            return true;
+        }
+    }
+    false
+}
+
+/// Extract per-function event streams from one file.
+fn extract(file: &str, src: &str, fns: &mut BTreeMap<String, FnBody>) {
+    let (toks, _) = lex(src);
+    let has_rwlock = toks.iter().any(|t| t.is_ident("RwLock"));
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !toks[i].is_ident("fn") {
+            i += 1;
+            continue;
+        }
+        let Some(name_tok) = toks.get(i + 1) else { break };
+        if name_tok.kind != TokKind::Ident {
+            i += 1;
+            continue;
+        }
+        let name = name_tok.text.clone();
+        // Find the body: first `{` after the signature (skipping the
+        // argument list and any bracketed generics), or `;` for a
+        // body-less trait method.
+        let mut j = i + 2;
+        let mut body = None;
+        while j < toks.len() {
+            if toks[j].is_punct('(') || toks[j].is_punct('[') {
+                j = matching(&toks, j) + 1;
+                continue;
+            }
+            if toks[j].is_punct(';') {
+                break;
+            }
+            if toks[j].is_punct('{') {
+                body = Some((j, matching(&toks, j)));
+                break;
+            }
+            j += 1;
+        }
+        let Some((open, close)) = body else {
+            i = j + 1;
+            continue;
+        };
+        let mut events = Vec::new();
+        let mut k = open + 1;
+        while k < close.min(toks.len()) {
+            let t = &toks[k];
+            if t.is_punct(';') {
+                events.push(Event::StmtEnd);
+                k += 1;
+                continue;
+            }
+            if t.kind != TokKind::Ident {
+                k += 1;
+                continue;
+            }
+            let after_dot = toks[k - 1].is_punct('.');
+            let zero_arg_call = k + 2 < toks.len()
+                && toks[k + 1].is_punct('(')
+                && toks[k + 2].is_punct(')');
+            let is_acquire = after_dot
+                && zero_arg_call
+                && (t.text == "lock" || (has_rwlock && (t.text == "read" || t.text == "write")));
+            if is_acquire {
+                if let Some(lock) = receiver(&toks, k - 1) {
+                    events.push(Event::Acquire {
+                        lock,
+                        line: t.line,
+                        bound: in_let_statement(&toks, k),
+                    });
+                }
+                k += 3;
+                continue;
+            }
+            // Call-like: name( … ). Resolution against the fn table
+            // happens at graph-build time; method names that match no
+            // known function are ignored there.
+            if k + 1 < toks.len() && toks[k + 1].is_punct('(') && !toks[k - 1].is_ident("fn") {
+                events.push(Event::Call { name: t.text.clone(), line: t.line });
+            }
+            k += 1;
+        }
+        // Nested fns are rare; name collisions collapse (last wins),
+        // which only ever merges event streams conservatively.
+        fns.insert(name, FnBody { file: file.to_string(), events });
+        i = close + 1;
+    }
+}
+
+/// Every lock class `f` (or anything it transitively calls) can acquire.
+fn transitive_acquires(
+    f: &str,
+    fns: &BTreeMap<String, FnBody>,
+    memo: &mut BTreeMap<String, BTreeSet<String>>,
+    visiting: &mut BTreeSet<String>,
+) -> BTreeSet<String> {
+    if let Some(hit) = memo.get(f) {
+        return hit.clone();
+    }
+    if !visiting.insert(f.to_string()) {
+        return BTreeSet::new(); // recursion backstop
+    }
+    let mut acc = BTreeSet::new();
+    if let Some(body) = fns.get(f) {
+        for ev in &body.events {
+            match ev {
+                Event::Acquire { lock, .. } => {
+                    acc.insert(lock.clone());
+                }
+                Event::Call { name, .. } if fns.contains_key(name) => {
+                    acc.extend(transitive_acquires(name, fns, memo, visiting));
+                }
+                _ => {}
+            }
+        }
+    }
+    visiting.remove(f);
+    memo.insert(f.to_string(), acc.clone());
+    acc
+}
+
+/// Build the acquisition graph over `files` (`(normalized path, source)`)
+/// and check it for cycles.
+pub fn analyze(files: &[(String, String)]) -> LockReport {
+    let mut fns: BTreeMap<String, FnBody> = BTreeMap::new();
+    for (path, src) in files {
+        extract(path, src, &mut fns);
+    }
+
+    let mut memo = BTreeMap::new();
+    let mut locks: BTreeSet<String> = BTreeSet::new();
+    let mut edge_set: BTreeMap<(String, String), (String, usize)> = BTreeMap::new();
+    for body in fns.values() {
+        let mut held: Vec<(String, bool)> = Vec::new();
+        for ev in &body.events {
+            match ev {
+                Event::Acquire { lock, line, bound } => {
+                    locks.insert(lock.clone());
+                    for (h, _) in &held {
+                        if h != lock {
+                            edge_set
+                                .entry((h.clone(), lock.clone()))
+                                .or_insert_with(|| (body.file.clone(), *line));
+                        }
+                    }
+                    held.push((lock.clone(), *bound));
+                }
+                Event::Call { name, line } => {
+                    if held.is_empty() || !fns.contains_key(name) {
+                        continue;
+                    }
+                    let mut visiting = BTreeSet::new();
+                    for t in transitive_acquires(name, &fns, &mut memo, &mut visiting) {
+                        locks.insert(t.clone());
+                        for (h, _) in &held {
+                            if *h != t {
+                                edge_set
+                                    .entry((h.clone(), t.clone()))
+                                    .or_insert_with(|| (body.file.clone(), *line));
+                            }
+                        }
+                    }
+                }
+                Event::StmtEnd => held.retain(|(_, bound)| *bound),
+            }
+        }
+    }
+
+    let edges: Vec<Edge> = edge_set
+        .into_iter()
+        .map(|((from, to), (file, line))| Edge { from, to, file, line })
+        .collect();
+    let cycle = find_cycle(&locks, &edges);
+    LockReport { locks: locks.into_iter().collect(), edges, cycle }
+}
+
+/// DFS cycle detection; returns a witness path `a → … → a`.
+fn find_cycle(locks: &BTreeSet<String>, edges: &[Edge]) -> Option<Vec<String>> {
+    let mut succ: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for e in edges {
+        succ.entry(e.from.as_str()).or_default().push(e.to.as_str());
+    }
+    // 0 = white, 1 = on stack, 2 = done.
+    let mut color: BTreeMap<&str, u8> = locks.iter().map(|l| (l.as_str(), 0u8)).collect();
+
+    fn dfs<'a>(
+        node: &'a str,
+        succ: &BTreeMap<&'a str, Vec<&'a str>>,
+        color: &mut BTreeMap<&'a str, u8>,
+        stack: &mut Vec<&'a str>,
+    ) -> Option<Vec<String>> {
+        color.insert(node, 1);
+        stack.push(node);
+        for &next in succ.get(node).into_iter().flatten() {
+            match color.get(next).copied().unwrap_or(0) {
+                1 => {
+                    let from = stack.iter().position(|&s| s == next).unwrap_or(0);
+                    let mut cycle: Vec<String> =
+                        stack[from..].iter().map(|s| s.to_string()).collect();
+                    cycle.push(next.to_string());
+                    return Some(cycle);
+                }
+                0 => {
+                    if let Some(c) = dfs(next, succ, color, stack) {
+                        return Some(c);
+                    }
+                }
+                _ => {}
+            }
+        }
+        stack.pop();
+        color.insert(node, 2);
+        None
+    }
+
+    let nodes: Vec<&str> = locks.iter().map(|l| l.as_str()).collect();
+    for node in nodes {
+        if color.get(node).copied().unwrap_or(0) == 0 {
+            let mut stack = Vec::new();
+            if let Some(c) = dfs(node, &succ, &mut color, &mut stack) {
+                return Some(c);
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one(path: &str, src: &str) -> LockReport {
+        analyze(&[(path.to_string(), src.to_string())])
+    }
+
+    #[test]
+    fn opposite_orders_cycle() {
+        let src = "
+            fn a(&self) {
+                let g1 = self.alpha.lock();
+                let g2 = self.beta.lock();
+            }
+            fn b(&self) {
+                let g1 = self.beta.lock();
+                let g2 = self.alpha.lock();
+            }
+        ";
+        let r = one("net/server.rs", src);
+        assert_eq!(r.locks, ["alpha", "beta"]);
+        let cycle = r.cycle.expect("opposite acquisition orders must cycle");
+        assert_eq!(cycle.first(), cycle.last());
+        assert_eq!(r.diagnostics().len(), 1);
+        assert!(r.summary().contains("CYCLE"), "{}", r.summary());
+    }
+
+    #[test]
+    fn consistent_order_is_acyclic() {
+        let src = "
+            fn a(&self) { let g1 = self.alpha.lock(); let g2 = self.beta.lock(); }
+            fn b(&self) { let g1 = self.alpha.lock(); let g2 = self.beta.lock(); }
+        ";
+        let r = one("net/server.rs", src);
+        assert!(r.cycle.is_none());
+        assert_eq!(r.edges.len(), 1);
+        assert_eq!((r.edges[0].from.as_str(), r.edges[0].to.as_str()), ("alpha", "beta"));
+        assert!(r.diagnostics().is_empty());
+    }
+
+    #[test]
+    fn temporary_guard_dropped_at_statement_end() {
+        // Neither guard is let-bound, so no two are ever held together.
+        let src = "
+            fn a(&self) { *self.alpha.lock() += 1; *self.beta.lock() += 1; }
+            fn b(&self) { *self.beta.lock() += 1; *self.alpha.lock() += 1; }
+        ";
+        let r = one("net/server.rs", src);
+        assert!(r.edges.is_empty(), "{:?}", r.edges);
+        assert!(r.cycle.is_none());
+    }
+
+    #[test]
+    fn interprocedural_cycle_through_helper() {
+        let src = "
+            fn helper(&self) { let g = self.beta.lock(); }
+            fn a(&self) {
+                let g = self.alpha.lock();
+                helper();
+            }
+            fn b(&self) {
+                let g = self.beta.lock();
+                let h = self.alpha.lock();
+            }
+        ";
+        let r = one("runtime/mod.rs", src);
+        assert!(r.cycle.is_some(), "{:?}", r.edges);
+    }
+
+    #[test]
+    fn self_reacquire_not_flagged() {
+        let src = "fn a(&self) { let g = self.alpha.lock(); let h = self.alpha.lock(); }";
+        let r = one("net/server.rs", src);
+        assert!(r.edges.is_empty());
+        assert!(r.cycle.is_none());
+    }
+
+    #[test]
+    fn io_read_write_are_not_locks() {
+        // No RwLock in the file ⇒ zero-arg read()/write() are ignored.
+        let src = "fn a(s: &mut S) { let n = s.read(); s.write(); }";
+        let r = one("net/worker.rs", src);
+        assert!(r.locks.is_empty(), "{:?}", r.locks);
+    }
+
+    #[test]
+    fn rwlock_read_write_count_when_present() {
+        let src = "
+            struct S { table: RwLock<u8> }
+            fn a(&self) { let g = self.table.read(); let h = self.index.write(); }
+            fn b(&self) { let g = self.index.write(); let h = self.table.read(); }
+        ";
+        let r = one("runtime/mod.rs", src);
+        assert_eq!(r.locks, ["index", "table"]);
+        assert!(r.cycle.is_some());
+    }
+
+    #[test]
+    fn indexed_receiver_collapses_to_base() {
+        let src = "fn a(q: &[M]) { let g = queue[i].lock(); let s = slots[i].lock(); }";
+        let r = one("coordinator/round_exec.rs", src);
+        assert_eq!(r.locks, ["queue", "slots"]);
+        assert_eq!(r.edges.len(), 1);
+    }
+}

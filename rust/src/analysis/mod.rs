@@ -1,0 +1,394 @@
+//! `photon lint` — the determinism & concurrency static-analysis plane.
+//!
+//! The repo's headline guarantees (bit-exact parity between
+//! `Federation::run`, the TCP fleet, and trace replay; "malformed frame ⇒
+//! cut, never crash") are *determinism contracts* stated in
+//! docs/ARCHITECTURE.md and docs/PROTOCOL.md. Tests enforce them only on
+//! the paths tests happen to exercise; this module enforces them at the
+//! source level, over every path, with zero external dependencies.
+//!
+//! Layers:
+//! - [`lexer`] — a lightweight Rust tokenizer (comments kept separately,
+//!   so `lint:allow` directives and doc text never look like code);
+//! - [`rules`] — per-file visitors: `nondet-map`, `nondet-time`,
+//!   `nondet-rng`, `wire-panic`, `wire-alloc`;
+//! - [`locks`] — the inter-procedural Mutex/RwLock acquisition graph and
+//!   its cycle check (`lock-order`);
+//! - [`explain`] — the `photon lint --explain <rule>` writeups.
+//!
+//! Suppression policy: a violation may be silenced only by a
+//! `lint:allow` comment — rule name in parentheses, then a colon and a
+//! mandatory reason — on the same line or the line above; a reason-less
+//! allow is itself a violation (`allow-policy`). See docs/ANALYSIS.md.
+
+pub mod explain;
+pub mod lexer;
+pub mod locks;
+pub mod rules;
+
+use std::fmt;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use lexer::{lex, Comment, Tok};
+
+pub const NONDET_MAP: &str = "nondet-map";
+pub const NONDET_TIME: &str = "nondet-time";
+pub const NONDET_RNG: &str = "nondet-rng";
+pub const WIRE_PANIC: &str = "wire-panic";
+pub const WIRE_ALLOC: &str = "wire-alloc";
+pub const LOCK_ORDER: &str = "lock-order";
+pub const ALLOW_POLICY: &str = "allow-policy";
+
+/// All rules, with one-line summaries (shown by `photon lint --explain`).
+pub const RULES: &[(&str, &str)] = &[
+    (NONDET_MAP, "hash-ordered containers in determinism-scoped modules"),
+    (NONDET_TIME, "host-clock reads outside the wall-clock allowlist"),
+    (NONDET_RNG, "randomness that does not come from util::rng"),
+    (WIRE_PANIC, "panics or raw indexing on wire-decoded data in net/ and link/"),
+    (WIRE_ALLOC, "allocations sized by untrusted decoded lengths"),
+    (LOCK_ORDER, "cycles in the inter-procedural lock-acquisition graph"),
+    (ALLOW_POLICY, "malformed or reason-less lint:allow suppressions"),
+];
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Path relative to the source root, `/`-separated.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{} [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Everything `lint_tree` learned about one source tree.
+pub struct Report {
+    /// Files scanned.
+    pub files: usize,
+    /// Surviving (un-suppressed) violations, sorted by file/line/rule.
+    pub diagnostics: Vec<Diagnostic>,
+    /// The lock-acquisition analysis over the concurrency-scoped files.
+    pub locks: locks::LockReport,
+}
+
+/// A parsed, well-formed `lint:allow` directive (rule + reason).
+struct Allow {
+    line: usize,
+    rule: &'static str,
+}
+
+fn known_rule(name: &str) -> Option<&'static str> {
+    RULES.iter().find(|(r, _)| *r == name).map(|(r, _)| *r)
+}
+
+/// Strip tooling prefixes so fixtures and real files normalize the same
+/// way ("rust/src/net/proto.rs" and "net/proto.rs" are the same module).
+fn norm_path(p: &str) -> String {
+    let p = p.replace('\\', "/");
+    let p = p.strip_prefix("./").unwrap_or(&p);
+    for prefix in ["rust/src/", "src/"] {
+        if let Some(rest) = p.strip_prefix(prefix) {
+            return rest.to_string();
+        }
+    }
+    p.to_string()
+}
+
+/// Parse every `lint:allow` directive in the comment stream. Malformed
+/// directives (unknown rule, missing reason, unsuppressible rule) become
+/// `allow-policy` diagnostics instead of allows — a suppression that does
+/// not explain itself is a violation in its own right.
+fn parse_allows(path: &str, comments: &[Comment], policy: &mut Vec<Diagnostic>) -> Vec<Allow> {
+    let mut allows = Vec::new();
+    for c in comments {
+        let mut search = 0usize;
+        while let Some(pos) = c.text[search..].find("lint:allow") {
+            let at = search + pos;
+            search = at + "lint:allow".len();
+            let line = c.line + c.text[..at].matches('\n').count();
+            let mut bad = |msg: String, policy: &mut Vec<Diagnostic>| {
+                policy.push(Diagnostic {
+                    file: path.to_string(),
+                    line,
+                    rule: ALLOW_POLICY,
+                    message: msg,
+                });
+            };
+            let rest = &c.text[search..];
+            let Some(rest) = rest.strip_prefix('(') else {
+                // Prose mention ("see lint:allow below"), not a directive.
+                // Fail-closed: a typo'd directive suppresses nothing, so
+                // the underlying diagnostic still fires.
+                continue;
+            };
+            let Some(close) = rest.find(')') else {
+                bad("malformed suppression: unclosed `lint:allow(`".into(), policy);
+                continue;
+            };
+            let rule_name = rest[..close].trim();
+            let reason = rest[close + 1..]
+                .trim_start()
+                .strip_prefix(':')
+                .map(|r| {
+                    r.lines()
+                        .next()
+                        .unwrap_or("")
+                        .trim()
+                        .trim_end_matches("*/")
+                        .trim()
+                        .to_string()
+                })
+                .unwrap_or_default();
+            match known_rule(rule_name) {
+                None => bad(
+                    format!("lint:allow names unknown rule `{rule_name}` (see --explain)"),
+                    policy,
+                ),
+                Some(r) if r == ALLOW_POLICY => bad(
+                    "allow-policy cannot be suppressed: fix the malformed directive".into(),
+                    policy,
+                ),
+                Some(r) if r == LOCK_ORDER => bad(
+                    "lock-order findings are structural (cycles across functions) and \
+                     cannot be suppressed at a line; break the cycle instead"
+                        .into(),
+                    policy,
+                ),
+                Some(_) if reason.is_empty() => bad(
+                    format!(
+                        "lint:allow({rule_name}) without a reason: every suppression \
+                         must say why the site is exempt"
+                    ),
+                    policy,
+                ),
+                Some(r) => allows.push(Allow { line, rule: r }),
+            }
+        }
+    }
+    allows
+}
+
+/// Per-token mask: true inside `#[cfg(test)]` / `#[test]` items. Test
+/// code may unwrap and hash to its heart's content — it never runs on the
+/// wire or in round math.
+fn test_spans(toks: &[Tok]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        let is_attr = toks[i].is_punct('#') && i + 1 < toks.len() && toks[i + 1].is_punct('[');
+        if !is_attr {
+            i += 1;
+            continue;
+        }
+        let close = rules::matching(toks, i + 1);
+        let inner: Vec<&str> = toks[i + 2..close.min(toks.len())]
+            .iter()
+            .filter(|t| t.kind == lexer::TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        let is_test_attr = inner == ["test"] || inner == ["cfg", "test"];
+        if !is_test_attr {
+            i = close + 1;
+            continue;
+        }
+        // Find the item the attribute decorates: the next `{…}` block (or
+        // a `;` for block-less items), skipping stacked attributes and the
+        // signature's parens/brackets.
+        let mut j = close + 1;
+        let mut end = None;
+        while j < toks.len() {
+            if toks[j].is_punct('#') && j + 1 < toks.len() && toks[j + 1].is_punct('[') {
+                j = rules::matching(toks, j + 1) + 1;
+                continue;
+            }
+            if toks[j].is_punct('(') || toks[j].is_punct('[') {
+                j = rules::matching(toks, j) + 1;
+                continue;
+            }
+            if toks[j].is_punct(';') {
+                end = Some(j);
+                break;
+            }
+            if toks[j].is_punct('{') {
+                end = Some(rules::matching(toks, j));
+                break;
+            }
+            j += 1;
+        }
+        match end {
+            Some(e) => {
+                let e = e.min(toks.len() - 1);
+                for m in mask.iter_mut().take(e + 1).skip(i) {
+                    *m = true;
+                }
+                i = e + 1;
+            }
+            None => break,
+        }
+    }
+    mask
+}
+
+/// Lint one file's source. `virtual_path` decides rule scoping, so fixture
+/// snippets can opt into any scope by claiming a path inside it. Returns
+/// surviving diagnostics, sorted and deduplicated.
+pub fn lint_source(virtual_path: &str, source: &str) -> Vec<Diagnostic> {
+    let path = norm_path(virtual_path);
+    let (toks, comments) = lex(source);
+    let is_test = test_spans(&toks);
+    let ctx = rules::FileCtx { path: &path, toks: &toks, is_test: &is_test };
+
+    let mut diags = Vec::new();
+    rules::nondet_map(&ctx, &mut diags);
+    rules::nondet_time(&ctx, &mut diags);
+    rules::nondet_rng(&ctx, &mut diags);
+    rules::wire_panic(&ctx, &mut diags);
+    rules::wire_alloc(&ctx, &mut diags);
+
+    let mut policy = Vec::new();
+    let allows = parse_allows(&path, &comments, &mut policy);
+    let suppressed = |d: &Diagnostic| {
+        allows
+            .iter()
+            .any(|a| a.rule == d.rule && (a.line == d.line || a.line + 1 == d.line))
+    };
+    let mut kept: Vec<Diagnostic> = diags.into_iter().filter(|d| !suppressed(d)).collect();
+    kept.extend(policy);
+    kept.sort_by(|a, b| (a.line, a.rule, &a.message).cmp(&(b.line, b.rule, &b.message)));
+    kept.dedup();
+    kept
+}
+
+fn walk(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .collect::<std::io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            walk(root, &p, out)?;
+        } else if p.extension().and_then(|x| x.to_str()) == Some("rs") {
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `src_root` (deterministic order), then run
+/// the cross-file lock-order analysis over the concurrency-scoped subset.
+pub fn lint_tree(src_root: &Path) -> Result<Report> {
+    let mut paths = Vec::new();
+    walk(src_root, src_root, &mut paths)?;
+    paths.sort();
+
+    let mut diags = Vec::new();
+    let mut lock_files: Vec<(String, String)> = Vec::new();
+    for rel in &paths {
+        let full = src_root.join(rel);
+        let src = fs::read_to_string(&full)
+            .with_context(|| format!("reading {}", full.display()))?;
+        diags.extend(lint_source(rel, &src));
+        if locks::in_scope(&norm_path(rel)) {
+            lock_files.push((norm_path(rel), src));
+        }
+    }
+    let locks_report = locks::analyze(&lock_files);
+    diags.extend(locks_report.diagnostics());
+    diags.sort_by(|a, b| {
+        (&a.file, a.line, a.rule, &a.message).cmp(&(&b.file, b.line, b.rule, &b.message))
+    });
+    diags.dedup();
+    Ok(Report { files: paths.len(), diagnostics: diags, locks: locks_report })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allow_on_same_or_preceding_line_suppresses() {
+        let src = "use std::collections::HashMap; // lint:allow(nondet-map): ordered drain below\n\
+                   // lint:allow(nondet-map): keys sorted before the fold\n\
+                   fn f() { let m: HashMap<u8, u8> = HashMap::new(); }\n";
+        assert!(lint_source("metrics/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allow_does_not_leak_to_other_lines_or_rules() {
+        let src = "// lint:allow(nondet-map): only covers the next line\n\
+                   fn a() { let m = HashMap::new(); }\n\
+                   fn b() { let m = HashMap::new(); }\n";
+        let d = lint_source("metrics/mod.rs", src);
+        assert_eq!(d.len(), 1);
+        assert_eq!((d[0].line, d[0].rule), (3, NONDET_MAP));
+        // A nondet-map allow does not silence a nondet-time hit.
+        let src = "// lint:allow(nondet-map): wrong rule\nfn f() { let t = Instant::now(); }\n";
+        let d = lint_source("metrics/mod.rs", src);
+        assert_eq!((d[0].line, d[0].rule), (2, NONDET_TIME));
+    }
+
+    #[test]
+    fn reasonless_allow_is_a_policy_violation() {
+        let src = "// lint:allow(nondet-map)\nfn f() { let m = HashMap::new(); }\n";
+        let d = lint_source("metrics/mod.rs", src);
+        let rules: Vec<_> = d.iter().map(|x| x.rule).collect();
+        assert!(rules.contains(&ALLOW_POLICY), "{d:?}");
+        assert!(rules.contains(&NONDET_MAP), "reason-less allow must not suppress: {d:?}");
+    }
+
+    #[test]
+    fn prose_mention_of_the_directive_is_ignored() {
+        // Doc text that *talks about* the directive (no opening paren
+        // right after it) is neither a suppression nor a violation.
+        let d = lint_source("metrics/mod.rs", "// see lint:allow in docs/ANALYSIS.md\n");
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn unknown_rule_in_allow_is_flagged() {
+        let d = lint_source("metrics/mod.rs", "// lint:allow(no-such-rule): whatever\n");
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, ALLOW_POLICY);
+        assert!(d[0].message.contains("no-such-rule"));
+    }
+
+    #[test]
+    fn lock_order_and_allow_policy_cannot_be_suppressed() {
+        let d = lint_source("net/server.rs", "// lint:allow(lock-order): nope\n");
+        assert_eq!(d[0].rule, ALLOW_POLICY);
+        let d = lint_source("net/server.rs", "// lint:allow(allow-policy): nope\n");
+        assert_eq!(d[0].rule, ALLOW_POLICY);
+    }
+
+    #[test]
+    fn diagnostic_rendering_is_stable() {
+        let d = lint_source("exp/common.rs", "fn f() { let m = HashMap::new(); }\n");
+        let line = d[0].to_string();
+        assert!(line.starts_with("exp/common.rs:1 [nondet-map] "), "{line}");
+    }
+
+    #[test]
+    fn virtual_path_prefixes_normalize() {
+        for p in ["rust/src/metrics/mod.rs", "src/metrics/mod.rs", "metrics/mod.rs"] {
+            assert_eq!(
+                lint_source(p, "fn f() { let m = HashMap::new(); }\n").len(),
+                1,
+                "path {p} should be in scope"
+            );
+        }
+    }
+}

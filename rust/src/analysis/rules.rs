@@ -1,0 +1,511 @@
+//! Per-file lint rules: nondeterminism (hash order, wall clocks, foreign
+//! RNGs) and wire panic-safety (panics and unbounded allocation on decode
+//! paths). Each rule is a small visitor over the token stream produced by
+//! [`super::lexer`]; scoping is by module path so fixtures can exercise a
+//! rule by claiming a virtual path inside (or outside) its scope.
+
+use super::lexer::{Tok, TokKind};
+use super::{Diagnostic, NONDET_MAP, NONDET_RNG, NONDET_TIME, WIRE_ALLOC, WIRE_PANIC};
+
+/// One source file as seen by the rules: normalized path (relative to
+/// `src/`, `/`-separated), tokens, and a per-token "inside `#[cfg(test)]`
+/// or `#[test]`" mask computed by the driver.
+pub struct FileCtx<'a> {
+    pub path: &'a str,
+    pub toks: &'a [Tok],
+    pub is_test: &'a [bool],
+}
+
+/// Modules whose state feeds round math, the wire protocol, metrics, or
+/// replay — anywhere hash-iteration order could leak into observable
+/// behavior. Root-level files (main.rs, benchkit.rs, testkit.rs) and
+/// `util/`, `config/`, `runtime/`, `analysis/` are deliberately outside.
+const DETERMINISM_SCOPE: &[&str] = &[
+    "chaos/",
+    "ckpt/",
+    "cluster/",
+    "compress/",
+    "coordinator/",
+    "data/",
+    "evalharness/",
+    "exp/",
+    "link/",
+    "metrics/",
+    "model/",
+    "net/",
+    "netsim/",
+    "optim/",
+    "sim/",
+];
+
+/// Files allowed to read host clocks: transport/liveness layers (timeouts,
+/// deadlines, session ids) and reporting harnesses. Everything they derive
+/// from a clock must stay out of round math — that is what keeps parity
+/// between `Federation::run`, the TCP fleet, and trace replay.
+const WALL_CLOCK_FILES: &[&str] = &[
+    "net/server.rs",
+    "net/harness.rs",
+    "net/worker.rs",
+    "benchkit.rs",
+    "main.rs",
+    "testkit.rs",
+];
+const WALL_CLOCK_DIRS: &[&str] = &["util/", "runtime/", "analysis/"];
+
+/// Identifiers that mean "an RNG that is not `util::rng`".
+const FOREIGN_RNG: &[&str] = &[
+    "thread_rng",
+    "from_entropy",
+    "getrandom",
+    "OsRng",
+    "ThreadRng",
+    "StdRng",
+    "SmallRng",
+    "RandomState",
+];
+
+/// Decoder methods on `ckpt::Dec` that yield attacker-controlled integers
+/// (plus `from_le_bytes`, the raw-header equivalent). A `let` whose RHS
+/// calls one of these taints the bound name as an untrusted length.
+const DEC_INT_METHODS: &[&str] = &["u8", "u16", "u32", "u64", "i64", "from_le_bytes"];
+
+/// Calls whose result carries a whole decoded frame/message; `let`
+/// bindings from them are tainted for the indexing check.
+const DECODE_SOURCES: &[&str] = &["read_msg", "read_frame", "recv_frame"];
+
+pub fn in_determinism_scope(path: &str) -> bool {
+    DETERMINISM_SCOPE.iter().any(|p| path.starts_with(p))
+}
+
+pub fn wall_clock_allowed(path: &str) -> bool {
+    WALL_CLOCK_FILES.contains(&path) || WALL_CLOCK_DIRS.iter().any(|p| path.starts_with(p))
+}
+
+pub fn in_wire_scope(path: &str) -> bool {
+    path.starts_with("net/") || path.starts_with("link/")
+}
+
+/// Forbid `HashMap`/`HashSet` anywhere in determinism-scoped modules. The
+/// ban is on the *type*, not just iteration: once the type is present, an
+/// order-dependent fold is one refactor away, and token-level analysis
+/// cannot prove it never happens.
+pub fn nondet_map(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    if !in_determinism_scope(ctx.path) {
+        return;
+    }
+    for (i, t) in ctx.toks.iter().enumerate() {
+        if ctx.is_test[i] || t.kind != TokKind::Ident {
+            continue;
+        }
+        if t.text == "HashMap" || t.text == "HashSet" {
+            out.push(Diagnostic {
+                file: ctx.path.to_string(),
+                line: t.line,
+                rule: NONDET_MAP,
+                message: format!(
+                    "std::collections::{} in a determinism-scoped module: hash iteration \
+                     order varies per process, breaking bit-exact parity; use BTree{} \
+                     or sort before folding",
+                    t.text,
+                    &t.text[4..],
+                ),
+            });
+        }
+    }
+}
+
+/// Forbid `Instant::now` / `SystemTime::now` outside the wall-clock
+/// allowlist. Round math and protocol state must be a pure function of
+/// (config, seed, trace).
+pub fn nondet_time(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    if wall_clock_allowed(ctx.path) {
+        return;
+    }
+    let toks = ctx.toks;
+    for i in 0..toks.len() {
+        if ctx.is_test[i] {
+            continue;
+        }
+        let t = &toks[i];
+        if t.kind == TokKind::Ident && (t.text == "Instant" || t.text == "SystemTime") {
+            let now = i + 3 < toks.len()
+                && toks[i + 1].is_punct(':')
+                && toks[i + 2].is_punct(':')
+                && toks[i + 3].is_ident("now");
+            if now {
+                out.push(Diagnostic {
+                    file: ctx.path.to_string(),
+                    line: t.line,
+                    rule: NONDET_TIME,
+                    message: format!(
+                        "{}::now() outside the wall-clock allowlist: host clocks must not \
+                         reach round math or metrics (parity across fleet/sim/replay); \
+                         measure in net/server, net/harness, or benchkit instead",
+                        t.text,
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Forbid any RNG that is not `util::rng`. Reproducibility is seeded at
+/// the experiment root; an ambient entropy source anywhere below it makes
+/// runs unreplayable.
+pub fn nondet_rng(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    if ctx.path == "util/rng.rs" {
+        return;
+    }
+    let toks = ctx.toks;
+    for i in 0..toks.len() {
+        if ctx.is_test[i] || toks[i].kind != TokKind::Ident {
+            continue;
+        }
+        let name = toks[i].text.as_str();
+        let foreign = FOREIGN_RNG.contains(&name)
+            || (name == "rand" && i + 1 < toks.len() && toks[i + 1].is_punct(':'));
+        if foreign {
+            out.push(Diagnostic {
+                file: ctx.path.to_string(),
+                line: toks[i].line,
+                rule: NONDET_RNG,
+                message: format!(
+                    "foreign RNG `{name}`: every stochastic draw must come from a \
+                     util::rng::Rng stream derived from the experiment seed",
+                ),
+            });
+        }
+    }
+}
+
+/// Index of the token matching an opening bracket at `open` (`(`, `[`,
+/// `{`). Returns `toks.len()` if unbalanced (unterminated input).
+pub(crate) fn matching(toks: &[Tok], open: usize) -> usize {
+    let (o, c) = match toks[open].text.as_str() {
+        "(" => ('(', ')'),
+        "[" => ('[', ']'),
+        _ => ('{', '}'),
+    };
+    let mut depth = 0usize;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct(o) {
+            depth += 1;
+        } else if t.is_punct(c) {
+            depth -= 1;
+            if depth == 0 {
+                return j;
+            }
+        }
+    }
+    toks.len()
+}
+
+/// Names bound by the `let` starting at token `i` (which is the `let`
+/// itself), plus the token range of its initializer expression. Pattern
+/// idents are everything before the `=`, minus binding noise words.
+fn let_binding(toks: &[Tok], i: usize) -> Option<(Vec<String>, usize, usize)> {
+    const NOISE: &[&str] = &["mut", "ref", "Some", "Ok", "Err", "None", "else"];
+    let mut eq = None;
+    let mut j = i + 1;
+    // Find the `=` that starts the initializer (skip `==`, `=>`, and any
+    // bracketed type params in the pattern).
+    while j < toks.len() && !toks[j].is_punct(';') {
+        if toks[j].is_punct('(') || toks[j].is_punct('[') {
+            j = matching(toks, j) + 1;
+            continue;
+        }
+        if toks[j].is_punct('=') {
+            let next_eq = toks.get(j + 1).map(|t| t.is_punct('=') || t.is_punct('>'));
+            if next_eq != Some(true) {
+                eq = Some(j);
+                break;
+            }
+            j += 2;
+            continue;
+        }
+        j += 1;
+    }
+    let eq = eq?;
+    let names: Vec<String> = toks[i + 1..eq]
+        .iter()
+        .filter(|t| t.kind == TokKind::Ident && !NOISE.contains(&t.text.as_str()))
+        .map(|t| t.text.clone())
+        .collect();
+    // Initializer runs to the `;` at the same nesting depth.
+    let mut depth = 0i64;
+    let mut end = eq + 1;
+    while end < toks.len() {
+        let t = &toks[end];
+        if t.is_punct('(') || t.is_punct('[') || t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct(')') || t.is_punct(']') || t.is_punct('}') {
+            depth -= 1;
+            if depth < 0 {
+                break;
+            }
+        } else if t.is_punct(';') && depth == 0 {
+            break;
+        }
+        end += 1;
+    }
+    Some((names, eq + 1, end))
+}
+
+/// True if `toks[span]` uses identifier `name` as a value (not as a
+/// method name, i.e. not right after `.`).
+fn uses_ident(toks: &[Tok], span: std::ops::Range<usize>, name: &str) -> bool {
+    for j in span {
+        if toks[j].is_ident(name) && (j == 0 || !toks[j - 1].is_punct('.')) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Panic-safety on the wire: in `net/` and `link/`, forbid
+/// `unwrap`/`expect`/panic-family macros, and forbid `v[i]` indexing when
+/// `v` was let-bound from a frame/message decode. Taint is per-function.
+pub fn wire_panic(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    if !in_wire_scope(ctx.path) {
+        return;
+    }
+    const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+    let toks = ctx.toks;
+    let mut tainted: Vec<String> = Vec::new();
+    for i in 0..toks.len() {
+        if ctx.is_test[i] {
+            continue;
+        }
+        let t = &toks[i];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let name = t.text.as_str();
+        if name == "fn" {
+            tainted.clear();
+            continue;
+        }
+        if name == "let" {
+            if let Some((names, rhs_start, rhs_end)) = let_binding(toks, i) {
+                let from_decode = toks[rhs_start..rhs_end].iter().any(|r| {
+                    r.kind == TokKind::Ident
+                        && (r.text.starts_with("decode") || DECODE_SOURCES.contains(&r.text.as_str()))
+                });
+                if from_decode {
+                    tainted.extend(names);
+                }
+            }
+            continue;
+        }
+        let after_dot = i > 0 && toks[i - 1].is_punct('.');
+        if after_dot && (name == "unwrap" || name == "expect") {
+            out.push(Diagnostic {
+                file: ctx.path.to_string(),
+                line: t.line,
+                rule: WIRE_PANIC,
+                message: format!(
+                    ".{name}() on the wire path: a malformed or hostile frame must cut \
+                     the connection, never crash the process; propagate with `?`/bail!",
+                ),
+            });
+            continue;
+        }
+        if PANIC_MACROS.contains(&name) && i + 1 < toks.len() && toks[i + 1].is_punct('!') {
+            out.push(Diagnostic {
+                file: ctx.path.to_string(),
+                line: t.line,
+                rule: WIRE_PANIC,
+                message: format!(
+                    "{name}! on the wire path: malformed input must produce an error, \
+                     not a process abort; bail! with a diagnostic instead",
+                ),
+            });
+            continue;
+        }
+        if !after_dot
+            && tainted.iter().any(|n| n == name)
+            && i + 1 < toks.len()
+            && toks[i + 1].is_punct('[')
+        {
+            out.push(Diagnostic {
+                file: ctx.path.to_string(),
+                line: t.line,
+                rule: WIRE_PANIC,
+                message: format!(
+                    "direct indexing of wire-derived value `{name}`: indexes inside a \
+                     decoded frame are attacker-controlled; use get()/get_mut() and \
+                     handle None",
+                ),
+            });
+        }
+    }
+}
+
+/// Allocation bounded by untrusted lengths: in `net/` and `link/`, a
+/// `Vec::with_capacity` / `.reserve` / `vec![x; n]` whose size expression
+/// uses a let-bound integer decoded off the wire must go through
+/// `Dec::capacity_hint` (or carry a reasoned `lint:allow` pointing at the
+/// bound that makes it safe).
+pub fn wire_alloc(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    if !in_wire_scope(ctx.path) {
+        return;
+    }
+    fn flag(
+        toks: &[Tok],
+        tainted: &[String],
+        path: &str,
+        args: std::ops::Range<usize>,
+        what: &str,
+        line: usize,
+        out: &mut Vec<Diagnostic>,
+    ) {
+        if uses_ident(toks, args.clone(), "capacity_hint") {
+            return;
+        }
+        for name in tainted {
+            if uses_ident(toks, args.clone(), name) {
+                out.push(Diagnostic {
+                    file: path.to_string(),
+                    line,
+                    rule: WIRE_ALLOC,
+                    message: format!(
+                        "{what} sized by wire-decoded integer `{name}`: a checksum-valid \
+                         frame can still declare a 2^60 length; clamp through \
+                         Dec::capacity_hint or validate against a hard bound first",
+                    ),
+                });
+                return;
+            }
+        }
+    }
+    let toks = ctx.toks;
+    let mut tainted: Vec<String> = Vec::new();
+    for i in 0..toks.len() {
+        if ctx.is_test[i] || toks[i].kind != TokKind::Ident {
+            continue;
+        }
+        let name = toks[i].text.as_str();
+        if name == "fn" {
+            tainted.clear();
+            continue;
+        }
+        if name == "let" {
+            if let Some((names, rhs_start, rhs_end)) = let_binding(toks, i) {
+                let from_dec_int = (rhs_start..rhs_end).any(|j| {
+                    toks[j].kind == TokKind::Ident
+                        && DEC_INT_METHODS.contains(&toks[j].text.as_str())
+                        && j + 1 < toks.len()
+                        && toks[j + 1].is_punct('(')
+                });
+                if from_dec_int {
+                    tainted.extend(names);
+                }
+            }
+            continue;
+        }
+        match name {
+            "with_capacity" | "reserve" if i + 1 < toks.len() && toks[i + 1].is_punct('(') => {
+                let close = matching(toks, i + 1);
+                flag(toks, &tainted, ctx.path, i + 2..close, "allocation", toks[i].line, out);
+            }
+            "vec" if i + 2 < toks.len() && toks[i + 1].is_punct('!') && toks[i + 2].is_punct('[') => {
+                let close = matching(toks, i + 2);
+                flag(toks, &tainted, ctx.path, i + 3..close, "vec! allocation", toks[i].line, out);
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lint_source;
+    use super::*;
+
+    fn rules_at(path: &str, src: &str) -> Vec<(usize, &'static str)> {
+        lint_source(path, src).into_iter().map(|d| (d.line, d.rule)).collect()
+    }
+
+    #[test]
+    fn scope_tables() {
+        assert!(in_determinism_scope("coordinator/federation.rs"));
+        assert!(in_determinism_scope("net/proto.rs"));
+        assert!(!in_determinism_scope("util/cli.rs"));
+        assert!(!in_determinism_scope("benchkit.rs"));
+        assert!(wall_clock_allowed("net/server.rs"));
+        assert!(wall_clock_allowed("util/mod.rs"));
+        assert!(!wall_clock_allowed("coordinator/federation.rs"));
+        assert!(in_wire_scope("link/mod.rs"));
+        assert!(!in_wire_scope("model/mod.rs"));
+    }
+
+    #[test]
+    fn hash_containers_flagged_in_scope_only() {
+        let src = "use std::collections::HashMap;\nfn f() { let m: HashMap<u32, u32> = HashMap::new(); }\n";
+        let hits = rules_at("metrics/mod.rs", src);
+        assert_eq!(hits, [(1, "nondet-map"), (2, "nondet-map")]);
+        assert!(rules_at("util/json.rs", src).is_empty());
+    }
+
+    #[test]
+    fn clock_reads_flagged_outside_allowlist() {
+        let src = "fn f() { let t = Instant::now(); let s = SystemTime::now(); }\n";
+        assert_eq!(
+            rules_at("coordinator/mod.rs", src),
+            [(1, "nondet-time"), (1, "nondet-time")]
+        );
+        assert!(rules_at("net/harness.rs", src).is_empty());
+    }
+
+    #[test]
+    fn foreign_rng_flagged() {
+        let src = "fn f() { let r = rand::thread_rng(); }\n";
+        let hits = rules_at("data/corpus.rs", src);
+        assert_eq!(hits, [(1, "nondet-rng")]);
+        // `rand` only counts when path-qualified; a field named rand is fine.
+        assert!(rules_at("data/corpus.rs", "fn f(s: S) { let x = s.rand; }\n").is_empty());
+    }
+
+    #[test]
+    fn wire_panics_flagged_only_in_wire_modules() {
+        let src = "fn f() { x.unwrap(); y.expect(\"m\"); panic!(\"no\"); }\n";
+        assert_eq!(
+            rules_at("net/proto.rs", src),
+            [(1, "wire-panic"), (1, "wire-panic"), (1, "wire-panic")]
+        );
+        assert!(rules_at("model/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn tainted_indexing_is_function_scoped() {
+        let src = "fn f(frame: &[u8]) {\n let msg = Msg::decode(frame)?;\n let b = msg[0];\n}\nfn g(msg: &[u8]) { let b = msg[0]; }\n";
+        assert_eq!(rules_at("net/worker.rs", src), [(3, "wire-panic")]);
+    }
+
+    #[test]
+    fn unwrap_or_else_is_not_unwrap() {
+        let src = "fn f() { let v = x.unwrap_or_else(|_| 0); }\n";
+        assert!(rules_at("net/server.rs", src).is_empty());
+    }
+
+    #[test]
+    fn wire_alloc_requires_capacity_hint() {
+        let bad = "fn f(d: &mut Dec) -> Result<()> {\n let n = d.u64()? as usize;\n let v: Vec<u8> = Vec::with_capacity(n);\n Ok(())\n}\n";
+        assert_eq!(rules_at("net/proto.rs", bad), [(3, "wire-alloc")]);
+        let good = bad.replace("Vec::with_capacity(n)", "Vec::with_capacity(d.capacity_hint(n, 8))");
+        assert!(rules_at("net/proto.rs", &good).is_empty());
+    }
+
+    #[test]
+    fn vec_macro_with_decoded_len_flagged() {
+        let src = "fn f(r: &mut R) -> Result<()> {\n let len = u32::from_le_bytes(h) as usize;\n let buf = vec![0u8; len];\n Ok(())\n}\n";
+        assert_eq!(rules_at("net/proto.rs", src), [(3, "wire-alloc")]);
+    }
+
+    #[test]
+    fn cfg_test_spans_are_exempt() {
+        let src = "fn f() {}\n#[cfg(test)]\nmod tests {\n use std::collections::HashMap;\n #[test]\n fn t() { x.unwrap(); }\n}\n";
+        assert!(rules_at("net/proto.rs", src).is_empty());
+        assert!(rules_at("coordinator/mod.rs", src).is_empty());
+    }
+}

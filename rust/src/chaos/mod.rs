@@ -40,7 +40,6 @@
 
 use std::collections::BTreeMap;
 use std::collections::BTreeSet;
-use std::collections::HashMap;
 
 use crate::sim::{Participant, RoundPlan, RoundSpec};
 use crate::util::rng::Rng;
@@ -395,9 +394,9 @@ impl Trace {
 #[derive(Clone, Debug, Default)]
 pub struct LeaseBook {
     /// client → sampled slot (the deterministic fold position).
-    slot_of: HashMap<usize, usize>,
+    slot_of: BTreeMap<usize, usize>,
     /// client → owning worker index. Migration rewrites this.
-    owner: HashMap<usize, usize>,
+    owner: BTreeMap<usize, usize>,
     pending: BTreeSet<usize>,
     arrived: BTreeSet<usize>,
     cut: BTreeSet<usize>,

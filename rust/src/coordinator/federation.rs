@@ -126,6 +126,7 @@ impl Federation {
         Federation::with_model(cfg, model)
     }
 
+    #[allow(clippy::disallowed_methods)] // wall-clock start is reporting-only
     pub fn with_model(cfg: ExperimentConfig, model: Arc<ModelRuntime>) -> Result<Federation> {
         cfg.validate()?;
         // The dispatch policy is per-model process state (the gate lives on
@@ -176,6 +177,7 @@ impl Federation {
             seq_step: 0,
             next_round: 0,
             ckpt_dir: None,
+            // lint:allow(nondet-time): wall_secs reporting only; parity ignores it
             started: Instant::now(),
             elapsed_offset: 0.0,
             scratch_mean: vec![0.0; n],
@@ -229,7 +231,9 @@ impl Federation {
     /// (`net::server` cuts stragglers and dead workers through this same
     /// dropped-client path), so a live run with realized cuts is
     /// bit-reproducible here from its cut schedule.
+    #[allow(clippy::disallowed_methods)] // round timing is reporting-only
     pub fn run_round_cut(&mut self, cut: &[usize]) -> Result<RoundRecord> {
+        // lint:allow(nondet-time): t0 only feeds the wall_secs report column
         let t0 = Instant::now();
         let d = self.plan_round();
         let round = d.round;
@@ -511,6 +515,7 @@ impl Federation {
     /// client is captured — multi-island clients have one per island, and
     /// all of them must survive a resume for the fleet to stay
     /// sample-exact.
+    #[allow(clippy::disallowed_methods)] // checkpoint timestamp is metadata
     pub fn checkpoint(&self) -> Checkpoint {
         let clients = self.nodes.iter().map(|n| Some(n.state())).collect();
         let (t, m, v) = self.outer.state();
@@ -522,6 +527,7 @@ impl Federation {
             outer_m: m.to_vec(),
             outer_v: v.to_vec(),
             clients,
+            // lint:allow(nondet-time): checkpoint timestamp is metadata; resume never reads it
             timestamp: std::time::SystemTime::now()
                 .duration_since(std::time::UNIX_EPOCH)
                 .map(|d| d.as_secs())

@@ -2,7 +2,7 @@
 //! federated-vs-centralized runner pair, CSV emission, scale flags, and the
 //! qualitative-shape assertion helpers.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use anyhow::Result;
@@ -19,12 +19,12 @@ use crate::util::{results_dir, table::Table};
 /// process even when several experiment variants use it.
 pub struct ModelCache {
     rt: Runtime,
-    models: HashMap<String, Arc<ModelRuntime>>,
+    models: BTreeMap<String, Arc<ModelRuntime>>,
 }
 
 impl ModelCache {
     pub fn new() -> Result<ModelCache> {
-        Ok(ModelCache { rt: Runtime::cpu()?, models: HashMap::new() })
+        Ok(ModelCache { rt: Runtime::cpu()?, models: BTreeMap::new() })
     }
 
     pub fn get(&mut self, name: &str) -> Result<Arc<ModelRuntime>> {

@@ -16,7 +16,7 @@
 //!
 //! Requires compiled artifacts (`make artifacts`).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use anyhow::Result;
@@ -131,7 +131,7 @@ pub fn distributed(args: &Args) -> Result<()> {
         FleetOpts {
             workers: fleet,
             compress: true,
-            die_at_round: HashMap::from([(0usize, crash_round)]),
+            die_at_round: BTreeMap::from([(0usize, crash_round)]),
             ..FleetOpts::default()
         },
     )?;

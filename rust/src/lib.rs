@@ -56,6 +56,7 @@
 //! assert!(report.comm_fraction() < 0.05, "WAN hidden behind τ=500 local steps");
 //! ```
 
+pub mod analysis;
 pub mod benchkit;
 pub mod chaos;
 pub mod ckpt;

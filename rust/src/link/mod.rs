@@ -216,7 +216,9 @@ pub fn decode_coded(frame: &[u8]) -> Result<(MsgKind, u8, Vec<u8>)> {
         bail!("frame carries unknown flag bits {flags:#x} — corrupted or newer peer");
     }
     let codec_id = ((flags & CODEC_FLAG_MASK) >> CODEC_SHIFT) as u8;
+    // lint:allow(wire-panic): try_into on a fixed 8-byte slice of a length-checked header is infallible
     let raw_len = u64::from_le_bytes(frame[12..20].try_into().unwrap()) as usize;
+    // lint:allow(wire-panic): try_into on a fixed 8-byte slice of a length-checked header is infallible
     let checksum = u64::from_le_bytes(frame[20..28].try_into().unwrap());
     let body = &frame[28..];
     let raw: Vec<u8> = if flags & FLAG_DEFLATE != 0 {

@@ -26,6 +26,10 @@
 //!              run one LLM Node worker against a remote Aggregator
 //! photon eval --config m350a               downstream ICL suite on a fresh init
 //! photon info [--config NAME]              artifact inventory
+//! photon lint [--src DIR] [--explain RULE]
+//!              determinism & concurrency static analysis over rust/src
+//!              (nondet-map, nondet-time, nondet-rng, wire-panic,
+//!              wire-alloc, lock-order, allow-policy — see docs/ANALYSIS.md)
 //! ```
 
 use anyhow::{bail, Result};
@@ -54,6 +58,8 @@ const SPEC: Spec = Spec {
         "codec",
         // resilience plane (exp chaos)
         "rates",
+        // static-analysis plane (lint)
+        "src", "explain",
     ],
     flags: &[
         "fast", "paper-scale", "hetero", "mc4", "keep-opt", "resume",
@@ -65,7 +71,7 @@ const SPEC: Spec = Spec {
 };
 
 fn usage() -> &'static str {
-    "usage: photon <list|exp|train|serve|worker|eval|info> [args]\n  try: photon list"
+    "usage: photon <list|exp|train|serve|worker|eval|info|lint> [args]\n  try: photon list"
 }
 
 fn main() {
@@ -93,6 +99,7 @@ fn run(raw: Vec<String>) -> Result<()> {
         "worker" => cmd_worker(&args),
         "eval" => cmd_eval(&args),
         "info" => cmd_info(&args),
+        "lint" => cmd_lint(&args),
         "help" | "--help" => {
             println!("{}", usage());
             Ok(())
@@ -313,6 +320,61 @@ fn cmd_eval(args: &Args) -> Result<()> {
     for f in &fams {
         let acc = photon::evalharness::task_accuracy(&m, &params, &corpus, f, n_items, 7)?;
         println!("  {:<24} {:.3}  (chance {:.3})", f.name, acc, 1.0 / f.n_options as f64);
+    }
+    Ok(())
+}
+
+/// `photon lint`: the determinism & concurrency static-analysis plane.
+/// Walks the source tree, runs every rule (see docs/ANALYSIS.md), prints
+/// `file:line [rule] message` per violation plus the lock-acquisition
+/// graph summary, and exits non-zero if anything survives suppression.
+#[allow(clippy::disallowed_methods)] // wall-clock timing is reporting-only here
+fn cmd_lint(args: &Args) -> Result<()> {
+    use photon::analysis;
+    if let Some(rule) = args.get("explain") {
+        return match analysis::explain::explain(rule) {
+            Some(text) => {
+                println!("{text}");
+                Ok(())
+            }
+            None => {
+                let known: Vec<&str> = analysis::RULES.iter().map(|(r, _)| *r).collect();
+                bail!("unknown rule {rule:?}; known rules: {}", known.join(", "))
+            }
+        };
+    }
+    let root = match args.get("src") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => ["rust/src", "src"]
+            .iter()
+            .map(std::path::PathBuf::from)
+            .find(|p| p.join("lib.rs").is_file())
+            .ok_or_else(|| {
+                anyhow::anyhow!("cannot find a source root (rust/src or src); pass --src DIR")
+            })?,
+    };
+    let t0 = std::time::Instant::now();
+    let report = analysis::lint_tree(&root)?;
+    for d in &report.diagnostics {
+        println!("{d}");
+    }
+    println!("{}", report.locks.summary());
+    for e in &report.locks.edges {
+        println!("  {} → {} (first at {}:{})", e.from, e.to, e.file, e.line);
+    }
+    println!(
+        "[lint] {} file(s) under {}, {} violation(s), {:.2}s",
+        report.files,
+        root.display(),
+        report.diagnostics.len(),
+        t0.elapsed().as_secs_f64(),
+    );
+    if !report.diagnostics.is_empty() {
+        bail!(
+            "{} lint violation(s) — `photon lint --explain <rule>` documents the \
+             contract behind each rule",
+            report.diagnostics.len(),
+        );
     }
     Ok(())
 }

@@ -19,7 +19,11 @@
 //! (The stuck threads are left detached; the server's shutdown path
 //! unblocks their sockets soon after, and test processes exit anyway.)
 
-use std::collections::HashMap;
+// Wall-clock reads here drive process liveness and kill schedules —
+// allowlisted; see docs/ANALYSIS.md (nondet-time).
+#![allow(clippy::disallowed_methods)]
+
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -47,7 +51,7 @@ pub struct FleetOpts {
     /// Fault hooks: worker index → round at which it "crashes"
     /// (disconnects mid-round without replying). The chaos schedule is
     /// the richer generalization; this stays for targeted drills.
-    pub die_at_round: HashMap<usize, u64>,
+    pub die_at_round: BTreeMap<usize, u64>,
     /// Seeded per-(worker, round) fault plan: crash (with rejoin), hang,
     /// slow-down, link flake. Hang/flake cells require `deadline_secs`.
     pub chaos: Option<chaos::Schedule>,
@@ -69,7 +73,7 @@ impl Default for FleetOpts {
             workers: 1,
             deadline_secs: None,
             compress: true,
-            die_at_round: HashMap::new(),
+            die_at_round: BTreeMap::new(),
             chaos: None,
             migrate: false,
             ckpt_dir: None,

@@ -481,6 +481,7 @@ pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
         (crate::link::HEADER_BYTES..=MAX_FRAME_BYTES).contains(&len),
         "implausible frame length {len}"
     );
+    // lint:allow(wire-alloc): len is ensure-bounded to HEADER_BYTES..=MAX_FRAME_BYTES above
     let mut frame = vec![0u8; len];
     r.read_exact(&mut frame).context("reading frame body")?;
     Ok(frame)

@@ -47,7 +47,11 @@
 //! resumes sample-exact (`Federation::try_resume_from`) — workers simply
 //! reconnect and keep serving.
 
-use std::collections::{BTreeMap, HashMap};
+// Wall-clock reads here are transport concerns (deadlines, liveness,
+// session ids) — allowlisted; see docs/ANALYSIS.md (nondet-time).
+#![allow(clippy::disallowed_methods)]
+
+use std::collections::BTreeMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
@@ -403,7 +407,7 @@ impl Server {
         widx: usize,
         clients: &[usize],
         d: &RoundDispatch,
-        steps_of: &HashMap<usize, u64>,
+        steps_of: &BTreeMap<usize, u64>,
     ) {
         if clients.is_empty() {
             return;
@@ -435,7 +439,7 @@ impl Server {
         workers: &mut [WorkerConn],
         book: &mut LeaseBook,
         d: &RoundDispatch,
-        steps_of: &HashMap<usize, u64>,
+        steps_of: &BTreeMap<usize, u64>,
         from: usize,
         targets: &[usize],
         migs: &mut Vec<Migration>,
@@ -468,7 +472,7 @@ impl Server {
         // workers, in slot order. Which worker runs a client never affects
         // the math — all state travels with the assignment.
         let mut book = LeaseBook::new(&d.runnable);
-        let steps_of: HashMap<usize, u64> = d.runnable.iter().copied().collect();
+        let steps_of: BTreeMap<usize, u64> = d.runnable.iter().copied().collect();
         let mut per_worker: Vec<Vec<usize>> = vec![Vec::new(); workers.len()];
         for (slot, &(client, _)) in d.runnable.iter().enumerate() {
             let widx = live[slot % live.len()];
@@ -490,7 +494,7 @@ impl Server {
         // (valid or not) — a worker with leases and zero pushes at the
         // halfway mark is treated as hung and migrated away from.
         // (Keyed, not indexed: workers admitted mid-round grow the list.)
-        let mut pushed_by: HashMap<usize, u64> = HashMap::new();
+        let mut pushed_by: BTreeMap<usize, u64> = BTreeMap::new();
 
         for &widx in &live {
             let clients = std::mem::take(&mut per_worker[widx]);
@@ -618,7 +622,9 @@ impl Server {
                         }
                         update.wire_bytes = reconstructed.unwrap_or(0);
                         if book.accept(client, widx) {
-                            let slot = book.slot(client).expect("accepted ⇒ slotted");
+                            let Some(slot) = book.slot(client) else {
+                                bail!("lease ledger accepted unsampled client {client}");
+                            };
                             arrived.insert(slot, (update, p.state));
                         }
                     }

@@ -18,7 +18,7 @@
 //! (crash / hang / slow / link flake) is acted out faithfully — see the
 //! `chaos` module docs for the semantics each fault exercises.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::net::TcpStream;
 use std::sync::Arc;
 
@@ -134,7 +134,7 @@ pub fn run_worker(addr: &str, opts: WorkerOpts) -> Result<WorkerReport> {
     let schedule = spec.schedule;
     let lr_at = move |t: u64| schedule.lr(t);
 
-    let mut nodes: HashMap<u64, ClientNode> = HashMap::new();
+    let mut nodes: BTreeMap<u64, ClientNode> = BTreeMap::new();
     let mut report =
         WorkerReport { worker_slot: ack.worker_slot, ..WorkerReport::default() };
     if opts.verbose {
@@ -282,7 +282,7 @@ pub fn run_worker(addr: &str, opts: WorkerOpts) -> Result<WorkerReport> {
 /// authoritative cursors) but the *structure* — island and bucket arity —
 /// must match the Aggregator's, which `bind_client_streams` guarantees.
 fn node_for<'a>(
-    nodes: &'a mut HashMap<u64, ClientNode>,
+    nodes: &'a mut BTreeMap<u64, ClientNode>,
     data: &DataSource,
     spec: &TaskSpec,
     client: u64,
@@ -299,5 +299,7 @@ fn node_for<'a>(
             bind_client_streams(data, client as usize, n_islands.max(1), seq_width, spec.seed)?;
         nodes.insert(client, ClientNode::new(client as usize, streams));
     }
-    Ok(nodes.get_mut(&client).unwrap())
+    nodes
+        .get_mut(&client)
+        .ok_or_else(|| anyhow::anyhow!("client node {client} vanished after insert"))
 }

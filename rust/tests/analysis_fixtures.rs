@@ -1,0 +1,236 @@
+//! Fixture-driven self-tests for the `photon lint` analysis plane.
+//!
+//! Every rule has a positive corpus (each `//~ rule` marker line must be
+//! flagged, with exactly as many diagnostics as markers) and a negative
+//! corpus (idiomatic code, allowlisted paths, reasoned suppressions, and
+//! `#[cfg(test)]` bodies must stay silent). Fixtures live under
+//! `tests/fixtures/analysis/` and declare the virtual path they lint as
+//! on their first line: `// lint-fixture: <path>`.
+//!
+//! Two meta-tests close the loop: the shipped tree itself must lint
+//! clean (so CI's `photon lint` gate cannot rot), and a seeded
+//! violation tree must fail (so the gate provably still bites).
+
+use std::fs;
+use std::path::PathBuf;
+
+use photon::analysis::{self, locks};
+
+/// The crate root (the directory holding `src/lib.rs`), robust to being
+/// run from either the repo root or the `rust/` subdirectory.
+fn crate_root() -> PathBuf {
+    if let Some(dir) = option_env!("CARGO_MANIFEST_DIR") {
+        let p = PathBuf::from(dir);
+        if p.join("src/lib.rs").is_file() {
+            return p;
+        }
+    }
+    for cand in [".", "rust", ".."] {
+        let p = PathBuf::from(cand);
+        if p.join("src/lib.rs").is_file() {
+            return p;
+        }
+    }
+    panic!("cannot locate the crate root (no src/lib.rs found)");
+}
+
+fn fixtures_dir() -> PathBuf {
+    crate_root().join("tests/fixtures/analysis")
+}
+
+/// Load a fixture and its declared virtual path.
+fn fixture(name: &str) -> (String, String) {
+    let path = fixtures_dir().join(name);
+    let text = fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read fixture {}: {e}", path.display()));
+    let first = text.lines().next().unwrap_or_default();
+    let vpath = first
+        .strip_prefix("// lint-fixture:")
+        .unwrap_or_else(|| panic!("{name}: first line must be `// lint-fixture: <path>`"))
+        .trim()
+        .to_string();
+    (vpath, text)
+}
+
+/// Parse `//~ rule [rule ...]` markers: one expected diagnostic per rule
+/// token, anchored at the marker's line.
+fn expected_markers(text: &str) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if let Some(pos) = line.find("//~") {
+            for rule in line[pos + 3..].split_whitespace() {
+                out.push((i + 1, rule.to_string()));
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Lint one fixture and require its diagnostics to match its markers
+/// exactly — no misses, no extras.
+fn check(name: &str) {
+    let (vpath, text) = fixture(name);
+    let mut got: Vec<(usize, String)> = analysis::lint_source(&vpath, &text)
+        .into_iter()
+        .map(|d| (d.line, d.rule.to_string()))
+        .collect();
+    got.sort();
+    let want = expected_markers(&text);
+    assert_eq!(
+        got, want,
+        "{name} (as {vpath}): diagnostics did not match //~ markers"
+    );
+}
+
+#[test]
+fn nondet_map_fixtures() {
+    check("nondet_map_bad.rs");
+    check("nondet_map_ok.rs");
+    check("nondet_map_scope.rs");
+}
+
+#[test]
+fn nondet_time_fixtures() {
+    check("nondet_time_bad.rs");
+    check("nondet_time_ok.rs");
+    check("nondet_time_allow.rs");
+}
+
+#[test]
+fn nondet_rng_fixtures() {
+    check("nondet_rng_bad.rs");
+    check("nondet_rng_ok.rs");
+}
+
+#[test]
+fn wire_panic_fixtures() {
+    check("wire_panic_bad.rs");
+    check("wire_panic_ok.rs");
+}
+
+#[test]
+fn wire_alloc_fixtures() {
+    check("wire_alloc_bad.rs");
+    check("wire_alloc_ok.rs");
+}
+
+#[test]
+fn allow_policy_fixtures() {
+    check("allow_policy_bad.rs");
+}
+
+#[test]
+fn lock_fixtures_trip_no_per_file_rules() {
+    // The lock corpus is analyzed structurally below; the per-file rules
+    // must stay silent on it.
+    check("locks_cycle.rs");
+    check("locks_ok.rs");
+}
+
+/// Golden rendering: exact `file:line [rule] message` output, pinned so
+/// diagnostics stay stable for humans and for CI log grepping.
+#[test]
+fn golden_nondet_map_diagnostics() {
+    let (vpath, text) = fixture("nondet_map_bad.rs");
+    let rendered: Vec<String> = analysis::lint_source(&vpath, &text)
+        .iter()
+        .map(|d| d.to_string())
+        .collect();
+    let map_msg = "std::collections::HashMap in a determinism-scoped module: \
+                   hash iteration order varies per process, breaking bit-exact \
+                   parity; use BTreeMap or sort before folding";
+    let set_msg = "std::collections::HashSet in a determinism-scoped module: \
+                   hash iteration order varies per process, breaking bit-exact \
+                   parity; use BTreeSet or sort before folding";
+    assert_eq!(
+        rendered,
+        vec![
+            format!("metrics/mod.rs:3 [nondet-map] {map_msg}"),
+            format!("metrics/mod.rs:4 [nondet-map] {set_msg}"),
+            format!("metrics/mod.rs:7 [nondet-map] {map_msg}"),
+            format!("metrics/mod.rs:12 [nondet-map] {set_msg}"),
+        ]
+    );
+}
+
+/// Every registered rule has an `--explain` writeup.
+#[test]
+fn every_rule_is_explained() {
+    for &(rule, _) in analysis::RULES {
+        let text = analysis::explain::explain(rule)
+            .unwrap_or_else(|| panic!("rule {rule} has no --explain writeup"));
+        assert!(text.len() > 200, "writeup for {rule} is too thin");
+    }
+}
+
+fn lock_fixture(name: &str) -> locks::LockReport {
+    let (vpath, text) = fixture(name);
+    locks::analyze(&[(vpath, text)])
+}
+
+#[test]
+fn lock_cycle_detected() {
+    let rep = lock_fixture("locks_cycle.rs");
+    let cycle = rep
+        .cycle
+        .as_ref()
+        .expect("opposite-order acquisitions must produce a cycle witness");
+    assert_eq!(cycle.first(), cycle.last(), "witness must close on itself");
+    assert!(cycle.iter().any(|l| l == "queue"));
+    assert!(cycle.iter().any(|l| l == "slots"));
+    let diags = rep.diagnostics();
+    assert_eq!(diags.len(), 1, "one diagnostic per cycle witness");
+    assert_eq!(diags[0].rule, "lock-order");
+}
+
+#[test]
+fn lock_consistent_order_is_acyclic() {
+    let rep = lock_fixture("locks_ok.rs");
+    assert!(rep.cycle.is_none(), "consistent order must not cycle");
+    assert_eq!(rep.locks, vec!["queue".to_string(), "slots".to_string()]);
+    assert_eq!(rep.edges.len(), 1, "temporaries must not contribute edges");
+    assert_eq!(rep.edges[0].from, "queue");
+    assert_eq!(rep.edges[0].to, "slots");
+    assert!(rep.diagnostics().is_empty());
+}
+
+/// Meta-test: the shipped tree lints clean, and its real lock graph is
+/// discovered and acyclic. This is the same invocation CI runs.
+#[test]
+fn shipped_tree_is_clean() {
+    let root = crate_root().join("src");
+    let report = analysis::lint_tree(&root).expect("lint_tree over src/");
+    let rendered: Vec<String> =
+        report.diagnostics.iter().map(|d| d.to_string()).collect();
+    assert!(
+        rendered.is_empty(),
+        "shipped tree must lint clean, got {} violation(s):\n{}",
+        rendered.len(),
+        rendered.join("\n")
+    );
+    assert!(report.locks.cycle.is_none(), "{}", report.locks.summary());
+    assert!(
+        report.locks.locks.len() >= 2,
+        "the real lock classes should be discovered, got {:?}",
+        report.locks.locks
+    );
+    assert!(
+        report.files > 30,
+        "suspiciously few files scanned under {}: {}",
+        root.display(),
+        report.files
+    );
+}
+
+/// Meta-test: the seeded violation tree (the CI negative gate) fails.
+#[test]
+fn seeded_violation_tree_fails() {
+    let root = fixtures_dir().join("seeded");
+    let report = analysis::lint_tree(&root).expect("lint_tree over seeded/");
+    assert!(
+        !report.diagnostics.is_empty(),
+        "the seeded violation must be caught"
+    );
+    assert!(report.diagnostics.iter().any(|d| d.rule == "nondet-map"));
+}

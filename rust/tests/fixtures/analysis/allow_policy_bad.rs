@@ -1,0 +1,11 @@
+// lint-fixture: metrics/mod.rs
+// Positive corpus for allow-policy: every malformed suppression is itself
+// a violation, and a reason-less allow does not suppress.
+
+fn f() {
+    let m = HashMap::new(); // lint:allow(nondet-map) //~ allow-policy nondet-map
+}
+
+// lint:allow(not-a-rule): misspelled rule name //~ allow-policy
+// lint:allow(lock-order): structural findings have no single line //~ allow-policy
+// lint:allow(allow-policy): cannot suppress the suppressor //~ allow-policy

@@ -1,0 +1,15 @@
+// lint-fixture: net/server.rs
+// Lock-order positive corpus (fed to locks::analyze): submit and drain
+// take the same two locks in opposite orders — the graph must cycle.
+
+fn submit(&self) {
+    let q = self.queue.lock();
+    let s = self.slots.lock();
+    q.push(s.take());
+}
+
+fn drain(&self) {
+    let s = self.slots.lock();
+    let q = self.queue.lock();
+    s.push(q.take());
+}

@@ -1,0 +1,14 @@
+// lint-fixture: net/server.rs
+// Lock-order negative corpus: a consistent global order, plus
+// statement-scoped temporaries that never overlap.
+
+fn submit(&self) {
+    let q = self.queue.lock();
+    let s = self.slots.lock();
+    q.push(s.take());
+}
+
+fn tick(&self) {
+    *self.queue.lock() += 1;
+    *self.slots.lock() += 1;
+}

@@ -1,0 +1,14 @@
+// lint-fixture: metrics/mod.rs
+// Positive corpus for nondet-map: each marked line must be flagged.
+use std::collections::HashMap; //~ nondet-map
+use std::collections::HashSet; //~ nondet-map
+
+fn tally(xs: &[(u32, f32)]) -> f32 {
+    let by_key: HashMap<u32, f32> = xs.iter().copied().collect(); //~ nondet-map
+    by_key.values().sum()
+}
+
+fn dedup(xs: &[u32]) -> usize {
+    let seen: HashSet<u32> = xs.iter().copied().collect(); //~ nondet-map
+    seen.len()
+}

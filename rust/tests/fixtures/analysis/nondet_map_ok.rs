@@ -1,0 +1,14 @@
+// lint-fixture: metrics/mod.rs
+// Negative corpus for nondet-map: ordered containers pass, and a
+// reasoned lint:allow covers the one legitimate exemption shape.
+use std::collections::BTreeMap;
+
+fn tally(xs: &[(u32, f32)]) -> f32 {
+    let by_key: BTreeMap<u32, f32> = xs.iter().copied().collect();
+    by_key.values().sum()
+}
+
+// lint:allow(nondet-map): point lookups only, never iterated
+fn lookup(m: &HashMap<u32, f32>, k: u32) -> Option<f32> {
+    m.get(&k).copied()
+}

@@ -1,0 +1,9 @@
+// lint-fixture: util/json.rs
+// Scope check: util/ is outside the determinism scope, so hash containers
+// are fine here (nothing in util/ feeds round math or the wire).
+use std::collections::HashMap;
+
+fn intern(m: &mut HashMap<String, u32>, s: &str) -> u32 {
+    let next = m.len() as u32;
+    *m.entry(s.to_string()).or_insert(next)
+}

@@ -1,0 +1,10 @@
+// lint-fixture: data/corpus.rs
+// Positive corpus for nondet-rng: ambient entropy sources. Lines with two
+// foreign identifiers produce two diagnostics.
+
+fn sample() -> u64 {
+    let mut r = rand::thread_rng(); //~ nondet-rng nondet-rng
+    let s = StdRng::from_entropy(); //~ nondet-rng nondet-rng
+    let state = RandomState::new(); //~ nondet-rng
+    r.gen::<u64>() ^ s.gen::<u64>()
+}

@@ -1,0 +1,12 @@
+// lint-fixture: data/corpus.rs
+// Negative corpus for nondet-rng: seeded util::rng streams are the
+// sanctioned source of randomness.
+use crate::util::rng::Rng;
+
+fn sample(rng: &mut Rng) -> u64 {
+    rng.next_u64()
+}
+
+fn client_stream(root: &Rng, client: u64) -> Rng {
+    root.derive("corpus", client)
+}

@@ -1,0 +1,8 @@
+// lint-fixture: coordinator/federation.rs
+// A reasoned allow for a reporting-only read in a scoped file passes.
+
+fn wall_secs(started: Instant) -> f64 {
+    // lint:allow(nondet-time): wall_secs is reporting-only; parity ignores it
+    let now = Instant::now();
+    (now - started).as_secs_f64()
+}

@@ -1,0 +1,8 @@
+// lint-fixture: coordinator/federation.rs
+// Positive corpus for nondet-time: clock reads in round math.
+
+fn round_timing() -> (Instant, u64) {
+    let t0 = Instant::now(); //~ nondet-time
+    let stamp = std::time::SystemTime::now(); //~ nondet-time
+    (t0, stamp.elapsed().as_secs())
+}

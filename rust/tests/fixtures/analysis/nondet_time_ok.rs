@@ -1,0 +1,7 @@
+// lint-fixture: net/harness.rs
+// Negative corpus for nondet-time: the harness is on the wall-clock
+// allowlist (process liveness, kill schedules, deadlines).
+
+fn deadline(secs: f64) -> Instant {
+    Instant::now() + Duration::from_secs_f64(secs)
+}

@@ -1,0 +1,7 @@
+// A seeded violation tree for the CI negative gate: running
+// `photon lint --src tests/fixtures/analysis/seeded` must exit non-zero.
+use std::collections::HashMap;
+
+pub fn tally(xs: &HashMap<u32, f32>) -> f32 {
+    xs.values().sum()
+}

@@ -1,0 +1,23 @@
+// lint-fixture: net/proto.rs
+// Positive corpus for wire-alloc: allocations sized by decoded integers.
+
+fn dec_tasks(d: &mut Dec) -> Result<Vec<Task>> {
+    let n = d.u64()? as usize;
+    let mut tasks = Vec::with_capacity(n); //~ wire-alloc
+    for _ in 0..n {
+        tasks.push(dec_task(d)?);
+    }
+    Ok(tasks)
+}
+
+fn read_body(head: &[u8; 8]) -> Result<Vec<u8>> {
+    let len = u32::from_le_bytes([head[0], head[1], head[2], head[3]]) as usize;
+    let buf = vec![0u8; len]; //~ wire-alloc
+    Ok(buf)
+}
+
+fn grow(d: &mut Dec, out: &mut Vec<u8>) -> Result<()> {
+    let extra = d.u32()? as usize;
+    out.reserve(extra); //~ wire-alloc
+    Ok(())
+}

@@ -1,0 +1,27 @@
+// lint-fixture: net/proto.rs
+// Negative corpus for wire-alloc: capacity_hint, a cited hard bound, and
+// sizing from bytes that actually arrived.
+
+fn dec_tasks(d: &mut Dec) -> Result<Vec<Task>> {
+    let n = d.u64()? as usize;
+    let mut tasks = Vec::with_capacity(d.capacity_hint(n, 88));
+    for _ in 0..n {
+        tasks.push(dec_task(d)?);
+    }
+    Ok(tasks)
+}
+
+fn read_frame(head: [u8; 4], r: &mut impl Read) -> Result<Vec<u8>> {
+    let len = u32::from_le_bytes(head) as usize;
+    ensure!(len <= MAX_FRAME_BYTES, "implausible frame length {len}");
+    // lint:allow(wire-alloc): len is ensure-bounded to MAX_FRAME_BYTES above
+    let mut frame = vec![0u8; len];
+    r.read_exact(&mut frame)?;
+    Ok(frame)
+}
+
+fn copy_received(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(payload.len());
+    out.extend_from_slice(payload);
+    out
+}

@@ -1,0 +1,16 @@
+// lint-fixture: net/proto.rs
+// Positive corpus for wire-panic: panics and raw indexing on decoded data.
+
+fn handle(frame: &[u8]) -> Result<()> {
+    let msg = Msg::decode(frame)?;
+    let head = msg[0]; //~ wire-panic
+    let tag = msg.kind.unwrap(); //~ wire-panic
+    let body = msg.body.expect("body"); //~ wire-panic
+    if head == 0 {
+        panic!("zero head"); //~ wire-panic
+    }
+    match tag {
+        0 => todo!(), //~ wire-panic
+        _ => unreachable!(), //~ wire-panic
+    }
+}

@@ -1,0 +1,20 @@
+// lint-fixture: net/proto.rs
+// Negative corpus for wire-panic: robust handling, a reasoned allow for a
+// provably infallible conversion, and #[cfg(test)] exemption.
+
+fn handle(frame: &[u8]) -> Result<()> {
+    let msg = Msg::decode(frame)?;
+    let head = msg.first().ok_or_else(|| anyhow!("empty payload"))?;
+    // lint:allow(wire-panic): try_into on a fixed 2-byte slice of a length-checked header is infallible
+    let tag = u16::from_le_bytes(head[..2].try_into().unwrap());
+    bail!("kind {tag} not recognized")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_may_unwrap_and_index() {
+        let v = decode_fixture().unwrap();
+        assert_eq!(v[0], 1);
+    }
+}

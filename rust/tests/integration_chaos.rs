@@ -10,6 +10,10 @@
 //! `cargo test -q -- --ignored` (the CI `soak` job) and see
 //! `docs/TESTING.md` for how to read a failure.
 
+// Test-only wall-clock use (soak timing); the analysis pass exempts
+// #[cfg(test)] code and clippy gets the file-level allow.
+#![allow(clippy::disallowed_methods)]
+
 use std::sync::Arc;
 
 use photon::chaos::{ChaosConfig, Schedule};

@@ -7,7 +7,7 @@
 //! deadline) through the dropped-client path, and across a server restart
 //! resumed from the latest checkpoint.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::net::TcpStream;
 use std::sync::Arc;
 
@@ -182,7 +182,7 @@ fn worker_killed_mid_round_is_cut_and_the_round_still_commits() {
         FleetOpts {
             workers: 4,
             compress: true,
-            die_at_round: HashMap::from([(0usize, 1u64)]),
+            die_at_round: BTreeMap::from([(0usize, 1u64)]),
             ..FleetOpts::default()
         },
     )
