@@ -1,11 +1,18 @@
 //! bench_aggregate: the Photon Aggregator's vector-math hot path — client
 //! mean, pseudo-gradient, and each outer optimizer, across payload sizes
-//! matching the artifact ladder.
+//! matching the artifact ladder. Emits `BENCH_aggregate.json` (compare
+//! against the committed baseline with `tools/bench_compare.py`).
+//!
+//! The `streaming_fold/1Mx1k` pair is the perf-plane acceptance bench:
+//! the chunked fold vs the retained scalar reference at 1k clients × 1M
+//! params (the rows alias 8 distinct buffers, so the working set stays
+//! ~32 MB while the fold still reads 10⁹ row elements per iteration).
 
-use photon::benchkit::{bench, bench_header};
+use photon::benchkit::{bench, bench_header, Recorder};
 use photon::metrics::{mean_pairwise_cosine, mean_pairwise_cosine_from_gram};
 use photon::model::vecmath::{
-    mean_into, streaming_aggregate, sub_into, weighted_mean_into, AggScratch,
+    mean_into, reference, streaming_aggregate, streaming_fold, sub_into, weighted_mean_into,
+    AggScratch,
 };
 use photon::optim::outer::{OuterHyper, OuterOpt, OuterOptKind};
 use photon::testkit::rand_vec;
@@ -13,6 +20,7 @@ use photon::util::rng::Rng;
 
 fn main() {
     let quick = bench_header("bench_aggregate: outer-optimizer & aggregation throughput");
+    let mut rec = Recorder::new("aggregate");
     let sizes: &[usize] = if quick {
         &[32_928, 713_952]
     } else {
@@ -31,15 +39,15 @@ fn main() {
         let r = bench(&format!("mean_into/{n}x{k}"), 0.5, || {
             mean_into(&rows, &mut mean);
         });
-        r.print_with_throughput("param", (n * k) as f64);
+        rec.add(&r, "param", (n * k) as f64);
         let r = bench(&format!("weighted_mean_into/{n}x{k}"), 0.5, || {
             weighted_mean_into(&rows, &weights, &mut mean);
         });
-        r.print_with_throughput("param", (n * k) as f64);
+        rec.add(&r, "param", (n * k) as f64);
         let r = bench(&format!("pseudo_grad(sub_into)/{n}"), 0.3, || {
             sub_into(&global, &mean, &mut pg);
         });
-        r.print_with_throughput("param", n as f64);
+        rec.add(&r, "param", n as f64);
 
         // The round engine's aggregation paths, old vs new: the streaming
         // pass fuses mean + pg + delta norms + K×K cosine Gram with no
@@ -51,7 +59,7 @@ fn main() {
                 streaming_aggregate(&rows, &weights, &global, &mut mean, &mut pg, &mut scratch);
             std::hint::black_box(mean_pairwise_cosine_from_gram(stats.k, &stats.gram));
         });
-        r.print_with_throughput("param", (n * k) as f64);
+        rec.add(&r, "param", (n * k) as f64);
         let r = bench(&format!("materialized_aggregate/{n}x{k}"), 0.5, || {
             weighted_mean_into(&rows, &weights, &mut mean);
             sub_into(&global, &mean, &mut pg);
@@ -65,7 +73,7 @@ fn main() {
                 .collect();
             std::hint::black_box(mean_pairwise_cosine(&deltas));
         });
-        r.print_with_throughput("param", (n * k) as f64);
+        rec.add(&r, "param", (n * k) as f64);
 
         for (name, kind) in [
             ("fedavg", OuterOptKind::FedAvg),
@@ -77,8 +85,46 @@ fn main() {
             let r = bench(&format!("outer/{name}/{n}"), 0.3, || {
                 opt.step(&mut global, &pg);
             });
-            r.print_with_throughput("param", n as f64);
+            rec.add(&r, "param", n as f64);
         }
         println!();
     }
+
+    // Acceptance pair: vectorized fold vs scalar reference at 1k clients ×
+    // 1M params (run in quick mode too — this IS the committed trajectory).
+    {
+        let n = 1_000_000usize;
+        let big_k = 1_000usize;
+        let distinct = 8usize;
+        let mut rng = Rng::new(7);
+        let bufs: Vec<Vec<f32>> = (0..distinct).map(|_| rand_vec(&mut rng, n, 0.1)).collect();
+        let rows: Vec<&[f32]> = (0..big_k).map(|i| bufs[i % distinct].as_slice()).collect();
+        let weights: Vec<f64> = (0..big_k).map(|i| 1.0 + (i % 5) as f64).collect();
+        let global = rand_vec(&mut rng, n, 0.1);
+        let mut mean = vec![0.0f32; n];
+        let mut pg = vec![0.0f32; n];
+        let mut scratch = AggScratch::new();
+
+        let r = bench("streaming_fold/1Mx1k", 1.0, || {
+            streaming_fold(&rows, &weights, &global, &mut mean, &mut pg, &mut scratch);
+            std::hint::black_box((&mean, &pg));
+        });
+        rec.add(&r, "param", (n * big_k) as f64);
+        let fold_params_per_sec = (n * big_k) as f64 / r.mean.as_secs_f64();
+
+        let r = bench("streaming_fold_scalar/1Mx1k", 1.0, || {
+            reference::weighted_mean_into(&rows, &weights, &mut mean);
+            reference::sub_into(&global, &mean, &mut pg);
+            std::hint::black_box((&mean, &pg));
+        });
+        rec.add(&r, "param", (n * big_k) as f64);
+        let scalar_params_per_sec = (n * big_k) as f64 / r.mean.as_secs_f64();
+
+        println!(
+            "streaming_fold speedup vs scalar reference: {:.2}x",
+            fold_params_per_sec / scalar_params_per_sec
+        );
+    }
+
+    rec.finish().expect("writing BENCH_aggregate.json");
 }

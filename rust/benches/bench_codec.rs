@@ -1,0 +1,39 @@
+//! bench_codec: lossy update-codec throughput — q8/q4 per-block
+//! stochastic-rounding encode/decode and top-k partial-select encode —
+//! on update sizes from the artifact ladder. Emits `BENCH_codec.json`
+//! (compare against the committed baseline with `tools/bench_compare.py`).
+
+use photon::benchkit::{bench, bench_header, Recorder};
+use photon::compress::UpdateCodec;
+use photon::testkit::rand_vec;
+use photon::util::rng::Rng;
+
+fn main() {
+    let quick = bench_header("bench_codec: lossy update-codec throughput");
+    let mut rec = Recorder::new("codec");
+    let sizes: &[usize] = if quick { &[213_568] } else { &[213_568, 1_640_576] };
+    for &n in sizes {
+        let mut rng = Rng::new(5);
+        let delta = rand_vec(&mut rng, n, 0.02);
+        for codec in [
+            UpdateCodec::Q8 { block: 256 },
+            UpdateCodec::Q4 { block: 256 },
+            UpdateCodec::TopK { keep_permille: 50 },
+        ] {
+            let mut residual = Vec::new();
+            let r = bench(&format!("encode/{}/{n}", codec.label()), 0.4, || {
+                let mut res = residual.clone(); // error feedback must not drift across iters
+                std::hint::black_box(codec.encode_delta(&delta, 11, &mut res).unwrap());
+            });
+            rec.add(&r, "param", n as f64);
+
+            let body = codec.encode_delta(&delta, 11, &mut residual).unwrap().unwrap();
+            let r = bench(&format!("decode/{}/{n}", codec.label()), 0.4, || {
+                std::hint::black_box(codec.decode_delta(&body, n).unwrap());
+            });
+            rec.add(&r, "param", n as f64);
+        }
+        println!();
+    }
+    rec.finish().expect("writing BENCH_codec.json");
+}

@@ -2,7 +2,7 @@
 //! client streams, and validation-set generation. The stream must outrun
 //! the train step by a wide margin (it shares the single core).
 
-use photon::benchkit::{bench, bench_header};
+use photon::benchkit::{bench, bench_header, Recorder};
 use photon::data::corpus::{CategorySampler, SyntheticCorpus};
 use photon::data::partition::Partition;
 use photon::data::stream::TokenStream;
@@ -10,6 +10,7 @@ use photon::util::rng::Rng;
 
 fn main() {
     let _quick = bench_header("bench_data: corpus & stream token throughput");
+    let mut rec = Recorder::new("data");
     for vocab in [256usize, 1024] {
         let corpus = SyntheticCorpus::pile(vocab);
         let sampler = CategorySampler::new(&corpus.categories[0]);
@@ -17,7 +18,7 @@ fn main() {
         let r = bench(&format!("category_sampler/v{vocab}/seq128"), 0.5, || {
             std::hint::black_box(sampler.sequence(128, &mut rng));
         });
-        r.print_with_throughput("tok", 128.0);
+        rec.add(&r, "tok", 128.0);
 
         let p = Partition::heterogeneous(&corpus, 8, 3);
         let mut stream =
@@ -25,7 +26,7 @@ fn main() {
         let r = bench(&format!("client_stream/v{vocab}/batch8x33"), 0.5, || {
             std::hint::black_box(stream.next_batch(8));
         });
-        r.print_with_throughput("tok", 8.0 * 33.0);
+        rec.add(&r, "tok", 8.0 * 33.0);
     }
 
     // Validation-set generation (done once per federation startup).
@@ -35,5 +36,7 @@ fn main() {
         let ds = photon::data::source::DataSource::new(corpus.clone(), p.clone(), 1);
         std::hint::black_box(ds.validation_batches(8, 4, 33).unwrap());
     });
-    r.print_with_throughput("tok", (8 * 4 * 33) as f64);
+    rec.add(&r, "tok", (8 * 4 * 33) as f64);
+
+    rec.finish().expect("writing BENCH_data.json");
 }

@@ -1,13 +1,16 @@
 //! bench_link: Photon-Link serialize/compress/decode throughput on
-//! model-payload sizes from the artifact ladder.
+//! model-payload sizes from the artifact ladder, including the zero-copy
+//! (codec `none`) frame round-trip. Emits `BENCH_link.json` (compare
+//! against the committed baseline with `tools/bench_compare.py`).
 
-use photon::benchkit::{bench, bench_header};
-use photon::link::{decode_model, encode_model, MsgKind};
+use photon::benchkit::{bench, bench_header, Recorder};
+use photon::link::{decode_bytes_ref, decode_model, encode_model, MsgKind};
 use photon::testkit::rand_vec;
 use photon::util::rng::Rng;
 
 fn main() {
     let quick = bench_header("bench_link: payload encode/decode throughput");
+    let mut rec = Recorder::new("link");
     let sizes: &[usize] = if quick { &[213_568] } else { &[32_928, 213_568, 4_526_016] };
     for &n in sizes {
         let mut rng = Rng::new(2);
@@ -18,11 +21,11 @@ fn main() {
         let r = bench(&format!("encode/raw/{n}"), 0.4, || {
             std::hint::black_box(encode_model(MsgKind::GlobalModel, &payload, false).unwrap());
         });
-        r.print_with_throughput("MB", mb);
+        rec.add(&r, "MB", mb);
         let r = bench(&format!("encode/deflate/{n}"), 0.8, || {
             std::hint::black_box(encode_model(MsgKind::GlobalModel, &payload, true).unwrap());
         });
-        r.print_with_throughput("MB", mb);
+        rec.add(&r, "MB", mb);
 
         let raw = encode_model(MsgKind::GlobalModel, &payload, false).unwrap();
         let comp = encode_model(MsgKind::GlobalModel, &payload, true).unwrap();
@@ -35,11 +38,25 @@ fn main() {
         let r = bench(&format!("decode/raw/{n}"), 0.4, || {
             std::hint::black_box(decode_model(&raw).unwrap());
         });
-        r.print_with_throughput("MB", mb);
+        rec.add(&r, "MB", mb);
         let r = bench(&format!("decode/deflate/{n}"), 0.4, || {
             std::hint::black_box(decode_model(&comp).unwrap());
         });
-        r.print_with_throughput("MB", mb);
+        rec.add(&r, "MB", mb);
+        // The zero-copy body path on its own: checksum + header hardening,
+        // body borrowed straight out of the frame (no payload copy).
+        let r = bench(&format!("decode_ref/raw/{n}"), 0.4, || {
+            std::hint::black_box(decode_bytes_ref(&raw).unwrap());
+        });
+        rec.add(&r, "MB", mb);
+        // Full frame round-trip with codec none — the fleet hot path for an
+        // uncompressed update: one exact-capacity alloc in, zero copies out.
+        let r = bench(&format!("frame_roundtrip/none/{n}"), 0.4, || {
+            let f = encode_model(MsgKind::GlobalModel, &payload, false).unwrap();
+            std::hint::black_box(decode_bytes_ref(&f).unwrap());
+        });
+        rec.add(&r, "MB", mb);
         println!();
     }
+    rec.finish().expect("writing BENCH_link.json");
 }

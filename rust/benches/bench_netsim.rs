@@ -2,11 +2,12 @@
 //! full `comm` sweep (it must be effectively free) plus a printed summary
 //! of the headline ratios at paper scale.
 
-use photon::benchkit::{bench, bench_header};
+use photon::benchkit::{bench, bench_header, Recorder};
 use photon::netsim::*;
 
 fn main() {
     let _quick = bench_header("bench_netsim: cost-model evaluation");
+    let mut rec = Recorder::new("netsim");
     let payloads: Vec<u64> =
         vec![223_000_000, 423_000_000, 1_300_000_000, 4_700_000_000, 25_800_000_000];
 
@@ -21,7 +22,7 @@ fn main() {
         }
         std::hint::black_box(acc);
     });
-    r.print();
+    rec.add_result(&r);
 
     println!("\nheadline ratios at paper scale (τ=500, 8 workers):");
     for (&p, name) in payloads.iter().zip(["75M", "125M", "350M", "1.3B", "7B"]) {
@@ -31,4 +32,6 @@ fn main() {
             100.0 * fed_comm_fraction(p, &CLOUD_WAN, 500, 1.0)
         );
     }
+
+    rec.finish().expect("writing BENCH_netsim.json");
 }

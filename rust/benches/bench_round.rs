@@ -5,13 +5,14 @@
 //! sequential path against the worker pool at K ≥ 8 — the speedup the
 //! ISSUE-1 acceptance criteria track.
 
-use photon::benchkit::{bench, bench_header};
+use photon::benchkit::{bench, bench_header, Recorder};
 use photon::config::ExperimentConfig;
 use photon::coordinator::Federation;
 use photon::runtime::Runtime;
 
 fn main() {
     let quick = bench_header("bench_round: full federated round (m75a)");
+    let mut rec = Recorder::new("round");
     let rt = Runtime::cpu().expect("pjrt client");
     let model = std::sync::Arc::new(rt.load_model("m75a").expect("run `make artifacts`"));
 
@@ -29,7 +30,7 @@ fn main() {
         let r = bench(&format!("round/K{k}/tau{tau}"), 3.0, || {
             fed.run_round().unwrap();
         });
-        r.print_with_throughput("client-step", (k as u64 * tau) as f64);
+        rec.add(&r, "client-step", (k as u64 * tau) as f64);
     }
 
     // Round-engine scaling: identical work, workers 1 vs auto. Host-side
@@ -51,7 +52,7 @@ fn main() {
         let r = bench(&format!("round_engine/K{k}/tau{tau}/workers_{label}"), 3.0, || {
             fed.run_round().unwrap();
         });
-        r.print_with_throughput("client-step", (k as u64 * tau) as f64);
+        rec.add(&r, "client-step", (k as u64 * tau) as f64);
         means.push(r.mean.as_secs_f64());
     }
     if let [seq, par] = means[..] {
@@ -65,5 +66,7 @@ fn main() {
     let r = bench("eval_global/4_batches", 1.0, || {
         fed.eval_global().unwrap();
     });
-    r.print();
+    rec.add_result(&r);
+
+    rec.finish().expect("writing BENCH_round.json");
 }

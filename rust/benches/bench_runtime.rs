@@ -2,7 +2,7 @@
 //! hot path (each federated round is τ·K of these). Regenerates the data
 //! behind EXPERIMENTS.md §Perf (L3 step-latency table).
 
-use photon::benchkit::{bench, bench_header};
+use photon::benchkit::{bench, bench_header, Recorder};
 use photon::data::corpus::SyntheticCorpus;
 use photon::data::partition::Partition;
 use photon::data::stream::TokenStream;
@@ -11,6 +11,7 @@ use photon::runtime::{Runtime, TrainState};
 
 fn main() {
     let quick = bench_header("bench_runtime: AOT step latency per model size");
+    let mut rec = Recorder::new("runtime");
     let rt = Runtime::cpu().expect("pjrt cpu client");
     let sizes: &[&str] = if quick {
         &["m75a", "m350a"]
@@ -42,7 +43,7 @@ fn main() {
         let r = bench(&format!("{name}/train_step ({} params)", model.n_params()), 2.0, || {
             model.train_step(&mut state, 1e-3, &tokens).unwrap();
         });
-        r.print_with_throughput("tok", tokens_per_step);
+        rec.add(&r, "tok", tokens_per_step);
         let k = model.chunk_size();
         let mut chunk_toks = Vec::new();
         for _ in 0..k {
@@ -53,15 +54,17 @@ fn main() {
         let r = bench(&format!("{name}/train_chunk (x{k})"), 2.0, || {
             model.train_chunk(&mut chunk_state, &lrs, &chunk_toks).unwrap();
         });
-        r.print_with_throughput("tok", tokens_per_step * k as f64);
+        rec.add(&r, "tok", tokens_per_step * k as f64);
         let r = bench(&format!("{name}/eval_step"), 1.0, || {
             model.eval_batch(&params, &tokens).unwrap();
         });
-        r.print_with_throughput("tok", tokens_per_step);
+        rec.add(&r, "tok", tokens_per_step);
         let mask = vec![1.0f32; model.batch_size() * model.seq_len()];
         let r = bench(&format!("{name}/score_step"), 1.0, || {
             model.score_batch(&params, &tokens, &mask).unwrap();
         });
-        r.print();
+        rec.add_result(&r);
     }
+
+    rec.finish().expect("writing BENCH_runtime.json");
 }

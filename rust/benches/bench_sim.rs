@@ -3,7 +3,7 @@
 //! to sweep ladders × τ × policies interactively), plus a printed policy
 //! comparison at paper scale.
 
-use photon::benchkit::{bench, bench_header};
+use photon::benchkit::{bench, bench_header, Recorder};
 use photon::cluster::faults::FaultPlan;
 use photon::config::ExperimentConfig;
 use photon::netsim::CLOUD_WAN;
@@ -13,6 +13,7 @@ use photon::sim::{
 
 fn main() {
     let quick = bench_header("bench_sim: wall-clock federation simulator");
+    let mut rec = Recorder::new("sim");
     let (p, k, rounds) = if quick { (64, 16, 20) } else { (512, 64, 50) };
 
     let mut cfg = ExperimentConfig::wallclock(p, k, rounds, 500, 3);
@@ -29,7 +30,7 @@ fn main() {
     let r = bench(&format!("plan/replay_{p}x{k}x{rounds}"), 0.3, || {
         std::hint::black_box(RoundPlan::from_config(&cfg));
     });
-    r.print_with_throughput("rounds", rounds as f64);
+    rec.add(&r, "round", rounds as f64);
 
     let plan = RoundPlan::from_config(&cfg);
     for policy in [
@@ -47,7 +48,7 @@ fn main() {
                 );
             },
         );
-        r.print_with_throughput("rounds", rounds as f64);
+        rec.add(&r, "round", rounds as f64);
     }
 
     println!("\nsimulated wall-clock at paper scale (τ=500, 1 Gbit/s WAN):");
@@ -67,4 +68,6 @@ fn main() {
             rep.late_total,
         );
     }
+
+    rec.finish().expect("writing BENCH_sim.json");
 }

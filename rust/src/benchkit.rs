@@ -2,12 +2,30 @@
 //! offline; see DESIGN.md §1). Used by every `cargo bench` target
 //! (`harness = false`). Reports mean / p50 / p95 / throughput after a
 //! warmup phase, with iteration counts adapted to the measured cost.
+//!
+//! Since the perf plane landed this is a **recording** harness, not just a
+//! printer: each bench target feeds its results into a [`Recorder`], which
+//! emits a `BENCH_<area>.json` snapshot on [`Recorder::finish`] — an array
+//! of `{bench, iters, mean_ns, p50_ns, p95_ns, units_per_sec, git_rev}`
+//! records ([`validate_snapshot`] is the schema's single source of truth).
+//! `tools/bench_compare.py` diffs two snapshots and flags >15% regressions;
+//! the committed `BENCH_*.json` baselines at the repo root are the perf
+//! trajectory (docs/REPRODUCTION.md explains how to refresh them). Output
+//! directory: `PHOTON_BENCH_DIR` (default: the current directory, i.e.
+//! `rust/` under `cargo bench`); `PHOTON_GIT_REV` overrides the recorded
+//! revision when `git` is unavailable (CI detached checkouts).
 
 // Wall-clock reads are this module's whole job (throughput reporting) —
 // allowlisted; see docs/ANALYSIS.md (nondet-time).
 #![allow(clippy::disallowed_methods)]
 
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::util::json::{self, Json};
 
 pub struct BenchResult {
     pub name: String,
@@ -32,6 +50,156 @@ impl BenchResult {
             self.name, self.iters, self.mean, self.p50, per_sec
         );
     }
+}
+
+/// One recorded benchmark row — the `BENCH_<area>.json` record schema.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRecord {
+    pub bench: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub units_per_sec: f64,
+}
+
+impl BenchRecord {
+    /// Convert a measured result. `units_per_iter` is the work one
+    /// iteration performs in the bench's natural unit (params folded,
+    /// bytes framed, rounds simulated …); `units_per_sec` derives from the
+    /// mean. Nanosecond fields are floored at 1 so a sub-granularity
+    /// measurement can never produce a zero/∞ record.
+    pub fn from_result(r: &BenchResult, units_per_iter: f64) -> BenchRecord {
+        let mean_ns = (r.mean.as_nanos() as f64).max(1.0);
+        BenchRecord {
+            bench: r.name.clone(),
+            iters: r.iters,
+            mean_ns,
+            p50_ns: (r.p50.as_nanos() as f64).max(1.0),
+            p95_ns: (r.p95.as_nanos() as f64).max(1.0),
+            units_per_sec: units_per_iter * 1e9 / mean_ns,
+        }
+    }
+
+    fn to_json(&self, git_rev: &str) -> Json {
+        json::obj(vec![
+            ("bench", json::s(&self.bench)),
+            ("iters", json::num(self.iters as f64)),
+            ("mean_ns", json::num(self.mean_ns)),
+            ("p50_ns", json::num(self.p50_ns)),
+            ("p95_ns", json::num(self.p95_ns)),
+            ("units_per_sec", json::num(self.units_per_sec)),
+            ("git_rev", json::s(git_rev)),
+        ])
+    }
+}
+
+/// Collects every [`BenchResult`] a bench target produces and writes the
+/// area's `BENCH_<area>.json` snapshot at the end. Printing still happens
+/// per result (via [`Recorder::add`]/[`Recorder::add_result`]), so the
+/// human-readable output is unchanged; the snapshot is additive.
+pub struct Recorder {
+    area: String,
+    git_rev: String,
+    records: Vec<BenchRecord>,
+}
+
+impl Recorder {
+    pub fn new(area: &str) -> Recorder {
+        Recorder { area: area.to_string(), git_rev: resolve_git_rev(), records: Vec::new() }
+    }
+
+    /// Print with throughput and record. `units_per_iter` must be > 0.
+    pub fn add(&mut self, r: &BenchResult, unit: &str, units_per_iter: f64) {
+        r.print_with_throughput(unit, units_per_iter);
+        self.records.push(BenchRecord::from_result(r, units_per_iter));
+    }
+
+    /// Print without a throughput unit and record (1 unit ≡ 1 iteration,
+    /// so `units_per_sec` reads as iterations/second).
+    pub fn add_result(&mut self, r: &BenchResult) {
+        r.print();
+        self.records.push(BenchRecord::from_result(r, 1.0));
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// The snapshot as a JSON array (the exact on-disk shape).
+    pub fn snapshot_json(&self) -> Json {
+        json::arr(self.records.iter().map(|r| r.to_json(&self.git_rev)))
+    }
+
+    /// Write `BENCH_<area>.json` into `dir` and return its path.
+    pub fn write_to(&self, dir: &Path) -> Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.area));
+        std::fs::write(&path, self.snapshot_json().to_string() + "\n")
+            .map_err(|e| anyhow!("writing {}: {e}", path.display()))?;
+        println!("[bench] wrote {} ({} records)", path.display(), self.records.len());
+        Ok(path)
+    }
+
+    /// Write the snapshot into `PHOTON_BENCH_DIR` (default: the current
+    /// directory). Every bench target calls this last.
+    pub fn finish(self) -> Result<PathBuf> {
+        let dir = std::env::var("PHOTON_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+        self.write_to(Path::new(&dir))
+    }
+}
+
+/// Recorded git revision: `PHOTON_GIT_REV` if set (CI detached checkouts),
+/// else `git rev-parse --short HEAD`, else `"unknown"`.
+fn resolve_git_rev() -> String {
+    if let Ok(v) = std::env::var("PHOTON_GIT_REV") {
+        if !v.trim().is_empty() {
+            return v.trim().to_string();
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+fn check_record(r: &Json, seen: &mut BTreeSet<String>) -> Result<()> {
+    let bench = r.get("bench")?.as_str()?;
+    ensure!(!bench.is_empty(), "empty bench name");
+    ensure!(seen.insert(bench.to_string()), "duplicate bench name {bench:?}");
+    ensure!(r.get("iters")?.as_usize()? >= 1, "iters must be ≥ 1");
+    for key in ["mean_ns", "p50_ns", "p95_ns", "units_per_sec"] {
+        let x = r.get(key)?.as_f64()?;
+        ensure!(x.is_finite() && x > 0.0, "{key} must be finite and positive, got {x}");
+    }
+    let p50 = r.get("p50_ns")?.as_f64()?;
+    let p95 = r.get("p95_ns")?.as_f64()?;
+    ensure!(p95 >= p50, "p95_ns {p95} < p50_ns {p50}");
+    ensure!(!r.get("git_rev")?.as_str()?.is_empty(), "empty git_rev");
+    Ok(())
+}
+
+/// Validate a parsed `BENCH_*.json` snapshot against the record schema:
+/// a non-empty array of records with unique non-empty `bench` names,
+/// `iters ≥ 1`, finite positive nanosecond/throughput fields, `p95 ≥ p50`,
+/// and a non-empty `git_rev`. Returns the record count. Used by the
+/// benchkit unit tests and the `photon benchck` CLI gate.
+pub fn validate_snapshot(v: &Json) -> Result<usize> {
+    let records = v.as_arr().map_err(|_| anyhow!("bench snapshot must be a JSON array"))?;
+    ensure!(!records.is_empty(), "bench snapshot has no records");
+    let mut seen = BTreeSet::new();
+    for (i, r) in records.iter().enumerate() {
+        check_record(r, &mut seen).map_err(|e| anyhow!("record {i}: {e}"))?;
+    }
+    Ok(records.len())
 }
 
 /// Benchmark `f`, auto-calibrating the iteration count to fill
@@ -81,5 +249,94 @@ mod tests {
         assert!(r.iters >= 5);
         assert!(r.p50 <= r.p95);
         assert!(r.mean.as_nanos() > 0);
+    }
+
+    fn fake_result(name: &str, mean_ns: u64) -> BenchResult {
+        BenchResult {
+            name: name.to_string(),
+            iters: 42,
+            mean: Duration::from_nanos(mean_ns),
+            p50: Duration::from_nanos(mean_ns),
+            p95: Duration::from_nanos(mean_ns * 2),
+        }
+    }
+
+    #[test]
+    fn recorder_snapshot_matches_schema() {
+        let mut rec = Recorder::new("unit");
+        rec.add(&fake_result("fold/1k", 1_000), "param", 1000.0);
+        rec.add_result(&fake_result("roundtrip", 500));
+        assert_eq!(rec.len(), 2);
+        let snap = rec.snapshot_json();
+        // Round-trip through text exactly as the file would.
+        let back = Json::parse(&snap.to_string()).unwrap();
+        assert_eq!(validate_snapshot(&back).unwrap(), 2);
+        let r0 = &back.as_arr().unwrap()[0];
+        assert_eq!(r0.get("bench").unwrap().as_str().unwrap(), "fold/1k");
+        assert_eq!(r0.get("iters").unwrap().as_usize().unwrap(), 42);
+        assert_eq!(r0.get("mean_ns").unwrap().as_f64().unwrap(), 1_000.0);
+        // 1000 units in 1000 ns → 1e9 units/s.
+        assert_eq!(r0.get("units_per_sec").unwrap().as_f64().unwrap(), 1e9);
+        assert!(!r0.get("git_rev").unwrap().as_str().unwrap().is_empty());
+    }
+
+    #[test]
+    fn recorder_writes_a_parseable_file() {
+        let dir = std::env::temp_dir()
+            .join(format!("photon_benchkit_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rec = Recorder::new("unitfile");
+        rec.add(&fake_result("x", 10_000), "op", 3.0);
+        let path = rec.write_to(&dir).unwrap();
+        assert!(path.ends_with("BENCH_unitfile.json"));
+        let v = Json::parse_file(&path).unwrap();
+        assert_eq!(validate_snapshot(&v).unwrap(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn zero_duration_results_are_floored_not_invalid() {
+        // Clock granularity can report 0 ns; the record must stay valid.
+        let r = BenchResult {
+            name: "instant".into(),
+            iters: 5,
+            mean: Duration::ZERO,
+            p50: Duration::ZERO,
+            p95: Duration::ZERO,
+        };
+        let rec = BenchRecord::from_result(&r, 7.0);
+        assert_eq!(rec.mean_ns, 1.0);
+        assert!(rec.units_per_sec.is_finite() && rec.units_per_sec > 0.0);
+    }
+
+    #[test]
+    fn validate_rejects_malformed_snapshots() {
+        let ok = r#"[{"bench":"a","iters":5,"mean_ns":10,"p50_ns":9,
+                      "p95_ns":12,"units_per_sec":1.5,"git_rev":"abc"}]"#;
+        assert_eq!(validate_snapshot(&Json::parse(ok).unwrap()).unwrap(), 1);
+        for bad in [
+            r#"{}"#,                                               // not an array
+            r#"[]"#,                                               // empty
+            r#"[{"bench":"a"}]"#,                                  // missing fields
+            r#"[{"bench":"","iters":5,"mean_ns":10,"p50_ns":9,
+                 "p95_ns":12,"units_per_sec":1.5,"git_rev":"abc"}]"#, // empty name
+            r#"[{"bench":"a","iters":0,"mean_ns":10,"p50_ns":9,
+                 "p95_ns":12,"units_per_sec":1.5,"git_rev":"abc"}]"#, // iters 0
+            r#"[{"bench":"a","iters":5,"mean_ns":-10,"p50_ns":9,
+                 "p95_ns":12,"units_per_sec":1.5,"git_rev":"abc"}]"#, // negative
+            r#"[{"bench":"a","iters":5,"mean_ns":10,"p50_ns":13,
+                 "p95_ns":12,"units_per_sec":1.5,"git_rev":"abc"}]"#, // p95 < p50
+            r#"[{"bench":"a","iters":5,"mean_ns":10,"p50_ns":9,
+                 "p95_ns":12,"units_per_sec":1.5,"git_rev":""}]"#,    // empty rev
+            r#"[{"bench":"a","iters":5,"mean_ns":10,"p50_ns":9,
+                 "p95_ns":12,"units_per_sec":1.5,"git_rev":"abc"},
+                {"bench":"a","iters":5,"mean_ns":10,"p50_ns":9,
+                 "p95_ns":12,"units_per_sec":1.5,"git_rev":"abc"}]"#, // dup name
+        ] {
+            assert!(
+                validate_snapshot(&Json::parse(bad).unwrap()).is_err(),
+                "must reject: {bad}"
+            );
+        }
     }
 }

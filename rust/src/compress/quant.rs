@@ -9,6 +9,15 @@
 //! come from a seeded [`Rng`], so an encode is a pure function of
 //! `(delta, block, seed)`: both federation planes emit identical bytes.
 //!
+//! The kernels are chunked over [`LANES`]-wide lanes like the vecmath fold
+//! (scale scan, floor/frac precompute, decode multiply), but the rounding
+//! draws themselves stay strictly sequential — one `rng.f64()` per element
+//! in index order, and none at all for a zero-scale block — because the
+//! draw stream is part of the wire contract: reordering it would change the
+//! emitted bytes. `tests/props_perf.rs` pins the bodies against golden
+//! vectors in `tests/fixtures/codec/`, and the unit tests below pin the
+//! chunked kernels byte-for-byte against the retained scalar reference.
+//!
 //! Body layout (little-endian), after the leading wire codec id byte:
 //!
 //! ```text
@@ -24,20 +33,38 @@
 use anyhow::{ensure, Result};
 
 use crate::compress::{CODEC_Q4, CODEC_Q8};
+use crate::model::vecmath::LANES;
 use crate::util::rng::Rng;
 
 /// Per-block scales for `levels`-level quantization (`max|x| / levels`).
+/// Lane-striped max scan; `f32::max` is order-insensitive for the finite
+/// inputs the encoder sees, so the scales are bit-identical to a
+/// sequential fold.
 fn block_scales(delta: &[f32], block: usize, levels: f64) -> Vec<f32> {
     delta
         .chunks(block)
         .map(|ch| {
-            let max = ch.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+            let mut lanes = [0.0f32; LANES];
+            let mut it = ch.chunks_exact(LANES);
+            for b in &mut it {
+                for l in 0..LANES {
+                    lanes[l] = lanes[l].max(b[l].abs());
+                }
+            }
+            let mut max = it.remainder().iter().fold(0.0f32, |m, x| m.max(x.abs()));
+            for &l in &lanes {
+                max = max.max(l);
+            }
             (max as f64 / levels) as f32
         })
         .collect()
 }
 
 /// Stochastically round `x/scale` to an integer in `[-levels, levels]`.
+/// The scalar reference kernel: the chunked encoders below must emit
+/// exactly these values with exactly this draw schedule (one draw per
+/// element, none when the block scale is ≤ 0).
+#[cfg(test)]
 fn stochastic_q(x: f32, scale: f32, levels: i32, rng: &mut Rng) -> i32 {
     if scale <= 0.0 {
         return 0;
@@ -69,9 +96,35 @@ pub(crate) fn encode_q8(delta: &[f32], block: usize, seed: u64) -> Vec<u8> {
         out.extend_from_slice(&s.to_le_bytes());
     }
     let mut rng = Rng::new(seed);
-    for (i, &x) in delta.iter().enumerate() {
-        let q = stochastic_q(x, scales[i / block], 127, &mut rng);
-        out.push(q as i8 as u8);
+    for (ch, &scale) in delta.chunks(block).zip(&scales) {
+        if scale <= 0.0 {
+            // Zero block: q = 0 for every element and — critically — no
+            // rounding draws, so the rng stream stays element-aligned with
+            // the scalar kernel (byte-identical bodies).
+            out.extend(std::iter::repeat(0u8).take(ch.len()));
+            continue;
+        }
+        let s = scale as f64;
+        for sub in ch.chunks(LANES) {
+            let mut fl = [0i32; LANES];
+            let mut fr = [0.0f64; LANES];
+            // Phase 1 (vectorizable): floor + fractional part per lane.
+            for (l, &x) in sub.iter().enumerate() {
+                let t = x as f64 / s;
+                let f = t.floor();
+                fl[l] = f as i32;
+                fr[l] = t - f;
+            }
+            // Phase 2 (sequential by contract): one draw per element in
+            // index order.
+            for l in 0..sub.len() {
+                let mut q = fl[l];
+                if rng.f64() < fr[l] {
+                    q += 1;
+                }
+                out.push(q.clamp(-127, 127) as i8 as u8);
+            }
+        }
     }
     out
 }
@@ -85,13 +138,41 @@ pub(crate) fn encode_q4(delta: &[f32], block: usize, seed: u64) -> Vec<u8> {
         out.extend_from_slice(&s.to_le_bytes());
     }
     let mut rng = Rng::new(seed);
+    // Nibble packing crosses block boundaries (odd-length blocks), so the
+    // pending low nibble threads through the whole pass.
     let mut pending: Option<u8> = None;
-    for (i, &x) in delta.iter().enumerate() {
-        let q = stochastic_q(x, scales[i / block], 7, &mut rng);
-        let nib = (q + 8) as u8; // 1..=15
-        match pending.take() {
-            None => pending = Some(nib),
-            Some(lo) => out.push(lo | (nib << 4)),
+    for (ch, &scale) in delta.chunks(block).zip(&scales) {
+        if scale <= 0.0 {
+            for _ in 0..ch.len() {
+                // q = 0 ⇒ nibble 8; no rounding draw (see encode_q8).
+                match pending.take() {
+                    None => pending = Some(8),
+                    Some(lo) => out.push(lo | (8 << 4)),
+                }
+            }
+            continue;
+        }
+        let s = scale as f64;
+        for sub in ch.chunks(LANES) {
+            let mut fl = [0i32; LANES];
+            let mut fr = [0.0f64; LANES];
+            for (l, &x) in sub.iter().enumerate() {
+                let t = x as f64 / s;
+                let f = t.floor();
+                fl[l] = f as i32;
+                fr[l] = t - f;
+            }
+            for l in 0..sub.len() {
+                let mut q = fl[l];
+                if rng.f64() < fr[l] {
+                    q += 1;
+                }
+                let nib = (q.clamp(-7, 7) + 8) as u8; // 1..=15
+                match pending.take() {
+                    None => pending = Some(nib),
+                    Some(lo) => out.push(lo | (nib << 4)),
+                }
+            }
         }
     }
     if let Some(lo) = pending {
@@ -141,11 +222,18 @@ fn parse_header<'a>(
 pub(crate) fn decode_q8(body: &[u8], block: usize, n: usize) -> Result<Vec<f32>> {
     let block = block.max(1);
     let (scales, data) = parse_header(body, CODEC_Q8, block, n, n)?;
-    let mut out = Vec::with_capacity(n);
-    for (i, &b) in data.iter().enumerate() {
-        let q = b as i8 as i32;
-        ensure!((-127..=127).contains(&q), "q8 level {q} out of range");
-        out.push(q as f32 * scales[i / block]);
+    let mut out = vec![0.0f32; n];
+    for ((qch, och), &scale) in data.chunks(block).zip(out.chunks_mut(block)).zip(&scales) {
+        // Structural validation first, then a branch-free dequantize sweep
+        // the compiler can vectorize. `q as f32 * scale` — the same single
+        // multiply as the scalar decoder, so values are bit-identical.
+        for &b in qch {
+            let q = b as i8 as i32;
+            ensure!((-127..=127).contains(&q), "q8 level {q} out of range");
+        }
+        for (o, &b) in och.iter_mut().zip(qch) {
+            *o = (b as i8) as f32 * scale;
+        }
     }
     Ok(out)
 }
@@ -153,19 +241,26 @@ pub(crate) fn decode_q8(body: &[u8], block: usize, n: usize) -> Result<Vec<f32>>
 pub(crate) fn decode_q4(body: &[u8], block: usize, n: usize) -> Result<Vec<f32>> {
     let block = block.max(1);
     let (scales, data) = parse_header(body, CODEC_Q4, block, n, n.div_ceil(2))?;
-    let mut out = Vec::with_capacity(n);
-    let nib_val = |nib: u8, i: usize| -> Result<f32> {
-        ensure!(nib != 0, "q4 nibble 0 is never emitted — corrupted body");
-        Ok((nib as i32 - 8) as f32 * scales[i / block])
-    };
-    for (pair, &byte) in data.iter().enumerate() {
-        let i = 2 * pair;
-        out.push(nib_val(byte & 0x0F, i)?);
+    let mut out = vec![0.0f32; n];
+    // Pass 1: unpack nibbles into centered q values, validating structure
+    // byte-by-byte (nibble 0 and a bad pad nibble are refused, as before).
+    for (och, &byte) in out.chunks_mut(2).zip(data) {
+        let lo = byte & 0x0F;
+        ensure!(lo != 0, "q4 nibble 0 is never emitted — corrupted body");
+        och[0] = (lo as i32 - 8) as f32;
         let hi = byte >> 4;
-        if i + 1 < n {
-            out.push(nib_val(hi, i + 1)?);
+        if let Some(o1) = och.get_mut(1) {
+            ensure!(hi != 0, "q4 nibble 0 is never emitted — corrupted body");
+            *o1 = (hi as i32 - 8) as f32;
         } else {
             ensure!(hi == 8, "q4 pad nibble must be 8, got {hi}");
+        }
+    }
+    // Pass 2: per-block scale sweep (vectorizable); one multiply per
+    // element, same as the scalar decoder.
+    for (och, &scale) in out.chunks_mut(block).zip(&scales) {
+        for o in och {
+            *o *= scale;
         }
     }
     Ok(out)
@@ -191,6 +286,85 @@ mod tests {
                     .fold(0.0f64, f64::max)
             })
             .fold(0.0f64, f64::max)
+    }
+
+    // The pre-vectorization encoders, verbatim: one stochastic_q per
+    // element. The chunked kernels must match these byte-for-byte.
+    fn encode_q8_scalar(delta: &[f32], block: usize, seed: u64) -> Vec<u8> {
+        let block = block.max(1);
+        let n = delta.len();
+        let scales = block_scales(delta, block, 127.0);
+        let mut out = header(CODEC_Q8, block, n, 13 + 4 * scales.len() + n);
+        for s in &scales {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        let mut rng = Rng::new(seed);
+        for (i, &x) in delta.iter().enumerate() {
+            let q = stochastic_q(x, scales[i / block], 127, &mut rng);
+            out.push(q as i8 as u8);
+        }
+        out
+    }
+
+    fn encode_q4_scalar(delta: &[f32], block: usize, seed: u64) -> Vec<u8> {
+        let block = block.max(1);
+        let n = delta.len();
+        let scales = block_scales(delta, block, 7.0);
+        let mut out = header(CODEC_Q4, block, n, 13 + 4 * scales.len() + n.div_ceil(2));
+        for s in &scales {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        let mut rng = Rng::new(seed);
+        let mut pending: Option<u8> = None;
+        for (i, &x) in delta.iter().enumerate() {
+            let q = stochastic_q(x, scales[i / block], 7, &mut rng);
+            let nib = (q + 8) as u8;
+            match pending.take() {
+                None => pending = Some(nib),
+                Some(lo) => out.push(lo | (nib << 4)),
+            }
+        }
+        if let Some(lo) = pending {
+            out.push(lo | (8 << 4));
+        }
+        out
+    }
+
+    #[test]
+    fn chunked_encode_matches_scalar_reference_bytes() {
+        // Ragged shapes: lane remainders, odd n (q4 pad), block remainders,
+        // block sizes that are not lane multiples.
+        for (n, block) in [
+            (0usize, 8usize),
+            (1, 8),
+            (7, 8),
+            (8, 8),
+            (9, 8),
+            (33, 7),
+            (100, 16),
+            (101, 16),
+            (257, 64),
+        ] {
+            let d = delta(n, 0.4);
+            assert_eq!(
+                encode_q8(&d, block, 77),
+                encode_q8_scalar(&d, block, 77),
+                "q8 n={n} block={block}"
+            );
+            assert_eq!(
+                encode_q4(&d, block, 77),
+                encode_q4_scalar(&d, block, 77),
+                "q4 n={n} block={block}"
+            );
+        }
+        // Zero blocks skip rounding draws in both kernels — the draw
+        // streams must stay aligned across the skip.
+        let mut d = delta(64, 0.4);
+        for x in d.iter_mut().take(16) {
+            *x = 0.0;
+        }
+        assert_eq!(encode_q8(&d, 16, 5), encode_q8_scalar(&d, 16, 5));
+        assert_eq!(encode_q4(&d, 16, 5), encode_q4_scalar(&d, 16, 5));
     }
 
     #[test]

@@ -37,12 +37,21 @@ pub(crate) fn encode(delta: &[f32], k: usize, residual: &mut Vec<f32>) -> Result
     // Effective signal = this round's delta + what was withheld before.
     let eff: Vec<f32> = delta.iter().zip(residual.iter()).map(|(d, r)| d + r).collect();
     let mut order: Vec<u32> = (0..n as u32).collect();
-    order.sort_unstable_by(|&a, &b| {
-        eff[b as usize]
+    // Deterministic total order: descending |eff|, ties on the lower index.
+    let by_mag = |a: &u32, b: &u32| {
+        eff[*b as usize]
             .abs()
-            .total_cmp(&eff[a as usize].abs())
-            .then(a.cmp(&b))
-    });
+            .total_cmp(&eff[*a as usize].abs())
+            .then(a.cmp(b))
+    };
+    if k > 0 && k < n {
+        // Partial select — O(n) expected instead of the former full
+        // O(n log n) sort. The comparator is a *strict* total order, so the
+        // set landing in the first k slots is exactly the sorted prefix:
+        // after the ascending index re-sort below, the wire body is
+        // byte-identical to the full-sort path (pinned by the unit test).
+        order.select_nth_unstable_by(k - 1, by_mag);
+    }
     order.truncate(k);
     order.sort_unstable();
 
@@ -129,6 +138,34 @@ mod tests {
             }
         }
         assert!(got_small, "error feedback must eventually send coordinate 0");
+    }
+
+    #[test]
+    fn partial_select_matches_full_sort_prefix() {
+        // The select_nth path must keep exactly the indices the old full
+        // sort kept — including ragged k near 1 and near n, and ties.
+        for (n, k) in [(1usize, 1usize), (8, 3), (57, 8), (57, 57), (200, 1), (200, 199)] {
+            let delta: Vec<f32> =
+                (0..n).map(|i| ((i * 37 % 101) as f32 - 50.0) * 0.01).collect();
+            let mut residual = Vec::new();
+            let body = encode(&delta, k, &mut residual).unwrap();
+            // Reference selection: the former full sort over eff = delta
+            // (residual starts empty, so eff == delta here).
+            let mut order: Vec<u32> = (0..n as u32).collect();
+            order.sort_unstable_by(|&a, &b| {
+                delta[b as usize]
+                    .abs()
+                    .total_cmp(&delta[a as usize].abs())
+                    .then(a.cmp(&b))
+            });
+            let mut expect = order[..k].to_vec();
+            expect.sort_unstable();
+            let got: Vec<u32> = body[17..17 + 4 * k]
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            assert_eq!(got, expect, "n={n} k={k}");
+        }
     }
 
     #[test]

@@ -28,6 +28,14 @@
 //! never mis-decoded into different bytes — property-tested in
 //! `tests/props_chaos.rs` and drilled live by the `Flake` fault.
 //!
+//! The frame path is **zero-copy** when the negotiated codec is `none`
+//! and deflate is off: [`encode_coded`] writes the update slice straight
+//! into the framed output (one exact-capacity allocation, no intermediate
+//! body buffer), and the `_ref` decoders ([`decode_coded_ref`],
+//! [`decode_bytes_ref`]) hand back a `Cow::Borrowed` view of the frame
+//! after verifying the checksum in place — allocation-count-tested in
+//! `tests/props_perf.rs` via the testkit counting allocator.
+//!
 //! Two payload shapes share the format: model payloads (f32 vectors, the
 //! original `GlobalModel`/`ClientUpdate`/`Metrics` kinds) and the `net`
 //! deployment plane's control messages (opaque byte bodies encoded by
@@ -35,6 +43,7 @@
 //! simulator (`sim`) accepts measured frame sizes as its transfer payloads,
 //! and the `net` runtime carries them over real TCP sockets.
 
+use std::borrow::Cow;
 use std::io::{Read, Write};
 
 use anyhow::{bail, ensure, Result};
@@ -144,23 +153,25 @@ pub fn encode_bytes(kind: MsgKind, raw: &[u8], compress: bool) -> Result<Vec<u8>
 /// [`decode_coded`] on the far side).
 pub fn encode_coded(kind: MsgKind, codec_id: u8, raw: &[u8], compress: bool) -> Result<Vec<u8>> {
     let checksum = fnv1a(raw);
-    let body: Vec<u8> = if compress {
-        let mut enc =
-            flate2::write::DeflateEncoder::new(Vec::new(), flate2::Compression::fast());
-        enc.write_all(raw)?;
-        enc.finish()?
-    } else {
-        raw.to_vec()
-    };
     let flags = (compress as u32) | ((codec_id as u32) << CODEC_SHIFT);
-    let mut out = Vec::with_capacity(body.len() + HEADER_BYTES);
+    // Header first, payload straight after: the uncompressed path writes
+    // the update slice directly into the framed body — exactly one
+    // allocation (the exact-capacity frame itself), no intermediate body
+    // buffer. The deflate path streams the encoder into the same vec.
+    let mut out = Vec::with_capacity(HEADER_BYTES + raw.len());
     out.extend_from_slice(MAGIC);
     out.extend_from_slice(&VERSION.to_le_bytes());
     out.extend_from_slice(&(kind as u16).to_le_bytes());
     out.extend_from_slice(&flags.to_le_bytes());
     out.extend_from_slice(&(raw.len() as u64).to_le_bytes());
     out.extend_from_slice(&checksum.to_le_bytes());
-    out.extend_from_slice(&body);
+    if compress {
+        let mut enc = flate2::write::DeflateEncoder::new(out, flate2::Compression::fast());
+        enc.write_all(raw)?;
+        out = enc.finish()?;
+    } else {
+        out.extend_from_slice(raw);
+    }
     Ok(out)
 }
 
@@ -187,12 +198,17 @@ pub fn encode_model(kind: MsgKind, params: &[f32], compress: bool) -> Result<Vec
     encode_bytes(kind, f32s_as_bytes(params), compress)
 }
 
-/// Decode + verify a Photon-Link frame into `(kind, codec_id, raw bytes)`.
-/// The payload is checksum-verified and inflated but **not** codec-decoded
-/// — pass a nonzero-id payload to [`crate::compress::UpdateCodec::decode_delta`]
-/// (or use [`decode_update`], which does both and enforces the negotiated
-/// codec).
-pub fn decode_coded(frame: &[u8]) -> Result<(MsgKind, u8, Vec<u8>)> {
+/// Borrowing decode + verify of a Photon-Link frame into
+/// `(kind, codec_id, raw bytes)`. For **uncompressed** frames — the hot
+/// path when the negotiated codec is `none` — the returned payload is a
+/// `Cow::Borrowed` view into `frame`: the checksum is verified in place and
+/// nothing is allocated or copied. Deflated frames still inflate into an
+/// owned buffer. Every hardening check (magic, version window, unknown
+/// flag bits, declared length, checksum — see `docs/PROTOCOL.md`) is
+/// identical to [`decode_coded`], which delegates here; the zero-copy
+/// property tests in `tests/props_perf.rs` hold both decoders to the same
+/// corruption corpus and pin the allocation count.
+pub fn decode_coded_ref(frame: &[u8]) -> Result<(MsgKind, u8, Cow<'_, [u8]>)> {
     // The header is 28 bytes; an empty payload is legal (e.g. a metrics
     // probe), so anything of at least HEADER_BYTES with the magic passes.
     if frame.len() < HEADER_BYTES || &frame[..4] != MAGIC {
@@ -221,7 +237,7 @@ pub fn decode_coded(frame: &[u8]) -> Result<(MsgKind, u8, Vec<u8>)> {
     // lint:allow(wire-panic): try_into on a fixed 8-byte slice of a length-checked header is infallible
     let checksum = u64::from_le_bytes(frame[20..28].try_into().unwrap());
     let body = &frame[28..];
-    let raw: Vec<u8> = if flags & FLAG_DEFLATE != 0 {
+    let raw: Cow<'_, [u8]> = if flags & FLAG_DEFLATE != 0 {
         // `raw_len` is untrusted — never pre-allocate from it. Deflate
         // expands at most ~1032:1, so a declared length beyond that is
         // corrupt on its face, and `take` caps a decompression bomb at
@@ -233,12 +249,14 @@ pub fn decode_coded(frame: &[u8]) -> Result<(MsgKind, u8, Vec<u8>)> {
         let mut dec = flate2::read::DeflateDecoder::new(body).take(raw_len as u64 + 1);
         let mut out = Vec::new();
         dec.read_to_end(&mut out)?;
-        out
+        Cow::Owned(out)
     } else {
         if raw_len != body.len() {
             bail!("frame declares {raw_len} raw bytes, got {}", body.len());
         }
-        body.to_vec()
+        // Zero-copy: the payload is the frame's own body slice, verified
+        // below without materializing a second buffer.
+        Cow::Borrowed(body)
     };
     if raw.len() != raw_len {
         bail!("frame declares {raw_len} raw bytes, got {}", raw.len());
@@ -249,18 +267,39 @@ pub fn decode_coded(frame: &[u8]) -> Result<(MsgKind, u8, Vec<u8>)> {
     Ok((kind, codec_id, raw))
 }
 
-/// Decode + verify a Photon-Link frame into its raw byte payload. Refuses
-/// codec-coded frames (nonzero codec id) — those must go through
+/// Decode + verify a Photon-Link frame into `(kind, codec_id, raw bytes)`.
+/// The payload is checksum-verified and inflated but **not** codec-decoded
+/// — pass a nonzero-id payload to [`crate::compress::UpdateCodec::decode_delta`]
+/// (or use [`decode_update`], which does both and enforces the negotiated
+/// codec). Owning wrapper over [`decode_coded_ref`]; callers that only
+/// inspect the payload should use the `_ref` variant and skip the copy.
+pub fn decode_coded(frame: &[u8]) -> Result<(MsgKind, u8, Vec<u8>)> {
+    let (kind, codec_id, raw) = decode_coded_ref(frame)?;
+    Ok((kind, codec_id, raw.into_owned()))
+}
+
+/// Borrowing variant of [`decode_bytes`]: uncompressed payloads come back
+/// as a `Cow::Borrowed` view of the frame (no allocation on the hot path).
+/// Refuses codec-coded frames (nonzero codec id) — those must go through
 /// [`decode_update`] so the body is interpreted against the negotiated
 /// codec, never as plain bytes.
-pub fn decode_bytes(frame: &[u8]) -> Result<(MsgKind, Vec<u8>)> {
-    let (kind, codec_id, raw) = decode_coded(frame)?;
+pub fn decode_bytes_ref(frame: &[u8]) -> Result<(MsgKind, Cow<'_, [u8]>)> {
+    let (kind, codec_id, raw) = decode_coded_ref(frame)?;
     ensure!(
         codec_id == 0,
         "frame carries a codec-coded payload (codec id {codec_id}) — decode \
          it with link::decode_update against the negotiated codec"
     );
     Ok((kind, raw))
+}
+
+/// Decode + verify a Photon-Link frame into its raw byte payload. Refuses
+/// codec-coded frames (nonzero codec id) — those must go through
+/// [`decode_update`] so the body is interpreted against the negotiated
+/// codec, never as plain bytes. Owning wrapper over [`decode_bytes_ref`].
+pub fn decode_bytes(frame: &[u8]) -> Result<(MsgKind, Vec<u8>)> {
+    let (kind, raw) = decode_bytes_ref(frame)?;
+    Ok((kind, raw.into_owned()))
 }
 
 /// Decode + verify a Photon-Link frame carrying a model payload.
@@ -270,7 +309,9 @@ pub fn decode_bytes(frame: &[u8]) -> Result<(MsgKind, Vec<u8>)> {
 /// explicit error — the codec-id header byte routes every frame to exactly
 /// one decoder, so corruption flips are refused rather than mis-decoded.
 pub fn decode_model(frame: &[u8]) -> Result<(MsgKind, Vec<f32>)> {
-    let (kind, raw) = decode_bytes(frame)?;
+    // Borrowing decode: the f32 vector is parsed straight out of the frame
+    // body, skipping the former byte-payload copy.
+    let (kind, raw) = decode_bytes_ref(frame)?;
     Ok((kind, bytes_to_f32s(&raw)?))
 }
 
@@ -310,7 +351,10 @@ pub fn decode_update(
     codec: &UpdateCodec,
     expect_len: usize,
 ) -> Result<(MsgKind, Vec<f32>)> {
-    let (kind, codec_id, raw) = decode_coded(frame)?;
+    // Borrowing decode: an uncompressed dense (codec-id-0) frame parses its
+    // f32s straight out of the frame body, and a coded body feeds the codec
+    // from the borrowed slice — the per-frame payload copy is gone.
+    let (kind, codec_id, raw) = decode_coded_ref(frame)?;
     ensure!(
         codec_id == codec.wire_id(),
         "frame carries codec id {codec_id}, negotiated codec is {} (id {}) — \
@@ -570,6 +614,46 @@ mod tests {
         let f = encode_bytes(MsgKind::Heartbeat, &[1, 2, 3], false).unwrap();
         assert!(decode_model(&f).is_err());
         assert_eq!(decode_bytes(&f).unwrap().1, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn ref_decode_agrees_with_owning_decode() {
+        let p = payload(513);
+        for compress in [false, true] {
+            let f = encode_model(MsgKind::ClientUpdate, &p, compress).unwrap();
+            let (k1, id1, raw1) = decode_coded(&f).unwrap();
+            let (k2, id2, raw2) = decode_coded_ref(&f).unwrap();
+            assert_eq!((k1, id1), (k2, id2));
+            assert_eq!(raw1.as_slice(), raw2.as_ref());
+            // Uncompressed payloads borrow the frame; deflated ones must
+            // inflate into an owned buffer.
+            assert_eq!(
+                matches!(raw2, Cow::Borrowed(_)),
+                !compress,
+                "compress={compress}"
+            );
+        }
+    }
+
+    #[test]
+    fn ref_decode_rejects_what_owning_decode_rejects() {
+        let p = payload(64);
+        let clean = encode_model(MsgKind::GlobalModel, &p, false).unwrap();
+        for i in 0..clean.len() {
+            for bit in [0x01u8, 0x80] {
+                let mut bad = clean.clone();
+                bad[i] ^= bit;
+                let own = decode_bytes(&bad).map(|(k, r)| (k, r));
+                let brw = decode_bytes_ref(&bad).map(|(k, r)| (k, r.into_owned()));
+                match (own, brw) {
+                    (Ok(a), Ok(b)) => assert_eq!(a, b, "byte {i} bit {bit:#x}"),
+                    (Err(_), Err(_)) => {}
+                    (a, b) => panic!(
+                        "decoders disagree at byte {i} bit {bit:#x}: {a:?} vs {b:?}"
+                    ),
+                }
+            }
+        }
     }
 
     #[test]

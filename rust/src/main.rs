@@ -30,6 +30,10 @@
 //!              determinism & concurrency static analysis over rust/src
 //!              (nondet-map, nondet-time, nondet-rng, wire-panic,
 //!              wire-alloc, lock-order, allow-policy — see docs/ANALYSIS.md)
+//! photon benchck FILE...
+//!              validate BENCH_*.json perf snapshots against the benchkit
+//!              record schema (CI gates the committed baselines with this
+//!              before tools/bench_compare.py diffs them)
 //! ```
 
 use anyhow::{bail, Result};
@@ -71,7 +75,7 @@ const SPEC: Spec = Spec {
 };
 
 fn usage() -> &'static str {
-    "usage: photon <list|exp|train|serve|worker|eval|info|lint> [args]\n  try: photon list"
+    "usage: photon <list|exp|train|serve|worker|eval|info|lint|benchck> [args]\n  try: photon list"
 }
 
 fn main() {
@@ -100,6 +104,7 @@ fn run(raw: Vec<String>) -> Result<()> {
         "eval" => cmd_eval(&args),
         "info" => cmd_info(&args),
         "lint" => cmd_lint(&args),
+        "benchck" => cmd_benchck(&args),
         "help" | "--help" => {
             println!("{}", usage());
             Ok(())
@@ -376,6 +381,29 @@ fn cmd_lint(args: &Args) -> Result<()> {
             report.diagnostics.len(),
         );
     }
+    Ok(())
+}
+
+/// `photon benchck FILE...`: validate perf snapshots against the benchkit
+/// record schema (array of `{bench, iters, mean_ns, p50_ns, p95_ns,
+/// units_per_sec, git_rev}` with unique names and finite positive timings).
+/// CI runs this over the committed `BENCH_*.json` baselines and the freshly
+/// emitted ones before `tools/bench_compare.py` diffs the pair.
+fn cmd_benchck(args: &Args) -> Result<()> {
+    let files = &args.positional[1..];
+    if files.is_empty() {
+        bail!("benchck needs at least one BENCH_*.json path");
+    }
+    let mut total = 0usize;
+    for f in files {
+        let path = std::path::Path::new(f);
+        let v = photon::util::json::Json::parse_file(path)?;
+        let n = photon::benchkit::validate_snapshot(&v)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        println!("[benchck] {}: {} record(s) ok", path.display(), n);
+        total += n;
+    }
+    println!("[benchck] {} file(s), {} record(s), schema ok", files.len(), total);
     Ok(())
 }
 

@@ -2,49 +2,116 @@
 //!
 //! These loops ARE the Photon Aggregator's hot path (outer optimizers run on
 //! the full parameter vector every round), so they are written allocation-
-//! free over slices (O(1) or caller-owned scratch — never O(N) per call);
-//! `bench_aggregate` tracks their throughput.
+//! free over slices (O(1) or caller-owned scratch — never O(N) per call) and
+//! as chunked, autovectorization-friendly kernels: every loop walks
+//! fixed-width [`LANES`] blocks with an explicit scalar remainder, so the
+//! compiler sees a constant trip count it can turn into SIMD without any
+//! target-specific intrinsics. `bench_aggregate` tracks their throughput and
+//! `BENCH_aggregate.json` records the trajectory.
+//!
+//! ## Bit-exactness under vectorization
+//!
+//! Two different contracts, both load-bearing for the repo's parity
+//! invariants (docs/TESTING.md):
+//!
+//! * **Element-wise folds** (`weighted_mean_into`, `mean_into`, `sub_into`,
+//!   `axpy`, `scale`, the mean/pg halves of `streaming_aggregate`): each
+//!   output element accumulates over *rows*, and chunking only regroups the
+//!   loop over *elements*. The per-element operation sequence — f64
+//!   accumulator, rows in order, `w/total` normalization — is untouched, so
+//!   the chunked kernels are **bit-identical** to the naive scalar
+//!   [`reference`] kernels. `tests/props_perf.rs` pins this with `assert_eq`
+//!   across lengths 0, 1, lane±1, and non-multiple-of-block remainders.
+//! * **Reductions** (`l2_norm`, `l2_dist`, `cosine`, the delta Gram dots):
+//!   a single f64 sum is split across [`LANES`] striped accumulators folded
+//!   pairwise at the end. That changes the *grouping* of the sum, so results
+//!   are not bit-equal to a sequential fold — but the grouping is fixed at
+//!   compile time, identical on every call, platform, and plane, so
+//!   determinism and cross-plane parity hold exactly as before (every plane
+//!   runs the same kernel). Tests compare reductions against [`reference`]
+//!   at 1e-9 relative tolerance.
 //!
 //! `streaming_aggregate` is the round-level entry point: one blocked pass
 //! over the K client parameter vectors producing the weighted mean, the
 //! pseudo-gradient, and the K×K delta Gram matrix (per-client delta norms +
 //! pairwise cosines) without ever materializing the K full-size delta
-//! vectors.
+//! vectors. `streaming_fold` is the gram-free variant for fleets large
+//! enough that the O(K²·N) Gram pass would dominate (hierarchical
+//! aggregation, ROADMAP item 1).
 
 /// Block width (elements) of the blocked accumulators. Small enough that a
 /// per-client f32 delta block for K=64 clients stays cache-resident, large
 /// enough to amortize the loop overhead.
 pub const AGG_BLOCK: usize = 2048;
 
+/// Fixed lane width of the chunked kernels: 8 f32 lanes (= one AVX2 f64
+/// accumulator pair, two NEON quads). Every chunked loop walks
+/// `chunks_exact(LANES)` with a scalar remainder tail.
+pub const LANES: usize = 8;
+
+// The blocked fold hands `chunks_exact(LANES)` windows of an AGG_BLOCK
+// buffer to the lane loops; a remainder inside a *full* block would split
+// one block's accumulation into two differently-shaped passes.
+const _: () = assert!(AGG_BLOCK % LANES == 0);
+
+/// Fold [`LANES`] striped partial sums in a fixed pairwise tree. One shape
+/// for every reduction in this module, so regrouping decisions live in
+/// exactly one place.
+#[inline]
+fn sum_lanes(l: &[f64; LANES]) -> f64 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+/// Lane-striped dot product `Σ a[i]·b[i]` in f64. The kernel under every
+/// reduction here (`l2_norm` is `dot(x,x)`, the Gram entries are block
+/// dots).
+#[inline]
+fn dot_lanes(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f64; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for l in 0..LANES {
+            lanes[l] += xa[l] as f64 * xb[l] as f64;
+        }
+    }
+    for (l, (&x, &y)) in ca.remainder().iter().zip(cb.remainder()).enumerate() {
+        lanes[l] += x as f64 * y as f64;
+    }
+    sum_lanes(&lanes)
+}
+
 /// L2 norm.
 pub fn l2_norm(x: &[f32]) -> f64 {
-    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    dot_lanes(x, x).sqrt()
 }
 
 /// Euclidean distance between two vectors.
 pub fn l2_dist(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    a.iter()
-        .zip(b)
-        .map(|(&x, &y)| {
-            let d = (x - y) as f64;
-            d * d
-        })
-        .sum::<f64>()
-        .sqrt()
+    let mut lanes = [0.0f64; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for l in 0..LANES {
+            let d = (xa[l] - xb[l]) as f64;
+            lanes[l] += d * d;
+        }
+    }
+    for (l, (&x, &y)) in ca.remainder().iter().zip(cb.remainder()).enumerate() {
+        let d = (x - y) as f64;
+        lanes[l] += d * d;
+    }
+    sum_lanes(&lanes).sqrt()
 }
 
 /// Cosine similarity (paper §6.2: federated metric between client models).
 pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let mut dot = 0.0f64;
-    let mut na = 0.0f64;
-    let mut nb = 0.0f64;
-    for (&x, &y) in a.iter().zip(b) {
-        dot += x as f64 * y as f64;
-        na += x as f64 * x as f64;
-        nb += y as f64 * y as f64;
-    }
+    let dot = dot_lanes(a, b);
+    let na = dot_lanes(a, a);
+    let nb = dot_lanes(b, b);
     if na == 0.0 || nb == 0.0 {
         return 0.0;
     }
@@ -52,16 +119,24 @@ pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
 }
 
 /// `out = mean(rows)` — the FedAvg client-model average. `rows` must be
-/// non-empty and equal length.
+/// non-empty and equal length. Accumulates in f32 over rows (the historical
+/// semantics every plane shares), scaling once in f64 at the end; chunking
+/// regroups only the element loop, so results are bit-identical to
+/// [`reference::mean_into`].
 pub fn mean_into(rows: &[&[f32]], out: &mut [f32]) {
     assert!(!rows.is_empty());
     let inv = 1.0 / rows.len() as f64;
-    for o in out.iter_mut() {
-        *o = 0.0;
-    }
+    out.fill(0.0);
     for row in rows {
         debug_assert_eq!(row.len(), out.len());
-        for (o, &v) in out.iter_mut().zip(*row) {
+        let mut oc = out.chunks_exact_mut(LANES);
+        let mut rc = row.chunks_exact(LANES);
+        for (ob, rb) in (&mut oc).zip(&mut rc) {
+            for l in 0..LANES {
+                ob[l] += rb[l];
+            }
+        }
+        for (o, &v) in oc.into_remainder().iter_mut().zip(rc.remainder()) {
             *o += v;
         }
     }
@@ -72,16 +147,55 @@ pub fn mean_into(rows: &[&[f32]], out: &mut [f32]) {
 
 /// Accumulate the weighted mean of `rows[..][lo..lo+acc.len()]` into `acc`
 /// (zeroed here; f64; rows in order, `w/total` normalization). The ONE
-/// per-block accumulation loop shared by `weighted_mean_into` and
-/// `streaming_aggregate`, so their per-element operation order — and hence
-/// their bit-identical-results contract — can never diverge.
+/// per-block accumulation loop shared by `weighted_mean_into`,
+/// `streaming_aggregate`, and `streaming_fold`, so their per-element
+/// operation order — and hence their bit-identical-results contract — can
+/// never diverge. The lane chunking regroups only the element loop: element
+/// `i` still sees `acc[i] += (w/total) * v` over rows in order, bit-equal to
+/// the scalar fold.
 fn weighted_mean_block(rows: &[&[f32]], weights: &[f64], total: f64, lo: usize, acc: &mut [f64]) {
     acc.fill(0.0);
     for (row, &w) in rows.iter().zip(weights) {
         let wn = w / total;
-        for (a, &v) in acc.iter_mut().zip(&row[lo..lo + acc.len()]) {
+        let src = &row[lo..lo + acc.len()];
+        let mut ac = acc.chunks_exact_mut(LANES);
+        let mut sc = src.chunks_exact(LANES);
+        for (ab, sb) in (&mut ac).zip(&mut sc) {
+            for l in 0..LANES {
+                ab[l] += wn * sb[l] as f64;
+            }
+        }
+        for (a, &v) in ac.into_remainder().iter_mut().zip(sc.remainder()) {
             *a += wn * v as f64;
         }
+    }
+}
+
+/// Emit one accumulated block as `mean` (f64→f32 narrow) and `pg = global −
+/// mean` (f32 subtraction). Shared by `streaming_aggregate` and
+/// `streaming_fold` so the two entry points cannot drift bit-wise.
+fn emit_mean_pg(acc: &[f64], global: &[f32], mean_out: &mut [f32], pg_out: &mut [f32]) {
+    let mut ac = acc.chunks_exact(LANES);
+    let mut gc = global.chunks_exact(LANES);
+    let mut mc = mean_out.chunks_exact_mut(LANES);
+    let mut pc = pg_out.chunks_exact_mut(LANES);
+    for (((ab, gb), mb), pb) in (&mut ac).zip(&mut gc).zip(&mut mc).zip(&mut pc) {
+        for l in 0..LANES {
+            let m = ab[l] as f32;
+            mb[l] = m;
+            pb[l] = gb[l] - m;
+        }
+    }
+    for (((&a, &g), m), p) in ac
+        .remainder()
+        .iter()
+        .zip(gc.remainder())
+        .zip(mc.into_remainder())
+        .zip(pc.into_remainder())
+    {
+        let mv = a as f32;
+        *m = mv;
+        *p = g - mv;
     }
 }
 
@@ -89,7 +203,8 @@ fn weighted_mean_block(rows: &[&[f32]], weights: &[f64], total: f64, lo: usize, 
 /// internally) — FedAvg with per-client sample counts. Accumulates in f64
 /// block-by-block over a fixed stack buffer, so no heap allocation happens
 /// regardless of the parameter count. Per element, rows are accumulated in
-/// order, so the result is bit-identical to a whole-vector f64 accumulator.
+/// order, so the result is bit-identical to a whole-vector f64 accumulator
+/// ([`reference::weighted_mean_into`]).
 pub fn weighted_mean_into(rows: &[&[f32]], weights: &[f64], out: &mut [f32]) {
     assert_eq!(rows.len(), weights.len());
     assert!(!rows.is_empty());
@@ -125,8 +240,12 @@ impl AggScratch {
         AggScratch::default()
     }
 
-    fn ensure(&mut self, k: usize) {
+    fn ensure_acc(&mut self) {
         self.acc.resize(AGG_BLOCK, 0.0);
+    }
+
+    fn ensure(&mut self, k: usize) {
+        self.ensure_acc();
         if self.deltas.len() < k * AGG_BLOCK {
             self.deltas.resize(k * AGG_BLOCK, 0.0);
         }
@@ -156,7 +275,8 @@ impl AggStats {
 /// * `pg_out`    = `global − mean` (bit-identical to `sub_into`),
 /// * the returned delta Gram matrix `G[i][j] = Σ d_i·d_j` with
 ///   `d_k = rows[k] − mean` computed in f32 (matching the former
-///   explicitly-materialized delta vectors) and accumulated in f64.
+///   explicitly-materialized delta vectors) and accumulated in
+///   lane-striped f64 ([`dot_lanes`] per block).
 ///
 /// Replaces the old per-round `O(K·N)` delta clones: scratch is `O(K)`
 /// blocks and the Gram matrix is `O(K²)`, independent of N.
@@ -189,28 +309,37 @@ pub fn streaming_aggregate(
         // result stays bit-identical to `weighted_mean_into`) → mean + pg.
         let acc = &mut scratch.acc[..b];
         weighted_mean_block(rows, weights, total, lo, acc);
-        for i in 0..b {
-            let m = acc[i] as f32;
-            mean_out[lo + i] = m;
-            pg_out[lo + i] = global[lo + i] - m;
-        }
+        emit_mean_pg(
+            acc,
+            &global[lo..lo + b],
+            &mut mean_out[lo..lo + b],
+            &mut pg_out[lo..lo + b],
+        );
         // Per-client delta blocks (f32 subtraction, as the materialized
         // deltas were) and the upper-triangle Gram contribution.
         for (c, row) in rows.iter().enumerate() {
             let d = &mut scratch.deltas[c * AGG_BLOCK..c * AGG_BLOCK + b];
-            for i in 0..b {
-                d[i] = row[lo + i] - mean_out[lo + i];
+            let m = &mean_out[lo..lo + b];
+            let r = &row[lo..lo + b];
+            let mut dc = d.chunks_exact_mut(LANES);
+            let mut rc = r.chunks_exact(LANES);
+            let mut mc = m.chunks_exact(LANES);
+            for ((db, rb), mb) in (&mut dc).zip(&mut rc).zip(&mut mc) {
+                for l in 0..LANES {
+                    db[l] = rb[l] - mb[l];
+                }
+            }
+            for ((dv, &rv), &mv) in
+                dc.into_remainder().iter_mut().zip(rc.remainder()).zip(mc.remainder())
+            {
+                *dv = rv - mv;
             }
         }
         for i in 0..k {
             let di = &scratch.deltas[i * AGG_BLOCK..i * AGG_BLOCK + b];
             for j in i..k {
                 let dj = &scratch.deltas[j * AGG_BLOCK..j * AGG_BLOCK + b];
-                let mut dot = 0.0f64;
-                for (&x, &y) in di.iter().zip(dj) {
-                    dot += x as f64 * y as f64;
-                }
-                gram[i * k + j] += dot;
+                gram[i * k + j] += dot_lanes(di, dj);
             }
         }
         lo += b;
@@ -223,11 +352,62 @@ pub fn streaming_aggregate(
     AggStats { k, gram }
 }
 
+/// The Gram-free fold: one blocked pass producing only the weighted mean
+/// and the pseudo-gradient. Bit-identical to `weighted_mean_into` followed
+/// by `sub_into(global, mean)` (it runs the same `weighted_mean_block` /
+/// `emit_mean_pg` kernels as `streaming_aggregate`), but skips the
+/// O(K²·N) delta Gram pass — the right entry point for fleets of hundreds
+/// to thousands of clients where pairwise cosines are not consumed.
+/// `bench_aggregate`'s 1k-client × 1M-param acceptance ladder prices this
+/// path against [`reference::weighted_mean_into`].
+pub fn streaming_fold(
+    rows: &[&[f32]],
+    weights: &[f64],
+    global: &[f32],
+    mean_out: &mut [f32],
+    pg_out: &mut [f32],
+    scratch: &mut AggScratch,
+) {
+    let k = rows.len();
+    assert_eq!(k, weights.len());
+    assert!(k > 0, "streaming_fold needs at least one row");
+    let n = global.len();
+    assert_eq!(mean_out.len(), n);
+    assert_eq!(pg_out.len(), n);
+    let total: f64 = weights.iter().sum();
+    assert!(total > 0.0, "weights must sum to a positive value");
+    for row in rows {
+        debug_assert_eq!(row.len(), n);
+    }
+    scratch.ensure_acc();
+    let mut lo = 0;
+    while lo < n {
+        let b = AGG_BLOCK.min(n - lo);
+        let acc = &mut scratch.acc[..b];
+        weighted_mean_block(rows, weights, total, lo, acc);
+        emit_mean_pg(
+            acc,
+            &global[lo..lo + b],
+            &mut mean_out[lo..lo + b],
+            &mut pg_out[lo..lo + b],
+        );
+        lo += b;
+    }
+}
+
 /// `out = a - b` (pseudo-gradient: Δ = θ_global − θ_client).
 pub fn sub_into(a: &[f32], b: &[f32], out: &mut [f32]) {
     debug_assert_eq!(a.len(), b.len());
     debug_assert_eq!(a.len(), out.len());
-    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for ((ob, ab), bb) in (&mut oc).zip(&mut ac).zip(&mut bc) {
+        for l in 0..LANES {
+            ob[l] = ab[l] - bb[l];
+        }
+    }
+    for ((o, &x), &y) in oc.into_remainder().iter_mut().zip(ac.remainder()).zip(bc.remainder()) {
         *o = x - y;
     }
 }
@@ -235,7 +415,14 @@ pub fn sub_into(a: &[f32], b: &[f32], out: &mut [f32]) {
 /// `y += alpha * x`.
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yv, &xv) in y.iter_mut().zip(x) {
+    let mut yc = y.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (yb, xb) in (&mut yc).zip(&mut xc) {
+        for l in 0..LANES {
+            yb[l] += alpha * xb[l];
+        }
+    }
+    for (yv, &xv) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
         *yv += alpha * xv;
     }
 }
@@ -244,6 +431,105 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
 pub fn scale(alpha: f32, y: &mut [f32]) {
     for yv in y.iter_mut() {
         *yv *= alpha;
+    }
+}
+
+pub mod reference {
+    //! Naive scalar reference kernels: the pre-vectorization semantics, one
+    //! element at a time, audit-by-eye simple. Retained so the props_perf
+    //! suite can pin the chunked kernels' bit-exactness contract against an
+    //! independent implementation, and so `bench_aggregate` can price the
+    //! vectorization win. Never called on a hot path.
+
+    use super::AggStats;
+
+    /// Scalar weighted mean: per element, a whole-vector f64 accumulator
+    /// over rows in order. The chunked [`super::weighted_mean_into`] must be
+    /// bit-identical to this.
+    pub fn weighted_mean_into(rows: &[&[f32]], weights: &[f64], out: &mut [f32]) {
+        assert_eq!(rows.len(), weights.len());
+        assert!(!rows.is_empty());
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "weights must sum to a positive value");
+        for row in rows {
+            debug_assert_eq!(row.len(), out.len());
+        }
+        for (i, o) in out.iter_mut().enumerate() {
+            let mut acc = 0.0f64;
+            for (row, &w) in rows.iter().zip(weights) {
+                acc += (w / total) * row[i] as f64;
+            }
+            *o = acc as f32;
+        }
+    }
+
+    /// Scalar unweighted mean (f32 accumulation over rows, one f64 scale at
+    /// the end — the historical `mean_into` semantics).
+    pub fn mean_into(rows: &[&[f32]], out: &mut [f32]) {
+        assert!(!rows.is_empty());
+        let inv = 1.0 / rows.len() as f64;
+        for (i, o) in out.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for row in rows {
+                acc += row[i];
+            }
+            *o = (acc as f64 * inv) as f32;
+        }
+    }
+
+    /// Scalar `out = a - b`.
+    pub fn sub_into(a: &[f32], b: &[f32], out: &mut [f32]) {
+        for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+            *o = x - y;
+        }
+    }
+
+    /// Scalar `y += alpha * x`.
+    pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        for (yv, &xv) in y.iter_mut().zip(x) {
+            *yv += alpha * xv;
+        }
+    }
+
+    /// Scalar sequential dot in f64.
+    pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+        a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+    }
+
+    /// Scalar sequential L2 norm.
+    pub fn l2_norm(x: &[f32]) -> f64 {
+        dot(x, x).sqrt()
+    }
+
+    /// Scalar streaming aggregate: materializes every delta vector and uses
+    /// sequential dots for the Gram matrix. `mean_out`/`pg_out` must be
+    /// bit-identical to [`super::streaming_aggregate`]; the Gram entries
+    /// agree to reduction tolerance (the lane-striped sum regroups them).
+    pub fn streaming_aggregate(
+        rows: &[&[f32]],
+        weights: &[f64],
+        global: &[f32],
+        mean_out: &mut [f32],
+        pg_out: &mut [f32],
+    ) -> AggStats {
+        let k = rows.len();
+        weighted_mean_into(rows, weights, mean_out);
+        sub_into(global, mean_out, pg_out);
+        let deltas: Vec<Vec<f32>> = rows
+            .iter()
+            .map(|r| {
+                let mut d = vec![0.0f32; mean_out.len()];
+                sub_into(r, mean_out, &mut d);
+                d
+            })
+            .collect();
+        let mut gram = vec![0.0f64; k * k];
+        for i in 0..k {
+            for j in 0..k {
+                gram[i * k + j] = dot(&deltas[i], &deltas[j]);
+            }
+        }
+        AggStats { k, gram }
     }
 }
 
@@ -337,6 +623,77 @@ mod tests {
         }
     }
 
+    // Deterministic awkward lengths: lane remainders, block remainders,
+    // degenerate sizes. The randomized version lives in tests/props_perf.rs.
+    fn awkward_lengths() -> Vec<usize> {
+        vec![
+            0,
+            1,
+            LANES - 1,
+            LANES,
+            LANES + 1,
+            3 * LANES + 5,
+            AGG_BLOCK - 1,
+            AGG_BLOCK,
+            AGG_BLOCK + 1,
+            AGG_BLOCK + LANES + 3,
+        ]
+    }
+
+    fn test_rows(n: usize, k: usize) -> Vec<Vec<f32>> {
+        (0..k)
+            .map(|c| (0..n).map(|i| ((i * (c + 2)) % 23) as f32 * 0.17 - 1.3).collect())
+            .collect()
+    }
+
+    #[test]
+    fn chunked_kernels_match_scalar_reference_bitwise() {
+        for n in awkward_lengths() {
+            let rowsv = test_rows(n, 4);
+            let rows: Vec<&[f32]> = rowsv.iter().map(|v| v.as_slice()).collect();
+            let weights = [1.0, 0.25, 3.5, 2.0];
+
+            let mut got = vec![0.0f32; n];
+            let mut want = vec![0.0f32; n];
+            weighted_mean_into(&rows, &weights, &mut got);
+            reference::weighted_mean_into(&rows, &weights, &mut want);
+            assert_eq!(got, want, "weighted_mean n={n}");
+
+            mean_into(&rows, &mut got);
+            reference::mean_into(&rows, &mut want);
+            assert_eq!(got, want, "mean n={n}");
+
+            sub_into(&rowsv[0], &rowsv[1], &mut got);
+            reference::sub_into(&rowsv[0], &rowsv[1], &mut want);
+            assert_eq!(got, want, "sub n={n}");
+
+            got.copy_from_slice(&rowsv[2]);
+            want.copy_from_slice(&rowsv[2]);
+            axpy(0.75, &rowsv[3], &mut got);
+            reference::axpy(0.75, &rowsv[3], &mut want);
+            assert_eq!(got, want, "axpy n={n}");
+        }
+    }
+
+    #[test]
+    fn reductions_match_scalar_reference_to_tolerance() {
+        for n in awkward_lengths() {
+            let rowsv = test_rows(n, 2);
+            let got = l2_norm(&rowsv[0]);
+            let want = reference::l2_norm(&rowsv[0]);
+            assert!(
+                (got - want).abs() <= 1e-9 * want.abs().max(1.0),
+                "l2_norm n={n}: {got} vs {want}"
+            );
+            let gd = dot_lanes(&rowsv[0], &rowsv[1]);
+            let wd = reference::dot(&rowsv[0], &rowsv[1]);
+            assert!(
+                (gd - wd).abs() <= 1e-9 * wd.abs().max(1.0),
+                "dot n={n}: {gd} vs {wd}"
+            );
+        }
+    }
+
     #[test]
     fn streaming_aggregate_matches_composed_path() {
         let n = AGG_BLOCK + 100;
@@ -407,5 +764,37 @@ mod tests {
         assert_eq!(pg, [1.0, 0.0, -1.0]);
         // Single client: delta from the mean is identically zero.
         assert_eq!(stats.delta_norm(0), 0.0);
+    }
+
+    #[test]
+    fn streaming_fold_matches_composed_path_bitwise() {
+        for n in awkward_lengths() {
+            let rowsv = test_rows(n, 5);
+            let rows: Vec<&[f32]> = rowsv.iter().map(|v| v.as_slice()).collect();
+            let weights = [2.0, 1.0, 1.0, 0.5, 4.0];
+            let global: Vec<f32> = (0..n).map(|i| (i % 7) as f32 * 0.3 - 0.8).collect();
+
+            let mut ref_mean = vec![0.0f32; n];
+            weighted_mean_into(&rows, &weights, &mut ref_mean);
+            let mut ref_pg = vec![0.0f32; n];
+            sub_into(&global, &ref_mean, &mut ref_pg);
+
+            let mut mean = vec![0.0f32; n];
+            let mut pg = vec![0.0f32; n];
+            let mut scratch = AggScratch::new();
+            streaming_fold(&rows, &weights, &global, &mut mean, &mut pg, &mut scratch);
+            assert_eq!(mean, ref_mean, "fold mean n={n}");
+            assert_eq!(pg, ref_pg, "fold pg n={n}");
+
+            // And against streaming_aggregate's outputs (shared kernels).
+            let mut mean2 = vec![0.0f32; n];
+            let mut pg2 = vec![0.0f32; n];
+            let stats = streaming_aggregate(
+                &rows, &weights, &global, &mut mean2, &mut pg2, &mut scratch,
+            );
+            assert_eq!(mean, mean2);
+            assert_eq!(pg, pg2);
+            assert_eq!(stats.k, 5);
+        }
     }
 }

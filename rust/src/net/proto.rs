@@ -390,9 +390,11 @@ impl Msg {
         link::encode_bytes(self.kind(), &e.buf, compress && big)
     }
 
-    /// Decode a Photon-Link frame into a control message.
+    /// Decode a Photon-Link frame into a control message. Borrowing decode:
+    /// for uncompressed frames the field reader walks the frame's own body
+    /// slice (`link::decode_bytes_ref`), so no per-frame payload copy.
     pub fn decode(frame: &[u8]) -> Result<Msg> {
-        let (kind, body) = link::decode_bytes(frame)?;
+        let (kind, body) = link::decode_bytes_ref(frame)?;
         let mut d = Dec::new(&body);
         let msg = match kind {
             MsgKind::Join => Msg::Join(Join {

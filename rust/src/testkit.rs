@@ -340,3 +340,89 @@ mod tests {
         assert!(v.iter().all(|&x| (-2.0..=2.0).contains(&x)));
     }
 }
+
+/// Allocation counting for hot-path "does not allocate" assertions.
+///
+/// [`alloc_counter::CountingAlloc`] is a [`std::alloc::System`] wrapper that
+/// counts allocations (and reallocations) per thread. It does nothing until
+/// a test binary installs it:
+///
+/// ```ignore
+/// #[global_allocator]
+/// static ALLOC: photon::testkit::alloc_counter::CountingAlloc =
+///     photon::testkit::alloc_counter::CountingAlloc;
+/// ```
+///
+/// after which [`alloc_counter::count`] brackets a closure and reports how
+/// many heap allocations it performed on the current thread. The zero-copy
+/// frame tests in `rust/tests/props_perf.rs` use this to prove the codec
+/// `none` decode path borrows instead of copying. Deallocations are not
+/// counted — freeing is allowed on a "no new allocations" hot path.
+pub mod alloc_counter {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::cell::Cell;
+
+    thread_local! {
+        // `const` init: no lazy-init allocation, no TLS destructor — safe
+        // to touch from inside the global allocator itself.
+        static ALLOCS: Cell<u64> = const { Cell::new(0) };
+    }
+
+    /// Counting wrapper around the system allocator. Zero-sized; install
+    /// with `#[global_allocator]` in the test binary that needs counts.
+    pub struct CountingAlloc;
+
+    // SAFETY: pure delegation to `System`; the per-thread counter bump
+    // cannot allocate (const-initialised TLS) or unwind.
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            ALLOCS.with(|c| c.set(c.get() + 1));
+            unsafe { System.alloc(layout) }
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            unsafe { System.dealloc(ptr, layout) }
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            // A grow/shrink is a fresh acquisition for counting purposes.
+            ALLOCS.with(|c| c.set(c.get() + 1));
+            unsafe { System.realloc(ptr, layout, new_size) }
+        }
+
+        // alloc_zeroed is NOT overridden: the default forwards to `alloc`,
+        // so zeroed allocations (`vec![0u8; n]`) are counted too.
+    }
+
+    /// Total allocations observed on this thread since it started (always 0
+    /// unless [`CountingAlloc`] is the installed global allocator).
+    pub fn allocs_on_this_thread() -> u64 {
+        ALLOCS.with(|c| c.get())
+    }
+
+    /// Run `f` and return its result plus the number of heap allocations it
+    /// performed on this thread.
+    pub fn count<T>(f: impl FnOnce() -> T) -> (T, u64) {
+        let before = allocs_on_this_thread();
+        let out = f();
+        (out, allocs_on_this_thread() - before)
+    }
+}
+
+#[cfg(test)]
+mod alloc_counter_tests {
+    use super::alloc_counter;
+
+    // The lib test binary does not install CountingAlloc, so counts stay 0;
+    // the real non-zero assertions live in rust/tests/props_perf.rs, which
+    // does install it. Here we pin the API contract that holds either way.
+    #[test]
+    fn count_is_monotonic_and_count_never_goes_negative() {
+        let a = alloc_counter::allocs_on_this_thread();
+        let (v, n) = alloc_counter::count(|| vec![1u8, 2, 3]);
+        assert_eq!(v, vec![1, 2, 3]);
+        let b = alloc_counter::allocs_on_this_thread();
+        assert!(b >= a);
+        assert_eq!(n, b - a);
+    }
+}

@@ -1,0 +1,137 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_*.json perf snapshots and flag regressions.
+
+Usage:
+    tools/bench_compare.py OLD.json NEW.json [--threshold 0.15] [--strict]
+    tools/bench_compare.py --self-test
+
+Each snapshot is the array benchkit's Recorder emits: records of
+``{bench, iters, mean_ns, p50_ns, p95_ns, units_per_sec, git_rev}``.
+Records are matched by ``bench`` name; the regression metric is the
+relative change in ``mean_ns`` (new/old - 1), flagged when it exceeds
+``--threshold`` (default 0.15, i.e. >15% slower). Benches present on only
+one side are reported but never flagged — renames and new benches are not
+regressions.
+
+Exit status: 0 unless ``--strict`` is given and at least one regression was
+flagged (CI runs non-strict against the committed baselines, since shared
+runners are noisy; the trajectory is the artifact, the gate is advisory).
+"""
+
+import argparse
+import json
+import sys
+
+SCHEMA_KEYS = ("bench", "iters", "mean_ns", "p50_ns", "p95_ns", "units_per_sec", "git_rev")
+
+
+def load(path):
+    with open(path) as f:
+        data = json.load(f)
+    return index(data, path)
+
+
+def index(data, label):
+    if not isinstance(data, list) or not data:
+        raise SystemExit(f"{label}: snapshot must be a non-empty JSON array")
+    out = {}
+    for i, rec in enumerate(data):
+        missing = [k for k in SCHEMA_KEYS if k not in rec]
+        if missing:
+            raise SystemExit(f"{label}: record {i} missing {missing}")
+        name = rec["bench"]
+        if name in out:
+            raise SystemExit(f"{label}: duplicate bench name {name!r}")
+        if not (isinstance(rec["mean_ns"], (int, float)) and rec["mean_ns"] > 0):
+            raise SystemExit(f"{label}: record {name!r} has non-positive mean_ns")
+        out[name] = rec
+    return out
+
+
+def compare(old, new, threshold):
+    """Return (report_lines, regressions) comparing two indexed snapshots."""
+    lines = []
+    regressions = []
+    for name in sorted(set(old) | set(new)):
+        if name not in new:
+            lines.append(f"  {name:<52} only in OLD (removed?)")
+            continue
+        if name not in old:
+            lines.append(f"  {name:<52} only in NEW (added)")
+            continue
+        o, n = old[name]["mean_ns"], new[name]["mean_ns"]
+        delta = n / o - 1.0
+        mark = ""
+        if delta > threshold:
+            mark = "  << REGRESSION"
+            regressions.append((name, delta))
+        elif delta < -threshold:
+            mark = "  (improved)"
+        lines.append(
+            f"  {name:<52} {o:>14.0f}ns -> {n:>14.0f}ns  {delta:+7.1%}{mark}"
+        )
+    return lines, regressions
+
+
+def self_test():
+    """Built-in check: a synthetic 2x regression must be flagged and an
+    identical pair must pass clean."""
+    base = [
+        {"bench": "fold/1M", "iters": 10, "mean_ns": 1000.0, "p50_ns": 990.0,
+         "p95_ns": 1100.0, "units_per_sec": 1e9, "git_rev": "aaaa"},
+        {"bench": "codec/q8", "iters": 10, "mean_ns": 500.0, "p50_ns": 490.0,
+         "p95_ns": 600.0, "units_per_sec": 2e9, "git_rev": "aaaa"},
+    ]
+    slowed = json.loads(json.dumps(base))
+    slowed[0]["mean_ns"] = 2000.0  # 2x slower: must be flagged at 15%
+
+    _, regs = compare(index(base, "base"), index(slowed, "slowed"), 0.15)
+    assert len(regs) == 1 and regs[0][0] == "fold/1M", f"2x regression not flagged: {regs}"
+    assert abs(regs[0][1] - 1.0) < 1e-9, f"wrong delta: {regs[0][1]}"
+
+    _, regs = compare(index(base, "base"), index(base, "base"), 0.15)
+    assert regs == [], f"identical snapshots flagged: {regs}"
+
+    # A bench present on only one side is reported, not flagged.
+    _, regs = compare(index(base, "base"), index(base[:1], "partial"), 0.15)
+    assert regs == [], f"missing bench flagged as regression: {regs}"
+
+    print("bench_compare self-test: ok")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("old", nargs="?", help="baseline BENCH_*.json")
+    ap.add_argument("new", nargs="?", help="candidate BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="relative mean_ns increase to flag (default 0.15)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 if any regression is flagged")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run the built-in synthetic-regression check and exit")
+    args = ap.parse_args()
+
+    if args.self_test:
+        self_test()
+        return
+
+    if not args.old or not args.new:
+        ap.error("OLD and NEW snapshot paths are required (or use --self-test)")
+
+    old, new = load(args.old), load(args.new)
+    lines, regressions = compare(old, new, args.threshold)
+    print(f"bench_compare: {args.old} -> {args.new} (threshold {args.threshold:.0%})")
+    for line in lines:
+        print(line)
+    if regressions:
+        print(f"\n{len(regressions)} regression(s) over {args.threshold:.0%}:")
+        for name, delta in regressions:
+            print(f"  {name}: {delta:+.1%}")
+        if args.strict:
+            sys.exit(1)
+    else:
+        print("\nno regressions flagged")
+
+
+if __name__ == "__main__":
+    main()

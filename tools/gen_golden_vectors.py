@@ -1,0 +1,177 @@
+#!/usr/bin/env python3
+"""Regenerate the codec golden vectors in rust/tests/fixtures/codec/.
+
+An independent, from-scratch reimplementation of the Rust side's
+xoshiro256** RNG (rust/src/util/rng.rs), `testkit::rand_vec`, and the
+q8/q4 stochastic-rounding encoders (rust/src/compress/quant.rs), emitting
+the exact wire bodies. `rust/tests/props_perf.rs` pins the Rust encoders
+byte-for-byte against these files, so a change to the draw schedule, scale
+arithmetic, or body layout — accidental or deliberate — fails loudly in
+two implementations at once.
+
+f32 semantics are emulated with `struct.pack('<f')` round-trips: every
+Rust f32 operation here is a single binary op computed in f64 and then
+rounded, which is exact (f64 carries more than 2x24+2 significand bits,
+so no double-rounding error is possible).
+
+Usage: python3 tools/gen_golden_vectors.py   (from the repo root; writes
+fixture .bin files and prints a manifest — commit both sides together.)
+"""
+
+import os
+import struct
+
+MASK = (1 << 64) - 1
+CODEC_Q8, CODEC_Q4 = 2, 3
+FIXTURE_DIR = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "fixtures", "codec")
+
+
+def f32(x):
+    """Round a Python float (f64) to the nearest f32, returned as f64."""
+    return struct.unpack("<f", struct.pack("<f", x))[0]
+
+
+def splitmix64(state):
+    state = (state + 0x9E3779B97F4A7C15) & MASK
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return state, z ^ (z >> 31)
+
+
+def rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    """xoshiro256** seeded via SplitMix64 — mirrors rust/src/util/rng.rs."""
+
+    def __init__(self, seed):
+        sm = seed & MASK
+        s = []
+        for _ in range(4):
+            sm, v = splitmix64(sm)
+            s.append(v)
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        r = (rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = rotl(s[3], 45)
+        return r
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def f32(self):
+        return f32(self.f64())
+
+
+def rand_vec(rng, n, scale):
+    """testkit::rand_vec — (rng.f32() * 2.0 - 1.0) * scale, each op in f32.
+    `scale` is first rounded to f32, matching the Rust call site's literal."""
+    s = f32(scale)
+    return [f32(f32(f32(rng.f32() * 2.0) - 1.0) * s) for _ in range(n)]
+
+
+def block_scales(delta, block, levels):
+    scales = []
+    for lo in range(0, len(delta), block):
+        mx = 0.0
+        for x in delta[lo:lo + block]:
+            mx = max(mx, abs(x))  # f32 abs/max are exact — no rounding
+        scales.append(f32(mx / levels))
+    return scales
+
+
+def quantize(x, scale, rng):
+    """One stochastic-rounding step (caller clamps). x, scale are exact f32
+    values held as f64, so the division and floor match Rust bit-for-bit."""
+    t = x / scale
+    f = t // 1.0  # == floor for finite t
+    q = int(f)
+    if rng.f64() < t - f:
+        q += 1
+    return q
+
+
+def header(codec_id, block, n):
+    return bytes([codec_id]) + struct.pack("<I", block) + struct.pack("<Q", n)
+
+
+def encode_q8(delta, block, seed):
+    block = max(block, 1)
+    scales = block_scales(delta, block, 127.0)
+    out = bytearray(header(CODEC_Q8, block, len(delta)))
+    for s in scales:
+        out += struct.pack("<f", s)
+    rng = Rng(seed)
+    for bi, s in enumerate(scales):
+        ch = delta[bi * block:(bi + 1) * block]
+        if s <= 0.0:
+            out += bytes(len(ch))  # zero block: q = 0, no rounding draws
+            continue
+        for x in ch:
+            q = max(-127, min(127, quantize(x, s, rng)))
+            out.append(q & 0xFF)
+    return bytes(out)
+
+
+def encode_q4(delta, block, seed):
+    block = max(block, 1)
+    scales = block_scales(delta, block, 7.0)
+    out = bytearray(header(CODEC_Q4, block, len(delta)))
+    for s in scales:
+        out += struct.pack("<f", s)
+    rng = Rng(seed)
+    pending = None  # low nibble threads across block boundaries
+    for bi, s in enumerate(scales):
+        ch = delta[bi * block:(bi + 1) * block]
+        for x in ch:
+            if s <= 0.0:
+                nib = 8  # q = 0, no draw
+            else:
+                nib = max(-7, min(7, quantize(x, s, rng))) + 8
+            if pending is None:
+                pending = nib
+            else:
+                out.append(pending | (nib << 4))
+                pending = None
+    if pending is not None:
+        out.append(pending | (8 << 4))  # odd n: pad nibble 8
+    return bytes(out)
+
+
+# (name, codec, n, block, rand_vec scale, rand_vec seed, encode seed).
+# Shapes cover lane remainders, a ragged final block, and odd n (q4 pad);
+# props_perf.rs regenerates each delta with the same (seed, n, scale) and
+# must reproduce these bytes through the public UpdateCodec API.
+CASES = [
+    ("q8_n96_b16", "q8", 96, 16, 0.05, 1001, 42),
+    ("q8_n101_b16", "q8", 101, 16, 0.05, 1002, 43),
+    ("q4_n64_b8", "q4", 64, 8, 0.05, 1003, 44),
+    ("q4_n33_b8", "q4", 33, 8, 0.05, 1004, 45),
+]
+
+
+def main():
+    os.makedirs(FIXTURE_DIR, exist_ok=True)
+    for name, codec, n, block, scale, vec_seed, enc_seed in CASES:
+        delta = rand_vec(Rng(vec_seed), n, scale)
+        body = (encode_q8 if codec == "q8" else encode_q4)(delta, block, enc_seed)
+        path = os.path.join(FIXTURE_DIR, f"{name}.bin")
+        with open(path, "wb") as f:
+            f.write(body)
+        print(f"{name}: n={n} block={block} vec_seed={vec_seed} "
+              f"enc_seed={enc_seed} -> {len(body)} bytes")
+    print(f"fixtures written to {os.path.normpath(FIXTURE_DIR)}")
+
+
+if __name__ == "__main__":
+    main()
