@@ -34,6 +34,7 @@ const DETERMINISM_SCOPE: &[&str] = &[
     "model/",
     "net/",
     "netsim/",
+    "obs/",
     "optim/",
     "sim/",
 ];
@@ -46,6 +47,10 @@ const WALL_CLOCK_FILES: &[&str] = &[
     "net/server.rs",
     "net/harness.rs",
     "net/worker.rs",
+    // the observability plane's ONE sanctioned wall-clock read: event
+    // timestamps (`ts_us`) are display metadata, never an ordering key —
+    // every other obs/ file must stay clock-free so replay is pure.
+    "obs/clock.rs",
     "benchkit.rs",
     "main.rs",
     "testkit.rs",
@@ -435,6 +440,11 @@ mod tests {
         assert!(wall_clock_allowed("net/server.rs"));
         assert!(wall_clock_allowed("util/mod.rs"));
         assert!(!wall_clock_allowed("coordinator/federation.rs"));
+        // obs/: clock.rs is the sole sanctioned wall-clock site; the rest
+        // of the plane is determinism-scoped and clock-free.
+        assert!(wall_clock_allowed("obs/clock.rs"));
+        assert!(!wall_clock_allowed("obs/event.rs"));
+        assert!(in_determinism_scope("obs/view.rs"));
         assert!(in_wire_scope("link/mod.rs"));
         assert!(!in_wire_scope("model/mod.rs"));
     }

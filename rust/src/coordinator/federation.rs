@@ -26,6 +26,7 @@ use crate::link;
 use crate::metrics::{mean_pairwise_cosine_from_gram, mean_std, MetricsLog, RoundRecord};
 use crate::model::init::init_params;
 use crate::model::vecmath::{l2_norm, streaming_aggregate, AggScratch};
+use crate::obs::{Event as ObsEvent, EventSink};
 use crate::optim::outer::OuterOpt;
 use crate::runtime::{DispatchPolicy, ModelRuntime, Runtime};
 
@@ -45,6 +46,11 @@ pub struct Federation {
     pub next_round: usize,
     /// Where to drop `ckpt_round_<n>.bin` (None = no checkpointing).
     pub ckpt_dir: Option<PathBuf>,
+    /// Optional observability event sink (`obs` plane). Emission is
+    /// fire-and-forget and never feeds back into round math; the
+    /// deployment plane shares this sink so in-process and TCP runs of
+    /// one config produce structurally comparable streams.
+    pub obs: Option<EventSink>,
     started: Instant,
     elapsed_offset: f64,
     // Scratch buffers reused across rounds (aggregation hot path).
@@ -177,6 +183,7 @@ impl Federation {
             seq_step: 0,
             next_round: 0,
             ckpt_dir: None,
+            obs: None,
             // lint:allow(nondet-time): wall_secs reporting only; parity ignores it
             started: Instant::now(),
             elapsed_offset: 0.0,
@@ -189,6 +196,27 @@ impl Federation {
     /// Server-side validation perplexity of the current global model.
     pub fn eval_global(&self) -> Result<(f64, f64)> {
         self.model.eval_nll(&self.global, &self.val_batches)
+    }
+
+    fn emit(&self, ev: ObsEvent) {
+        if let Some(sink) = &self.obs {
+            sink.emit(ev);
+        }
+    }
+
+    /// Run-start marker for the whole-run drivers (`run`, `run_trace`).
+    /// In-process runs have no serve session id; the config seed (hex,
+    /// like the server's session token) identifies the stream.
+    fn emit_run_start(&self) {
+        if self.obs.is_none() {
+            return;
+        }
+        self.emit(ObsEvent::ServerStart {
+            session: format!("{:#x}", self.cfg.seed),
+            rounds: self.cfg.rounds as u64,
+            n_clients: self.cfg.n_clients as u64,
+            clients_per_round: self.cfg.clients_per_round as u64,
+        });
     }
 
     /// Plan the next round without executing it: replay the sampler and
@@ -237,6 +265,19 @@ impl Federation {
         let t0 = Instant::now();
         let d = self.plan_round();
         let round = d.round;
+        if self.obs.is_some() {
+            // In-process runs have no worker slots; lane 0 keeps the
+            // stream structurally comparable to a TCP run's.
+            for &(c, _) in &d.runnable {
+                if !cut.contains(&c) {
+                    self.emit(ObsEvent::LeaseGrant {
+                        round: round as u64,
+                        client: c as u64,
+                        worker: 0,
+                    });
+                }
+            }
+        }
 
         let schedule = self.cfg.schedule;
         let lr_at = move |t: u64| schedule.lr(t);
@@ -302,6 +343,26 @@ impl Federation {
                 u.wire_bytes = transit.wire_bytes;
             }
         }
+        if self.obs.is_some() {
+            for u in &updates {
+                self.emit(ObsEvent::LeaseFold {
+                    round: round as u64,
+                    client: u.client_id as u64,
+                    worker: 0,
+                });
+            }
+            let mut realized: Vec<u64> = d
+                .runnable
+                .iter()
+                .map(|&(c, _)| c)
+                .filter(|c| cut.contains(c))
+                .map(|c| c as u64)
+                .collect();
+            realized.sort_unstable();
+            if !realized.is_empty() {
+                self.emit(ObsEvent::Cut { round: round as u64, clients: realized });
+            }
+        }
         self.commit_round(round, updates, t0)
     }
 
@@ -331,12 +392,14 @@ impl Federation {
     /// — the ISSUE 5 acceptance invariant, exercised by
     /// `tests/integration_chaos.rs` and the `photon exp chaos` sweep.
     pub fn run_trace(&mut self, trace: &crate::chaos::Trace) -> Result<Vec<RoundRecord>> {
+        self.emit_run_start();
         while self.next_round < self.cfg.rounds {
             match trace.for_round(self.next_round) {
                 Some(t) => self.run_round_trace(t)?,
                 None => self.run_round()?,
             };
         }
+        self.emit(ObsEvent::Shutdown { rounds: self.next_round as u64 });
         Ok(self.log.rounds.clone())
     }
 
@@ -381,6 +444,7 @@ impl Federation {
                 wall_secs: t0.elapsed().as_secs_f64(),
                 ..Default::default()
             };
+            self.emit_commit(&rec);
             self.log.push(rec.clone());
             self.write_round_checkpoint()?;
             return Ok(rec);
@@ -455,9 +519,23 @@ impl Federation {
             },
             wall_secs: t0.elapsed().as_secs_f64(),
         };
+        self.emit_commit(&rec);
         self.log.push(rec.clone());
         self.write_round_checkpoint()?;
         Ok(rec)
+    }
+
+    /// The one `RoundCommit` emission site — every commit path (clean,
+    /// cut, all-dropped; in-process or deployment plane) funnels through
+    /// `commit_round`, so TCP and in-process streams agree here.
+    fn emit_commit(&self, rec: &RoundRecord) {
+        self.emit(ObsEvent::RoundCommit {
+            round: rec.round as u64,
+            participated: rec.participated as u64,
+            nll: rec.server_nll,
+            comm_bytes_wire: rec.comm_bytes_wire,
+            wall_us: (rec.wall_secs * 1e6) as u64,
+        });
     }
 
     /// Drop `ckpt_round_<next_round>.bin` if checkpointing is configured.
@@ -473,9 +551,11 @@ impl Federation {
 
     /// Run all configured rounds (resuming from `next_round`).
     pub fn run(&mut self) -> Result<Vec<RoundRecord>> {
+        self.emit_run_start();
         while self.next_round < self.cfg.rounds {
             self.run_round()?;
         }
+        self.emit(ObsEvent::Shutdown { rounds: self.next_round as u64 });
         Ok(self.log.rounds.clone())
     }
 

@@ -16,7 +16,10 @@
 //!   real Aggregator/worker federation with straggler cuts, worker
 //!   rejoin, client-lease migration, and restart recovery), the seeded
 //!   chaos-injection plane ([`chaos`]: deterministic fault schedules,
-//!   realized-trace replay), checkpointing ([`ckpt`]), network cost modeling
+//!   realized-trace replay), the structured JSONL observability plane
+//!   ([`obs`]: typed event bus + `photon top` cockpit, with
+//!   `obs::to_trace` tying event logs back to replay parity),
+//!   checkpointing ([`ckpt`]), network cost modeling
 //!   ([`netsim`]), the event-driven wall-clock simulator ([`sim`]), and
 //!   the experiment harness ([`exp`]) that regenerates every table/figure
 //!   of the paper.
@@ -72,6 +75,7 @@ pub mod metrics;
 pub mod model;
 pub mod net;
 pub mod netsim;
+pub mod obs;
 pub mod optim;
 pub mod runtime;
 pub mod sim;

@@ -15,7 +15,8 @@
 //!              [--workers N|auto] [--parallel-dispatch]
 //!              [--codec none|deflate|q8[:block]|q4[:block]|topk[:permille]]
 //! photon serve [same training flags] [--bind 0.0.0.0:7070] [--min-workers K]
-//!              [--deadline-secs F] [--migrate] [--no-compress] [--codec q8]
+//!              [--deadline-secs F] [--stall-secs F] [--migrate]
+//!              [--no-compress] [--codec q8] [--event-log LOG]
 //!              run the Aggregator as a TCP service (deployment plane);
 //!              --migrate reassigns a dead/silent worker's unstarted
 //!              clients to live workers before the deadline cut
@@ -26,6 +27,13 @@
 //!              run one LLM Node worker against a remote Aggregator
 //! photon eval --config m350a               downstream ICL suite on a fresh init
 //! photon info [--config NAME]              artifact inventory
+//! photon top --follow LOG | --replay LOG [--until-seq N] [--stats]
+//!              terminal cockpit over a structured JSONL event log
+//!              (--event-log on serve/train/worker writes one); --replay
+//!              renders deterministically, --stats prints a summary
+//! photon evck FILE...
+//!              validate structured JSONL event logs against the obs
+//!              schema (consecutive seq, known kinds — docs/OBSERVABILITY.md)
 //! photon lint [--src DIR] [--explain RULE]
 //!              determinism & concurrency static analysis over rust/src
 //!              (nondet-map, nondet-time, nondet-rng, wire-panic,
@@ -58,6 +66,8 @@ const SPEC: Spec = Spec {
         "size", "taus", "policy", "deadline", "slowdown", "mfu",
         // deployment plane (serve / worker / exp distributed)
         "bind", "connect", "name", "deadline-secs", "min-workers", "fleet",
+        // observability plane (serve / train / worker / top / evck)
+        "stall-secs", "event-log", "follow", "replay", "until-seq",
         // update-codec plane (train / serve / exp comm|distributed|wallclock)
         "codec",
         // resilience plane (exp chaos)
@@ -71,11 +81,14 @@ const SPEC: Spec = Spec {
         // resilience plane (serve / exp chaos): mid-round client-lease
         // migration off a dead or silent worker (needs --deadline-secs)
         "migrate",
+        // observability plane (top): print the two-line summary instead
+        // of the full cockpit frame
+        "stats",
     ],
 };
 
 fn usage() -> &'static str {
-    "usage: photon <list|exp|train|serve|worker|eval|info|lint|benchck> [args]\n  try: photon list"
+    "usage: photon <list|exp|train|serve|worker|eval|info|top|evck|lint|benchck> [args]\n  try: photon list"
 }
 
 fn main() {
@@ -103,6 +116,8 @@ fn run(raw: Vec<String>) -> Result<()> {
         "worker" => cmd_worker(&args),
         "eval" => cmd_eval(&args),
         "info" => cmd_info(&args),
+        "top" => cmd_top(&args),
+        "evck" => cmd_evck(&args),
         "lint" => cmd_lint(&args),
         "benchck" => cmd_benchck(&args),
         "help" | "--help" => {
@@ -217,6 +232,20 @@ fn apply_ckpt_flags(args: &Args, fed: &mut Federation) -> Result<()> {
     Ok(())
 }
 
+/// Build the `--event-log` sink shared by `train`, `serve`, and `worker`:
+/// a structured JSONL event stream for `photon top` / `photon evck`.
+fn event_log_flag(args: &Args) -> Result<Option<photon::obs::EventSink>> {
+    match args.get("event-log") {
+        Some(p) => {
+            let path = std::path::Path::new(p);
+            let sink = photon::obs::EventSink::to_file(path)?;
+            println!("[obs] writing event log to {}", path.display());
+            Ok(Some(sink))
+        }
+        None => Ok(None),
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = train_config(args, "train")?;
     let model = cfg.model.clone();
@@ -224,6 +253,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         (cfg.n_clients, cfg.clients_per_round, cfg.rounds, cfg.local_steps);
     let mut fed = Federation::new(cfg)?;
     apply_ckpt_flags(args, &mut fed)?;
+    fed.obs = event_log_flag(args)?;
 
     let workers = match fed.cfg.exec.workers {
         0 => "auto".to_string(),
@@ -267,10 +297,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
         migrate: args.flag("migrate"),
         compress: !args.flag("no-compress"),
+        stall_secs: args.get_f64("stall-secs", 3600.0)?,
         ..ServeOpts::default()
     };
     let mut fed = Federation::new(cfg)?;
     apply_ckpt_flags(args, &mut fed)?;
+    fed.obs = event_log_flag(args)?;
     let mut server = Server::with_federation(fed, opts)?;
     println!(
         "[serve] aggregator for {model} listening on {} (waiting for {} workers; \
@@ -301,9 +333,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_worker(args: &Args) -> Result<()> {
     let addr = args.require("connect")?;
     let name = args.get_or("name", &format!("worker-{}", std::process::id()));
+    let obs = event_log_flag(args)?;
     let report = run_worker(
         addr,
-        WorkerOpts { name, verbose: true, ..WorkerOpts::default() },
+        WorkerOpts { name, obs, verbose: true, ..WorkerOpts::default() },
     )?;
     println!(
         "[worker] session over: slot {}, {} rounds served, {} updates pushed",
@@ -326,6 +359,84 @@ fn cmd_eval(args: &Args) -> Result<()> {
         let acc = photon::evalharness::task_accuracy(&m, &params, &corpus, f, n_items, 7)?;
         println!("  {:<24} {:.3}  (chance {:.3})", f.name, acc, 1.0 / f.n_options as f64);
     }
+    Ok(())
+}
+
+/// `photon top`: terminal cockpit over a structured JSONL event log
+/// (see docs/OBSERVABILITY.md). `--follow LOG` tails a live file and
+/// redraws until a `shutdown` event lands; `--replay LOG` reduces the log
+/// once (bounded by `--until-seq N`) and renders the final frame — a pure
+/// function of the bytes, so two replays of one log are byte-identical.
+/// `--stats` swaps the frame for a two-line grep-able summary.
+fn cmd_top(args: &Args) -> Result<()> {
+    use photon::obs;
+    if let Some(path) = args.get("replay") {
+        let until = args.get_u64("until-seq", u64::MAX)?;
+        let (records, skipped) = obs::read_log(std::path::Path::new(path))?;
+        let mut view = obs::ViewState::default();
+        for rec in &records {
+            if rec.seq > until {
+                break;
+            }
+            view.apply(rec);
+        }
+        if skipped > 0 {
+            eprintln!("[top] {skipped} unparsable line(s) skipped");
+        }
+        if args.flag("stats") {
+            print!("{}", obs::render_stats(&view));
+        } else {
+            print!("{}", obs::render_frame(&view, obs::Mode::Replay));
+        }
+        return Ok(());
+    }
+    let path = args.require("follow").map_err(|_| {
+        anyhow::anyhow!("top needs --follow LOG or --replay LOG (a JSONL event log)")
+    })?;
+    let mut tail = obs::Tail::open(std::path::Path::new(path))?;
+    let mut view = obs::ViewState::default();
+    loop {
+        for rec in &tail.poll()? {
+            view.apply(rec);
+        }
+        if args.flag("stats") {
+            print!("{}", obs::render_stats(&view));
+            return Ok(());
+        }
+        print!("{}{}", obs::CLEAR, obs::render_frame(&view, obs::Mode::Live));
+        use std::io::Write;
+        std::io::stdout().flush().ok();
+        if view.shutdown {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(250));
+    }
+}
+
+/// `photon evck FILE...`: validate structured JSONL event logs against the
+/// obs schema — every line a known event kind with its required fields,
+/// `seq` strictly consecutive from 0 (`ts_us` is deliberately unchecked:
+/// wall clocks step). CI runs this over a freshly produced harness log so
+/// the schema in docs/OBSERVABILITY.md cannot drift from the emitters.
+#[allow(clippy::disallowed_methods)] // wall-clock timing is reporting-only here
+fn cmd_evck(args: &Args) -> Result<()> {
+    let files = &args.positional[1..];
+    if files.is_empty() {
+        bail!("evck needs at least one event-log (.jsonl) path");
+    }
+    let t0 = std::time::Instant::now();
+    let mut total = 0usize;
+    for f in files {
+        let path = std::path::Path::new(f);
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let n = photon::obs::validate_log_text(&text)
+            .map_err(|e| anyhow::anyhow!("{}: {e:#}", path.display()))?;
+        println!("[evck] {}: {} event(s) ok", path.display(), n);
+        total += n;
+    }
+    println!("[evck] {} file(s), {} event(s), schema ok", files.len(), total);
+    photon::obs::timing("evck", "schema check", t0.elapsed().as_secs_f64());
     Ok(())
 }
 
@@ -368,12 +479,12 @@ fn cmd_lint(args: &Args) -> Result<()> {
         println!("  {} → {} (first at {}:{})", e.from, e.to, e.file, e.line);
     }
     println!(
-        "[lint] {} file(s) under {}, {} violation(s), {:.2}s",
+        "[lint] {} file(s) under {}, {} violation(s)",
         report.files,
         root.display(),
         report.diagnostics.len(),
-        t0.elapsed().as_secs_f64(),
     );
+    photon::obs::timing("lint", "tree scan", t0.elapsed().as_secs_f64());
     if !report.diagnostics.is_empty() {
         bail!(
             "{} lint violation(s) — `photon lint --explain <rule>` documents the \
@@ -389,11 +500,13 @@ fn cmd_lint(args: &Args) -> Result<()> {
 /// units_per_sec, git_rev}` with unique names and finite positive timings).
 /// CI runs this over the committed `BENCH_*.json` baselines and the freshly
 /// emitted ones before `tools/bench_compare.py` diffs the pair.
+#[allow(clippy::disallowed_methods)] // wall-clock timing is reporting-only here
 fn cmd_benchck(args: &Args) -> Result<()> {
     let files = &args.positional[1..];
     if files.is_empty() {
         bail!("benchck needs at least one BENCH_*.json path");
     }
+    let t0 = std::time::Instant::now();
     let mut total = 0usize;
     for f in files {
         let path = std::path::Path::new(f);
@@ -404,6 +517,7 @@ fn cmd_benchck(args: &Args) -> Result<()> {
         total += n;
     }
     println!("[benchck] {} file(s), {} record(s), schema ok", files.len(), total);
+    photon::obs::timing("benchck", "schema check", t0.elapsed().as_secs_f64());
     Ok(())
 }
 

@@ -37,6 +37,7 @@ use crate::coordinator::Federation;
 use crate::metrics::RoundRecord;
 use crate::net::server::{ServeOpts, Server};
 use crate::net::worker::{run_worker, WorkerOpts, WorkerReport};
+use crate::obs::{self, Event as ObsEvent, EventSink};
 use crate::runtime::ModelRuntime;
 
 /// Loopback-fleet knobs.
@@ -65,6 +66,10 @@ pub struct FleetOpts {
     /// the run with a diagnosis after `s` seconds instead of wedging the
     /// suite on a hung thread; `None` waits forever.
     pub watchdog_secs: Option<f64>,
+    /// Write the server's structured JSONL event stream here (`obs`
+    /// plane); `None` disables emission. Watchdog diagnoses land in the
+    /// same log as `Stall` events, so a wedged run leaves evidence.
+    pub obs_log: Option<PathBuf>,
 }
 
 impl Default for FleetOpts {
@@ -79,6 +84,7 @@ impl Default for FleetOpts {
             ckpt_dir: None,
             resume: false,
             watchdog_secs: Some(600.0),
+            obs_log: None,
         }
     }
 }
@@ -123,6 +129,7 @@ fn worker_thread(
             die_at_round: if sessions == 0 { die_at_round } else { None },
             identity,
             chaos: chaos_w.clone(),
+            obs: None,
             verbose: false,
         };
         match run_worker(&addr, wopts) {
@@ -206,6 +213,13 @@ pub fn run_loopback(
             fed.try_resume_from(dir)?;
         }
     }
+    // The harness keeps a handle on the sink so watchdog diagnoses reach
+    // the same log the server writes its fleet events to.
+    let obs_sink: Option<EventSink> = match &opts.obs_log {
+        Some(path) => Some(EventSink::to_file(path)?),
+        None => None,
+    };
+    fed.obs = obs_sink.clone();
     let serve = ServeOpts {
         bind: "127.0.0.1:0".into(),
         min_workers: opts.workers,
@@ -267,6 +281,15 @@ pub fn run_loopback(
             None => {
                 let stuck: Vec<usize> =
                     (0..opts.workers).filter(|&i| workers[i].is_none()).collect();
+                let waited = opts.watchdog_secs.unwrap_or(0.0);
+                obs::timing("harness", "watchdog", waited);
+                if let Some(sink) = &obs_sink {
+                    sink.emit(ObsEvent::Stall {
+                        round: None,
+                        waited_us: (waited * 1e6) as u64,
+                        detail: format!("worker thread(s) {stuck:?} never finished"),
+                    });
+                }
                 bail!(
                     "loopback watchdog ({}) fired: worker thread(s) {stuck:?} never \
                      finished — likely a wedged round (no deadline set?) or a \
@@ -279,11 +302,22 @@ pub fn run_loopback(
     let (server, result) = match recv_until(&srx, give_up) {
         Some(Ok(pair)) => pair,
         Some(Err(panic_msg)) => bail!("server run failed: {panic_msg}"),
-        None => bail!(
-            "loopback watchdog ({}) fired: every worker finished but the server \
-             thread never returned — wedged round loop or acceptor deadlock",
-            watchdog_label(opts.watchdog_secs),
-        ),
+        None => {
+            let waited = opts.watchdog_secs.unwrap_or(0.0);
+            obs::timing("harness", "watchdog", waited);
+            if let Some(sink) = &obs_sink {
+                sink.emit(ObsEvent::Stall {
+                    round: None,
+                    waited_us: (waited * 1e6) as u64,
+                    detail: "server thread never returned".to_string(),
+                });
+            }
+            bail!(
+                "loopback watchdog ({}) fired: every worker finished but the server \
+                 thread never returned — wedged round loop or acceptor deadlock",
+                watchdog_label(opts.watchdog_secs),
+            )
+        }
     };
     let records = result.context("server run failed")?;
     Ok(FleetReport {

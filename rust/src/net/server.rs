@@ -46,6 +46,16 @@
 //! round, killing the server and restarting it with the same `--ckpt-dir`
 //! resumes sample-exact (`Federation::try_resume_from`) — workers simply
 //! reconnect and keep serving.
+//!
+//! ## Observability
+//!
+//! With an event sink installed on the federation (`fed.obs`, see the
+//! [`crate::obs`] module and docs/OBSERVABILITY.md), the server emits a
+//! structured JSONL event per join/rejoin, lease grant/fold, migration,
+//! cut, malformed frame, stall, and round commit. Emission sites sit
+//! exactly where the server pushes to its own `cuts`/`migrations`/
+//! `rejoins` ledgers, so `obs::to_trace(log)` reconstructs
+//! [`Server::trace`] bit-for-bit (`tests/props_obs.rs`).
 
 // Wall-clock reads here are transport concerns (deadlines, liveness,
 // session ids) — allowlisted; see docs/ANALYSIS.md (nondet-time).
@@ -69,6 +79,7 @@ use crate::net::proto::{
     self, AssignTask, JoinAck, Msg, Reject, RoundAssign, RoundCommit, TaskSpec,
     PROTO_VERSION,
 };
+use crate::obs::{self, Event as ObsEvent};
 
 /// Deployment-plane service knobs.
 #[derive(Clone, Debug)]
@@ -93,6 +104,10 @@ pub struct ServeOpts {
     /// Socket write timeout — a worker that stops draining its socket for
     /// this long is declared dead and its pending clients are cut.
     pub io_timeout_secs: f64,
+    /// Liveness backstop when no deadline is configured: a round with no
+    /// progress for this long is cut (announced with a `Stall` event),
+    /// not hung. The default keeps the historical hour.
+    pub stall_secs: f64,
 }
 
 impl Default for ServeOpts {
@@ -105,6 +120,7 @@ impl Default for ServeOpts {
             compress: true,
             join_timeout_secs: 120.0,
             io_timeout_secs: 30.0,
+            stall_secs: 3600.0,
         }
     }
 }
@@ -157,6 +173,11 @@ impl Server {
                  the migration window"
             );
         }
+        anyhow::ensure!(
+            opts.stall_secs > 0.0,
+            "--stall-secs must be positive (it bounds the no-deadline liveness \
+             backstop)"
+        );
         let listener = TcpListener::bind(&opts.bind)
             .with_context(|| format!("binding {}", opts.bind))?;
         let addr = listener.local_addr()?;
@@ -189,6 +210,12 @@ impl Server {
 
     pub fn federation_mut(&mut self) -> &mut Federation {
         &mut self.fed
+    }
+
+    fn emit(&self, ev: ObsEvent) {
+        if let Some(sink) = &self.fed.obs {
+            sink.emit(ev);
+        }
     }
 
     /// The realized chaos trace of this run — cuts, migrations, and
@@ -289,6 +316,11 @@ impl Server {
             );
             workers[slot] = WorkerConn { conn, name: join.name, stream, alive: true };
             self.rejoins.push((self.fed.next_round, slot));
+            self.emit(ObsEvent::WorkerRejoin {
+                round: self.fed.next_round as u64,
+                worker: slot as u64,
+                name: workers[slot].name.clone(),
+            });
             return Some(slot);
         }
         let ack = Msg::JoinAck(JoinAck {
@@ -301,6 +333,10 @@ impl Server {
             return None;
         }
         println!("[serve] admitted worker {:?} (slot {})", join.name, workers.len());
+        self.emit(ObsEvent::WorkerJoin {
+            worker: workers.len() as u64,
+            name: join.name.clone(),
+        });
         workers.push(WorkerConn { conn, name: join.name, stream, alive: true });
         None
     }
@@ -317,6 +353,12 @@ impl Server {
         let (tx, rx) = mpsc::channel::<Event>();
         let stop = Arc::new(AtomicBool::new(false));
         spawn_acceptor(listener, tx, stop.clone());
+        self.emit(ObsEvent::ServerStart {
+            session: format!("{:#x}", self.session),
+            rounds: self.fed.cfg.rounds as u64,
+            n_clients: self.fed.cfg.n_clients as u64,
+            clients_per_round: self.fed.cfg.clients_per_round as u64,
+        });
 
         let mut workers: Vec<WorkerConn> = Vec::new();
         let result = self.run_rounds(&rx, &mut workers);
@@ -328,6 +370,7 @@ impl Server {
         }
         stop.store(true, Ordering::Release);
         let _ = TcpStream::connect(self.addr);
+        self.emit(ObsEvent::Shutdown { rounds: self.fed.next_round as u64 });
 
         result?;
         Ok(self.fed.log.rounds.clone())
@@ -457,6 +500,14 @@ impl Server {
         for (widx, clients) in LeaseBook::group_by_target(&moved) {
             self.send_assign(workers, widx, &clients, d, steps_of);
         }
+        for m in &moved {
+            self.emit(ObsEvent::Migration {
+                round: d.round as u64,
+                client: m.client as u64,
+                from: m.from as u64,
+                to: m.to as u64,
+            });
+        }
         migs.extend(moved);
     }
 
@@ -477,6 +528,11 @@ impl Server {
         for (slot, &(client, _)) in d.runnable.iter().enumerate() {
             let widx = live[slot % live.len()];
             book.lease(client, widx);
+            self.emit(ObsEvent::LeaseGrant {
+                round: d.round as u64,
+                client: client as u64,
+                worker: widx as u64,
+            });
             per_worker[widx].push(client);
         }
 
@@ -550,8 +606,8 @@ impl Server {
             let timeout = match timer {
                 Some(t) => t.saturating_duration_since(now),
                 // Liveness backstop: with no deadline configured, a round
-                // that makes no progress for an hour is cut, not hung.
-                None => Duration::from_secs(3600),
+                // that makes no progress for `stall_secs` is cut, not hung.
+                None => Duration::from_secs_f64(self.opts.stall_secs),
             };
             match rx.recv_timeout(timeout) {
                 Ok(Event::Joined { conn, stream, join }) => {
@@ -625,6 +681,11 @@ impl Server {
                             let Some(slot) = book.slot(client) else {
                                 bail!("lease ledger accepted unsampled client {client}");
                             };
+                            self.emit(ObsEvent::LeaseFold {
+                                round: d.round as u64,
+                                client: client as u64,
+                                worker: widx as u64,
+                            });
                             arrived.insert(slot, (update, p.state));
                         }
                     }
@@ -638,15 +699,16 @@ impl Server {
                     // affected client stays pending and resolves through
                     // the deadline/migration path like any straggler.
                     self.malformed_frames += 1;
-                    let who = workers
-                        .iter()
-                        .find(|w| w.conn == conn)
-                        .map(|w| w.name.as_str())
-                        .unwrap_or("?");
+                    let widx = workers.iter().position(|w| w.conn == conn);
+                    let who = widx.map(|w| workers[w].name.as_str()).unwrap_or("?");
                     println!(
                         "[serve] round {}: dropped undecodable frame from {who:?}",
                         d.round
                     );
+                    self.emit(ObsEvent::Malformed {
+                        round: d.round as u64,
+                        worker: widx.map(|w| w as u64),
+                    });
                 }
                 Ok(Event::Gone { conn }) => {
                     mark_gone(workers, conn);
@@ -671,9 +733,23 @@ impl Server {
                 Err(RecvTimeoutError::Timeout) => {
                     // With a deadline, the checks at the top of the loop
                     // handle the firing timer. Without one, this IS the
-                    // liveness backstop: an hour with no progress cuts the
-                    // round instead of wedging the server forever.
+                    // liveness backstop (`ServeOpts::stall_secs`): a round
+                    // with no progress is cut instead of wedging the
+                    // server forever — announced, never tripped silently.
                     if deadline.is_none() {
+                        let pending = book.pending_count();
+                        println!(
+                            "[serve] round {}: stall backstop ({}s) fired with \
+                             {pending} lease(s) pending — cutting",
+                            d.round, self.opts.stall_secs
+                        );
+                        self.emit(ObsEvent::Stall {
+                            round: Some(d.round as u64),
+                            waited_us: (self.opts.stall_secs * 1e6) as u64,
+                            detail: format!(
+                                "{pending} lease(s) pending past the liveness backstop"
+                            ),
+                        });
                         book.cut_all_pending();
                     }
                 }
@@ -693,6 +769,10 @@ impl Server {
         }
         let cut = book.cuts();
         if !cut.is_empty() {
+            self.emit(ObsEvent::Cut {
+                round: d.round as u64,
+                clients: cut.iter().map(|&c| c as u64).collect(),
+            });
             self.cuts.push((d.round, cut.clone()));
         }
         if !round_migs.is_empty() {
@@ -701,15 +781,15 @@ impl Server {
         let rec = self.fed.commit_round(d.round, updates, t0)?;
         println!(
             "[serve] round {:>3}  server_ppl {:>9.3}  participated {}/{}  \
-             dropped {}  cut {:?}  {:.2}s",
+             dropped {}  cut {:?}",
             rec.round,
             rec.server_ppl,
             rec.participated,
             self.fed.cfg.clients_per_round,
             d.dropped.len(),
             cut,
-            rec.wall_secs,
         );
+        obs::timing("serve", &format!("round {}", rec.round), rec.wall_secs);
 
         let commit = Msg::RoundCommit(RoundCommit {
             round: rec.round as u64,

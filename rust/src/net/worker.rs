@@ -29,6 +29,7 @@ use crate::coordinator::federation::{bind_client_streams, build_data};
 use crate::coordinator::ClientNode;
 use crate::data::source::DataSource;
 use crate::net::proto::{self, Heartbeat, Join, Msg, TaskSpec, UpdatePush, PROTO_VERSION};
+use crate::obs::{Event as ObsEvent, EventSink};
 use crate::runtime::{ModelRuntime, Runtime};
 
 /// Base sleep unit for the chaos `Slow` fault (multiplied by the fault's
@@ -54,6 +55,12 @@ pub struct WorkerOpts {
     /// Seeded per-round chaos faults (crash/hang/slow/flake) — see
     /// [`crate::chaos::Schedule::worker`].
     pub chaos: Option<WorkerChaos>,
+    /// Optional observability sink: the worker's own view of the session
+    /// (join, assignments received, updates pushed). The server's stream
+    /// stays authoritative for cuts/rejoins/commits — in particular a
+    /// rejoining worker logs a plain `WorkerJoin` here, because only the
+    /// server can classify the join as a rejoin.
+    pub obs: Option<EventSink>,
     pub verbose: bool,
 }
 
@@ -137,6 +144,12 @@ pub fn run_worker(addr: &str, opts: WorkerOpts) -> Result<WorkerReport> {
     let mut nodes: BTreeMap<u64, ClientNode> = BTreeMap::new();
     let mut report =
         WorkerReport { worker_slot: ack.worker_slot, ..WorkerReport::default() };
+    let emit = |ev: ObsEvent| {
+        if let Some(sink) = &opts.obs {
+            sink.emit(ev);
+        }
+    };
+    emit(ObsEvent::WorkerJoin { worker: ack.worker_slot, name: opts.name.clone() });
     if opts.verbose {
         println!(
             "[worker {}] joined session {:#x} as slot {} ({} clients, model {})",
@@ -180,6 +193,11 @@ pub fn run_worker(addr: &str, opts: WorkerOpts) -> Result<WorkerReport> {
                     continue;
                 }
                 for (task_idx, task) in assign.tasks.iter().enumerate() {
+                    emit(ObsEvent::LeaseGrant {
+                        round: assign.round,
+                        client: task.client,
+                        worker: ack.worker_slot,
+                    });
                     let node = node_for(
                         &mut nodes, &data, &spec, task.client, seq_width,
                     )?;
@@ -258,6 +276,11 @@ pub fn run_worker(addr: &str, opts: WorkerOpts) -> Result<WorkerReport> {
                     } else {
                         proto::write_msg(&mut stream, &msg, spec.compress)?;
                         report.updates_pushed += 1;
+                        emit(ObsEvent::LeaseFold {
+                            round: assign.round,
+                            client: task.client,
+                            worker: ack.worker_slot,
+                        });
                     }
                 }
                 report.rounds_served += 1;
@@ -270,7 +293,10 @@ pub fn run_worker(addr: &str, opts: WorkerOpts) -> Result<WorkerReport> {
                     );
                 }
             }
-            Msg::Shutdown => return Ok(report),
+            Msg::Shutdown => {
+                emit(ObsEvent::Shutdown { rounds: report.rounds_served });
+                return Ok(report);
+            }
             Msg::Reject(r) => bail!("server rejected mid-session: {}", r.reason),
             other => bail!("unexpected {:?} from server", other.kind()),
         }

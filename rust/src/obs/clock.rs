@@ -1,0 +1,24 @@
+//! The observability plane's only wall-clock read.
+//!
+//! `obs/clock.rs` is the single sanctioned `obs/` entry on the lint's
+//! wall-clock allowlist (`analysis::rules::WALL_CLOCK_FILES`); everything
+//! else under `obs/` must stay off the host clock so that replay and
+//! parity remain deterministic. The timestamp produced here is display
+//! and log-merge metadata only — ordering, replay, and `to_trace` all key
+//! on the sink's monotonic `seq` (see docs/OBSERVABILITY.md, "`ts_us`
+//! vs `seq`").
+
+// Mirrors the lint allowlist entry; clippy.toml disallows these methods
+// everywhere else.
+#![allow(clippy::disallowed_methods)]
+
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Microseconds since the Unix epoch. Not monotonic (NTP can step the
+/// host clock) — consumers must never order or validate by it.
+pub fn wall_ts_us() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}

@@ -1,0 +1,521 @@
+//! Typed fleet events, their JSONL codec, and the `EventSink`.
+//!
+//! One `EventRecord` per line: `{"seq":N,"ts_us":T,"ev":"...",...payload}`
+//! serialized through `util::json` (BTreeMap ⇒ alphabetical keys ⇒ a
+//! byte-stable encoding). `seq` is assigned under the sink's lock, so
+//! sequence order IS write order — the determinism key. `ts_us` comes
+//! from [`super::clock::wall_ts_us`] and is metadata only.
+//!
+//! The keystone correctness hook lives here too: [`to_trace`] folds a
+//! server-emitted event stream back into a [`chaos::Trace`] that must
+//! bit-equal `Server::trace()` (tested against a chaotic loopback fleet
+//! in `tests/props_obs.rs`), tying the observability plane to the
+//! existing replay-parity guarantees.
+
+use std::collections::BTreeMap;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::chaos::{Migration, RoundTrace, Trace};
+use crate::util::json::{self, Json};
+
+/// One typed observability event. Worker indices are server slots;
+/// in-process (`Federation::run`) streams use lane 0 for every grant and
+/// fold so TCP and in-process runs stay structurally comparable.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// A run began. `session` is the hex session token (`{:#x}` of the
+    /// serve session id, or of the config seed for in-process runs).
+    ServerStart { session: String, rounds: u64, n_clients: u64, clients_per_round: u64 },
+    /// A worker was admitted into a fresh slot.
+    WorkerJoin { worker: u64, name: String },
+    /// A crashed worker reclaimed its slot (server-authoritative; the
+    /// worker's own log emits a plain `WorkerJoin` — it cannot know).
+    WorkerRejoin { round: u64, worker: u64, name: String },
+    /// A client lease was granted to a worker for this round.
+    LeaseGrant { round: u64, client: u64, worker: u64 },
+    /// The lease folded: the client's update was accepted exactly once.
+    LeaseFold { round: u64, client: u64, worker: u64 },
+    /// These clients were cut from the round (deadline or stall backstop).
+    Cut { round: u64, clients: Vec<u64> },
+    /// A pending lease moved from a silent worker to a live one.
+    Migration { round: u64, client: u64, from: u64, to: u64 },
+    /// An undecodable frame arrived (`worker` is `None` when the sender
+    /// could not be identified).
+    Malformed { round: u64, worker: Option<u64> },
+    /// The round committed into the global model.
+    RoundCommit { round: u64, participated: u64, nll: f64, comm_bytes_wire: u64, wall_us: u64 },
+    /// Liveness backstop fired (`round` is `None` for harness-level
+    /// watchdog stalls that are not attributable to a round).
+    Stall { round: Option<u64>, waited_us: u64, detail: String },
+    /// The run ended after `rounds` rounds.
+    Shutdown { rounds: u64 },
+}
+
+/// Every `ev` discriminator the schema knows, in emission-typical order.
+pub const EVENT_KINDS: &[&str] = &[
+    "server_start",
+    "worker_join",
+    "worker_rejoin",
+    "lease_grant",
+    "lease_fold",
+    "cut",
+    "migration",
+    "malformed",
+    "round_commit",
+    "stall",
+    "shutdown",
+];
+
+impl Event {
+    /// The wire discriminator stored under the `"ev"` key.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Event::ServerStart { .. } => "server_start",
+            Event::WorkerJoin { .. } => "worker_join",
+            Event::WorkerRejoin { .. } => "worker_rejoin",
+            Event::LeaseGrant { .. } => "lease_grant",
+            Event::LeaseFold { .. } => "lease_fold",
+            Event::Cut { .. } => "cut",
+            Event::Migration { .. } => "migration",
+            Event::Malformed { .. } => "malformed",
+            Event::RoundCommit { .. } => "round_commit",
+            Event::Stall { .. } => "stall",
+            Event::Shutdown { .. } => "shutdown",
+        }
+    }
+}
+
+/// One stamped line of the event log.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EventRecord {
+    /// Monotonic per-sink sequence number, consecutive from 0. The
+    /// determinism key: sequence order is write order.
+    pub seq: u64,
+    /// Wall-clock microseconds since the epoch — metadata only, never
+    /// ordered on (the host clock can step backwards).
+    pub ts_us: u64,
+    pub event: Event,
+}
+
+/// Integers in the log stay below 2^53, so `f64` carries them exactly.
+fn uint(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn field_u64(v: &Json, key: &str) -> Result<u64> {
+    let n = v.get(key)?.as_f64().with_context(|| format!("field {key:?}"))?;
+    if n < 0.0 || n.fract() != 0.0 || n >= 9e15 {
+        bail!("field {key:?} is not a small non-negative integer: {n}");
+    }
+    Ok(n as u64)
+}
+
+fn field_opt_u64(v: &Json, key: &str) -> Result<Option<u64>> {
+    match v {
+        Json::Obj(m) if !m.contains_key(key) => Ok(None),
+        _ => field_u64(v, key).map(Some),
+    }
+}
+
+fn field_str(v: &Json, key: &str) -> Result<String> {
+    Ok(v.get(key)?.as_str().with_context(|| format!("field {key:?}"))?.to_string())
+}
+
+fn field_arr_u64(v: &Json, key: &str) -> Result<Vec<u64>> {
+    v.get(key)?
+        .as_arr()
+        .with_context(|| format!("field {key:?}"))?
+        .iter()
+        .map(|e| {
+            let n = e.as_f64()?;
+            if n < 0.0 || n.fract() != 0.0 || n >= 9e15 {
+                bail!("field {key:?} holds a non-integer: {n}");
+            }
+            Ok(n as u64)
+        })
+        .collect()
+}
+
+impl EventRecord {
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("seq", uint(self.seq)),
+            ("ts_us", uint(self.ts_us)),
+            ("ev", json::s(self.event.name())),
+        ];
+        match &self.event {
+            Event::ServerStart { session, rounds, n_clients, clients_per_round } => {
+                pairs.push(("session", json::s(session)));
+                pairs.push(("rounds", uint(*rounds)));
+                pairs.push(("n_clients", uint(*n_clients)));
+                pairs.push(("clients_per_round", uint(*clients_per_round)));
+            }
+            Event::WorkerJoin { worker, name } => {
+                pairs.push(("worker", uint(*worker)));
+                pairs.push(("name", json::s(name)));
+            }
+            Event::WorkerRejoin { round, worker, name } => {
+                pairs.push(("round", uint(*round)));
+                pairs.push(("worker", uint(*worker)));
+                pairs.push(("name", json::s(name)));
+            }
+            Event::LeaseGrant { round, client, worker }
+            | Event::LeaseFold { round, client, worker } => {
+                pairs.push(("round", uint(*round)));
+                pairs.push(("client", uint(*client)));
+                pairs.push(("worker", uint(*worker)));
+            }
+            Event::Cut { round, clients } => {
+                pairs.push(("round", uint(*round)));
+                pairs.push(("clients", json::arr(clients.iter().map(|&c| uint(c)))));
+            }
+            Event::Migration { round, client, from, to } => {
+                pairs.push(("round", uint(*round)));
+                pairs.push(("client", uint(*client)));
+                pairs.push(("from", uint(*from)));
+                pairs.push(("to", uint(*to)));
+            }
+            Event::Malformed { round, worker } => {
+                pairs.push(("round", uint(*round)));
+                if let Some(w) = worker {
+                    pairs.push(("worker", uint(*w)));
+                }
+            }
+            Event::RoundCommit { round, participated, nll, comm_bytes_wire, wall_us } => {
+                pairs.push(("round", uint(*round)));
+                pairs.push(("participated", uint(*participated)));
+                pairs.push(("nll", json::num(*nll)));
+                pairs.push(("comm_bytes_wire", uint(*comm_bytes_wire)));
+                pairs.push(("wall_us", uint(*wall_us)));
+            }
+            Event::Stall { round, waited_us, detail } => {
+                if let Some(r) = round {
+                    pairs.push(("round", uint(*r)));
+                }
+                pairs.push(("waited_us", uint(*waited_us)));
+                pairs.push(("detail", json::s(detail)));
+            }
+            Event::Shutdown { rounds } => {
+                pairs.push(("rounds", uint(*rounds)));
+            }
+        }
+        json::obj(pairs)
+    }
+
+    /// The record as one JSONL line (no trailing newline). Byte-stable:
+    /// keys are alphabetical, integers print without a decimal point,
+    /// and `nll` round-trips via shortest-roundtrip f64 display.
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Strict parse of one log line. Unknown `ev` kinds and malformed
+    /// fields are errors; extra keys are ignored (forward compatibility).
+    pub fn parse(line: &str) -> Result<EventRecord> {
+        let v = Json::parse(line.trim())?;
+        let seq = field_u64(&v, "seq")?;
+        let ts_us = field_u64(&v, "ts_us")?;
+        let ev = field_str(&v, "ev")?;
+        let event = match ev.as_str() {
+            "server_start" => Event::ServerStart {
+                session: field_str(&v, "session")?,
+                rounds: field_u64(&v, "rounds")?,
+                n_clients: field_u64(&v, "n_clients")?,
+                clients_per_round: field_u64(&v, "clients_per_round")?,
+            },
+            "worker_join" => Event::WorkerJoin {
+                worker: field_u64(&v, "worker")?,
+                name: field_str(&v, "name")?,
+            },
+            "worker_rejoin" => Event::WorkerRejoin {
+                round: field_u64(&v, "round")?,
+                worker: field_u64(&v, "worker")?,
+                name: field_str(&v, "name")?,
+            },
+            "lease_grant" => Event::LeaseGrant {
+                round: field_u64(&v, "round")?,
+                client: field_u64(&v, "client")?,
+                worker: field_u64(&v, "worker")?,
+            },
+            "lease_fold" => Event::LeaseFold {
+                round: field_u64(&v, "round")?,
+                client: field_u64(&v, "client")?,
+                worker: field_u64(&v, "worker")?,
+            },
+            "cut" => Event::Cut {
+                round: field_u64(&v, "round")?,
+                clients: field_arr_u64(&v, "clients")?,
+            },
+            "migration" => Event::Migration {
+                round: field_u64(&v, "round")?,
+                client: field_u64(&v, "client")?,
+                from: field_u64(&v, "from")?,
+                to: field_u64(&v, "to")?,
+            },
+            "malformed" => Event::Malformed {
+                round: field_u64(&v, "round")?,
+                worker: field_opt_u64(&v, "worker")?,
+            },
+            "round_commit" => Event::RoundCommit {
+                round: field_u64(&v, "round")?,
+                participated: field_u64(&v, "participated")?,
+                nll: v.get("nll")?.as_f64().context("field \"nll\"")?,
+                comm_bytes_wire: field_u64(&v, "comm_bytes_wire")?,
+                wall_us: field_u64(&v, "wall_us")?,
+            },
+            "stall" => Event::Stall {
+                round: field_opt_u64(&v, "round")?,
+                waited_us: field_u64(&v, "waited_us")?,
+                detail: field_str(&v, "detail")?,
+            },
+            "shutdown" => Event::Shutdown { rounds: field_u64(&v, "rounds")? },
+            other => bail!("unknown event kind {other:?}"),
+        };
+        Ok(EventRecord { seq, ts_us, event })
+    }
+}
+
+enum TsSource {
+    /// Stamp from the host clock ([`super::clock::wall_ts_us`]).
+    Wall,
+    /// Deterministic stamps for golden tests: `ts_us = base + seq·step`.
+    Fixed { base_us: u64, step_us: u64 },
+}
+
+enum SinkOut {
+    File(BufWriter<std::fs::File>),
+    Memory(Vec<u8>),
+}
+
+struct SinkState {
+    seq: u64,
+    ts: TsSource,
+    out: SinkOut,
+}
+
+/// Append-only JSONL event sink, cheap to clone and share across the
+/// server, harness, and federation (`Arc<Mutex<..>>` inside). `seq` is
+/// taken under the lock, so sequence order is exactly file order.
+#[derive(Clone)]
+pub struct EventSink {
+    state: Arc<Mutex<SinkState>>,
+}
+
+impl std::fmt::Debug for EventSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "EventSink(seq={})", self.emitted())
+    }
+}
+
+impl EventSink {
+    /// Sink writing (and flushing per line, for `photon top --follow`)
+    /// to a fresh file at `path`; parent directories are created.
+    pub fn to_file(path: &Path) -> Result<EventSink> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .map_err(|e| anyhow!("creating {}: {e}", dir.display()))?;
+            }
+        }
+        let f = std::fs::File::create(path)
+            .map_err(|e| anyhow!("creating event log {}: {e}", path.display()))?;
+        Ok(Self::with(SinkOut::File(BufWriter::new(f)), TsSource::Wall))
+    }
+
+    /// In-memory sink (wall-clock stamps); read back with [`Self::dump`].
+    pub fn memory() -> EventSink {
+        Self::with(SinkOut::Memory(Vec::new()), TsSource::Wall)
+    }
+
+    /// In-memory sink with deterministic stamps `base_us + seq·step_us`
+    /// — the golden-fixture generator's clock.
+    pub fn memory_fixed(base_us: u64, step_us: u64) -> EventSink {
+        Self::with(SinkOut::Memory(Vec::new()), TsSource::Fixed { base_us, step_us })
+    }
+
+    fn with(out: SinkOut, ts: TsSource) -> EventSink {
+        EventSink { state: Arc::new(Mutex::new(SinkState { seq: 0, ts, out })) }
+    }
+
+    /// Append one event. Best-effort by design: a poisoned lock or a
+    /// full disk must never take the fleet down, so failures are
+    /// swallowed (the validator's consecutive-`seq` check will surface
+    /// a torn log at read time).
+    pub fn emit(&self, event: Event) {
+        let Ok(mut st) = self.state.lock() else { return };
+        let seq = st.seq;
+        st.seq += 1;
+        let ts_us = match st.ts {
+            TsSource::Wall => super::clock::wall_ts_us(),
+            TsSource::Fixed { base_us, step_us } => base_us.wrapping_add(seq.wrapping_mul(step_us)),
+        };
+        let line = EventRecord { seq, ts_us, event }.to_line();
+        match &mut st.out {
+            SinkOut::File(w) => {
+                let _ = w.write_all(line.as_bytes());
+                let _ = w.write_all(b"\n");
+                let _ = w.flush();
+            }
+            SinkOut::Memory(buf) => {
+                buf.extend_from_slice(line.as_bytes());
+                buf.push(b'\n');
+            }
+        }
+    }
+
+    /// Events emitted so far (equivalently: the next `seq`).
+    pub fn emitted(&self) -> u64 {
+        self.state.lock().map(|s| s.seq).unwrap_or(0)
+    }
+
+    /// The buffered JSONL text of a memory sink (`None` for file sinks).
+    pub fn dump(&self) -> Option<String> {
+        let st = self.state.lock().ok()?;
+        match &st.out {
+            SinkOut::Memory(buf) => Some(String::from_utf8_lossy(buf).into_owned()),
+            SinkOut::File(_) => None,
+        }
+    }
+}
+
+/// Fold a server-emitted event stream back into the realized
+/// [`chaos::Trace`]. Bit-equal to `Server::trace()` because the server
+/// emits `Cut` / `Migration` / `WorkerRejoin` exactly where it pushes to
+/// its own `cuts` / `migrations` / `rejoins` ledgers, in the same order
+/// (cuts arrive sorted from the lease book's `BTreeSet`; migrations and
+/// rejoins are chronological, which `seq` preserves).
+pub fn to_trace(records: &[EventRecord]) -> Trace {
+    let mut rounds: BTreeMap<usize, RoundTrace> = BTreeMap::new();
+    let row = |m: &mut BTreeMap<usize, RoundTrace>, r: usize| -> &mut RoundTrace {
+        m.entry(r).or_insert_with(|| RoundTrace { round: r, ..RoundTrace::default() })
+    };
+    for rec in records {
+        match &rec.event {
+            Event::Cut { round, clients } => {
+                let t = row(&mut rounds, *round as usize);
+                t.cut = clients.iter().map(|&c| c as usize).collect();
+            }
+            Event::Migration { round, client, from, to } => {
+                row(&mut rounds, *round as usize).migrations.push(Migration {
+                    client: *client as usize,
+                    from: *from as usize,
+                    to: *to as usize,
+                });
+            }
+            Event::WorkerRejoin { round, worker, .. } => {
+                row(&mut rounds, *round as usize).rejoined.push(*worker as usize);
+            }
+            _ => {}
+        }
+    }
+    Trace { rounds: rounds.into_values().collect() }
+}
+
+/// Validate a whole log against the schema: every non-blank line parses
+/// as a known event, and `seq` runs consecutively from 0 (this is the
+/// whole ordering contract — `ts_us` is deliberately NOT checked for
+/// monotonicity, because host clocks step). Returns the event count.
+pub fn validate_log_text(text: &str) -> Result<usize> {
+    let mut next_seq = 0u64;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let rec = EventRecord::parse(line).map_err(|e| anyhow!("line {}: {e:#}", i + 1))?;
+        if rec.seq != next_seq {
+            bail!(
+                "line {}: seq {} (expected {next_seq}; seq must be consecutive from 0)",
+                i + 1,
+                rec.seq
+            );
+        }
+        next_seq += 1;
+    }
+    Ok(next_seq as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codec_round_trips_every_kind() {
+        let samples = vec![
+            Event::ServerStart {
+                session: "0x2a".into(),
+                rounds: 3,
+                n_clients: 6,
+                clients_per_round: 4,
+            },
+            Event::WorkerJoin { worker: 0, name: "loopback-0".into() },
+            Event::WorkerRejoin { round: 1, worker: 2, name: "loopback-2".into() },
+            Event::LeaseGrant { round: 0, client: 5, worker: 1 },
+            Event::LeaseFold { round: 0, client: 5, worker: 1 },
+            Event::Cut { round: 2, clients: vec![1, 4] },
+            Event::Migration { round: 2, client: 4, from: 1, to: 0 },
+            Event::Malformed { round: 0, worker: Some(1) },
+            Event::Malformed { round: 0, worker: None },
+            Event::RoundCommit {
+                round: 2,
+                participated: 4,
+                nll: 5.0625,
+                comm_bytes_wire: 1024,
+                wall_us: 1500,
+            },
+            Event::Stall { round: Some(2), waited_us: 7, detail: "pending".into() },
+            Event::Stall { round: None, waited_us: 7, detail: "watchdog".into() },
+            Event::Shutdown { rounds: 3 },
+        ];
+        for (seq, event) in samples.into_iter().enumerate() {
+            let rec = EventRecord { seq: seq as u64, ts_us: 10 + seq as u64, event };
+            let line = rec.to_line();
+            let back = EventRecord::parse(&line).unwrap();
+            assert_eq!(back, rec, "{line}");
+            assert_eq!(back.to_line(), line, "re-serialization must be byte-stable");
+        }
+    }
+
+    #[test]
+    fn parser_rejects_unknown_and_malformed() {
+        assert!(EventRecord::parse("{}").is_err());
+        assert!(EventRecord::parse(r#"{"seq":0,"ts_us":1,"ev":"mystery"}"#).is_err());
+        assert!(
+            EventRecord::parse(r#"{"seq":-1,"ts_us":1,"ev":"shutdown","rounds":1}"#).is_err(),
+            "negative seq"
+        );
+        assert!(
+            EventRecord::parse(r#"{"seq":0.5,"ts_us":1,"ev":"shutdown","rounds":1}"#).is_err(),
+            "fractional seq"
+        );
+        assert!(EventRecord::parse("not json").is_err());
+    }
+
+    #[test]
+    fn validator_wants_consecutive_seq_but_ignores_ts() {
+        let sink = EventSink::memory_fixed(100, 0); // constant ts: still valid
+        sink.emit(Event::Shutdown { rounds: 0 });
+        sink.emit(Event::Shutdown { rounds: 1 });
+        let text = sink.dump().unwrap();
+        assert_eq!(validate_log_text(&text).unwrap(), 2);
+
+        let gap = text.replace("\"seq\":1", "\"seq\":5");
+        assert!(validate_log_text(&gap).is_err(), "seq gap must fail");
+        assert_eq!(validate_log_text("\n  \n").unwrap(), 0, "blank lines are fine");
+    }
+
+    #[test]
+    fn memory_sink_is_shared_through_clones() {
+        let a = EventSink::memory_fixed(0, 1);
+        let b = a.clone();
+        a.emit(Event::Shutdown { rounds: 1 });
+        b.emit(Event::Shutdown { rounds: 2 });
+        assert_eq!(a.emitted(), 2);
+        let text = b.dump().unwrap();
+        assert_eq!(validate_log_text(&text).unwrap(), 2);
+        assert!(text.contains("\"ts_us\":1"), "fixed clock: ts = base + seq*step\n{text}");
+    }
+}

@@ -1,0 +1,40 @@
+//! Live fleet observability: structured JSONL event bus + cockpit.
+//!
+//! The deployment plane's failures — stragglers, crashes, rejoins,
+//! migrations — play out over hours; this plane makes them visible as a
+//! machine-readable stream instead of scattered stderr lines. Layers,
+//! source → parser → view-state, each pure and testable on its own:
+//!
+//! - [`event`]: the typed [`Event`] enum, the [`EventSink`] writer
+//!   (monotonic `seq`, wall-clock `ts_us`), the strict line codec, the
+//!   [`validate_log_text`] schema gate (`photon evck`), and the keystone
+//!   [`to_trace`] fold back into a `chaos::Trace`.
+//! - [`clock`]: the plane's only sanctioned wall-clock read.
+//! - [`tail`]: follow-mode reader tolerating truncated last lines and
+//!   garbage (crash-torn logs must still triage).
+//! - [`view`]: pure reducer into per-worker lanes, a round timeline,
+//!   and cumulative aggregates.
+//! - [`top`]: deterministic ANSI frame renderer behind `photon top`.
+//!
+//! Determinism contract: `seq` (assigned under the sink lock, so
+//! sequence order is write order) is the only ordering key; `ts_us` is
+//! display metadata and may step backwards with the host clock. Replay
+//! never reads a clock — see docs/OBSERVABILITY.md.
+
+pub mod clock;
+pub mod event;
+pub mod tail;
+pub mod top;
+pub mod view;
+
+pub use event::{to_trace, validate_log_text, Event, EventRecord, EventSink, EVENT_KINDS};
+pub use tail::{read_log, Tail};
+pub use top::{render_frame, render_stats, sparkline, Mode, CLEAR};
+pub use view::{RoundRow, ViewState, WorkerLane};
+
+/// The one `[timing]` reporter (lint, benchck, evck, serve rounds,
+/// harness watchdog all route through here), so wall-clock reports are
+/// a single grep pattern: `[timing] <area> <what>: <secs>s`.
+pub fn timing(area: &str, what: &str, secs: f64) {
+    eprintln!("[timing] {area} {what}: {secs:.2}s");
+}

@@ -1,0 +1,90 @@
+//! Follow-mode reader for JSONL event logs.
+//!
+//! The writer ([`super::event::EventSink`]) appends whole lines, but a
+//! reader can race a write mid-line (or land on a log torn by a crash),
+//! so the tail splits at the **last** newline it has seen: complete
+//! lines parse now, an unterminated suffix stays buffered until its
+//! newline arrives. Garbage lines are counted ([`Tail::skipped`]) and
+//! skipped, never fatal — a cockpit must survive a dirty log.
+
+use std::fs::File;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use super::event::EventRecord;
+
+/// Incremental reader over a growing event log.
+pub struct Tail {
+    file: File,
+    /// Bytes read but not yet terminated by a newline.
+    buf: Vec<u8>,
+    /// Undecodable complete lines seen so far (blank lines excluded).
+    pub skipped: u64,
+}
+
+impl Tail {
+    pub fn open(path: &Path) -> Result<Tail> {
+        let file = File::open(path)
+            .map_err(|e| anyhow!("opening event log {}: {e}", path.display()))?;
+        Ok(Tail { file, buf: Vec::new(), skipped: 0 })
+    }
+
+    /// Read everything appended since the last poll and parse the
+    /// complete lines, in order. A final line still missing its newline
+    /// stays buffered and surfaces on a later poll.
+    pub fn poll(&mut self) -> Result<Vec<EventRecord>> {
+        let mut chunk = [0u8; 64 * 1024];
+        loop {
+            match self.file.read(&mut chunk)? {
+                0 => break,
+                n => self.buf.extend_from_slice(&chunk[..n]),
+            }
+        }
+        let mut out = Vec::new();
+        let Some(last_nl) = self.buf.iter().rposition(|&b| b == b'\n') else {
+            return Ok(out);
+        };
+        let complete: Vec<u8> = self.buf.drain(..=last_nl).collect();
+        for raw in complete.split(|&b| b == b'\n') {
+            let line = match std::str::from_utf8(raw) {
+                Ok(s) => s.trim(),
+                Err(_) => {
+                    self.skipped += 1;
+                    continue;
+                }
+            };
+            if line.is_empty() {
+                continue;
+            }
+            match EventRecord::parse(line) {
+                Ok(rec) => out.push(rec),
+                Err(_) => self.skipped += 1,
+            }
+        }
+        Ok(out)
+    }
+
+    /// Bytes still waiting for their newline (an in-flight write).
+    pub fn pending_bytes(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+/// One-shot read of a whole log. An unterminated final line that parses
+/// cleanly still counts (the writer got the bytes out, not the newline);
+/// an unparsable tail is treated as a truncated in-flight write and
+/// ignored rather than counted as garbage.
+pub fn read_log(path: &Path) -> Result<(Vec<EventRecord>, u64)> {
+    let mut tail = Tail::open(path)?;
+    let mut records = tail.poll()?;
+    if !tail.buf.is_empty() {
+        if let Ok(line) = std::str::from_utf8(&tail.buf) {
+            if let Ok(rec) = EventRecord::parse(line.trim()) {
+                records.push(rec);
+            }
+        }
+    }
+    Ok((records, tail.skipped))
+}

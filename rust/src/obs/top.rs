@@ -1,0 +1,167 @@
+//! Frame renderer for `photon top` — raw ANSI, no terminal crates.
+//!
+//! Rendering is a pure function of [`ViewState`] + [`Mode`]: no clocks,
+//! no environment probes, no color autodetection. That is what makes
+//! `photon top --replay` byte-identical across runs (the acceptance
+//! criterion pinned by `tests/fixtures/obs/golden_frame.txt`). Follow
+//! mode prepends [`CLEAR`] per frame in `main.rs`; the frame itself is
+//! identical between live and replay apart from the mode tag.
+
+use super::view::ViewState;
+
+/// Clear screen + home cursor — the follow-mode frame prefix.
+pub const CLEAR: &str = "\x1b[2J\x1b[H";
+
+/// Rounds shown in the timeline table (older rows scroll off).
+const TIMELINE_ROWS: usize = 12;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Live,
+    Replay,
+}
+
+const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+
+/// Min-max scaled block sparkline; `"-"` when empty, mid-height when
+/// the series is constant.
+pub fn sparkline(values: &[f64]) -> String {
+    if values.is_empty() {
+        return "-".to_string();
+    }
+    let min = values.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = values.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = max - min;
+    values
+        .iter()
+        .map(|&v| {
+            let idx = if span > 0.0 && v.is_finite() {
+                (((v - min) / span) * 7.0).round() as usize
+            } else {
+                3
+            };
+            BARS[idx.min(7)]
+        })
+        .collect()
+}
+
+/// Render one full cockpit frame (trailing newline included).
+pub fn render_frame(v: &ViewState, mode: Mode) -> String {
+    let mut out = String::new();
+    let session = v.session.as_deref().unwrap_or("-");
+    let seq = if v.applied > 0 { v.last_seq.to_string() } else { "-".to_string() };
+    let mode_tag = match mode {
+        Mode::Live => "live",
+        Mode::Replay => "replay",
+    };
+    out.push_str(&format!(
+        "\x1b[1mphoton top\x1b[0m — session {session}  [{mode_tag}]  seq {seq}\n"
+    ));
+    let total = v.rounds_total.map_or_else(|| "-".to_string(), |r| r.to_string());
+    out.push_str(&format!(
+        "rounds {}/{}  folded {}  cut {}  migrated {}  rejoined {}  malformed {}  \
+         stalls {}  wire {} B\n",
+        v.committed_rounds(),
+        total,
+        v.total_folded(),
+        v.total_cut(),
+        v.total_migrated(),
+        v.total_rejoined(),
+        v.malformed,
+        v.stalls,
+        v.total_wire_bytes,
+    ));
+    out.push_str(&format!("nll {}\n", sparkline(&v.nll_series())));
+    out.push('\n');
+
+    out.push_str("workers\n");
+    out.push_str(&format!(
+        "{:>5}  {:<16}  {:>7}  {:>6}  {:>7}  {:>9}  {:>8}\n",
+        "slot", "name", "granted", "folded", "rejoins", "malformed", "last-seq"
+    ));
+    for (slot, lane) in &v.workers {
+        out.push_str(&format!(
+            "{:>5}  {:<16}  {:>7}  {:>6}  {:>7}  {:>9}  {:>8}\n",
+            slot, lane.name, lane.granted, lane.folded, lane.rejoins, lane.malformed,
+            lane.last_seq,
+        ));
+    }
+    out.push('\n');
+
+    out.push_str(&format!("rounds (last {TIMELINE_ROWS})\n"));
+    out.push_str(&format!(
+        "{:>6}  {:>7}  {:>6}  {:>4}  {:>8}  {:>10}  {:>12}  {:>9}\n",
+        "round", "granted", "folded", "cut", "migrated", "nll", "wire B", "wall ms"
+    ));
+    let rows: Vec<_> = v.rounds.values().collect();
+    let start = rows.len().saturating_sub(TIMELINE_ROWS);
+    for row in &rows[start..] {
+        let nll = if row.committed { format!("{:.4}", row.nll) } else { "-".to_string() };
+        let wall = if row.committed {
+            format!("{:.1}", row.wall_us as f64 / 1000.0)
+        } else {
+            "-".to_string()
+        };
+        out.push_str(&format!(
+            "{:>6}  {:>7}  {:>6}  {:>4}  {:>8}  {:>10}  {:>12}  {:>9}\n",
+            row.round, row.granted, row.folded, row.cut, row.migrated, nll, row.wire_bytes,
+            wall,
+        ));
+    }
+    if v.shutdown {
+        out.push_str("\n-- shutdown: run complete --\n");
+    }
+    out
+}
+
+/// One-shot plain-text summary (`photon top --stats`): two `[obs]`
+/// lines, grep-stable, no ANSI.
+pub fn render_stats(v: &ViewState) -> String {
+    let total = v.rounds_total.map_or_else(|| "-".to_string(), |r| r.to_string());
+    let nll = v.final_nll().map_or_else(|| "-".to_string(), |n| format!("{n:.6}"));
+    format!(
+        "[obs] events {}  rounds {}/{}  granted {}  folded {}  cut {}  migrated {}  \
+         rejoined {}  malformed {}  stalls {}\n\
+         [obs] wire {} B  final nll {}  workers {}\n",
+        v.applied,
+        v.committed_rounds(),
+        total,
+        v.total_granted(),
+        v.total_folded(),
+        v.total_cut(),
+        v.total_migrated(),
+        v.total_rejoined(),
+        v.malformed,
+        v.stalls,
+        v.total_wire_bytes,
+        nll,
+        v.workers.len(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparkline_scales_min_to_max() {
+        assert_eq!(sparkline(&[]), "-");
+        assert_eq!(sparkline(&[1.0]), "▄", "constant series sits mid-height");
+        assert_eq!(sparkline(&[5.25, 4.5]), "█▁");
+        assert_eq!(sparkline(&[0.0, 0.5, 1.0]), "▁▅█");
+    }
+
+    #[test]
+    fn empty_state_renders_placeholders() {
+        let v = ViewState::default();
+        let frame = render_frame(&v, Mode::Replay);
+        assert!(frame.contains("session -"));
+        assert!(frame.contains("seq -"));
+        assert!(frame.contains("nll -\n"));
+        assert!(!frame.contains("shutdown"));
+        assert_eq!(frame, render_frame(&v, Mode::Replay), "rendering is pure");
+        let stats = render_stats(&v);
+        assert!(stats.starts_with("[obs] events 0"));
+        assert!(!stats.contains('\x1b'), "stats are plain text");
+    }
+}

@@ -1,0 +1,223 @@
+//! Pure view-state reducer over an event stream.
+//!
+//! [`ViewState::apply`] folds [`EventRecord`]s into per-worker lanes, a
+//! round timeline, and cumulative aggregates — no I/O, no clocks, no
+//! terminal, so the reducer is unit-testable and `photon top --replay`
+//! is deterministic by construction. Stale records (`seq` at or below
+//! the high-water mark) are dropped, not double-counted, which makes
+//! re-polling and replay-from-scratch idempotent.
+
+use std::collections::BTreeMap;
+
+use super::event::{Event, EventRecord};
+
+/// One worker slot's cumulative lane.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WorkerLane {
+    pub name: String,
+    pub granted: u64,
+    pub folded: u64,
+    pub rejoins: u64,
+    pub malformed: u64,
+    /// `seq` of the last event that touched this lane.
+    pub last_seq: u64,
+}
+
+/// One round's row in the timeline.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RoundRow {
+    pub round: u64,
+    pub granted: u64,
+    pub folded: u64,
+    pub cut: u64,
+    pub migrated: u64,
+    /// True once the `RoundCommit` arrived; the commit fields below are
+    /// meaningless before then.
+    pub committed: bool,
+    pub participated: u64,
+    pub nll: f64,
+    pub wire_bytes: u64,
+    pub wall_us: u64,
+}
+
+/// The whole cockpit state, reduced from a stream of records.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ViewState {
+    pub session: Option<String>,
+    pub rounds_total: Option<u64>,
+    pub n_clients: Option<u64>,
+    /// Records applied (stale drops excluded).
+    pub applied: u64,
+    /// High-water `seq` among applied records.
+    pub last_seq: u64,
+    /// `ts_us` of the last applied record (display metadata only).
+    pub last_ts_us: u64,
+    /// Records dropped for arriving at or below the high-water `seq`.
+    pub dropped_stale: u64,
+    pub workers: BTreeMap<u64, WorkerLane>,
+    pub rounds: BTreeMap<u64, RoundRow>,
+    pub total_wire_bytes: u64,
+    pub stalls: u64,
+    pub malformed: u64,
+    pub shutdown: bool,
+}
+
+impl ViewState {
+    fn lane(&mut self, worker: u64, seq: u64) -> &mut WorkerLane {
+        let lane = self.workers.entry(worker).or_default();
+        lane.last_seq = seq;
+        lane
+    }
+
+    fn row(&mut self, round: u64) -> &mut RoundRow {
+        self.rounds.entry(round).or_insert_with(|| RoundRow { round, ..RoundRow::default() })
+    }
+
+    /// Fold one record in. Returns false (and counts it) when the record
+    /// is stale — `seq` at or below the high-water mark of an already
+    /// applied record.
+    pub fn apply(&mut self, rec: &EventRecord) -> bool {
+        if self.applied > 0 && rec.seq <= self.last_seq {
+            self.dropped_stale += 1;
+            return false;
+        }
+        self.applied += 1;
+        self.last_seq = rec.seq;
+        self.last_ts_us = rec.ts_us;
+        let seq = rec.seq;
+        match &rec.event {
+            Event::ServerStart { session, rounds, n_clients, .. } => {
+                self.session = Some(session.clone());
+                self.rounds_total = Some(*rounds);
+                self.n_clients = Some(*n_clients);
+            }
+            Event::WorkerJoin { worker, name } => {
+                let lane = self.lane(*worker, seq);
+                lane.name = name.clone();
+            }
+            Event::WorkerRejoin { worker, name, .. } => {
+                let lane = self.lane(*worker, seq);
+                lane.name = name.clone();
+                lane.rejoins += 1;
+            }
+            Event::LeaseGrant { round, worker, .. } => {
+                self.lane(*worker, seq).granted += 1;
+                self.row(*round).granted += 1;
+            }
+            Event::LeaseFold { round, worker, .. } => {
+                self.lane(*worker, seq).folded += 1;
+                self.row(*round).folded += 1;
+            }
+            Event::Cut { round, clients } => {
+                self.row(*round).cut += clients.len() as u64;
+            }
+            Event::Migration { round, .. } => {
+                self.row(*round).migrated += 1;
+            }
+            Event::Malformed { worker, .. } => {
+                self.malformed += 1;
+                if let Some(w) = worker {
+                    self.lane(*w, seq).malformed += 1;
+                }
+            }
+            Event::RoundCommit { round, participated, nll, comm_bytes_wire, wall_us } => {
+                let row = self.row(*round);
+                row.committed = true;
+                row.participated = *participated;
+                row.nll = *nll;
+                row.wire_bytes = *comm_bytes_wire;
+                row.wall_us = *wall_us;
+                self.total_wire_bytes += *comm_bytes_wire;
+            }
+            Event::Stall { .. } => self.stalls += 1,
+            Event::Shutdown { .. } => self.shutdown = true,
+        }
+        true
+    }
+
+    pub fn apply_all(&mut self, records: &[EventRecord]) {
+        for rec in records {
+            self.apply(rec);
+        }
+    }
+
+    // -- aggregates ------------------------------------------------------
+
+    pub fn committed_rounds(&self) -> u64 {
+        self.rounds.values().filter(|r| r.committed).count() as u64
+    }
+
+    pub fn total_granted(&self) -> u64 {
+        self.rounds.values().map(|r| r.granted).sum()
+    }
+
+    pub fn total_folded(&self) -> u64 {
+        self.rounds.values().map(|r| r.folded).sum()
+    }
+
+    pub fn total_cut(&self) -> u64 {
+        self.rounds.values().map(|r| r.cut).sum()
+    }
+
+    pub fn total_migrated(&self) -> u64 {
+        self.rounds.values().map(|r| r.migrated).sum()
+    }
+
+    pub fn total_rejoined(&self) -> u64 {
+        self.workers.values().map(|l| l.rejoins).sum()
+    }
+
+    /// Committed rounds' losses, in round order (the sparkline input).
+    pub fn nll_series(&self) -> Vec<f64> {
+        self.rounds.values().filter(|r| r.committed).map(|r| r.nll).collect()
+    }
+
+    pub fn final_nll(&self) -> Option<f64> {
+        self.rounds.values().filter(|r| r.committed).next_back().map(|r| r.nll)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(seq: u64, event: Event) -> EventRecord {
+        EventRecord { seq, ts_us: seq, event }
+    }
+
+    #[test]
+    fn reducer_counts_and_drops_stale() {
+        let mut v = ViewState::default();
+        assert!(v.apply(&rec(0, Event::LeaseGrant { round: 0, client: 1, worker: 0 })));
+        assert!(v.apply(&rec(1, Event::LeaseFold { round: 0, client: 1, worker: 0 })));
+        assert!(
+            !v.apply(&rec(1, Event::LeaseFold { round: 0, client: 1, worker: 0 })),
+            "replayed seq must be dropped"
+        );
+        assert_eq!(v.dropped_stale, 1);
+        assert_eq!(v.total_granted(), 1);
+        assert_eq!(v.total_folded(), 1, "stale fold must not double-count");
+        assert_eq!(v.workers.get(&0).map(|l| l.last_seq), Some(1));
+    }
+
+    #[test]
+    fn commit_fills_the_row() {
+        let mut v = ViewState::default();
+        v.apply(&rec(
+            0,
+            Event::RoundCommit {
+                round: 3,
+                participated: 5,
+                nll: 4.75,
+                comm_bytes_wire: 2048,
+                wall_us: 900,
+            },
+        ));
+        let row = v.rounds.get(&3).unwrap();
+        assert!(row.committed);
+        assert_eq!((row.participated, row.wire_bytes, row.wall_us), (5, 2048, 900));
+        assert_eq!(v.final_nll(), Some(4.75));
+        assert_eq!(v.nll_series(), vec![4.75]);
+        assert_eq!(v.total_wire_bytes, 2048);
+    }
+}

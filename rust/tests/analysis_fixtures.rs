@@ -95,6 +95,10 @@ fn nondet_time_fixtures() {
     check("nondet_time_bad.rs");
     check("nondet_time_ok.rs");
     check("nondet_time_allow.rs");
+    // obs plane: clock.rs is the sole allowlisted wall-clock site; every
+    // other obs/ file is determinism-scoped and must stay clock-free.
+    check("nondet_time_obs_clock.rs");
+    check("nondet_time_obs_bad.rs");
 }
 
 #[test]
@@ -233,4 +237,7 @@ fn seeded_violation_tree_fails() {
         "the seeded violation must be caught"
     );
     assert!(report.diagnostics.iter().any(|d| d.rule == "nondet-map"));
+    // The obs-plane clock allowlist is exactly one file deep: a wall-clock
+    // read seeded anywhere else under obs/ must still trip the gate.
+    assert!(report.diagnostics.iter().any(|d| d.rule == "nondet-time"));
 }

@@ -1,0 +1,9 @@
+// lint-fixture: obs/event.rs
+// Positive corpus for nondet-time: everywhere in obs/ except clock.rs is
+// determinism-scoped and clock-free — replay and `photon top --replay`
+// must be pure functions of the log bytes.
+
+fn stamp_record() -> u64 {
+    let ts = SystemTime::now(); //~ nondet-time
+    ts.elapsed().as_micros() as u64
+}

@@ -1,0 +1,11 @@
+// lint-fixture: obs/clock.rs
+// Negative corpus for nondet-time: obs/clock.rs is the observability
+// plane's ONE allowlisted wall-clock site (event `ts_us` timestamps are
+// display metadata, never an ordering key).
+
+pub fn wall_ts_us() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}

@@ -1,0 +1,7 @@
+// A seeded wall-clock violation in the obs plane (outside clock.rs):
+// the CI negative gate must flag this as nondet-time.
+
+pub fn sneak_a_clock() -> u64 {
+    let t = std::time::SystemTime::now();
+    t.elapsed().map(|d| d.as_micros() as u64).unwrap_or(0)
+}

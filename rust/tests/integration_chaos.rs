@@ -22,6 +22,7 @@ use photon::config::ExperimentConfig;
 use photon::coordinator::Federation;
 use photon::metrics::RoundRecord;
 use photon::net::{run_loopback, FleetOpts};
+use photon::obs;
 use photon::optim::schedule::CosineSchedule;
 use photon::runtime::{ModelRuntime, Runtime};
 
@@ -212,6 +213,80 @@ fn hung_workers_leases_migrate_and_every_client_folds_once() {
     assert_eq!(replay.global, report.global);
 }
 
+/// The ISSUE 8 keystone: a chaotic fleet's JSONL event log, folded back
+/// through `obs::to_trace`, must bit-equal the `Server::trace()` the
+/// harness returned — the observability stream carries the *same*
+/// realized history the replay-parity machinery runs on, so a saved log
+/// is enough to reproduce a run. The commits in the log must also carry
+/// the exact per-round loss the record stream reports.
+#[test]
+fn chaotic_fleet_event_log_reconstructs_the_trace_bit_exactly() {
+    let dir = std::env::temp_dir().join(format!("photon_obs_fleet_{}", std::process::id()));
+    let log = dir.join("events.jsonl");
+    let cfg = base_cfg(4, 61);
+    let schedule = Schedule::generate(0xC4A0_5008, 4, 4, ChaosConfig::at_rate(0.4));
+    assert!(!schedule.is_quiet(), "seed must actually inject faults");
+    let report = run_loopback(
+        cfg,
+        model(),
+        FleetOpts {
+            workers: 4,
+            compress: true,
+            deadline_secs: Some(8.0),
+            chaos: Some(schedule),
+            migrate: true,
+            obs_log: Some(log.clone()),
+            ..FleetOpts::default()
+        },
+    )
+    .unwrap();
+    assert!(report.worker_errors.is_empty(), "{:?}", report.worker_errors);
+
+    // The log passes the `photon evck` schema gate wholesale...
+    let text = std::fs::read_to_string(&log).unwrap();
+    let n = obs::validate_log_text(&text).expect("fleet log must validate");
+    assert!(n > 0, "the fleet must have emitted events");
+    let (records, skipped) = obs::read_log(&log).unwrap();
+    assert_eq!(skipped, 0, "a cleanly shut down log has no garbage");
+    assert_eq!(records.len(), n);
+
+    // ...and folds back into the exact realized trace.
+    assert_eq!(
+        obs::to_trace(&records),
+        report.trace,
+        "event log must reconstruct Server::trace() bit-exactly"
+    );
+
+    // Commits mirror the round records: same count, same order, and the
+    // nll is the bit-identical server loss (not a re-derivation).
+    let commits: Vec<(u64, u64, f64)> = records
+        .iter()
+        .filter_map(|r| match &r.event {
+            obs::Event::RoundCommit { round, participated, nll, .. } => {
+                Some((*round, *participated, *nll))
+            }
+            _ => None,
+        })
+        .collect();
+    assert_eq!(commits.len(), report.records.len());
+    for (rec, (round, participated, nll)) in report.records.iter().zip(&commits) {
+        assert_eq!(rec.round as u64, *round);
+        assert_eq!(rec.participated as u64, *participated);
+        assert_eq!(rec.server_nll.to_bits(), nll.to_bits(), "round {round} nll");
+    }
+
+    // The reduced view agrees with the fleet report's own accounting.
+    let mut view = obs::ViewState::default();
+    view.apply_all(&records);
+    assert!(view.shutdown, "a clean run ends in a shutdown event");
+    assert_eq!(view.committed_rounds() as usize, report.records.len());
+    assert_eq!(view.total_cut() as usize, report.trace.total_cut());
+    assert_eq!(view.total_migrated() as usize, report.trace.total_migrated());
+    assert_eq!(view.total_rejoined() as usize, report.trace.total_rejoined());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn watchdog_diagnoses_a_wedged_fleet_instead_of_hanging() {
     // A fleet asked to wait for more workers than will ever join: the
@@ -258,6 +333,12 @@ fn soak_50_round_churn_stays_bit_reproducible() {
     let schedule =
         Schedule::generate(0xC4A0_50CA, 4, rounds, ChaosConfig::at_rate(0.35));
     assert!(!schedule.is_quiet());
+    // The soak writes a structured event log (`PHOTON_OBS_LOG` overrides
+    // the path): CI schema-checks it with `photon evck` and uploads it as
+    // a triage artifact when the soak fails.
+    let obs_log = std::env::var("PHOTON_OBS_LOG")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("target/soak_events.jsonl"));
     let report = run_loopback(
         cfg.clone(),
         model(),
@@ -268,6 +349,7 @@ fn soak_50_round_churn_stays_bit_reproducible() {
             chaos: Some(schedule),
             migrate: true,
             watchdog_secs: Some(1200.0),
+            obs_log: Some(obs_log.clone()),
             ..FleetOpts::default()
         },
     )
@@ -275,6 +357,12 @@ fn soak_50_round_churn_stays_bit_reproducible() {
     assert!(report.worker_errors.is_empty(), "{:?}", report.worker_errors);
     assert_eq!(report.records.len(), rounds, "all {rounds} rounds must commit");
     assert_exactly_once(&report, 6, "soak fleet");
+    let (records, _) = obs::read_log(&obs_log).unwrap();
+    assert_eq!(
+        obs::to_trace(&records),
+        report.trace,
+        "soak event log must reconstruct the realized trace"
+    );
     assert!(
         report.trace.total_cut() > 0,
         "a 50-round churn soak should realize some cuts: {:?}",
