@@ -47,6 +47,8 @@ const WALL_CLOCK_FILES: &[&str] = &[
     "net/server.rs",
     "net/harness.rs",
     "net/worker.rs",
+    "net/subagg.rs",
+    "net/poll.rs",
     // the observability plane's ONE sanctioned wall-clock read: event
     // timestamps (`ts_us`) are display metadata, never an ordering key —
     // every other obs/ file must stay clock-free so replay is pure.
@@ -87,7 +89,10 @@ pub fn wall_clock_allowed(path: &str) -> bool {
 }
 
 pub fn in_wire_scope(path: &str) -> bool {
-    path.starts_with("net/") || path.starts_with("link/")
+    // ckpt/store.rs decodes spill files it wrote itself, but a torn write
+    // or disk corruption reaches its decoder exactly like a hostile frame
+    // reaches the link layer — same rules apply.
+    path.starts_with("net/") || path.starts_with("link/") || path == "ckpt/store.rs"
 }
 
 /// Forbid `HashMap`/`HashSet` anywhere in determinism-scoped modules. The
@@ -445,7 +450,17 @@ mod tests {
         assert!(wall_clock_allowed("obs/clock.rs"));
         assert!(!wall_clock_allowed("obs/event.rs"));
         assert!(in_determinism_scope("obs/view.rs"));
+        // tree-mode transport/liveness layers may read clocks for
+        // timeouts; everything they derive from one stays out of round
+        // math (see the determinism contract in docs/ARCHITECTURE.md).
+        assert!(wall_clock_allowed("net/subagg.rs"));
+        assert!(wall_clock_allowed("net/poll.rs"));
         assert!(in_wire_scope("link/mod.rs"));
+        assert!(in_wire_scope("net/subagg.rs"));
+        // the state store's spill-file decoder is wire-scoped: torn writes
+        // reach it exactly like hostile frames reach the link layer.
+        assert!(in_wire_scope("ckpt/store.rs"));
+        assert!(!in_wire_scope("ckpt/mod.rs"));
         assert!(!in_wire_scope("model/mod.rs"));
     }
 

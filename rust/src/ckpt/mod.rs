@@ -14,6 +14,9 @@ use anyhow::{bail, Context, Result};
 
 use crate::data::stream::StreamCursor;
 
+mod store;
+pub use store::StateStore;
+
 const MAGIC: &[u8; 4] = b"PHCK";
 /// v2: per-client `cursors` became a vector (one cursor per connectivity
 /// island) so multi-island clients resume sample-exact. v1 files saved only
@@ -255,7 +258,7 @@ impl<'a> Dec<'a> {
     }
 }
 
-fn fnv1a(bytes: &[u8]) -> u64 {
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
     for &b in bytes {
         h ^= b as u64;

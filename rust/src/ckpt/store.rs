@@ -1,0 +1,343 @@
+//! Memory-bounded client-state store for the deployment plane.
+//!
+//! The root server owns every client's inter-round state
+//! ([`ClientCkpt`]). At paper scale (§5: millions of sampled clients)
+//! keeping all of them resident is exactly the memory wall the
+//! aggregator must not hit, so [`StateStore`] caps the *resident*
+//! encoded bytes at a configured budget and spills least-recently-used
+//! entries to disk, checksummed, reloading them byte-identically on
+//! demand.
+//!
+//! Determinism contract: eviction order is a pure function of the access
+//! sequence (a logical tick counter, never a wall clock), and the stored
+//! representation is the canonical `Enc::client` encoding — the same
+//! bytes that travel in a `RoundAssign` and persist in a checkpoint — so
+//! a state that round-trips through a spill is the state, not a
+//! re-encoding of it. Generation counters (bumped on every `put`) let
+//! the server prove a worker already holds a state before shipping a
+//! `proto::AssignState::Ref` instead of the full bytes.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::Write;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use super::{fnv1a, ClientCkpt, Dec, Enc};
+
+/// One resident entry: the state's canonical encoding plus its
+/// last-use tick (the key into the LRU index).
+struct Resident {
+    bytes: Vec<u8>,
+    tick: u64,
+}
+
+/// Spill-to-disk LRU cache of client states, keyed by client id, bounded
+/// by resident encoded bytes.
+pub struct StateStore {
+    budget: u64,
+    spill_dir: PathBuf,
+    resident: BTreeMap<usize, Resident>,
+    /// LRU index: ordered `(last_use_tick, client)` pairs — the first
+    /// element is always the coldest resident entry.
+    lru: BTreeSet<(u64, usize)>,
+    resident_bytes: u64,
+    tick: u64,
+    /// Per-client state generation, bumped on every `put`.
+    gens: BTreeMap<usize, u64>,
+    /// Clients whose current state lives only on disk.
+    spilled: BTreeSet<usize>,
+    spill_count: u64,
+    load_count: u64,
+}
+
+/// Canonical state encoding: the same `Enc::client` bytes a
+/// `RoundAssign` ships and a checkpoint persists.
+fn encode_state(c: &ClientCkpt) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.client(c);
+    e.buf
+}
+
+fn decode_state(bytes: &[u8]) -> Result<ClientCkpt> {
+    let mut d = Dec::new(bytes);
+    let c = d.client()?;
+    if !d.done() {
+        bail!("trailing bytes after client state");
+    }
+    Ok(c)
+}
+
+impl StateStore {
+    /// A store that keeps at most `budget_bytes` of encoded client state
+    /// resident, spilling the coldest entries into `spill_dir`. The
+    /// directory is created lazily on first spill.
+    pub fn new(budget_bytes: u64, spill_dir: impl Into<PathBuf>) -> StateStore {
+        StateStore {
+            budget: budget_bytes,
+            spill_dir: spill_dir.into(),
+            resident: BTreeMap::new(),
+            lru: BTreeSet::new(),
+            resident_bytes: 0,
+            tick: 0,
+            gens: BTreeMap::new(),
+            spilled: BTreeSet::new(),
+            spill_count: 0,
+            load_count: 0,
+        }
+    }
+
+    /// Insert or overwrite `client`'s state; returns the new generation.
+    /// May spill colder entries (or, if this state alone exceeds the
+    /// budget, the state itself) to keep `resident_bytes() <= budget()`.
+    pub fn put(&mut self, client: usize, state: &ClientCkpt) -> Result<u64> {
+        let bytes = encode_state(state);
+        self.insert_resident(client, bytes);
+        self.spilled.remove(&client);
+        // A put supersedes any spilled copy of an older generation; the
+        // stale file (if any) is overwritten on the next spill.
+        let gen = self.gens.entry(client).or_insert(0);
+        *gen += 1;
+        let gen = *gen;
+        self.enforce_budget()?;
+        Ok(gen)
+    }
+
+    /// Fetch `client`'s state: resident hit, or a checksummed reload
+    /// from the spill file (which re-promotes the entry to resident).
+    /// `Ok(None)` means the store has never seen this client.
+    pub fn get(&mut self, client: usize) -> Result<Option<ClientCkpt>> {
+        if self.resident.contains_key(&client) {
+            self.touch(client);
+            if let Some(ent) = self.resident.get(&client) {
+                return Ok(Some(decode_state(&ent.bytes)?));
+            }
+        }
+        if !self.spilled.contains(&client) {
+            return Ok(None);
+        }
+        let bytes = self.load_spill(client)?;
+        let state = decode_state(&bytes)?;
+        self.spilled.remove(&client);
+        self.insert_resident(client, bytes);
+        self.enforce_budget()?;
+        Ok(Some(state))
+    }
+
+    /// Current generation of `client`'s state (`None` if never stored).
+    pub fn gen_of(&self, client: usize) -> Option<u64> {
+        self.gens.get(&client).copied()
+    }
+
+    /// True if the client's state is tracked (resident or spilled).
+    pub fn contains(&self, client: usize) -> bool {
+        self.resident.contains_key(&client) || self.spilled.contains(&client)
+    }
+
+    /// Encoded bytes currently held in memory. Always `<= budget()`.
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident_bytes
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Number of entries spilled to disk over the store's lifetime.
+    pub fn spill_count(&self) -> u64 {
+        self.spill_count
+    }
+
+    /// Number of entries reloaded from disk over the store's lifetime.
+    pub fn load_count(&self) -> u64 {
+        self.load_count
+    }
+
+    /// Clients currently resident (the rest of the tracked set is on disk).
+    pub fn resident_len(&self) -> usize {
+        self.resident.len()
+    }
+
+    fn insert_resident(&mut self, client: usize, bytes: Vec<u8>) {
+        if let Some(old) = self.resident.remove(&client) {
+            self.resident_bytes -= old.bytes.len() as u64;
+            self.lru.remove(&(old.tick, client));
+        }
+        self.tick += 1;
+        self.resident_bytes += bytes.len() as u64;
+        self.lru.insert((self.tick, client));
+        self.resident.insert(client, Resident { bytes, tick: self.tick });
+    }
+
+    fn touch(&mut self, client: usize) {
+        if let Some(ent) = self.resident.get_mut(&client) {
+            self.lru.remove(&(ent.tick, client));
+            self.tick += 1;
+            ent.tick = self.tick;
+            self.lru.insert((self.tick, client));
+        }
+    }
+
+    /// Spill coldest-first until the resident set fits the budget. Ends
+    /// with `resident_bytes <= budget` unconditionally: a single state
+    /// larger than the whole budget ends up on disk with nothing
+    /// resident.
+    fn enforce_budget(&mut self) -> Result<()> {
+        while self.resident_bytes > self.budget {
+            let coldest = match self.lru.iter().next() {
+                Some(&(_, c)) => c,
+                None => break,
+            };
+            self.spill(coldest)?;
+        }
+        Ok(())
+    }
+
+    fn spill_path(&self, client: usize) -> PathBuf {
+        self.spill_dir.join(format!("state_{client}.bin"))
+    }
+
+    fn spill(&mut self, client: usize) -> Result<()> {
+        let ent = match self.resident.remove(&client) {
+            Some(e) => e,
+            None => return Ok(()),
+        };
+        self.lru.remove(&(ent.tick, client));
+        self.resident_bytes -= ent.bytes.len() as u64;
+        std::fs::create_dir_all(&self.spill_dir)
+            .with_context(|| format!("creating spill dir {}", self.spill_dir.display()))?;
+        let path = self.spill_path(client);
+        let tmp = path.with_extension("tmp");
+        // Payload + FNV-1a trailer, same tamper guard as a checkpoint.
+        let sum = fnv1a(&ent.bytes);
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(&ent.bytes)
+            .and_then(|_| f.write_all(&sum.to_le_bytes()))
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        drop(f);
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("renaming {}", path.display()))?;
+        self.spilled.insert(client);
+        self.spill_count += 1;
+        Ok(())
+    }
+
+    fn load_spill(&mut self, client: usize) -> Result<Vec<u8>> {
+        let path = self.spill_path(client);
+        let mut raw = std::fs::read(&path)
+            .with_context(|| format!("reading spill file {}", path.display()))?;
+        if raw.len() < 8 {
+            bail!("spill file {} too short", path.display());
+        }
+        let body_len = raw.len() - 8;
+        let mut trailer = [0u8; 8];
+        trailer.copy_from_slice(&raw[body_len..]);
+        let trailer = u64::from_le_bytes(trailer);
+        raw.truncate(body_len);
+        if fnv1a(&raw) != trailer {
+            bail!("spill file {} checksum mismatch", path.display());
+        }
+        self.load_count += 1;
+        Ok(raw)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::stream::StreamCursor;
+
+    fn state(step: i64, n: usize) -> ClientCkpt {
+        ClientCkpt {
+            opt_m: (0..n).map(|i| i as f32 * 0.5).collect(),
+            opt_v: (0..n).map(|i| i as f32 * 0.25).collect(),
+            local_step: step,
+            cursors: vec![StreamCursor {
+                mix_state: [step as u64, 2, 3, 4],
+                bucket_states: vec![([5, 6, 7, 8], 9)],
+            }],
+            residual: vec![0.125; n / 2],
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("photon_store_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn put_get_roundtrip_and_gens() {
+        let dir = tmp_dir("rt");
+        let mut st = StateStore::new(1 << 20, &dir);
+        let s = state(7, 16);
+        assert_eq!(st.put(3, &s).unwrap(), 1);
+        assert_eq!(st.put(3, &s).unwrap(), 2, "every put bumps the generation");
+        assert_eq!(st.gen_of(3), Some(2));
+        assert_eq!(st.gen_of(9), None);
+        assert_eq!(st.get(3).unwrap().unwrap(), s);
+        assert!(st.get(9).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn budget_is_enforced_by_spilling_lru() {
+        let dir = tmp_dir("lru");
+        let one = encode_state(&state(0, 32)).len() as u64;
+        // Room for exactly two entries.
+        let mut st = StateStore::new(2 * one, &dir);
+        st.put(0, &state(0, 32)).unwrap();
+        st.put(1, &state(1, 32)).unwrap();
+        assert_eq!(st.resident_len(), 2);
+        // Touch 0 so 1 becomes the cold one.
+        st.get(0).unwrap();
+        st.put(2, &state(2, 32)).unwrap();
+        assert!(st.resident_bytes() <= st.budget());
+        assert_eq!(st.resident_len(), 2);
+        assert!(st.contains(1), "spilled, not lost");
+        assert_eq!(st.spill_count(), 1);
+        // Reload promotes 1 back and spills the new coldest (0).
+        assert_eq!(st.get(1).unwrap().unwrap(), state(1, 32));
+        assert!(st.resident_bytes() <= st.budget());
+        assert_eq!(st.load_count(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn spilled_entry_round_trips_byte_identically() {
+        let dir = tmp_dir("bytes");
+        let s = state(42, 64);
+        let want = encode_state(&s);
+        let mut st = StateStore::new(0, &dir); // everything spills
+        st.put(5, &s).unwrap();
+        assert_eq!(st.resident_bytes(), 0);
+        let got = st.get(5).unwrap().unwrap();
+        assert_eq!(encode_state(&got), want, "spill round-trip must be byte-identical");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupted_spill_file_is_rejected() {
+        let dir = tmp_dir("corrupt");
+        let mut st = StateStore::new(0, &dir);
+        st.put(1, &state(1, 8)).unwrap();
+        let path = dir.join("state_1.bin");
+        let mut raw = std::fs::read(&path).unwrap();
+        raw[0] ^= 0xFF;
+        std::fs::write(&path, &raw).unwrap();
+        assert!(st.get(1).is_err(), "flipped byte must fail the checksum");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn oversized_state_never_exceeds_budget_resident() {
+        let dir = tmp_dir("oversize");
+        let mut st = StateStore::new(8, &dir); // smaller than any state
+        st.put(0, &state(0, 128)).unwrap();
+        assert_eq!(st.resident_bytes(), 0);
+        assert!(st.contains(0));
+        assert_eq!(st.get(0).unwrap().unwrap(), state(0, 128));
+        // The reload re-promoted then re-spilled: still within budget.
+        assert!(st.resident_bytes() <= st.budget());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

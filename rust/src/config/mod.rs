@@ -82,6 +82,14 @@ pub struct ExperimentConfig {
     /// module). `None` is the pre-codec lossless path and leaves every
     /// record bit-identical to builds without the codec plane.
     pub codec: UpdateCodec,
+    /// Aggregation-tree fan-in: how many sub-aggregator groups the sampled
+    /// clients are partitioned into each round (contiguous slices in
+    /// sampled order — see `coordinator::federation::tier_slices`). The
+    /// partition is part of the round *plan*, so the in-process fold and a
+    /// deployed aggregation tree compute the identical group-structured
+    /// fold and stay bit-equal. `1` (the default) is the flat fold,
+    /// bit-identical to builds without the tier plane.
+    pub tiers: usize,
 }
 
 impl ExperimentConfig {
@@ -105,6 +113,7 @@ impl ExperimentConfig {
             fleet: None,
             exec: ExecConfig::default(),
             codec: UpdateCodec::None,
+            tiers: 1,
         }
     }
 
@@ -150,6 +159,11 @@ impl ExperimentConfig {
         );
         anyhow::ensure!(self.local_steps >= 1, "τ must be >= 1");
         anyhow::ensure!(self.rounds >= 1, "need at least one round");
+        anyhow::ensure!(
+            self.tiers >= 1 && self.tiers <= self.clients_per_round,
+            "tiers must be in [1, K]: every sub-aggregator group needs at \
+             least one sampled client"
+        );
         self.codec.validate()?;
         Ok(())
     }
@@ -268,6 +282,18 @@ mod tests {
         c.validate().unwrap();
         assert_eq!(c.fleet.as_ref().unwrap().clients.len(), 16);
         assert_eq!((c.rounds, c.local_steps), (10, 500));
+    }
+
+    #[test]
+    fn validation_catches_bad_tiers() {
+        let mut c = ExperimentConfig::quickstart("m75a");
+        assert_eq!(c.tiers, 1, "flat fold is the default");
+        c.tiers = 0;
+        assert!(c.validate().is_err());
+        c.tiers = c.clients_per_round + 1; // more groups than sampled clients
+        assert!(c.validate().is_err());
+        c.tiers = c.clients_per_round;
+        c.validate().unwrap();
     }
 
     #[test]

@@ -25,7 +25,9 @@ use crate::data::stream::TokenStream;
 use crate::link;
 use crate::metrics::{mean_pairwise_cosine_from_gram, mean_std, MetricsLog, RoundRecord};
 use crate::model::init::init_params;
-use crate::model::vecmath::{l2_norm, streaming_aggregate, AggScratch};
+use crate::model::vecmath::{
+    l2_norm, streaming_aggregate, streaming_fold, tiered_fold, AggScratch,
+};
 use crate::obs::{Event as ObsEvent, EventSink};
 use crate::optim::outer::OuterOpt;
 use crate::runtime::{DispatchPolicy, ModelRuntime, Runtime};
@@ -105,6 +107,27 @@ pub fn bind_client_streams(
             )
         })
         .collect()
+}
+
+/// Contiguous tier partition of `k` round slots into at most `tiers`
+/// non-empty groups in slot (= sampled) order, first `k mod g` groups one
+/// larger. This is the canonical sub-aggregator assignment: the root
+/// server leases `runnable[slice]` to sub-aggregator `i`, and the
+/// in-process fold groups the same slices — the partition is *planned*,
+/// never emergent from arrival order, which is what keeps the two planes
+/// bit-equal (f64 folds are only order-stable under a fixed grouping).
+pub fn tier_slices(k: usize, tiers: usize) -> Vec<std::ops::Range<usize>> {
+    let g = tiers.max(1).min(k);
+    let mut out = Vec::with_capacity(g);
+    let base = k / g.max(1);
+    let extra = k % g.max(1);
+    let mut lo = 0;
+    for i in 0..g {
+        let len = base + usize::from(i < extra);
+        out.push(lo..lo + len);
+        lo += len;
+    }
+    out
 }
 
 /// One planned round before execution: who was sampled, who is runnable
@@ -425,6 +448,13 @@ impl Federation {
             "commit_round({round}) out of order: federation is at round {}",
             self.next_round
         );
+        // The tier grouping is a function of this round's *plan*, so it
+        // must be derived before the round counter advances below.
+        let tier_groups = if self.cfg.tiers > 1 && !updates.is_empty() {
+            Some(self.commit_groups(&updates)?)
+        } else {
+            None
+        };
         // Schedule advances by the nominal τ regardless of faults (the
         // paper's schedule is synchronized across sequential steps).
         self.seq_step += self.cfg.local_steps;
@@ -453,17 +483,38 @@ impl Federation {
         // --- Aggregation (L.8–9): one streaming pass over the K client
         // vectors produces the weighted mean, the pseudo-gradient, and the
         // delta Gram matrix (norms + pairwise cosines) with no per-round
-        // O(K·N) allocation.
+        // O(K·N) allocation. With `cfg.tiers > 1` the fold is instead the
+        // group-structured `tiered_fold` over the planned tier partition —
+        // the identical computation a deployed aggregation tree performs
+        // (sub-aggregators fold their slice, the root folds the carried
+        // `(weight, mean)` pairs) — and is Gram-free: pairwise cosines
+        // would need every full client row at the root, defeating the
+        // tree, so both planes record `client_cosine_mean = 0.0`.
         let rows: Vec<&[f32]> = updates.iter().map(|u| u.params.as_slice()).collect();
         let weights: Vec<f64> = updates.iter().map(|u| u.n_samples).collect();
-        let agg = streaming_aggregate(
-            &rows,
-            &weights,
-            &self.global,
-            &mut self.scratch_mean,
-            &mut self.scratch_pg,
-            &mut self.scratch_agg,
-        );
+        let client_cosine_mean;
+        if let Some(groups) = &tier_groups {
+            tiered_fold(
+                &rows,
+                &weights,
+                groups,
+                &self.global,
+                &mut self.scratch_mean,
+                &mut self.scratch_pg,
+                &mut self.scratch_agg,
+            );
+            client_cosine_mean = 0.0;
+        } else {
+            let agg = streaming_aggregate(
+                &rows,
+                &weights,
+                &self.global,
+                &mut self.scratch_mean,
+                &mut self.scratch_pg,
+                &mut self.scratch_agg,
+            );
+            client_cosine_mean = mean_pairwise_cosine_from_gram(agg.k, &agg.gram);
+        }
         drop(rows);
         let pseudo_grad_norm = l2_norm(&self.scratch_pg);
         self.outer.step(&mut self.global, &self.scratch_pg);
@@ -502,7 +553,7 @@ impl Federation {
             )
             .0,
             momentum_norm: self.outer.momentum_norm(),
-            client_cosine_mean: mean_pairwise_cosine_from_gram(agg.k, &agg.gram),
+            client_cosine_mean,
             participated: updates.len(),
             comm_bytes: link::round_bytes(self.model.n_params(), updates.len()),
             comm_bytes_wire: {
@@ -510,6 +561,183 @@ impl Federation {
                 // participating client plus each update's measured size up.
                 // Deterministic and computed identically by the deployment
                 // plane, so it survives the bit-parity check.
+                let dense_frame = link::dense_frame_bytes(self.model.n_params());
+                let up: u64 = updates
+                    .iter()
+                    .map(|u| if u.wire_bytes > 0 { u.wire_bytes } else { dense_frame })
+                    .sum();
+                updates.len() as u64 * dense_frame + up
+            },
+            wall_secs: t0.elapsed().as_secs_f64(),
+        };
+        self.emit_commit(&rec);
+        self.log.push(rec.clone());
+        self.write_round_checkpoint()?;
+        Ok(rec)
+    }
+
+    /// Derive the tier grouping over the *arrived* updates: partition the
+    /// planned runnable list (sampled order) into `cfg.tiers` contiguous
+    /// slices via [`tier_slices`], then keep each update in its planned
+    /// group. Cuts shrink a group — they never re-balance the partition —
+    /// so a deployed tree (which leased the planned slices to its
+    /// sub-aggregators before anyone crashed) and this in-process fold
+    /// group identically and stay bit-equal.
+    fn commit_groups(&self, updates: &[ClientUpdate]) -> Result<Vec<std::ops::Range<usize>>> {
+        let d = self.plan_round();
+        let mut group_of = vec![usize::MAX; self.cfg.n_clients];
+        for (gid, slice) in tier_slices(d.runnable.len(), self.cfg.tiers).iter().enumerate() {
+            for &(c, _) in &d.runnable[slice.clone()] {
+                group_of[c] = gid;
+            }
+        }
+        let mut groups: Vec<std::ops::Range<usize>> = Vec::new();
+        let mut current: Option<usize> = None;
+        for (i, u) in updates.iter().enumerate() {
+            let gid = group_of.get(u.client_id).copied().unwrap_or(usize::MAX);
+            anyhow::ensure!(
+                gid != usize::MAX,
+                "update from client {} outside the round plan",
+                u.client_id
+            );
+            if current == Some(gid) {
+                if let Some(last) = groups.last_mut() {
+                    last.end = i + 1;
+                }
+            } else {
+                anyhow::ensure!(
+                    current.map_or(true, |c| gid > c),
+                    "updates out of sampled order at client {}",
+                    u.client_id
+                );
+                groups.push(i..i + 1);
+                current = Some(gid);
+            }
+        }
+        Ok(groups)
+    }
+
+    /// Commit a round from **pre-folded** tier pushes: the deployment
+    /// plane's aggregation tree calls this where the flat server calls
+    /// [`Self::commit_round`]. `updates` are the member metric rows
+    /// (params empty — their pseudo-gradients only ever existed inside
+    /// the sub-aggregators' folds) in sampled order; `folded` is one
+    /// `(weight, mean)` pair per tier group in group order, exactly what
+    /// each `FoldedPush` carried.
+    ///
+    /// Bit-parity contract with the in-process tiered fold: each group's
+    /// `weight` must be the *sequential* sum of its members' `n_samples`
+    /// in sampled order and its `mean` the `weighted_mean_into` of their
+    /// rows in that order — both are re-derivable from the round plan, so
+    /// the weight carry is verified here (bitwise) before anything folds.
+    pub fn commit_round_folded(
+        &mut self,
+        round: usize,
+        updates: Vec<ClientUpdate>,
+        folded: Vec<(f64, Vec<f32>)>,
+        t0: Instant,
+    ) -> Result<RoundRecord> {
+        anyhow::ensure!(
+            round == self.next_round,
+            "commit_round_folded({round}) out of order: federation is at round {}",
+            self.next_round
+        );
+        anyhow::ensure!(
+            self.cfg.tiers > 1,
+            "commit_round_folded needs a tiered config (cfg.tiers > 1)"
+        );
+        if updates.is_empty() {
+            anyhow::ensure!(
+                folded.is_empty(),
+                "folded groups without member updates"
+            );
+            // Delegate: the all-dropped path is fold-free and identical.
+            return self.commit_round(round, updates, t0);
+        }
+        // Structural + weight-carry verification against this round's plan
+        // (before the counter advances, like commit_round's tier_groups).
+        let groups = self.commit_groups(&updates)?;
+        anyhow::ensure!(
+            folded.len() == groups.len(),
+            "{} folded groups for {} planned (non-empty) tier groups",
+            folded.len(),
+            groups.len()
+        );
+        for (g, (w, mean)) in groups.iter().zip(&folded) {
+            let want: f64 = updates[g.clone()].iter().map(|u| u.n_samples).sum();
+            anyhow::ensure!(
+                w.to_bits() == want.to_bits(),
+                "folded group weight {w} != sequential member-weight sum {want}"
+            );
+            anyhow::ensure!(
+                mean.len() == self.global.len(),
+                "folded mean has {} params, model has {}",
+                mean.len(),
+                self.global.len()
+            );
+        }
+        self.seq_step += self.cfg.local_steps;
+        self.next_round += 1;
+
+        // Second-stage fold: group means as rows with carried weights —
+        // the same `streaming_fold` call `tiered_fold` ends with, so the
+        // tree root and the in-process tiered commit are bit-identical.
+        let mean_rows: Vec<&[f32]> = folded.iter().map(|(_, m)| m.as_slice()).collect();
+        let group_weights: Vec<f64> = folded.iter().map(|(w, _)| *w).collect();
+        streaming_fold(
+            &mean_rows,
+            &group_weights,
+            &self.global,
+            &mut self.scratch_mean,
+            &mut self.scratch_pg,
+            &mut self.scratch_agg,
+        );
+        drop(mean_rows);
+        let pseudo_grad_norm = l2_norm(&self.scratch_pg);
+        self.outer.step(&mut self.global, &self.scratch_pg);
+
+        let losses: Vec<f64> = updates.iter().map(|u| u.loss_mean).collect();
+        let (loss_mean, loss_std) = mean_std(&losses);
+        let (nll, ppl) = self.eval_global()?;
+        let rec = RoundRecord {
+            round,
+            server_ppl: ppl,
+            server_nll: nll,
+            client_loss_mean: loss_mean,
+            client_loss_std: loss_std,
+            client_ppl_mean: loss_mean.exp(),
+            global_model_norm: l2_norm(&self.global),
+            client_model_norm_mean: mean_std(
+                &updates.iter().map(|u| u.model_norm).collect::<Vec<_>>(),
+            )
+            .0,
+            client_avg_norm: l2_norm(&self.scratch_mean),
+            pseudo_grad_norm,
+            step_grad_norm_mean: mean_std(
+                &updates.iter().map(|u| u.step_grad_norm_mean).collect::<Vec<_>>(),
+            )
+            .0,
+            applied_update_norm_mean: mean_std(
+                &updates
+                    .iter()
+                    .map(|u| u.applied_update_norm_mean)
+                    .collect::<Vec<_>>(),
+            )
+            .0,
+            act_norm_mean: mean_std(
+                &updates.iter().map(|u| u.act_norm_mean).collect::<Vec<_>>(),
+            )
+            .0,
+            momentum_norm: self.outer.momentum_norm(),
+            // The tree fold is Gram-free on both planes (see commit_round).
+            client_cosine_mean: 0.0,
+            participated: updates.len(),
+            comm_bytes: link::round_bytes(self.model.n_params(), updates.len()),
+            comm_bytes_wire: {
+                // Same flat accounting as commit_round: the tree changes
+                // who folds, not what the federation's transit metric
+                // means. Member `wire_bytes` carry the subagg-measured
+                // worker→subagg leg.
                 let dense_frame = link::dense_frame_bytes(self.model.n_params());
                 let up: u64 = updates
                     .iter()
@@ -696,12 +924,18 @@ impl Federation {
         };
         let profiles =
             crate::sim::fleet_profiles(fleet, n_params, tokens, crate::sim::DEFAULT_MFU);
-        let sim_cfg = crate::sim::SimConfig::asymmetric(
+        let mut sim_cfg = crate::sim::SimConfig::asymmetric(
             n_params * 4,
             self.cfg.codec.encoded_body_bytes(n_params as usize),
             link,
             policy,
         );
+        if self.cfg.tiers > 1 {
+            // Tree topology: price the sub-aggregator → root hop. Folded
+            // means are always dense (never re-coded), one per tier group.
+            sim_cfg = sim_cfg
+                .with_tiers(self.cfg.tiers, link::dense_frame_bytes(n_params as usize));
+        }
         crate::sim::Simulator::new(self.round_plan(), profiles, sim_cfg).run()
     }
 

@@ -77,6 +77,13 @@ pub enum MsgKind {
     Shutdown = 10,
     /// Server → worker: admission refused (version mismatch etc.).
     Reject = 11,
+    /// Sub-aggregator → server: tier admission request (proto v4 — the
+    /// joiner leases a *slice* of each round's sampled clients and folds
+    /// them locally; see `net::subagg`).
+    SubJoin = 12,
+    /// Sub-aggregator → server: one pre-folded `(weight, mean)` pair plus
+    /// the member updates' metrics and advanced client states (proto v4).
+    FoldedPush = 13,
 }
 
 impl MsgKind {
@@ -93,6 +100,8 @@ impl MsgKind {
             9 => MsgKind::RoundCommit,
             10 => MsgKind::Shutdown,
             11 => MsgKind::Reject,
+            12 => MsgKind::SubJoin,
+            13 => MsgKind::FoldedPush,
             _ => bail!("unknown message kind {v}"),
         })
     }

@@ -25,6 +25,12 @@
 //!              bit-exact trace replay and sim-priced churn
 //! photon worker --connect HOST:7070 [--name NAME]
 //!              run one LLM Node worker against a remote Aggregator
+//! photon subagg --upstream HOST:7070 [--bind 0.0.0.0:7071] [--name NAME]
+//!              [--min-workers K] [--deadline-secs F]
+//!              run a mid-tier sub-aggregator: leases a slice of each
+//!              sampled cohort from a tree-mode root (`serve --tiers T`),
+//!              re-leases it to downstream workers, folds their updates
+//!              locally, pushes one pre-folded pair upstream
 //! photon eval --config m350a               downstream ICL suite on a fresh init
 //! photon info [--config NAME]              artifact inventory
 //! photon top --follow LOG | --replay LOG [--until-seq N] [--stats]
@@ -70,6 +76,8 @@ const SPEC: Spec = Spec {
         "stall-secs", "event-log", "follow", "replay", "until-seq",
         // update-codec plane (train / serve / exp comm|distributed|wallclock)
         "codec",
+        // aggregation-tree plane (train / serve / subagg)
+        "tiers", "upstream", "state-budget",
         // resilience plane (exp chaos)
         "rates",
         // static-analysis plane (lint)
@@ -88,7 +96,7 @@ const SPEC: Spec = Spec {
 };
 
 fn usage() -> &'static str {
-    "usage: photon <list|exp|train|serve|worker|eval|info|top|evck|lint|benchck> [args]\n  try: photon list"
+    "usage: photon <list|exp|train|serve|worker|subagg|eval|info|top|evck|lint|benchck> [args]\n  try: photon list"
 }
 
 fn main() {
@@ -114,6 +122,7 @@ fn run(raw: Vec<String>) -> Result<()> {
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
         "worker" => cmd_worker(&args),
+        "subagg" => cmd_subagg(&args),
         "eval" => cmd_eval(&args),
         "info" => cmd_info(&args),
         "top" => cmd_top(&args),
@@ -217,6 +226,7 @@ fn train_config(args: &Args, label_prefix: &str) -> Result<ExperimentConfig> {
             serialize_dispatch: !args.flag("parallel-dispatch"),
         },
         codec: UpdateCodec::parse(&args.get_or("codec", "none"))?,
+        tiers: args.get_usize("tiers", 1)?,
     })
 }
 
@@ -298,6 +308,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         migrate: args.flag("migrate"),
         compress: !args.flag("no-compress"),
         stall_secs: args.get_f64("stall-secs", 3600.0)?,
+        state_budget: match args.get_u64("state-budget", 0)? {
+            0 => None,
+            b => Some(b),
+        },
         ..ServeOpts::default()
     };
     let mut fed = Federation::new(cfg)?;
@@ -341,6 +355,35 @@ fn cmd_worker(args: &Args) -> Result<()> {
     println!(
         "[worker] session over: slot {}, {} rounds served, {} updates pushed",
         report.worker_slot, report.rounds_served, report.updates_pushed
+    );
+    Ok(())
+}
+
+/// `photon subagg`: mid-tier sub-aggregator between a tree-mode root
+/// Aggregator (`serve --tiers T`, T > 1) and downstream workers. Joins
+/// the root as one worker slot, leases a slice of each sampled cohort,
+/// re-leases it to its own workers, and pushes one pre-folded
+/// `(weight, mean)` pair upstream per round.
+fn cmd_subagg(args: &Args) -> Result<()> {
+    use photon::net::{run_subagg, SubaggOpts};
+    let upstream = args.require("upstream")?;
+    let opts = SubaggOpts {
+        name: args.get_or("name", &format!("subagg-{}", std::process::id())),
+        bind: args.get_or("bind", "127.0.0.1:0"),
+        min_workers: args.get_usize("min-workers", 1)?,
+        deadline_secs: match args.get_f64("deadline-secs", 0.0)? {
+            x if x > 0.0 => Some(x),
+            _ => None,
+        },
+        stall_secs: args.get_f64("stall-secs", 3600.0)?,
+        verbose: true,
+        ..SubaggOpts::default()
+    };
+    let report = run_subagg(upstream, opts, None)?;
+    println!(
+        "[subagg] session over: {} round(s) folded upstream, {} member update(s), \
+         {} worker connection(s)",
+        report.rounds_served, report.members_folded, report.workers_admitted
     );
     Ok(())
 }

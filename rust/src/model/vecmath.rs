@@ -395,6 +395,63 @@ pub fn streaming_fold(
     }
 }
 
+/// The group-structured (hierarchical) fold: partition the K rows into
+/// contiguous `groups` (in row order), take each group's weighted mean
+/// (exactly [`weighted_mean_into`] over the slice — the fold a
+/// sub-aggregator runs locally), then fold the group means as rows with
+/// their **carried weights** `W_g = Σ w_i` (sequential sum in group order)
+/// via [`streaming_fold`] — the root's fold over `FoldedPush` pairs.
+///
+/// Two contracts, both pinned by `tests/props_tree.rs`:
+///
+/// * **Single group** (`groups = [0..k]`): `W/W = 1.0` normalization makes
+///   the stage-2 pass an exact f32→f64→f32 identity, so the result is
+///   **bit-identical** to the flat [`streaming_fold`] — `tiers = 1` costs
+///   nothing and changes nothing.
+/// * **Any partition**: the result is a deterministic function of the
+///   partition (which the federation derives from the round plan, so every
+///   plane — in-process, flat fleet, aggregation tree — computes the same
+///   grouping and stays bit-equal). Different partitions may differ in the
+///   last ulp (f64 addition is not associative); that is why the partition
+///   is *config*, never an emergent property of arrival order.
+///
+/// Stage 1 materializes one f32 mean per group (`O(G·N)`) — the same
+/// memory shape a real tree has (each sub-aggregator holds one folded
+/// mean), and far below the `O(K·N)` the flat fold's caller already holds.
+pub fn tiered_fold(
+    rows: &[&[f32]],
+    weights: &[f64],
+    groups: &[std::ops::Range<usize>],
+    global: &[f32],
+    mean_out: &mut [f32],
+    pg_out: &mut [f32],
+    scratch: &mut AggScratch,
+) {
+    let k = rows.len();
+    assert_eq!(k, weights.len());
+    assert!(!groups.is_empty(), "tiered_fold needs at least one group");
+    let n = global.len();
+    assert_eq!(mean_out.len(), n);
+    assert_eq!(pg_out.len(), n);
+    let mut cursor = 0usize;
+    for g in groups {
+        assert_eq!(g.start, cursor, "groups must partition rows contiguously in order");
+        assert!(g.end > g.start, "empty sub-fold group");
+        cursor = g.end;
+    }
+    assert_eq!(cursor, k, "groups must cover every row");
+    let mut group_means: Vec<Vec<f32>> = Vec::with_capacity(groups.len());
+    let mut group_weights: Vec<f64> = Vec::with_capacity(groups.len());
+    for g in groups {
+        let mut m = vec![0.0f32; n];
+        weighted_mean_into(&rows[g.clone()], &weights[g.clone()], &mut m);
+        group_means.push(m);
+        group_weights.push(weights[g.clone()].iter().sum());
+    }
+    let mean_rows: Vec<&[f32]> = group_means.iter().map(|v| v.as_slice()).collect();
+    streaming_fold(&mean_rows, &group_weights, global, mean_out, pg_out, scratch);
+}
+
 /// `out = a - b` (pseudo-gradient: Δ = θ_global − θ_client).
 pub fn sub_into(a: &[f32], b: &[f32], out: &mut [f32]) {
     debug_assert_eq!(a.len(), b.len());
@@ -764,6 +821,71 @@ mod tests {
         assert_eq!(pg, [1.0, 0.0, -1.0]);
         // Single client: delta from the mean is identically zero.
         assert_eq!(stats.delta_norm(0), 0.0);
+    }
+
+    #[test]
+    fn tiered_fold_single_group_is_flat_fold_bitwise() {
+        for n in awkward_lengths() {
+            let rowsv = test_rows(n, 5);
+            let rows: Vec<&[f32]> = rowsv.iter().map(|v| v.as_slice()).collect();
+            let weights = [2.0, 1.0, 1.0, 0.5, 4.0];
+            let global: Vec<f32> = (0..n).map(|i| (i % 7) as f32 * 0.3 - 0.8).collect();
+
+            let mut flat_mean = vec![0.0f32; n];
+            let mut flat_pg = vec![0.0f32; n];
+            let mut scratch = AggScratch::new();
+            streaming_fold(&rows, &weights, &global, &mut flat_mean, &mut flat_pg, &mut scratch);
+
+            let mut mean = vec![0.0f32; n];
+            let mut pg = vec![0.0f32; n];
+            tiered_fold(&rows, &weights, &[0..5], &global, &mut mean, &mut pg, &mut scratch);
+            assert_eq!(mean, flat_mean, "single-group tiered mean n={n}");
+            assert_eq!(pg, flat_pg, "single-group tiered pg n={n}");
+        }
+    }
+
+    #[test]
+    fn tiered_fold_matches_manual_two_stage() {
+        let n = AGG_BLOCK + 31;
+        let rowsv = test_rows(n, 5);
+        let rows: Vec<&[f32]> = rowsv.iter().map(|v| v.as_slice()).collect();
+        let weights = [2.0, 1.0, 1.0, 0.5, 4.0];
+        let global: Vec<f32> = (0..n).map(|i| (i % 11) as f32 * 0.2 - 0.9).collect();
+        let groups = [0..2, 2..3, 3..5];
+
+        // Manual two-stage: per-group reference means with carried weights,
+        // then the reference weighted mean over the group means.
+        let mut gm: Vec<Vec<f32>> = Vec::new();
+        let mut gw: Vec<f64> = Vec::new();
+        for g in &groups {
+            let mut m = vec![0.0f32; n];
+            reference::weighted_mean_into(&rows[g.clone()], &weights[g.clone()], &mut m);
+            gm.push(m);
+            gw.push(weights[g.clone()].iter().sum());
+        }
+        let gm_rows: Vec<&[f32]> = gm.iter().map(|v| v.as_slice()).collect();
+        let mut want_mean = vec![0.0f32; n];
+        reference::weighted_mean_into(&gm_rows, &gw, &mut want_mean);
+        let mut want_pg = vec![0.0f32; n];
+        reference::sub_into(&global, &want_mean, &mut want_pg);
+
+        let mut mean = vec![0.0f32; n];
+        let mut pg = vec![0.0f32; n];
+        let mut scratch = AggScratch::new();
+        tiered_fold(&rows, &weights, &groups, &global, &mut mean, &mut pg, &mut scratch);
+        assert_eq!(mean, want_mean, "tiered mean must be bit-identical to manual stages");
+        assert_eq!(pg, want_pg);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tiered_fold_rejects_gappy_partition() {
+        let a = [1.0f32; 4];
+        let rows: Vec<&[f32]> = vec![&a, &a, &a];
+        let g = [0.0f32; 4];
+        let (mut m, mut p) = ([0.0f32; 4], [0.0f32; 4]);
+        let mut s = AggScratch::new();
+        tiered_fold(&rows, &[1.0, 1.0, 1.0], &[0..1, 2..3], &g, &mut m, &mut p, &mut s);
     }
 
     #[test]

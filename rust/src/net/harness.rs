@@ -36,6 +36,7 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::Federation;
 use crate::metrics::RoundRecord;
 use crate::net::server::{ServeOpts, Server};
+use crate::net::subagg::{run_subagg, SubaggOpts, SubaggReport};
 use crate::net::worker::{run_worker, WorkerOpts, WorkerReport};
 use crate::obs::{self, Event as ObsEvent, EventSink};
 use crate::runtime::ModelRuntime;
@@ -43,8 +44,19 @@ use crate::runtime::ModelRuntime;
 /// Loopback-fleet knobs.
 #[derive(Clone)]
 pub struct FleetOpts {
-    /// Worker threads to spawn (the server waits for all of them).
+    /// Worker threads to spawn (the server waits for all of them; in tree
+    /// mode they are split round-robin across the sub-aggregators).
     pub workers: usize,
+    /// Sub-aggregator threads (tree mode). Must be > 0 exactly when
+    /// `cfg.tiers > 1`; each leases one slice of every sampled cohort.
+    /// Workers connect to the sub-aggregators, never to the root. The
+    /// downstream straggler deadline is half of `deadline_secs`, so a
+    /// sub-aggregator always cuts and pushes before the root's own timer
+    /// would cut the whole slice.
+    pub subaggs: usize,
+    /// Resident-byte budget for the root's client-state cache
+    /// ([`crate::ckpt::StateStore`]); colder states spill to disk.
+    pub state_budget: Option<u64>,
     /// Per-round straggler deadline (None = disconnects only).
     pub deadline_secs: Option<f64>,
     /// Deflate model payloads on the wire.
@@ -76,6 +88,8 @@ impl Default for FleetOpts {
     fn default() -> FleetOpts {
         FleetOpts {
             workers: 1,
+            subaggs: 0,
+            state_budget: None,
             deadline_secs: None,
             compress: true,
             die_at_round: BTreeMap::new(),
@@ -104,9 +118,15 @@ pub struct FleetReport {
     pub trace: chaos::Trace,
     /// Per logical worker, merged across its crash/rejoin sessions.
     pub workers: Vec<WorkerReport>,
-    /// Errors from worker threads (a crashed-by-hook worker is *not* an
-    /// error; it reports `aborted_at`).
+    /// Per sub-aggregator (empty for a flat fleet).
+    pub subaggs: Vec<SubaggReport>,
+    /// Errors from worker or sub-aggregator threads (a crashed-by-hook
+    /// worker is *not* an error; it reports `aborted_at`).
     pub worker_errors: Vec<String>,
+    /// Root `StateStore` statistics: states spilled to disk and loaded
+    /// back over the run (nonzero proves the budget actually bit).
+    pub store_spills: u64,
+    pub store_loads: u64,
 }
 
 /// One logical worker's thread: serve sessions, crashing and rejoining as
@@ -139,6 +159,7 @@ fn worker_thread(
                 merged.updates_pushed += r.updates_pushed;
                 merged.rounds_hung += r.rounds_hung;
                 merged.frames_flaked += r.frames_flaked;
+                merged.assign_bytes.extend(r.assign_bytes);
                 if r.aborted_at.is_some() {
                     // Remember the last crash even after clean rejoined
                     // sessions (diagnostics only).
@@ -193,6 +214,20 @@ pub fn run_loopback(
     model: Arc<ModelRuntime>,
     opts: FleetOpts,
 ) -> Result<FleetReport> {
+    anyhow::ensure!(
+        (opts.subaggs > 0) == (cfg.tiers > 1),
+        "sub-aggregators ({}) and cfg.tiers ({}) must agree: a tiered \
+         federation runs through sub-aggregators, a flat one never does",
+        opts.subaggs,
+        cfg.tiers
+    );
+    anyhow::ensure!(
+        opts.subaggs == 0 || opts.workers >= opts.subaggs,
+        "tree fleet needs at least one worker per sub-aggregator ({} workers, \
+         {} sub-aggregators)",
+        opts.workers,
+        opts.subaggs
+    );
     if let Some(schedule) = &opts.chaos {
         anyhow::ensure!(
             schedule.workers >= opts.workers,
@@ -220,12 +255,15 @@ pub fn run_loopback(
         None => None,
     };
     fed.obs = obs_sink.clone();
+    let tree = opts.subaggs > 0;
     let serve = ServeOpts {
         bind: "127.0.0.1:0".into(),
-        min_workers: opts.workers,
+        // In tree mode the root admits sub-aggregators, not workers.
+        min_workers: if tree { opts.subaggs } else { opts.workers },
         deadline_secs: opts.deadline_secs,
         migrate: opts.migrate,
         compress: opts.compress,
+        state_budget: opts.state_budget,
         ..ServeOpts::default()
     };
     let mut server = Server::with_federation(fed, serve)?;
@@ -244,9 +282,48 @@ pub fn run_loopback(
         .map_err(|_| "server thread panicked".to_string());
         let _ = stx.send(outcome);
     });
+    // Tree mode: spawn the sub-aggregators first and collect their bound
+    // downstream addresses; workers connect to those, never to the root.
+    let (sgtx, sgrx) = mpsc::channel();
+    let mut sub_addrs: Vec<String> = Vec::new();
+    for i in 0..opts.subaggs {
+        let per_sub =
+            opts.workers / opts.subaggs + usize::from(i < opts.workers % opts.subaggs);
+        let sopts = SubaggOpts {
+            name: format!("subagg-{i}"),
+            bind: "127.0.0.1:0".into(),
+            min_workers: per_sub.max(1),
+            // Cut downstream stragglers well before the root's own timer
+            // would cut this sub-aggregator's whole slice.
+            deadline_secs: opts.deadline_secs.map(|s| s / 2.0),
+            ..SubaggOpts::default()
+        };
+        let root = addr.clone();
+        let (atx, arx) = mpsc::channel();
+        let sgtx = sgtx.clone();
+        std::thread::spawn(move || {
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                run_subagg(&root, sopts, Some(atx))
+            }))
+            .unwrap_or_else(|_| {
+                Err(anyhow::anyhow!("sub-aggregator thread panicked"))
+            });
+            let _ = sgtx.send((i, result));
+        });
+        let sub_addr = arx
+            .recv_timeout(Duration::from_secs(30))
+            .with_context(|| format!("sub-aggregator {i} never bound its listener"))?;
+        sub_addrs.push(sub_addr.to_string());
+    }
+    drop(sgtx);
+
     let (wtx, wrx) = mpsc::channel();
     for i in 0..opts.workers {
-        let addr = addr.clone();
+        let addr = if sub_addrs.is_empty() {
+            addr.clone()
+        } else {
+            sub_addrs[i % sub_addrs.len()].clone()
+        };
         let model = model.clone();
         let die = opts.die_at_round.get(&i).copied();
         let chaos_w = opts.chaos.as_ref().map(|s| s.worker(i));
@@ -299,6 +376,43 @@ pub fn run_loopback(
             }
         }
     }
+    let mut subagg_reports: Vec<Option<SubaggReport>> =
+        (0..opts.subaggs).map(|_| None).collect();
+    let mut collected_subs = 0usize;
+    while collected_subs < opts.subaggs {
+        match recv_until(&sgrx, give_up) {
+            Some((i, Ok(report))) => {
+                subagg_reports[i] = Some(report);
+                collected_subs += 1;
+            }
+            Some((i, Err(e))) => {
+                worker_errors.push(format!("subagg {i}: {e:#}"));
+                subagg_reports[i] = Some(SubaggReport::default());
+                collected_subs += 1;
+            }
+            None => {
+                let stuck: Vec<usize> = (0..opts.subaggs)
+                    .filter(|&i| subagg_reports[i].is_none())
+                    .collect();
+                let waited = opts.watchdog_secs.unwrap_or(0.0);
+                obs::timing("harness", "watchdog", waited);
+                if let Some(sink) = &obs_sink {
+                    sink.emit(ObsEvent::Stall {
+                        round: None,
+                        waited_us: (waited * 1e6) as u64,
+                        detail: format!(
+                            "sub-aggregator thread(s) {stuck:?} never finished"
+                        ),
+                    });
+                }
+                bail!(
+                    "loopback watchdog ({}) fired: sub-aggregator thread(s) \
+                     {stuck:?} never finished",
+                    watchdog_label(opts.watchdog_secs),
+                );
+            }
+        }
+    }
     let (server, result) = match recv_until(&srx, give_up) {
         Some(Ok(pair)) => pair,
         Some(Err(panic_msg)) => bail!("server run failed: {panic_msg}"),
@@ -326,7 +440,10 @@ pub fn run_loopback(
         cuts: server.cuts.clone(),
         trace: server.trace(),
         workers: workers.into_iter().map(|w| w.unwrap_or_default()).collect(),
+        subaggs: subagg_reports.into_iter().map(|s| s.unwrap_or_default()).collect(),
         worker_errors,
+        store_spills: server.state_store().spill_count(),
+        store_loads: server.state_store().load_count(),
     })
 }
 

@@ -18,6 +18,15 @@
 //!                 `ClientNode::run_local_round` the in-process federation
 //!                 runs, pushes update + advanced state back; acts out the
 //!                 injected chaos faults (crash/hang/slow/flake)
+//! * [`poll`]    — nonblocking accept/read plane: one polling thread owns
+//!                 every socket's read half (`set_nonblocking` + a ready
+//!                 sweep over `std::net`, no extra dependencies) and
+//!                 forwards Joined/Frame/Malformed/Gone events
+//! * [`subagg`]  — the mid-tier sub-aggregator (`cfg.tiers > 1`): leases a
+//!                 slice of each sampled cohort from the root, re-leases
+//!                 it to downstream workers, folds the arrived updates in
+//!                 slot order, pushes one `FoldedPush` upstream —
+//!                 bit-identical to the in-process `tiered_fold`
 //! * [`harness`] — deterministic in-process loopback fleet (with chaos
 //!                 injection, rejoin loops, and a join watchdog) for
 //!                 tests and the `photon exp distributed`/`exp chaos`
@@ -41,11 +50,15 @@
 //! README quickstart and `docs/ARCHITECTURE.md` ("Deployment plane").
 
 pub mod harness;
+pub mod poll;
 pub mod proto;
 pub mod server;
+pub mod subagg;
 pub mod worker;
 
 pub use harness::{run_loopback, FleetOpts, FleetReport};
+pub use poll::NbWriter;
 pub use proto::{Msg, TaskSpec, PROTO_VERSION};
 pub use server::{ServeOpts, Server};
+pub use subagg::{run_subagg, SubaggOpts, SubaggReport};
 pub use worker::{run_worker, WorkerOpts, WorkerReport};

@@ -1,0 +1,431 @@
+//! Nonblocking accept/read plane for the Aggregator and sub-aggregators:
+//! ONE polling thread owns the listener and every admitted socket,
+//! replacing the thread-per-connection reader fleet. At paper scale the
+//! root admits thousands of peers; a reader thread per socket is exactly
+//! the resource wall the polling loop removes.
+//!
+//! Design (std::net only — no epoll/kqueue bindings, no new deps):
+//!
+//! * the listener and every accepted stream run with
+//!   `set_nonblocking(true)`;
+//! * each iteration drains `accept()` to `WouldBlock`, then sweeps a
+//!   ready-list of connections, reading whatever bytes each socket has
+//!   into a per-connection buffer and slicing complete `u32`
+//!   length-prefixed frames out of it;
+//! * a sweep that moves no bytes sleeps ~1ms before the next one, so an
+//!   idle fleet costs a handful of wakeups per second, not a spin.
+//!
+//! Frame semantics match the blocking reader it replaces
+//! (`proto::read_frame` / `Msg::decode`): the first decodable frame on a
+//! connection must be `Join` or `SubJoin` (anything else silently drops
+//! the peer), a framed-but-undecodable payload is reported as
+//! [`Event::Malformed`] with the stream kept alive, and only an IO error,
+//! EOF, or an implausible length prefix (stream framing lost) tears the
+//! connection down with [`Event::Gone`].
+//!
+//! Because `set_nonblocking` applies to the whole socket, the write half
+//! handed out in [`Event::Joined`] is nonblocking too — writers must go
+//! through [`NbWriter`], which retries `WouldBlock` against a deadline
+//! (the moral equivalent of the old `set_write_timeout`).
+
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::net::proto::{self, Msg};
+
+/// What the polling thread reports to the service loop. Mirrors the shape
+/// of the old per-thread reader events, plus the v4 `sub` flag so the
+/// server can route sub-aggregator admissions to the tree plane.
+pub enum Event {
+    /// First frame decoded as `Join` (`sub = false`) or `SubJoin`
+    /// (`sub = true`). `stream` is a nonblocking write half — wrap it in
+    /// [`NbWriter`] before use.
+    Joined { conn: usize, stream: TcpStream, join: proto::Join, sub: bool },
+    Frame { conn: usize, msg: Msg },
+    /// Framing survived (length prefix intact) but link decode failed —
+    /// a flaked payload. The stream itself is still good.
+    Malformed { conn: usize },
+    Gone { conn: usize },
+}
+
+/// One polled connection: its socket, its incremental read buffer, and
+/// whether its Join/SubJoin admission frame has been seen.
+struct Conn {
+    id: usize,
+    stream: TcpStream,
+    buf: Vec<u8>,
+    joined: bool,
+}
+
+/// Sweep outcome for one connection.
+enum Sweep {
+    /// Bytes moved (or at least one frame completed) this pass.
+    Progress,
+    Idle,
+    /// EOF, IO error, or lost framing: drop the connection.
+    Dead,
+}
+
+const IDLE_SLEEP: Duration = Duration::from_millis(1);
+const READ_CHUNK: usize = 64 * 1024;
+
+/// Start the polling thread: nonblocking accept + read over every
+/// connection, events delivered on `tx`. The thread exits when `stop` is
+/// set (checked every sweep, so within ~1ms of the store) or when the
+/// receiver hangs up.
+pub fn spawn_poller(
+    listener: TcpListener,
+    tx: Sender<Event>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    listener
+        .set_nonblocking(true)
+        .context("setting listener nonblocking")?;
+    std::thread::spawn(move || poll_loop(listener, tx, stop));
+    Ok(())
+}
+
+fn poll_loop(listener: TcpListener, tx: Sender<Event>, stop: Arc<AtomicBool>) {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut next_id = 0usize;
+    while !stop.load(Ordering::Acquire) {
+        let mut progressed = false;
+        // Drain the accept queue.
+        loop {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    conns.push(Conn {
+                        id: next_id,
+                        stream,
+                        buf: Vec::new(),
+                        joined: false,
+                    });
+                    next_id += 1;
+                    progressed = true;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
+        }
+        // Ready-list sweep: every connection with readable bytes makes
+        // progress this pass; the rest report Idle instantly.
+        let mut i = 0;
+        while i < conns.len() {
+            match sweep_conn(&mut conns[i], &tx) {
+                Sweep::Progress => {
+                    progressed = true;
+                    i += 1;
+                }
+                Sweep::Idle => i += 1,
+                Sweep::Dead => {
+                    let c = conns.swap_remove(i);
+                    if c.joined && tx.send(Event::Gone { conn: c.id }).is_err() {
+                        return;
+                    }
+                    progressed = true;
+                }
+            }
+        }
+        if !progressed {
+            std::thread::sleep(IDLE_SLEEP);
+        }
+    }
+}
+
+/// Read whatever `c`'s socket has, then emit every complete frame in its
+/// buffer.
+fn sweep_conn(c: &mut Conn, tx: &Sender<Event>) -> Sweep {
+    let mut chunk = [0u8; READ_CHUNK];
+    let mut moved = false;
+    loop {
+        match c.stream.read(&mut chunk) {
+            Ok(0) => return Sweep::Dead,
+            Ok(n) => {
+                c.buf.extend_from_slice(&chunk[..n]);
+                moved = true;
+                if n < chunk.len() {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return Sweep::Dead,
+        }
+    }
+    if !moved {
+        return Sweep::Idle;
+    }
+    // Slice complete length-prefixed frames out of the buffer.
+    loop {
+        if c.buf.len() < 4 {
+            break;
+        }
+        let len = u32::from_le_bytes([c.buf[0], c.buf[1], c.buf[2], c.buf[3]]) as usize;
+        if !(crate::link::HEADER_BYTES..=proto::MAX_FRAME_BYTES).contains(&len) {
+            // Stream framing lost — same fate as an IO error.
+            return Sweep::Dead;
+        }
+        if c.buf.len() < 4 + len {
+            break;
+        }
+        // Split the frame off the front without re-sizing by the wire
+        // length: `split_off` is bounded by what actually arrived.
+        let mut rest = c.buf.split_off(4 + len);
+        std::mem::swap(&mut c.buf, &mut rest);
+        let framed = rest;
+        let event = match Msg::decode(&framed[4..]) {
+            Ok(msg) if !c.joined => {
+                // Admission: the first frame must be Join or SubJoin.
+                let (join, sub) = match msg {
+                    Msg::Join(j) => (j, false),
+                    Msg::SubJoin(j) => (j, true),
+                    _ => return Sweep::Dead,
+                };
+                c.joined = true;
+                let stream = match c.stream.try_clone() {
+                    Ok(s) => s,
+                    Err(_) => return Sweep::Dead,
+                };
+                Event::Joined { conn: c.id, stream, join, sub }
+            }
+            Ok(msg) => Event::Frame { conn: c.id, msg },
+            Err(_) if !c.joined => return Sweep::Dead,
+            Err(_) => Event::Malformed { conn: c.id },
+        };
+        if tx.send(event).is_err() {
+            return Sweep::Dead;
+        }
+    }
+    Sweep::Progress
+}
+
+/// Blocking-writer adapter over a nonblocking socket: retries
+/// `WouldBlock` with a short sleep until the per-call deadline expires.
+/// Every write path that used to rely on `set_write_timeout` (the server,
+/// the sub-aggregator) goes through this instead.
+pub struct NbWriter {
+    stream: TcpStream,
+    timeout: Duration,
+}
+
+impl NbWriter {
+    pub fn new(stream: TcpStream, timeout_secs: f64) -> NbWriter {
+        NbWriter { stream, timeout: Duration::from_secs_f64(timeout_secs.max(0.001)) }
+    }
+
+    /// The wrapped socket (e.g. for `peer_addr` diagnostics).
+    pub fn stream(&self) -> &TcpStream {
+        &self.stream
+    }
+}
+
+impl Write for NbWriter {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let deadline = Instant::now() + self.timeout;
+        loop {
+            match self.stream.write(buf) {
+                Ok(n) => return Ok(n),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(io::Error::new(
+                            io::ErrorKind::TimedOut,
+                            "write stalled past the io timeout",
+                        ));
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.stream.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::proto::{Heartbeat, Join, PROTO_VERSION};
+    use std::sync::mpsc;
+
+    fn join_msg(name: &str, sub: bool) -> Msg {
+        let j = Join { proto: PROTO_VERSION, name: name.into(), identity: 0 };
+        if sub {
+            Msg::SubJoin(j)
+        } else {
+            Msg::Join(j)
+        }
+    }
+
+    fn start() -> (std::net::SocketAddr, mpsc::Receiver<Event>, Arc<AtomicBool>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (tx, rx) = mpsc::channel();
+        let stop = Arc::new(AtomicBool::new(false));
+        spawn_poller(listener, tx, stop.clone()).unwrap();
+        (addr, rx, stop)
+    }
+
+    #[test]
+    fn polls_join_frames_and_disconnects() {
+        let (addr, rx, stop) = start();
+        let mut s = TcpStream::connect(addr).unwrap();
+        proto::write_msg(&mut s, &join_msg("w0", false), false).unwrap();
+        match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+            Event::Joined { join, sub, .. } => {
+                assert_eq!(join.name, "w0");
+                assert!(!sub);
+            }
+            _ => panic!("expected Joined"),
+        }
+        proto::write_msg(&mut s, &Msg::Heartbeat(Heartbeat { session: 1, round: 2 }), false)
+            .unwrap();
+        match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+            Event::Frame { msg: Msg::Heartbeat(h), .. } => assert_eq!(h.round, 2),
+            _ => panic!("expected Heartbeat frame"),
+        }
+        drop(s);
+        match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+            Event::Gone { .. } => {}
+            _ => panic!("expected Gone"),
+        }
+        stop.store(true, Ordering::Release);
+    }
+
+    #[test]
+    fn sub_join_is_flagged() {
+        let (addr, rx, stop) = start();
+        let mut s = TcpStream::connect(addr).unwrap();
+        proto::write_msg(&mut s, &join_msg("sub0", true), false).unwrap();
+        match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+            Event::Joined { join, sub, .. } => {
+                assert_eq!(join.name, "sub0");
+                assert!(sub, "SubJoin must surface with sub = true");
+            }
+            _ => panic!("expected Joined"),
+        }
+        stop.store(true, Ordering::Release);
+        drop(s);
+    }
+
+    #[test]
+    fn fragmented_writes_reassemble() {
+        // A frame delivered one byte at a time must still come out whole —
+        // the incremental parser may never split or duplicate it.
+        let (addr, rx, stop) = start();
+        let mut s = TcpStream::connect(addr).unwrap();
+        proto::write_msg(&mut s, &join_msg("w0", false), false).unwrap();
+        assert!(matches!(
+            rx.recv_timeout(Duration::from_secs(5)).unwrap(),
+            Event::Joined { .. }
+        ));
+        let frame = Msg::Heartbeat(Heartbeat { session: 9, round: 4 })
+            .encode(false)
+            .unwrap();
+        let mut wire = (frame.len() as u32).to_le_bytes().to_vec();
+        wire.extend_from_slice(&frame);
+        for b in wire {
+            s.write_all(&[b]).unwrap();
+            s.flush().unwrap();
+        }
+        match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+            Event::Frame { msg: Msg::Heartbeat(h), .. } => {
+                assert_eq!(h.session, 9);
+                assert_eq!(h.round, 4);
+            }
+            _ => panic!("expected reassembled Heartbeat"),
+        }
+        stop.store(true, Ordering::Release);
+        drop(s);
+    }
+
+    #[test]
+    fn malformed_frame_reported_stream_survives() {
+        let (addr, rx, stop) = start();
+        let mut s = TcpStream::connect(addr).unwrap();
+        proto::write_msg(&mut s, &join_msg("w0", false), false).unwrap();
+        assert!(matches!(
+            rx.recv_timeout(Duration::from_secs(5)).unwrap(),
+            Event::Joined { .. }
+        ));
+        // A correctly framed garbage payload: link decode fails, framing
+        // survives, and the next real frame still gets through.
+        let garbage = vec![0xAAu8; crate::link::HEADER_BYTES + 8];
+        proto::write_frame(&mut s, &garbage).unwrap();
+        proto::write_msg(&mut s, &Msg::Heartbeat(Heartbeat { session: 1, round: 7 }), false)
+            .unwrap();
+        match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+            Event::Malformed { .. } => {}
+            _ => panic!("expected Malformed"),
+        }
+        match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+            Event::Frame { msg: Msg::Heartbeat(h), .. } => assert_eq!(h.round, 7),
+            _ => panic!("stream must survive a flaked frame"),
+        }
+        stop.store(true, Ordering::Release);
+        drop(s);
+    }
+
+    #[test]
+    fn implausible_length_prefix_drops_connection() {
+        let (addr, rx, stop) = start();
+        let mut s = TcpStream::connect(addr).unwrap();
+        proto::write_msg(&mut s, &join_msg("w0", false), false).unwrap();
+        assert!(matches!(
+            rx.recv_timeout(Duration::from_secs(5)).unwrap(),
+            Event::Joined { .. }
+        ));
+        s.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        s.flush().unwrap();
+        match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+            Event::Gone { .. } => {}
+            _ => panic!("lost framing must tear the connection down"),
+        }
+        stop.store(true, Ordering::Release);
+    }
+
+    #[test]
+    fn nb_writer_round_trips_under_load() {
+        // Push enough data through an NbWriter to force WouldBlock retries
+        // (the reader drains slowly), and verify byte integrity.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let reader = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut got = Vec::new();
+            let mut chunk = [0u8; 4096];
+            loop {
+                match s.read(&mut chunk) {
+                    Ok(0) => break,
+                    Ok(n) => {
+                        got.extend_from_slice(&chunk[..n]);
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                    Err(_) => break,
+                }
+            }
+            got
+        });
+        let s = TcpStream::connect(addr).unwrap();
+        s.set_nonblocking(true).unwrap();
+        let mut w = NbWriter::new(s, 30.0);
+        let payload: Vec<u8> = (0..2_000_000u32).map(|i| (i % 251) as u8).collect();
+        w.write_all(&payload).unwrap();
+        w.flush().unwrap();
+        drop(w);
+        let got = reader.join().unwrap();
+        assert_eq!(got, payload, "NbWriter must deliver every byte in order");
+    }
+}

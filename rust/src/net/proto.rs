@@ -19,6 +19,14 @@
 //!                           ◀──  Shutdown
 //! ```
 //!
+//! Proto v4 adds a tree plane on top of the same flow: a sub-aggregator
+//! (`net::subagg`) admits itself with `SubJoin` instead of `Join`, receives
+//! the same `RoundAssign` a worker would (its slice of the sampled
+//! clients), re-leases those tasks to its own downstream workers, and
+//! answers with a single `FoldedPush` — one pre-folded `(weight, mean)`
+//! pair plus per-member bookkeeping — where a worker would have sent one
+//! `UpdatePush` per client.
+//!
 //! Workers are **stateless**: every `RoundAssign` task carries the client's
 //! full inter-round state ([`ClientCkpt`] — stream cursors + KeepOpt
 //! moments) and every `UpdatePush` returns the advanced state. The server
@@ -54,11 +62,18 @@ use crate::optim::schedule::CosineSchedule;
 /// may carry a lossy-coded pseudo-delta instead of dense params.
 /// v3: `Join` carries a rejoin identity — a returning worker reclaims its
 /// slot and its in-flight client leases instead of being admitted fresh.
-pub const PROTO_VERSION: u16 = 3;
+/// v4: multi-tier aggregation — `SubJoin` admits a sub-aggregator peer,
+/// `FoldedPush` ships one pre-folded `(weight, mean)` pair plus member
+/// bookkeeping upstream, and `AssignTask.state` becomes tagged
+/// ([`AssignState`]): `Full` carries the client checkpoint, `Ref` names a
+/// generation the worker already holds so idle clients cost 9 bytes.
+pub const PROTO_VERSION: u16 = 4;
 
 /// Refuse to read frames larger than this from a socket (corruption guard;
 /// generous enough for a 7B-analogue f32 payload plus KeepOpt moments).
-const MAX_FRAME_BYTES: usize = 1 << 31;
+/// Shared with the polling reader (`net::poll`), which applies the same
+/// bound to incrementally parsed length prefixes.
+pub(crate) const MAX_FRAME_BYTES: usize = 1 << 31;
 
 /// Worker → server: request admission to the federation.
 #[derive(Clone, Debug, PartialEq)]
@@ -112,14 +127,30 @@ pub struct JoinAck {
     pub spec: TaskSpec,
 }
 
+/// The client-state field of an [`AssignTask`]: either the full
+/// server-owned checkpoint, or a reference to a state generation the
+/// receiving worker provably already holds (it cached the state from a
+/// previous assign or from its own push). The server only ever sends
+/// `Ref` when its per-connection generation map says the target worker
+/// has the current generation; a worker that cannot resolve a `Ref`
+/// must bail rather than run from a stale state.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AssignState {
+    /// Full inter-round state (cursors + KeepOpt moments + residual).
+    Full(ClientCkpt),
+    /// The worker already holds this client's state at this generation.
+    Ref(u64),
+}
+
 /// One client's work order inside a [`RoundAssign`].
 #[derive(Clone, Debug, PartialEq)]
 pub struct AssignTask {
     pub client: u64,
     /// Effective local steps after fault injection.
     pub steps: u64,
-    /// The client's full inter-round state (server-owned).
-    pub state: ClientCkpt,
+    /// The client's inter-round state (server-owned), full or by
+    /// generation reference (proto v4).
+    pub state: AssignState,
 }
 
 /// Server → worker: one round's work order plus the global model broadcast.
@@ -151,6 +182,43 @@ pub struct UpdatePush {
     /// The client's advanced state (cursors + KeepOpt + codec residual)
     /// after the round.
     pub state: ClientCkpt,
+}
+
+/// One member client's bookkeeping inside a [`FoldedPush`]: the metrics
+/// row (params stripped — the fold already consumed them) plus the
+/// client's advanced state, both of which the root still owns.
+#[derive(Clone, Debug)]
+pub struct FoldedMember {
+    /// Per-client metrics. `params` is empty on the wire — the member's
+    /// pseudo-gradient only exists inside the sub-aggregator's fold.
+    /// Unlike `UpdatePush`, `wire_bytes` IS an explicit wire field here:
+    /// the root cannot measure a member's worker→subagg transit itself,
+    /// so it trusts the sub-aggregator's measurement. Metric-only — it
+    /// never feeds the fold, so a lying subagg can skew a comm counter
+    /// but not the model.
+    pub update: ClientUpdate,
+    /// The member's advanced state after its local round.
+    pub state: ClientCkpt,
+}
+
+/// Sub-aggregator → root: one leased slice's completed round, pre-folded.
+///
+/// `mean` is the weighted mean of the slice's arrived member updates in
+/// slot order, always dense f32 (never re-coded, whatever codec the
+/// worker→subagg leg negotiated). `weight` is the sequential sum of the
+/// members' `n_samples` in sampled order — the carry the root needs to
+/// fold group means exactly as `vecmath::tiered_fold` does in-process.
+#[derive(Clone, Debug)]
+pub struct FoldedPush {
+    pub session: u64,
+    pub round: u64,
+    /// Sequential sum of member `n_samples` in sampled order.
+    pub weight: f64,
+    /// Dense weighted mean of the arrived members' pseudo-gradients.
+    pub mean: Vec<f32>,
+    /// Per-member metrics + advanced states, in slot (sampled) order.
+    /// Members missing from the assigned slice were cut by the subagg.
+    pub members: Vec<FoldedMember>,
 }
 
 /// Worker → server: assignment acknowledgement, sent on `RoundAssign`
@@ -189,6 +257,10 @@ pub enum Msg {
     RoundCommit(RoundCommit),
     Shutdown,
     Reject(Reject),
+    /// Sub-aggregator admission request (same body shape as `Join`,
+    /// distinct kind so the server can route the peer to the tree plane).
+    SubJoin(Join),
+    FoldedPush(FoldedPush),
 }
 
 fn enc_corpus(e: &mut Enc, c: &CorpusKind) {
@@ -316,6 +388,43 @@ fn dec_update(d: &mut Dec) -> Result<ClientUpdate> {
     })
 }
 
+fn enc_state(e: &mut Enc, s: &AssignState) {
+    match s {
+        AssignState::Full(c) => {
+            e.u8(0);
+            e.client(c);
+        }
+        AssignState::Ref(gen) => {
+            e.u8(1);
+            e.u64(*gen);
+        }
+    }
+}
+
+fn dec_state(d: &mut Dec) -> Result<AssignState> {
+    Ok(match d.u8()? {
+        0 => AssignState::Full(d.client()?),
+        1 => AssignState::Ref(d.u64()?),
+        t => bail!("unknown assign-state tag {t}"),
+    })
+}
+
+fn enc_member(e: &mut Enc, m: &FoldedMember) {
+    enc_update(e, &m.update);
+    // Explicit transit-size carry (see `FoldedMember` docs): the root
+    // cannot observe the worker→subagg leg, so the subagg's measurement
+    // travels on the wire. Metric-only; never feeds the fold.
+    e.u64(m.update.wire_bytes);
+    e.client(&m.state);
+}
+
+fn dec_member(d: &mut Dec) -> Result<FoldedMember> {
+    let mut update = dec_update(d)?;
+    update.wire_bytes = d.u64()?;
+    let state = d.client()?;
+    Ok(FoldedMember { update, state })
+}
+
 impl Msg {
     pub fn kind(&self) -> MsgKind {
         match self {
@@ -327,6 +436,8 @@ impl Msg {
             Msg::RoundCommit(_) => MsgKind::RoundCommit,
             Msg::Shutdown => MsgKind::Shutdown,
             Msg::Reject(_) => MsgKind::Reject,
+            Msg::SubJoin(_) => MsgKind::SubJoin,
+            Msg::FoldedPush(_) => MsgKind::FoldedPush,
         }
     }
 
@@ -354,7 +465,7 @@ impl Msg {
                 for t in &m.tasks {
                     e.u64(t.client);
                     e.u64(t.steps);
-                    e.client(&t.state);
+                    enc_state(&mut e, &t.state);
                 }
                 e.f32s(&m.global);
             }
@@ -384,9 +495,27 @@ impl Msg {
             Msg::Reject(m) => {
                 e.str(&m.reason);
             }
+            Msg::SubJoin(m) => {
+                e.u16(m.proto);
+                e.str(&m.name);
+                e.u64(m.identity);
+            }
+            Msg::FoldedPush(m) => {
+                e.u64(m.session);
+                e.u64(m.round);
+                e.f64(m.weight);
+                e.f32s(&m.mean);
+                e.u64(m.members.len() as u64);
+                for mb in &m.members {
+                    enc_member(&mut e, mb);
+                }
+            }
         }
         // Only the model-bearing frames are worth deflating.
-        let big = matches!(self, Msg::RoundAssign(_) | Msg::UpdatePush(_));
+        let big = matches!(
+            self,
+            Msg::RoundAssign(_) | Msg::UpdatePush(_) | Msg::FoldedPush(_)
+        );
         link::encode_bytes(self.kind(), &e.buf, compress && big)
     }
 
@@ -413,13 +542,13 @@ impl Msg {
                 let round = d.u64()?;
                 let seq_base = d.u64()?;
                 let n = d.u64()? as usize;
-                // 88 = minimum encoded AssignTask (ids + empty state).
-                let mut tasks = Vec::with_capacity(d.capacity_hint(n, 88));
+                // 25 = minimum encoded AssignTask (ids + tag + state ref).
+                let mut tasks = Vec::with_capacity(d.capacity_hint(n, 25));
                 for _ in 0..n {
                     tasks.push(AssignTask {
                         client: d.u64()?,
                         steps: d.u64()?,
-                        state: d.client()?,
+                        state: dec_state(&mut d)?,
                     });
                 }
                 let global = d.f32s()?;
@@ -447,6 +576,25 @@ impl Msg {
             }),
             MsgKind::Shutdown => Msg::Shutdown,
             MsgKind::Reject => Msg::Reject(Reject { reason: d.str()? }),
+            MsgKind::SubJoin => Msg::SubJoin(Join {
+                proto: d.u16()?,
+                name: d.str()?,
+                identity: d.u64()?,
+            }),
+            MsgKind::FoldedPush => {
+                let session = d.u64()?;
+                let round = d.u64()?;
+                let weight = d.f64()?;
+                let mean = d.f32s()?;
+                let n = d.u64()? as usize;
+                // 105 = minimum encoded FoldedMember (metrics row + empty
+                // params + wire_bytes + empty state).
+                let mut members = Vec::with_capacity(d.capacity_hint(n, 105));
+                for _ in 0..n {
+                    members.push(dec_member(&mut d)?);
+                }
+                Msg::FoldedPush(FoldedPush { session, round, weight, mean, members })
+            }
             other => bail!("frame kind {other:?} is not a control message"),
         };
         ensure!(d.done(), "trailing bytes after {:?} body", msg.kind());
@@ -575,8 +723,8 @@ mod tests {
             round: 3,
             seq_base: 120,
             tasks: vec![
-                AssignTask { client: 1, steps: 40, state: toy_state() },
-                AssignTask { client: 5, steps: 20, state: toy_state() },
+                AssignTask { client: 1, steps: 40, state: AssignState::Full(toy_state()) },
+                AssignTask { client: 5, steps: 20, state: AssignState::Ref(7) },
             ],
             global: (0..300).map(|i| (i as f32 * 0.1).sin()).collect(),
         });
@@ -586,12 +734,45 @@ mod tests {
                     assert_eq!(b.round, 3);
                     assert_eq!(b.tasks.len(), 2);
                     assert_eq!(b.tasks[1].client, 5);
-                    assert_eq!(b.tasks[0].state, toy_state());
+                    assert_eq!(b.tasks[0].state, AssignState::Full(toy_state()));
+                    assert_eq!(
+                        b.tasks[1].state,
+                        AssignState::Ref(7),
+                        "state reference survives the wire"
+                    );
                     assert_eq!(b.global.len(), 300);
                 }
                 other => panic!("wrong kind {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn state_ref_assign_is_much_smaller_than_full() {
+        let full = Msg::RoundAssign(RoundAssign {
+            session: 1,
+            round: 0,
+            seq_base: 0,
+            tasks: vec![AssignTask {
+                client: 1,
+                steps: 40,
+                state: AssignState::Full(toy_state()),
+            }],
+            global: Vec::new(),
+        });
+        let by_ref = Msg::RoundAssign(RoundAssign {
+            session: 1,
+            round: 0,
+            seq_base: 0,
+            tasks: vec![AssignTask { client: 1, steps: 40, state: AssignState::Ref(3) }],
+            global: Vec::new(),
+        });
+        let full_len = full.encode(false).unwrap().len();
+        let ref_len = by_ref.encode(false).unwrap().len();
+        assert!(
+            ref_len < full_len,
+            "ref assign ({ref_len}B) must undercut full assign ({full_len}B)"
+        );
     }
 
     fn toy_update() -> ClientUpdate {
@@ -681,6 +862,84 @@ mod tests {
         assert!(matches!(read_msg(&mut r).unwrap(), Msg::Heartbeat(_)));
         assert!(matches!(read_msg(&mut r).unwrap(), Msg::Shutdown));
         assert!(read_msg(&mut r).is_err(), "EOF is an error, not a message");
+    }
+
+    #[test]
+    fn sub_join_roundtrip_keeps_distinct_kind() {
+        let msg = Msg::SubJoin(Join {
+            proto: PROTO_VERSION,
+            name: "subagg-0".into(),
+            identity: 0,
+        });
+        match roundtrip(&msg, false) {
+            Msg::SubJoin(b) => {
+                assert_eq!(b.proto, PROTO_VERSION);
+                assert_eq!(b.name, "subagg-0");
+            }
+            other => panic!("SubJoin must not decode as {other:?}"),
+        }
+        assert_eq!(msg.kind(), MsgKind::SubJoin);
+    }
+
+    fn toy_folded() -> FoldedPush {
+        let mut u = toy_update();
+        u.params = Vec::new();
+        u.wire_bytes = 4096;
+        FoldedPush {
+            session: 11,
+            round: 2,
+            weight: 320.0,
+            mean: vec![0.5, -0.25, f32::MIN_POSITIVE, 3.0],
+            members: vec![
+                FoldedMember { update: u.clone(), state: toy_state() },
+                FoldedMember {
+                    update: {
+                        let mut v = u;
+                        v.client_id = 7;
+                        v.wire_bytes = 0;
+                        v
+                    },
+                    state: toy_state(),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn folded_push_roundtrip_is_bit_exact() {
+        let fp = toy_folded();
+        for compress in [false, true] {
+            match roundtrip(&Msg::FoldedPush(fp.clone()), compress) {
+                Msg::FoldedPush(b) => {
+                    assert_eq!(b.session, fp.session);
+                    assert_eq!(b.round, fp.round);
+                    assert_eq!(b.weight.to_bits(), fp.weight.to_bits());
+                    assert_eq!(b.mean, fp.mean, "folded mean must be lossless");
+                    assert_eq!(b.members.len(), 2);
+                    assert_eq!(
+                        b.members[0].update.wire_bytes, 4096,
+                        "member wire_bytes is an explicit wire field in FoldedPush"
+                    );
+                    assert_eq!(b.members[1].update.client_id, 7);
+                    assert_eq!(b.members[0].state, toy_state());
+                    assert_eq!(
+                        b.members[0].update.n_samples.to_bits(),
+                        fp.members[0].update.n_samples.to_bits()
+                    );
+                }
+                other => panic!("wrong kind {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_folded_push_is_rejected() {
+        let frame = Msg::FoldedPush(toy_folded()).encode(false).unwrap();
+        // Chop inside the member list: decode must error, never invent
+        // members or mis-decode as a different message.
+        for cut in [frame.len() - 1, frame.len() - 40, crate::link::HEADER_BYTES + 4] {
+            assert!(Msg::decode(&frame[..cut]).is_err(), "cut at {cut} must fail");
+        }
     }
 
     #[test]

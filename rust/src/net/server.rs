@@ -64,20 +64,21 @@
 use std::collections::BTreeMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::chaos::{self, LeaseBook, Migration};
-use crate::ckpt::ClientCkpt;
-use crate::coordinator::federation::RoundDispatch;
+use crate::ckpt::{ClientCkpt, StateStore};
+use crate::coordinator::federation::{tier_slices, RoundDispatch};
 use crate::coordinator::{ClientUpdate, Federation};
 use crate::metrics::RoundRecord;
+use crate::net::poll::{spawn_poller, Event, NbWriter};
 use crate::net::proto::{
-    self, AssignTask, JoinAck, Msg, Reject, RoundAssign, RoundCommit, TaskSpec,
-    PROTO_VERSION,
+    self, AssignState, AssignTask, FoldedPush, JoinAck, Msg, Reject, RoundAssign,
+    RoundCommit, TaskSpec, PROTO_VERSION,
 };
 use crate::obs::{self, Event as ObsEvent};
 
@@ -108,6 +109,10 @@ pub struct ServeOpts {
     /// progress for this long is cut (announced with a `Stall` event),
     /// not hung. The default keeps the historical hour.
     pub stall_secs: f64,
+    /// Resident-byte budget for the server-owned client-state cache
+    /// ([`StateStore`]); colder states spill to disk. `None` keeps
+    /// everything resident (the historical behavior).
+    pub state_budget: Option<u64>,
 }
 
 impl Default for ServeOpts {
@@ -121,26 +126,23 @@ impl Default for ServeOpts {
             join_timeout_secs: 120.0,
             io_timeout_secs: 30.0,
             stall_secs: 3600.0,
+            state_budget: None,
         }
     }
 }
 
-/// One admitted worker connection (write half; reads happen on a dedicated
-/// thread feeding the event channel).
+/// One admitted worker (or, in tree mode, sub-aggregator) connection:
+/// the nonblocking write half plus the client-state generations this
+/// connection provably holds (the basis for `AssignState::Ref`).
 struct WorkerConn {
     conn: usize,
     name: String,
-    stream: TcpStream,
+    stream: NbWriter,
     alive: bool,
-}
-
-enum Event {
-    Joined { conn: usize, stream: TcpStream, join: proto::Join },
-    Frame { conn: usize, msg: Msg },
-    /// A frame that framed correctly (length prefix intact) but failed
-    /// link decode — a flaked payload. The stream itself is still good.
-    Malformed { conn: usize },
-    Gone { conn: usize },
+    /// client → state generation last shipped to (or pushed by) this
+    /// connection. Reset on admission and rejoin — a fresh process holds
+    /// nothing.
+    gens: BTreeMap<usize, u64>,
 }
 
 /// The Photon Aggregator as a network service.
@@ -150,6 +152,10 @@ pub struct Server {
     listener: Option<TcpListener>,
     addr: SocketAddr,
     session: u64,
+    /// Memory-bounded transport cache of client states: every assign is
+    /// served from here (spilling LRU past `ServeOpts::state_budget`),
+    /// and every accepted push refreshes it.
+    store: StateStore,
     /// Realized deadline/disconnect cuts per round — the schedule that
     /// replays this run in-process via `Federation::run_round_cut`.
     pub cuts: Vec<(usize, Vec<usize>)>,
@@ -186,17 +192,27 @@ impl Server {
                 .duration_since(std::time::UNIX_EPOCH)
                 .map(|d| d.as_nanos() as u64)
                 .unwrap_or(0x5e55_1017);
+        let store = StateStore::new(
+            opts.state_budget.unwrap_or(u64::MAX),
+            std::env::temp_dir().join(format!("photon_spill_{session:016x}")),
+        );
         Ok(Server {
             fed,
             opts,
             listener: Some(listener),
             addr,
             session,
+            store,
             cuts: Vec::new(),
             migrations: Vec::new(),
             rejoins: Vec::new(),
             malformed_frames: 0,
         })
+    }
+
+    /// The transport-layer client-state cache (resident/spill statistics).
+    pub fn state_store(&self) -> &StateStore {
+        &self.store
     }
 
     /// The bound address (useful with `bind: "127.0.0.1:0"`).
@@ -263,16 +279,23 @@ impl Server {
         }
     }
 
-    /// Admit a fresh worker, or re-attach a returning one to its old slot
-    /// (`Join.identity = slot + 1`). Returns `Some(slot)` on a successful
-    /// rejoin so the round loop can re-dispatch the reclaimed leases.
+    /// Admit a fresh worker (or sub-aggregator), or re-attach a returning
+    /// one to its old slot (`Join.identity = slot + 1`). Returns
+    /// `Some(slot)` on a successful rejoin so the round loop can
+    /// re-dispatch the reclaimed leases.
+    ///
+    /// Peer-kind routing: a tiered federation (`cfg.tiers > 1`) only
+    /// admits `SubJoin` peers — plain workers must connect to a
+    /// sub-aggregator — and a flat one only admits plain `Join`s.
     fn admit_or_rejoin(
         &mut self,
         workers: &mut Vec<WorkerConn>,
         conn: usize,
-        mut stream: TcpStream,
+        stream: TcpStream,
         join: proto::Join,
+        sub: bool,
     ) -> Option<usize> {
+        let mut stream = NbWriter::new(stream, self.opts.io_timeout_secs);
         if join.proto != PROTO_VERSION {
             let reject = Msg::Reject(Reject {
                 reason: format!(
@@ -283,8 +306,18 @@ impl Server {
             let _ = proto::write_msg(&mut stream, &reject, false);
             return None;
         }
-        let _ = stream
-            .set_write_timeout(Some(Duration::from_secs_f64(self.opts.io_timeout_secs)));
+        let tree = self.fed.cfg.tiers > 1;
+        if sub != tree {
+            let reason = if tree {
+                "root is in tree mode: workers must connect to a sub-aggregator"
+                    .to_string()
+            } else {
+                "flat federation: sub-aggregators are not admitted (set --tiers)"
+                    .to_string()
+            };
+            let _ = proto::write_msg(&mut stream, &Msg::Reject(Reject { reason }), false);
+            return None;
+        }
         if join.identity > 0 {
             // Rejoin path: the identity must name a slot this incarnation
             // assigned and that is currently dead — a live slot means the
@@ -314,7 +347,15 @@ impl Server {
                 "[serve] worker {:?} rejoined slot {slot} (round {})",
                 join.name, self.fed.next_round
             );
-            workers[slot] = WorkerConn { conn, name: join.name, stream, alive: true };
+            workers[slot] = WorkerConn {
+                conn,
+                name: join.name,
+                stream,
+                alive: true,
+                // A rejoined process holds no cached states: everything it
+                // is assigned from here on ships Full until it pushes.
+                gens: BTreeMap::new(),
+            };
             self.rejoins.push((self.fed.next_round, slot));
             self.emit(ObsEvent::WorkerRejoin {
                 round: self.fed.next_round as u64,
@@ -332,12 +373,30 @@ impl Server {
         if proto::write_msg(&mut stream, &ack, false).is_err() {
             return None;
         }
-        println!("[serve] admitted worker {:?} (slot {})", join.name, workers.len());
-        self.emit(ObsEvent::WorkerJoin {
-            worker: workers.len() as u64,
-            name: join.name.clone(),
+        if sub {
+            println!(
+                "[serve] admitted sub-aggregator {:?} (slot {})",
+                join.name,
+                workers.len()
+            );
+            self.emit(ObsEvent::SubaggJoin {
+                subagg: workers.len() as u64,
+                name: join.name.clone(),
+            });
+        } else {
+            println!("[serve] admitted worker {:?} (slot {})", join.name, workers.len());
+            self.emit(ObsEvent::WorkerJoin {
+                worker: workers.len() as u64,
+                name: join.name.clone(),
+            });
+        }
+        workers.push(WorkerConn {
+            conn,
+            name: join.name,
+            stream,
+            alive: true,
+            gens: BTreeMap::new(),
         });
-        workers.push(WorkerConn { conn, name: join.name, stream, alive: true });
         None
     }
 
@@ -352,7 +411,7 @@ impl Server {
             .ok_or_else(|| anyhow::anyhow!("Server::run may only be called once"))?;
         let (tx, rx) = mpsc::channel::<Event>();
         let stop = Arc::new(AtomicBool::new(false));
-        spawn_acceptor(listener, tx, stop.clone());
+        spawn_poller(listener, tx, stop.clone())?;
         self.emit(ObsEvent::ServerStart {
             session: format!("{:#x}", self.session),
             rounds: self.fed.cfg.rounds as u64,
@@ -364,12 +423,12 @@ impl Server {
         let result = self.run_rounds(&rx, &mut workers);
 
         // Clean shutdown regardless of outcome: tell live workers, then
-        // unblock the acceptor so its thread exits.
+        // stop the polling thread (it checks the flag every sweep, so no
+        // wakeup connection is needed).
         for w in workers.iter_mut().filter(|w| w.alive) {
             let _ = proto::write_msg(&mut w.stream, &Msg::Shutdown, false);
         }
         stop.store(true, Ordering::Release);
-        let _ = TcpStream::connect(self.addr);
         self.emit(ObsEvent::Shutdown { rounds: self.fed.next_round as u64 });
 
         result?;
@@ -394,13 +453,13 @@ impl Server {
                 );
             }
             match rx.recv_timeout(join_deadline - now) {
-                Ok(Event::Joined { conn, stream, join }) => {
-                    self.admit_or_rejoin(workers, conn, stream, join);
+                Ok(Event::Joined { conn, stream, join, sub }) => {
+                    self.admit_or_rejoin(workers, conn, stream, join, sub);
                 }
                 Ok(Event::Gone { conn }) => mark_gone(workers, conn),
                 Ok(Event::Frame { .. }) | Ok(Event::Malformed { .. }) => {}
                 Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => bail!("acceptor thread died"),
+                Err(RecvTimeoutError::Disconnected) => bail!("polling thread died"),
             }
         }
 
@@ -428,16 +487,38 @@ impl Server {
                 );
             }
             match rx.recv_timeout(give_up - now) {
-                Ok(Event::Joined { conn, stream, join }) => {
-                    self.admit_or_rejoin(workers, conn, stream, join);
+                Ok(Event::Joined { conn, stream, join, sub }) => {
+                    self.admit_or_rejoin(workers, conn, stream, join, sub);
                 }
                 Ok(Event::Gone { conn }) => mark_gone(workers, conn),
                 Ok(_) => {}
                 Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => bail!("acceptor thread died"),
+                Err(RecvTimeoutError::Disconnected) => bail!("polling thread died"),
             }
         }
         Ok(())
+    }
+
+    /// The state field for assigning `c` to connection `w`: a generation
+    /// reference when the connection provably holds the current state
+    /// (it received or pushed this exact generation earlier), the full
+    /// bytes otherwise. Tree mode always ships Full — a sub-aggregator
+    /// re-leases the task to a worker of its own, which holds nothing the
+    /// root knows about.
+    fn assign_state(&mut self, w: &mut WorkerConn, c: usize) -> Result<AssignState> {
+        let gen = match self.store.gen_of(c) {
+            Some(g) => g,
+            None => self.store.put(c, &self.fed.client_state(c))?,
+        };
+        if self.fed.cfg.tiers == 1 && w.gens.get(&c) == Some(&gen) {
+            return Ok(AssignState::Ref(gen));
+        }
+        let state = match self.store.get(c)? {
+            Some(s) => s,
+            None => self.fed.client_state(c),
+        };
+        w.gens.insert(c, gen);
+        Ok(AssignState::Full(state))
     }
 
     /// Re-dispatch `clients` (at their unchanged pre-round state) to
@@ -451,18 +532,15 @@ impl Server {
         clients: &[usize],
         d: &RoundDispatch,
         steps_of: &BTreeMap<usize, u64>,
-    ) {
+    ) -> Result<()> {
         if clients.is_empty() {
-            return;
+            return Ok(());
         }
-        let tasks: Vec<AssignTask> = clients
-            .iter()
-            .map(|&c| AssignTask {
-                client: c as u64,
-                steps: steps_of[&c],
-                state: self.fed.client_state(c),
-            })
-            .collect();
+        let mut tasks: Vec<AssignTask> = Vec::with_capacity(clients.len());
+        for &c in clients {
+            let state = self.assign_state(&mut workers[widx], c)?;
+            tasks.push(AssignTask { client: c as u64, steps: steps_of[&c], state });
+        }
         let msg = Msg::RoundAssign(RoundAssign {
             session: self.session,
             round: d.round as u64,
@@ -473,6 +551,7 @@ impl Server {
         if proto::write_msg(&mut workers[widx].stream, &msg, self.opts.compress).is_err() {
             workers[widx].alive = false;
         }
+        Ok(())
     }
 
     /// Move every pending lease of `from` onto the given live targets and
@@ -486,10 +565,10 @@ impl Server {
         from: usize,
         targets: &[usize],
         migs: &mut Vec<Migration>,
-    ) {
+    ) -> Result<()> {
         let moved = book.migrate_from(from, targets);
         if moved.is_empty() {
-            return;
+            return Ok(());
         }
         println!(
             "[serve] round {}: migrating {} lease(s) off worker {:?} (slot {from})",
@@ -498,7 +577,7 @@ impl Server {
             workers[from].name
         );
         for (widx, clients) in LeaseBook::group_by_target(&moved) {
-            self.send_assign(workers, widx, &clients, d, steps_of);
+            self.send_assign(workers, widx, &clients, d, steps_of)?;
         }
         for m in &moved {
             self.emit(ObsEvent::Migration {
@@ -509,10 +588,14 @@ impl Server {
             });
         }
         migs.extend(moved);
+        Ok(())
     }
 
     /// Dispatch, collect, and commit one round.
     fn serve_round(&mut self, rx: &Receiver<Event>, workers: &mut Vec<WorkerConn>) -> Result<()> {
+        if self.fed.cfg.tiers > 1 {
+            return self.serve_round_tree(rx, workers);
+        }
         let t0 = Instant::now();
         self.await_live_worker(rx, workers, self.fed.next_round)?;
         let d = self.fed.plan_round();
@@ -557,7 +640,7 @@ impl Server {
             if clients.is_empty() {
                 continue;
             }
-            self.send_assign(workers, widx, &clients, &d, &steps_of);
+            self.send_assign(workers, widx, &clients, &d, &steps_of)?;
             if !workers[widx].alive && deadline.is_none() {
                 // Worker unreachable at dispatch and no rejoin window: cut
                 // its share now (the PR 3 semantics).
@@ -596,7 +679,7 @@ impl Server {
                         self.migrate_pending(
                             workers, &mut book, &d, &steps_of, from, &targets,
                             &mut round_migs,
-                        );
+                        )?;
                     }
                     continue;
                 }
@@ -610,15 +693,15 @@ impl Server {
                 None => Duration::from_secs_f64(self.opts.stall_secs),
             };
             match rx.recv_timeout(timeout) {
-                Ok(Event::Joined { conn, stream, join }) => {
+                Ok(Event::Joined { conn, stream, join, sub }) => {
                     // Mid-round joins are admitted (work from the next
                     // round on); mid-round REjoins reclaim their pending
                     // leases and get them re-dispatched immediately.
                     if let Some(widx) =
-                        self.admit_or_rejoin(workers, conn, stream, join)
+                        self.admit_or_rejoin(workers, conn, stream, join, sub)
                     {
                         let reclaimed = book.pending_of(widx);
-                        self.send_assign(workers, widx, &reclaimed, &d, &steps_of);
+                        self.send_assign(workers, widx, &reclaimed, &d, &steps_of)?;
                     }
                 }
                 Ok(Event::Frame { conn, msg }) => match msg {
@@ -681,6 +764,12 @@ impl Server {
                             let Some(slot) = book.slot(client) else {
                                 bail!("lease ledger accepted unsampled client {client}");
                             };
+                            // Record the advanced state: the pushing
+                            // connection now provably holds this exact
+                            // generation, so the next round's assign can be
+                            // a Ref instead of the full bytes.
+                            let gen = self.store.put(client, &p.state)?;
+                            workers[widx].gens.insert(client, gen);
                             self.emit(ObsEvent::LeaseFold {
                                 round: d.round as u64,
                                 client: client as u64,
@@ -753,7 +842,7 @@ impl Server {
                         book.cut_all_pending();
                     }
                 }
-                Err(RecvTimeoutError::Disconnected) => bail!("acceptor thread died"),
+                Err(RecvTimeoutError::Disconnected) => bail!("polling thread died"),
             }
         }
 
@@ -803,6 +892,297 @@ impl Server {
         }
         Ok(())
     }
+
+    /// Tree-mode round: lease whole contiguous slices of the sampled
+    /// cohort to the connected sub-aggregators and commit from their
+    /// pre-folded pushes. No migration — which group folds a client is
+    /// part of the tiered-fold math, so leases cannot move between
+    /// sub-aggregators without changing the committed bits.
+    fn serve_round_tree(
+        &mut self,
+        rx: &Receiver<Event>,
+        workers: &mut Vec<WorkerConn>,
+    ) -> Result<()> {
+        let t0 = Instant::now();
+        self.await_live_worker(rx, workers, self.fed.next_round)?;
+        let d = self.fed.plan_round();
+        let groups = tier_slices(d.runnable.len(), self.fed.cfg.tiers);
+
+        // A tree round needs one live sub-aggregator per group; wait out
+        // the join window for stragglers still connecting or rejoining.
+        let give_up =
+            Instant::now() + Duration::from_secs_f64(self.opts.join_timeout_secs);
+        while workers.iter().filter(|w| w.alive).count() < groups.len() {
+            let now = Instant::now();
+            if now >= give_up {
+                bail!(
+                    "tree round {} needs {} sub-aggregator(s), only {} connected \
+                     (state is checkpointed; restart with --resume)",
+                    d.round,
+                    groups.len(),
+                    workers.iter().filter(|w| w.alive).count()
+                );
+            }
+            match rx.recv_timeout(give_up - now) {
+                Ok(Event::Joined { conn, stream, join, sub }) => {
+                    self.admit_or_rejoin(workers, conn, stream, join, sub);
+                }
+                Ok(Event::Gone { conn }) => mark_gone(workers, conn),
+                Ok(_) => {}
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => bail!("polling thread died"),
+            }
+        }
+        let live: Vec<usize> =
+            (0..workers.len()).filter(|&i| workers[i].alive).collect();
+
+        let mut book = LeaseBook::new(&d.runnable);
+        let steps_of: BTreeMap<usize, u64> = d.runnable.iter().copied().collect();
+        // Group `gid` is served by sub-aggregator `live[gid]`: the whole
+        // slice travels as one RoundAssign (always Full states — the
+        // sub-aggregator re-leases them to workers the root knows nothing
+        // about) and must come back as one FoldedPush.
+        let mut group_of: BTreeMap<usize, usize> = BTreeMap::new();
+        for (gid, slice) in groups.iter().enumerate() {
+            let widx = live[gid];
+            group_of.insert(widx, gid);
+            let clients: Vec<usize> =
+                d.runnable[slice.clone()].iter().map(|&(c, _)| c).collect();
+            for &c in &clients {
+                book.lease(c, widx);
+                self.emit(ObsEvent::LeaseGrant {
+                    round: d.round as u64,
+                    client: c as u64,
+                    worker: widx as u64,
+                });
+            }
+            self.send_assign(workers, widx, &clients, &d, &steps_of)?;
+            if !workers[widx].alive && self.opts.deadline_secs.is_none() {
+                // Sub-aggregator unreachable at dispatch and no rejoin
+                // window: its whole slice is lost this round (no
+                // migration in tree mode).
+                let _ = book.cut_pending_of(widx);
+            }
+        }
+
+        let deadline = self
+            .opts
+            .deadline_secs
+            .map(|s| t0 + Duration::from_secs_f64(s));
+        let mut arrived: BTreeMap<usize, (ClientUpdate, ClientCkpt)> = BTreeMap::new();
+        // gid -> (carried weight, folded mean) in group order, exactly the
+        // second-stage rows `commit_round_folded` verifies and folds.
+        let mut folded: BTreeMap<usize, (f64, Vec<f32>)> = BTreeMap::new();
+        while book.pending_count() > 0 {
+            let now = Instant::now();
+            if let Some(dl) = deadline {
+                if now >= dl {
+                    book.cut_all_pending();
+                    break;
+                }
+            }
+            let timeout = match deadline {
+                Some(t) => t.saturating_duration_since(now),
+                None => Duration::from_secs_f64(self.opts.stall_secs),
+            };
+            match rx.recv_timeout(timeout) {
+                Ok(Event::Joined { conn, stream, join, sub }) => {
+                    // A rejoining sub-aggregator reclaims its pending slice
+                    // and gets it re-dispatched whole.
+                    if let Some(widx) =
+                        self.admit_or_rejoin(workers, conn, stream, join, sub)
+                    {
+                        let reclaimed = book.pending_of(widx);
+                        self.send_assign(workers, widx, &reclaimed, &d, &steps_of)?;
+                    }
+                }
+                Ok(Event::Frame { conn, msg }) => match msg {
+                    Msg::FoldedPush(fp)
+                        if fp.session == self.session && fp.round == d.round as u64 =>
+                    {
+                        let Some(widx) = workers.iter().position(|w| w.conn == conn)
+                        else {
+                            continue;
+                        };
+                        self.accept_folded(
+                            workers, &mut book, &d, &group_of, widx, fp, &mut folded,
+                            &mut arrived,
+                        )?;
+                    }
+                    // Heartbeats, stale-round/stale-session pushes, and
+                    // flat-mode UpdatePushes (invalid in tree mode).
+                    _ => {}
+                },
+                Ok(Event::Malformed { conn }) => {
+                    self.malformed_frames += 1;
+                    let widx = workers.iter().position(|w| w.conn == conn);
+                    let who = widx.map(|w| workers[w].name.as_str()).unwrap_or("?");
+                    println!(
+                        "[serve] round {}: dropped undecodable frame from {who:?}",
+                        d.round
+                    );
+                    self.emit(ObsEvent::Malformed {
+                        round: d.round as u64,
+                        worker: widx.map(|w| w as u64),
+                    });
+                }
+                Ok(Event::Gone { conn }) => {
+                    mark_gone(workers, conn);
+                    if let Some(widx) = workers.iter().position(|w| w.conn == conn) {
+                        if deadline.is_none() {
+                            let _ = book.cut_pending_of(widx);
+                        }
+                        // else: the slice stays pending — the sub-aggregator
+                        // may rejoin with identity before the deadline.
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if deadline.is_none() {
+                        let pending = book.pending_count();
+                        println!(
+                            "[serve] round {}: stall backstop ({}s) fired with \
+                             {pending} lease(s) pending — cutting",
+                            d.round, self.opts.stall_secs
+                        );
+                        self.emit(ObsEvent::Stall {
+                            round: Some(d.round as u64),
+                            waited_us: (self.opts.stall_secs * 1e6) as u64,
+                            detail: format!(
+                                "{pending} lease(s) pending past the liveness backstop"
+                            ),
+                        });
+                        book.cut_all_pending();
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => bail!("polling thread died"),
+            }
+        }
+
+        let mut updates: Vec<ClientUpdate> = Vec::with_capacity(arrived.len());
+        for (_slot, (update, state)) in arrived {
+            self.fed
+                .restore_client_state(update.client_id, &state)
+                .with_context(|| format!("installing client {} state", update.client_id))?;
+            updates.push(update);
+        }
+        let cut = book.cuts();
+        if !cut.is_empty() {
+            self.emit(ObsEvent::Cut {
+                round: d.round as u64,
+                clients: cut.iter().map(|&c| c as u64).collect(),
+            });
+            self.cuts.push((d.round, cut.clone()));
+        }
+        let rec = self.fed.commit_round_folded(
+            d.round,
+            updates,
+            folded.into_values().collect(),
+            t0,
+        )?;
+        println!(
+            "[serve] round {:>3}  server_ppl {:>9.3}  participated {}/{}  \
+             dropped {}  cut {:?}",
+            rec.round,
+            rec.server_ppl,
+            rec.participated,
+            self.fed.cfg.clients_per_round,
+            d.dropped.len(),
+            cut,
+        );
+        obs::timing("serve", &format!("round {}", rec.round), rec.wall_secs);
+
+        let commit = Msg::RoundCommit(RoundCommit {
+            round: rec.round as u64,
+            participated: rec.participated as u64,
+            global_norm: rec.global_model_norm,
+        });
+        for w in workers.iter_mut().filter(|w| w.alive) {
+            if proto::write_msg(&mut w.stream, &commit, false).is_err() {
+                w.alive = false;
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate and ledger one FoldedPush. All-or-nothing: the push is the
+    /// sub-aggregator's final word on its slice — on any defect the whole
+    /// slice is cut through the dropped path, and even on acceptance any
+    /// member the sub-aggregator lost downstream (absent from the push)
+    /// is cut rather than left pending.
+    #[allow(clippy::too_many_arguments)]
+    fn accept_folded(
+        &mut self,
+        workers: &mut [WorkerConn],
+        book: &mut LeaseBook,
+        d: &RoundDispatch,
+        group_of: &BTreeMap<usize, usize>,
+        widx: usize,
+        fp: FoldedPush,
+        folded: &mut BTreeMap<usize, (f64, Vec<f32>)>,
+        arrived: &mut BTreeMap<usize, (ClientUpdate, ClientCkpt)>,
+    ) -> Result<()> {
+        let Some(&gid) = group_of.get(&widx) else {
+            // A connection with no leased group this round (late joiner,
+            // spare sub-aggregator): nothing to ledger.
+            return Ok(());
+        };
+        if folded.contains_key(&gid) {
+            // Duplicate push for an already-committed group: ignore.
+            return Ok(());
+        }
+        // Structural validation. `weight` must be the bit-exact sequential
+        // sum of the member sample counts (the weight-carry rule): the
+        // root re-derives it at commit, so a sub-aggregator cannot smuggle
+        // in a different weighting than its members justify.
+        let seq_weight: f64 = fp.members.iter().map(|m| m.update.n_samples).sum();
+        let ok = !fp.members.is_empty()
+            && fp.mean.len() == self.fed.global.len()
+            && fp.weight.to_bits() == seq_weight.to_bits()
+            && fp.members.iter().all(|m| {
+                m.update.params.is_empty()
+                    && book.owner(m.update.client_id) == Some(widx)
+                    && self
+                        .fed
+                        .check_client_state(m.update.client_id, &m.state)
+                        .is_ok()
+            });
+        if !ok {
+            println!(
+                "[serve] round {}: rejected folded push from {:?} — cutting its slice",
+                d.round, workers[widx].name
+            );
+            let _ = book.cut_pending_of(widx);
+            return Ok(());
+        }
+        let n_clients = fp.members.len() as u64;
+        for m in fp.members {
+            let client = m.update.client_id;
+            if book.accept(client, widx) {
+                let Some(slot) = book.slot(client) else {
+                    bail!("lease ledger accepted unsampled client {client}");
+                };
+                let gen = self.store.put(client, &m.state)?;
+                workers[widx].gens.insert(client, gen);
+                self.emit(ObsEvent::LeaseFold {
+                    round: d.round as u64,
+                    client: client as u64,
+                    worker: widx as u64,
+                });
+                arrived.insert(slot, (m.update, m.state));
+            }
+        }
+        // Members the sub-aggregator lost downstream never come back —
+        // cut them now instead of waiting out the deadline.
+        let _ = book.cut_pending_of(widx);
+        self.emit(ObsEvent::FoldedPush {
+            round: d.round as u64,
+            subagg: widx as u64,
+            n_clients,
+            weight: fp.weight,
+        });
+        folded.insert(gid, (fp.weight, fp.mean));
+        Ok(())
+    }
 }
 
 fn mark_gone(workers: &mut [WorkerConn], conn: usize) {
@@ -814,61 +1194,3 @@ fn mark_gone(workers: &mut [WorkerConn], conn: usize) {
     }
 }
 
-/// Accept connections forever (until `stop`); each connection gets a reader
-/// thread that performs the Join read and then forwards every frame as an
-/// event. Writes stay with the main loop.
-fn spawn_acceptor(listener: TcpListener, tx: Sender<Event>, stop: Arc<AtomicBool>) {
-    std::thread::spawn(move || {
-        let mut next_conn = 0usize;
-        for incoming in listener.incoming() {
-            if stop.load(Ordering::Acquire) {
-                break;
-            }
-            let stream = match incoming {
-                Ok(s) => s,
-                Err(_) => continue,
-            };
-            let conn = next_conn;
-            next_conn += 1;
-            let tx = tx.clone();
-            std::thread::spawn(move || reader_loop(conn, stream, tx));
-        }
-    });
-}
-
-fn reader_loop(conn: usize, stream: TcpStream, tx: Sender<Event>) {
-    let mut read = match stream.try_clone() {
-        Ok(r) => r,
-        Err(_) => return,
-    };
-    // The first frame must be a Join; anything else is a protocol
-    // violation and the connection is silently dropped.
-    match proto::read_msg(&mut read) {
-        Ok(Msg::Join(join)) => {
-            if tx.send(Event::Joined { conn, stream, join }).is_err() {
-                return;
-            }
-        }
-        _ => return,
-    }
-    loop {
-        match proto::read_frame(&mut read) {
-            // Stream framing intact: a decode failure is a corrupted
-            // payload (link flake) — report it and keep reading. Only an
-            // IO-level failure means the peer is gone.
-            Ok(frame) => {
-                let event = match Msg::decode(&frame) {
-                    Ok(msg) => Event::Frame { conn, msg },
-                    Err(_) => Event::Malformed { conn },
-                };
-                if tx.send(event).is_err() {
-                    return;
-                }
-            }
-            Err(_) => {
-                let _ = tx.send(Event::Gone { conn });
-                return;
-            }
-        }
-    }
-}

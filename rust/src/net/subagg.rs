@@ -1,0 +1,707 @@
+//! Mid-tier sub-aggregator: the deployment-plane role behind a
+//! multi-tier federation (`cfg.tiers > 1`). A sub-aggregator joins the
+//! root Aggregator as a `SubJoin` peer, leases a whole contiguous slice
+//! of each round's sampled cohort, re-leases the member clients to its
+//! own downstream workers, folds the arriving updates locally with the
+//! *same* `weighted_mean_into` kernel the in-process `tiered_fold` runs,
+//! and pushes one pre-folded `(weight, mean)` pair — plus the member
+//! bookkeeping — upstream as a `FoldedPush`.
+//!
+//! ## Equivalence contract
+//!
+//! The committed global model is bit-identical to the in-process
+//! `Federation::run` at the same `cfg.tiers`: the sub-aggregator folds
+//! its arrived members in slot (= sampled) order via
+//! [`crate::model::vecmath::weighted_mean_into`], carries the weight as
+//! the *sequential* f64 sum of the member sample counts, and ships the
+//! mean dense (f32 rows are never re-coded through a lossy codec on the
+//! subagg→root leg — re-quantizing a mean would break parity). The root
+//! re-derives the carried weight from the members at commit and folds the
+//! group means with `streaming_fold`, exactly stage two of `tiered_fold`.
+//!
+//! ## Faults
+//!
+//! Downstream workers get the full flat-server treatment minus
+//! migration: a per-round deadline (measured from assignment receipt)
+//! cuts stragglers, a crashed worker's leases survive for an identity
+//! rejoin within the deadline, and a malformed frame drops the payload,
+//! never the process. Members lost downstream are simply absent from the
+//! `FoldedPush`; the root cuts them through the dropped path.
+
+// Wall-clock reads here are transport concerns (deadlines, liveness) —
+// allowlisted; see docs/ANALYSIS.md (nondet-time).
+#![allow(clippy::disallowed_methods)]
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::chaos::LeaseBook;
+use crate::ckpt::ClientCkpt;
+use crate::coordinator::ClientUpdate;
+use crate::model::vecmath::weighted_mean_into;
+use crate::net::poll::{spawn_poller, Event, NbWriter};
+use crate::net::proto::{
+    self, AssignState, AssignTask, FoldedMember, FoldedPush, Heartbeat, JoinAck, Msg,
+    Reject, RoundAssign, TaskSpec, PROTO_VERSION,
+};
+
+/// Sub-aggregator knobs.
+#[derive(Clone, Debug)]
+pub struct SubaggOpts {
+    /// Display name sent upstream in the SubJoin (logs only).
+    pub name: String,
+    /// Downstream bind address for workers (`:0` picks a free port).
+    pub bind: String,
+    /// Wait for this many downstream workers before serving round 0.
+    pub min_workers: usize,
+    /// Downstream straggler deadline per round, measured from assignment
+    /// receipt; `None` = disconnects only (plus the stall backstop).
+    pub deadline_secs: Option<f64>,
+    /// How long to wait for the downstream admission barrier.
+    pub join_timeout_secs: f64,
+    /// Downstream socket write stall tolerance.
+    pub io_timeout_secs: f64,
+    /// Liveness backstop when no deadline is configured.
+    pub stall_secs: f64,
+    pub verbose: bool,
+}
+
+impl Default for SubaggOpts {
+    fn default() -> SubaggOpts {
+        SubaggOpts {
+            name: "subagg".into(),
+            bind: "127.0.0.1:0".into(),
+            min_workers: 1,
+            deadline_secs: None,
+            join_timeout_secs: 120.0,
+            io_timeout_secs: 30.0,
+            stall_secs: 3600.0,
+            verbose: false,
+        }
+    }
+}
+
+/// What a sub-aggregator did during one session.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SubaggReport {
+    /// Rounds for which a `FoldedPush` went upstream.
+    pub rounds_served: u64,
+    /// Member updates folded across all served rounds.
+    pub members_folded: u64,
+    /// Downstream worker connections admitted (rejoins included).
+    pub workers_admitted: u64,
+    /// Framed-but-undecodable downstream frames dropped.
+    pub malformed_frames: u64,
+}
+
+/// The single event stream the sub-aggregator's main loop drains:
+/// downstream poller events and upstream frames, funneled into one
+/// channel by two adapter threads.
+enum Ev {
+    Down(Event),
+    Up(Msg),
+    UpGone,
+}
+
+/// One admitted downstream worker connection.
+struct DownConn {
+    conn: usize,
+    name: String,
+    stream: NbWriter,
+    alive: bool,
+}
+
+enum AfterRound {
+    Continue,
+    Shutdown,
+}
+
+struct Subagg {
+    opts: SubaggOpts,
+    session: u64,
+    spec: TaskSpec,
+    /// Upstream write half (the read half lives in the reader thread).
+    up: TcpStream,
+    workers: Vec<DownConn>,
+    report: SubaggReport,
+}
+
+/// Connect to the root Aggregator at `upstream`, join as a sub-aggregator,
+/// serve downstream workers on `opts.bind`, and run rounds until the root
+/// sends `Shutdown`. Blocking. `addr_tx`, when given, receives the bound
+/// downstream address (the harness wires workers to it).
+pub fn run_subagg(
+    upstream: &str,
+    opts: SubaggOpts,
+    addr_tx: Option<Sender<SocketAddr>>,
+) -> Result<SubaggReport> {
+    let mut up = TcpStream::connect(upstream)
+        .with_context(|| format!("connecting to root {upstream}"))?;
+    up.set_nodelay(true).ok();
+    proto::write_msg(
+        &mut up,
+        &Msg::SubJoin(proto::Join {
+            proto: PROTO_VERSION,
+            name: opts.name.clone(),
+            identity: 0,
+        }),
+        false,
+    )?;
+    let mut up_read = up.try_clone().context("cloning upstream stream")?;
+    let ack = match proto::read_msg(&mut up_read)? {
+        Msg::JoinAck(a) => a,
+        Msg::Reject(r) => bail!("root rejected sub-aggregator join: {}", r.reason),
+        other => bail!("expected JoinAck from root, got {:?}", other.kind()),
+    };
+    ensure!(
+        ack.proto == PROTO_VERSION,
+        "root speaks photon-net v{}, this sub-aggregator v{PROTO_VERSION} — upgrade",
+        ack.proto
+    );
+
+    let listener = TcpListener::bind(&opts.bind)
+        .with_context(|| format!("binding downstream {}", opts.bind))?;
+    let addr = listener.local_addr()?;
+    if let Some(tx) = addr_tx {
+        let _ = tx.send(addr);
+    }
+    if opts.verbose {
+        println!(
+            "[subagg {}] joined root as slot {}; serving workers on {addr}",
+            opts.name, ack.worker_slot
+        );
+    }
+
+    let (etx, erx) = mpsc::channel::<Ev>();
+    let stop = Arc::new(AtomicBool::new(false));
+    // Downstream poller → funnel adapter.
+    let (ptx, prx) = mpsc::channel::<Event>();
+    spawn_poller(listener, ptx, stop.clone())?;
+    {
+        let etx = etx.clone();
+        std::thread::spawn(move || {
+            for ev in prx {
+                if etx.send(Ev::Down(ev)).is_err() {
+                    return;
+                }
+            }
+        });
+    }
+    // Upstream reader → funnel adapter.
+    std::thread::spawn(move || loop {
+        match proto::read_msg(&mut up_read) {
+            Ok(msg) => {
+                if etx.send(Ev::Up(msg)).is_err() {
+                    return;
+                }
+            }
+            Err(_) => {
+                let _ = etx.send(Ev::UpGone);
+                return;
+            }
+        }
+    });
+
+    let mut sa = Subagg {
+        opts,
+        session: ack.session,
+        spec: ack.spec,
+        up,
+        workers: Vec::new(),
+        report: SubaggReport::default(),
+    };
+    let result = sa.run(&erx);
+    // Whatever ended the session, release the fleet and the poller.
+    let shutdown = Msg::Shutdown;
+    for w in sa.workers.iter_mut().filter(|w| w.alive) {
+        let _ = proto::write_msg(&mut w.stream, &shutdown, false);
+    }
+    stop.store(true, Ordering::Release);
+    result?;
+    Ok(sa.report)
+}
+
+impl Subagg {
+    fn run(&mut self, rx: &Receiver<Ev>) -> Result<()> {
+        // Downstream admission barrier. A RoundAssign may arrive from the
+        // root while the local fleet is still connecting — stash it and
+        // serve it the moment the barrier clears.
+        let mut stashed: Option<RoundAssign> = None;
+        let give_up =
+            Instant::now() + Duration::from_secs_f64(self.opts.join_timeout_secs);
+        while self.workers.iter().filter(|w| w.alive).count() < self.opts.min_workers {
+            let now = Instant::now();
+            if now >= give_up {
+                bail!(
+                    "timed out waiting for {} downstream workers ({} joined)",
+                    self.opts.min_workers,
+                    self.workers.len()
+                );
+            }
+            match rx.recv_timeout(give_up - now) {
+                Ok(Ev::Down(Event::Joined { conn, stream, join, sub })) => {
+                    self.admit_or_rejoin(conn, stream, join, sub);
+                }
+                Ok(Ev::Down(Event::Gone { conn })) => self.mark_gone(conn),
+                Ok(Ev::Down(_)) => {}
+                Ok(Ev::Up(Msg::RoundAssign(ra))) => stashed = Some(ra),
+                Ok(Ev::Up(Msg::Shutdown)) => return Ok(()),
+                Ok(Ev::Up(Msg::Reject(r))) => {
+                    bail!("root rejected mid-session: {}", r.reason)
+                }
+                Ok(Ev::Up(_)) => {}
+                Ok(Ev::UpGone) => bail!("upstream connection lost during admission"),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => bail!("event funnel died"),
+            }
+        }
+        if let Some(ra) = stashed.take() {
+            if let AfterRound::Shutdown = self.serve_round(rx, ra)? {
+                return Ok(());
+            }
+        }
+        loop {
+            match rx.recv() {
+                Ok(Ev::Up(Msg::RoundAssign(ra))) => {
+                    if let AfterRound::Shutdown = self.serve_round(rx, ra)? {
+                        return Ok(());
+                    }
+                }
+                Ok(Ev::Up(Msg::RoundCommit(c))) => self.broadcast(&Msg::RoundCommit(c)),
+                Ok(Ev::Up(Msg::Shutdown)) => return Ok(()),
+                Ok(Ev::Up(Msg::Reject(r))) => {
+                    bail!("root rejected mid-session: {}", r.reason)
+                }
+                Ok(Ev::Up(_)) => {}
+                Ok(Ev::UpGone) => bail!("upstream connection lost"),
+                Ok(Ev::Down(Event::Joined { conn, stream, join, sub })) => {
+                    self.admit_or_rejoin(conn, stream, join, sub);
+                }
+                Ok(Ev::Down(Event::Gone { conn })) => self.mark_gone(conn),
+                // Stale pushes / malformed frames between rounds.
+                Ok(Ev::Down(_)) => {}
+                Err(_) => bail!("event funnel died"),
+            }
+        }
+    }
+
+    /// Admit a fresh downstream worker or re-attach a returning one to its
+    /// slot. Nested sub-aggregators are refused — the tree is two levels
+    /// of aggregation deep by design (root + this tier).
+    fn admit_or_rejoin(
+        &mut self,
+        conn: usize,
+        stream: TcpStream,
+        join: proto::Join,
+        sub: bool,
+    ) -> Option<usize> {
+        let mut stream = NbWriter::new(stream, self.opts.io_timeout_secs);
+        if sub {
+            let reject = Msg::Reject(Reject {
+                reason: "sub-aggregators do not nest: connect workers here, \
+                         sub-aggregators to the root"
+                    .to_string(),
+            });
+            let _ = proto::write_msg(&mut stream, &reject, false);
+            return None;
+        }
+        if join.proto != PROTO_VERSION {
+            let reject = Msg::Reject(Reject {
+                reason: format!(
+                    "worker speaks photon-net v{}, sub-aggregator requires \
+                     v{PROTO_VERSION}",
+                    join.proto
+                ),
+            });
+            let _ = proto::write_msg(&mut stream, &reject, false);
+            return None;
+        }
+        if join.identity > 0 {
+            let slot = (join.identity - 1) as usize;
+            if slot >= self.workers.len() || self.workers[slot].alive {
+                let reject = Msg::Reject(Reject {
+                    reason: format!(
+                        "identity {} does not name a reclaimable worker slot",
+                        join.identity
+                    ),
+                });
+                let _ = proto::write_msg(&mut stream, &reject, false);
+                return None;
+            }
+            let ack = Msg::JoinAck(JoinAck {
+                proto: PROTO_VERSION,
+                session: self.session,
+                worker_slot: slot as u64,
+                spec: self.spec.clone(),
+            });
+            if proto::write_msg(&mut stream, &ack, false).is_err() {
+                return None;
+            }
+            if self.opts.verbose {
+                println!(
+                    "[subagg {}] worker {:?} rejoined slot {slot}",
+                    self.opts.name, join.name
+                );
+            }
+            self.workers[slot] =
+                DownConn { conn, name: join.name, stream, alive: true };
+            self.report.workers_admitted += 1;
+            return Some(slot);
+        }
+        let ack = Msg::JoinAck(JoinAck {
+            proto: PROTO_VERSION,
+            session: self.session,
+            worker_slot: self.workers.len() as u64,
+            spec: self.spec.clone(),
+        });
+        if proto::write_msg(&mut stream, &ack, false).is_err() {
+            return None;
+        }
+        if self.opts.verbose {
+            println!(
+                "[subagg {}] admitted worker {:?} (slot {})",
+                self.opts.name,
+                join.name,
+                self.workers.len()
+            );
+        }
+        self.workers.push(DownConn { conn, name: join.name, stream, alive: true });
+        self.report.workers_admitted += 1;
+        None
+    }
+
+    fn mark_gone(&mut self, conn: usize) {
+        if let Some(w) = self.workers.iter_mut().find(|w| w.conn == conn) {
+            if w.alive {
+                w.alive = false;
+                if self.opts.verbose {
+                    println!(
+                        "[subagg {}] worker {:?} disconnected",
+                        self.opts.name, w.name
+                    );
+                }
+            }
+        }
+    }
+
+    fn broadcast(&mut self, msg: &Msg) {
+        for w in self.workers.iter_mut().filter(|w| w.alive) {
+            if proto::write_msg(&mut w.stream, msg, false).is_err() {
+                w.alive = false;
+            }
+        }
+    }
+
+    /// Re-lease `clients` (their states held in `held`) to downstream
+    /// worker `widx` as one full RoundAssign.
+    fn send_down(
+        &mut self,
+        widx: usize,
+        clients: &[usize],
+        ra: &RoundAssign,
+        held: &BTreeMap<usize, (u64, ClientCkpt)>,
+    ) -> Result<()> {
+        if clients.is_empty() {
+            return Ok(());
+        }
+        let mut tasks = Vec::with_capacity(clients.len());
+        for &c in clients {
+            let Some((steps, state)) = held.get(&c) else {
+                bail!("re-leasing client {c} whose state this sub-aggregator never held");
+            };
+            tasks.push(AssignTask {
+                client: c as u64,
+                steps: *steps,
+                state: AssignState::Full(state.clone()),
+            });
+        }
+        let msg = Msg::RoundAssign(RoundAssign {
+            session: ra.session,
+            round: ra.round,
+            seq_base: ra.seq_base,
+            tasks,
+            global: ra.global.clone(),
+        });
+        if proto::write_msg(&mut self.workers[widx].stream, &msg, self.spec.compress)
+            .is_err()
+        {
+            self.workers[widx].alive = false;
+        }
+        Ok(())
+    }
+
+    /// Serve one leased slice: re-lease to downstream workers, collect the
+    /// member updates, fold them in slot order, push the folded pair
+    /// upstream.
+    fn serve_round(&mut self, rx: &Receiver<Ev>, ra: RoundAssign) -> Result<AfterRound> {
+        let t0 = Instant::now();
+        // Signal receipt: the root ignores heartbeats, but a live frame
+        // right after dispatch is cheap diagnostics.
+        let _ = proto::write_msg(
+            &mut self.up,
+            &Msg::Heartbeat(Heartbeat { session: ra.session, round: ra.round }),
+            false,
+        );
+        if ra.session != self.session {
+            return Ok(AfterRound::Continue); // stale root incarnation
+        }
+
+        // Unpack the slice. The root always ships Full states to a
+        // sub-aggregator; a Ref here is a protocol violation.
+        let mut held: BTreeMap<usize, (u64, ClientCkpt)> = BTreeMap::new();
+        let mut runnable: Vec<(usize, u64)> = Vec::with_capacity(ra.tasks.len());
+        for task in &ra.tasks {
+            let AssignState::Full(state) = &task.state else {
+                bail!(
+                    "root sent a state reference for client {} — sub-aggregators \
+                     hold no cache the root can reference",
+                    task.client
+                );
+            };
+            held.insert(task.client as usize, (task.steps, state.clone()));
+            runnable.push((task.client as usize, task.steps));
+        }
+        if runnable.is_empty() {
+            return Ok(AfterRound::Continue);
+        }
+
+        // Wait out a momentarily empty fleet (crash/rejoin window).
+        let give_up =
+            Instant::now() + Duration::from_secs_f64(self.opts.join_timeout_secs);
+        while !self.workers.iter().any(|w| w.alive) {
+            let now = Instant::now();
+            if now >= give_up {
+                bail!("no downstream workers left for round {}", ra.round);
+            }
+            match rx.recv_timeout(give_up - now) {
+                Ok(Ev::Down(Event::Joined { conn, stream, join, sub })) => {
+                    self.admit_or_rejoin(conn, stream, join, sub);
+                }
+                Ok(Ev::Down(Event::Gone { conn })) => self.mark_gone(conn),
+                Ok(Ev::Down(_)) => {}
+                Ok(Ev::Up(Msg::Shutdown)) => return Ok(AfterRound::Shutdown),
+                Ok(Ev::Up(_)) => {}
+                Ok(Ev::UpGone) => bail!("upstream connection lost"),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => bail!("event funnel died"),
+            }
+        }
+        let live: Vec<usize> =
+            (0..self.workers.len()).filter(|&i| self.workers[i].alive).collect();
+
+        // Round-robin re-lease in slot order. Which worker runs a member
+        // never affects the math — the fold happens here, in slot order.
+        let mut book = LeaseBook::new(&runnable);
+        let mut per_worker: Vec<Vec<usize>> = vec![Vec::new(); self.workers.len()];
+        for (slot, &(client, _)) in runnable.iter().enumerate() {
+            let widx = live[slot % live.len()];
+            book.lease(client, widx);
+            per_worker[widx].push(client);
+        }
+        for &widx in &live {
+            let clients = std::mem::take(&mut per_worker[widx]);
+            if clients.is_empty() {
+                continue;
+            }
+            self.send_down(widx, &clients, &ra, &held)?;
+            if !self.workers[widx].alive && self.opts.deadline_secs.is_none() {
+                let _ = book.cut_pending_of(widx);
+            }
+        }
+
+        let deadline = self
+            .opts
+            .deadline_secs
+            .map(|s| t0 + Duration::from_secs_f64(s));
+        let mut arrived: BTreeMap<usize, (ClientUpdate, ClientCkpt)> = BTreeMap::new();
+        while book.pending_count() > 0 {
+            let now = Instant::now();
+            if let Some(dl) = deadline {
+                if now >= dl {
+                    book.cut_all_pending();
+                    break;
+                }
+            }
+            let timeout = match deadline {
+                Some(t) => t.saturating_duration_since(now),
+                None => Duration::from_secs_f64(self.opts.stall_secs),
+            };
+            match rx.recv_timeout(timeout) {
+                Ok(Ev::Down(Event::Joined { conn, stream, join, sub })) => {
+                    if let Some(widx) = self.admit_or_rejoin(conn, stream, join, sub) {
+                        let reclaimed = book.pending_of(widx);
+                        self.send_down(widx, &reclaimed, &ra, &held)?;
+                    }
+                }
+                Ok(Ev::Down(Event::Frame { conn, msg })) => match msg {
+                    Msg::UpdatePush(p)
+                        if p.session == self.session && p.round == ra.round =>
+                    {
+                        let client = p.update.client_id;
+                        let Some(widx) =
+                            self.workers.iter().position(|w| w.conn == conn)
+                        else {
+                            continue;
+                        };
+                        if book.owner(client) != Some(widx) {
+                            continue;
+                        }
+                        // Decode-then-fold, exactly the flat server's
+                        // acceptance: shape must match the negotiated
+                        // codec, defects cut the member, never the round.
+                        let codec = self.spec.codec;
+                        let mut update = p.update;
+                        let reconstructed: Option<u64> =
+                            match (codec.is_lossy(), &p.body) {
+                                (false, None) => Some(crate::link::dense_frame_bytes(
+                                    update.params.len(),
+                                )),
+                                (true, Some(body)) if update.params.is_empty() => {
+                                    match crate::compress::decode_transit(
+                                        &codec, &ra.global, body,
+                                    ) {
+                                        Ok(params) => {
+                                            update.params = params;
+                                            Some(crate::link::framed_bytes(body.len()))
+                                        }
+                                        Err(_) => None,
+                                    }
+                                }
+                                _ => None,
+                            };
+                        let ok = reconstructed.is_some()
+                            && update.params.len() == ra.global.len();
+                        if !ok {
+                            book.cut(client);
+                            continue;
+                        }
+                        update.wire_bytes = reconstructed.unwrap_or(0);
+                        if book.accept(client, widx) {
+                            let Some(slot) = book.slot(client) else {
+                                bail!("lease ledger accepted unleased client {client}");
+                            };
+                            arrived.insert(slot, (update, p.state));
+                        }
+                    }
+                    _ => {}
+                },
+                Ok(Ev::Down(Event::Malformed { conn })) => {
+                    self.report.malformed_frames += 1;
+                    let who = self
+                        .workers
+                        .iter()
+                        .find(|w| w.conn == conn)
+                        .map(|w| w.name.as_str())
+                        .unwrap_or("?");
+                    println!(
+                        "[subagg {}] round {}: dropped undecodable frame from {who:?}",
+                        self.opts.name, ra.round
+                    );
+                }
+                Ok(Ev::Down(Event::Gone { conn })) => {
+                    self.mark_gone(conn);
+                    if let Some(widx) =
+                        self.workers.iter().position(|w| w.conn == conn)
+                    {
+                        if deadline.is_none() {
+                            let _ = book.cut_pending_of(widx);
+                        }
+                        // else: leases stay pending for an identity rejoin.
+                    }
+                }
+                Ok(Ev::Up(Msg::RoundCommit(c))) => {
+                    // The root committed without us (deadline cut this
+                    // slice): the round is over, nothing to push.
+                    let committed = c.round == ra.round;
+                    self.broadcast(&Msg::RoundCommit(c));
+                    if committed {
+                        return Ok(AfterRound::Continue);
+                    }
+                }
+                Ok(Ev::Up(Msg::Shutdown)) => return Ok(AfterRound::Shutdown),
+                Ok(Ev::Up(Msg::RoundAssign(_))) => {
+                    bail!("overlapping round assignments from root")
+                }
+                Ok(Ev::Up(Msg::Reject(r))) => {
+                    bail!("root rejected mid-session: {}", r.reason)
+                }
+                Ok(Ev::Up(_)) => {}
+                Ok(Ev::UpGone) => bail!("upstream connection lost mid-round"),
+                Err(RecvTimeoutError::Timeout) => {
+                    if deadline.is_none() {
+                        println!(
+                            "[subagg {}] round {}: stall backstop ({}s) fired with \
+                             {} lease(s) pending — cutting",
+                            self.opts.name,
+                            ra.round,
+                            self.opts.stall_secs,
+                            book.pending_count()
+                        );
+                        book.cut_all_pending();
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => bail!("event funnel died"),
+            }
+        }
+
+        if arrived.is_empty() {
+            // Every member was lost downstream: push nothing — the root's
+            // deadline (or stall backstop) cuts the slice.
+            return Ok(AfterRound::Continue);
+        }
+
+        // Fold in slot order — bit-identical to `tiered_fold` stage one.
+        // The weight carried upstream is the *sequential* sum of the
+        // member sample counts in the same order (the weight-carry rule);
+        // the root verifies it bit-exactly against the members at commit.
+        let arrived: Vec<(ClientUpdate, ClientCkpt)> = arrived.into_values().collect();
+        let rows: Vec<&[f32]> =
+            arrived.iter().map(|(u, _)| u.params.as_slice()).collect();
+        let weights: Vec<f64> = arrived.iter().map(|(u, _)| u.n_samples).collect();
+        let mut mean = vec![0.0f32; ra.global.len()];
+        weighted_mean_into(&rows, &weights, &mut mean);
+        let weight: f64 = weights.iter().sum();
+        drop(rows);
+        let n_members = arrived.len() as u64;
+        let members: Vec<FoldedMember> = arrived
+            .into_iter()
+            .map(|(mut update, state)| {
+                // The dense params fold into `mean`; only the metadata —
+                // sample count, losses, measured wire bytes — and the
+                // advanced state travel upstream per member.
+                update.params = Vec::new();
+                FoldedMember { update, state }
+            })
+            .collect();
+        proto::write_msg(
+            &mut self.up,
+            &Msg::FoldedPush(FoldedPush {
+                session: ra.session,
+                round: ra.round,
+                weight,
+                mean,
+                members,
+            }),
+            self.spec.compress,
+        )
+        .context("pushing folded round upstream")?;
+        self.report.rounds_served += 1;
+        self.report.members_folded += n_members;
+        if self.opts.verbose {
+            println!(
+                "[subagg {}] round {}: folded {}/{} member(s), weight {weight}",
+                self.opts.name,
+                ra.round,
+                n_members,
+                ra.tasks.len()
+            );
+        }
+        Ok(AfterRound::Continue)
+    }
+}

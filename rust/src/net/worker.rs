@@ -25,10 +25,13 @@ use std::sync::Arc;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::chaos::{self, Fault, WorkerChaos};
+use crate::ckpt::ClientCkpt;
 use crate::coordinator::federation::{bind_client_streams, build_data};
 use crate::coordinator::ClientNode;
 use crate::data::source::DataSource;
-use crate::net::proto::{self, Heartbeat, Join, Msg, TaskSpec, UpdatePush, PROTO_VERSION};
+use crate::net::proto::{
+    self, AssignState, Heartbeat, Join, Msg, TaskSpec, UpdatePush, PROTO_VERSION,
+};
 use crate::obs::{Event as ObsEvent, EventSink};
 use crate::runtime::{ModelRuntime, Runtime};
 
@@ -80,6 +83,10 @@ pub struct WorkerReport {
     pub rounds_hung: u64,
     /// `UpdatePush` frames deliberately corrupted by a chaos `Flake`.
     pub frames_flaked: u64,
+    /// On-wire size (length prefix + frame) of every `RoundAssign`
+    /// received, in arrival order — the measurement behind the
+    /// `AssignState::Ref` shrink tests.
+    pub assign_bytes: Vec<u64>,
 }
 
 /// Connect to `addr`, join the federation, and serve rounds until the
@@ -142,6 +149,12 @@ pub fn run_worker(addr: &str, opts: WorkerOpts) -> Result<WorkerReport> {
     let lr_at = move |t: u64| schedule.lr(t);
 
     let mut nodes: BTreeMap<u64, ClientNode> = BTreeMap::new();
+    // States this worker provably holds: everything received in a Full
+    // assignment plus every advanced state it pushed back. The server only
+    // sends `AssignState::Ref` for generations it shipped to (or received
+    // from) this very connection, so a cache miss on a Ref is a protocol
+    // violation, not a recoverable condition.
+    let mut cached: BTreeMap<u64, ClientCkpt> = BTreeMap::new();
     let mut report =
         WorkerReport { worker_slot: ack.worker_slot, ..WorkerReport::default() };
     let emit = |ev: ObsEvent| {
@@ -158,8 +171,12 @@ pub fn run_worker(addr: &str, opts: WorkerOpts) -> Result<WorkerReport> {
     }
 
     loop {
-        match proto::read_msg(&mut stream)? {
+        // Frame-then-decode (instead of `read_msg`) so the on-wire size of
+        // each assignment can be recorded for the Ref-shrink measurement.
+        let frame = proto::read_frame(&mut stream)?;
+        match Msg::decode(&frame)? {
             Msg::RoundAssign(assign) => {
+                report.assign_bytes.push(4 + frame.len() as u64);
                 let fault = opts
                     .chaos
                     .as_ref()
@@ -201,8 +218,26 @@ pub fn run_worker(addr: &str, opts: WorkerOpts) -> Result<WorkerReport> {
                     let node = node_for(
                         &mut nodes, &data, &spec, task.client, seq_width,
                     )?;
-                    node.restore_state(&task.state)
-                        .with_context(|| format!("restoring client {}", task.client))?;
+                    match &task.state {
+                        AssignState::Full(s) => {
+                            node.restore_state(s).with_context(|| {
+                                format!("restoring client {}", task.client)
+                            })?;
+                            cached.insert(task.client, s.clone());
+                        }
+                        AssignState::Ref(_) => {
+                            let Some(s) = cached.get(&task.client) else {
+                                bail!(
+                                    "assignment references client {} state this \
+                                     worker does not hold",
+                                    task.client
+                                );
+                            };
+                            node.restore_state(s).with_context(|| {
+                                format!("restoring client {} from cache", task.client)
+                            })?;
+                        }
+                    }
                     let mut update = node
                         .run_local_round(
                             &model,
@@ -237,6 +272,9 @@ pub fn run_worker(addr: &str, opts: WorkerOpts) -> Result<WorkerReport> {
                         format!("encoding client {} update", task.client)
                     })?;
                     let state = node.state();
+                    // The push makes the server record this generation as
+                    // held here — keep the copy that backs a future Ref.
+                    cached.insert(task.client, state.clone());
                     let body = match transit.body {
                         Some(b) => {
                             // Coded push: the dense params stay home.

@@ -35,6 +35,11 @@ pub enum Event {
     /// A crashed worker reclaimed its slot (server-authoritative; the
     /// worker's own log emits a plain `WorkerJoin` — it cannot know).
     WorkerRejoin { round: u64, worker: u64, name: String },
+    /// A sub-aggregator was admitted into a fresh slot (tree mode).
+    SubaggJoin { subagg: u64, name: String },
+    /// A sub-aggregator's pre-folded slice was accepted into the round:
+    /// `n_clients` member updates carrying `weight` total samples.
+    FoldedPush { round: u64, subagg: u64, n_clients: u64, weight: f64 },
     /// A client lease was granted to a worker for this round.
     LeaseGrant { round: u64, client: u64, worker: u64 },
     /// The lease folded: the client's update was accepted exactly once.
@@ -60,8 +65,10 @@ pub const EVENT_KINDS: &[&str] = &[
     "server_start",
     "worker_join",
     "worker_rejoin",
+    "subagg_join",
     "lease_grant",
     "lease_fold",
+    "folded_push",
     "cut",
     "migration",
     "malformed",
@@ -77,8 +84,10 @@ impl Event {
             Event::ServerStart { .. } => "server_start",
             Event::WorkerJoin { .. } => "worker_join",
             Event::WorkerRejoin { .. } => "worker_rejoin",
+            Event::SubaggJoin { .. } => "subagg_join",
             Event::LeaseGrant { .. } => "lease_grant",
             Event::LeaseFold { .. } => "lease_fold",
+            Event::FoldedPush { .. } => "folded_push",
             Event::Cut { .. } => "cut",
             Event::Migration { .. } => "migration",
             Event::Malformed { .. } => "malformed",
@@ -163,11 +172,21 @@ impl EventRecord {
                 pairs.push(("worker", uint(*worker)));
                 pairs.push(("name", json::s(name)));
             }
+            Event::SubaggJoin { subagg, name } => {
+                pairs.push(("subagg", uint(*subagg)));
+                pairs.push(("name", json::s(name)));
+            }
             Event::LeaseGrant { round, client, worker }
             | Event::LeaseFold { round, client, worker } => {
                 pairs.push(("round", uint(*round)));
                 pairs.push(("client", uint(*client)));
                 pairs.push(("worker", uint(*worker)));
+            }
+            Event::FoldedPush { round, subagg, n_clients, weight } => {
+                pairs.push(("round", uint(*round)));
+                pairs.push(("subagg", uint(*subagg)));
+                pairs.push(("n_clients", uint(*n_clients)));
+                pairs.push(("weight", json::num(*weight)));
             }
             Event::Cut { round, clients } => {
                 pairs.push(("round", uint(*round)));
@@ -235,6 +254,16 @@ impl EventRecord {
                 round: field_u64(&v, "round")?,
                 worker: field_u64(&v, "worker")?,
                 name: field_str(&v, "name")?,
+            },
+            "subagg_join" => Event::SubaggJoin {
+                subagg: field_u64(&v, "subagg")?,
+                name: field_str(&v, "name")?,
+            },
+            "folded_push" => Event::FoldedPush {
+                round: field_u64(&v, "round")?,
+                subagg: field_u64(&v, "subagg")?,
+                n_clients: field_u64(&v, "n_clients")?,
+                weight: v.get("weight")?.as_f64().context("field \"weight\"")?,
             },
             "lease_grant" => Event::LeaseGrant {
                 round: field_u64(&v, "round")?,
@@ -453,8 +482,10 @@ mod tests {
             },
             Event::WorkerJoin { worker: 0, name: "loopback-0".into() },
             Event::WorkerRejoin { round: 1, worker: 2, name: "loopback-2".into() },
+            Event::SubaggJoin { subagg: 1, name: "subagg-1".into() },
             Event::LeaseGrant { round: 0, client: 5, worker: 1 },
             Event::LeaseFold { round: 0, client: 5, worker: 1 },
+            Event::FoldedPush { round: 1, subagg: 0, n_clients: 3, weight: 96.5 },
             Event::Cut { round: 2, clients: vec![1, 4] },
             Event::Migration { round: 2, client: 4, from: 1, to: 0 },
             Event::Malformed { round: 0, worker: Some(1) },

@@ -17,6 +17,9 @@ pub struct WorkerLane {
     pub name: String,
     pub granted: u64,
     pub folded: u64,
+    /// Pre-folded slice pushes accepted from this slot (tree mode; the
+    /// member updates inside them count under `folded`).
+    pub folded_pushes: u64,
     pub rejoins: u64,
     pub malformed: u64,
     /// `seq` of the last event that touched this lane.
@@ -29,6 +32,8 @@ pub struct RoundRow {
     pub round: u64,
     pub granted: u64,
     pub folded: u64,
+    /// Pre-folded slice pushes accepted this round (tree mode).
+    pub folded_pushes: u64,
     pub cut: u64,
     pub migrated: u64,
     /// True once the `RoundCommit` arrived; the commit fields below are
@@ -99,6 +104,18 @@ impl ViewState {
                 let lane = self.lane(*worker, seq);
                 lane.name = name.clone();
                 lane.rejoins += 1;
+            }
+            // A sub-aggregator occupies a worker slot at the root: its
+            // lane carries the same grant/fold counters (the per-member
+            // LeaseFold events keep `folded` accurate; the FoldedPush
+            // only bumps the push counters).
+            Event::SubaggJoin { subagg, name } => {
+                let lane = self.lane(*subagg, seq);
+                lane.name = name.clone();
+            }
+            Event::FoldedPush { round, subagg, .. } => {
+                self.lane(*subagg, seq).folded_pushes += 1;
+                self.row(*round).folded_pushes += 1;
             }
             Event::LeaseGrant { round, worker, .. } => {
                 self.lane(*worker, seq).granted += 1;

@@ -123,6 +123,17 @@ pub struct SimConfig {
     pub straggler_slowdown: f64,
     /// Server-side aggregation cost charged at the end of every round.
     pub server_agg_secs: f64,
+    /// Aggregation-tree fan-in (`ExperimentConfig::tiers`). With
+    /// `tiers > 1`, every round pays one extra sub-aggregator → root hop
+    /// of [`SimConfig::folded_up_bytes`] after the last client arrival
+    /// (sub-aggregators push their folded pairs in parallel, so one
+    /// transfer's latency covers all of them) and the round's upload
+    /// accounting gains `tiers × folded_up_bytes`. `1` leaves every row
+    /// bit-identical to the pre-tree simulator.
+    pub tiers: usize,
+    /// Bytes of one pre-folded `(weight, mean)` upload — a dense frame
+    /// (`link::dense_frame_bytes`), since folded means are never re-coded.
+    pub folded_up_bytes: u64,
 }
 
 impl SimConfig {
@@ -136,7 +147,17 @@ impl SimConfig {
             policy,
             straggler_slowdown: 4.0,
             server_agg_secs: 0.0,
+            tiers: 1,
+            folded_up_bytes: 0,
         }
+    }
+
+    /// Price a `tiers`-group aggregation tree: one extra folded-pair hop
+    /// per round (see the `tiers` field docs). No-op when `tiers <= 1`.
+    pub fn with_tiers(mut self, tiers: usize, folded_up_bytes: u64) -> SimConfig {
+        self.tiers = tiers.max(1);
+        self.folded_up_bytes = folded_up_bytes;
+        self
     }
 
     /// Asymmetric payloads: dense broadcast down, (possibly codec-shrunk)
@@ -413,7 +434,16 @@ impl Simulator {
                 }
             }
         }
-        let end_us = end_core + to_us(self.cfg.server_agg_secs);
+        // Tree topologies pay one extra hop: after the last worker upload
+        // lands at its sub-aggregator, the pre-folded pairs travel to the
+        // root (in parallel — one transfer of latency) before the server
+        // aggregation runs. Flat rounds (tiers <= 1) charge nothing here.
+        let tree_hop_us = if self.cfg.tiers > 1 {
+            to_us(self.cfg.link.transfer_secs(self.cfg.folded_up_bytes))
+        } else {
+            0
+        };
+        let end_us = end_core + tree_hop_us + to_us(self.cfg.server_agg_secs);
 
         let mut slowest = -1i64;
         let mut slowest_t = 0u64;
@@ -449,7 +479,12 @@ impl Simulator {
             n_late: n - n_arrived,
             n_dropped: spec.dropped.len(),
             bytes_down: self.cfg.payload_down_bytes * n as u64,
-            bytes_up: self.cfg.payload_up_bytes * n_arrived as u64,
+            bytes_up: self.cfg.payload_up_bytes * n_arrived as u64
+                + if self.cfg.tiers > 1 {
+                    self.cfg.tiers as u64 * self.cfg.folded_up_bytes
+                } else {
+                    0
+                },
             slowest_client: slowest,
         };
         self.now_us = end_us;
@@ -527,6 +562,28 @@ mod tests {
         assert_eq!((row.n_arrived, row.n_late), (1, 1));
         assert!((row.round_secs - 15.0).abs() < 1e-6, "{}", row.round_secs);
         assert_eq!(row.bytes_up, 0, "zero-byte payload"); // payload 0
+    }
+
+    #[test]
+    fn tree_hop_prices_folded_upload_and_tiers_one_is_identity() {
+        // d = u = 1 s (latency-only link), folded hop adds another 1 s and
+        // tiers × folded bytes to the upload accounting.
+        let plan = plan1(2, 10, 2);
+        let flat = SimConfig::new(8, link(1.0, 1.0), AggregationPolicy::Sync);
+        let tree = flat.with_tiers(2, 16);
+        let a = Simulator::uniform(&plan, 0.5, flat).run();
+        let b = Simulator::uniform(&plan, 0.5, tree).run();
+        for (x, y) in a.rows.iter().zip(&b.rows) {
+            assert!((y.round_secs - (x.round_secs + 1.0)).abs() < 1e-6);
+            assert_eq!(y.bytes_up, x.bytes_up + 2 * 16);
+            assert_eq!(y.bytes_down, x.bytes_down);
+        }
+        // tiers = 1 (even with folded bytes set) is bitwise the flat sim.
+        let one = Simulator::uniform(&plan, 0.5, flat.with_tiers(1, 16)).run();
+        for (x, y) in a.rows.iter().zip(&one.rows) {
+            assert_eq!(x.round_secs, y.round_secs);
+            assert_eq!(x.bytes_up, y.bytes_up);
+        }
     }
 
     #[test]

@@ -111,12 +111,18 @@ fn nondet_rng_fixtures() {
 fn wire_panic_fixtures() {
     check("wire_panic_bad.rs");
     check("wire_panic_ok.rs");
+    // tree mode widened the wire scope: the sub-aggregator's collection
+    // path is lint-covered exactly like net/proto.rs.
+    check("wire_panic_subagg_bad.rs");
 }
 
 #[test]
 fn wire_alloc_fixtures() {
     check("wire_alloc_bad.rs");
     check("wire_alloc_ok.rs");
+    // ckpt/store.rs (spill-file decoder) is wire scope: torn writes reach
+    // it exactly like hostile frames reach the link layer.
+    check("wire_alloc_store_bad.rs");
 }
 
 #[test]
@@ -240,4 +246,14 @@ fn seeded_violation_tree_fails() {
     // The obs-plane clock allowlist is exactly one file deep: a wall-clock
     // read seeded anywhere else under obs/ must still trip the gate.
     assert!(report.diagnostics.iter().any(|d| d.rule == "nondet-time"));
+    // Tree-mode scope extensions: a panic seeded in net/subagg.rs and a
+    // decoded-length allocation seeded in ckpt/store.rs must both bite.
+    assert!(report
+        .diagnostics
+        .iter()
+        .any(|d| d.rule == "wire-panic" && d.file == "net/subagg.rs"));
+    assert!(report
+        .diagnostics
+        .iter()
+        .any(|d| d.rule == "wire-alloc" && d.file == "ckpt/store.rs"));
 }

@@ -1,0 +1,12 @@
+// Seeded wire-alloc violation: the state store's spill decoder is wire
+// scope, so an allocation sized by a decoded integer must make the CI
+// lint gate exit non-zero.
+
+pub fn load(d: &mut Dec) -> Result<Vec<u8>> {
+    let n = d.u64()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(d.u8()?);
+    }
+    Ok(out)
+}

@@ -1,0 +1,7 @@
+// Seeded wire-panic violation: the sub-aggregator is wire scope, so an
+// `.unwrap()` on a decoded frame must make the CI lint gate exit non-zero.
+
+pub fn peek_round(frame: &[u8]) -> u64 {
+    let msg = Msg::decode(frame).unwrap();
+    msg.round
+}

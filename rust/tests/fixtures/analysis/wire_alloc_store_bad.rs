@@ -1,0 +1,19 @@
+// lint-fixture: ckpt/store.rs
+// Positive corpus: the state store's spill-file decoder is wire scope —
+// a torn write reaches it exactly like a hostile frame reaches the link
+// layer, so allocations sized by decoded integers must be flagged.
+
+fn load_spill(d: &mut Dec) -> Result<Vec<u8>> {
+    let n = d.u64()? as usize;
+    let mut bytes = Vec::with_capacity(n); //~ wire-alloc
+    for _ in 0..n {
+        bytes.push(d.u8()?);
+    }
+    Ok(bytes)
+}
+
+fn read_trailer(head: &[u8; 8]) -> Result<Vec<u8>> {
+    let len = u32::from_le_bytes([head[0], head[1], head[2], head[3]]) as usize;
+    let buf = vec![0u8; len]; //~ wire-alloc
+    Ok(buf)
+}

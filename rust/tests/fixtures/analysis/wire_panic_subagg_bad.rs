@@ -1,0 +1,15 @@
+// lint-fixture: net/subagg.rs
+// Positive corpus: the sub-aggregator's downstream collection path is
+// wire scope — panics and raw indexing on decoded frames must be flagged
+// exactly as they are in net/proto.rs.
+
+fn collect(stream: &mut TcpStream) -> Result<()> {
+    let frame = read_frame(stream)?;
+    let tag = frame[0]; //~ wire-panic
+    let msg = Msg::decode(&frame).unwrap(); //~ wire-panic
+    let push = msg.push.expect("push"); //~ wire-panic
+    if tag == 0 {
+        unreachable!("joins are handled by the poller"); //~ wire-panic
+    }
+    fold(push)
+}

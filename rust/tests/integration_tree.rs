@@ -1,0 +1,354 @@
+//! Integration: multi-tier aggregation (`net::subagg`) against the
+//! in-process tiered federation. Requires `make artifacts`.
+//!
+//! The contract under test (ISSUE 9 acceptance): a 3-tier loopback fleet —
+//! root server, two sub-aggregators, four workers — bit-equals the
+//! in-process `Federation::run` with the same `cfg.tiers`: round records
+//! (NLL included), the final global model, and the round checkpoints'
+//! bytes. The partition is *config* (`tier_slices` over the sampled
+//! cohort), so the pre-folded `(weight, mean)` pairs the sub-aggregators
+//! push upstream land on exactly the floats the in-process `tiered_fold`
+//! produces. The contract must also survive seeded chaos (crash/rejoin of
+//! a sub-aggregator's worker, replayed via the realized trace) and the q8
+//! update codec.
+//!
+//! Two flat-path riders live here too: the `AssignState::Ref` regression
+//! test (idle-client assigns shrink once the server's `StateStore` and the
+//! worker's cache hold the same generation) and the `#[ignore]`d 100k-
+//! client soak (polling accept path + `StateStore` under a fixed resident
+//! budget, RSS-checked via `/proc/self/status`).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use photon::chaos::{ChaosConfig, Schedule};
+use photon::ckpt::{latest_in, Checkpoint};
+use photon::cluster::faults::FaultPlan;
+use photon::compress::UpdateCodec;
+use photon::config::{ExperimentConfig, OptStatePolicy};
+use photon::coordinator::Federation;
+use photon::metrics::RoundRecord;
+use photon::net::{run_loopback, FleetOpts, FleetReport};
+use photon::obs;
+use photon::optim::schedule::CosineSchedule;
+use photon::runtime::{ModelRuntime, Runtime};
+
+fn model() -> Arc<ModelRuntime> {
+    // Per-thread cache (same rationale as integration_fed.rs).
+    thread_local! {
+        static CACHED: std::cell::OnceCell<Arc<ModelRuntime>> =
+            const { std::cell::OnceCell::new() };
+    }
+    CACHED.with(|c| {
+        c.get_or_init(|| {
+            let rt = Runtime::cpu().unwrap();
+            Arc::new(rt.load_model("m75a").expect("run `make artifacts`"))
+        })
+        .clone()
+    })
+}
+
+/// K=5 of P=6 clients over two tiers, dropouts + stragglers in the plan:
+/// `tier_slices(5, 2)` gives the sub-aggregators a 3/2 split of every
+/// sampled cohort (shrinking with planned dropouts, never re-balancing).
+fn tree_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::quickstart("m75a");
+    cfg.n_clients = 6;
+    cfg.clients_per_round = 5;
+    cfg.rounds = 3;
+    cfg.local_steps = 6;
+    cfg.eval_batches = 2;
+    cfg.seed = 11;
+    cfg.schedule = CosineSchedule::new(3e-3, 0.1, 18, 2);
+    cfg.faults = FaultPlan::new(0.3, 0.3, 11);
+    cfg.tiers = 2;
+    cfg
+}
+
+/// Full participation (K=P=6), no client-level faults: every cut in the
+/// chaos test is attributable to the injected worker churn.
+fn chaos_tree_cfg(rounds: usize, seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::quickstart("m75a");
+    cfg.n_clients = 6;
+    cfg.clients_per_round = 6;
+    cfg.rounds = rounds;
+    cfg.local_steps = 4;
+    cfg.eval_batches = 2;
+    cfg.seed = seed;
+    let total = rounds as u64 * 4;
+    cfg.schedule = CosineSchedule::new(3e-3, 0.1, total.max(2), 2);
+    cfg.faults = FaultPlan::none();
+    cfg.tiers = 2;
+    cfg
+}
+
+fn assert_parity(reference: &[RoundRecord], live: &[RoundRecord], what: &str) {
+    assert_eq!(reference.len(), live.len(), "{what}: round count");
+    for (r, n) in reference.iter().zip(live) {
+        assert!(
+            r.agrees_with(n),
+            "{what}: round {} diverged\n  in-process: {r:?}\n  tree fleet: {n:?}",
+            r.round
+        );
+    }
+}
+
+/// participated + cut must equal the runnable sample every round — the
+/// exactly-once accounting survives the extra tier.
+fn assert_exactly_once(report: &FleetReport, k: usize, what: &str) {
+    for rec in &report.records {
+        let cut = report.trace.cut_for(rec.round).len();
+        assert_eq!(
+            rec.participated + cut,
+            k,
+            "{what}: round {} folded {} + cut {cut} != K={k}",
+            rec.round,
+            rec.participated
+        );
+    }
+}
+
+/// The fleet's member accounting must close: every participant folded by
+/// the in-process reference arrived upstream inside some `FoldedPush`.
+fn assert_member_accounting(report: &FleetReport, reference: &[RoundRecord]) {
+    assert_eq!(report.subaggs.len(), 2, "both sub-aggregators must report");
+    let folded: u64 = report.subaggs.iter().map(|s| s.members_folded).sum();
+    let participated: usize = reference.iter().map(|r| r.participated).sum();
+    assert_eq!(folded as usize, participated, "members folded vs participated");
+    for (i, s) in report.subaggs.iter().enumerate() {
+        assert!(s.rounds_served >= 1, "sub-aggregator {i} never pushed a round");
+        assert_eq!(s.malformed_frames, 0, "sub-aggregator {i} saw bad frames");
+    }
+}
+
+#[test]
+fn tree_fleet_bit_equals_in_process_tiered_run_and_its_checkpoints() {
+    let base = std::env::temp_dir().join(format!("photon_tree_{}", std::process::id()));
+    let ref_dir = base.join("ref");
+    let fleet_dir = base.join("fleet");
+    std::fs::create_dir_all(&ref_dir).unwrap();
+    std::fs::create_dir_all(&fleet_dir).unwrap();
+
+    let cfg = tree_cfg();
+    let mut fed = Federation::with_model(cfg.clone(), model()).unwrap();
+    fed.ckpt_dir = Some(ref_dir.clone());
+    let reference = fed.run().unwrap();
+
+    let report = run_loopback(
+        cfg,
+        model(),
+        FleetOpts {
+            workers: 4,
+            subaggs: 2,
+            compress: true,
+            ckpt_dir: Some(fleet_dir.clone()),
+            ..FleetOpts::default()
+        },
+    )
+    .unwrap();
+    assert!(report.worker_errors.is_empty(), "{:?}", report.worker_errors);
+    assert!(report.cuts.is_empty(), "no faults beyond the plan: {:?}", report.cuts);
+    assert_parity(&reference, &report.records, "tree fleet");
+    assert_eq!(fed.global, report.global, "global model must be bit-identical");
+    assert_member_accounting(&report, &reference);
+
+    // Checkpoint-byte parity: the latest round checkpoint written by the
+    // tree fleet must be the byte-identical file the in-process run wrote,
+    // up to the two wall-clock bookkeeping fields.
+    let (round_f, path_f) = latest_in(&fleet_dir).unwrap().expect("fleet checkpoint");
+    let (round_r, path_r) = latest_in(&ref_dir).unwrap().expect("reference checkpoint");
+    assert_eq!(round_f, round_r, "both runs checkpoint the same final round");
+    let mut ck_f = Checkpoint::load(&path_f).unwrap();
+    let mut ck_r = Checkpoint::load(&path_r).unwrap();
+    ck_f.timestamp = 0;
+    ck_f.elapsed_secs = 0.0;
+    ck_r.timestamp = 0;
+    ck_r.elapsed_secs = 0.0;
+    assert_eq!(
+        ck_f.encode(),
+        ck_r.encode(),
+        "checkpoint bytes must match up to wall-clock fields"
+    );
+    std::fs::remove_dir_all(&base).ok();
+}
+
+#[test]
+fn tree_fleet_with_q8_codec_matches_in_process() {
+    // The lossy-codec parity contract (ISSUE 4) survives the extra tier:
+    // workers q8-encode their pseudo-deltas, sub-aggregators decode and
+    // fold the *decoded* rows (never re-code), and the in-process run
+    // replays the identical transform — records (incl. wire-byte
+    // accounting) and global model stay bit-equal.
+    let mut cfg = tree_cfg();
+    cfg.codec = UpdateCodec::Q8 { block: 64 };
+    let mut fed = Federation::with_model(cfg.clone(), model()).unwrap();
+    let reference = fed.run().unwrap();
+
+    let report = run_loopback(
+        cfg,
+        model(),
+        FleetOpts { workers: 4, subaggs: 2, compress: true, ..FleetOpts::default() },
+    )
+    .unwrap();
+    assert!(report.worker_errors.is_empty(), "{:?}", report.worker_errors);
+    assert!(report.cuts.is_empty(), "no faults beyond the plan: {:?}", report.cuts);
+    assert_parity(&reference, &report.records, "q8 tree fleet");
+    assert_eq!(fed.global, report.global, "global model must be bit-identical");
+    assert_member_accounting(&report, &reference);
+    for r in &reference {
+        if r.participated > 0 {
+            assert!(
+                r.comm_bytes_wire < r.comm_bytes,
+                "round {}: wire {} !< dense {}",
+                r.round,
+                r.comm_bytes_wire,
+                r.comm_bytes
+            );
+        }
+    }
+}
+
+#[test]
+fn subagg_worker_crash_and_rejoin_bit_equals_trace_replay() {
+    // Crash-heavy schedule over the tree fleet's four workers: a crashed
+    // worker disconnects from its *sub-aggregator* mid-round; with a
+    // rejoin it reclaims its slot and pending leases by identity, without
+    // one the sub-aggregator's downstream deadline cuts them and the root
+    // folds the shrunken push. Either way the realized trace replays
+    // bit-exactly through the tiered in-process fold.
+    let cfg = chaos_tree_cfg(4, 61);
+    let ccfg = ChaosConfig { crash_prob: 0.6, rejoin_prob: 0.7, ..ChaosConfig::none() };
+    let schedule = Schedule::generate(0x7EE5_C401, 4, 4, ccfg);
+    assert!(!schedule.is_quiet(), "seed must inject crashes");
+    let report = run_loopback(
+        cfg.clone(),
+        model(),
+        FleetOpts {
+            workers: 4,
+            subaggs: 2,
+            compress: true,
+            deadline_secs: Some(16.0),
+            chaos: Some(schedule),
+            ..FleetOpts::default()
+        },
+    )
+    .unwrap();
+    assert!(report.worker_errors.is_empty(), "{:?}", report.worker_errors);
+    assert_eq!(report.records.len(), 4, "every round must commit under churn");
+    assert_exactly_once(&report, 6, "chaotic tree fleet");
+
+    let mut replay = Federation::with_model(cfg, model()).unwrap();
+    let replayed = replay.run_trace(&report.trace).unwrap();
+    assert_parity(&replayed, &report.records, "chaotic tree fleet vs trace replay");
+    assert_eq!(replay.global, report.global, "global model must be bit-identical");
+}
+
+#[test]
+fn flat_idle_client_assigns_shrink_to_state_refs() {
+    // The StateStore regression rider (ISSUE 9 satellite): with a single
+    // flat worker, round 0 ships every sampled client's state in full;
+    // from round 1 on the server's store generation matches the worker's
+    // cache for every client the worker itself advanced (at most one
+    // fresh client per round can still need a full state), so the
+    // `RoundAssign` frames shrink to `AssignState::Ref` stubs. KeepOpt
+    // makes the state mass dominate the frame, so the shrink is stark.
+    let mut cfg = tree_cfg();
+    cfg.tiers = 1;
+    cfg.faults = FaultPlan::none();
+    cfg.opt_state = OptStatePolicy::KeepOpt;
+    let mut fed = Federation::with_model(cfg.clone(), model()).unwrap();
+    let reference = fed.run().unwrap();
+
+    let report = run_loopback(
+        cfg,
+        model(),
+        FleetOpts { workers: 1, compress: false, ..FleetOpts::default() },
+    )
+    .unwrap();
+    assert!(report.worker_errors.is_empty(), "{:?}", report.worker_errors);
+    assert!(report.cuts.is_empty(), "{:?}", report.cuts);
+    assert_parity(&reference, &report.records, "single-worker ref fleet");
+    assert_eq!(fed.global, report.global, "Ref assigns must not touch the math");
+
+    let ab = &report.workers[0].assign_bytes;
+    assert_eq!(ab.len(), 3, "one RoundAssign per round: {ab:?}");
+    // Round 0: 5 full states. Rounds 1-2: at most one client per round is
+    // newly sampled (5 of 6 sampled per round), everything else rides as
+    // an 9-byte Ref — so later assigns must be well under half of round
+    // 0's, not merely smaller.
+    assert!(ab[1] < ab[0] / 2, "round 1 assign must shrink: {ab:?}");
+    assert!(ab[2] < ab[0] / 2, "round 2 assign must shrink: {ab:?}");
+}
+
+/// Resident-set size in KiB via `/proc/self/status` (`None` off-Linux).
+fn resident_kib() -> Option<u64> {
+    let text = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = text.lines().find(|l| l.starts_with("VmRSS:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+/// The scale soak (ISSUE 9 satellite): a 100 000-client federation serves
+/// a sampled round through the nonblocking accept/read path with the
+/// client-state store pinned to a tiny resident budget, so the cohort's
+/// post-round states *must* spill to disk — and the process RSS must stay
+/// bounded (no O(n_clients · n_params) resident blow-up). Run via
+/// `cargo test -q -- --ignored` (the CI `soak` job budget covers it).
+#[test]
+#[ignore = "soak: 100k-client round, ~minutes of wall-clock; run with -- --ignored"]
+fn soak_100k_client_round_stays_within_state_budget() {
+    let mut cfg = ExperimentConfig::quickstart("m75a");
+    cfg.n_clients = 100_000;
+    cfg.clients_per_round = 256;
+    cfg.rounds = 1;
+    cfg.local_steps = 1;
+    cfg.eval_batches = 1;
+    cfg.seed = 17;
+    cfg.schedule = CosineSchedule::new(3e-3, 0.1, 2, 1);
+    cfg.faults = FaultPlan::none();
+
+    // The soak writes a structured event log (`PHOTON_OBS_LOG` overrides
+    // the path): CI schema-checks it with `photon evck` and uploads it as
+    // a triage artifact when the soak fails.
+    let obs_log = std::env::var("PHOTON_OBS_LOG")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("target/soak_events.jsonl"));
+    let report = run_loopback(
+        cfg,
+        model(),
+        FleetOpts {
+            workers: 2,
+            compress: true,
+            // 8 KiB resident: ~256 stateless client states per round is a
+            // couple dozen KiB, so the LRU must spill under this budget.
+            state_budget: Some(8 * 1024),
+            watchdog_secs: Some(1200.0),
+            obs_log: Some(obs_log.clone()),
+            ..FleetOpts::default()
+        },
+    )
+    .unwrap();
+    assert!(report.worker_errors.is_empty(), "{:?}", report.worker_errors);
+    assert_eq!(report.records.len(), 1, "the sampled round must commit");
+    assert_eq!(
+        report.records[0].participated, 256,
+        "every sampled client must fold"
+    );
+    assert!(
+        report.store_spills > 0,
+        "a 8 KiB budget over a 256-client cohort must spill ({} spills)",
+        report.store_spills
+    );
+    let text = std::fs::read_to_string(&obs_log).unwrap();
+    let n = obs::validate_log_text(&text).expect("soak event log must validate");
+    assert!(n > 0, "the soak must emit events");
+    if let Some(kib) = resident_kib() {
+        // Generous absolute ceiling: the run holds one model runtime and
+        // 100k lightweight client nodes, not 100k resident states. A
+        // resident-state leak (the regression this soak pins) would blow
+        // past this by an order of magnitude.
+        assert!(
+            kib < 4 * 1024 * 1024,
+            "100k-client round used {kib} KiB resident — state budget leak?"
+        );
+    }
+}

@@ -1,0 +1,507 @@
+//! Property tests for the aggregation-tree plane (ISSUE 9).
+//!
+//! Three contracts are pinned here:
+//!
+//! * **Folded-push associativity** — the two-stage fold a sub-aggregator
+//!   tree computes (per-group `weighted_mean_into`, then a root
+//!   `streaming_fold` over the group means with carried weights) is
+//!   bit-identical to `tiered_fold` over the same partition, and the
+//!   single-group partition is bit-identical to the flat fold. The
+//!   partition is *config* (`tier_slices`), never arrival order.
+//! * **StateStore budget** — under arbitrary put/get traces the resident
+//!   encoded bytes never exceed the configured budget, spilled states
+//!   reload byte-identically, and generations are strictly monotonic.
+//! * **Proto v4 wire surface** — `SubJoin` / `FoldedPush` / `RoundAssign`
+//!   (with `Ref` states) round-trip exactly; every truncation and every
+//!   seeded link-level flake of their frames fails decode loudly instead
+//!   of misdecoding or panicking.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use photon::chaos::flake_frame;
+use photon::ckpt::{ClientCkpt, StateStore};
+use photon::coordinator::federation::tier_slices;
+use photon::coordinator::ClientUpdate;
+use photon::data::stream::StreamCursor;
+use photon::model::vecmath::{streaming_fold, tiered_fold, weighted_mean_into, AggScratch};
+use photon::net::proto::{
+    AssignState, AssignTask, FoldedMember, FoldedPush, Join, Msg, RoundAssign, PROTO_VERSION,
+};
+use photon::testkit::{
+    alloc_counter::{self, CountingAlloc},
+    check, check_cases, rand_vec,
+};
+use photon::util::rng::Rng;
+
+// Counting allocator for the resident-ceiling assertion below; pure
+// delegation to the system allocator everywhere else in this binary.
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+// ---------------------------------------------------------------------------
+// Folded-push associativity
+// ---------------------------------------------------------------------------
+
+/// One fold instance: K rows of N params, positive FedAvg weights, and a
+/// partition of the rows into contiguous group sizes.
+#[derive(Clone, Debug)]
+struct FoldCase {
+    global: Vec<f32>,
+    rows: Vec<Vec<f32>>,
+    weights: Vec<f64>,
+    sizes: Vec<usize>,
+}
+
+impl FoldCase {
+    fn groups(&self) -> Vec<std::ops::Range<usize>> {
+        let mut out = Vec::new();
+        let mut lo = 0;
+        for &s in &self.sizes {
+            out.push(lo..lo + s);
+            lo += s;
+        }
+        out
+    }
+}
+
+fn gen_fold_case(rng: &mut Rng) -> FoldCase {
+    let n = 1 + rng.usize_below(96);
+    let k = 1 + rng.usize_below(10);
+    let global = rand_vec(rng, n, 1.0);
+    let rows: Vec<Vec<f32>> = (0..k).map(|_| rand_vec(rng, n, 1.0)).collect();
+    let weights: Vec<f64> = (0..k).map(|_| 0.25 + rng.f64() * 8.0).collect();
+    let mut sizes = Vec::new();
+    let mut left = k;
+    while left > 0 {
+        let s = 1 + rng.usize_below(left);
+        sizes.push(s);
+        left -= s;
+    }
+    FoldCase { global, rows, weights, sizes }
+}
+
+/// Shrink toward fewer rows, one group, and shorter vectors.
+fn shrink_fold_case(c: &FoldCase) -> Vec<FoldCase> {
+    let mut out = Vec::new();
+    let k = c.rows.len();
+    if c.sizes.len() > 1 {
+        let mut one = c.clone();
+        one.sizes = vec![k];
+        out.push(one);
+    }
+    if k > 1 {
+        let half = k / 2;
+        out.push(FoldCase {
+            global: c.global.clone(),
+            rows: c.rows[..half].to_vec(),
+            weights: c.weights[..half].to_vec(),
+            sizes: vec![half],
+        });
+    }
+    if c.global.len() > 1 {
+        let n = c.global.len() / 2;
+        out.push(FoldCase {
+            global: c.global[..n].to_vec(),
+            rows: c.rows.iter().map(|r| r[..n].to_vec()).collect(),
+            weights: c.weights.clone(),
+            sizes: c.sizes.clone(),
+        });
+    }
+    out
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn prop_tiered_fold_matches_the_distributed_two_stage_fold() {
+    check_cases(
+        "tiered_fold_associativity",
+        0x7EE5_0009,
+        80,
+        gen_fold_case,
+        shrink_fold_case,
+        |c| {
+            let n = c.global.len();
+            let k = c.rows.len();
+            let rows: Vec<&[f32]> = c.rows.iter().map(|r| r.as_slice()).collect();
+            let mut scratch = AggScratch::new();
+
+            // Flat reference.
+            let (mut mean_flat, mut pg_flat) = (vec![0.0f32; n], vec![0.0f32; n]);
+            streaming_fold(
+                &rows, &c.weights, &c.global, &mut mean_flat, &mut pg_flat, &mut scratch,
+            );
+
+            // tiers = 1 is bit-free: the single-group partition must equal
+            // the flat fold exactly.
+            let (mut mean_one, mut pg_one) = (vec![0.0f32; n], vec![0.0f32; n]);
+            tiered_fold(
+                &rows,
+                &c.weights,
+                &[0..k],
+                &c.global,
+                &mut mean_one,
+                &mut pg_one,
+                &mut scratch,
+            );
+            if bits(&mean_one) != bits(&mean_flat) || bits(&pg_one) != bits(&pg_flat) {
+                return Err("single-group tiered_fold diverged from the flat fold".into());
+            }
+
+            // The canonical partitioned fold.
+            let groups = c.groups();
+            let (mut mean_t, mut pg_t) = (vec![0.0f32; n], vec![0.0f32; n]);
+            tiered_fold(
+                &rows, &c.weights, &groups, &c.global, &mut mean_t, &mut pg_t, &mut scratch,
+            );
+
+            // What the tree actually computes: each sub-aggregator folds its
+            // slice in slot order and pushes (W_g, mean_g); the root folds
+            // the pushed pairs. Must be bit-identical to tiered_fold.
+            let mut sub_means: Vec<Vec<f32>> = Vec::new();
+            let mut sub_weights: Vec<f64> = Vec::new();
+            for g in &groups {
+                let mut m = vec![0.0f32; n];
+                weighted_mean_into(&rows[g.clone()], &c.weights[g.clone()], &mut m);
+                sub_means.push(m);
+                sub_weights.push(c.weights[g.clone()].iter().sum());
+            }
+            let sub_rows: Vec<&[f32]> = sub_means.iter().map(|m| m.as_slice()).collect();
+            let (mut mean_d, mut pg_d) = (vec![0.0f32; n], vec![0.0f32; n]);
+            streaming_fold(
+                &sub_rows, &sub_weights, &c.global, &mut mean_d, &mut pg_d, &mut scratch,
+            );
+            if bits(&mean_d) != bits(&mean_t) || bits(&pg_d) != bits(&pg_t) {
+                return Err(format!(
+                    "distributed two-stage fold diverged from tiered_fold over {groups:?}"
+                ));
+            }
+
+            // Determinism: a second evaluation reproduces the same bits.
+            let (mut mean_r, mut pg_r) = (vec![0.0f32; n], vec![0.0f32; n]);
+            tiered_fold(
+                &rows, &c.weights, &groups, &c.global, &mut mean_r, &mut pg_r, &mut scratch,
+            );
+            if bits(&mean_r) != bits(&mean_t) || bits(&pg_r) != bits(&pg_t) {
+                return Err("tiered_fold is not deterministic".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tier_slices_partition_contiguously_and_balanced() {
+    check("tier_slices_partition", 0x511C_E5, 200, |rng| {
+        let k = rng.usize_below(200);
+        let tiers = 1 + rng.usize_below(12);
+        let slices = tier_slices(k, tiers);
+        if k == 0 {
+            return if slices.is_empty() {
+                Ok(())
+            } else {
+                Err("k=0 must produce no groups".into())
+            };
+        }
+        if slices.len() != tiers.min(k) {
+            return Err(format!("{} groups for k={k}, tiers={tiers}", slices.len()));
+        }
+        let mut cursor = 0;
+        let mut sizes = Vec::new();
+        for s in &slices {
+            if s.start != cursor || s.end <= s.start {
+                return Err(format!("non-contiguous or empty slice {s:?}"));
+            }
+            sizes.push(s.end - s.start);
+            cursor = s.end;
+        }
+        if cursor != k {
+            return Err(format!("slices cover {cursor} of {k}"));
+        }
+        let (lo, hi) = (sizes.iter().min().copied(), sizes.iter().max().copied());
+        if let (Some(lo), Some(hi)) = (lo, hi) {
+            if hi - lo > 1 {
+                return Err(format!("unbalanced slice sizes {sizes:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// StateStore: budget, round-trip, generations
+// ---------------------------------------------------------------------------
+
+static STORE_DIR_SALT: AtomicU64 = AtomicU64::new(0);
+
+fn store_dir(tag: &str) -> PathBuf {
+    let salt = STORE_DIR_SALT.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "photon_props_tree_{tag}_{}_{salt}",
+        std::process::id()
+    ))
+}
+
+fn rand_state(rng: &mut Rng) -> ClientCkpt {
+    let n = 1 + rng.usize_below(64);
+    let n_residual = rng.usize_below(16);
+    ClientCkpt {
+        opt_m: rand_vec(rng, n, 1.0),
+        opt_v: rand_vec(rng, n, 0.5),
+        local_step: rng.below(1 << 20) as i64,
+        cursors: vec![StreamCursor {
+            mix_state: [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()],
+            bucket_states: vec![(
+                [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()],
+                rng.below(1000),
+            )],
+        }],
+        residual: rand_vec(rng, n_residual, 0.25),
+    }
+}
+
+#[test]
+fn prop_state_store_honors_the_budget_under_random_traces() {
+    check("store_budget_trace", 0x57A7_E570, 40, |rng| {
+        let budget = rng.below(4096);
+        let dir = store_dir("trace");
+        let mut st = StateStore::new(budget, &dir);
+        let mut model: BTreeMap<usize, ClientCkpt> = BTreeMap::new();
+        let mut gens: BTreeMap<usize, u64> = BTreeMap::new();
+        let ops = 1 + rng.usize_below(60);
+        for _ in 0..ops {
+            let client = rng.usize_below(8);
+            if rng.bool(0.6) {
+                let s = rand_state(rng);
+                let gen = st.put(client, &s).map_err(|e| format!("put: {e:#}"))?;
+                let want = gens.get(&client).copied().unwrap_or(0) + 1;
+                if gen != want {
+                    return Err(format!(
+                        "client {client}: put returned gen {gen}, expected {want}"
+                    ));
+                }
+                gens.insert(client, gen);
+                model.insert(client, s);
+            } else {
+                let got = st.get(client).map_err(|e| format!("get: {e:#}"))?;
+                if got.as_ref() != model.get(&client) {
+                    return Err(format!("client {client}: get diverged from the model"));
+                }
+            }
+            // The invariant under test: the resident set never exceeds the
+            // budget, no matter the trace.
+            if st.resident_bytes() > st.budget() {
+                return Err(format!(
+                    "resident {} exceeds budget {}",
+                    st.resident_bytes(),
+                    st.budget()
+                ));
+            }
+        }
+        // Nothing is ever lost: every state the model holds reloads equal
+        // (resident hit or checksummed spill reload).
+        for (client, want) in &model {
+            match st.get(*client).map_err(|e| format!("final get: {e:#}"))? {
+                Some(got) if got == *want => {}
+                other => {
+                    return Err(format!(
+                        "client {client}: final reload mismatch (got {:?})",
+                        other.map(|s| s.local_step)
+                    ))
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_zero_budget_spills_everything_and_round_trips_byte_identically() {
+    check("store_zero_budget", 0x57A7_0000, 30, |rng| {
+        let dir = store_dir("zero");
+        let mut st = StateStore::new(0, &dir);
+        let n_clients = 1 + rng.usize_below(6);
+        let states: Vec<ClientCkpt> = (0..n_clients).map(|_| rand_state(rng)).collect();
+        for (c, s) in states.iter().enumerate() {
+            st.put(c, s).map_err(|e| format!("put: {e:#}"))?;
+            if st.resident_bytes() != 0 {
+                return Err("zero budget must keep nothing resident".into());
+            }
+        }
+        if st.spill_count() < n_clients as u64 {
+            return Err(format!(
+                "{} puts produced only {} spills",
+                n_clients,
+                st.spill_count()
+            ));
+        }
+        for (c, want) in states.iter().enumerate() {
+            let got = st
+                .get(c)
+                .map_err(|e| format!("get: {e:#}"))?
+                .ok_or_else(|| format!("client {c} lost"))?;
+            if got != *want {
+                return Err(format!("client {c}: spill round-trip not identical"));
+            }
+        }
+        if st.load_count() < n_clients as u64 {
+            return Err("every zero-budget get must reload from disk".into());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+        Ok(())
+    });
+}
+
+/// The resident ceiling is real memory, not bookkeeping: with a budget
+/// sized for a handful of entries, a resident-hit `get` performs a small
+/// bounded number of heap allocations (decode of one state), independent
+/// of how many clients the store tracks in total.
+#[test]
+fn state_store_resident_get_allocates_a_bounded_amount() {
+    let mut rng = Rng::new(0xA110_C8);
+    let dir = store_dir("alloc");
+    let probe = rand_state(&mut rng);
+    // Budget for roughly two copies of the probe state; the other 63
+    // clients must spill rather than grow the resident set.
+    let mut sized = StateStore::new(u64::MAX, store_dir("sizing"));
+    sized.put(0, &probe).unwrap();
+    let one = sized.resident_bytes();
+    let mut st = StateStore::new(2 * one + one / 2, &dir);
+    for c in 0..64 {
+        st.put(c, &rand_state(&mut rng)).unwrap();
+    }
+    st.put(99, &probe).unwrap();
+    assert!(st.resident_bytes() <= st.budget(), "ceiling violated");
+    assert!(st.spill_count() > 0, "the budget never bit");
+    // Warm call first (pulls nothing from disk: 99 was just put).
+    let (first, _) = alloc_counter::count(|| st.get(99).unwrap().unwrap());
+    assert_eq!(first, probe);
+    let (got, allocs) = alloc_counter::count(|| st.get(99).unwrap().unwrap());
+    assert_eq!(got, probe);
+    assert!(
+        allocs < 512,
+        "resident-hit get performed {allocs} allocations — decode of one \
+         state should be O(state), not O(population)"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Proto v4 corruption / truncation corpus
+// ---------------------------------------------------------------------------
+
+fn rand_update(rng: &mut Rng, client: usize) -> ClientUpdate {
+    ClientUpdate {
+        client_id: client,
+        // Members of a FoldedPush travel with params cleared (the mean
+        // carries the mass); the codec must round-trip that shape.
+        params: Vec::new(),
+        n_samples: 1.0 + rng.f64() * 32.0,
+        loss_mean: rng.f64() * 8.0,
+        loss_last: rng.f64() * 8.0,
+        step_grad_norm_mean: rng.f64(),
+        applied_update_norm_mean: rng.f64(),
+        act_norm_mean: rng.f64(),
+        model_norm: rng.f64() * 10.0,
+        steps_done: rng.below(64),
+        wire_bytes: rng.below(1 << 20),
+    }
+}
+
+fn rand_msg(rng: &mut Rng) -> Msg {
+    match rng.below(3) {
+        0 => Msg::SubJoin(Join {
+            proto: PROTO_VERSION,
+            name: format!("subagg-{}", rng.below(16)),
+            identity: rng.next_u64(),
+        }),
+        1 => {
+            let k = 1 + rng.usize_below(4);
+            let members: Vec<FoldedMember> = (0..k)
+                .map(|c| FoldedMember { update: rand_update(rng, c), state: rand_state(rng) })
+                .collect();
+            let weight: f64 = members.iter().map(|m| m.update.n_samples).sum();
+            let n = 1 + rng.usize_below(48);
+            Msg::FoldedPush(FoldedPush {
+                session: rng.next_u64(),
+                round: rng.below(100),
+                weight,
+                mean: rand_vec(rng, n, 1.0),
+                members,
+            })
+        }
+        _ => {
+            let n = 1 + rng.usize_below(48);
+            Msg::RoundAssign(RoundAssign {
+                session: rng.next_u64(),
+                round: rng.below(100),
+                seq_base: rng.below(1000),
+                tasks: vec![
+                    AssignTask {
+                        client: rng.below(32),
+                        steps: 1 + rng.below(40),
+                        state: AssignState::Full(rand_state(rng)),
+                    },
+                    AssignTask {
+                        client: 32 + rng.below(32),
+                        steps: 1 + rng.below(40),
+                        state: AssignState::Ref(rng.next_u64()),
+                    },
+                ],
+                global: rand_vec(rng, n, 1.0),
+            })
+        }
+    }
+}
+
+#[test]
+fn prop_proto_v4_frames_roundtrip_and_reject_every_corruption() {
+    check("proto_v4_corpus", 0x4C0D_EC04, 120, |rng| {
+        let msg = rand_msg(rng);
+        let compress = rng.bool(0.5);
+        let clean = msg.encode(compress).map_err(|e| format!("encode: {e:#}"))?;
+        let back = Msg::decode(&clean).map_err(|e| format!("clean decode: {e:#}"))?;
+        // Canonical-bytes equality: decode must be lossless for the whole
+        // v4 surface (Ref tags, folded members, carried states).
+        let canon_a = msg.encode(false).map_err(|e| e.to_string())?;
+        let canon_b = back.encode(false).map_err(|e| e.to_string())?;
+        if canon_a != canon_b {
+            return Err("decode(encode(msg)) is not the identity".into());
+        }
+
+        // Every truncation must fail decode (the link layer's declared
+        // lengths + FNV-1a checksum make prefixes undecodable) — and must
+        // fail as an Err, never a panic (wire-panic lint territory).
+        let cuts: Vec<usize> = if clean.len() <= 40 {
+            (0..clean.len()).collect()
+        } else {
+            let mut c: Vec<usize> = (0..16).collect();
+            c.extend((0..24).map(|_| rng.usize_below(clean.len())));
+            c
+        };
+        for cut in cuts {
+            if Msg::decode(&clean[..cut]).is_ok() {
+                return Err(format!(
+                    "truncation to {cut} of {} bytes decoded",
+                    clean.len()
+                ));
+            }
+        }
+
+        // Seeded link-level flakes (bit flips, length lies, checksum
+        // corruption) must be rejected, never misdecoded.
+        for _ in 0..4 {
+            let mut bad = clean.clone();
+            flake_frame(&mut bad, rng.next_u64());
+            if Msg::decode(&bad).is_ok() {
+                return Err("flaked frame decoded instead of being rejected".into());
+            }
+        }
+        Ok(())
+    });
+}
