@@ -429,6 +429,28 @@ impl LeaseBook {
         self.owner.get(&client).copied()
     }
 
+    /// True iff every client is sampled and their slots are strictly
+    /// increasing — i.e. the list is duplicate-free and in sampled order.
+    /// This is the member-order rule a `FoldedPush` must satisfy: the
+    /// root re-derives the carried weight as the *sequential* sum over
+    /// the members in slot order at commit, so a push folded (or merely
+    /// summed) in any other order could carry a weight the commit-time
+    /// verification would reject only after the round is already
+    /// ledgered — a crash, not a cut.
+    pub fn slots_strictly_increasing(&self, clients: &[usize]) -> bool {
+        let mut prev: Option<usize> = None;
+        for &c in clients {
+            let Some(slot) = self.slot(c) else {
+                return false;
+            };
+            if prev.is_some_and(|p| p >= slot) {
+                return false;
+            }
+            prev = Some(slot);
+        }
+        true
+    }
+
     pub fn pending_count(&self) -> usize {
         self.pending.len()
     }

@@ -34,14 +34,32 @@ struct Resident {
 
 /// Spill-to-disk LRU cache of client states, keyed by client id, bounded
 /// by resident encoded bytes.
+///
+/// Two modes:
+///
+/// * **Retaining** ([`StateStore::new`]) — keeps encoded copies resident
+///   up to the budget, spilling the coldest to disk. For servers whose
+///   authoritative states would not fit in memory.
+/// * **Generation-only** ([`StateStore::gen_only`]) — tracks generations
+///   but retains no bytes and never touches disk; [`StateStore::get`]
+///   always returns `None` and the caller serves states from its own
+///   authoritative copy. This is the no-budget default of `net::server`,
+///   which already owns every client state inside its `Federation` — a
+///   second resident copy would double client-state memory for nothing.
 pub struct StateStore {
     budget: u64,
+    /// False in generation-only mode: `put` bumps the generation but
+    /// discards the bytes, `get` always misses.
+    retain: bool,
     spill_dir: PathBuf,
     resident: BTreeMap<usize, Resident>,
     /// LRU index: ordered `(last_use_tick, client)` pairs — the first
     /// element is always the coldest resident entry.
     lru: BTreeSet<(u64, usize)>,
     resident_bytes: u64,
+    /// High-water mark of `resident_bytes` over the store's lifetime
+    /// (survives `cleanup` — the boundedness witness for reports).
+    resident_peak: u64,
     tick: u64,
     /// Per-client state generation, bumped on every `put`.
     gens: BTreeMap<usize, u64>,
@@ -75,10 +93,12 @@ impl StateStore {
     pub fn new(budget_bytes: u64, spill_dir: impl Into<PathBuf>) -> StateStore {
         StateStore {
             budget: budget_bytes,
+            retain: true,
             spill_dir: spill_dir.into(),
             resident: BTreeMap::new(),
             lru: BTreeSet::new(),
             resident_bytes: 0,
+            resident_peak: 0,
             tick: 0,
             gens: BTreeMap::new(),
             spilled: BTreeSet::new(),
@@ -87,13 +107,25 @@ impl StateStore {
         }
     }
 
+    /// A generation-only store: `put` bumps the per-client generation but
+    /// retains nothing, `get` always returns `None`, and the spill
+    /// directory is never created. For callers that already hold the
+    /// authoritative states and only need the generation ledger behind
+    /// `proto::AssignState::Ref`.
+    pub fn gen_only(spill_dir: impl Into<PathBuf>) -> StateStore {
+        StateStore { retain: false, ..StateStore::new(0, spill_dir) }
+    }
+
     /// Insert or overwrite `client`'s state; returns the new generation.
     /// May spill colder entries (or, if this state alone exceeds the
     /// budget, the state itself) to keep `resident_bytes() <= budget()`.
+    /// In generation-only mode the bytes are discarded outright.
     pub fn put(&mut self, client: usize, state: &ClientCkpt) -> Result<u64> {
-        let bytes = encode_state(state);
-        self.insert_resident(client, bytes);
-        self.spilled.remove(&client);
+        if self.retain {
+            let bytes = encode_state(state);
+            self.insert_resident(client, bytes);
+            self.spilled.remove(&client);
+        }
         // A put supersedes any spilled copy of an older generation; the
         // stale file (if any) is overwritten on the next spill.
         let gen = self.gens.entry(client).or_insert(0);
@@ -139,6 +171,12 @@ impl StateStore {
         self.resident_bytes
     }
 
+    /// High-water mark of resident encoded bytes over the store's lifetime.
+    /// Survives [`StateStore::cleanup`]; always 0 in generation-only mode.
+    pub fn resident_peak(&self) -> u64 {
+        self.resident_peak
+    }
+
     pub fn budget(&self) -> u64 {
         self.budget
     }
@@ -156,6 +194,29 @@ impl StateStore {
     /// Clients currently resident (the rest of the tracked set is on disk).
     pub fn resident_len(&self) -> usize {
         self.resident.len()
+    }
+
+    /// Where spilled entries live (only ever created on first spill).
+    pub fn spill_dir(&self) -> &std::path::Path {
+        &self.spill_dir
+    }
+
+    /// Drop every tracked state and remove the spill directory from disk.
+    /// The store is a transport cache — the authoritative states live in
+    /// the federation and its checkpoints — so a server tears this down
+    /// on shutdown instead of leaving `state_*.bin` files to accumulate
+    /// across runs. Lifetime statistics (`spill_count`/`load_count`)
+    /// survive for post-run reporting. Removal is best-effort: a failure
+    /// leaves stale files behind, never fails the shutdown.
+    pub fn cleanup(&mut self) {
+        self.resident.clear();
+        self.lru.clear();
+        self.resident_bytes = 0;
+        self.spilled.clear();
+        self.gens.clear();
+        if self.spill_dir.exists() {
+            let _ = std::fs::remove_dir_all(&self.spill_dir);
+        }
     }
 
     fn insert_resident(&mut self, client: usize, bytes: Vec<u8>) {
@@ -190,6 +251,10 @@ impl StateStore {
             };
             self.spill(coldest)?;
         }
+        // Post-enforcement is the only steady state callers observe: the
+        // peak witnesses every budget-bounded resident level, never the
+        // transient insert that enforcement is about to spill away.
+        self.resident_peak = self.resident_peak.max(self.resident_bytes);
         Ok(())
     }
 
@@ -326,6 +391,35 @@ mod tests {
         std::fs::write(&path, &raw).unwrap();
         assert!(st.get(1).is_err(), "flipped byte must fail the checksum");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gen_only_store_tracks_generations_without_retaining_bytes() {
+        let dir = tmp_dir("genonly");
+        let mut st = StateStore::gen_only(&dir);
+        assert_eq!(st.put(4, &state(1, 32)).unwrap(), 1);
+        assert_eq!(st.put(4, &state(2, 32)).unwrap(), 2);
+        assert_eq!(st.gen_of(4), Some(2));
+        assert_eq!(st.resident_bytes(), 0, "gen-only retains nothing");
+        assert!(st.get(4).unwrap().is_none(), "gen-only always misses");
+        assert!(!st.contains(4));
+        assert_eq!(st.spill_count(), 0);
+        assert!(!dir.exists(), "gen-only must never touch the disk");
+    }
+
+    #[test]
+    fn cleanup_removes_the_spill_directory() {
+        let dir = tmp_dir("cleanup");
+        let mut st = StateStore::new(0, &dir); // everything spills
+        st.put(0, &state(0, 32)).unwrap();
+        st.put(1, &state(1, 32)).unwrap();
+        assert!(dir.exists(), "spills must have created the directory");
+        assert!(st.spill_count() >= 2);
+        st.cleanup();
+        assert!(!dir.exists(), "cleanup must remove the spill directory");
+        assert!(!st.contains(0));
+        assert_eq!(st.gen_of(0), None);
+        assert!(st.spill_count() >= 2, "lifetime stats survive cleanup");
     }
 
     #[test]

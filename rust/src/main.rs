@@ -297,7 +297,19 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = train_config(args, "serve")?;
     let model = cfg.model.clone();
-    let min_workers = args.get_usize("min-workers", 1)?;
+    let mut min_workers = args.get_usize("min-workers", 1)?;
+    // A tree round needs one live sub-aggregator per tier group or it
+    // stalls out the whole join timeout every round; refuse to start
+    // under-provisioned rather than hang.
+    let tier_groups = cfg.tiers.min(cfg.clients_per_round);
+    if cfg.tiers > 1 && min_workers < tier_groups {
+        println!(
+            "[serve] tiers = {} with clients_per_round = {} makes up to {} \
+             group(s) per round; raising min-workers {} -> {}",
+            cfg.tiers, cfg.clients_per_round, tier_groups, min_workers, tier_groups,
+        );
+        min_workers = tier_groups;
+    }
     let opts = ServeOpts {
         bind: args.get_or("bind", "127.0.0.1:7070"),
         min_workers,

@@ -127,6 +127,11 @@ pub struct FleetReport {
     /// back over the run (nonzero proves the budget actually bit).
     pub store_spills: u64,
     pub store_loads: u64,
+    /// High-water mark of encoded client-state bytes the root's store
+    /// held resident — 0 with no `state_budget` configured (the store
+    /// runs generation-only and the federation's own states serve
+    /// assigns). Read after shutdown: the peak survives spill cleanup.
+    pub store_resident_peak: u64,
 }
 
 /// One logical worker's thread: serve sessions, crashing and rejoining as
@@ -220,6 +225,21 @@ pub fn run_loopback(
          federation runs through sub-aggregators, a flat one never does",
         opts.subaggs,
         cfg.tiers
+    );
+    // Every tree round needs one live sub-aggregator per tier group
+    // (`tier_slices` makes min(tiers, K) groups); too few would leave the
+    // root waiting out its full join timeout every round before bailing —
+    // a pure config error surfaced as a slow hang. Fail fast instead.
+    let max_groups = cfg.tiers.min(cfg.clients_per_round);
+    anyhow::ensure!(
+        opts.subaggs == 0 || opts.subaggs >= max_groups,
+        "tree fleet needs one sub-aggregator per tier group: cfg.tiers = {} \
+         with clients_per_round = {} makes up to {} group(s) per round, only \
+         {} sub-aggregator(s) configured",
+        cfg.tiers,
+        cfg.clients_per_round,
+        max_groups,
+        opts.subaggs
     );
     anyhow::ensure!(
         opts.subaggs == 0 || opts.workers >= opts.subaggs,
@@ -444,6 +464,7 @@ pub fn run_loopback(
         worker_errors,
         store_spills: server.state_store().spill_count(),
         store_loads: server.state_store().load_count(),
+        store_resident_peak: server.state_store().resident_peak(),
     })
 }
 

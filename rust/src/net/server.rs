@@ -110,8 +110,10 @@ pub struct ServeOpts {
     /// not hung. The default keeps the historical hour.
     pub stall_secs: f64,
     /// Resident-byte budget for the server-owned client-state cache
-    /// ([`StateStore`]); colder states spill to disk. `None` keeps
-    /// everything resident (the historical behavior).
+    /// ([`StateStore`]); colder states spill to disk. `None` runs the
+    /// store generation-only: assigns are served straight from the
+    /// federation's own states (no second resident copy) and the store
+    /// merely tracks the generations behind `AssignState::Ref`.
     pub state_budget: Option<u64>,
 }
 
@@ -139,9 +141,13 @@ struct WorkerConn {
     name: String,
     stream: NbWriter,
     alive: bool,
-    /// client → state generation last shipped to (or pushed by) this
-    /// connection. Reset on admission and rejoin — a fresh process holds
-    /// nothing.
+    /// client → state generation this connection provably holds: shipped
+    /// in a Full assign, or pushed back *and accepted*. Reset on admission
+    /// and rejoin (a fresh process holds nothing), dropped per client on
+    /// every push receipt until acceptance re-records it, and dropped on
+    /// every cut — the worker's cache may have advanced past the server's
+    /// authoritative pre-round state, and a `Ref` into that diverged copy
+    /// would silently break the replay contract.
     gens: BTreeMap<usize, u64>,
 }
 
@@ -152,9 +158,11 @@ pub struct Server {
     listener: Option<TcpListener>,
     addr: SocketAddr,
     session: u64,
-    /// Memory-bounded transport cache of client states: every assign is
-    /// served from here (spilling LRU past `ServeOpts::state_budget`),
-    /// and every accepted push refreshes it.
+    /// Memory-bounded transport cache of client states: with a
+    /// `ServeOpts::state_budget` every assign is served from here
+    /// (spilling LRU past the budget) and every accepted push refreshes
+    /// it; without one it runs generation-only and assigns are served
+    /// from the federation's states directly.
     store: StateStore,
     /// Realized deadline/disconnect cuts per round — the schedule that
     /// replays this run in-process via `Federation::run_round_cut`.
@@ -192,10 +200,16 @@ impl Server {
                 .duration_since(std::time::UNIX_EPOCH)
                 .map(|d| d.as_nanos() as u64)
                 .unwrap_or(0x5e55_1017);
-        let store = StateStore::new(
-            opts.state_budget.unwrap_or(u64::MAX),
-            std::env::temp_dir().join(format!("photon_spill_{session:016x}")),
-        );
+        let spill_dir =
+            std::env::temp_dir().join(format!("photon_spill_{session:016x}"));
+        // With no budget the store runs generation-only: the federation
+        // already holds every client state, so assigns are served from it
+        // directly and the store just keeps the generation ledger behind
+        // `AssignState::Ref` — no second resident copy, no spill files.
+        let store = match opts.state_budget {
+            Some(budget) => StateStore::new(budget, spill_dir),
+            None => StateStore::gen_only(spill_dir),
+        };
         Ok(Server {
             fed,
             opts,
@@ -430,6 +444,10 @@ impl Server {
         }
         stop.store(true, Ordering::Release);
         self.emit(ObsEvent::Shutdown { rounds: self.fed.next_round as u64 });
+        // The store is a transport cache (the federation and its
+        // checkpoints are authoritative) — remove its spill files so
+        // long-lived hosts don't accumulate state_*.bin across runs.
+        self.store.cleanup();
 
         result?;
         Ok(self.fed.log.rounds.clone())
@@ -714,6 +732,17 @@ impl Server {
                             continue;
                         };
                         *pushed_by.entry(widx).or_insert(0) += 1;
+                        // Any push means the sender overwrote its local
+                        // cache for this client with the advanced state it
+                        // just computed. That copy is authoritative only if
+                        // this exact push is accepted below — so drop the
+                        // connection's generation claim now and let the
+                        // acceptance path re-establish it. Otherwise a
+                        // later round could ship `Ref` into a cache that
+                        // silently diverged from the server's pre-round
+                        // state (rejected push, stale holder, late
+                        // straggler).
+                        workers[widx].gens.remove(&client);
                         // Only the current lease holder may answer for a
                         // client — a push from anyone else (rogue peer,
                         // stale reconnect, migrated-away straggler) is
@@ -858,6 +887,16 @@ impl Server {
         }
         let cut = book.cuts();
         if !cut.is_empty() {
+            // A cut lease keeps its pre-round server state, but the worker
+            // that held it may have computed and cached the advanced state
+            // anyway (deadline-cut straggler, flaked frame). Drop every
+            // connection's generation claim for the cut clients so the
+            // next assign ships Full, never a Ref into a diverged cache.
+            for c in &cut {
+                for w in workers.iter_mut() {
+                    w.gens.remove(c);
+                }
+            }
             self.emit(ObsEvent::Cut {
                 round: d.round as u64,
                 clients: cut.iter().map(|&c| c as u64).collect(),
@@ -1067,6 +1106,14 @@ impl Server {
         }
         let cut = book.cuts();
         if !cut.is_empty() {
+            // Same generation hygiene as the flat path (tree assigns are
+            // always Full today, but the ledger must never claim a cut
+            // client's state is held downstream).
+            for c in &cut {
+                for w in workers.iter_mut() {
+                    w.gens.remove(c);
+                }
+            }
             self.emit(ObsEvent::Cut {
                 round: d.round as u64,
                 clients: cut.iter().map(|&c| c as u64).collect(),
@@ -1133,11 +1180,20 @@ impl Server {
         // Structural validation. `weight` must be the bit-exact sequential
         // sum of the member sample counts (the weight-carry rule): the
         // root re-derives it at commit, so a sub-aggregator cannot smuggle
-        // in a different weighting than its members justify.
+        // in a different weighting than its members justify. The members
+        // must also arrive duplicate-free and in strictly increasing slot
+        // order — exactly the sequence the commit-time verification sums
+        // over. A push that duplicates or re-orders members could pass a
+        // self-referential weight check here only for the re-derived sum
+        // to mismatch at commit and abort the whole run; malformed ⇒ cut,
+        // never crash.
+        let member_ids: Vec<usize> =
+            fp.members.iter().map(|m| m.update.client_id).collect();
         let seq_weight: f64 = fp.members.iter().map(|m| m.update.n_samples).sum();
         let ok = !fp.members.is_empty()
             && fp.mean.len() == self.fed.global.len()
             && fp.weight.to_bits() == seq_weight.to_bits()
+            && book.slots_strictly_increasing(&member_ids)
             && fp.members.iter().all(|m| {
                 m.update.params.is_empty()
                     && book.owner(m.update.client_id) == Some(widx)

@@ -150,10 +150,13 @@ pub fn run_worker(addr: &str, opts: WorkerOpts) -> Result<WorkerReport> {
 
     let mut nodes: BTreeMap<u64, ClientNode> = BTreeMap::new();
     // States this worker provably holds: everything received in a Full
-    // assignment plus every advanced state it pushed back. The server only
-    // sends `AssignState::Ref` for generations it shipped to (or received
-    // from) this very connection, so a cache miss on a Ref is a protocol
-    // violation, not a recoverable condition.
+    // assignment plus every advanced state it pushed back. Pushing caches
+    // optimistically — the push may yet be rejected or deadline-cut — but
+    // that is safe because the server drops its generation claim for this
+    // connection on any push it does not accept and for every cut client,
+    // so it only ever sends `AssignState::Ref` for a generation this very
+    // connection shipped or had accepted. A cache miss on a Ref is
+    // therefore a protocol violation, not a recoverable condition.
     let mut cached: BTreeMap<u64, ClientCkpt> = BTreeMap::new();
     let mut report =
         WorkerReport { worker_slot: ack.worker_slot, ..WorkerReport::default() };

@@ -18,17 +18,22 @@
 //! client soak (polling accept path + `StateStore` under a fixed resident
 //! budget, RSS-checked via `/proc/self/status`).
 
+use std::net::TcpStream;
 use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Duration;
 
 use photon::chaos::{ChaosConfig, Schedule};
 use photon::ckpt::{latest_in, Checkpoint};
 use photon::cluster::faults::FaultPlan;
 use photon::compress::UpdateCodec;
 use photon::config::{ExperimentConfig, OptStatePolicy};
-use photon::coordinator::Federation;
+use photon::coordinator::{ClientUpdate, Federation};
 use photon::metrics::RoundRecord;
-use photon::net::{run_loopback, FleetOpts, FleetReport};
+use photon::net::proto::{
+    self, AssignState, FoldedMember, FoldedPush, Join, Msg, PROTO_VERSION,
+};
+use photon::net::{run_loopback, FleetOpts, FleetReport, ServeOpts, Server};
 use photon::obs;
 use photon::optim::schedule::CosineSchedule;
 use photon::runtime::{ModelRuntime, Runtime};
@@ -278,6 +283,231 @@ fn flat_idle_client_assigns_shrink_to_state_refs() {
     // 0's, not merely smaller.
     assert!(ab[1] < ab[0] / 2, "round 1 assign must shrink: {ab:?}");
     assert!(ab[2] < ab[0] / 2, "round 2 assign must shrink: {ab:?}");
+    // With no state budget the store runs generation-only: the federation
+    // already owns every client state, so the server must never hold a
+    // second resident encoded copy — the Ref shrink above works off the
+    // generation ledger alone.
+    assert_eq!(
+        report.store_resident_peak, 0,
+        "no budget ⇒ generation-only store ⇒ zero resident bytes ever"
+    );
+}
+
+#[test]
+fn flake_cut_client_is_reshipped_full_and_replays_bit_exactly() {
+    // The Ref-invalidation regression (review fix): a flaked push leaves
+    // the worker's cache holding the client's *advanced* state while the
+    // server cuts the lease and keeps the pre-round state. The server
+    // must drop that connection's generation claim with the cut so the
+    // next round re-ships the full pre-round state — a `Ref` into the
+    // diverged cache would run the client from the wrong state and
+    // silently break the trace-replay contract.
+    let mut cfg = ExperimentConfig::quickstart("m75a");
+    cfg.n_clients = 4;
+    cfg.clients_per_round = 4; // K = P: a cut client is resampled next round
+    cfg.rounds = 3;
+    cfg.local_steps = 2;
+    cfg.eval_batches = 1;
+    cfg.seed = 23;
+    cfg.schedule = CosineSchedule::new(3e-3, 0.1, 6, 2);
+    cfg.faults = FaultPlan::none();
+    cfg.opt_state = OptStatePolicy::KeepOpt; // full states dominate the frame
+
+    // Every (worker, round) cell flakes: one victim frame per round is
+    // corrupted on the wire, so its client is deadline-cut every round.
+    let ccfg = ChaosConfig { flake_prob: 1.0, ..ChaosConfig::none() };
+    let schedule = Schedule::generate(0xF1A4_E001, 1, 3, ccfg);
+    assert!(schedule.needs_deadline(), "every cell must flake");
+
+    let cfg_replay = cfg.clone();
+    let report = run_loopback(
+        cfg,
+        model(),
+        FleetOpts {
+            workers: 1,
+            compress: false,
+            deadline_secs: Some(6.0),
+            chaos: Some(schedule),
+            ..FleetOpts::default()
+        },
+    )
+    .unwrap();
+    assert!(report.worker_errors.is_empty(), "{:?}", report.worker_errors);
+    assert_eq!(report.records.len(), 3, "every round must commit");
+    assert_eq!(report.workers[0].frames_flaked, 3, "one flake per round");
+    for rec in &report.records {
+        assert_eq!(
+            report.trace.cut_for(rec.round).len(),
+            1,
+            "round {}: exactly the flake victim is cut",
+            rec.round
+        );
+    }
+
+    // Bit-parity with the in-process replay of the realized cuts — the
+    // contract a stale Ref would break.
+    let mut replay = Federation::with_model(cfg_replay, model()).unwrap();
+    let replayed = replay.run_trace(&report.trace).unwrap();
+    assert_parity(&replayed, &report.records, "flaked fleet vs trace replay");
+    assert_eq!(replay.global, report.global, "global model must be bit-identical");
+
+    // Structural witness of the fix, independent of which client each
+    // round's flake hits: with KeepOpt and compression off, round 0 is the
+    // global broadcast (~4n bytes) plus four full states (~8n each), ~36n
+    // total. A later round re-shipping the previous round's cut client in
+    // full is ~12n; all-Ref (the bug) would be ~4n. ab[0]/6 (~6n)
+    // separates the two regimes with margin on both sides.
+    let ab = &report.workers[0].assign_bytes;
+    assert_eq!(ab.len(), 3, "one RoundAssign per round: {ab:?}");
+    for r in 1..ab.len() {
+        assert!(
+            ab[r] > ab[0] / 6,
+            "round {r}: the flake-cut client must ride Full again, not as a \
+             Ref into a diverged cache: {ab:?}"
+        );
+    }
+}
+
+#[test]
+fn duplicate_member_folded_push_is_cut_not_a_crash() {
+    // Review regression: a FoldedPush that repeats a member passes a
+    // *self-referential* weight check (the claimed weight is summed over
+    // the same duplicated list), but `commit_round_folded` re-derives the
+    // weight from the deduplicated slot-ordered accepted updates — so
+    // before the strict-slot-order admission check the mismatch surfaced
+    // as a commit-time bail that killed the whole run. Malformed ⇒ cut,
+    // never crash: the slice must drop through the dropped-client path
+    // and the round must still commit, with zero participants.
+    let mut cfg = ExperimentConfig::quickstart("m75a");
+    cfg.n_clients = 2;
+    cfg.clients_per_round = 1;
+    cfg.rounds = 1;
+    cfg.local_steps = 1;
+    cfg.eval_batches = 1;
+    cfg.seed = 29;
+    cfg.schedule = CosineSchedule::new(3e-3, 0.1, 2, 1);
+    cfg.faults = FaultPlan::none();
+    cfg.tiers = 2; // tier_slices(1, 2) = one group of the one sampled client
+
+    let fed = Federation::with_model(cfg, model()).unwrap();
+    let mut server = Server::with_federation(
+        fed,
+        ServeOpts {
+            bind: "127.0.0.1:0".into(),
+            min_workers: 1,
+            compress: false,
+            // Budget 0: the assign-time `put` spills to disk, so this run
+            // also witnesses spill-directory removal on shutdown.
+            state_budget: Some(0),
+            ..ServeOpts::default()
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    // A hand-rolled sub-aggregator speaking raw proto v4: join, take the
+    // slice, answer with a push whose two members are the same client.
+    let rogue = std::thread::spawn(move || -> anyhow::Result<()> {
+        let mut stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+        proto::write_msg(
+            &mut stream,
+            &Msg::SubJoin(Join {
+                proto: PROTO_VERSION,
+                name: "rogue".into(),
+                identity: 0,
+            }),
+            false,
+        )?;
+        let Msg::JoinAck(ack) = proto::read_msg(&mut stream)? else {
+            anyhow::bail!("expected JoinAck");
+        };
+        let assign = loop {
+            match proto::read_msg(&mut stream)? {
+                Msg::RoundAssign(a) => break a,
+                Msg::Shutdown => anyhow::bail!("shut down before any assignment"),
+                _ => {}
+            }
+        };
+        anyhow::ensure!(assign.tasks.len() == 1, "one group of one client");
+        let AssignState::Full(state) = assign.tasks[0].state.clone() else {
+            anyhow::bail!("tree assigns are always Full");
+        };
+        let member = FoldedMember {
+            update: ClientUpdate {
+                client_id: assign.tasks[0].client as usize,
+                params: Vec::new(),
+                n_samples: 64.0,
+                loss_mean: 2.0,
+                loss_last: 2.0,
+                step_grad_norm_mean: 0.0,
+                applied_update_norm_mean: 0.0,
+                act_norm_mean: 0.0,
+                model_norm: 0.0,
+                steps_done: 1,
+                wire_bytes: 0,
+            },
+            state,
+        };
+        let members = vec![member.clone(), member];
+        // The self-referential weight: summed over the duplicated member
+        // list exactly as the server's structural check sums it, so only
+        // the strict-slot-order rule can reject this push at admission.
+        let weight: f64 = members.iter().map(|m| m.update.n_samples).sum();
+        proto::write_msg(
+            &mut stream,
+            &Msg::FoldedPush(FoldedPush {
+                session: ack.session,
+                round: assign.round,
+                weight,
+                mean: vec![0.0; assign.global.len()],
+                members,
+            }),
+            false,
+        )?;
+        loop {
+            if matches!(proto::read_msg(&mut stream)?, Msg::Shutdown) {
+                return Ok(());
+            }
+        }
+    });
+
+    let records = server
+        .run()
+        .expect("a malformed folded push must cut the slice, never kill the run");
+    rogue.join().unwrap().unwrap();
+    assert_eq!(records.len(), 1, "the round must still commit");
+    assert_eq!(records[0].participated, 0, "the whole slice must be cut");
+    assert_eq!(server.cuts.len(), 1, "one realized cut round: {:?}", server.cuts);
+    assert_eq!(server.cuts[0].0, 0);
+    assert_eq!(server.cuts[0].1.len(), 1, "the one sampled client is cut");
+    // Budget 0 forced assign-time spills; shutdown must have removed them.
+    assert!(server.state_store().spill_count() > 0, "budget 0 must spill");
+    assert!(
+        !server.state_store().spill_dir().exists(),
+        "shutdown must remove the spill directory"
+    );
+}
+
+#[test]
+fn underprovisioned_tree_fleet_fails_fast() {
+    // Review fix: tiers = 3 with only two sub-aggregators used to hang
+    // out the root's full join timeout every round (`tier_slices` makes
+    // min(tiers, K) groups and the tree round waits for that many live
+    // peers). The harness must refuse the shape up front instead.
+    let mut cfg = tree_cfg();
+    cfg.tiers = 3;
+    let err = run_loopback(
+        cfg,
+        model(),
+        FleetOpts { workers: 2, subaggs: 2, compress: true, ..FleetOpts::default() },
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(
+        err.contains("sub-aggregator per tier group"),
+        "must fail fast with the group arithmetic, not hang: {err}"
+    );
 }
 
 /// Resident-set size in KiB via `/proc/self/status` (`None` off-Linux).
@@ -337,6 +567,12 @@ fn soak_100k_client_round_stays_within_state_budget() {
         report.store_spills > 0,
         "a 8 KiB budget over a 256-client cohort must spill ({} spills)",
         report.store_spills
+    );
+    assert!(
+        report.store_resident_peak > 0 && report.store_resident_peak <= 8 * 1024,
+        "the resident high-water mark must witness an active but bounded \
+         cache ({} bytes over the 8192-byte budget)",
+        report.store_resident_peak
     );
     let text = std::fs::read_to_string(&obs_log).unwrap();
     let n = obs::validate_log_text(&text).expect("soak event log must validate");

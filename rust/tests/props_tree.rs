@@ -392,6 +392,68 @@ fn state_store_resident_get_allocates_a_bounded_amount() {
 }
 
 // ---------------------------------------------------------------------------
+// FoldedPush member-order rule (LeaseBook::slots_strictly_increasing)
+// ---------------------------------------------------------------------------
+
+/// The admission-side half of the weight-carry rule: any slot-ordered,
+/// duplicate-free subset of the sampled cohort passes; any duplicate, any
+/// swap, and any unsampled member is refused. This is what lets the root
+/// reject a malformed `FoldedPush` at admission (cut) instead of tripping
+/// the commit-time bit-exact weight re-derivation (crash).
+#[test]
+fn prop_member_slot_order_accepts_exactly_the_ordered_subsets() {
+    check("folded_member_order", 0x510_7012, 150, |rng| {
+        let k = 1 + rng.usize_below(12);
+        // Sampled clients with non-contiguous ids so slot != client id.
+        let runnable: Vec<(usize, u64)> =
+            (0..k).map(|s| (s * 3 + rng.usize_below(2), 4)).collect();
+        let book = photon::chaos::LeaseBook::new(&runnable);
+
+        // A random slot-ordered subset must pass.
+        let subset: Vec<usize> = runnable
+            .iter()
+            .map(|&(c, _)| c)
+            .filter(|_| rng.bool(0.6))
+            .collect();
+        if !subset.is_empty() && !book.slots_strictly_increasing(&subset) {
+            return Err(format!("ordered subset {subset:?} was refused"));
+        }
+        if !book.slots_strictly_increasing(&[]) {
+            return Err("the empty list is vacuously ordered".into());
+        }
+
+        // Duplicating any element must fail.
+        if !subset.is_empty() {
+            let mut dup = subset.clone();
+            let at = rng.usize_below(dup.len());
+            dup.insert(at, dup[at]);
+            if book.slots_strictly_increasing(&dup) {
+                return Err(format!("duplicate member {dup:?} was accepted"));
+            }
+        }
+
+        // Swapping two distinct elements must fail.
+        if subset.len() >= 2 {
+            let mut swapped = subset.clone();
+            let i = rng.usize_below(swapped.len() - 1);
+            swapped.swap(i, i + 1);
+            if book.slots_strictly_increasing(&swapped) {
+                return Err(format!("out-of-order members {swapped:?} were accepted"));
+            }
+        }
+
+        // An unsampled client must fail wherever it appears.
+        let stranger = runnable.iter().map(|&(c, _)| c).max().unwrap() + 1;
+        let mut with_stranger = subset.clone();
+        with_stranger.push(stranger);
+        if book.slots_strictly_increasing(&with_stranger) {
+            return Err(format!("unsampled member in {with_stranger:?} was accepted"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
 // Proto v4 corruption / truncation corpus
 // ---------------------------------------------------------------------------
 
