@@ -384,6 +384,345 @@ impl Trace {
     }
 }
 
+/// Staleness-discounted, normalized fold weights for one buffered async
+/// aggregation (FedBuff-style, arXiv:2409.15723 §4): each arrival's base
+/// weight `w_i` (its `n_samples`) is discounted by `gamma^staleness_i`
+/// and the discounted weights are normalized to sum to 1.
+///
+/// This is THE weight function of the async plane: `net::server` calls it
+/// when a fold closes, records the outputs in the [`AsyncTrace`], and
+/// `Federation::commit_async_fold` re-derives them from the raw
+/// `(n_samples, staleness)` pairs at commit and verifies the recorded
+/// weights **bitwise** (the PR 9 weight-carry rule) — so fleet and replay
+/// can only ever fold with identical coefficients. Pure sequential f64 in
+/// input order; callers pass arrivals in canonical (ascending grant)
+/// order.
+///
+/// `gamma` ∈ (0, 1]: 1 disables the discount (pure sample weighting),
+/// smaller values bias the fold toward fresher updates. With all base
+/// weights positive the outputs are positive, sum to 1, and are monotone
+/// non-increasing in staleness for equal base weights — property-tested
+/// in `tests/props_async.rs`.
+pub fn discounted_weights(base: &[f64], staleness: &[u64], gamma: f64) -> Vec<f64> {
+    debug_assert_eq!(base.len(), staleness.len());
+    debug_assert!(gamma > 0.0 && gamma <= 1.0, "gamma {gamma} outside (0,1]");
+    let d: Vec<f64> = base
+        .iter()
+        .zip(staleness)
+        .map(|(&w, &s)| w * gamma.powi(s.min(i32::MAX as u64) as i32))
+        .collect();
+    let total: f64 = d.iter().sum();
+    d.iter().map(|&x| x / total).collect()
+}
+
+/// One work grant of the async plane: a single-client lease dispatched by
+/// the buffered-async server. The grant id is globally unique and
+/// monotone in dispatch order — it travels as the `round` field of the
+/// `RoundAssign`/`UpdatePush` pair (the LR schedule reads `seq_base`, not
+/// `round`, so the field is free to carry it), keys the transit codec's
+/// dither seed, and defines the **canonical fold order**: a closing fold
+/// sorts its buffered arrivals by ascending grant id before folding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AsyncGrant {
+    /// Globally unique, dispatch-ordered grant id.
+    pub grant: u64,
+    pub client: usize,
+    /// Local steps the client runs under this grant.
+    pub steps: u64,
+    /// Server epoch (= committed folds = global-model version) at
+    /// dispatch. Staleness at fold time is `fold_epoch - born_epoch`.
+    pub born_epoch: u64,
+    /// Cumulative sequential steps at dispatch (LR-schedule base) —
+    /// recorded explicitly so replay is a pure function of the trace.
+    pub seq_base: u64,
+}
+
+/// One arrival inside a committed [`AsyncFold`], in canonical (ascending
+/// grant) order.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AsyncArrival {
+    pub grant: u64,
+    pub client: usize,
+    /// `fold_epoch - born_epoch` (0 = folded against the same global it
+    /// was computed from).
+    pub staleness: u64,
+    /// The normalized staleness-discounted fold weight
+    /// ([`discounted_weights`] output) — re-derived and verified bitwise
+    /// at commit.
+    pub weight: f64,
+}
+
+/// One committed buffered fold: the K arrivals that closed epoch
+/// `epoch` (producing global-model version `epoch + 1`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AsyncFold {
+    pub epoch: u64,
+    /// Arrivals in canonical (ascending grant) order.
+    pub arrivals: Vec<AsyncArrival>,
+}
+
+/// The realized outcome of a buffered-async run: every grant dispatched,
+/// every fold committed, every grant cut (crash, malformed push, per-grant
+/// deadline, or still in flight at shutdown). Assembled by
+/// `net::Server`, replayed bit-exactly by `Federation::run_async_trace`
+/// — the async analogue of [`Trace`].
+///
+/// Exactly-once accounting: every grant id appears in **exactly one**
+/// fold's arrivals or in `cut`, never both, never twice
+/// ([`AsyncTrace::check_exactly_once`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AsyncTrace {
+    /// Buffer size: a fold closes at exactly `k` arrivals.
+    pub k: usize,
+    /// Staleness discount base (∈ (0, 1]).
+    pub gamma: f64,
+    /// Every grant dispatched, ascending by grant id.
+    pub grants: Vec<AsyncGrant>,
+    /// Committed folds, ascending by epoch (one per epoch, consecutive
+    /// from the run's first epoch).
+    pub folds: Vec<AsyncFold>,
+    /// Grant ids that never folded, ascending.
+    pub cut: Vec<u64>,
+}
+
+impl AsyncTrace {
+    pub fn grant(&self, id: u64) -> Option<&AsyncGrant> {
+        self.grants.iter().find(|g| g.grant == id)
+    }
+
+    /// Grant ids folded across all epochs.
+    pub fn total_folded(&self) -> usize {
+        self.folds.iter().map(|f| f.arrivals.len()).sum()
+    }
+
+    pub fn total_cut(&self) -> usize {
+        self.cut.len()
+    }
+
+    /// Largest realized staleness across all folds (0 on an empty trace).
+    pub fn staleness_max(&self) -> u64 {
+        self.folds
+            .iter()
+            .flat_map(|f| f.arrivals.iter().map(|a| a.staleness))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Mean realized staleness across all folded arrivals.
+    pub fn staleness_mean(&self) -> f64 {
+        let n = self.total_folded();
+        if n == 0 {
+            return 0.0;
+        }
+        let sum: u64 = self
+            .folds
+            .iter()
+            .flat_map(|f| f.arrivals.iter().map(|a| a.staleness))
+            .sum();
+        sum as f64 / n as f64
+    }
+
+    /// Structural invariants: every dispatched grant resolves exactly once
+    /// (one fold membership XOR one cut), folds reference only dispatched
+    /// grants, arrivals are in canonical order with consistent staleness,
+    /// and epochs are consecutive.
+    pub fn check_exactly_once(&self) -> Result<(), String> {
+        let mut resolved: BTreeSet<u64> = BTreeSet::new();
+        let by_id: BTreeMap<u64, &AsyncGrant> =
+            self.grants.iter().map(|g| (g.grant, g)).collect();
+        if by_id.len() != self.grants.len() {
+            return Err("duplicate grant id in grants".into());
+        }
+        for (i, f) in self.folds.iter().enumerate() {
+            if f.epoch != self.folds[0].epoch + i as u64 {
+                return Err(format!("fold epochs not consecutive at index {i}"));
+            }
+            let mut prev: Option<u64> = None;
+            for a in &f.arrivals {
+                let Some(g) = by_id.get(&a.grant) else {
+                    return Err(format!("fold {} references unknown grant {}", f.epoch, a.grant));
+                };
+                if g.client != a.client {
+                    return Err(format!("grant {} client mismatch in fold", a.grant));
+                }
+                if g.born_epoch + a.staleness != f.epoch {
+                    return Err(format!(
+                        "grant {} staleness {} inconsistent with born epoch {} at fold {}",
+                        a.grant, a.staleness, g.born_epoch, f.epoch
+                    ));
+                }
+                if prev.is_some_and(|p| p >= a.grant) {
+                    return Err(format!("fold {} arrivals not in canonical order", f.epoch));
+                }
+                prev = Some(a.grant);
+                if !resolved.insert(a.grant) {
+                    return Err(format!("grant {} resolved twice", a.grant));
+                }
+            }
+        }
+        for &c in &self.cut {
+            if !by_id.contains_key(&c) {
+                return Err(format!("cut references unknown grant {c}"));
+            }
+            if !resolved.insert(c) {
+                return Err(format!("grant {c} resolved twice (fold + cut)"));
+            }
+        }
+        for g in &self.grants {
+            if !resolved.contains(&g.grant) {
+                return Err(format!("grant {} dispatched but never resolved", g.grant));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The async plane's grant ledger: which worker owns each in-flight
+/// grant, which client each grant runs, who arrived, who was cut. The
+/// async analogue of [`LeaseBook`], with two extra rules the buffered
+/// plane needs:
+///
+/// * **exactly-once per grant** — a push is accepted only from the
+///   grant's current owner, and only once; late or duplicate pushes for
+///   a cut/accepted grant are refused.
+/// * **per-client serialization** — a client with an unresolved grant
+///   (in flight *or* accepted-but-not-yet-folded) can not be granted
+///   again: its state only advances when a fold installs it, so a second
+///   concurrent grant would ship a stale state and break replay parity.
+///   [`AsyncBook::release`] frees the client when its arrival folds.
+#[derive(Clone, Debug, Default)]
+pub struct AsyncBook {
+    /// grant → (client, owner worker, born epoch) while in flight.
+    pending: BTreeMap<u64, (usize, usize, u64)>,
+    /// Accepted, buffered, not yet folded.
+    arrived: BTreeSet<u64>,
+    cut: BTreeSet<u64>,
+    /// Clients with an unresolved grant (pending or arrived-unfolded).
+    busy: BTreeSet<usize>,
+}
+
+impl AsyncBook {
+    /// Open a grant: lease `client` to worker `widx`. False (and a no-op)
+    /// when the grant id was already used or the client is busy.
+    pub fn grant(&mut self, grant: u64, client: usize, widx: usize, born_epoch: u64) -> bool {
+        if self.busy.contains(&client)
+            || self.pending.contains_key(&grant)
+            || self.arrived.contains(&grant)
+            || self.cut.contains(&grant)
+        {
+            return false;
+        }
+        self.pending.insert(grant, (client, widx, born_epoch));
+        self.busy.insert(client);
+        true
+    }
+
+    pub fn owner(&self, grant: u64) -> Option<usize> {
+        self.pending.get(&grant).map(|&(_, w, _)| w)
+    }
+
+    pub fn client_of(&self, grant: u64) -> Option<usize> {
+        self.pending.get(&grant).map(|&(c, _, _)| c)
+    }
+
+    pub fn born_epoch(&self, grant: u64) -> Option<u64> {
+        self.pending.get(&grant).map(|&(_, _, e)| e)
+    }
+
+    pub fn is_busy(&self, client: usize) -> bool {
+        self.busy.contains(&client)
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// All in-flight grant ids, ascending.
+    pub fn pending_ids(&self) -> Vec<u64> {
+        self.pending.keys().copied().collect()
+    }
+
+    /// In-flight grants currently owned by `widx`, ascending.
+    pub fn pending_of(&self, widx: usize) -> Vec<u64> {
+        self.pending
+            .iter()
+            .filter(|(_, &(_, w, _))| w == widx)
+            .map(|(&g, _)| g)
+            .collect()
+    }
+
+    /// Accept a push for `grant` from worker `widx` — the exactly-once
+    /// gate. True only when the grant is in flight and `widx` owns it.
+    /// The client stays busy until [`AsyncBook::release`].
+    pub fn accept(&mut self, grant: u64, widx: usize) -> bool {
+        match self.pending.get(&grant) {
+            Some(&(_, w, _)) if w == widx => {
+                self.pending.remove(&grant);
+                self.arrived.insert(grant);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Cut one in-flight grant (disconnect, malformed push, deadline).
+    /// Frees the client for a fresh grant. False when the grant already
+    /// arrived or was already cut.
+    pub fn cut(&mut self, grant: u64) -> bool {
+        let Some((client, _, _)) = self.pending.remove(&grant) else {
+            return false;
+        };
+        self.cut.insert(grant);
+        self.busy.remove(&client);
+        true
+    }
+
+    /// Cut every in-flight grant of `widx` (disconnect). Returns the cut
+    /// grant ids, ascending.
+    pub fn cut_pending_of(&mut self, widx: usize) -> Vec<u64> {
+        let lost = self.pending_of(widx);
+        for g in &lost {
+            self.cut(*g);
+        }
+        lost
+    }
+
+    /// A fold installed `grant`'s state: the arrival resolves and its
+    /// client may be granted again. False unless the grant was in the
+    /// arrived-unfolded set.
+    pub fn release(&mut self, grant: u64, client: usize) -> bool {
+        if !self.arrived.remove(&grant) {
+            return false;
+        }
+        self.busy.remove(&client);
+        true
+    }
+
+    /// All cut grant ids, ascending.
+    pub fn cuts(&self) -> Vec<u64> {
+        self.cut.iter().copied().collect()
+    }
+
+    /// Ledger invariants (property-tested): pending, arrived, and cut are
+    /// pairwise disjoint; every pending grant's client is busy.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for g in self.pending.keys() {
+            if self.arrived.contains(g) || self.cut.contains(g) {
+                return Err(format!("grant {g} pending and resolved"));
+            }
+        }
+        if let Some(g) = self.arrived.intersection(&self.cut).next() {
+            return Err(format!("grant {g} both arrived and cut"));
+        }
+        for (g, &(c, _, _)) in &self.pending {
+            if !self.busy.contains(&c) {
+                return Err(format!("grant {g} pending but client {c} not busy"));
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Per-round client-lease ledger: which worker owns each runnable
 /// client's lease, who arrived, who was cut. `net::server` dispatches,
 /// migrates, and folds through this, and the ledger enforces the
@@ -730,6 +1069,110 @@ mod tests {
         }
         // Determinism.
         assert_eq!(cut, s.apply_to_plan(&plan, false));
+    }
+
+    #[test]
+    fn discounted_weights_basics() {
+        // gamma = 1 disables the discount: plain normalized base weights.
+        let w = discounted_weights(&[160.0, 160.0, 320.0], &[0, 3, 1], 1.0);
+        assert_eq!(w[0].to_bits(), (160.0f64 / 640.0).to_bits());
+        assert_eq!(w[2].to_bits(), (320.0f64 / 640.0).to_bits());
+        // gamma < 1 discounts stale arrivals; weights still sum to 1.
+        let w = discounted_weights(&[100.0, 100.0], &[0, 2], 0.5);
+        assert!(w[1] < w[0], "staler arrival must weigh less");
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert_eq!(w[1].to_bits(), (25.0f64 / 125.0).to_bits());
+        // Determinism: bit-identical on re-derivation.
+        let a = discounted_weights(&[7.0, 11.0, 13.0], &[2, 0, 5], 0.9);
+        let b = discounted_weights(&[7.0, 11.0, 13.0], &[2, 0, 5], 0.9);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn async_book_exactly_once_and_serialization() {
+        let mut book = AsyncBook::default();
+        assert!(book.grant(0, 3, 0, 0));
+        assert!(book.grant(1, 5, 1, 0));
+        assert!(!book.grant(2, 3, 1, 0), "busy client refused a second grant");
+        assert!(!book.grant(0, 7, 1, 0), "grant id reuse refused");
+        assert_eq!(book.owner(0), Some(0));
+        assert_eq!(book.client_of(1), Some(5));
+        assert_eq!(book.born_epoch(1), Some(0));
+        // Wrong owner refused; right owner accepted exactly once.
+        assert!(!book.accept(0, 1));
+        assert!(book.accept(0, 0));
+        assert!(!book.accept(0, 0), "double push refused");
+        // Client stays busy until the fold releases it.
+        assert!(book.is_busy(3));
+        assert!(!book.grant(2, 3, 0, 1));
+        assert!(book.release(0, 3));
+        assert!(!book.release(0, 3), "double release refused");
+        assert!(!book.is_busy(3));
+        assert!(book.grant(2, 3, 0, 1), "released client grantable again");
+        // Disconnect cuts in-flight grants and frees their clients.
+        assert_eq!(book.cut_pending_of(1), vec![1]);
+        assert!(!book.is_busy(5));
+        assert!(!book.cut(1), "already-cut grant refused");
+        assert_eq!(book.cuts(), vec![1]);
+        book.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn async_trace_exactly_once_accounting() {
+        let g = |grant, client, born_epoch| AsyncGrant {
+            grant,
+            client,
+            steps: 4,
+            born_epoch,
+            seq_base: born_epoch * 4,
+        };
+        let ok = AsyncTrace {
+            k: 2,
+            gamma: 0.5,
+            grants: vec![g(0, 0, 0), g(1, 1, 0), g(2, 2, 0), g(3, 3, 0), g(4, 0, 1)],
+            folds: vec![
+                AsyncFold {
+                    epoch: 0,
+                    arrivals: vec![
+                        AsyncArrival { grant: 0, client: 0, staleness: 0, weight: 0.5 },
+                        AsyncArrival { grant: 2, client: 2, staleness: 0, weight: 0.5 },
+                    ],
+                },
+                AsyncFold {
+                    epoch: 1,
+                    arrivals: vec![
+                        AsyncArrival { grant: 1, client: 1, staleness: 1, weight: 0.5 },
+                        AsyncArrival { grant: 3, client: 3, staleness: 1, weight: 0.5 },
+                    ],
+                },
+            ],
+            cut: vec![4],
+        };
+        ok.check_exactly_once().unwrap();
+        assert_eq!(ok.total_folded(), 4);
+        assert_eq!(ok.total_cut(), 1);
+        assert_eq!(ok.staleness_max(), 1);
+        assert!((ok.staleness_mean() - 0.5).abs() < 1e-12);
+        assert_eq!(ok.grant(4).map(|g| g.client), Some(0));
+
+        // Double resolution (fold + cut) must be rejected.
+        let mut bad = ok.clone();
+        bad.cut.push(3);
+        assert!(bad.check_exactly_once().is_err());
+        // Unresolved grant must be rejected.
+        let mut bad = ok.clone();
+        bad.cut.clear();
+        assert!(bad.check_exactly_once().is_err());
+        // Non-canonical arrival order must be rejected.
+        let mut bad = ok.clone();
+        bad.folds[0].arrivals.swap(0, 1);
+        assert!(bad.check_exactly_once().is_err());
+        // Staleness inconsistent with born epoch must be rejected.
+        let mut bad = ok;
+        bad.folds[1].arrivals[0].staleness = 0;
+        assert!(bad.check_exactly_once().is_err());
     }
 
     #[test]

@@ -426,6 +426,153 @@ impl Federation {
         Ok(self.log.rounds.clone())
     }
 
+    /// Replay a realized **asynchronous** run (`net::Server::async_trace`)
+    /// in-process, bit for bit — the async analogue of
+    /// [`run_trace`](Federation::run_trace) and the keystone of the async
+    /// plane's determinism contract. The trace is a pure function of the
+    /// realized fleet: which grants were dispatched (with their frozen
+    /// `seq_base` and birth epoch), which arrivals each epoch folded (in
+    /// canonical ascending-grant order, with realized staleness and
+    /// discounted weight), and which grants were cut. Replay is then a
+    /// pure function of the trace bytes:
+    ///
+    /// 1. **Compute phase** — every grant *born* at the current epoch
+    ///    that the fleet eventually folded runs now, against exactly the
+    ///    global model it was dispatched with (the global only advances
+    ///    at fold commits). Cut grants are skipped entirely: their client
+    ///    state never advanced on the server. Advancing the node state
+    ///    here — possibly epochs before this grant folds — is invisible,
+    ///    because per-client serialization (a client stays leased until
+    ///    its arrival folds) means no other grant for the same client can
+    ///    intervene.
+    /// 2. **Fold phase** — the epoch's recorded arrivals are assembled in
+    ///    trace order and committed through
+    ///    [`commit_async_fold`](Federation::commit_async_fold), which
+    ///    re-derives and bitwise-verifies the discounted weights.
+    pub fn run_async_trace(
+        &mut self,
+        trace: &crate::chaos::AsyncTrace,
+    ) -> Result<Vec<RoundRecord>> {
+        anyhow::ensure!(
+            self.cfg.tiers == 1,
+            "async replay needs a flat (tiers = 1) config"
+        );
+        anyhow::ensure!(
+            self.next_round == 0,
+            "async replay must start from a fresh federation (next_round = {})",
+            self.next_round
+        );
+        trace.check_exactly_once()?;
+        self.emit_run_start();
+        let folded: std::collections::BTreeSet<u64> = trace
+            .folds
+            .iter()
+            .flat_map(|f| f.arrivals.iter().map(|a| a.grant))
+            .collect();
+        let schedule = self.cfg.schedule;
+        let lr_at = move |t: u64| schedule.lr(t);
+        let policy = self.cfg.opt_state;
+        let mut stash: std::collections::BTreeMap<u64, ClientUpdate> =
+            std::collections::BTreeMap::new();
+        for fold in &trace.folds {
+            let epoch = fold.epoch;
+            anyhow::ensure!(
+                epoch == self.next_round as u64,
+                "trace fold names epoch {epoch}, federation is at epoch {}",
+                self.next_round
+            );
+            // lint:allow(nondet-time): t0 only feeds the wall_secs column
+            #[allow(clippy::disallowed_methods)]
+            let t0 = Instant::now();
+            for g in trace.grants.iter().filter(|g| g.born_epoch == epoch) {
+                if !folded.contains(&g.grant) {
+                    continue;
+                }
+                self.emit(ObsEvent::LeaseGrant {
+                    round: g.grant,
+                    client: g.client as u64,
+                    worker: 0,
+                });
+                let node = &mut self.nodes[g.client];
+                let mut update = node
+                    .run_local_round(
+                        &self.model,
+                        &self.global,
+                        g.steps,
+                        g.seq_base,
+                        &lr_at,
+                        policy,
+                    )
+                    .with_context(|| {
+                        format!("client {} grant {} (async replay)", g.client, g.grant)
+                    })?;
+                if self.cfg.codec.is_lossy() {
+                    // The wire keys transit noise by the grant id (the v5
+                    // `round` field carries it), never the epoch.
+                    let seed =
+                        compress::transit_seed(self.cfg.seed, g.grant, g.client as u64);
+                    let transit = compress::encode_transit(
+                        &self.cfg.codec,
+                        &self.global,
+                        &update.params,
+                        seed,
+                        &mut node.residual,
+                    )?;
+                    if let Some(body) = &transit.body {
+                        update.params =
+                            compress::decode_transit(&self.cfg.codec, &self.global, body)?;
+                    }
+                    update.wire_bytes = transit.wire_bytes;
+                }
+                stash.insert(g.grant, update);
+            }
+            let mut updates = Vec::with_capacity(fold.arrivals.len());
+            let mut staleness = Vec::with_capacity(fold.arrivals.len());
+            let mut weights = Vec::with_capacity(fold.arrivals.len());
+            for a in &fold.arrivals {
+                let u = stash.remove(&a.grant).with_context(|| {
+                    format!("fold {epoch} names grant {} with no computed update", a.grant)
+                })?;
+                anyhow::ensure!(
+                    u.client_id == a.client,
+                    "grant {} computed client {}, trace says client {}",
+                    a.grant,
+                    u.client_id,
+                    a.client
+                );
+                self.emit(ObsEvent::LeaseFold {
+                    round: a.grant,
+                    client: a.client as u64,
+                    worker: 0,
+                });
+                updates.push(u);
+                staleness.push(a.staleness);
+                weights.push(a.weight);
+            }
+            self.emit(ObsEvent::AsyncFold {
+                epoch,
+                k: fold.arrivals.len() as u64,
+                clients: fold.arrivals.iter().map(|a| a.client as u64).collect(),
+                staleness_max: fold
+                    .arrivals
+                    .iter()
+                    .map(|a| a.staleness)
+                    .max()
+                    .unwrap_or(0),
+            });
+            self.commit_async_fold(
+                epoch as usize,
+                updates,
+                &staleness,
+                &weights,
+                trace.gamma,
+                t0,
+            )?;
+        }
+        self.emit(ObsEvent::Shutdown { rounds: self.next_round as u64 });
+        Ok(self.log.rounds.clone())
+    }
+
     /// Fold a round's client updates into the global model (Algorithm 1
     /// L.8–11): streaming aggregation, outer-optimizer step, metrics
     /// record, checkpoint. `updates` must be in sampled order and `round`
@@ -738,6 +885,133 @@ impl Federation {
                 // who folds, not what the federation's transit metric
                 // means. Member `wire_bytes` carry the subagg-measured
                 // worker→subagg leg.
+                let dense_frame = link::dense_frame_bytes(self.model.n_params());
+                let up: u64 = updates
+                    .iter()
+                    .map(|u| if u.wire_bytes > 0 { u.wire_bytes } else { dense_frame })
+                    .sum();
+                updates.len() as u64 * dense_frame + up
+            },
+            wall_secs: t0.elapsed().as_secs_f64(),
+        };
+        self.emit_commit(&rec);
+        self.log.push(rec.clone());
+        self.write_round_checkpoint()?;
+        Ok(rec)
+    }
+
+    /// Fold one **asynchronous epoch** into the global model: the async
+    /// analogue of [`Self::commit_round`]. `updates` are the K buffered
+    /// arrivals in canonical (ascending grant id) order; `staleness[i]`
+    /// counts how many epochs arrival `i`'s dispatch model lags this
+    /// commit; `weights` are the staleness-discounted fold weights the
+    /// server realized (`w_i · γ^staleness`, normalized to sum 1). Like
+    /// the tree plane's weight carry ([`Self::commit_round_folded`]),
+    /// the weights are **re-derived** here from `n_samples`, `staleness`
+    /// and `gamma` ([`crate::chaos::discounted_weights`]) and verified
+    /// bitwise before anything folds — a server whose discounting drifts
+    /// from the replay's fails loudly at commit, not silently at the
+    /// parity check.
+    ///
+    /// An async epoch is a full schedule round: the LR clock advances by
+    /// the nominal τ and the epoch counter by one, exactly as
+    /// `commit_round` does — the async plane changes *which* updates fold
+    /// and *how they are weighted*, never the outer-step bookkeeping.
+    pub fn commit_async_fold(
+        &mut self,
+        epoch: usize,
+        updates: Vec<ClientUpdate>,
+        staleness: &[u64],
+        weights: &[f64],
+        gamma: f64,
+        t0: Instant,
+    ) -> Result<RoundRecord> {
+        anyhow::ensure!(
+            epoch == self.next_round,
+            "commit_async_fold({epoch}) out of order: federation is at epoch {}",
+            self.next_round
+        );
+        anyhow::ensure!(
+            self.cfg.tiers == 1,
+            "async folds need a flat (tiers = 1) config"
+        );
+        anyhow::ensure!(!updates.is_empty(), "async fold with no arrivals");
+        anyhow::ensure!(
+            updates.len() == staleness.len() && updates.len() == weights.len(),
+            "{} updates, {} staleness entries, {} weights",
+            updates.len(),
+            staleness.len(),
+            weights.len()
+        );
+        let base: Vec<f64> = updates.iter().map(|u| u.n_samples).collect();
+        let want = crate::chaos::discounted_weights(&base, staleness, gamma);
+        for (i, (w, want)) in weights.iter().zip(&want).enumerate() {
+            anyhow::ensure!(
+                w.to_bits() == want.to_bits(),
+                "arrival {i}: carried discounted weight {w} != re-derived {want}"
+            );
+        }
+        self.seq_step += self.cfg.local_steps;
+        self.next_round += 1;
+
+        // Same one-pass fold as the sync plane; the discounted weights are
+        // already normalized, which `streaming_aggregate`'s internal
+        // normalization leaves untouched up to the identical sequential
+        // weight-sum division both planes perform.
+        let rows: Vec<&[f32]> = updates.iter().map(|u| u.params.as_slice()).collect();
+        let agg = streaming_aggregate(
+            &rows,
+            weights,
+            &self.global,
+            &mut self.scratch_mean,
+            &mut self.scratch_pg,
+            &mut self.scratch_agg,
+        );
+        let client_cosine_mean = mean_pairwise_cosine_from_gram(agg.k, &agg.gram);
+        drop(rows);
+        let pseudo_grad_norm = l2_norm(&self.scratch_pg);
+        self.outer.step(&mut self.global, &self.scratch_pg);
+
+        let losses: Vec<f64> = updates.iter().map(|u| u.loss_mean).collect();
+        let (loss_mean, loss_std) = mean_std(&losses);
+        let (nll, ppl) = self.eval_global()?;
+        let rec = RoundRecord {
+            round: epoch,
+            server_ppl: ppl,
+            server_nll: nll,
+            client_loss_mean: loss_mean,
+            client_loss_std: loss_std,
+            client_ppl_mean: loss_mean.exp(),
+            global_model_norm: l2_norm(&self.global),
+            client_model_norm_mean: mean_std(
+                &updates.iter().map(|u| u.model_norm).collect::<Vec<_>>(),
+            )
+            .0,
+            client_avg_norm: l2_norm(&self.scratch_mean),
+            pseudo_grad_norm,
+            step_grad_norm_mean: mean_std(
+                &updates.iter().map(|u| u.step_grad_norm_mean).collect::<Vec<_>>(),
+            )
+            .0,
+            applied_update_norm_mean: mean_std(
+                &updates
+                    .iter()
+                    .map(|u| u.applied_update_norm_mean)
+                    .collect::<Vec<_>>(),
+            )
+            .0,
+            act_norm_mean: mean_std(
+                &updates.iter().map(|u| u.act_norm_mean).collect::<Vec<_>>(),
+            )
+            .0,
+            momentum_norm: self.outer.momentum_norm(),
+            client_cosine_mean,
+            participated: updates.len(),
+            comm_bytes: link::round_bytes(self.model.n_params(), updates.len()),
+            comm_bytes_wire: {
+                // Same flat accounting as commit_round: one dense
+                // broadcast down per folded arrival plus its measured
+                // upload size.
                 let dense_frame = link::dense_frame_bytes(self.model.n_params());
                 let up: u64 = updates
                     .iter()

@@ -12,6 +12,7 @@
 //! (`make artifacts`); the analytic ones (`table1`–`table4`, `comm`) and
 //! the wall-clock simulation (`wallclock`) run artifact-free.
 
+pub mod async_agg;
 pub mod chaos;
 pub mod comm;
 pub mod common;
@@ -34,7 +35,7 @@ pub struct ExpInfo {
     pub what: &'static str,
 }
 
-pub const EXPERIMENTS: [ExpInfo; 22] = [
+pub const EXPERIMENTS: [ExpInfo; 23] = [
     ExpInfo { id: "table1", what: "token/step accounting (Chinchilla vs MPT vs seq/par)" },
     ExpInfo { id: "table2", what: "architecture ladder (paper + analogues)" },
     ExpInfo { id: "table3", what: "optimization hyperparameters" },
@@ -57,6 +58,7 @@ pub const EXPERIMENTS: [ExpInfo; 22] = [
     ExpInfo { id: "wallclock", what: "event-driven wall-clock: link ladder × τ × aggregation policy (§4.3)" },
     ExpInfo { id: "distributed", what: "deployment plane: TCP worker fleet bit-equals the in-process federation (§4.1)" },
     ExpInfo { id: "chaos", what: "resilience: seeded fault rate × migration sweep, chaotic fleet bit-equals its trace replay (§5)" },
+    ExpInfo { id: "async", what: "async staleness sweep: γ × fault rate × τ, buffered fleet bit-equals its ledger replay (§3)" },
 ];
 
 pub fn run(id: &str, args: &Args) -> Result<()> {
@@ -83,6 +85,7 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
         "wallclock" => fig_wallclock::fig_wallclock(args),
         "distributed" => distributed::distributed(args),
         "chaos" => chaos::chaos(args),
+        "async" => async_agg::exp_async(args),
         "all" => {
             for e in &EXPERIMENTS {
                 println!("\n################ {} ################", e.id);

@@ -17,12 +17,19 @@
 //! photon serve [same training flags] [--bind 0.0.0.0:7070] [--min-workers K]
 //!              [--deadline-secs F] [--stall-secs F] [--migrate]
 //!              [--no-compress] [--codec q8] [--event-log LOG]
+//!              [--async-agg K[:gamma]]
 //!              run the Aggregator as a TCP service (deployment plane);
 //!              --migrate reassigns a dead/silent worker's unstarted
-//!              clients to live workers before the deadline cut
+//!              clients to live workers before the deadline cut;
+//!              --async-agg drops the round barrier and folds the first
+//!              K arrivals per epoch at staleness discount γ
 //! photon exp chaos [--fleet W] [--rates 0,15,30,45] [--deadline-secs F]
 //!              seeded chaos sweep: fault rate × lease migration, with
 //!              bit-exact trace replay and sim-priced churn
+//! photon exp async [--fleet W] [--fold-k K] [--gammas 1.0,0.5]
+//!              [--rates 0,25] [--taus T1,T2] [--deadline-secs F]
+//!              buffered async sweep: staleness discount γ × fault rate × τ,
+//!              every fleet bit-equals its ledger replay
 //! photon worker --connect HOST:7070 [--name NAME]
 //!              run one LLM Node worker against a remote Aggregator
 //! photon subagg --upstream HOST:7070 [--bind 0.0.0.0:7071] [--name NAME]
@@ -80,6 +87,8 @@ const SPEC: Spec = Spec {
         "tiers", "upstream", "state-budget",
         // resilience plane (exp chaos)
         "rates",
+        // async aggregation plane (serve / exp async)
+        "async-agg", "fold-k", "gammas",
         // static-analysis plane (lint)
         "src", "explain",
     ],
@@ -291,6 +300,28 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--async-agg K[:gamma]` (e.g. `3` or `3:0.5`; γ defaults to 0.5,
+/// matching the sim policy spelling `async[:K[:gamma]]`).
+fn parse_async_agg(v: Option<&str>) -> Result<Option<(usize, f64)>> {
+    let Some(v) = v else { return Ok(None) };
+    let (k_tok, gamma_tok) = match v.split_once(':') {
+        Some((k, g)) => (k, Some(g)),
+        None => (v, None),
+    };
+    let k: usize = k_tok
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--async-agg expects K[:gamma], got {v:?}"))?;
+    let gamma: f64 = match gamma_tok {
+        None => 0.5,
+        Some(g) => g
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--async-agg expects K[:gamma], got {v:?}"))?,
+    };
+    Ok(Some((k, gamma)))
+}
+
 /// `photon serve`: run the Aggregator as a TCP service (deployment plane).
 /// Same training flags as `photon train`; identical config + seed produces
 /// a bit-identical run, just executed by remote workers.
@@ -324,6 +355,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             0 => None,
             b => Some(b),
         },
+        async_agg: parse_async_agg(args.get("async-agg"))?,
         ..ServeOpts::default()
     };
     let mut fed = Federation::new(cfg)?;

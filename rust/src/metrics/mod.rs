@@ -262,6 +262,67 @@ pub fn write_resilience_csv(path: &Path, rows: &[ResilienceRow]) -> Result<()> {
     w.finish()
 }
 
+/// One cell of the `photon exp async` staleness sweep: an asynchronous
+/// loopback fleet at one (γ, fault-rate, τ) setting, its realized
+/// staleness profile, the bit-parity verdict of the in-process
+/// `Federation::run_async_trace` replay, and the wall-clock the
+/// simulator prices for the same schedule under the async vs semi-sync
+/// policies.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AsyncRow {
+    /// Staleness discount base (fold weight `w·γ^staleness`).
+    pub gamma: f64,
+    /// Aggregate per-(worker, round) fault probability, in percent.
+    pub fault_pct: f64,
+    /// Local steps per grant (τ).
+    pub tau: u64,
+    /// Arrivals folded per epoch (the async K).
+    pub k: usize,
+    pub final_ppl: f64,
+    pub final_nll: f64,
+    /// Committed epochs (= folds) and grants cut over the run.
+    pub folds: usize,
+    pub cuts: usize,
+    /// Realized staleness profile across every folded arrival.
+    pub staleness_max: u64,
+    pub staleness_mean: f64,
+    /// 1 when the fleet's records + global model bit-equal the in-process
+    /// replay of its realized trace (`Federation::run_async_trace`).
+    pub replay_agree: bool,
+    /// Simulated wall-clock of the same schedule: async vs semi-sync.
+    pub sim_async_secs: f64,
+    pub sim_semisync_secs: f64,
+}
+
+pub const ASYNC_CSV_HEADER: [&str; 13] = [
+    "gamma", "fault_pct", "tau", "k", "final_ppl", "final_nll", "folds", "cuts",
+    "staleness_max", "staleness_mean", "replay_agree", "sim_async_secs",
+    "sim_semisync_secs",
+];
+
+/// Write the async staleness sweep CSV (`results/async/staleness.csv`).
+pub fn write_async_csv(path: &Path, rows: &[AsyncRow]) -> Result<()> {
+    let mut w = CsvWriter::create(path, &ASYNC_CSV_HEADER)?;
+    for r in rows {
+        w.row_mixed(&[
+            format!("{:.3}", r.gamma),
+            format!("{:.1}", r.fault_pct),
+            r.tau.to_string(),
+            r.k.to_string(),
+            format!("{:.6}", r.final_ppl),
+            format!("{:.6}", r.final_nll),
+            r.folds.to_string(),
+            r.cuts.to_string(),
+            r.staleness_max.to_string(),
+            format!("{:.4}", r.staleness_mean),
+            (r.replay_agree as u8).to_string(),
+            format!("{:.3}", r.sim_async_secs),
+            format!("{:.3}", r.sim_semisync_secs),
+        ])?;
+    }
+    w.finish()
+}
+
 /// Mean + population std of a slice.
 pub fn mean_std(xs: &[f64]) -> (f64, f64) {
     if xs.is_empty() {
@@ -455,6 +516,35 @@ mod tests {
         let row = text.lines().nth(1).unwrap();
         assert!(row.starts_with("25.0,1,semisync,41.25"), "{row}");
         assert!(row.contains(",7,3,2,1,"), "{row}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn async_csv_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("photon_as_{}", std::process::id()));
+        let rows = vec![AsyncRow {
+            gamma: 0.5,
+            fault_pct: 15.0,
+            tau: 6,
+            k: 3,
+            final_ppl: 39.5,
+            final_nll: 3.676,
+            folds: 5,
+            cuts: 2,
+            staleness_max: 3,
+            staleness_mean: 0.8,
+            replay_agree: true,
+            sim_async_secs: 45.5,
+            sim_semisync_secs: 61.25,
+        }];
+        let p = dir.join("staleness.csv");
+        write_async_csv(&p, &rows).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.starts_with("gamma,fault_pct,tau,k"), "{text}");
+        let row = text.lines().nth(1).unwrap();
+        assert!(row.starts_with("0.500,15.0,6,3,39.5"), "{row}");
+        assert!(row.contains(",5,2,3,0.8000,1,"), "{row}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -70,6 +70,14 @@ pub struct FleetOpts {
     pub chaos: Option<chaos::Schedule>,
     /// Opt-in mid-round client-lease migration (requires a deadline).
     pub migrate: bool,
+    /// Buffered **asynchronous** aggregation `(k, gamma)`: the server
+    /// folds the first `k` arrivals of each epoch with staleness-
+    /// discounted weights (`w·γ^staleness`) and re-leases finished
+    /// workers immediately — no round barrier. Flat fleets only
+    /// (`subaggs == 0`); the realized run comes back as
+    /// [`FleetReport::async_trace`], replayable bit-exactly with
+    /// `Federation::run_async_trace`.
+    pub async_agg: Option<(usize, f64)>,
     /// Checkpoint directory for the server federation.
     pub ckpt_dir: Option<PathBuf>,
     /// Resume the server from the latest checkpoint in `ckpt_dir`.
@@ -95,6 +103,7 @@ impl Default for FleetOpts {
             die_at_round: BTreeMap::new(),
             chaos: None,
             migrate: false,
+            async_agg: None,
             ckpt_dir: None,
             resume: false,
             watchdog_secs: Some(600.0),
@@ -116,6 +125,10 @@ pub struct FleetReport {
     /// The full realized chaos trace (cuts + migrations + rejoins),
     /// replayable bit-exactly with `Federation::run_trace`.
     pub trace: chaos::Trace,
+    /// The realized async ledger (grants, folds, cuts) when the fleet ran
+    /// with [`FleetOpts::async_agg`]; replayable bit-exactly with
+    /// `Federation::run_async_trace`. `None` for sync fleets.
+    pub async_trace: Option<chaos::AsyncTrace>,
     /// Per logical worker, merged across its crash/rejoin sessions.
     pub workers: Vec<WorkerReport>,
     /// Per sub-aggregator (empty for a flat fleet).
@@ -248,6 +261,16 @@ pub fn run_loopback(
         opts.workers,
         opts.subaggs
     );
+    anyhow::ensure!(
+        opts.async_agg.is_none() || opts.subaggs == 0,
+        "async aggregation is flat-only: it has no round barrier for a tree \
+         to slice"
+    );
+    anyhow::ensure!(
+        opts.async_agg.is_none() || !opts.resume,
+        "async aggregation does not support checkpoint resume: the replay \
+         trace must start from epoch 0"
+    );
     if let Some(schedule) = &opts.chaos {
         anyhow::ensure!(
             schedule.workers >= opts.workers,
@@ -284,6 +307,7 @@ pub fn run_loopback(
         migrate: opts.migrate,
         compress: opts.compress,
         state_budget: opts.state_budget,
+        async_agg: opts.async_agg,
         ..ServeOpts::default()
     };
     let mut server = Server::with_federation(fed, serve)?;
@@ -459,6 +483,7 @@ pub fn run_loopback(
         global: server.federation().global.clone(),
         cuts: server.cuts.clone(),
         trace: server.trace(),
+        async_trace: server.async_trace(),
         workers: workers.into_iter().map(|w| w.unwrap_or_default()).collect(),
         subaggs: subagg_reports.into_iter().map(|s| s.unwrap_or_default()).collect(),
         worker_errors,

@@ -67,7 +67,14 @@ use crate::optim::schedule::CosineSchedule;
 /// bookkeeping upstream, and `AssignTask.state` becomes tagged
 /// ([`AssignState`]): `Full` carries the client checkpoint, `Ref` names a
 /// generation the worker already holds so idle clients cost 9 bytes.
-pub const PROTO_VERSION: u16 = 4;
+/// v5: buffered async aggregation — `RoundAssign` carries `lease_epoch`
+/// (the server's committed-fold count at dispatch) and `UpdatePush`
+/// echoes it back, so the async server can derive an arrival's staleness
+/// (`fold_epoch - lease_epoch`) without trusting worker clocks. In async
+/// mode the `round` field carries the globally unique grant id (the LR
+/// schedule reads `seq_base`, never `round`). Sync/tree paths set
+/// `lease_epoch = round` and ignore it on receipt.
+pub const PROTO_VERSION: u16 = 5;
 
 /// Refuse to read frames larger than this from a socket (corruption guard;
 /// generous enough for a 7B-analogue f32 payload plus KeepOpt moments).
@@ -157,9 +164,15 @@ pub struct AssignTask {
 #[derive(Clone, Debug, PartialEq)]
 pub struct RoundAssign {
     pub session: u64,
+    /// Round number — or, on the async plane, the globally unique grant
+    /// id (proto v5; the LR schedule reads `seq_base`, never this).
     pub round: u64,
     /// Cumulative sequential steps at round start (LR-schedule base).
     pub seq_base: u64,
+    /// Server epoch (committed-fold count) at dispatch (proto v5). The
+    /// async server derives staleness from its echo; sync paths set it
+    /// to the round number and ignore it.
+    pub lease_epoch: u64,
     /// This worker's share of the sampled clients, in slot order.
     pub tasks: Vec<AssignTask>,
     pub global: Vec<f32>,
@@ -169,7 +182,11 @@ pub struct RoundAssign {
 #[derive(Clone, Debug)]
 pub struct UpdatePush {
     pub session: u64,
+    /// Round number — or the grant id on the async plane (proto v5).
     pub round: u64,
+    /// Echo of the assignment's `lease_epoch` (proto v5) — the async
+    /// server's staleness anchor.
+    pub lease_epoch: u64,
     /// Metrics + (for the lossless codecs) dense params. When `body` is
     /// `Some`, `update.params` is empty on the wire and the server
     /// reconstructs it by decoding the coded delta against its global
@@ -461,6 +478,7 @@ impl Msg {
                 e.u64(m.session);
                 e.u64(m.round);
                 e.u64(m.seq_base);
+                e.u64(m.lease_epoch);
                 e.u64(m.tasks.len() as u64);
                 for t in &m.tasks {
                     e.u64(t.client);
@@ -472,6 +490,7 @@ impl Msg {
             Msg::UpdatePush(m) => {
                 e.u64(m.session);
                 e.u64(m.round);
+                e.u64(m.lease_epoch);
                 enc_update(&mut e, &m.update);
                 e.client(&m.state);
                 match &m.body {
@@ -541,6 +560,7 @@ impl Msg {
                 let session = d.u64()?;
                 let round = d.u64()?;
                 let seq_base = d.u64()?;
+                let lease_epoch = d.u64()?;
                 let n = d.u64()? as usize;
                 // 25 = minimum encoded AssignTask (ids + tag + state ref).
                 let mut tasks = Vec::with_capacity(d.capacity_hint(n, 25));
@@ -552,11 +572,19 @@ impl Msg {
                     });
                 }
                 let global = d.f32s()?;
-                Msg::RoundAssign(RoundAssign { session, round, seq_base, tasks, global })
+                Msg::RoundAssign(RoundAssign {
+                    session,
+                    round,
+                    seq_base,
+                    lease_epoch,
+                    tasks,
+                    global,
+                })
             }
             MsgKind::UpdatePush => {
                 let session = d.u64()?;
                 let round = d.u64()?;
+                let lease_epoch = d.u64()?;
                 let update = dec_update(&mut d)?;
                 let state = d.client()?;
                 let body = match d.u8()? {
@@ -564,7 +592,7 @@ impl Msg {
                     1 => Some(d.bytes()?),
                     t => bail!("unknown update-payload tag {t}"),
                 };
-                Msg::UpdatePush(UpdatePush { session, round, update, body, state })
+                Msg::UpdatePush(UpdatePush { session, round, lease_epoch, update, body, state })
             }
             MsgKind::Heartbeat => {
                 Msg::Heartbeat(Heartbeat { session: d.u64()?, round: d.u64()? })
@@ -722,6 +750,7 @@ mod tests {
             session: 7,
             round: 3,
             seq_base: 120,
+            lease_epoch: 9,
             tasks: vec![
                 AssignTask { client: 1, steps: 40, state: AssignState::Full(toy_state()) },
                 AssignTask { client: 5, steps: 20, state: AssignState::Ref(7) },
@@ -732,6 +761,7 @@ mod tests {
             match roundtrip(&msg, compress) {
                 Msg::RoundAssign(b) => {
                     assert_eq!(b.round, 3);
+                    assert_eq!(b.lease_epoch, 9, "lease epoch survives the wire (v5)");
                     assert_eq!(b.tasks.len(), 2);
                     assert_eq!(b.tasks[1].client, 5);
                     assert_eq!(b.tasks[0].state, AssignState::Full(toy_state()));
@@ -753,6 +783,7 @@ mod tests {
             session: 1,
             round: 0,
             seq_base: 0,
+            lease_epoch: 0,
             tasks: vec![AssignTask {
                 client: 1,
                 steps: 40,
@@ -764,6 +795,7 @@ mod tests {
             session: 1,
             round: 0,
             seq_base: 0,
+            lease_epoch: 0,
             tasks: vec![AssignTask { client: 1, steps: 40, state: AssignState::Ref(3) }],
             global: Vec::new(),
         });
@@ -797,12 +829,14 @@ mod tests {
         let msg = Msg::UpdatePush(UpdatePush {
             session: 1,
             round: 0,
+            lease_epoch: 5,
             update: u.clone(),
             body: None,
             state: toy_state(),
         });
         match roundtrip(&msg, true) {
             Msg::UpdatePush(b) => {
+                assert_eq!(b.lease_epoch, 5, "lease-epoch echo survives the wire (v5)");
                 assert_eq!(b.update.params, u.params, "f32 payload must be lossless");
                 assert_eq!(b.update.n_samples.to_bits(), u.n_samples.to_bits());
                 assert_eq!(b.update.loss_mean.to_bits(), u.loss_mean.to_bits());
@@ -823,6 +857,7 @@ mod tests {
         let msg = Msg::UpdatePush(UpdatePush {
             session: 3,
             round: 2,
+            lease_epoch: 2,
             update: u,
             body: Some(coded.clone()),
             state: toy_state(),

@@ -115,6 +115,17 @@ pub struct ServeOpts {
     /// federation's own states (no second resident copy) and the store
     /// merely tracks the generations behind `AssignState::Ref`.
     pub state_budget: Option<u64>,
+    /// Buffered asynchronous aggregation (`Some((k, gamma))`): drop the
+    /// global round barrier and fold the first `k` arriving updates with
+    /// staleness-discounted weights ([`chaos::discounted_weights`]),
+    /// immediately re-leasing finished clients. Each commit is one
+    /// **epoch**; `cfg.rounds` bounds the epoch count. Flat federations
+    /// only (`cfg.tiers == 1`), incompatible with `migrate` (a grant is
+    /// pinned to the worker that computes it), and requires
+    /// `k <= cfg.n_clients` (a fold needs `k` distinct in-flight
+    /// clients). The realized run is recorded in [`Server::async_trace`]
+    /// and replays bit-exactly via `Federation::run_async_trace`.
+    pub async_agg: Option<(usize, f64)>,
 }
 
 impl Default for ServeOpts {
@@ -129,6 +140,7 @@ impl Default for ServeOpts {
             io_timeout_secs: 30.0,
             stall_secs: 3600.0,
             state_budget: None,
+            async_agg: None,
         }
     }
 }
@@ -174,6 +186,12 @@ pub struct Server {
     pub rejoins: Vec<(usize, usize)>,
     /// Flaked (framed-but-undecodable) frames dropped, for diagnostics.
     pub malformed_frames: u64,
+    /// Async-plane ledgers (`ServeOpts::async_agg`): every grant
+    /// dispatched, every fold committed, every grant cut — assembled into
+    /// the replayable [`chaos::AsyncTrace`] by [`Server::async_trace`].
+    async_grants: Vec<chaos::AsyncGrant>,
+    async_folds: Vec<chaos::AsyncFold>,
+    async_cuts: Vec<u64>,
 }
 
 impl Server {
@@ -185,6 +203,27 @@ impl Server {
                 opts.deadline_secs.is_some(),
                 "--migrate needs a per-round deadline (--deadline-secs) to bound \
                  the migration window"
+            );
+        }
+        if let Some((k, gamma)) = opts.async_agg {
+            anyhow::ensure!(
+                fed.cfg.tiers == 1,
+                "async aggregation is flat-mode only (tiers = {}): a grant's \
+                 arrival order is the fold order, which a sub-aggregator tier \
+                 would re-batch",
+                fed.cfg.tiers
+            );
+            anyhow::ensure!(!opts.migrate, "async aggregation does not migrate leases");
+            anyhow::ensure!(k >= 1, "async fold size k must be >= 1");
+            anyhow::ensure!(
+                k <= fed.cfg.n_clients,
+                "async fold size k = {k} exceeds the {} clients available \
+                 (a fold needs k distinct in-flight clients)",
+                fed.cfg.n_clients
+            );
+            anyhow::ensure!(
+                gamma > 0.0 && gamma <= 1.0,
+                "staleness discount gamma must be in (0, 1], got {gamma}"
             );
         }
         anyhow::ensure!(
@@ -221,6 +260,9 @@ impl Server {
             migrations: Vec::new(),
             rejoins: Vec::new(),
             malformed_frames: 0,
+            async_grants: Vec::new(),
+            async_folds: Vec::new(),
+            async_cuts: Vec::new(),
         })
     }
 
@@ -271,6 +313,21 @@ impl Server {
             entry(&mut rounds, *r).rejoined.push(*s);
         }
         chaos::Trace { rounds: rounds.into_values().collect() }
+    }
+
+    /// The realized async-plane trace of this run (grants, folds,
+    /// staleness, discounted weights, cuts) — `None` unless the server
+    /// ran with `ServeOpts::async_agg`. Replayable bit-exactly with
+    /// `Federation::run_async_trace`.
+    pub fn async_trace(&self) -> Option<chaos::AsyncTrace> {
+        let (k, gamma) = self.opts.async_agg?;
+        Some(chaos::AsyncTrace {
+            k,
+            gamma,
+            grants: self.async_grants.clone(),
+            folds: self.async_folds.clone(),
+            cut: self.async_cuts.clone(),
+        })
     }
 
     /// The task spec shipped to joining workers: everything a stateless
@@ -481,6 +538,9 @@ impl Server {
             }
         }
 
+        if self.opts.async_agg.is_some() {
+            return self.serve_async(rx, workers);
+        }
         while self.fed.next_round < self.fed.cfg.rounds {
             self.serve_round(rx, workers)?;
         }
@@ -563,12 +623,425 @@ impl Server {
             session: self.session,
             round: d.round as u64,
             seq_base: d.seq_base,
+            // Sync rounds pin the lease epoch to the round number (v5);
+            // only the async plane gives it independent meaning.
+            lease_epoch: d.round as u64,
             tasks,
             global: self.fed.global.clone(),
         });
         if proto::write_msg(&mut workers[widx].stream, &msg, self.opts.compress).is_err() {
             workers[widx].alive = false;
         }
+        Ok(())
+    }
+
+    /// Dispatch one async grant (a single-client work order) to worker
+    /// `widx`. The wire `round` field carries the grant id and
+    /// `lease_epoch` the dispatch epoch (proto v5); `seq_base` was frozen
+    /// into the grant at creation so replay needs no server clock.
+    fn send_grant(
+        &mut self,
+        workers: &mut [WorkerConn],
+        widx: usize,
+        g: &chaos::AsyncGrant,
+    ) -> Result<()> {
+        let state = self.assign_state(&mut workers[widx], g.client)?;
+        let msg = Msg::RoundAssign(RoundAssign {
+            session: self.session,
+            round: g.grant,
+            seq_base: g.seq_base,
+            lease_epoch: g.born_epoch,
+            tasks: vec![AssignTask { client: g.client as u64, steps: g.steps, state }],
+            global: self.fed.global.clone(),
+        });
+        if proto::write_msg(&mut workers[widx].stream, &msg, self.opts.compress).is_err() {
+            workers[widx].alive = false;
+        }
+        Ok(())
+    }
+
+    /// Cut one in-flight async grant (disconnect, malformed push, or
+    /// deadline). The client's server-owned state is untouched — the
+    /// dropped-client semantics — and every connection's generation claim
+    /// for it is dropped so its next grant ships Full, never a `Ref` into
+    /// a diverged worker cache.
+    fn cut_grant(
+        &mut self,
+        workers: &mut [WorkerConn],
+        book: &mut chaos::AsyncBook,
+        grants: &BTreeMap<u64, chaos::AsyncGrant>,
+        grant: u64,
+    ) {
+        if !book.cut(grant) {
+            return;
+        }
+        if let Some(g) = grants.get(&grant) {
+            for w in workers.iter_mut() {
+                w.gens.remove(&g.client);
+            }
+            self.emit(ObsEvent::Cut {
+                round: self.fed.next_round as u64,
+                clients: vec![g.client as u64],
+            });
+        }
+    }
+
+    /// Close one async epoch: drain the `k` buffered arrivals in
+    /// canonical (ascending grant id) order, fold them with staleness-
+    /// discounted weights, install the folded states, release their
+    /// clients for fresh grants, and broadcast the commit.
+    fn commit_async(
+        &mut self,
+        workers: &mut [WorkerConn],
+        book: &mut chaos::AsyncBook,
+        grants: &BTreeMap<u64, chaos::AsyncGrant>,
+        buffer: &mut BTreeMap<u64, (ClientUpdate, ClientCkpt)>,
+        k: usize,
+        gamma: f64,
+        t_epoch: &mut Instant,
+    ) -> Result<()> {
+        let epoch = self.fed.next_round as u64;
+        // BTreeMap iteration order IS the canonical fold order.
+        let keys: Vec<u64> = buffer.keys().copied().take(k).collect();
+        let mut entries = Vec::with_capacity(keys.len());
+        for key in keys {
+            let v = buffer.remove(&key).expect("key just listed");
+            entries.push((key, v));
+        }
+        let staleness: Vec<u64> = entries
+            .iter()
+            .map(|(g, _)| {
+                let born = grants.get(g).map(|gr| gr.born_epoch).unwrap_or(epoch);
+                epoch.saturating_sub(born)
+            })
+            .collect();
+        let base: Vec<f64> = entries.iter().map(|(_, (u, _))| u.n_samples).collect();
+        let weights = chaos::discounted_weights(&base, &staleness, gamma);
+        let arrivals: Vec<chaos::AsyncArrival> = entries
+            .iter()
+            .zip(staleness.iter().zip(&weights))
+            .map(|((g, (u, _)), (&s, &w))| chaos::AsyncArrival {
+                grant: *g,
+                client: u.client_id,
+                staleness: s,
+                weight: w,
+            })
+            .collect();
+        self.emit(ObsEvent::AsyncFold {
+            epoch,
+            k: arrivals.len() as u64,
+            clients: arrivals.iter().map(|a| a.client as u64).collect(),
+            staleness_max: staleness.iter().copied().max().unwrap_or(0),
+        });
+        self.async_folds.push(chaos::AsyncFold { epoch, arrivals });
+        let mut updates: Vec<ClientUpdate> = Vec::with_capacity(entries.len());
+        for (g, (update, state)) in entries {
+            self.fed
+                .restore_client_state(update.client_id, &state)
+                .with_context(|| format!("installing client {} state", update.client_id))?;
+            if !book.release(g, update.client_id) {
+                bail!("async ledger lost the arrival backing grant {g}");
+            }
+            updates.push(update);
+        }
+        let rec = self.fed.commit_async_fold(
+            epoch as usize,
+            updates,
+            &staleness,
+            &weights,
+            gamma,
+            *t_epoch,
+        )?;
+        *t_epoch = Instant::now();
+        println!(
+            "[serve] epoch {:>3}  server_ppl {:>9.3}  folded {}  staleness_max {}",
+            rec.round,
+            rec.server_ppl,
+            rec.participated,
+            self.async_folds
+                .last()
+                .map(|f| f.arrivals.iter().map(|a| a.staleness).max().unwrap_or(0))
+                .unwrap_or(0),
+        );
+        obs::timing("serve", &format!("epoch {}", rec.round), rec.wall_secs);
+        let commit = Msg::RoundCommit(RoundCommit {
+            round: rec.round as u64,
+            participated: rec.participated as u64,
+            global_norm: rec.global_model_norm,
+        });
+        for w in workers.iter_mut().filter(|w| w.alive) {
+            if proto::write_msg(&mut w.stream, &commit, false).is_err() {
+                w.alive = false;
+            }
+        }
+        Ok(())
+    }
+
+    /// Buffered asynchronous aggregation (`ServeOpts::async_agg`): no
+    /// round barrier. The server keeps up to `max(k, live_workers)`
+    /// single-client grants in flight (round-robin over the non-busy
+    /// clients — the per-round sampler is not consulted), buffers the
+    /// arriving updates, and commits an epoch the moment `k` of them are
+    /// buffered. A client whose grant is buffered stays busy until the
+    /// fold installs its advanced state (per-client serialization — a
+    /// concurrent second grant would ship a stale state and break the
+    /// replay contract). Crashed, malformed, and deadline-expired grants
+    /// are cut (server state untouched) and their clients re-granted
+    /// fresh at the current epoch. Runs until `cfg.rounds` epochs commit;
+    /// grants still in flight at that point are cut into the trace.
+    fn serve_async(
+        &mut self,
+        rx: &Receiver<Event>,
+        workers: &mut Vec<WorkerConn>,
+    ) -> Result<()> {
+        let Some((k, gamma)) = self.opts.async_agg else {
+            bail!("serve_async without ServeOpts::async_agg");
+        };
+        let n_clients = self.fed.cfg.n_clients;
+        let steps = self.fed.cfg.local_steps;
+        let mut book = chaos::AsyncBook::default();
+        // Every grant ever dispatched, by id (steps/epoch lookups).
+        let mut grants: BTreeMap<u64, chaos::AsyncGrant> = BTreeMap::new();
+        // Accepted-but-unfolded arrivals, keyed by grant id.
+        let mut buffer: BTreeMap<u64, (ClientUpdate, ClientCkpt)> = BTreeMap::new();
+        let mut dispatch_at: BTreeMap<u64, Instant> = BTreeMap::new();
+        let mut next_grant: u64 = 0;
+        let mut cursor: usize = 0;
+        let mut t_epoch = Instant::now();
+
+        while self.fed.next_round < self.fed.cfg.rounds {
+            self.await_live_worker(rx, workers, self.fed.next_round)?;
+            // Top up the in-flight pool.
+            loop {
+                let live: Vec<usize> =
+                    (0..workers.len()).filter(|&i| workers[i].alive).collect();
+                if live.is_empty()
+                    || book.pending_count() + buffer.len() >= k.max(live.len())
+                {
+                    break;
+                }
+                // Next non-busy client, round-robin; all busy ⇒ the pool
+                // is as full as the client population allows.
+                let Some(client) = (0..n_clients)
+                    .map(|_| {
+                        let c = cursor % n_clients;
+                        cursor += 1;
+                        c
+                    })
+                    .find(|&c| !book.is_busy(c))
+                else {
+                    break;
+                };
+                // Least-loaded live worker (ties → lowest slot).
+                let widx = live
+                    .iter()
+                    .copied()
+                    .min_by_key(|&w| (book.pending_of(w).len(), w))
+                    .expect("live is non-empty");
+                let g = chaos::AsyncGrant {
+                    grant: next_grant,
+                    client,
+                    steps,
+                    born_epoch: self.fed.next_round as u64,
+                    seq_base: self.fed.seq_step,
+                };
+                next_grant += 1;
+                if !book.grant(g.grant, client, widx, g.born_epoch) {
+                    bail!("async ledger refused fresh grant {}", g.grant);
+                }
+                grants.insert(g.grant, g);
+                self.async_grants.push(g);
+                dispatch_at.insert(g.grant, Instant::now());
+                self.emit(ObsEvent::LeaseGrant {
+                    round: g.grant,
+                    client: client as u64,
+                    worker: widx as u64,
+                });
+                self.send_grant(workers, widx, &g)?;
+                if !workers[widx].alive {
+                    // The write failed — the grant never reached a worker.
+                    self.cut_grant(workers, &mut book, &grants, g.grant);
+                    dispatch_at.remove(&g.grant);
+                }
+            }
+
+            let now = Instant::now();
+            let deadline = self.opts.deadline_secs.map(Duration::from_secs_f64);
+            if let Some(dl) = deadline {
+                // Per-grant deadline, measured from dispatch.
+                let expired: Vec<u64> = book
+                    .pending_ids()
+                    .into_iter()
+                    .filter(|g| {
+                        dispatch_at.get(g).is_some_and(|&t| now >= t + dl)
+                    })
+                    .collect();
+                if !expired.is_empty() {
+                    for g in expired {
+                        println!(
+                            "[serve] async: grant {g} pending past the deadline — \
+                             cutting"
+                        );
+                        self.cut_grant(workers, &mut book, &grants, g);
+                        dispatch_at.remove(&g);
+                    }
+                    continue; // top-up re-grants the freed clients
+                }
+            }
+            let timer = deadline.and_then(|dl| {
+                book.pending_ids()
+                    .into_iter()
+                    .filter_map(|g| dispatch_at.get(&g).map(|&t| t + dl))
+                    .min()
+            });
+            let timeout = match timer {
+                Some(t) => t.saturating_duration_since(now),
+                None => Duration::from_secs_f64(self.opts.stall_secs),
+            };
+            match rx.recv_timeout(timeout) {
+                Ok(Event::Joined { conn, stream, join, sub }) => {
+                    // Fresh joins and identity rejoins both just enlarge
+                    // the live pool: a crashed worker's grants were cut at
+                    // disconnect, so there is nothing to reclaim — the
+                    // next top-up hands the rejoined worker fresh grants.
+                    let _ = self.admit_or_rejoin(workers, conn, stream, join, sub);
+                }
+                Ok(Event::Frame { conn, msg }) => match msg {
+                    Msg::UpdatePush(p) if p.session == self.session => {
+                        let grant = p.round;
+                        let Some(widx) = workers.iter().position(|w| w.conn == conn)
+                        else {
+                            continue;
+                        };
+                        let client = p.update.client_id;
+                        // Same cache hygiene as the sync path: any push
+                        // overwrote the sender's local state copy; only an
+                        // accepted push re-establishes the claim.
+                        workers[widx].gens.remove(&client);
+                        if book.owner(grant) != Some(widx) {
+                            continue; // stale/duplicate push — exactly-once
+                        }
+                        let Some(g) = grants.get(&grant).copied() else {
+                            continue;
+                        };
+                        // Decode-then-fold plus the v5 echo checks: the
+                        // push must name the granted client and echo the
+                        // dispatch epoch.
+                        let codec = self.fed.cfg.codec;
+                        let mut update = p.update;
+                        let reconstructed: Option<u64> = match (codec.is_lossy(), &p.body)
+                        {
+                            (false, None) => {
+                                Some(crate::link::dense_frame_bytes(update.params.len()))
+                            }
+                            (true, Some(body)) if update.params.is_empty() => {
+                                match crate::compress::decode_transit(
+                                    &codec,
+                                    &self.fed.global,
+                                    body,
+                                ) {
+                                    Ok(params) => {
+                                        update.params = params;
+                                        Some(crate::link::framed_bytes(body.len()))
+                                    }
+                                    Err(_) => None,
+                                }
+                            }
+                            _ => None,
+                        };
+                        let ok = reconstructed.is_some()
+                            && update.params.len() == self.fed.global.len()
+                            && client == g.client
+                            && p.lease_epoch == g.born_epoch
+                            && self.fed.check_client_state(client, &p.state).is_ok();
+                        if !ok {
+                            self.cut_grant(workers, &mut book, &grants, grant);
+                            dispatch_at.remove(&grant);
+                            continue;
+                        }
+                        update.wire_bytes = reconstructed.unwrap_or(0);
+                        if book.accept(grant, widx) {
+                            dispatch_at.remove(&grant);
+                            let gen = self.store.put(client, &p.state)?;
+                            workers[widx].gens.insert(client, gen);
+                            self.emit(ObsEvent::LeaseFold {
+                                round: grant,
+                                client: client as u64,
+                                worker: widx as u64,
+                            });
+                            buffer.insert(grant, (update, p.state));
+                        }
+                    }
+                    // Heartbeats, stale-session pushes.
+                    _ => {}
+                },
+                Ok(Event::Malformed { conn }) => {
+                    self.malformed_frames += 1;
+                    let widx = workers.iter().position(|w| w.conn == conn);
+                    let who = widx.map(|w| workers[w].name.as_str()).unwrap_or("?");
+                    println!(
+                        "[serve] epoch {}: dropped undecodable frame from {who:?}",
+                        self.fed.next_round
+                    );
+                    self.emit(ObsEvent::Malformed {
+                        round: self.fed.next_round as u64,
+                        worker: widx.map(|w| w as u64),
+                    });
+                }
+                Ok(Event::Gone { conn }) => {
+                    mark_gone(workers, conn);
+                    if let Some(widx) = workers.iter().position(|w| w.conn == conn) {
+                        // A dead worker's in-flight grants are cut now —
+                        // their clients re-grant fresh at the current
+                        // epoch (exactly-once per grant; already-buffered
+                        // arrivals from this worker are unaffected: the
+                        // server holds their data).
+                        for g in book.pending_of(widx) {
+                            self.cut_grant(workers, &mut book, &grants, g);
+                            dispatch_at.remove(&g);
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if deadline.is_none() {
+                        let pending = book.pending_ids();
+                        if !pending.is_empty() {
+                            println!(
+                                "[serve] async: stall backstop ({}s) fired with {} \
+                                 grant(s) in flight — cutting",
+                                self.opts.stall_secs,
+                                pending.len()
+                            );
+                            self.emit(ObsEvent::Stall {
+                                round: Some(self.fed.next_round as u64),
+                                waited_us: (self.opts.stall_secs * 1e6) as u64,
+                                detail: format!(
+                                    "{} grant(s) in flight past the liveness backstop",
+                                    pending.len()
+                                ),
+                            });
+                            for g in pending {
+                                self.cut_grant(workers, &mut book, &grants, g);
+                                dispatch_at.remove(&g);
+                            }
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => bail!("polling thread died"),
+            }
+            if buffer.len() >= k {
+                self.commit_async(
+                    workers, &mut book, &grants, &mut buffer, k, gamma, &mut t_epoch,
+                )?;
+            }
+        }
+        // Epoch budget exhausted. The run ends right after a fold (the
+        // buffer is empty); grants still in flight never folded — cut
+        // them into the trace so replay skips them.
+        for g in book.pending_ids() {
+            let _ = book.cut(g);
+        }
+        self.async_cuts = book.cuts();
         Ok(())
     }
 

@@ -425,6 +425,7 @@ impl Subagg {
             session: ra.session,
             round: ra.round,
             seq_base: ra.seq_base,
+            lease_epoch: ra.lease_epoch,
             tasks,
             global: ra.global.clone(),
         });

@@ -294,6 +294,9 @@ pub fn run_worker(addr: &str, opts: WorkerOpts) -> Result<WorkerReport> {
                     let msg = Msg::UpdatePush(UpdatePush {
                         session: ack.session,
                         round: assign.round,
+                        // v5 staleness anchor: echo the dispatch epoch so
+                        // the async server never trusts worker clocks.
+                        lease_epoch: assign.lease_epoch,
                         update,
                         body,
                         state,

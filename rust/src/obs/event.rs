@@ -45,7 +45,15 @@ pub enum Event {
     /// The lease folded: the client's update was accepted exactly once.
     LeaseFold { round: u64, client: u64, worker: u64 },
     /// These clients were cut from the round (deadline or stall backstop).
+    /// In async mode `round` is the epoch at cut time and one epoch may
+    /// emit several `Cut` events (grants are cut individually as
+    /// disconnects and deadlines land).
     Cut { round: u64, clients: Vec<u64> },
+    /// An asynchronous epoch committed: `k` buffered arrivals from
+    /// `clients` (canonical ascending-grant order) folded with
+    /// staleness-discounted weights; `staleness_max` is the oldest
+    /// arrival's epoch lag.
+    AsyncFold { epoch: u64, k: u64, clients: Vec<u64>, staleness_max: u64 },
     /// A pending lease moved from a silent worker to a live one.
     Migration { round: u64, client: u64, from: u64, to: u64 },
     /// An undecodable frame arrived (`worker` is `None` when the sender
@@ -70,6 +78,7 @@ pub const EVENT_KINDS: &[&str] = &[
     "lease_fold",
     "folded_push",
     "cut",
+    "async_fold",
     "migration",
     "malformed",
     "round_commit",
@@ -89,6 +98,7 @@ impl Event {
             Event::LeaseFold { .. } => "lease_fold",
             Event::FoldedPush { .. } => "folded_push",
             Event::Cut { .. } => "cut",
+            Event::AsyncFold { .. } => "async_fold",
             Event::Migration { .. } => "migration",
             Event::Malformed { .. } => "malformed",
             Event::RoundCommit { .. } => "round_commit",
@@ -192,6 +202,12 @@ impl EventRecord {
                 pairs.push(("round", uint(*round)));
                 pairs.push(("clients", json::arr(clients.iter().map(|&c| uint(c)))));
             }
+            Event::AsyncFold { epoch, k, clients, staleness_max } => {
+                pairs.push(("epoch", uint(*epoch)));
+                pairs.push(("k", uint(*k)));
+                pairs.push(("clients", json::arr(clients.iter().map(|&c| uint(c)))));
+                pairs.push(("staleness_max", uint(*staleness_max)));
+            }
             Event::Migration { round, client, from, to } => {
                 pairs.push(("round", uint(*round)));
                 pairs.push(("client", uint(*client)));
@@ -278,6 +294,12 @@ impl EventRecord {
             "cut" => Event::Cut {
                 round: field_u64(&v, "round")?,
                 clients: field_arr_u64(&v, "clients")?,
+            },
+            "async_fold" => Event::AsyncFold {
+                epoch: field_u64(&v, "epoch")?,
+                k: field_u64(&v, "k")?,
+                clients: field_arr_u64(&v, "clients")?,
+                staleness_max: field_u64(&v, "staleness_max")?,
             },
             "migration" => Event::Migration {
                 round: field_u64(&v, "round")?,
@@ -425,8 +447,11 @@ pub fn to_trace(records: &[EventRecord]) -> Trace {
     for rec in records {
         match &rec.event {
             Event::Cut { round, clients } => {
+                // Extend, don't assign: a sync round emits at most one
+                // `Cut`, but an async epoch may emit several (grants are
+                // cut one at a time) and all of them belong to the row.
                 let t = row(&mut rounds, *round as usize);
-                t.cut = clients.iter().map(|&c| c as usize).collect();
+                t.cut.extend(clients.iter().map(|&c| c as usize));
             }
             Event::Migration { round, client, from, to } => {
                 row(&mut rounds, *round as usize).migrations.push(Migration {
@@ -487,6 +512,7 @@ mod tests {
             Event::LeaseFold { round: 0, client: 5, worker: 1 },
             Event::FoldedPush { round: 1, subagg: 0, n_clients: 3, weight: 96.5 },
             Event::Cut { round: 2, clients: vec![1, 4] },
+            Event::AsyncFold { epoch: 3, k: 2, clients: vec![0, 5], staleness_max: 1 },
             Event::Migration { round: 2, client: 4, from: 1, to: 0 },
             Event::Malformed { round: 0, worker: Some(1) },
             Event::Malformed { round: 0, worker: None },

@@ -36,6 +36,9 @@ pub struct RoundRow {
     pub folded_pushes: u64,
     pub cut: u64,
     pub migrated: u64,
+    /// Largest arrival staleness folded into this round's async commit
+    /// (always zero for sync/semi-sync rounds).
+    pub staleness_max: u64,
     /// True once the `RoundCommit` arrived; the commit fields below are
     /// meaningless before then.
     pub committed: bool,
@@ -127,6 +130,10 @@ impl ViewState {
             }
             Event::Cut { round, clients } => {
                 self.row(*round).cut += clients.len() as u64;
+            }
+            Event::AsyncFold { epoch, staleness_max, .. } => {
+                let row = self.row(*epoch);
+                row.staleness_max = row.staleness_max.max(*staleness_max);
             }
             Event::Migration { round, .. } => {
                 self.row(*round).migrated += 1;

@@ -82,18 +82,55 @@ pub enum AggregationPolicy {
     /// tail steps). The sim prices time, not learning — the staleness of
     /// tail steps is an optimizer-semantics question outside its scope.
     Overlap,
+    /// Buffered asynchronous aggregation (FedBuff-style, the `net` async
+    /// plane): the server folds the first `k` arrivals and immediately
+    /// re-leases — stragglers never gate a fold, their late uploads land
+    /// in a later one with staleness-discounted weight `w·γ^staleness`.
+    /// The sim prices time only (the fold epoch closes at the `k`-th
+    /// arrival); `gamma` is carried so sweep rows stay self-describing.
+    Async { k: usize, gamma: f64 },
 }
 
+/// The valid `AggregationPolicy::parse` spellings, quoted verbatim in the
+/// unknown-policy error so callers can enumerate their options.
+pub const POLICY_NAMES: &str = "sync|semisync|overlap|async[:K[:gamma]]";
+
 impl AggregationPolicy {
-    /// Parse a CLI policy name (`sync` | `semisync` | `overlap`).
+    /// Parse a CLI policy name (see [`POLICY_NAMES`]). `async` takes
+    /// optional colon-separated knobs — `async:4:0.5` folds every 4
+    /// arrivals at discount γ=0.5; the defaults are K=4, γ=0.5.
     pub fn parse(s: &str, deadline_factor: f64) -> Result<AggregationPolicy> {
+        if let Some(rest) = s.strip_prefix("async") {
+            let mut k = 4usize;
+            let mut gamma = 0.5f64;
+            let mut parts = rest.strip_prefix(':').unwrap_or("").split(':');
+            if !rest.is_empty() && !rest.starts_with(':') {
+                bail!("unknown policy {s:?} (valid: {POLICY_NAMES})");
+            }
+            if let Some(ks) = parts.next().filter(|p| !p.is_empty()) {
+                k = ks.parse().map_err(|_| {
+                    anyhow::anyhow!("async buffer size K must be an integer, got {ks:?}")
+                })?;
+            }
+            if let Some(gs) = parts.next().filter(|p| !p.is_empty()) {
+                gamma = gs.parse().map_err(|_| {
+                    anyhow::anyhow!("async discount gamma must be a float, got {gs:?}")
+                })?;
+            }
+            anyhow::ensure!(k >= 1, "async buffer size K must be >= 1");
+            anyhow::ensure!(
+                gamma > 0.0 && gamma <= 1.0,
+                "async discount gamma must be in (0, 1], got {gamma}"
+            );
+            return Ok(AggregationPolicy::Async { k, gamma });
+        }
         Ok(match s {
             "sync" => AggregationPolicy::Sync,
             "semisync" | "semi-sync" => {
                 AggregationPolicy::SemiSync { deadline_factor }
             }
             "overlap" => AggregationPolicy::Overlap,
-            other => bail!("unknown policy {other:?} (sync|semisync|overlap)"),
+            other => bail!("unknown policy {other:?} (valid: {POLICY_NAMES})"),
         })
     }
 
@@ -102,6 +139,7 @@ impl AggregationPolicy {
             AggregationPolicy::Sync => "sync",
             AggregationPolicy::SemiSync { .. } => "semisync",
             AggregationPolicy::Overlap => "overlap",
+            AggregationPolicy::Async { .. } => "async",
         }
     }
 }
@@ -392,10 +430,15 @@ impl Simulator {
             seq += 1;
         }
 
-        // Event loop: the round closes at the last expected arrival, or at
-        // the deadline, whichever the policy dictates. All sampled clients
-        // having dropped is known at dispatch — the round closes
-        // immediately (mirroring the aggregator's all-dropped path).
+        // Event loop: the round closes at the last expected arrival, at
+        // the deadline, or (async) at the K-th arrival — whichever the
+        // policy dictates. All sampled clients having dropped is known at
+        // dispatch — the round closes immediately (mirroring the
+        // aggregator's all-dropped path).
+        let close_at = match self.cfg.policy {
+            AggregationPolicy::Async { k, .. } => k.min(n).max(1),
+            _ => n,
+        };
         let mut n_arrived = 0usize;
         let mut end_core = t0;
         if n > 0 {
@@ -423,7 +466,7 @@ impl Simulator {
                         finish_us[ev.slot] = Some(ev.at_us);
                         n_arrived += 1;
                         end_core = ev.at_us; // events pop in time order
-                        if n_arrived == n {
+                        if n_arrived == close_at {
                             break;
                         }
                     }
@@ -696,7 +739,69 @@ mod tests {
             AggregationPolicy::parse("overlap", 1.5).unwrap().label(),
             "overlap"
         );
-        assert!(AggregationPolicy::parse("async", 1.5).is_err());
+        assert_eq!(
+            AggregationPolicy::parse("async", 1.5).unwrap(),
+            AggregationPolicy::Async { k: 4, gamma: 0.5 }
+        );
+        assert_eq!(
+            AggregationPolicy::parse("async:2", 1.5).unwrap(),
+            AggregationPolicy::Async { k: 2, gamma: 0.5 }
+        );
+        assert_eq!(
+            AggregationPolicy::parse("async:8:0.9", 1.5).unwrap(),
+            AggregationPolicy::Async { k: 8, gamma: 0.9 }
+        );
+        assert_eq!(AggregationPolicy::parse("async:8:0.9", 1.5).unwrap().label(), "async");
+        // The unknown-policy error enumerates every valid spelling.
+        let err = AggregationPolicy::parse("bogus", 1.5).unwrap_err().to_string();
+        for name in ["sync", "semisync", "overlap", "async"] {
+            assert!(err.contains(name), "error {err:?} must list {name:?}");
+        }
+        assert!(err.contains(POLICY_NAMES));
+        // Bad async knobs are rejected with their own messages.
+        assert!(AggregationPolicy::parse("async:0", 1.5).is_err());
+        assert!(AggregationPolicy::parse("async:4:1.5", 1.5).is_err());
+        assert!(AggregationPolicy::parse("async:4:-0.1", 1.5).is_err());
+        assert!(AggregationPolicy::parse("asynchronous", 1.5).is_err());
+    }
+
+    #[test]
+    fn async_closes_at_kth_arrival_and_beats_semisync_on_stragglers() {
+        // 4 clients, one straggler (4× slower). Async K=3 folds when the
+        // three healthy clients land; semi-sync waits for its deadline.
+        let mut plan = plan1(2, 10, 4);
+        for spec in &mut plan.rounds {
+            spec.participants[3].straggler = true;
+        }
+        let base = SimConfig::new(0, link(1.0, 0.0), AggregationPolicy::Sync);
+        let semi = SimConfig {
+            policy: AggregationPolicy::SemiSync { deadline_factor: 1.5 },
+            ..base
+        };
+        let asyn = SimConfig {
+            policy: AggregationPolicy::Async { k: 3, gamma: 0.5 },
+            ..base
+        };
+        let s = Simulator::uniform(&plan, 1.0, semi).run();
+        let a = Simulator::uniform(&plan, 1.0, asyn).run();
+        for (x, y) in s.rows.iter().zip(&a.rows) {
+            // K-th (healthy) arrival at 10 s vs the 15 s deadline.
+            assert!((y.round_secs - 10.0).abs() < 1e-6, "{}", y.round_secs);
+            assert!(y.round_secs <= x.round_secs + 1e-9);
+            assert_eq!((y.n_arrived, y.n_late), (3, 1));
+        }
+        assert!(a.total_secs < s.total_secs);
+        // K larger than the cohort degrades to sync (close at last arrival).
+        let all = SimConfig {
+            policy: AggregationPolicy::Async { k: 99, gamma: 1.0 },
+            ..base
+        };
+        let sync = Simulator::uniform(&plan, 1.0, base).run();
+        let capped = Simulator::uniform(&plan, 1.0, all).run();
+        for (x, y) in sync.rows.iter().zip(&capped.rows) {
+            assert_eq!(x.round_secs, y.round_secs);
+            assert_eq!(x.n_arrived, y.n_arrived);
+        }
     }
 
     #[test]

@@ -116,6 +116,22 @@ impl Args {
         }
     }
 
+    /// Comma-separated float list (`--gammas 1.0,0.5`); `default` when
+    /// the option is absent. Rejects empty items like [`Args::get_u64_list`].
+    pub fn get_f64_list(&self, name: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|tok| {
+                    tok.trim().parse().map_err(|_| {
+                        anyhow!("--{name} expects comma-separated numbers, got {v:?}")
+                    })
+                })
+                .collect(),
+        }
+    }
+
     pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
         match self.get(name) {
             None => Ok(default),
@@ -186,6 +202,19 @@ mod tests {
             .get_u64_list("taus", &[])
             .is_err());
         assert!(parse(&["--taus", "x"]).unwrap().get_u64_list("taus", &[]).is_err());
+    }
+
+    #[test]
+    fn f64_list() {
+        let a = parse(&["--taus", "1.0,0.5, 0.25"]).unwrap();
+        assert_eq!(a.get_f64_list("taus", &[1.0]).unwrap(), vec![1.0, 0.5, 0.25]);
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.get_f64_list("taus", &[0.9, 1.0]).unwrap(), vec![0.9, 1.0]);
+        assert!(parse(&["--taus", "1.0,,0.5"])
+            .unwrap()
+            .get_f64_list("taus", &[])
+            .is_err());
+        assert!(parse(&["--taus", "x"]).unwrap().get_f64_list("taus", &[]).is_err());
     }
 
     #[test]

@@ -1,0 +1,247 @@
+//! Property tests for the buffered-async aggregation plane (ISSUE 10).
+//!
+//! Three contracts, shrunk to minimal counterexamples by the testkit
+//! harness (see docs/TESTING.md for the replay workflow):
+//!
+//! 1. `chaos::discounted_weights` is a well-formed weighting: outputs are
+//!    positive, normalize to 1, are monotone non-increasing in staleness
+//!    at equal base weight, and at γ=1 degrade bitwise to plain
+//!    normalized sample weighting.
+//! 2. The server's buffered fold is arrival-order invariant: folding K
+//!    arrivals drained from the grant-keyed buffer bit-equals the
+//!    sequential fold in canonical (ascending grant) order, no matter
+//!    the insertion order — the BTreeMap *is* the canonicalizer.
+//! 3. `Federation::run_async_trace` is a pure function of the trace: two
+//!    fresh federations replaying the same realized ledger produce
+//!    bit-identical records, globals, and (wall-clock-canonicalized)
+//!    checkpoint bytes. (This leg realizes one tiny loopback fleet and
+//!    needs `make artifacts`, like the integration suites.)
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use photon::chaos::discounted_weights;
+use photon::cluster::faults::FaultPlan;
+use photon::config::ExperimentConfig;
+use photon::coordinator::Federation;
+use photon::model::vecmath::weighted_mean_into;
+use photon::net::{run_loopback, FleetOpts};
+use photon::optim::schedule::CosineSchedule;
+use photon::runtime::{ModelRuntime, Runtime};
+use photon::testkit::{check, check_cases, shrink_vec};
+
+#[test]
+fn discounted_weights_are_positive_and_normalize_to_one() {
+    check("discount_normalized", 0xA51C_0001, 200, |rng| {
+        let n = 1 + rng.usize_below(8);
+        let base: Vec<f64> = (0..n).map(|_| 0.1 + rng.f64() * 10.0).collect();
+        let staleness: Vec<u64> = (0..n).map(|_| rng.usize_below(12) as u64).collect();
+        let gamma = 0.05 + rng.f64() * 0.95;
+        let w = discounted_weights(&base, &staleness, gamma);
+        if w.len() != n {
+            return Err(format!("length {} != {n}", w.len()));
+        }
+        if let Some(bad) = w.iter().find(|&&x| !(x > 0.0)) {
+            return Err(format!("non-positive weight {bad} (base {base:?})"));
+        }
+        let sum: f64 = w.iter().sum();
+        if (sum - 1.0).abs() > 1e-12 {
+            return Err(format!("weights sum to {sum}, not 1"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn discounted_weights_monotone_non_increasing_in_staleness() {
+    check("discount_monotone", 0xA51C_0002, 200, |rng| {
+        let n = 2 + rng.usize_below(6);
+        // Equal base weights so the discount is the only differentiator.
+        let base = vec![1.0 + rng.f64() * 5.0; n];
+        let mut staleness: Vec<u64> =
+            (0..n).map(|_| rng.usize_below(10) as u64).collect();
+        staleness.sort_unstable();
+        let gamma = 0.05 + rng.f64() * 0.9; // strictly below 1
+        let w = discounted_weights(&base, &staleness, gamma);
+        for i in 1..n {
+            if w[i] > w[i - 1] + 1e-15 {
+                return Err(format!(
+                    "weight rose with staleness: w[{i}]={} > w[{}]={} \
+                     (staleness {staleness:?})",
+                    w[i],
+                    i - 1,
+                    w[i - 1]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gamma_one_is_plain_sample_weighting_bitwise() {
+    check("discount_gamma_one", 0xA51C_0003, 200, |rng| {
+        let n = 1 + rng.usize_below(8);
+        let base: Vec<f64> = (0..n).map(|_| 0.5 + rng.f64() * 20.0).collect();
+        let staleness: Vec<u64> = (0..n).map(|_| rng.usize_below(50) as u64).collect();
+        let w = discounted_weights(&base, &staleness, 1.0);
+        // γ=1 ⇒ the discount is exactly 1.0 for every staleness, so the
+        // output must bit-equal the undiscounted normalization computed
+        // the same sequential way.
+        let total: f64 = base.iter().sum();
+        for (i, (&got, &b)) in w.iter().zip(&base).enumerate() {
+            let want = b / total;
+            if got.to_bits() != want.to_bits() {
+                return Err(format!(
+                    "index {i}: γ=1 weight {got} != plain normalized {want}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// One buffered arrival: grant id, update row, discounted weight.
+type Arrival = (u64, Vec<f32>, f64);
+
+#[test]
+fn buffered_fold_is_arrival_order_invariant() {
+    // Case: arrivals listed in *insertion* order (random grant ids, so
+    // insertion order ≠ canonical order). The server-side fold drains a
+    // grant-keyed BTreeMap; the reference fold sorts explicitly. Both
+    // must produce bit-identical means.
+    check_cases(
+        "buffered_fold_canonical",
+        0xA51C_0004,
+        60,
+        |rng| {
+            let n = 1 + rng.usize_below(24); // model dim
+            let k = 1 + rng.usize_below(6);
+            let mut used = std::collections::BTreeSet::new();
+            let mut arrivals: Vec<Arrival> = Vec::with_capacity(k);
+            for _ in 0..k {
+                let mut grant = rng.next_u64() % 1000;
+                while !used.insert(grant) {
+                    grant = rng.next_u64() % 1000;
+                }
+                let row: Vec<f32> =
+                    (0..n).map(|_| (rng.f32() * 2.0 - 1.0) * 3.0).collect();
+                let weight = 0.1 + rng.f64();
+                arrivals.push((grant, row, weight));
+            }
+            arrivals
+        },
+        |case: &Vec<Arrival>| shrink_vec(case.as_slice()),
+        |arrivals| {
+            if arrivals.is_empty() {
+                return Ok(()); // shrinker floor
+            }
+            let n = arrivals[0].1.len();
+            // Server path: insert in arrival order, drain in key order.
+            let mut buffer: BTreeMap<u64, (&[f32], f64)> = BTreeMap::new();
+            for (g, row, w) in arrivals {
+                buffer.insert(*g, (row.as_slice(), *w));
+            }
+            let rows: Vec<&[f32]> = buffer.values().map(|(r, _)| *r).collect();
+            let weights: Vec<f64> = buffer.values().map(|(_, w)| *w).collect();
+            let mut folded = vec![0.0f32; n];
+            weighted_mean_into(&rows, &weights, &mut folded);
+            // Reference path: sort the same arrivals by grant explicitly.
+            let mut canonical: Vec<&Arrival> = arrivals.iter().collect();
+            canonical.sort_by_key(|(g, _, _)| *g);
+            let c_rows: Vec<&[f32]> =
+                canonical.iter().map(|(_, r, _)| r.as_slice()).collect();
+            let c_weights: Vec<f64> = canonical.iter().map(|(_, _, w)| *w).collect();
+            let mut reference = vec![0.0f32; n];
+            weighted_mean_into(&c_rows, &c_weights, &mut reference);
+            for i in 0..n {
+                if folded[i].to_bits() != reference[i].to_bits() {
+                    return Err(format!(
+                        "element {i}: buffered {} != canonical {}",
+                        folded[i], reference[i]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// --- replay purity (needs `make artifacts`) -------------------------------
+
+fn model() -> Arc<ModelRuntime> {
+    thread_local! {
+        static CACHED: std::cell::OnceCell<Arc<ModelRuntime>> =
+            const { std::cell::OnceCell::new() };
+    }
+    CACHED.with(|c| {
+        c.get_or_init(|| {
+            let rt = Runtime::cpu().unwrap();
+            Arc::new(rt.load_model("m75a").expect("run `make artifacts`"))
+        })
+        .clone()
+    })
+}
+
+fn tiny_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::quickstart("m75a");
+    cfg.n_clients = 4;
+    cfg.clients_per_round = 2;
+    cfg.rounds = 2;
+    cfg.local_steps = 2;
+    cfg.eval_batches = 1;
+    cfg.seed = 0xA51C;
+    cfg.schedule = CosineSchedule::new(3e-3, 0.1, 4, 2);
+    cfg.faults = FaultPlan::none();
+    cfg
+}
+
+/// Checkpoint bytes with the wall-clock bookkeeping zeroed — everything
+/// left is replay-relevant state, so byte equality means state equality.
+fn canonical_ckpt_bytes(fed: &Federation) -> Vec<u8> {
+    let mut ck = fed.checkpoint();
+    ck.timestamp = 0;
+    ck.elapsed_secs = 0.0;
+    ck.encode()
+}
+
+#[test]
+fn async_replay_is_a_pure_function_of_the_trace() {
+    // Realize one quiet async ledger over a real loopback fleet...
+    let cfg = tiny_cfg();
+    let report = run_loopback(
+        cfg.clone(),
+        model(),
+        FleetOpts {
+            workers: 2,
+            compress: true,
+            async_agg: Some((2, 0.5)),
+            ..FleetOpts::default()
+        },
+    )
+    .unwrap();
+    assert!(report.worker_errors.is_empty(), "{:?}", report.worker_errors);
+    let trace = report.async_trace.expect("async fleet must return a ledger");
+    trace.check_exactly_once().unwrap();
+
+    // ...then replay it twice from fresh federations: identical records
+    // (modulo wall time), identical global bits, identical canonicalized
+    // checkpoint bytes. The trace bytes fully determine the run.
+    let mut a = Federation::with_model(cfg.clone(), model()).unwrap();
+    let rec_a = a.run_async_trace(&trace).unwrap();
+    let mut b = Federation::with_model(cfg, model()).unwrap();
+    let rec_b = b.run_async_trace(&trace).unwrap();
+    assert_eq!(rec_a.len(), rec_b.len());
+    for (x, y) in rec_a.iter().zip(&rec_b) {
+        assert!(x.agrees_with(y), "replay divergence at epoch {}", x.round);
+    }
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    assert_eq!(bits(&a.global), bits(&b.global), "global model bits");
+    assert_eq!(
+        canonical_ckpt_bytes(&a),
+        canonical_ckpt_bytes(&b),
+        "checkpoint bytes must be a pure function of the trace"
+    );
+    // And both reproduce the fleet itself.
+    assert_eq!(bits(&a.global), bits(&report.global), "replay vs fleet");
+}

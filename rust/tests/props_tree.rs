@@ -503,6 +503,7 @@ fn rand_msg(rng: &mut Rng) -> Msg {
                 session: rng.next_u64(),
                 round: rng.below(100),
                 seq_base: rng.below(1000),
+                lease_epoch: rng.below(100),
                 tasks: vec![
                     AssignTask {
                         client: rng.below(32),
